@@ -1,0 +1,52 @@
+//! Client-count scaling study (the paper's §V-C claim: "the better VAFL
+//! performs as the number of clients increases"): run VAFL vs AFL across
+//! fleet sizes and report communication compression and accuracy.
+//!
+//! Run: `cargo run --release --example comm_sweep [-- rounds]`
+//! Uses the mock backend by default for speed; set VAFL_PJRT=1 for the real
+//! artifacts.
+
+use vafl::config::{Algorithm, Backend};
+use vafl::data::PartitionScheme;
+use vafl::experiments;
+use vafl::metrics::ccr;
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .map_or(25, |s| s.parse().expect("rounds"));
+    let pjrt = std::env::var("VAFL_PJRT").is_ok();
+
+    println!("clients  afl_comms  vafl_comms  CCR      vafl_best_acc");
+    println!("------------------------------------------------------");
+    for &n in &[3usize, 5, 7, 11, 15] {
+        let mut base = experiments::preset('b')?;
+        base.num_clients = n;
+        base.samples_per_client = 7000 / n.max(1);
+        base.partition = PartitionScheme::PaperSkew;
+        base.rounds = rounds;
+        base.name = format!("n{n}");
+        if !pjrt {
+            base.backend = Backend::Mock;
+            base.target_acc = 0.80; // the mock linear model tops out lower
+        }
+        let afl = experiments::run(&vafl::config::ExperimentConfig {
+            algorithm: Algorithm::Afl,
+            ..base.clone()
+        })?;
+        let va = experiments::run(&vafl::config::ExperimentConfig {
+            algorithm: Algorithm::Vafl,
+            ..base.clone()
+        })?;
+        let c0 = afl.comm_times_to_target.unwrap_or(afl.total_uploads);
+        let c1 = va.comm_times_to_target.unwrap_or(va.total_uploads);
+        println!(
+            "{n:>7}  {c0:>9}  {c1:>10}  {:<8.4} {:.4}",
+            ccr(c0, c1),
+            va.best_accuracy
+        );
+    }
+    Ok(())
+}

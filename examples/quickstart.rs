@@ -1,0 +1,33 @@
+//! Quickstart: run the paper's experiment `a` (3 IID clients) with VAFL
+//! for a handful of rounds and print the accuracy curve and communication
+//! counts.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` first (or set VAFL_MOCK=1 to use the pure-Rust
+//! mock model).
+
+use vafl::config::Backend;
+use vafl::experiments;
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    let mut cfg = experiments::preset('a')?;
+    cfg.rounds = 15;
+    if std::env::var("VAFL_MOCK").is_ok() {
+        cfg.backend = Backend::Mock;
+    }
+
+    let out = experiments::run(&cfg)?;
+    println!("\nround  acc     uploads(cum)");
+    for r in &out.metrics.records {
+        if r.global_acc.is_finite() {
+            println!("{:>5}  {:.4}  {:>3} ({:>3})", r.round, r.global_acc, r.uploads, r.cum_uploads);
+        }
+    }
+    println!(
+        "\nbest acc {:.4} | total uploads {} | virtual time {:.1}s",
+        out.best_accuracy, out.total_uploads, out.total_vtime
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time-only Python: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Nothing in this package is imported at runtime; ``make artifacts`` runs
+``python -m compile.aot`` once and the Rust coordinator consumes the HLO
+text artifacts through PJRT.
+"""

@@ -1,0 +1,133 @@
+"""AOT lowering: JAX (L2, Pallas L1 inside) -> HLO text artifacts for Rust.
+
+Run once at build time (``make artifacts``); Python never appears on the
+training/request path. Emits into ``artifacts/``:
+
+    train_step.hlo.txt   (params f32[P], x f32[B,784], y i32[B], lr f32[])
+                         -> (new_params f32[P], loss f32[], grad f32[P])
+    eval_step.hlo.txt    (params f32[P], x f32[EB,784], y i32[EB])
+                         -> (correct f32[], loss_sum f32[])
+    value.hlo.txt        (g_prev f32[P], g_new f32[P], acc f32[], n f32[])
+                         -> V f32[]          (paper Eq. 1 on the HLO path)
+    init_params.f32      raw little-endian f32[P] initial parameters
+    params_spec.json     layout + shapes + cost model + artifact manifest
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``;
+the Rust side unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn: Callable, specs: Sequence[jax.ShapeDtypeStruct]) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifacts(out_dir: str, seed: int = 0, pallas_mode: str = "head") -> dict:
+    """Lower every entry point and write the artifact bundle to ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    p = model.PARAM_COUNT
+    b, eb, d = model.BATCH_SIZE, model.EVAL_BATCH, model.INPUT_DIM
+
+    artifacts = {}
+
+    def emit(name: str, fn: Callable, specs) -> None:
+        text = _lower(fn, specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": f"{name}.hlo.txt", "chars": len(text)}
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    emit(
+        "train_step",
+        lambda params, x, y, lr: model.train_step(
+            params, x, y, lr, pallas_mode=pallas_mode
+        ),
+        (f32(p), f32(b, d), i32(b), f32()),
+    )
+    emit(
+        "eval_step",
+        lambda params, x, y: model.eval_step(params, x, y, pallas_mode=pallas_mode),
+        (f32(p), f32(eb, d), i32(eb)),
+    )
+    emit("value", model.value_fn, (f32(p), f32(p), f32(), f32()))
+
+    # Initial parameters (raw little-endian f32), identical for every client
+    # at round 0 — the server broadcast of theta_0 in Algorithm 1.
+    import numpy as np
+
+    init = np.asarray(model.init_params(seed), dtype="<f4")
+    init.tofile(os.path.join(out_dir, "init_params.f32"))
+
+    spec = {
+        "format_version": 1,
+        "model": "resnet_lite",
+        "param_count": p,
+        "channels": model.CHANNELS,
+        "input_dim": d,
+        "image_dim": model.IMAGE_DIM,
+        "num_classes": model.NUM_CLASSES,
+        "batch_size": b,
+        "eval_batch": eb,
+        "seed": seed,
+        "pallas_mode": pallas_mode,
+        "train_step_flops": model.train_step_flops(),
+        "eval_step_flops": model.eval_step_flops(),
+        "layers": model.param_spec(),
+        "artifacts": artifacts,
+        "init_params_file": "init_params.f32",
+    }
+    with open(os.path.join(out_dir, "params_spec.json"), "w") as f:
+        json.dump(spec, f, indent=2)
+    print(f"  params_spec.json: P={p} params, batch={b}, eval_batch={eb}")
+    return spec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=0, help="init seed (theta_0)")
+    ap.add_argument(
+        "--pallas-mode",
+        choices=model.PALLAS_MODES,
+        default="head",
+        help="kernel backend for the lowered artifacts (see model docstring)",
+    )
+    args = ap.parse_args()
+    build_artifacts(args.out, seed=args.seed, pallas_mode=args.pallas_mode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the VAFL client training hot spot.
+
+``matmul`` — fused tiled matmul+bias+activation (differentiable, Pallas
+fwd and bwd); ``conv`` — conv2d as im2col + the matmul kernel; ``ref`` —
+pure-jnp oracles used by the pytest/hypothesis correctness suite.
+"""
+
+from . import conv, matmul, ref  # noqa: F401

@@ -1,0 +1,73 @@
+"""Conv2D lowered to im2col + the Pallas matmul kernel.
+
+The paper's client model is a small ResNet; on TPU the standard mapping of
+a 3x3 convolution is patch extraction (im2col) followed by an MXU matmul.
+Patch extraction is pure data movement (linear, so JAX differentiates it
+exactly); the matmul is the differentiable Pallas :func:`~.matmul.dense`
+kernel, so conv fwd+bwd both run through Pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import matmul as mk
+
+
+def _extract_patches(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """NHWC -> [B, H, W, C*kh*kw] SAME-padded patches.
+
+    ``conv_general_dilated_patches`` returns the feature dim ordered as
+    ``C * kh * kw`` (channel-major); the weight layout below matches it.
+    """
+    b, h, w, c = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return patches.reshape(b, h, w, c * kh * kw)
+
+
+def conv2d_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act: str = "none",
+) -> jax.Array:
+    """SAME 3x3 (or kh x kw) convolution, stride 1, fused bias+activation.
+
+    Args:
+      x: ``f32[B, H, W, Cin]``.
+      w: ``f32[kh, kw, Cin, Cout]`` (HWIO).
+      b: ``f32[Cout]``.
+      act: "none" | "relu".
+
+    Returns:
+      ``f32[B, H, W, Cout]``.
+    """
+    bsz, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    if cin != cin2:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    patches = _extract_patches(x, kh, kw)  # [B,H,W, Cin*kh*kw], channel-major
+    cols = patches.reshape(bsz * h * wd, cin * kh * kw)
+    # Reorder HWIO weights to the patches' channel-major (I, kh, kw) layout.
+    wm = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    y = mk.dense(cols, wm, b, act)
+    return y.reshape(bsz, h, wd, cout)
+
+
+def avg_pool_2x2(x: jax.Array) -> jax.Array:
+    """2x2 average pooling, stride 2 (NHWC)."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """NHWC -> [B, C] global average pooling."""
+    return x.mean(axis=(1, 2))

@@ -1,0 +1,162 @@
+"""L1 Pallas kernels: fused tiled matmul (+ bias + activation).
+
+This is the compute hot spot of the VAFL client training step: every conv
+layer is lowered to im2col + this matmul (the canonical TPU mapping, see
+DESIGN.md "Hardware adaptation"), and the classifier head calls it directly.
+
+The kernel is written TPU-style -- the grid tiles (M, N) into MXU-shaped
+blocks held in VMEM, with the full K dimension resident per block (K is
+small for this model: <= 9*C). ``interpret=True`` is mandatory in this
+image: the CPU PJRT plugin cannot execute Mosaic custom-calls, and the
+interpret path lowers the kernel to plain HLO so that the AOT artifact runs
+anywhere.
+
+Because ``pallas_call`` has no automatic differentiation rule, the public
+entry point :func:`dense` carries a ``jax.custom_vjp`` whose backward pass
+is expressed with the *same* Pallas kernel (dX = dY @ W^T, dW = X^T @ dY),
+so the whole fwd+bwd training step lowers through Pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. M is padded up to a multiple of this; N and K
+# stay un-tiled (both are <= 160 for this model) so each grid step performs
+# one (BM, K) x (K, N) systolic pass with the accumulator in VMEM.
+BLOCK_M = 128
+
+# Activations the fused kernel understands.
+ACTIVATIONS = ("none", "relu")
+
+
+def _matmul_bias_act_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """One grid step: o = act(x @ w + b) for a (BM, K) x (K, N) tile."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step of a plain (no bias / activation) matmul tile."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> jax.Array:
+    m = x.shape[0]
+    pad = (-m) % multiple
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act: str = "none",
+    *,
+    block_m: int = BLOCK_M,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: ``f32[M, K]`` activations (M is padded internally to ``block_m``).
+      w: ``f32[K, N]`` weights.
+      b: ``f32[N]`` bias.
+      act: one of :data:`ACTIVATIONS`.
+      block_m: row-tile size (MXU-shaped 128 by default).
+
+    Returns:
+      ``f32[M, N]``.
+    """
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; expected {ACTIVATIONS}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x is {x.shape}, w is {w.shape}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm = min(block_m, m) if m % block_m else block_m
+    xp = _pad_rows(x, bm)
+    mp = xp.shape[0]
+    grid = (mp // bm,)
+    b2 = b.reshape(1, n)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_act_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=True,
+    )(xp, w, b2)
+    return out[:m]
+
+
+def matmul(x: jax.Array, w: jax.Array, *, block_m: int = BLOCK_M) -> jax.Array:
+    """Plain ``x @ w`` as a tiled Pallas kernel (used by the VJP)."""
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x is {x.shape}, w is {w.shape}")
+    bm = min(block_m, m) if m % block_m else block_m
+    xp = _pad_rows(x, bm)
+    mp = xp.shape[0]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=True,
+    )(xp, w)
+    return out[:m]
+
+
+# --------------------------------------------------------------------------
+# Differentiable fused dense layer: y = act(x @ w + b), Pallas fwd AND bwd.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none"):
+    """Differentiable fused dense layer backed by the Pallas matmul kernel."""
+    return matmul_bias_act(x, w, b, act)
+
+
+def _dense_fwd(x, w, b, act):
+    pre = matmul_bias_act(x, w, b, "none")
+    y = jnp.maximum(pre, 0.0) if act == "relu" else pre
+    return y, (x, w, pre)
+
+
+def _dense_bwd(act, res, dy):
+    x, w, pre = res
+    if act == "relu":
+        dy = jnp.where(pre > 0, dy, 0.0).astype(dy.dtype)
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,280 @@
+"""L2: the VAFL client model — a ResNet-style CNN over a flat parameter
+vector, with the fused fwd+bwd+SGD training step and evaluation step that
+are AOT-lowered to HLO artifacts for the Rust runtime.
+
+The paper (Fig. 2) trains a small ResNet on 28x28 MNIST images. This module
+defines ResNet-lite:
+
+    input [B, 784] -> reshape [B, 28, 28, 1]
+    stem:  conv3x3 1->C, relu
+    rb1:   (conv3x3 C->C, relu, conv3x3 C->C) + skip, relu
+    pool:  avg 2x2                                   -> 14x14
+    rb2:   (conv3x3 C->C, relu, conv3x3 C->C) + skip, relu
+    pool:  avg 2x2                                   -> 7x7
+    head:  flatten -> dense 7*7*C -> 10 logits (Pallas kernel)
+
+The compute layers route through one of three backends (``pallas_mode``):
+
+* ``"full"`` — every conv and the head run through the L1 Pallas kernels.
+  This is the faithful TPU mapping, but under ``interpret=True`` on the CPU
+  PJRT plugin the interpreter machinery costs ~40x (measured: 1.6 s/step vs
+  40 ms; see EXPERIMENTS.md §Perf), so it is used for correctness tests and
+  the kernel-path benchmark artifact, not the experiment hot loop.
+* ``"head"`` (default for artifacts) — convs use the XLA-native reference
+  ops; the classifier head runs through the Pallas ``dense`` kernel, so the
+  production HLO still contains the Pallas-lowered kernel on its hot path
+  at CPU-tractable cost (measured 46.6 ms/step).
+* ``"none"`` — pure-jnp reference everywhere (the pytest oracle).
+
+All three are numerically interchangeable (pytest asserts allclose on
+losses and gradients).
+
+Every exported function takes/returns parameters as a single flat ``f32[P]``
+vector. The layout (name/shape/offset per tensor) is PARAM_SPEC; ``aot.py``
+serializes it to ``artifacts/params_spec.json`` so the Rust side can size
+payloads and (for diagnostics) address individual tensors.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as ck
+from .kernels import matmul as mk
+from .kernels import ref as ref
+
+# ---------------------------------------------------------------------------
+# Architecture constants (paper Table II: B=32, eta=0.1; Fig. 2: small ResNet)
+# ---------------------------------------------------------------------------
+
+IMAGE_DIM = 28
+INPUT_DIM = IMAGE_DIM * IMAGE_DIM  # flattened grayscale image
+NUM_CLASSES = 10
+CHANNELS = 16  # ResNet-lite width
+BATCH_SIZE = 32  # training batch (paper Table II)
+EVAL_BATCH = 128  # evaluation chunk size
+GRAD_CLIP_NORM = 5.0  # global-norm gradient clip (stabilizes the long
+# unsynced local runs VAFL's gating produces; see DESIGN.md §6)
+
+
+def _layer_defs(c: int = CHANNELS) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) for every parameter tensor, in flat-vector order."""
+    return [
+        ("stem/w", (3, 3, 1, c)),
+        ("stem/b", (c,)),
+        ("rb1/w1", (3, 3, c, c)),
+        ("rb1/b1", (c,)),
+        ("rb1/w2", (3, 3, c, c)),
+        ("rb1/b2", (c,)),
+        ("rb2/w1", (3, 3, c, c)),
+        ("rb2/b1", (c,)),
+        ("rb2/w2", (3, 3, c, c)),
+        ("rb2/b2", (c,)),
+        ("head/w", (7 * 7 * c, NUM_CLASSES)),
+        ("head/b", (NUM_CLASSES,)),
+    ]
+
+
+LAYERS = _layer_defs()
+
+
+def param_spec() -> List[Dict]:
+    """Flat-vector layout: name, shape, offset, size for each tensor."""
+    spec, off = [], 0
+    for name, shape in LAYERS:
+        size = int(math.prod(shape))
+        spec.append({"name": name, "shape": list(shape), "offset": off, "size": size})
+        off += size
+    return spec
+
+
+PARAM_COUNT = sum(int(math.prod(s)) for _, s in LAYERS)
+
+
+def unflatten(params: jax.Array) -> Dict[str, jax.Array]:
+    """Split the flat ``f32[P]`` vector into named, shaped tensors."""
+    out = {}
+    off = 0
+    for name, shape in LAYERS:
+        size = int(math.prod(shape))
+        out[name] = params[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(seed: int = 0) -> jax.Array:
+    """He-normal weights / zero biases, flattened. Deterministic in seed."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in LAYERS:
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:  # biases
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif len(shape) == 4:  # conv HWIO: fan_in = kh*kw*Cin
+            fan_in = shape[0] * shape[1] * shape[2]
+            std = math.sqrt(2.0 / fan_in)
+            chunks.append((jax.random.normal(sub, shape) * std).ravel())
+        else:  # dense
+            fan_in = shape[0]
+            std = math.sqrt(2.0 / fan_in)
+            chunks.append((jax.random.normal(sub, shape) * std).ravel())
+    return jnp.concatenate(chunks).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (Pallas or reference backend)
+# ---------------------------------------------------------------------------
+
+
+PALLAS_MODES = ("full", "head", "none")
+
+
+def _conv(x, w, b, act, mode):
+    if mode == "full":
+        return ck.conv2d_bias_act(x, w, b, act)
+    return ref.conv2d_bias_act_ref(x, w, b, act)
+
+
+def _dense(x, w, b, act, mode):
+    if mode in ("full", "head"):
+        return mk.dense(x, w, b, act)
+    return ref.matmul_bias_act_ref(x, w, b, act)
+
+
+def apply_fn(
+    params: jax.Array, x: jax.Array, *, pallas_mode: str = "head"
+) -> jax.Array:
+    """Logits for a batch of flattened images.
+
+    Args:
+      params: flat ``f32[P]`` parameter vector.
+      x: ``f32[B, 784]`` images in [0, 1].
+      pallas_mode: kernel backend — "full" | "head" | "none" (see module
+        docstring).
+
+    Returns:
+      ``f32[B, 10]`` logits.
+    """
+    if pallas_mode not in PALLAS_MODES:
+        raise ValueError(f"pallas_mode {pallas_mode!r} not in {PALLAS_MODES}")
+    p = unflatten(params)
+    b = x.shape[0]
+    h = x.reshape(b, IMAGE_DIM, IMAGE_DIM, 1)
+    h = _conv(h, p["stem/w"], p["stem/b"], "relu", pallas_mode)
+    # Residual block 1 (28x28).
+    r = _conv(h, p["rb1/w1"], p["rb1/b1"], "relu", pallas_mode)
+    r = _conv(r, p["rb1/w2"], p["rb1/b2"], "none", pallas_mode)
+    h = jax.nn.relu(h + r)
+    h = ck.avg_pool_2x2(h)
+    # Residual block 2 (14x14).
+    r = _conv(h, p["rb2/w1"], p["rb2/b1"], "relu", pallas_mode)
+    r = _conv(r, p["rb2/w2"], p["rb2/b2"], "none", pallas_mode)
+    h = jax.nn.relu(h + r)
+    h = ck.avg_pool_2x2(h)  # -> 7x7
+    h = h.reshape(b, -1)
+    return _dense(h, p["head/w"], p["head/b"], "none", pallas_mode)
+
+
+def loss_fn(
+    params: jax.Array, x: jax.Array, y: jax.Array, *, pallas_mode: str = "head"
+) -> jax.Array:
+    """Mean softmax cross-entropy. ``y`` is ``i32[B]`` class labels."""
+    logits = apply_fn(params, x, pallas_mode=pallas_mode)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES, dtype=logp.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Exported steps (AOT entry points; see aot.py)
+# ---------------------------------------------------------------------------
+
+
+def train_step(
+    params: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    lr: jax.Array,
+    *,
+    pallas_mode: str = "head",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One SGD step: fused forward + backward + update.
+
+    Returns ``(new_params f32[P], loss f32[], grad f32[P])``. The gradient
+    (after global-norm clipping at GRAD_CLIP_NORM) is returned so the client
+    can form the VAFL communication value ``||grad_prev - grad||^2`` (Eq. 1)
+    across successive local passes.
+    """
+    loss, grad = jax.value_and_grad(
+        lambda p: loss_fn(p, x, y, pallas_mode=pallas_mode)
+    )(params)
+    # Global-norm clip: a client whose upload is gated out can run hundreds
+    # of consecutive local steps without a sync; unclipped SGD at eta=0.1
+    # diverges on skewed shards (observed in experiment c). The returned
+    # gradient is the clipped one, so new_params == params - lr*grad holds
+    # exactly and Eq. 1 sees the same vector the update used.
+    norm = jnp.sqrt(jnp.sum(grad * grad))
+    scale = jnp.minimum(1.0, GRAD_CLIP_NORM / jnp.maximum(norm, 1e-12))
+    grad = grad * scale
+    return params - lr * grad, loss, grad
+
+
+def eval_step(
+    params: jax.Array, x: jax.Array, y: jax.Array, *, pallas_mode: str = "head"
+) -> Tuple[jax.Array, jax.Array]:
+    """Evaluation over one chunk: ``(correct_count f32[], loss_sum f32[])``.
+
+    The Rust side streams the test set through fixed-size chunks (padding the
+    tail with label -1, which never counts as correct) and accumulates.
+    """
+    logits = apply_fn(params, x, pallas_mode=pallas_mode)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == y).astype(jnp.float32))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = (y >= 0).astype(logp.dtype)
+    onehot = jax.nn.one_hot(jnp.maximum(y, 0), NUM_CLASSES, dtype=logp.dtype)
+    loss_sum = -jnp.sum(valid * jnp.sum(onehot * logp, axis=-1))
+    return correct, loss_sum
+
+
+def value_fn(
+    g_prev: jax.Array, g_new: jax.Array, acc: jax.Array, n: jax.Array
+) -> jax.Array:
+    """VAFL communication value, paper Eq. 1:
+
+        V = ||g_prev - g_new||^2 * (1 + N/10^3)^Acc
+    """
+    d = g_prev - g_new
+    sq = jnp.sum(d * d)
+    return sq * jnp.power(1.0 + n / 1000.0, acc)
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model (feeds the Rust device simulator via params_spec.json)
+# ---------------------------------------------------------------------------
+
+
+def train_step_flops(batch: int = BATCH_SIZE, c: int = CHANNELS) -> int:
+    """Approximate FLOPs of one fwd+bwd+update train step.
+
+    Conv at HxW with Cin->Cout: 2*H*W*9*Cin*Cout per image forward;
+    backward ~2x forward (dX + dW matmuls). Used only by the device-latency
+    model — the real compute is the HLO itself.
+    """
+    hw28, hw14 = 28 * 28, 14 * 14
+    fwd = 0
+    fwd += 2 * hw28 * 9 * 1 * c  # stem
+    fwd += 2 * 2 * hw28 * 9 * c * c  # rb1
+    fwd += 2 * 2 * hw14 * 9 * c * c  # rb2
+    fwd += 2 * (7 * 7 * c) * NUM_CLASSES  # head
+    per_image = 3 * fwd  # fwd + ~2x bwd
+    return batch * per_image + 2 * PARAM_COUNT  # + SGD update
+
+
+def eval_step_flops(batch: int = EVAL_BATCH, c: int = CHANNELS) -> int:
+    """Approximate FLOPs of one forward-only eval chunk."""
+    return train_step_flops(batch, c) // 3

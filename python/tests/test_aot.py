@@ -1,0 +1,68 @@
+"""AOT bundle: artifacts exist, parse, and the spec is self-consistent."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def bundle(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    spec = aot.build_artifacts(str(out), seed=0, pallas_mode="head")
+    return str(out), spec
+
+
+def test_all_artifacts_written(bundle):
+    out, spec = bundle
+    for name in ("train_step", "eval_step", "value"):
+        path = os.path.join(out, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        assert spec["artifacts"][name]["chars"] == len(text)
+
+
+def test_init_params_file_matches_model(bundle):
+    out, spec = bundle
+    raw = np.fromfile(os.path.join(out, "init_params.f32"), dtype="<f4")
+    assert raw.shape == (spec["param_count"],)
+    np.testing.assert_array_equal(raw, np.asarray(model.init_params(0)))
+
+
+def test_spec_consistency(bundle):
+    _, spec = bundle
+    assert spec["param_count"] == model.PARAM_COUNT
+    assert spec["batch_size"] == model.BATCH_SIZE
+    assert spec["eval_batch"] == model.EVAL_BATCH
+    assert spec["layers"][-1]["offset"] + spec["layers"][-1]["size"] == spec[
+        "param_count"
+    ]
+    assert spec["train_step_flops"] > 0
+
+
+def test_spec_json_round_trips(bundle):
+    out, spec = bundle
+    loaded = json.load(open(os.path.join(out, "params_spec.json")))
+    assert loaded == spec
+
+
+def test_hlo_entry_signatures(bundle):
+    """The lowered entry computations must carry the shapes Rust expects."""
+    out, spec = bundle
+    p, b, d = spec["param_count"], spec["batch_size"], spec["input_dim"]
+    train = open(os.path.join(out, "train_step.hlo.txt")).read()
+    assert f"f32[{p}]" in train
+    assert f"f32[{b},{d}]" in train
+    assert f"s32[{b}]" in train
+    ev = open(os.path.join(out, "eval_step.hlo.txt")).read()
+    assert f"f32[{spec['eval_batch']},{d}]" in ev
+
+
+def test_none_mode_variant_builds(tmp_path):
+    spec = aot.build_artifacts(str(tmp_path), seed=0, pallas_mode="none")
+    assert spec["pallas_mode"] == "none"
+    assert os.path.exists(tmp_path / "train_step.hlo.txt")

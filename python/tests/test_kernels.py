@@ -1,0 +1,207 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Fixed-shape cases cover the exact shapes the model emits; hypothesis sweeps
+random (M, K, N) shapes — including non-multiples of the 128 row tile and
+degenerate M=1 — and both activations. Gradients of the custom-VJP dense
+layer are checked against JAX autodiff of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as ck
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ["none", "relu"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (32, 16, 10),  # head shape
+        (128, 9, 16),  # stem tile
+        (8192, 144, 16),  # rb conv im2col tile (full run is 32*28*28 rows)
+        (1, 7, 3),  # degenerate single row
+        (130, 5, 4),  # M % 128 != 0 -> padding path
+        (256, 144, 16),  # exact multiple
+    ],
+)
+def test_matmul_bias_act_matches_ref(m, k, n, act):
+    x, w, b = _rand(0, m, k), _rand(1, k, n), _rand(2, n)
+    got = mk.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 32, 8), (129, 3, 5)])
+def test_plain_matmul_matches_ref(m, k, n):
+    x, w = _rand(3, m, k), _rand(4, k, n)
+    np.testing.assert_allclose(
+        mk.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        mk.matmul_bias_act(_rand(0, 4, 3), _rand(1, 5, 2), _rand(2, 2))
+    with pytest.raises(ValueError):
+        mk.matmul_bias_act(_rand(0, 4, 3), _rand(1, 3, 2), _rand(2, 7))
+    with pytest.raises(ValueError):
+        mk.matmul_bias_act(_rand(0, 4, 3), _rand(1, 3, 2), _rand(2, 2), "sigmoid")
+    with pytest.raises(ValueError):
+        mk.matmul(_rand(0, 4, 3), _rand(1, 5, 2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bias_act_hypothesis(m, k, n, act, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, k), dtype=jnp.float32)
+    w = jax.random.normal(kw, (k, n), dtype=jnp.float32)
+    b = jax.random.normal(kb, (n,), dtype=jnp.float32)
+    got = mk.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 128),
+    k=st.integers(1, 32),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bias_act_bf16_hypothesis(m, k, n, seed):
+    """dtype sweep: the kernel must also hold together in bfloat16."""
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), dtype=jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(kw, (k, n), dtype=jnp.float32).astype(jnp.bfloat16)
+    b = jnp.zeros((n,), jnp.bfloat16)
+    got = mk.matmul_bias_act(x, w, b, "none").astype(jnp.float32)
+    want = ref.matmul_bias_act_ref(x, w, b, "none").astype(jnp.float32)
+    # bf16 accumulate-in-f32: tolerances scaled to bf16 epsilon.
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# dense (custom VJP)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ["none", "relu"])
+def test_dense_vjp_matches_ref_grads(act):
+    x, w, b = _rand(5, 40, 12), _rand(6, 12, 7), _rand(7, 7)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(mk.dense(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.matmul_bias_act_ref(x, w, b, act) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gp, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_vjp_relu_masks_at_zero():
+    """Gradient through relu must be zero exactly where pre-activation <= 0."""
+    x = jnp.array([[1.0, -1.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(mk.dense(x, w, b, "relu")))(x)
+    np.testing.assert_allclose(g, [[1.0, 0.0]])
+
+
+# ---------------------------------------------------------------------------
+# conv2d + pooling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ["none", "relu"])
+@pytest.mark.parametrize(
+    "b,h,w,cin,cout",
+    [
+        (2, 8, 8, 3, 5),
+        (32, 28, 28, 1, 16),  # stem shape
+        (4, 14, 14, 16, 16),  # rb2 shape
+        (1, 4, 4, 1, 1),
+    ],
+)
+def test_conv2d_matches_ref(b, h, w, cin, cout, act):
+    x = _rand(8, b, h, w, cin)
+    wt = _rand(9, 3, 3, cin, cout) * 0.2
+    bias = _rand(10, cout) * 0.1
+    got = ck.conv2d_bias_act(x, wt, bias, act)
+    want = ref.conv2d_bias_act_ref(x, wt, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_rejects_channel_mismatch():
+    with pytest.raises(ValueError):
+        ck.conv2d_bias_act(_rand(0, 1, 4, 4, 3), _rand(1, 3, 3, 2, 5), _rand(2, 5))
+
+
+def test_conv2d_grad_matches_ref():
+    x = _rand(11, 2, 6, 6, 3)
+    wt = _rand(12, 3, 3, 3, 4) * 0.3
+    bias = _rand(13, 4) * 0.1
+
+    gp = jax.grad(lambda w: jnp.sum(ck.conv2d_bias_act(x, w, bias, "relu") ** 2))(wt)
+    gr = jax.grad(lambda w: jnp.sum(ref.conv2d_bias_act_ref(x, w, bias, "relu") ** 2))(
+        wt
+    )
+    np.testing.assert_allclose(gp, gr, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([4, 6, 8, 14]),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_hypothesis(b, hw, cin, cout, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (b, hw, hw, cin), dtype=jnp.float32)
+    wt = jax.random.normal(kw, (3, 3, cin, cout), dtype=jnp.float32) * 0.2
+    bias = jnp.zeros((cout,), jnp.float32)
+    got = ck.conv2d_bias_act(x, wt, bias, "none")
+    want = ref.conv2d_bias_act_ref(x, wt, bias, "none")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_avg_pool_2x2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    got = ck.avg_pool_2x2(x)
+    want = jnp.array([[[[2.5], [4.5]], [[10.5], [12.5]]]], jnp.float32)
+    np.testing.assert_allclose(got, want)
+
+
+def test_global_avg_pool():
+    x = jnp.ones((3, 5, 5, 7), jnp.float32) * 2.0
+    got = ck.global_avg_pool(x)
+    assert got.shape == (3, 7)
+    np.testing.assert_allclose(got, 2.0)

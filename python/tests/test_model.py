@@ -1,0 +1,165 @@
+"""L2 correctness: model over flat params, train/eval/value entry points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(42)
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (model.BATCH_SIZE, model.INPUT_DIM))
+    y = jax.random.randint(ky, (model.BATCH_SIZE,), 0, model.NUM_CLASSES)
+    return x, y
+
+
+def test_param_spec_layout_contiguous():
+    spec = model.param_spec()
+    off = 0
+    for entry in spec:
+        assert entry["offset"] == off
+        assert entry["size"] == int(np.prod(entry["shape"]))
+        off += entry["size"]
+    assert off == model.PARAM_COUNT
+
+
+def test_unflatten_roundtrip(params):
+    tensors = model.unflatten(params)
+    flat = jnp.concatenate([tensors[n].ravel() for n, _ in model.LAYERS])
+    np.testing.assert_array_equal(flat, params)
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a, b = model.init_params(7), model.init_params(7)
+    np.testing.assert_array_equal(a, b)
+    c = model.init_params(8)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_init_biases_zero(params):
+    tensors = model.unflatten(params)
+    for name, _ in model.LAYERS:
+        if tensors[name].ndim == 1:
+            np.testing.assert_array_equal(tensors[name], 0.0)
+
+
+def test_apply_shapes(params, batch):
+    x, _ = batch
+    logits = model.apply_fn(params, x)
+    assert logits.shape == (model.BATCH_SIZE, model.NUM_CLASSES)
+    assert logits.dtype == jnp.float32
+
+
+def test_all_backends_agree(params, batch):
+    x, y = batch
+    lp = model.loss_fn(params, x, y, pallas_mode="full")
+    lh = model.loss_fn(params, x, y, pallas_mode="head")
+    lr = model.loss_fn(params, x, y, pallas_mode="none")
+    np.testing.assert_allclose(lh, lr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(lp, lr, rtol=1e-5, atol=1e-6)
+
+
+def test_all_backend_gradients_agree(params, batch):
+    x, y = batch
+    gp = jax.grad(lambda p: model.loss_fn(p, x, y, pallas_mode="full"))(params)
+    gh = jax.grad(lambda p: model.loss_fn(p, x, y, pallas_mode="head"))(params)
+    gr = jax.grad(lambda p: model.loss_fn(p, x, y, pallas_mode="none"))(params)
+    np.testing.assert_allclose(gh, gr, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(gp, gr, rtol=1e-3, atol=1e-5)
+
+
+def test_train_step_shapes_and_descent(params, batch):
+    x, y = batch
+    lr = jnp.float32(0.1)
+    p, losses = params, []
+    step = jax.jit(model.train_step)
+    for _ in range(8):
+        p, loss, grad = step(p, x, y, lr)
+        losses.append(float(loss))
+    assert p.shape == (model.PARAM_COUNT,)
+    assert grad.shape == (model.PARAM_COUNT,)
+    # Repeated steps on one batch must overfit it: loss strictly improves
+    # from start to finish.
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_train_step_is_sgd_update(params, batch):
+    """new_params must equal params - lr * grad exactly."""
+    x, y = batch
+    lr = jnp.float32(0.05)
+    new_p, _, grad = model.train_step(params, x, y, lr)
+    np.testing.assert_allclose(new_p, params - lr * grad, rtol=1e-6, atol=1e-7)
+
+
+def test_eval_step_counts(params):
+    """eval_step must count argmax matches and ignore padded labels (-1)."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.uniform(key, (model.EVAL_BATCH, model.INPUT_DIM))
+    logits = model.apply_fn(params, x)
+    pred = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+
+    y = pred.copy()  # all correct
+    correct, loss_sum = model.eval_step(params, x, jnp.asarray(y))
+    assert float(correct) == model.EVAL_BATCH
+
+    y_half = pred.copy()
+    y_half[::2] = (y_half[::2] + 1) % model.NUM_CLASSES  # half wrong
+    correct, _ = model.eval_step(params, x, jnp.asarray(y_half))
+    assert float(correct) == model.EVAL_BATCH // 2
+
+    y_pad = pred.copy()
+    y_pad[100:] = -1  # padded tail: not correct, not in loss
+    correct, loss_pad = model.eval_step(params, x, jnp.asarray(y_pad))
+    assert float(correct) == 100
+    y_100 = pred[:100]
+    x_100_logits = logits[:100]
+    logp = jax.nn.log_softmax(x_100_logits, axis=-1)
+    want = -float(
+        jnp.sum(logp[jnp.arange(100), jnp.asarray(y_100)])
+    )
+    np.testing.assert_allclose(float(loss_pad), want, rtol=1e-5)
+
+
+def test_value_fn_formula():
+    """Eq. 1: V = ||g_prev - g_new||^2 * (1 + N/1e3)^Acc."""
+    g0 = jnp.array([1.0, 2.0, 3.0])
+    g1 = jnp.array([0.0, 0.0, 0.0])
+    v = model.value_fn(g0, g1, jnp.float32(0.9), jnp.float32(7.0))
+    want = 14.0 * (1 + 7 / 1000.0) ** 0.9
+    np.testing.assert_allclose(float(v), want, rtol=1e-6)
+
+
+def test_value_fn_zero_when_stale():
+    """An 'old' model (no gradient change) has zero communication value."""
+    g = jnp.ones(5)
+    v = model.value_fn(g, g, jnp.float32(0.99), jnp.float32(100.0))
+    assert float(v) == 0.0
+
+
+def test_value_fn_monotone_in_acc_and_n():
+    g0, g1 = jnp.ones(4), jnp.zeros(4)
+    v_lo = model.value_fn(g0, g1, jnp.float32(0.1), jnp.float32(7.0))
+    v_hi = model.value_fn(g0, g1, jnp.float32(0.9), jnp.float32(7.0))
+    assert float(v_hi) > float(v_lo)
+    v_n3 = model.value_fn(g0, g1, jnp.float32(0.9), jnp.float32(3.0))
+    assert float(v_hi) > float(v_n3)
+
+
+def test_train_step_flops_positive():
+    assert model.train_step_flops() > 1e6
+    assert model.eval_step_flops() > 0
+
+
+def test_apply_rejects_unknown_mode(params, batch):
+    x, _ = batch
+    with pytest.raises(ValueError):
+        model.apply_fn(params, x, pallas_mode="gpu")

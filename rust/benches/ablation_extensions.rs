@@ -1,0 +1,73 @@
+//! Bench: ablations over the framework extensions (paper future-work
+//! directions implemented as first-class features):
+//!
+//! 1. payload precision (f32 / f16 / int8) — wire bytes vs accuracy;
+//! 2. client dropout — robustness of each algorithm to a flaky fleet;
+//! 3. staleness-decayed aggregation (FedAsync-style) under VAFL gating.
+//!
+//!     cargo bench --bench ablation_extensions
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 20), VAFL_BENCH_MOCK=1.
+
+mod common;
+
+use vafl::config::Algorithm;
+use vafl::coordinator::registry::DropoutModel;
+use vafl::experiments;
+use vafl::model::quant::Precision;
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+
+    common::section("1. payload precision (experiment b, VAFL)");
+    println!("precision  bytes_up_total  best_acc  comm->target");
+    for precision in [Precision::F32, Precision::F16, Precision::Int8] {
+        let mut cfg = experiments::preset('b')?;
+        common::apply_env(&mut cfg, 20);
+        cfg.algorithm = Algorithm::Vafl;
+        cfg.upload_precision = precision;
+        let out = experiments::run(&cfg)?;
+        let bytes: u64 = out.metrics.records.iter().map(|r| r.bytes_up).sum();
+        println!(
+            "{:<10} {:<15} {:<9.4} {:?}",
+            precision.name(),
+            bytes,
+            out.best_accuracy,
+            out.comm_times_to_target
+        );
+    }
+
+    common::section("2. dropout robustness (experiment b, 20% drop prob)");
+    println!("algorithm  best_acc  comm->target  total_uploads");
+    for algo in Algorithm::ALL {
+        let mut cfg = experiments::preset('b')?;
+        common::apply_env(&mut cfg, 20);
+        cfg.algorithm = algo;
+        cfg.dropout = DropoutModel::flaky(0.2);
+        let out = experiments::run(&cfg)?;
+        println!(
+            "{:<10} {:<9.4} {:<13?} {}",
+            algo.name(),
+            out.best_accuracy,
+            out.comm_times_to_target,
+            out.total_uploads
+        );
+    }
+
+    common::section("3. staleness-decayed aggregation (experiment d, VAFL)");
+    println!("decay  best_acc  comm->target");
+    for decay in [None, Some(0.9), Some(0.5)] {
+        let mut cfg = experiments::preset('d')?;
+        common::apply_env(&mut cfg, 20);
+        cfg.algorithm = Algorithm::Vafl;
+        cfg.staleness_decay = decay;
+        let out = experiments::run(&cfg)?;
+        println!(
+            "{:<6} {:<9.4} {:?}",
+            decay.map_or("none".to_string(), |d| format!("{d}")),
+            out.best_accuracy,
+            out.comm_times_to_target
+        );
+    }
+    Ok(())
+}

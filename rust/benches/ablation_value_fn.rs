@@ -1,0 +1,52 @@
+//! Bench: ablation of the VAFL value function (Eq. 1) — the design choice
+//! DESIGN.md §6 calls out: does the `(1 + N/10^3)^Acc` amplification term
+//! actually help, or is the raw gradient-change norm enough?
+//!
+//!     cargo bench --bench ablation_value_fn
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 30), VAFL_BENCH_MOCK=1.
+
+mod common;
+
+use vafl::config::{Algorithm, ValueFnConfig};
+use vafl::experiments;
+use vafl::metrics::ccr;
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    common::section("Ablation — VAFL value function (Eq. 1)");
+    println!("variant                       exp  comm->target  CCR      best_acc");
+    println!("------------------------------------------------------------------");
+    for which in ['b', 'd'] {
+        // Baseline for CCR.
+        let mut afl = experiments::preset(which)?;
+        common::apply_env(&mut afl, 30);
+        afl.algorithm = Algorithm::Afl;
+        let afl_out = experiments::run(&afl)?;
+        let c0 = afl_out
+            .comm_times_to_target
+            .unwrap_or(afl_out.total_uploads);
+        for (label, value_fn) in [
+            ("vafl (full Eq. 1)", ValueFnConfig { use_acc_term: true }),
+            ("vafl (grad-diff only)", ValueFnConfig { use_acc_term: false }),
+        ] {
+            let mut cfg = experiments::preset(which)?;
+            common::apply_env(&mut cfg, 30);
+            cfg.algorithm = Algorithm::Vafl;
+            cfg.value_fn = value_fn;
+            let out = experiments::run(&cfg)?;
+            let c1 = out.comm_times_to_target.unwrap_or(out.total_uploads);
+            println!(
+                "{label:<29} {which}    {:<13} {:<8.4} {:.4}",
+                c1,
+                ccr(c0, c1),
+                out.best_accuracy
+            );
+        }
+    }
+    println!(
+        "\n(the acc term matters more as N grows — paper §III-A: it \"further\n\
+         differentiate[s]\" client values for larger fleets)"
+    );
+    Ok(())
+}

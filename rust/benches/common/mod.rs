@@ -1,0 +1,30 @@
+#![allow(dead_code)]
+
+//! Shared bench plumbing: every `rust/benches/*` binary is `harness = false`
+//! (the offline crate set has no criterion) and uses `vafl::util::timer`
+//! for stats. Benches accept two env knobs:
+//!
+//! * `VAFL_BENCH_ROUNDS` — communication rounds per run (default varies).
+//! * `VAFL_BENCH_MOCK=1` — force the mock backend (CI without artifacts).
+
+use vafl::config::{Backend, ExperimentConfig};
+
+/// Apply the standard env knobs to a config.
+pub fn apply_env(cfg: &mut ExperimentConfig, default_rounds: usize) {
+    cfg.rounds = std::env::var("VAFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_rounds);
+    if std::env::var("VAFL_BENCH_MOCK").is_ok() || !std::path::Path::new("artifacts/params_spec.json").exists() {
+        cfg.backend = Backend::Mock;
+        // The mock linear model tops out below the CNN; keep the target
+        // reachable so comm-to-target is meaningful.
+        cfg.target_acc = cfg.target_acc.min(0.75);
+    }
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+}
+
+/// Mark a bench section.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

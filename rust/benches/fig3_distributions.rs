@@ -1,0 +1,46 @@
+//! Bench: regenerate **Fig. 3** — per-client label/sample distributions of
+//! the four experiment datasets, plus partitioner throughput.
+//!
+//!     cargo bench --bench fig3_distributions
+
+mod common;
+
+use vafl::data::stats::DistributionTable;
+use vafl::data::synth::SynthConfig;
+use vafl::data::{partition, PartitionScheme};
+use vafl::experiments::{self, figures};
+use vafl::util::rng::Rng;
+use vafl::util::timer::bench;
+
+fn main() -> anyhow::Result<()> {
+    common::section("Fig. 3 — Dataset distribution of clients");
+    let mut tables = Vec::new();
+    for which in ['a', 'b', 'c', 'd'] {
+        let cfg = experiments::preset(which)?;
+        let synth = SynthConfig { pixel_noise: cfg.pixel_noise, ..Default::default() };
+        let (shards, _) = partition(
+            cfg.partition,
+            cfg.num_clients,
+            cfg.samples_per_client,
+            cfg.test_samples,
+            &synth,
+            &Rng::new(cfg.seed),
+        );
+        tables.push((cfg.name, DistributionTable::from_shards(&shards)));
+    }
+    println!("{}", figures::fig3(&tables));
+
+    common::section("partitioner + generator throughput");
+    let synth = SynthConfig::default();
+    for (label, scheme) in [
+        ("iid", PartitionScheme::Iid),
+        ("paper_skew", PartitionScheme::PaperSkew),
+        ("dirichlet(0.5)", PartitionScheme::Dirichlet { alpha: 0.5 }),
+    ] {
+        let stats = bench(1, 5, || {
+            partition(scheme, 7, 500, 100, &synth, &Rng::new(1))
+        });
+        println!("{}", stats.format_line(&format!("partition 7x500 {label}")));
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate **Fig. 4** — global-model accuracy curves for AFL /
+//! EAFLM / VAFL in each experiment a–d.
+//!
+//!     cargo bench --bench fig4_acc_curves
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 40), VAFL_BENCH_MOCK=1. Curves are also
+//! written to results/bench/fig4_*.csv.
+
+mod common;
+
+use vafl::experiments::{self, figures};
+use vafl::metrics::csv::write_rounds_csv;
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    for which in ['a', 'b', 'c', 'd'] {
+        let mut cfg = experiments::preset(which)?;
+        common::apply_env(&mut cfg, 40);
+        common::section(&format!("Fig. 4({which}) — experiment {which}"));
+        let outs = experiments::run_all_algorithms(&cfg)?;
+        let runs: Vec<_> = outs.into_iter().map(|o| o.metrics).collect();
+        println!("{}", figures::fig4(&cfg.name, &runs));
+        std::fs::create_dir_all("results/bench")?;
+        for m in &runs {
+            write_rounds_csv(m, format!("results/bench/fig4_{}_{}.csv", m.experiment, m.algorithm))?;
+        }
+        // Convergence-speed summary: rounds to 80% of best accuracy.
+        for m in &runs {
+            let best = m.best_accuracy();
+            let fast = m
+                .acc_curve()
+                .iter()
+                .find(|(_, a)| *a >= 0.8 * best)
+                .map(|(r, _)| *r);
+            println!(
+                "{:<6} best={:.4} rounds_to_80%_of_best={:?}",
+                m.algorithm, best, fast
+            );
+        }
+    }
+    Ok(())
+}

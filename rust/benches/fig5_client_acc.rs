@@ -1,0 +1,40 @@
+//! Bench: regenerate **Fig. 5** — per-client accuracy curves under VAFL
+//! for each experiment a–d.
+//!
+//!     cargo bench --bench fig5_client_acc
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 40), VAFL_BENCH_MOCK=1. Curves are also
+//! written to results/bench/fig5_*.csv.
+
+mod common;
+
+use vafl::config::Algorithm;
+use vafl::experiments::{self, figures};
+use vafl::metrics::csv::write_client_acc_csv;
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    for which in ['a', 'b', 'c', 'd'] {
+        let mut cfg = experiments::preset(which)?;
+        cfg.algorithm = Algorithm::Vafl;
+        common::apply_env(&mut cfg, 40);
+        common::section(&format!("Fig. 5({which}) — per-client Acc under VAFL"));
+        let out = experiments::run(&cfg)?;
+        println!("{}", figures::fig5(&cfg.name, &out.metrics));
+        std::fs::create_dir_all("results/bench")?;
+        write_client_acc_csv(&out.metrics, format!("results/bench/fig5_{which}.csv"))?;
+        // Per-client spread at the end of training (Non-IID experiments
+        // show a visibly wider spread — the paper's qualitative claim).
+        let curves = out.metrics.client_acc_curves();
+        let finals: Vec<f64> = curves
+            .iter()
+            .filter_map(|c| c.last().map(|&(_, a)| a))
+            .collect();
+        let s = vafl::util::timer::summarize(&finals);
+        println!(
+            "final client acc: mean={:.4} sd={:.4} min={:.4} max={:.4}",
+            s.mean, s.sd, s.min, s.max
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate **Fig. 6** — VAFL global accuracy across the four
+//! experiments on one chart.
+//!
+//!     cargo bench --bench fig6_vafl_acc
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 40), VAFL_BENCH_MOCK=1.
+
+mod common;
+
+use vafl::config::Algorithm;
+use vafl::experiments::{self, figures};
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    common::section("Fig. 6 — VAFL Acc across experiments a-d");
+    let mut runs = Vec::new();
+    for which in ['a', 'b', 'c', 'd'] {
+        let mut cfg = experiments::preset(which)?;
+        cfg.algorithm = Algorithm::Vafl;
+        common::apply_env(&mut cfg, 40);
+        let out = experiments::run(&cfg)?;
+        println!(
+            "experiment {which}: best acc {:.4}, comm->target {:?}, uploads {}",
+            out.best_accuracy, out.comm_times_to_target, out.total_uploads
+        );
+        runs.push(out.metrics);
+    }
+    println!("\n{}", figures::fig6(&runs));
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Bench: L3 hot paths + the PJRT runtime — the numbers behind
+//! EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench perf_hotpath
+//!
+//! Sections:
+//!  1. coordinator primitives (aggregation, norms, value amplification)
+//!  2. simulation substrate (event queue, netsim, data generation)
+//!  3. PJRT runtime steps (skipped with VAFL_BENCH_MOCK=1 / no artifacts)
+//!  4. end-to-end mock round (coordinator overhead with compute ~free)
+
+mod common;
+
+use vafl::config::ValueFnConfig;
+use vafl::coordinator::aggregate::Aggregator;
+use vafl::data::synth::{generate, SynthConfig};
+use vafl::fleet::amplify_value;
+use vafl::model::{l2_norm_sq, sq_distance};
+use vafl::netsim::{LinkProfile, Message};
+use vafl::runtime::Executor;
+use vafl::sim::EventQueue;
+use vafl::util::rng::Rng;
+use vafl::util::timer::bench;
+
+fn main() -> anyhow::Result<()> {
+    let p = 17290usize; // current artifact parameter count
+
+    common::section("1. coordinator primitives");
+    let mut rng = Rng::new(1);
+    let models: Vec<Vec<f32>> = (0..7)
+        .map(|_| (0..p).map(|_| rng.gauss() as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    let weights = vec![1000usize; 7];
+    let mut out = vec![0.0f32; p];
+    let mut agg = Aggregator::new();
+    let s = bench(10, 200, || agg.aggregate(&refs, &weights, &mut out));
+    println!("{}", s.format_line(&format!("aggregate 7 x {p} params")));
+
+    let s = bench(10, 500, || sq_distance(&models[0], &models[1]));
+    println!("{}", s.format_line(&format!("sq_distance {p}")));
+    let s = bench(10, 500, || l2_norm_sq(&models[0]));
+    println!("{}", s.format_line(&format!("l2_norm_sq {p}")));
+    let s = bench(10, 1000, || {
+        amplify_value(1.5, 0.93, 7, ValueFnConfig::default())
+    });
+    println!("{}", s.format_line("amplify_value (Eq. 1 server side)"));
+
+    common::section("2. simulation substrate");
+    let s = bench(5, 50, || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000 {
+            q.schedule_at((i % 977) as f64, i);
+        }
+        while q.pop().is_some() {}
+    });
+    println!("{}", s.format_line("event queue 10k schedule+pop"));
+    let link = LinkProfile::paper_lan();
+    let mut nrng = Rng::new(2);
+    let msg = Message::ModelUpload { payload_bytes: 4 * p as u64 + 64 };
+    let s = bench(10, 1000, || link.transfer_seconds(&msg, &mut nrng));
+    println!("{}", s.format_line("netsim transfer_seconds"));
+    let synth = SynthConfig::default();
+    let mut drng = Rng::new(3);
+    let s = bench(2, 10, || generate(100, &synth, &mut drng));
+    println!("{}", s.format_line("synthdigits generate 100 images"));
+
+    common::section("3. PJRT runtime steps");
+    if std::env::var("VAFL_BENCH_MOCK").is_err()
+        && std::path::Path::new("artifacts/params_spec.json").exists()
+    {
+        let mut rt = vafl::runtime::PjrtRuntime::load("artifacts")?;
+        let pc = rt.param_count();
+        let (b, eb, d) = (rt.batch_size(), rt.eval_batch(), rt.input_dim());
+        let params = rt.spec().load_init_params()?;
+        let x = vec![0.5f32; b * d];
+        let y: Vec<i32> = (0..b as i32).map(|i| i % 10).collect();
+        let s = bench(3, 20, || rt.train_step(&params, &x, &y, 0.1).unwrap());
+        println!("{}", s.format_line(&format!("pjrt train_step B={b}")));
+        let xe = vec![0.5f32; eb * d];
+        let ye: Vec<i32> = (0..eb as i32).map(|i| i % 10).collect();
+        let s = bench(2, 10, || rt.eval_step(&params, &xe, &ye).unwrap());
+        println!("{}", s.format_line(&format!("pjrt eval_step EB={eb}")));
+        let g = vec![0.1f32; pc];
+        let s = bench(5, 50, || rt.value(&g, &params, 0.9, 7.0).unwrap());
+        println!("{}", s.format_line("pjrt value (Eq. 1 on artifact path)"));
+    } else {
+        println!("skipped (no artifacts / VAFL_BENCH_MOCK set)");
+    }
+
+    common::section("4. end-to-end mock round (coordinator overhead)");
+    let mut cfg = vafl::experiments::preset('b')?;
+    cfg.backend = vafl::config::Backend::Mock;
+    cfg.rounds = 1;
+    cfg.samples_per_client = 200;
+    cfg.test_samples = 128;
+    cfg.probe_samples = 64;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let (mut server, mut exec) = vafl::experiments::build(&cfg)?;
+    let s = bench(2, 20, || server.run_round(exec.as_mut()).unwrap());
+    println!("{}", s.format_line("full mock round, 7 clients"));
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! FedAvg aggregation (Algorithm 1 lines 15–16):
+//! `theta^{t+1} = sum_{i in K} (n_i / n) theta_i^{t+1}` over the uploaded
+//! models, weighted by local sample counts.
+
+use crate::model::{weighted_average_into, ParamVec};
+
+/// Reusable aggregator (buffers survive across rounds — the hot path does
+/// not allocate; see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct Aggregator {
+    scratch: Vec<f64>,
+}
+
+impl Aggregator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Aggregate `models` (with sample-count weights) into `out`.
+    ///
+    /// Panics if `models` is empty — the server must skip aggregation on
+    /// rounds where nothing was uploaded (possible under EAFLM).
+    pub fn aggregate(&mut self, models: &[&[f32]], sample_counts: &[usize], out: &mut ParamVec) {
+        let weights: Vec<f64> = sample_counts.iter().map(|&n| n as f64).collect();
+        weighted_average_into(models, &weights, out, &mut self.scratch);
+    }
+
+    /// Aggregate with arbitrary positive weights (n_i, possibly decayed by
+    /// staleness — the FedAsync-style extension).
+    pub fn aggregate_weighted(&mut self, models: &[&[f32]], weights: &[f64], out: &mut ParamVec) {
+        weighted_average_into(models, weights, out, &mut self.scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_by_sample_count() {
+        let a = vec![0.0f32, 4.0];
+        let b = vec![2.0f32, 0.0];
+        let mut agg = Aggregator::new();
+        let mut out = vec![0.0f32; 2];
+        agg.aggregate(&[&a, &b], &[100, 300], &mut out);
+        assert_eq!(out, vec![1.5, 1.0]);
+    }
+
+    #[test]
+    fn reuse_across_rounds() {
+        let mut agg = Aggregator::new();
+        let mut out = vec![0.0f32; 3];
+        let m1 = vec![1.0f32; 3];
+        agg.aggregate(&[&m1], &[10], &mut out);
+        assert_eq!(out, vec![1.0; 3]);
+        let m2 = vec![5.0f32; 3];
+        agg.aggregate(&[&m2], &[10], &mut out);
+        assert_eq!(out, vec![5.0; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_upload_set_panics() {
+        let mut agg = Aggregator::new();
+        let mut out = vec![0.0f32; 1];
+        agg.aggregate(&[], &[], &mut out);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`policy`] — the upload-gating policies: AFL (upload always), VAFL
+//!   (Eq. 1–2 communication-value gate), EAFLM (Eq. 3 gradient gate).
+//! * [`aggregate`] — FedAvg weighted aggregation (Algorithm 1 line 16).
+//! * [`server`] — the asynchronous round engine orchestrating the fleet,
+//!   the network simulator, the virtual clock, and the metrics stack.
+
+pub mod aggregate;
+pub mod policy;
+pub mod registry;
+pub mod server;
+
+pub use policy::{AflPolicy, EaflmPolicy, SelectionPolicy, VaflPolicy};
+pub use registry::{ClientRegistry, DropoutModel};
+pub use server::{Server, ServerContext};

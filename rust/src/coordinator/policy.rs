@@ -1,0 +1,255 @@
+//! Upload-gating policies: which clients the server asks for a model
+//! upload after seeing the round's [`ClientReport`]s.
+//!
+//! * [`AflPolicy`] — plain asynchronous FedAvg: everyone uploads (the
+//!   paper's "ordinary asynchronous training" baseline; CCR = 0 by
+//!   definition).
+//! * [`VaflPolicy`] — the paper's contribution (Eq. 1–2): amplify each
+//!   client's raw gradient-change norm into V_i, upload iff V_i >= mean V.
+//! * [`EaflmPolicy`] — Lu et al.'s gate (paper Eq. 3): a client is "lazy"
+//!   (skipped) when its gradient norm falls below a threshold driven by
+//!   the recent movement of the global model.
+
+use crate::config::{Algorithm, EaflmParams, ValueFnConfig};
+use crate::fleet::{amplify_value, ClientReport};
+
+/// Context the server exposes to a policy at selection time.
+pub struct PolicyContext<'a> {
+    pub round: usize,
+    pub n_clients: usize,
+    /// Global parameter history, most recent last (theta^{t}, theta^{t-1},
+    /// ... as far back as the policy asked for).
+    pub global_history: &'a [Vec<f32>],
+}
+
+/// Decision for one round.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// `selected[i]` — upload requested from reports[i]'s client.
+    pub selected: Vec<bool>,
+    /// The effective values the decision used (diagnostics: Fig. 5 / logs).
+    pub values: Vec<f64>,
+    /// The threshold the policy applied (mean-V for VAFL, Eq. 3 RHS for
+    /// EAFLM, 0 for AFL).
+    pub threshold: f64,
+}
+
+/// An upload-gating policy (the paper's pluggable contribution point).
+pub trait SelectionPolicy {
+    fn name(&self) -> &'static str;
+
+    /// How many recent global models the policy needs (server keeps a
+    /// bounded history).
+    fn history_depth(&self) -> usize {
+        0
+    }
+
+    /// Decide which of this round's reporters upload their model.
+    fn select(&mut self, reports: &[ClientReport], ctx: &PolicyContext<'_>) -> Selection;
+}
+
+/// Build the policy for an [`Algorithm`].
+pub fn make_policy(
+    algorithm: Algorithm,
+    value_cfg: ValueFnConfig,
+    eaflm: EaflmParams,
+) -> Box<dyn SelectionPolicy> {
+    match algorithm {
+        Algorithm::Afl => Box::new(AflPolicy),
+        Algorithm::Vafl => Box::new(VaflPolicy { value_cfg }),
+        Algorithm::Eaflm => Box::new(EaflmPolicy { params: eaflm }),
+    }
+}
+
+/// Plain async FedAvg: every reporter uploads.
+pub struct AflPolicy;
+
+impl SelectionPolicy for AflPolicy {
+    fn name(&self) -> &'static str {
+        "afl"
+    }
+
+    fn select(&mut self, reports: &[ClientReport], _ctx: &PolicyContext<'_>) -> Selection {
+        Selection {
+            selected: vec![true; reports.len()],
+            values: reports.iter().map(|r| r.value).collect(),
+            threshold: 0.0,
+        }
+    }
+}
+
+/// VAFL (paper Eq. 1–2): V_i = raw_i * (1 + N/1e3)^{Acc_i}; upload iff
+/// V_i >= mean(V).
+pub struct VaflPolicy {
+    pub value_cfg: ValueFnConfig,
+}
+
+impl SelectionPolicy for VaflPolicy {
+    fn name(&self) -> &'static str {
+        "vafl"
+    }
+
+    fn select(&mut self, reports: &[ClientReport], ctx: &PolicyContext<'_>) -> Selection {
+        // Non-finite raw values (a diverged or corrupt client) carry zero
+        // communication value rather than poisoning the mean.
+        let values: Vec<f64> = reports
+            .iter()
+            .map(|r| {
+                let v = amplify_value(r.value, r.acc, ctx.n_clients, self.value_cfg);
+                if v.is_finite() {
+                    v
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        // Paper Eq. 2: V_i >= (sum_j V_j) / N. N is the fleet size; when
+        // every client reports each round (this engine), it equals the
+        // report count.
+        let mean = values.iter().sum::<f64>() / ctx.n_clients as f64;
+        Selection {
+            selected: values.iter().map(|&v| v >= mean).collect(),
+            values,
+            threshold: mean,
+        }
+    }
+}
+
+/// EAFLM (paper Eq. 3, §IV-D): skip client i when
+/// `||grad_i||^2 <= (1/(alpha^2 * beta * m^2)) * ||sum_d xi_d (theta^{k-d} -
+/// theta^{k-1-d})||^2` with xi_d = 1/D. With D = 1 the RHS reduces to the
+/// squared norm of the last global step, scaled.
+pub struct EaflmPolicy {
+    pub params: EaflmParams,
+}
+
+impl SelectionPolicy for EaflmPolicy {
+    fn name(&self) -> &'static str {
+        "eaflm"
+    }
+
+    fn history_depth(&self) -> usize {
+        self.params.depth + 1
+    }
+
+    fn select(&mut self, reports: &[ClientReport], ctx: &PolicyContext<'_>) -> Selection {
+        let m = ctx.n_clients as f64;
+        let a2bm2 = self.params.alpha * self.params.alpha * self.params.beta * m * m;
+        // RHS: || sum_{d=1..D} xi_d (theta^{k-d} - theta^{k-1-d}) ||^2.
+        let hist = ctx.global_history;
+        let threshold = if hist.len() < 2 {
+            // No movement history yet: no client is considered lazy.
+            0.0
+        } else {
+            let depth = self.params.depth.min(hist.len() - 1);
+            let xi = 1.0 / depth as f64;
+            let dim = hist[0].len();
+            let mut combo = vec![0.0f64; dim];
+            for d in 1..=depth {
+                let newer = &hist[hist.len() - d];
+                let older = &hist[hist.len() - d - 1];
+                for ((c, &a), &b) in combo.iter_mut().zip(newer).zip(older) {
+                    *c += xi * (a as f64 - b as f64);
+                }
+            }
+            let norm_sq: f64 = combo.iter().map(|&v| v * v).sum();
+            norm_sq / a2bm2
+        };
+        let selected: Vec<bool> = reports
+            .iter()
+            .map(|r| r.grad_norm_sq > threshold)
+            .collect();
+        Selection {
+            selected,
+            values: reports.iter().map(|r| r.grad_norm_sq).collect(),
+            threshold,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(id: usize, value: f64, acc: f64, grad_norm_sq: f64) -> ClientReport {
+        ClientReport {
+            client_id: id,
+            round: 1,
+            value,
+            acc,
+            grad_norm_sq,
+            train_loss: 1.0,
+            num_samples: 100,
+            compute_seconds: 1.0,
+        }
+    }
+
+    #[test]
+    fn afl_selects_everyone() {
+        let reports = vec![report(0, 0.0, 0.0, 0.0), report(1, 9.0, 0.9, 9.0)];
+        let ctx = PolicyContext { round: 1, n_clients: 2, global_history: &[] };
+        let s = AflPolicy.select(&reports, &ctx);
+        assert_eq!(s.selected, vec![true, true]);
+    }
+
+    #[test]
+    fn vafl_gates_on_mean() {
+        // values 1, 2, 9 -> mean 4 -> only the 9 uploads.
+        let reports = vec![
+            report(0, 1.0, 0.0, 0.0),
+            report(1, 2.0, 0.0, 0.0),
+            report(2, 9.0, 0.0, 0.0),
+        ];
+        let ctx = PolicyContext { round: 1, n_clients: 3, global_history: &[] };
+        let mut p = VaflPolicy { value_cfg: ValueFnConfig::default() };
+        let s = p.select(&reports, &ctx);
+        assert_eq!(s.selected, vec![false, false, true]);
+        assert!((s.threshold - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vafl_acc_term_boosts_accurate_clients() {
+        // Same raw value; the accurate client's amplified V must exceed the
+        // inaccurate one's.
+        let reports = vec![report(0, 1.0, 0.99, 0.0), report(1, 1.0, 0.01, 0.0)];
+        let ctx = PolicyContext { round: 1, n_clients: 500, global_history: &[] };
+        let mut p = VaflPolicy { value_cfg: ValueFnConfig::default() };
+        let s = p.select(&reports, &ctx);
+        assert!(s.values[0] > s.values[1]);
+    }
+
+    #[test]
+    fn eaflm_first_rounds_select_all() {
+        let reports = vec![report(0, 0.0, 0.0, 1e-9), report(1, 0.0, 0.0, 5.0)];
+        let ctx = PolicyContext { round: 1, n_clients: 2, global_history: &[] };
+        let mut p = EaflmPolicy { params: EaflmParams::default() };
+        let s = p.select(&reports, &ctx);
+        assert_eq!(s.selected, vec![true, true]);
+    }
+
+    #[test]
+    fn eaflm_skips_lazy_clients_once_history_exists() {
+        // Global step of norm 2 (per dim 1.0 over 4 dims) with beta pinned
+        // to 1: threshold = 4 / (0.98^2 * 1 * 4) ≈ 1.0412. grad_norm_sq 0.5
+        // is lazy, 9 is not. (The crate default beta is the calibrated
+        // 0.05 — see DESIGN.md §6 — so pin it here.)
+        let h0 = vec![0.0f32; 4];
+        let h1 = vec![1.0f32; 4];
+        let hist = vec![h0, h1];
+        let reports = vec![report(0, 0.0, 0.0, 0.5), report(1, 0.0, 0.0, 9.0)];
+        let ctx = PolicyContext { round: 3, n_clients: 2, global_history: &hist };
+        let mut p = EaflmPolicy { params: EaflmParams { beta: 1.0, ..Default::default() } };
+        let s = p.select(&reports, &ctx);
+        assert_eq!(s.selected, vec![false, true]);
+        assert!((s.threshold - 4.0 / (0.98f64.powi(2) * 4.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn make_policy_dispatches() {
+        let cfg = ValueFnConfig::default();
+        let ea = EaflmParams::default();
+        assert_eq!(make_policy(Algorithm::Afl, cfg, ea).name(), "afl");
+        assert_eq!(make_policy(Algorithm::Vafl, cfg, ea).name(), "vafl");
+        assert_eq!(make_policy(Algorithm::Eaflm, cfg, ea).name(), "eaflm");
+    }
+}

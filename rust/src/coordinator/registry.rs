@@ -1,0 +1,185 @@
+//! Client registry: fleet membership and availability.
+//!
+//! The paper's motivation (§I) is exactly this failure mode — "when a few
+//! clients are disconnected due to network problems, other clients and
+//! server have to wait for them". The registry models per-round client
+//! availability: a client can drop with a configured probability, stays
+//! offline for a geometric number of rounds, then rejoins and resumes from
+//! its (now stale) local model. The round engine consults the registry so
+//! dropped clients neither train, report, nor receive broadcasts.
+
+use crate::util::rng::Rng;
+
+/// Availability status of one client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientStatus {
+    /// Online: trains and reports this round.
+    Active,
+    /// Offline for the given remaining rounds.
+    Dropped { remaining: usize },
+}
+
+/// Dropout model parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DropoutModel {
+    /// Probability an active client drops at the start of a round.
+    pub drop_prob: f64,
+    /// Mean offline duration in rounds (geometric; >= 1).
+    pub mean_offline_rounds: f64,
+}
+
+impl DropoutModel {
+    /// No dropout (the paper's main experiments — all clients stay up).
+    pub fn none() -> Self {
+        DropoutModel { drop_prob: 0.0, mean_offline_rounds: 1.0 }
+    }
+
+    /// A flaky edge fleet (failure-injection tests and ablations).
+    pub fn flaky(drop_prob: f64) -> Self {
+        DropoutModel { drop_prob, mean_offline_rounds: 2.0 }
+    }
+}
+
+/// Fleet membership + availability tracking.
+pub struct ClientRegistry {
+    status: Vec<ClientStatus>,
+    model: DropoutModel,
+    rng: Rng,
+    /// Total (client, round) drop events, for metrics.
+    pub total_drop_rounds: usize,
+}
+
+impl ClientRegistry {
+    pub fn new(n_clients: usize, model: DropoutModel, rng: Rng) -> Self {
+        ClientRegistry {
+            status: vec![ClientStatus::Active; n_clients],
+            model,
+            rng,
+            total_drop_rounds: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.status.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.status.is_empty()
+    }
+
+    pub fn is_active(&self, client: usize) -> bool {
+        matches!(self.status[client], ClientStatus::Active)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.status.iter().filter(|s| matches!(s, ClientStatus::Active)).count()
+    }
+
+    /// Advance availability by one round: offline timers tick down, active
+    /// clients may drop. Guarantees at least one active client (the server
+    /// cannot run a round against an empty fleet; the paper's fleets never
+    /// fully vanish either).
+    pub fn tick(&mut self) {
+        for s in &mut self.status {
+            match *s {
+                ClientStatus::Dropped { remaining } => {
+                    *s = if remaining <= 1 {
+                        ClientStatus::Active
+                    } else {
+                        ClientStatus::Dropped { remaining: remaining - 1 }
+                    };
+                }
+                ClientStatus::Active => {
+                    if self.model.drop_prob > 0.0 && self.rng.f64() < self.model.drop_prob {
+                        // Geometric offline duration with the configured mean.
+                        let p = 1.0 / self.model.mean_offline_rounds.max(1.0);
+                        let mut dur = 1usize;
+                        while self.rng.f64() > p && dur < 50 {
+                            dur += 1;
+                        }
+                        *s = ClientStatus::Dropped { remaining: dur };
+                    }
+                }
+            }
+        }
+        if self.active_count() == 0 {
+            // Revive the first client: quorum of one.
+            self.status[0] = ClientStatus::Active;
+        }
+        self.total_drop_rounds += self.status.len() - self.active_count();
+    }
+
+    /// Indices of currently active clients.
+    pub fn active_clients(&self) -> Vec<usize> {
+        (0..self.status.len()).filter(|&i| self.is_active(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_dropout_keeps_everyone_active() {
+        let mut reg = ClientRegistry::new(5, DropoutModel::none(), Rng::new(1));
+        for _ in 0..20 {
+            reg.tick();
+            assert_eq!(reg.active_count(), 5);
+        }
+        assert_eq!(reg.total_drop_rounds, 0);
+    }
+
+    #[test]
+    fn flaky_fleet_drops_and_recovers() {
+        let mut reg = ClientRegistry::new(5, DropoutModel::flaky(0.3), Rng::new(2));
+        let mut saw_drop = false;
+        let mut saw_recovery_after_drop = false;
+        let mut was_dropped = vec![false; 5];
+        for _ in 0..60 {
+            reg.tick();
+            for i in 0..5 {
+                if !reg.is_active(i) {
+                    saw_drop = true;
+                    was_dropped[i] = true;
+                } else if was_dropped[i] {
+                    saw_recovery_after_drop = true;
+                }
+            }
+            assert!(reg.active_count() >= 1);
+        }
+        assert!(saw_drop);
+        assert!(saw_recovery_after_drop);
+        assert!(reg.total_drop_rounds > 0);
+    }
+
+    #[test]
+    fn quorum_of_one_enforced() {
+        let mut reg = ClientRegistry::new(2, DropoutModel::flaky(1.0), Rng::new(3));
+        for _ in 0..10 {
+            reg.tick();
+            assert!(reg.active_count() >= 1);
+        }
+    }
+
+    #[test]
+    fn active_clients_lists_indices() {
+        let mut reg = ClientRegistry::new(3, DropoutModel::none(), Rng::new(4));
+        reg.tick();
+        assert_eq!(reg.active_clients(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let run = |seed| {
+            let mut reg = ClientRegistry::new(4, DropoutModel::flaky(0.4), Rng::new(seed));
+            let mut trace = Vec::new();
+            for _ in 0..30 {
+                reg.tick();
+                trace.push(reg.active_clients());
+            }
+            trace
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

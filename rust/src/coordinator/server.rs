@@ -1,0 +1,577 @@
+//! The asynchronous federated round engine (paper Algorithm 1, server
+//! side), orchestrating the fleet, the network simulator, the virtual
+//! clock, and the metrics stack.
+//!
+//! Per round `t`:
+//!
+//! 1. Every client runs its local round (lines 4–7) — `r x E` SGD passes
+//!    through PJRT — and its **V report** (68 bytes) arrives at
+//!    `now + compute + uplink`. The engine's event queue orders arrivals;
+//!    stragglers are visible as idle time.
+//! 2. The policy (lines 8–14: VAFL's Eq. 2 gate / EAFLM's Eq. 3 gate / AFL)
+//!    picks the upload set from the reports.
+//! 3. Selected clients receive an upload request and ship their **model
+//!    upload** (the counted, gated quantity — Table III); the aggregation
+//!    (lines 15–16) runs when the last upload lands.
+//! 4. The new global model is broadcast to the *selected* clients (the
+//!    paper's server "returns the model obtained by the algorithm to the
+//!    client"); skipped clients keep training their local models — that is
+//!    the asynchrony that makes models "old" and drives Eq. 1.
+//! 5. The server evaluates the global model on its held-out test set
+//!    (Fig. 4/6 curves) and the metrics stack records the round.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::aggregate::Aggregator;
+use crate::coordinator::policy::{PolicyContext, SelectionPolicy};
+use crate::coordinator::registry::ClientRegistry;
+use crate::model::quant::Precision;
+use crate::data::synth::Dataset;
+use crate::fleet::{Client, ClientReport};
+use crate::metrics::{RoundRecord, RunMetrics};
+use crate::model::ParamVec;
+use crate::netsim::{LinkProfile, Message};
+use crate::runtime::{evaluate_with_params, Executor};
+use crate::sim::EventQueue;
+use crate::util::rng::Rng;
+use crate::{log_debug, log_info};
+
+/// Static context the server needs besides the fleet.
+pub struct ServerContext {
+    pub link: LinkProfile,
+    pub train_flops: u64,
+    pub eval_flops: u64,
+    pub model_payload_bytes: u64,
+    pub test_images: Vec<f32>,
+    pub test_labels: Vec<i32>,
+}
+
+/// The federated server.
+pub struct Server {
+    cfg: ExperimentConfig,
+    ctx: ServerContext,
+    clients: Vec<Client>,
+    policy: Box<dyn SelectionPolicy>,
+    /// Current global model theta^t.
+    pub global: ParamVec,
+    /// Recent global models, oldest first (bounded by the policy's needs).
+    history: Vec<Vec<f32>>,
+    agg: Aggregator,
+    queue: EventQueue<usize>,
+    net_rng: Rng,
+    pub metrics: RunMetrics,
+    /// Availability registry (dropout model; all-active by default).
+    pub registry: ClientRegistry,
+    round: usize,
+}
+
+impl Server {
+    pub fn new(
+        cfg: ExperimentConfig,
+        ctx: ServerContext,
+        clients: Vec<Client>,
+        policy: Box<dyn SelectionPolicy>,
+        init_params: ParamVec,
+        root_rng: &Rng,
+    ) -> Self {
+        let metrics = RunMetrics::new(&cfg.name, policy.name(), cfg.target_acc);
+        let history = vec![init_params.clone()];
+        let registry =
+            ClientRegistry::new(clients.len(), cfg.dropout, root_rng.fork("dropout"));
+        Server {
+            net_rng: root_rng.fork("netsim"),
+            registry,
+            cfg,
+            ctx,
+            clients,
+            policy,
+            global: init_params,
+            history,
+            agg: Aggregator::new(),
+            queue: EventQueue::new(),
+            metrics,
+            round: 0,
+        }
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Immutable view of a client (tests/diagnostics).
+    pub fn client(&self, i: usize) -> &Client {
+        &self.clients[i]
+    }
+
+    /// Run one communication round (sequential local rounds). Returns the
+    /// record pushed to metrics.
+    pub fn run_round(&mut self, exec: &mut dyn Executor) -> Result<RoundRecord> {
+        self.round += 1;
+        let round = self.round;
+
+        // --- 0. Availability (paper §I: "dropped users"). Inactive clients
+        // neither train nor report this round.
+        self.registry.tick();
+
+        // --- 1. Local rounds + V reports (Algorithm 1 lines 4-7).
+        let mut reports: Vec<ClientReport> = Vec::new();
+        for (i, client) in self.clients.iter_mut().enumerate() {
+            if !self.registry.is_active(i) {
+                client.mark_stale();
+                continue;
+            }
+            reports.push(client.local_round(
+                exec,
+                round,
+                self.cfg.local_passes,
+                self.cfg.batches_per_pass,
+                self.cfg.lr,
+                self.ctx.train_flops,
+                self.ctx.eval_flops,
+            )?);
+        }
+        self.finish_round(reports, exec)
+    }
+
+    /// Run one communication round with the active clients' local rounds on
+    /// OS threads against a shared [`crate::runtime::ExecutorService`] —
+    /// the paper's deployment shape (concurrent edge devices, one compute
+    /// substrate). Bit-identical to [`Server::run_round`]: every random
+    /// stream is per-client, and reports are collected in client order.
+    pub fn run_round_threaded(
+        &mut self,
+        svc: &crate::runtime::ExecutorService,
+    ) -> Result<RoundRecord> {
+        self.round += 1;
+        let round = self.round;
+        self.registry.tick();
+
+        let passes = self.cfg.local_passes;
+        let batches = self.cfg.batches_per_pass;
+        let lr = self.cfg.lr;
+        let (tf, ef) = (self.ctx.train_flops, self.ctx.eval_flops);
+        let registry = &self.registry;
+        let mut slots: Vec<Option<Result<ClientReport>>> =
+            (0..self.clients.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for ((i, client), slot) in
+                self.clients.iter_mut().enumerate().zip(slots.iter_mut())
+            {
+                if !registry.is_active(i) {
+                    client.mark_stale();
+                    continue;
+                }
+                let mut handle = svc.handle();
+                scope.spawn(move || {
+                    *slot = Some(client.local_round(
+                        &mut handle,
+                        round,
+                        passes,
+                        batches,
+                        lr,
+                        tf,
+                        ef,
+                    ));
+                });
+            }
+        });
+        let mut reports = Vec::new();
+        for slot in slots {
+            if let Some(r) = slot {
+                reports.push(r?);
+            }
+        }
+        let mut handle = svc.handle();
+        self.finish_round(reports, &mut handle)
+    }
+
+    /// Stages 2-5 of the round: arrival ordering, gating, upload +
+    /// aggregation, broadcast, evaluation, metrics.
+    fn finish_round(
+        &mut self,
+        reports: Vec<ClientReport>,
+        exec: &mut dyn Executor,
+    ) -> Result<RoundRecord> {
+        let round = self.round;
+        let n = self.clients.len();
+        let round_start = self.queue.now();
+        // Uplink of each report (68 B) lands after the client's compute.
+        let report_arrival: Vec<f64> = reports
+            .iter()
+            .map(|rep| {
+                let uplink = self
+                    .ctx
+                    .link
+                    .transfer_seconds(&Message::ValueReport, &mut self.net_rng);
+                round_start + rep.compute_seconds + uplink
+            })
+            .collect();
+        let n_active = reports.len();
+        // Order arrivals on the event queue (deterministic tie-break).
+        for (i, &t) in report_arrival.iter().enumerate() {
+            self.queue.schedule_at(t, i);
+        }
+        let mut last_arrival = round_start;
+        while let Some(e) = self.queue.pop() {
+            last_arrival = e.time;
+        }
+        let idle_seconds: f64 =
+            report_arrival.iter().map(|&t| last_arrival - t).sum();
+        let mut bytes_up: u64 = n_active as u64 * Message::ValueReport.bytes();
+        let mut bytes_down: u64 = 0;
+
+        // --- 2. Gate (lines 8-14).
+        let selection = {
+            let pctx = PolicyContext {
+                round,
+                n_clients: n,
+                global_history: &self.history,
+            };
+            self.policy.select(&reports, &pctx)
+        };
+        let n_selected = selection.selected.iter().filter(|&&s| s).count();
+        log_debug!(
+            "server",
+            "round {round}: threshold={:.4e} selected={n_selected}/{n_active} (fleet {n})",
+            selection.threshold
+        );
+        // Map report-indexed decisions back to fleet-indexed vectors
+        // (dropped clients: not selected, NaN value/acc for the record).
+        let mut fleet_selected = vec![false; n];
+        let mut fleet_values = vec![f64::NAN; n];
+        let mut fleet_accs = vec![f64::NAN; n];
+        for (ri, rep) in reports.iter().enumerate() {
+            fleet_selected[rep.client_id] = selection.selected[ri];
+            fleet_values[rep.client_id] = selection.values[ri];
+            fleet_accs[rep.client_id] = rep.acc;
+        }
+
+        // --- 3. Upload + aggregate (lines 15-16). Uploads cross the wire
+        // at the configured precision (extension; f32 = the paper) and the
+        // server aggregates what it actually received.
+        let mut agg_time = last_arrival;
+        if n_selected > 0 {
+            let payload = self.ctx.model_payload_bytes;
+            let precision = self.cfg.upload_precision;
+            let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n_selected);
+            let mut weights: Vec<f64> = Vec::with_capacity(n_selected);
+            for (i, client) in self.clients.iter().enumerate() {
+                if fleet_selected[i] {
+                    let req = self
+                        .ctx
+                        .link
+                        .transfer_seconds(&Message::UploadRequest, &mut self.net_rng);
+                    let up = self.ctx.link.transfer_seconds(
+                        &Message::ModelUpload { payload_bytes: payload },
+                        &mut self.net_rng,
+                    );
+                    agg_time = agg_time.max(last_arrival + req + up);
+                    bytes_down += Message::UploadRequest.bytes();
+                    bytes_up += payload;
+                    uploads.push(if precision == Precision::F32 {
+                        client.params.clone()
+                    } else {
+                        precision.round_trip(&client.params)
+                    });
+                    // FedAvg weight n_i, optionally decayed by staleness
+                    // (FedAsync-style extension; None = paper's Alg. 1).
+                    let decay = self
+                        .cfg
+                        .staleness_decay
+                        .map_or(1.0, |d| d.powi(client.staleness as i32));
+                    weights.push(client.num_samples() as f64 * decay);
+                }
+            }
+            let views: Vec<&[f32]> = uploads.iter().map(|u| u.as_slice()).collect();
+            self.agg.aggregate_weighted(&views, &weights, &mut self.global);
+        }
+        self.queue.advance_to(agg_time);
+
+        // --- 4. Broadcast to participants; skipped clients go stale.
+        // The broadcast also crosses the wire at the configured precision.
+        let bcast_model = if self.cfg.upload_precision == Precision::F32 {
+            None
+        } else {
+            Some(self.cfg.upload_precision.round_trip(&self.global))
+        };
+        let mut bcast_done = agg_time;
+        for (i, client) in self.clients.iter_mut().enumerate() {
+            if n_selected > 0 && fleet_selected[i] {
+                let down = self.ctx.link.transfer_seconds(
+                    &Message::ModelBroadcast {
+                        payload_bytes: self.ctx.model_payload_bytes,
+                    },
+                    &mut self.net_rng,
+                );
+                bcast_done = bcast_done.max(agg_time + down);
+                bytes_down += self.ctx.model_payload_bytes;
+                client.sync(bcast_model.as_deref().unwrap_or(&self.global));
+            } else if self.registry.is_active(i) {
+                client.mark_stale();
+            }
+        }
+        self.queue.advance_to(bcast_done);
+
+        // Bound the history to what the policy needs (plus the current).
+        self.history.push(self.global.clone());
+        let keep = self.policy.history_depth().max(1) + 1;
+        if self.history.len() > keep {
+            let drop = self.history.len() - keep;
+            self.history.drain(..drop);
+        }
+
+        // --- 5. Evaluate + record.
+        let (global_acc, global_loss) = if round % self.cfg.eval_every == 0 {
+            evaluate_with_params(
+                exec,
+                &self.global,
+                &self.ctx.test_images,
+                &self.ctx.test_labels,
+            )?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        let cum_uploads =
+            self.metrics.records.last().map_or(0, |r| r.cum_uploads) + n_selected;
+        let record = RoundRecord {
+            round,
+            vtime: self.queue.now(),
+            global_acc,
+            global_loss,
+            train_loss: reports.iter().map(|r| r.train_loss).sum::<f64>()
+                / n_active.max(1) as f64,
+            uploads: n_selected,
+            cum_uploads,
+            bytes_up,
+            bytes_down,
+            threshold: selection.threshold,
+            values: fleet_values,
+            selected: fleet_selected,
+            client_accs: fleet_accs,
+            idle_seconds,
+        };
+        if global_acc.is_finite() {
+            log_info!(
+                "server",
+                "[{}] round {round:>3}: acc={global_acc:.4} uploads={n_selected}/{n_active} cum={cum_uploads} vt={:.1}s",
+                self.metrics.algorithm,
+                self.queue.now()
+            );
+        }
+        self.metrics.push(record.clone());
+        Ok(record)
+    }
+
+    /// Run all configured rounds.
+    pub fn run(&mut self, exec: &mut dyn Executor) -> Result<()> {
+        for _ in 0..self.cfg.rounds {
+            self.run_round(exec)?;
+        }
+        Ok(())
+    }
+
+    /// Evaluate the current global model on the server test set.
+    pub fn evaluate_global(&self, exec: &mut dyn Executor) -> Result<(f64, f64)> {
+        evaluate_with_params(exec, &self.global, &self.ctx.test_images, &self.ctx.test_labels)
+    }
+
+    /// The held-out test set (used by examples for extra reporting).
+    pub fn test_set(&self) -> (&[f32], &[i32]) {
+        (&self.ctx.test_images, &self.ctx.test_labels)
+    }
+}
+
+/// Build a server + fleet from a config, a materialized dataset partition,
+/// and an initial model.
+#[allow(clippy::too_many_arguments)]
+pub fn build_server(
+    cfg: &ExperimentConfig,
+    shards: Vec<crate::data::ClientShard>,
+    test: Dataset,
+    init_params: ParamVec,
+    policy: Box<dyn SelectionPolicy>,
+    batch_size: usize,
+    flops: (u64, u64),
+    payload_bytes: u64,
+) -> Server {
+    let root_rng = Rng::new(cfg.seed);
+    let input_dim = test.input_dim();
+    // Probe set = leading slice of the test set (paper: clients measure
+    // Acc_i on the test set; the probe keeps per-round cost bounded).
+    let probe_n = cfg.probe_samples.min(test.len());
+    let probe_images = test.images[..probe_n * input_dim].to_vec();
+    let probe_labels = test.labels[..probe_n].to_vec();
+
+    let fleet_profiles = crate::device::DeviceProfile::paper_fleet(cfg.num_clients);
+    let clients: Vec<Client> = shards
+        .into_iter()
+        .zip(fleet_profiles)
+        .map(|(shard, device)| {
+            let id = shard.client_id;
+            Client::new(
+                id,
+                shard,
+                device,
+                init_params.clone(),
+                batch_size,
+                probe_images.clone(),
+                probe_labels.clone(),
+                &root_rng,
+            )
+        })
+        .collect();
+
+    let ctx = ServerContext {
+        link: cfg.link.clone(),
+        train_flops: flops.0,
+        eval_flops: flops.1,
+        model_payload_bytes: payload_bytes,
+        test_images: test.images,
+        test_labels: test.labels,
+    };
+    Server::new(cfg.clone(), ctx, clients, policy, init_params, &root_rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Algorithm, Backend};
+    use crate::coordinator::policy::make_policy;
+    use crate::data::synth::SynthConfig;
+    use crate::data::{partition, PartitionScheme};
+    use crate::runtime::MockExecutor;
+
+    fn mini_cfg(algorithm: Algorithm) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "test".into(),
+            algorithm,
+            num_clients: 3,
+            partition: PartitionScheme::Iid,
+            samples_per_client: 96,
+            test_samples: 64,
+            probe_samples: 32,
+            rounds: 4,
+            local_passes: 1,
+            batches_per_pass: 2,
+            lr: 0.5,
+            target_acc: 0.2,
+            seed: 7,
+            backend: Backend::Mock,
+            ..Default::default()
+        }
+    }
+
+    fn build(algorithm: Algorithm) -> (Server, MockExecutor) {
+        let cfg = mini_cfg(algorithm);
+        let exec = MockExecutor::standard();
+        let (shards, test) = partition(
+            cfg.partition,
+            cfg.num_clients,
+            cfg.samples_per_client,
+            cfg.test_samples,
+            &SynthConfig::default(),
+            &Rng::new(cfg.seed),
+        );
+        let policy = make_policy(cfg.algorithm, cfg.value_fn, cfg.eaflm);
+        let server = build_server(
+            &cfg,
+            shards,
+            test,
+            vec![0.0; exec.param_count()],
+            policy,
+            exec.batch_size(),
+            (1_000_000, 300_000),
+            4 * exec.param_count() as u64 + 64,
+        );
+        (server, exec)
+    }
+
+    #[test]
+    fn afl_uploads_everyone_every_round() {
+        let (mut server, mut exec) = build(Algorithm::Afl);
+        server.run(&mut exec).unwrap();
+        for r in &server.metrics.records {
+            assert_eq!(r.uploads, 3);
+        }
+        assert_eq!(server.metrics.total_uploads(), 12);
+    }
+
+    #[test]
+    fn vafl_gates_some_uploads() {
+        let (mut server, mut exec) = build(Algorithm::Vafl);
+        server.run(&mut exec).unwrap();
+        let total = server.metrics.total_uploads();
+        // Eq. 2 with >= mean: at least one per round, at most all.
+        assert!(total >= 4 && total < 12, "total {total}");
+        for r in &server.metrics.records {
+            assert!(r.uploads >= 1);
+        }
+    }
+
+    #[test]
+    fn virtual_time_is_monotone_and_positive() {
+        let (mut server, mut exec) = build(Algorithm::Vafl);
+        server.run(&mut exec).unwrap();
+        let mut last = 0.0;
+        for r in &server.metrics.records {
+            assert!(r.vtime > last);
+            last = r.vtime;
+        }
+    }
+
+    #[test]
+    fn skipped_clients_accumulate_staleness() {
+        let (mut server, mut exec) = build(Algorithm::Vafl);
+        server.run(&mut exec).unwrap();
+        // Someone must have been skipped at least once across the run...
+        let any_skip = server
+            .metrics
+            .records
+            .iter()
+            .any(|r| r.selected.iter().any(|&s| !s));
+        assert!(any_skip);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (mut s1, mut e1) = build(Algorithm::Vafl);
+        let (mut s2, mut e2) = build(Algorithm::Vafl);
+        s1.run(&mut e1).unwrap();
+        s2.run(&mut e2).unwrap();
+        for (a, b) in s1.metrics.records.iter().zip(&s2.metrics.records) {
+            assert_eq!(a.global_acc.to_bits(), b.global_acc.to_bits());
+            assert_eq!(a.selected, b.selected);
+            assert_eq!(a.vtime.to_bits(), b.vtime.to_bits());
+        }
+    }
+
+    #[test]
+    fn model_actually_learns_under_all_policies() {
+        for algo in Algorithm::ALL {
+            let (mut server, mut exec) = build(algo);
+            let cfg_rounds = 12;
+            for _ in 0..cfg_rounds {
+                server.run_round(&mut exec).unwrap();
+            }
+            let acc = server.metrics.final_accuracy();
+            assert!(acc > 0.3, "{}: acc {acc}", algo.name());
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_counts_uploads() {
+        let (mut server, mut exec) = build(Algorithm::Afl);
+        let rec = server.run_round(&mut exec).unwrap();
+        let payload = 4 * exec.param_count() as u64 + 64;
+        // 3 value reports + 3 model uploads.
+        assert_eq!(rec.bytes_up, 3 * 68 + 3 * payload);
+        // 3 upload requests + 3 broadcasts.
+        assert_eq!(rec.bytes_down, 3 * 64 + 3 * payload);
+    }
+}

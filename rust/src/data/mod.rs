@@ -1,0 +1,12 @@
+//! Data substrate: the SynthDigits corpus (MNIST stand-in, see DESIGN.md
+//! §2.3), the paper's IID / Non-IID client partitioners (Fig. 3), batching,
+//! and distribution statistics.
+
+pub mod batcher;
+pub mod partition;
+pub mod stats;
+pub mod synth;
+
+pub use batcher::Batcher;
+pub use partition::{partition, ClientShard, PartitionScheme};
+pub use synth::{Dataset, SynthConfig};

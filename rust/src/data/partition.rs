@@ -1,0 +1,243 @@
+//! Client data partitioners: the paper's IID and Non-IID distributions
+//! (§IV-C, Fig. 3).
+//!
+//! * IID: the training pool is split equally; every client holds samples of
+//!   all 10 labels in near-equal proportion.
+//! * Non-IID: label- and quantity-skewed — "some clients containing all
+//!   labels and a large number of samples under each label, and some
+//!   clients containing only a small number of labels and some samples
+//!   under each label". Two schemes:
+//!   - `PaperSkew`: deterministic tiers reproducing Fig. 3's qualitative
+//!     shape (first clients rich/full-label, later clients poor/few-label).
+//!   - `Dirichlet { alpha }`: the standard label-skew generator from the
+//!     FL literature, for ablations.
+
+use crate::util::rng::Rng;
+
+use super::synth::{self, Dataset, SynthConfig};
+
+/// How client shards are drawn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionScheme {
+    /// Equal-size, all labels per client.
+    Iid,
+    /// The paper's Fig. 3 tiered skew (rich full-label clients down to poor
+    /// few-label clients).
+    PaperSkew,
+    /// Dirichlet(alpha) label proportions per client, quantity skew via a
+    /// power-law over client sizes.
+    Dirichlet { alpha: f64 },
+}
+
+/// One client's local data.
+#[derive(Debug, Clone)]
+pub struct ClientShard {
+    pub client_id: usize,
+    pub data: Dataset,
+}
+
+impl ClientShard {
+    pub fn num_samples(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Per-client class-count matrix for a scheme, without generating pixels.
+/// `samples_per_client` is the *average* shard size (paper: 20k for 3
+/// clients, 10k for 7).
+pub fn class_counts(
+    scheme: PartitionScheme,
+    num_clients: usize,
+    samples_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<[usize; 10]> {
+    assert!(num_clients > 0);
+    match scheme {
+        PartitionScheme::Iid => (0..num_clients)
+            .map(|_| {
+                let base = samples_per_client / 10;
+                let mut c = [base; 10];
+                // Distribute the remainder deterministically.
+                for k in 0..samples_per_client - base * 10 {
+                    c[k % 10] += 1;
+                }
+                c
+            })
+            .collect(),
+        PartitionScheme::PaperSkew => paper_skew_counts(num_clients, samples_per_client, rng),
+        PartitionScheme::Dirichlet { alpha } => (0..num_clients)
+            .map(|_| {
+                // Quantity skew: shard size in [0.4, 1.6] x average.
+                let size =
+                    ((samples_per_client as f64) * rng.range_f64(0.4, 1.6)) as usize;
+                let props = rng.dirichlet(alpha, 10);
+                let mut c = [0usize; 10];
+                for (k, p) in props.iter().enumerate() {
+                    c[k] = (p * size as f64).round() as usize;
+                }
+                c
+            })
+            .collect(),
+    }
+}
+
+/// Fig. 3-style tiers: client 0 is "rich" (all labels, full size); richness
+/// decays with client index — the last clients hold ~35 % of the average
+/// size over only 3-4 labels.
+fn paper_skew_counts(
+    num_clients: usize,
+    samples_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<[usize; 10]> {
+    let mut out = Vec::with_capacity(num_clients);
+    for i in 0..num_clients {
+        // Tier in [0,1]: 1 = richest, 0 = poorest.
+        let tier = if num_clients == 1 {
+            1.0
+        } else {
+            1.0 - i as f64 / (num_clients as f64 - 1.0)
+        };
+        // Labels: rich clients all 10, poor clients 3.
+        let n_labels = (3.0 + tier * 7.0).round() as usize;
+        // Size: 35 %..165 % of the average by tier.
+        let size = ((0.35 + 1.3 * tier) * samples_per_client as f64) as usize;
+        // Which labels: a contiguous run starting at a rotating offset, so
+        // the union across clients covers all classes.
+        let start = (i * 10) / num_clients.max(1);
+        let mut c = [0usize; 10];
+        // Label proportions inside the shard: mild random tilt.
+        let mut weights = vec![0.0f64; n_labels];
+        for w in weights.iter_mut() {
+            *w = rng.range_f64(0.5, 1.5);
+        }
+        let wsum: f64 = weights.iter().sum();
+        for (j, w) in weights.iter().enumerate() {
+            let label = (start + j) % 10;
+            c[label] = ((w / wsum) * size as f64).round() as usize;
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Build all client shards plus a balanced, held-out server test set.
+///
+/// The generator streams are forked per client, so shard contents don't
+/// depend on the order clients are materialized.
+pub fn partition(
+    scheme: PartitionScheme,
+    num_clients: usize,
+    samples_per_client: usize,
+    test_samples: usize,
+    cfg: &SynthConfig,
+    seed_rng: &Rng,
+) -> (Vec<ClientShard>, Dataset) {
+    let counts = class_counts(
+        scheme,
+        num_clients,
+        samples_per_client,
+        &mut seed_rng.fork("partition-counts"),
+    );
+    let shards = counts
+        .iter()
+        .enumerate()
+        .map(|(client_id, c)| ClientShard {
+            client_id,
+            data: synth::generate_with_counts(
+                c,
+                cfg,
+                &mut seed_rng.fork(&format!("client-{client_id}")),
+            ),
+        })
+        .collect();
+    // Balanced test set.
+    let per = test_samples / 10;
+    let mut tc = [per; 10];
+    for k in 0..test_samples - per * 10 {
+        tc[k % 10] += 1;
+    }
+    let test = synth::generate_with_counts(&tc, cfg, &mut seed_rng.fork("test-set"));
+    (shards, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn iid_counts_balanced() {
+        let c = class_counts(PartitionScheme::Iid, 3, 1005, &mut rng());
+        assert_eq!(c.len(), 3);
+        for client in &c {
+            assert_eq!(client.iter().sum::<usize>(), 1005);
+            let (mn, mx) = (client.iter().min().unwrap(), client.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn paper_skew_shape() {
+        let c = class_counts(PartitionScheme::PaperSkew, 7, 1000, &mut rng());
+        let sizes: Vec<usize> = c.iter().map(|x| x.iter().sum()).collect();
+        let labels: Vec<usize> =
+            c.iter().map(|x| x.iter().filter(|&&v| v > 0).count()).collect();
+        // Rich first client: all labels, big shard. Poor last: few labels,
+        // small shard.
+        assert_eq!(labels[0], 10);
+        assert!(labels[6] <= 4);
+        assert!(sizes[0] > sizes[6] * 3, "sizes {sizes:?}");
+        // Union covers all classes.
+        let mut union = [0usize; 10];
+        for client in &c {
+            for (k, &v) in client.iter().enumerate() {
+                union[k] += v;
+            }
+        }
+        assert!(union.iter().all(|&v| v > 0), "union {union:?}");
+    }
+
+    #[test]
+    fn dirichlet_counts_skewed() {
+        let c = class_counts(PartitionScheme::Dirichlet { alpha: 0.3 }, 5, 1000, &mut rng());
+        // At alpha=0.3 at least one client should be visibly label-skewed:
+        // its top class holds > 40% of its samples.
+        let skewed = c.iter().any(|client| {
+            let total: usize = client.iter().sum();
+            let top = *client.iter().max().unwrap();
+            total > 0 && (top as f64) / (total as f64) > 0.4
+        });
+        assert!(skewed, "{c:?}");
+    }
+
+    #[test]
+    fn partition_materializes_shards_and_test() {
+        let (shards, test) = partition(
+            PartitionScheme::Iid,
+            3,
+            120,
+            100,
+            &SynthConfig::default(),
+            &rng(),
+        );
+        assert_eq!(shards.len(), 3);
+        assert!(shards.iter().all(|s| s.num_samples() == 120));
+        assert_eq!(test.len(), 100);
+        let h = test.class_histogram();
+        assert!(h.iter().all(|&v| v == 10));
+    }
+
+    #[test]
+    fn partition_deterministic_and_order_independent() {
+        let cfg = SynthConfig::default();
+        let (a, _) = partition(PartitionScheme::PaperSkew, 4, 50, 20, &cfg, &rng());
+        let (b, _) = partition(PartitionScheme::PaperSkew, 4, 50, 20, &cfg, &rng());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data.labels, y.data.labels);
+            assert_eq!(x.data.images, y.data.images);
+        }
+    }
+}

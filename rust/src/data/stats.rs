@@ -1,0 +1,140 @@
+//! Distribution statistics — regenerates the paper's Fig. 3 ("Dataset
+//! distribution of clients in different experiments") as text tables /
+//! JSON, from the same partitioner the experiments use.
+
+use crate::util::json::{obj, Value};
+
+use super::partition::ClientShard;
+
+/// Per-client label histogram table.
+#[derive(Debug, Clone)]
+pub struct DistributionTable {
+    /// `rows[c][k]` = samples of class `k` on client `c`.
+    pub rows: Vec<[usize; 10]>,
+}
+
+impl DistributionTable {
+    pub fn from_shards(shards: &[ClientShard]) -> Self {
+        DistributionTable { rows: shards.iter().map(|s| s.data.class_histogram()).collect() }
+    }
+
+    /// Total samples per client.
+    pub fn client_totals(&self) -> Vec<usize> {
+        self.rows.iter().map(|r| r.iter().sum()).collect()
+    }
+
+    /// Labels held (count > 0) per client.
+    pub fn client_label_counts(&self) -> Vec<usize> {
+        self.rows.iter().map(|r| r.iter().filter(|&&v| v > 0).count()).collect()
+    }
+
+    /// A normalized skew measure in [0, 1]: mean over clients of
+    /// (1 - H(labels)/log 10), where H is the label entropy. 0 = balanced
+    /// IID, -> 1 as each client collapses to a single label.
+    pub fn skewness(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        let ln10 = (10.0f64).ln();
+        let mut total = 0.0;
+        for r in &self.rows {
+            let n: usize = r.iter().sum();
+            if n == 0 {
+                continue;
+            }
+            let mut h = 0.0;
+            for &c in r {
+                if c > 0 {
+                    let p = c as f64 / n as f64;
+                    h -= p * p.ln();
+                }
+            }
+            total += 1.0 - h / ln10;
+        }
+        total / self.rows.len() as f64
+    }
+
+    /// Render as the Fig. 3 text table.
+    pub fn to_text(&self, title: &str) -> String {
+        let mut s = format!("{title}\nclient |");
+        for k in 0..10 {
+            s += &format!(" {k:>5}");
+        }
+        s += " | total labels\n";
+        s += &"-".repeat(s.lines().last().unwrap().len());
+        s += "\n";
+        for (c, r) in self.rows.iter().enumerate() {
+            s += &format!("{:>6} |", c + 1);
+            for v in r {
+                s += &format!(" {v:>5}");
+            }
+            s += &format!(
+                " | {:>5} {:>6}\n",
+                r.iter().sum::<usize>(),
+                r.iter().filter(|&&v| v > 0).count()
+            );
+        }
+        s += &format!("label-skewness = {:.3}\n", self.skewness());
+        s
+    }
+
+    /// JSON form for the report pipeline.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            (
+                "clients",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Value::from(r.iter().map(|&v| v).collect::<Vec<usize>>()))
+                        .collect(),
+                ),
+            ),
+            ("skewness", Value::from(self.skewness())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{partition, PartitionScheme};
+    use crate::data::synth::SynthConfig;
+    use crate::util::rng::Rng;
+
+    fn table(scheme: PartitionScheme) -> DistributionTable {
+        let (shards, _) =
+            partition(scheme, 5, 200, 50, &SynthConfig::default(), &Rng::new(1));
+        DistributionTable::from_shards(&shards)
+    }
+
+    #[test]
+    fn iid_has_low_skew() {
+        let t = table(PartitionScheme::Iid);
+        assert!(t.skewness() < 0.01, "{}", t.skewness());
+        assert!(t.client_label_counts().iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn paper_skew_has_higher_skew_than_iid() {
+        let iid = table(PartitionScheme::Iid).skewness();
+        let skew = table(PartitionScheme::PaperSkew).skewness();
+        assert!(skew > iid + 0.1, "iid {iid} vs skew {skew}");
+    }
+
+    #[test]
+    fn text_table_renders_all_clients() {
+        let t = table(PartitionScheme::PaperSkew);
+        let text = t.to_text("experiment d");
+        assert!(text.contains("experiment d"));
+        assert_eq!(text.lines().count(), 2 + 1 + 5 + 1); // title+hdr+rule+5 rows+skew
+    }
+
+    #[test]
+    fn json_shape() {
+        let t = table(PartitionScheme::Iid);
+        let v = t.to_json();
+        assert_eq!(v.get("clients").unwrap().as_arr().unwrap().len(), 5);
+        assert!(v.get("skewness").unwrap().as_f64().is_some());
+    }
+}

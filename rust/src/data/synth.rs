@@ -1,0 +1,357 @@
+//! SynthDigits: a deterministic, procedurally generated 28x28 ten-class
+//! digit corpus standing in for MNIST (no network access in this
+//! environment; see DESIGN.md §2.3 for why the substitution preserves the
+//! paper's comparisons).
+//!
+//! Each digit class is a set of strokes (line segments / arcs on a unit
+//! canvas). A sample renders its class glyph through a random affine
+//! transform (translate / rotate / scale / shear), random stroke thickness,
+//! and additive pixel noise — so classes overlap enough that the task is
+//! non-trivial and reaching the paper's 94 % threshold takes real training.
+
+use crate::util::rng::Rng;
+
+/// One segment of a digit glyph, in unit-canvas coordinates.
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    x0: f32,
+    y0: f32,
+    x1: f32,
+    y1: f32,
+}
+
+const S: fn(f32, f32, f32, f32) -> Seg = |x0, y0, x1, y1| Seg { x0, y0, x1, y1 };
+
+/// Polyline glyphs for digits 0-9 on a [0,1]^2 canvas (x right, y down).
+/// Seven-segment-inspired but with diagonals so classes are distinguishable
+/// under jitter without being trivially linearly separable.
+fn glyph(digit: usize) -> Vec<Seg> {
+    let (l, r, t, b, m) = (0.25, 0.75, 0.15, 0.85, 0.5);
+    match digit {
+        0 => vec![S(l, t, r, t), S(r, t, r, b), S(r, b, l, b), S(l, b, l, t), S(l, b, r, t)],
+        1 => vec![S(m, t, m, b), S(l, 0.3, m, t), S(l, b, r, b)],
+        2 => vec![S(l, 0.25, l, t), S(l, t, r, t), S(r, t, r, m), S(r, m, l, b), S(l, b, r, b)],
+        3 => vec![S(l, t, r, t), S(r, t, r, b), S(r, b, l, b), S(l, m, r, m)],
+        4 => vec![S(l, t, l, m), S(l, m, r, m), S(r, t, r, b)],
+        5 => vec![S(r, t, l, t), S(l, t, l, m), S(l, m, r, m), S(r, m, r, b), S(r, b, l, b)],
+        6 => vec![S(r, t, l, t), S(l, t, l, b), S(l, b, r, b), S(r, b, r, m), S(r, m, l, m)],
+        7 => vec![S(l, t, r, t), S(r, t, m, b), S(0.35, m, 0.65, m)],
+        8 => vec![S(l, t, r, t), S(r, t, r, b), S(r, b, l, b), S(l, b, l, t), S(l, m, r, m)],
+        9 => vec![S(l, b, r, b), S(r, b, r, t), S(r, t, l, t), S(l, t, l, m), S(l, m, r, m)],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Canvas side (the paper's MNIST geometry: 28).
+    pub image_dim: usize,
+    /// Max translation as a fraction of the canvas.
+    pub max_shift: f32,
+    /// Max rotation in radians.
+    pub max_rot: f32,
+    /// Scale range (uniform in [1-s, 1+s]).
+    pub max_scale: f32,
+    /// Max shear coefficient.
+    pub max_shear: f32,
+    /// Stroke half-thickness range in canvas units.
+    pub thickness: (f32, f32),
+    /// Additive Gaussian pixel noise sigma.
+    pub pixel_noise: f32,
+    /// Probability of inverting a background pixel streak (clutter).
+    pub clutter: f32,
+}
+
+impl SynthConfig {
+    /// The harder variant used by robustness ablations (stronger affine
+    /// jitter + noise; roughly the difficulty of the original default).
+    pub fn hard() -> Self {
+        SynthConfig {
+            max_shift: 0.08,
+            max_rot: 0.30,
+            max_scale: 0.15,
+            max_shear: 0.15,
+            pixel_noise: 0.18,
+            clutter: 0.04,
+            ..Default::default()
+        }
+    }
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            image_dim: 28,
+            max_shift: 0.06,
+            max_rot: 0.18,
+            max_scale: 0.10,
+            max_shear: 0.08,
+            thickness: (0.04, 0.075),
+            pixel_noise: 0.10,
+            clutter: 0.02,
+        }
+    }
+}
+
+/// A flat dataset: `images` is `[n, dim*dim]` row-major in `[0,1]`,
+/// `labels[i] in 0..10`.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub dim: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dim * self.dim
+    }
+
+    /// Borrow sample `i`'s pixels.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let d = self.input_dim();
+        &self.images[i * d..(i + 1) * d]
+    }
+
+    /// Gather a subset by indices into a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let d = self.input_dim();
+        let mut images = Vec::with_capacity(idx.len() * d);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            images.extend_from_slice(self.image(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { images, labels, dim: self.dim }
+    }
+
+    /// Per-class sample counts.
+    pub fn class_histogram(&self) -> [usize; 10] {
+        let mut h = [0usize; 10];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+/// Render one sample of `digit` into `out` (len `dim*dim`), deterministic in
+/// the RNG state.
+fn render(digit: usize, cfg: &SynthConfig, rng: &mut Rng, out: &mut [f32]) {
+    let dim = cfg.image_dim;
+    debug_assert_eq!(out.len(), dim * dim);
+    // Random affine: canvas -> canvas.
+    let rot = rng.range_f64(-cfg.max_rot as f64, cfg.max_rot as f64) as f32;
+    let scale = 1.0 + rng.range_f64(-cfg.max_scale as f64, cfg.max_scale as f64) as f32;
+    let shear = rng.range_f64(-cfg.max_shear as f64, cfg.max_shear as f64) as f32;
+    let dx = rng.range_f64(-cfg.max_shift as f64, cfg.max_shift as f64) as f32;
+    let dy = rng.range_f64(-cfg.max_shift as f64, cfg.max_shift as f64) as f32;
+    let thick =
+        rng.range_f64(cfg.thickness.0 as f64, cfg.thickness.1 as f64) as f32;
+    let (sin, cos) = (rot.sin(), rot.cos());
+
+    // Transform glyph segments about the canvas center.
+    let tf = |x: f32, y: f32| -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let xs = scale * (cx + shear * cy);
+        let ys = scale * cy;
+        let xr = cos * xs - sin * ys;
+        let yr = sin * xs + cos * ys;
+        (xr + 0.5 + dx, yr + 0.5 + dy)
+    };
+    let segs: Vec<Seg> = glyph(digit)
+        .into_iter()
+        .map(|s| {
+            let (x0, y0) = tf(s.x0, s.y0);
+            let (x1, y1) = tf(s.x1, s.y1);
+            Seg { x0, y0, x1, y1 }
+        })
+        .collect();
+
+    // Rasterize: intensity from distance to nearest segment.
+    let inv = 1.0 / dim as f32;
+    for py in 0..dim {
+        for px in 0..dim {
+            let x = (px as f32 + 0.5) * inv;
+            let y = (py as f32 + 0.5) * inv;
+            let mut d2min = f32::INFINITY;
+            for s in &segs {
+                let d2 = dist2_to_segment(x, y, s);
+                if d2 < d2min {
+                    d2min = d2;
+                }
+            }
+            let d = d2min.sqrt();
+            // Smooth falloff: 1 inside the stroke, decaying over one pixel.
+            let v = if d <= thick {
+                1.0
+            } else {
+                (1.0 - (d - thick) / (1.5 * inv)).max(0.0)
+            };
+            out[py * dim + px] = v;
+        }
+    }
+
+    // Clutter: a few random bright pixels (sensor junk).
+    let n_clutter = (cfg.clutter * dim as f32 * dim as f32 * rng.f32()) as usize;
+    for _ in 0..n_clutter {
+        let i = rng.below(dim * dim);
+        out[i] = out[i].max(0.4 + 0.6 * rng.f32());
+    }
+
+    // Pixel noise.
+    if cfg.pixel_noise > 0.0 {
+        for v in out.iter_mut() {
+            *v = (*v + cfg.pixel_noise * rng.gauss() as f32).clamp(0.0, 1.0);
+        }
+    }
+}
+
+fn dist2_to_segment(x: f32, y: f32, s: &Seg) -> f32 {
+    let (vx, vy) = (s.x1 - s.x0, s.y1 - s.y0);
+    let (wx, wy) = (x - s.x0, y - s.y0);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 > 0.0 {
+        ((wx * vx + wy * vy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (dx, dy) = (wx - t * vx, wy - t * vy);
+    dx * dx + dy * dy
+}
+
+/// Generate `n` samples with labels drawn uniformly (balanced in
+/// expectation), deterministic in `rng`.
+pub fn generate(n: usize, cfg: &SynthConfig, rng: &mut Rng) -> Dataset {
+    let d = cfg.image_dim * cfg.image_dim;
+    let mut images = vec![0.0f32; n * d];
+    let mut labels = vec![0i32; n];
+    for i in 0..n {
+        let digit = rng.below(10);
+        labels[i] = digit as i32;
+        render(digit, cfg, rng, &mut images[i * d..(i + 1) * d]);
+    }
+    Dataset { images, labels, dim: cfg.image_dim }
+}
+
+/// Generate `n` samples with the given per-class counts
+/// (`counts.iter().sum() == n` is enforced).
+pub fn generate_with_counts(counts: &[usize; 10], cfg: &SynthConfig, rng: &mut Rng) -> Dataset {
+    let n: usize = counts.iter().sum();
+    let d = cfg.image_dim * cfg.image_dim;
+    let mut images = vec![0.0f32; n * d];
+    let mut labels = vec![0i32; n];
+    let mut i = 0;
+    for (digit, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            labels[i] = digit as i32;
+            render(digit, cfg, rng, &mut images[i * d..(i + 1) * d]);
+            i += 1;
+        }
+    }
+    // Shuffle so batches are class-mixed.
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let ds = Dataset { images, labels, dim: cfg.image_dim };
+    ds.subset(&order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = SynthConfig::default();
+        let a = generate(20, &cfg, &mut Rng::new(1));
+        let b = generate(20, &cfg, &mut Rng::new(1));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+        let c = generate(20, &cfg, &mut Rng::new(2));
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let ds = generate(50, &SynthConfig::default(), &mut Rng::new(3));
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(ds.images.len(), 50 * 784);
+    }
+
+    #[test]
+    fn glyphs_have_ink() {
+        // Every class must render a visibly inked image (no empty glyphs).
+        let cfg = SynthConfig { pixel_noise: 0.0, clutter: 0.0, ..Default::default() };
+        let mut rng = Rng::new(4);
+        for digit in 0..10 {
+            let mut px = vec![0.0f32; 784];
+            render(digit, &cfg, &mut rng, &mut px);
+            let ink: f32 = px.iter().sum();
+            assert!(ink > 20.0, "digit {digit} ink {ink}");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable_without_noise() {
+        // Noise-free class means must differ pairwise by a sane margin —
+        // guards against two glyphs collapsing to the same shape.
+        let cfg = SynthConfig {
+            pixel_noise: 0.0,
+            clutter: 0.0,
+            max_shift: 0.0,
+            max_rot: 0.0,
+            max_scale: 0.0,
+            max_shear: 0.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let mut protos = Vec::new();
+        for digit in 0..10 {
+            let mut px = vec![0.0f32; 784];
+            render(digit, &cfg, &mut rng, &mut px);
+            protos.push(px);
+        }
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let d2: f32 = protos[i]
+                    .iter()
+                    .zip(&protos[j])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!(d2 > 5.0, "digits {i} and {j} too similar: {d2}");
+            }
+        }
+    }
+
+    #[test]
+    fn counts_respected_and_shuffled() {
+        let mut counts = [0usize; 10];
+        counts[2] = 30;
+        counts[7] = 10;
+        let ds = generate_with_counts(&counts, &SynthConfig::default(), &mut Rng::new(6));
+        assert_eq!(ds.len(), 40);
+        let h = ds.class_histogram();
+        assert_eq!(h[2], 30);
+        assert_eq!(h[7], 10);
+        // Shuffled: the first 30 are not all class 2.
+        assert!(ds.labels[..30].iter().any(|&l| l != 2));
+    }
+
+    #[test]
+    fn subset_gathers() {
+        let ds = generate(10, &SynthConfig::default(), &mut Rng::new(7));
+        let sub = ds.subset(&[3, 5]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.labels[0], ds.labels[3]);
+        assert_eq!(sub.image(1), ds.image(5));
+    }
+}

@@ -1,0 +1,191 @@
+//! Device models: the paper's physical testbed (five Raspberry Pi 4Bs and
+//! two laptops, §IV-A) as compute-latency profiles.
+//!
+//! What VAFL actually depends on is *heterogeneous round latency* —
+//! stragglers produce stale models and differentiated gradient-change
+//! norms. The profile maps the analytic FLOPs of a training step (from
+//! `params_spec.json`) to virtual seconds through a sustained-GFLOPS
+//! estimate, a memory-pressure factor (the 4 GB Pi swaps under PySyft +
+//! ResNet, per the paper's setup), and multiplicative log-normal jitter.
+//! The *numerics* always run for real through PJRT; only the clock is
+//! synthetic.
+
+use crate::util::rng::Rng;
+
+/// A device compute profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Sustained f32 GFLOP/s for this workload class.
+    pub gflops: f64,
+    /// Multiplier > 1 when the workload doesn't fit comfortably in RAM.
+    pub mem_pressure: f64,
+    /// Sigma of multiplicative log-normal latency jitter.
+    pub jitter_sigma: f64,
+}
+
+impl DeviceProfile {
+    /// Raspberry Pi 4B, 8 GB (Cortex-A72 @ 1.5 GHz, 4 cores; NEON fp32
+    /// sustained ~13.5 GFLOPS for small convs under PyTorch).
+    pub fn rpi4_8gb() -> Self {
+        DeviceProfile {
+            name: "rpi4-8gb".into(),
+            gflops: 13.5,
+            mem_pressure: 1.0,
+            jitter_sigma: 0.10,
+        }
+    }
+
+    /// Raspberry Pi 4B, 4 GB — same SoC, but the paper's software stack
+    /// pressures 4 GB, adding stalls.
+    pub fn rpi4_4gb() -> Self {
+        DeviceProfile {
+            name: "rpi4-4gb".into(),
+            gflops: 13.5,
+            mem_pressure: 1.35,
+            jitter_sigma: 0.18,
+        }
+    }
+
+    /// Client laptop (i5-9300H, 4 cores @ 2.4 GHz).
+    pub fn laptop_i5() -> Self {
+        DeviceProfile {
+            name: "laptop-i5".into(),
+            gflops: 140.0,
+            mem_pressure: 1.0,
+            jitter_sigma: 0.06,
+        }
+    }
+
+    /// Server laptop (i7-9750H, 6 cores @ 2.59 GHz) — used when a laptop
+    /// process doubles as a client (paper experiment b runs 2 processes on
+    /// the i5 laptop; profile `laptop_shared` halves throughput instead).
+    pub fn laptop_i7() -> Self {
+        DeviceProfile {
+            name: "laptop-i7".into(),
+            gflops: 190.0,
+            mem_pressure: 1.0,
+            jitter_sigma: 0.06,
+        }
+    }
+
+    /// One of two client processes sharing the i5 laptop (experiment b).
+    pub fn laptop_shared() -> Self {
+        DeviceProfile {
+            name: "laptop-i5-shared".into(),
+            gflops: 70.0,
+            mem_pressure: 1.0,
+            jitter_sigma: 0.12,
+        }
+    }
+
+    /// Look up a profile by name (config files name devices).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "rpi4-8gb" => Some(Self::rpi4_8gb()),
+            "rpi4-4gb" => Some(Self::rpi4_4gb()),
+            "laptop-i5" => Some(Self::laptop_i5()),
+            "laptop-i7" => Some(Self::laptop_i7()),
+            "laptop-i5-shared" => Some(Self::laptop_shared()),
+            _ => None,
+        }
+    }
+
+    /// Virtual seconds to execute `flops` of model compute on this device.
+    pub fn compute_seconds(&self, flops: u64, rng: &mut Rng) -> f64 {
+        let base = flops as f64 / (self.gflops * 1e9);
+        base * self.mem_pressure * rng.lognormal_jitter(self.jitter_sigma)
+    }
+
+    /// The paper's client fleets.
+    ///
+    /// * 3 clients (exps a, c): 3 Raspberry Pis, one with 4 GB.
+    /// * 7 clients (exps b, d): 5 Pis (one 4 GB) + 2 processes on the i5
+    ///   laptop.
+    pub fn paper_fleet(num_clients: usize) -> Vec<DeviceProfile> {
+        match num_clients {
+            3 => vec![Self::rpi4_4gb(), Self::rpi4_8gb(), Self::rpi4_8gb()],
+            7 => vec![
+                Self::rpi4_4gb(),
+                Self::rpi4_8gb(),
+                Self::rpi4_8gb(),
+                Self::rpi4_8gb(),
+                Self::rpi4_8gb(),
+                Self::laptop_shared(),
+                Self::laptop_shared(),
+            ],
+            n => {
+                // Generalized fleet: cycle the paper's device mix.
+                let mix = [
+                    Self::rpi4_4gb(),
+                    Self::rpi4_8gb(),
+                    Self::rpi4_8gb(),
+                    Self::laptop_shared(),
+                ];
+                (0..n).map(|i| mix[i % mix.len()].clone()).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_time_scales_with_flops_and_speed() {
+        let mut rng = Rng::new(1);
+        let pi = DeviceProfile {
+            jitter_sigma: 0.0,
+            ..DeviceProfile::rpi4_8gb()
+        };
+        let laptop = DeviceProfile {
+            jitter_sigma: 0.0,
+            ..DeviceProfile::laptop_i5()
+        };
+        let t_pi = pi.compute_seconds(1_000_000_000, &mut rng);
+        let t_lt = laptop.compute_seconds(1_000_000_000, &mut rng);
+        assert!(t_pi > 9.0 * t_lt, "pi {t_pi} laptop {t_lt}");
+        let t2 = pi.compute_seconds(2_000_000_000, &mut rng);
+        assert!((t2 / t_pi - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mem_pressure_slows_the_4gb_pi() {
+        let mut rng = Rng::new(2);
+        let fast = DeviceProfile { jitter_sigma: 0.0, ..DeviceProfile::rpi4_8gb() };
+        let slow = DeviceProfile { jitter_sigma: 0.0, ..DeviceProfile::rpi4_4gb() };
+        assert!(
+            slow.compute_seconds(1_000_000, &mut rng)
+                > fast.compute_seconds(1_000_000, &mut rng)
+        );
+    }
+
+    #[test]
+    fn jitter_varies_but_is_deterministic_per_stream() {
+        let p = DeviceProfile::rpi4_8gb();
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        let xs: Vec<f64> = (0..5).map(|_| p.compute_seconds(1_000_000, &mut a)).collect();
+        let ys: Vec<f64> = (0..5).map(|_| p.compute_seconds(1_000_000, &mut b)).collect();
+        assert_eq!(xs, ys);
+        assert!(xs.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn paper_fleets() {
+        assert_eq!(DeviceProfile::paper_fleet(3).len(), 3);
+        let f7 = DeviceProfile::paper_fleet(7);
+        assert_eq!(f7.len(), 7);
+        assert_eq!(f7.iter().filter(|d| d.name.starts_with("rpi4")).count(), 5);
+        assert_eq!(DeviceProfile::paper_fleet(11).len(), 11);
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for n in ["rpi4-8gb", "rpi4-4gb", "laptop-i5", "laptop-i7", "laptop-i5-shared"] {
+            assert_eq!(DeviceProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(DeviceProfile::by_name("gpu-cluster").is_none());
+    }
+}

@@ -1,0 +1,165 @@
+//! Figure emitters: the paper's Figs. 3–6 as ASCII charts + CSV/JSON, from
+//! the same metric streams the experiments produce.
+
+use crate::data::stats::DistributionTable;
+use crate::metrics::RunMetrics;
+
+/// Render an ASCII line chart of (x, y) series (y in [0, 1]).
+///
+/// Good enough to eyeball convergence order in a terminal; the CSVs carry
+/// the exact numbers for real plotting.
+pub fn ascii_chart(title: &str, series: &[(&str, Vec<(usize, f64)>)], height: usize) -> String {
+    let height = height.max(4);
+    let mut max_x = 1usize;
+    for (_, pts) in series {
+        for &(x, _) in pts {
+            max_x = max_x.max(x);
+        }
+    }
+    let width = 72usize;
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in pts {
+            if !y.is_finite() {
+                continue;
+            }
+            let col = ((x as f64 / max_x as f64) * (width - 1) as f64).round() as usize;
+            let row = ((1.0 - y.clamp(0.0, 1.0)) * (height - 1) as f64).round() as usize;
+            grid[row][col.min(width - 1)] = mark;
+        }
+    }
+    let mut out = format!("{title}\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            "1.0 |"
+        } else if i == height - 1 {
+            "0.0 |"
+        } else {
+            "    |"
+        };
+        out += label;
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out += &format!("    +{}\n     rounds 1..{max_x}   ", "-".repeat(width));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out += &format!("[{}] {}  ", marks[si % marks.len()], name);
+    }
+    out.push('\n');
+    out
+}
+
+/// Fig. 3: dataset distribution tables for a set of experiments.
+pub fn fig3(tables: &[(String, DistributionTable)]) -> String {
+    let mut out = String::from("Fig. 3 — Dataset distribution of clients\n\n");
+    for (name, t) in tables {
+        out += &t.to_text(&format!("experiment {name}"));
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 4: global accuracy per algorithm within one experiment.
+pub fn fig4(experiment: &str, runs: &[RunMetrics]) -> String {
+    let series: Vec<(&str, Vec<(usize, f64)>)> = runs
+        .iter()
+        .map(|m| (m.algorithm.as_str(), m.acc_curve()))
+        .collect();
+    ascii_chart(
+        &format!("Fig. 4({experiment}) — Acc of each algorithm, experiment {experiment}"),
+        &series,
+        16,
+    )
+}
+
+/// Fig. 5: per-client accuracy under VAFL for one experiment.
+pub fn fig5(experiment: &str, vafl_run: &RunMetrics) -> String {
+    let curves = vafl_run.client_acc_curves();
+    let names: Vec<String> =
+        (0..curves.len()).map(|c| format!("client{}", c + 1)).collect();
+    let series: Vec<(&str, Vec<(usize, f64)>)> = names
+        .iter()
+        .map(|n| n.as_str())
+        .zip(curves.into_iter())
+        .collect();
+    ascii_chart(
+        &format!("Fig. 5({experiment}) — Acc of each client under VAFL, experiment {experiment}"),
+        &series,
+        16,
+    )
+}
+
+/// Fig. 6: VAFL global accuracy across experiments.
+pub fn fig6(vafl_runs: &[RunMetrics]) -> String {
+    let series: Vec<(&str, Vec<(usize, f64)>)> = vafl_runs
+        .iter()
+        .map(|m| (m.experiment.as_str(), m.acc_curve()))
+        .collect();
+    ascii_chart("Fig. 6 — VAFL Acc across experiments", &series, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    fn run_with_curve(exp: &str, algo: &str, accs: &[f64]) -> RunMetrics {
+        let mut m = RunMetrics::new(exp, algo, 0.94);
+        for (i, &a) in accs.iter().enumerate() {
+            m.push(RoundRecord {
+                round: i + 1,
+                vtime: i as f64,
+                global_acc: a,
+                global_loss: 1.0,
+                train_loss: 1.0,
+                uploads: 1,
+                cum_uploads: i + 1,
+                bytes_up: 0,
+                bytes_down: 0,
+                threshold: 0.0,
+                values: vec![],
+                selected: vec![true],
+                client_accs: vec![a, a / 2.0],
+                idle_seconds: 0.0,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn chart_contains_marks_and_legend() {
+        let m = run_with_curve("a", "vafl", &[0.2, 0.5, 0.9]);
+        let s = fig4("a", &[m]);
+        assert!(s.contains("[*] vafl"));
+        assert!(s.contains('*'));
+        assert!(s.lines().count() > 10);
+    }
+
+    #[test]
+    fn fig5_one_series_per_client() {
+        let m = run_with_curve("b", "vafl", &[0.3, 0.6]);
+        let s = fig5("b", &m);
+        assert!(s.contains("client1"));
+        assert!(s.contains("client2"));
+    }
+
+    #[test]
+    fn fig6_one_series_per_experiment() {
+        let runs = vec![
+            run_with_curve("a", "vafl", &[0.5]),
+            run_with_curve("b", "vafl", &[0.6]),
+        ];
+        let s = fig6(&runs);
+        assert!(s.contains("[*] a"));
+        assert!(s.contains("[+] b"));
+    }
+
+    #[test]
+    fn chart_handles_nan_and_clamps() {
+        let m = run_with_curve("a", "afl", &[f64::NAN, 1.5, -0.2]);
+        let s = fig4("a", &[m]);
+        assert!(s.contains("Fig. 4"));
+    }
+}

@@ -1,0 +1,194 @@
+//! Experiment presets (the paper's a–d), the end-to-end runner, and the
+//! emitters that regenerate every table and figure of §V.
+
+pub mod figures;
+pub mod table3;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Algorithm, Backend, ExperimentConfig};
+use crate::coordinator::policy::make_policy;
+use crate::coordinator::server::{build_server, Server};
+use crate::data::synth::SynthConfig;
+use crate::data::{partition, PartitionScheme};
+use crate::metrics::RunMetrics;
+use crate::model::ParamSpec;
+use crate::runtime::{Executor, MockExecutor, PjrtRuntime};
+use crate::util::rng::Rng;
+
+/// The paper's four experiments (§V-B), scaled per EXPERIMENTS.md
+/// §Scaling: shard sizes 20k/10k -> 2000/1000 and a full local epoch ->
+/// r x `batches_per_pass` batches, keeping the paper's r=5, E=1, B=32,
+/// eta=0.1, R=200.
+pub fn preset(which: char) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    match which {
+        'a' => {
+            cfg.name = "a".into();
+            cfg.num_clients = 3;
+            cfg.partition = PartitionScheme::Iid;
+            cfg.samples_per_client = 2000;
+        }
+        'b' => {
+            cfg.name = "b".into();
+            cfg.num_clients = 7;
+            cfg.partition = PartitionScheme::Iid;
+            cfg.samples_per_client = 1000;
+        }
+        'c' => {
+            cfg.name = "c".into();
+            cfg.num_clients = 3;
+            cfg.partition = PartitionScheme::PaperSkew;
+            cfg.samples_per_client = 2000;
+        }
+        'd' => {
+            cfg.name = "d".into();
+            cfg.num_clients = 7;
+            cfg.partition = PartitionScheme::PaperSkew;
+            cfg.samples_per_client = 1000;
+        }
+        other => bail!("unknown experiment preset {other:?} (a|b|c|d)"),
+    }
+    Ok(cfg)
+}
+
+/// Outcome of one experiment run.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub metrics: RunMetrics,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub comm_times_to_target: Option<usize>,
+    pub total_uploads: usize,
+    pub total_vtime: f64,
+}
+
+impl Outcome {
+    fn from_metrics(metrics: RunMetrics) -> Self {
+        Outcome {
+            final_accuracy: metrics.final_accuracy(),
+            best_accuracy: metrics.best_accuracy(),
+            comm_times_to_target: metrics.comm_times_to_target(),
+            total_uploads: metrics.total_uploads(),
+            total_vtime: metrics.total_vtime(),
+            metrics,
+        }
+    }
+}
+
+/// Materialize the server (data, fleet, policy) for a config, returning the
+/// executor alongside. The caller drives rounds (the CLI, examples and
+/// benches all go through this).
+pub fn build(cfg: &ExperimentConfig) -> Result<(Server, Box<dyn Executor>)> {
+    cfg.validate()?;
+    let synth_cfg = SynthConfig { pixel_noise: cfg.pixel_noise, ..Default::default() };
+    let root_rng = Rng::new(cfg.seed);
+    let (shards, test) = partition(
+        cfg.partition,
+        cfg.num_clients,
+        cfg.samples_per_client,
+        cfg.test_samples,
+        &synth_cfg,
+        &root_rng,
+    );
+    let policy = make_policy(cfg.algorithm, cfg.value_fn, cfg.eaflm);
+
+    let (exec, init_params, flops, payload): (Box<dyn Executor>, Vec<f32>, (u64, u64), u64) =
+        match &cfg.backend {
+            Backend::Pjrt { artifact_dir } => {
+                let spec = ParamSpec::load(artifact_dir)
+                    .context("loading artifacts (run `make artifacts`)")?;
+                anyhow::ensure!(
+                    spec.input_dim == test.input_dim(),
+                    "artifact input_dim {} != dataset {}",
+                    spec.input_dim,
+                    test.input_dim()
+                );
+                let init = spec.load_init_params()?;
+                let flops = (spec.train_step_flops, spec.eval_step_flops);
+                let payload = cfg.upload_precision.payload_bytes(spec.param_count);
+                let rt = PjrtRuntime::from_spec(spec)?;
+                (Box::new(rt), init, flops, payload)
+            }
+            Backend::Mock => {
+                let exec = MockExecutor::standard();
+                let p = exec.param_count();
+                // Mock "model" cost stands in for the real one.
+                let flops = (2_000_000u64, 600_000u64);
+                let payload = cfg.upload_precision.payload_bytes(p);
+                (Box::new(exec), vec![0.0; p], flops, payload)
+            }
+        };
+
+    let batch = exec.batch_size();
+    let server = build_server(cfg, shards, test, init_params, policy, batch, flops, payload);
+    Ok((server, exec))
+}
+
+/// Run a full experiment to completion.
+pub fn run(cfg: &ExperimentConfig) -> Result<Outcome> {
+    crate::util::logging::init();
+    let (mut server, mut exec) = build(cfg)?;
+    server.run(exec.as_mut())?;
+    Ok(Outcome::from_metrics(server.metrics.clone()))
+}
+
+/// Run one experiment for each algorithm (paper comparison grid), reusing
+/// the same data/seed so curves are directly comparable.
+pub fn run_all_algorithms(base: &ExperimentConfig) -> Result<Vec<Outcome>> {
+    Algorithm::ALL
+        .iter()
+        .map(|&algorithm| {
+            let cfg = ExperimentConfig { algorithm, ..base.clone() };
+            run(&cfg)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(mut cfg: ExperimentConfig) -> ExperimentConfig {
+        cfg.backend = Backend::Mock;
+        cfg.rounds = 3;
+        cfg.samples_per_client = 80;
+        cfg.test_samples = 64;
+        cfg.probe_samples = 32;
+        cfg.local_passes = 1;
+        cfg.batches_per_pass = 2;
+        cfg
+    }
+
+    #[test]
+    fn presets_match_paper_grid() {
+        let a = preset('a').unwrap();
+        assert_eq!((a.num_clients, a.partition), (3, PartitionScheme::Iid));
+        let d = preset('d').unwrap();
+        assert_eq!((d.num_clients, d.partition), (7, PartitionScheme::PaperSkew));
+        assert_eq!(d.rounds, 200);
+        assert_eq!(d.local_passes, 5);
+        assert_eq!(d.lr, 0.1);
+        assert!(preset('z').is_err());
+    }
+
+    #[test]
+    fn run_produces_outcome() {
+        let cfg = quick(preset('a').unwrap());
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.metrics.records.len(), 3);
+        assert!(out.total_uploads > 0);
+        assert!(out.final_accuracy.is_finite());
+    }
+
+    #[test]
+    fn run_all_algorithms_yields_three() {
+        let cfg = quick(preset('c').unwrap());
+        let outs = run_all_algorithms(&cfg).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].metrics.algorithm, "afl");
+        assert_eq!(outs[2].metrics.algorithm, "vafl");
+        // AFL must have the most uploads (it never gates).
+        assert!(outs[0].total_uploads >= outs[2].total_uploads);
+    }
+}

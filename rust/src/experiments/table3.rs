@@ -1,0 +1,201 @@
+//! Table III: "CCR and communication times of different experiments" —
+//! communication times (model uploads) to reach the target accuracy and
+//! the communication-compression rate vs the AFL baseline, for each
+//! algorithm x experiment.
+
+use crate::metrics::{ccr, RunMetrics};
+use crate::util::json::{obj, Value};
+
+/// One Table III row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub experiment: String,
+    pub algorithm: String,
+    /// Communication times to reach the target Acc (None = not reached;
+    /// rendered as the total uploads with a `>` marker).
+    pub comm_times: Option<usize>,
+    pub total_uploads: usize,
+    pub ccr: f64,
+    pub best_acc: f64,
+}
+
+/// Build Table III rows from one experiment's three runs. The CCR baseline
+/// is AFL's communication count within the same experiment (Eq. 4).
+pub fn rows_for_experiment(runs: &[RunMetrics]) -> Vec<Row> {
+    let baseline = runs
+        .iter()
+        .find(|r| r.algorithm == "afl")
+        .and_then(|r| r.comm_times_to_target())
+        .unwrap_or_else(|| {
+            runs.iter()
+                .find(|r| r.algorithm == "afl")
+                .map_or(0, |r| r.total_uploads())
+        });
+    runs.iter()
+        .map(|m| {
+            let mine = m.comm_times_to_target().unwrap_or(m.total_uploads());
+            Row {
+                experiment: m.experiment.clone(),
+                algorithm: m.algorithm.clone(),
+                comm_times: m.comm_times_to_target(),
+                total_uploads: m.total_uploads(),
+                ccr: if m.algorithm == "afl" { 0.0 } else { ccr(baseline, mine) },
+                best_acc: m.best_accuracy(),
+            }
+        })
+        .collect()
+}
+
+/// Render rows in the paper's Table III layout.
+pub fn render(rows: &[Row]) -> String {
+    let mut s = String::from(
+        "experiment  algorithm  comm_times  CCR      best_acc\n\
+         ---------------------------------------------------\n",
+    );
+    for r in rows {
+        let comm = match r.comm_times {
+            Some(c) => format!("{c}"),
+            None => format!(">{}", r.total_uploads),
+        };
+        s += &format!(
+            "{:<11} {:<10} {:<11} {:<8.4} {:.4}\n",
+            r.experiment, r.algorithm, comm, r.ccr, r.best_acc
+        );
+    }
+    s
+}
+
+/// Summary across experiments: mean comm reduction vs AFL and mean CCR for
+/// one algorithm (the paper's headline "51.02 % fewer communications,
+/// 48.26 % average CCR").
+pub fn headline(all_rows: &[Row], algorithm: &str) -> (f64, f64) {
+    let mut reductions = Vec::new();
+    let mut ccrs = Vec::new();
+    // Group rows by experiment.
+    let mut experiments: Vec<&str> = all_rows.iter().map(|r| r.experiment.as_str()).collect();
+    experiments.sort_unstable();
+    experiments.dedup();
+    for exp in experiments {
+        let afl = all_rows
+            .iter()
+            .find(|r| r.experiment == exp && r.algorithm == "afl");
+        let alg = all_rows
+            .iter()
+            .find(|r| r.experiment == exp && r.algorithm == algorithm);
+        if let (Some(afl), Some(alg)) = (afl, alg) {
+            let c0 = afl.comm_times.unwrap_or(afl.total_uploads) as f64;
+            let c1 = alg.comm_times.unwrap_or(alg.total_uploads) as f64;
+            if c0 > 0.0 {
+                reductions.push((c0 - c1) / c0);
+            }
+            ccrs.push(alg.ccr);
+        }
+    }
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    (mean(&reductions), mean(&ccrs))
+}
+
+/// JSON export for the report pipeline.
+pub fn to_json(rows: &[Row]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("experiment", Value::from(r.experiment.as_str())),
+                    ("algorithm", Value::from(r.algorithm.as_str())),
+                    (
+                        "comm_times",
+                        r.comm_times.map(Value::from).unwrap_or(Value::Null),
+                    ),
+                    ("total_uploads", Value::from(r.total_uploads)),
+                    ("ccr", Value::from(r.ccr)),
+                    ("best_acc", Value::from(r.best_acc)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{RoundRecord, RunMetrics};
+
+    fn fake_run(exp: &str, algo: &str, comms_at_target: usize) -> RunMetrics {
+        let mut m = RunMetrics::new(exp, algo, 0.94);
+        m.push(RoundRecord {
+            round: 1,
+            vtime: 1.0,
+            global_acc: 0.95,
+            global_loss: 0.2,
+            train_loss: 0.2,
+            uploads: comms_at_target,
+            cum_uploads: comms_at_target,
+            bytes_up: 0,
+            bytes_down: 0,
+            threshold: 0.0,
+            values: vec![],
+            selected: vec![],
+            client_accs: vec![],
+            idle_seconds: 0.0,
+        });
+        m
+    }
+
+    #[test]
+    fn table_matches_paper_arithmetic() {
+        // Paper experiment b: AFL 84, EAFLM 45 (0.4643), VAFL 43 (0.4881).
+        let runs = vec![
+            fake_run("b", "afl", 84),
+            fake_run("b", "eaflm", 45),
+            fake_run("b", "vafl", 43),
+        ];
+        let rows = rows_for_experiment(&runs);
+        assert_eq!(rows[0].ccr, 0.0);
+        assert!((rows[1].ccr - 0.4643).abs() < 1e-4);
+        assert!((rows[2].ccr - 0.4881).abs() < 1e-4);
+    }
+
+    #[test]
+    fn headline_averages_over_experiments() {
+        // Two experiments with VAFL halving comms -> 50 % reduction, CCR 0.5.
+        let mut rows = rows_for_experiment(&[fake_run("a", "afl", 40), fake_run("a", "vafl", 20)]);
+        rows.extend(rows_for_experiment(&[
+            fake_run("b", "afl", 80),
+            fake_run("b", "vafl", 40),
+        ]));
+        let (red, mccr) = headline(&rows, "vafl");
+        assert!((red - 0.5).abs() < 1e-12);
+        assert!((mccr - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unreached_target_renders_total() {
+        let mut m = RunMetrics::new("a", "vafl", 0.99);
+        m.push(RoundRecord {
+            round: 1,
+            vtime: 1.0,
+            global_acc: 0.5,
+            global_loss: 1.0,
+            train_loss: 1.0,
+            uploads: 3,
+            cum_uploads: 3,
+            bytes_up: 0,
+            bytes_down: 0,
+            threshold: 0.0,
+            values: vec![],
+            selected: vec![],
+            client_accs: vec![],
+            idle_seconds: 0.0,
+        });
+        let rows = rows_for_experiment(&[fake_run("a", "afl", 10), m]);
+        let text = render(&rows);
+        assert!(text.contains(">3"), "{text}");
+    }
+}

@@ -1,0 +1,54 @@
+//! # VAFL — Value-based Asynchronous Federated Learning
+//!
+//! A production-grade reproduction of *"A Novel Optimized Asynchronous
+//! Federated Learning Framework"* (Zhou et al., 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the asynchronous federated-learning coordinator:
+//!   round engine, communication-value client selection (VAFL, Eq. 1–2),
+//!   the paper's comparators (plain async FedAvg "AFL" and the EAFLM
+//!   gradient gate, Eq. 3), a simulated heterogeneous edge fleet
+//!   (Raspberry-Pi-class device models + LAN network simulator), metrics,
+//!   config, and CLI.
+//! * **L2/L1 (build-time Python)** — the client model (ResNet-lite fwd/bwd +
+//!   SGD over a flat parameter vector) with Pallas compute kernels, lowered
+//!   once to HLO text in `artifacts/` and executed from Rust through the
+//!   PJRT C API ([`runtime`]).
+//!
+//! Python never runs on the training path: after `make artifacts`, the
+//! `vafl` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use vafl::config::ExperimentConfig;
+//! use vafl::experiments;
+//!
+//! // Paper experiment b: 7 clients, IID data, VAFL policy.
+//! let mut cfg = experiments::preset('b').expect("preset");
+//! cfg.rounds = 20;
+//! let outcome = experiments::run(&cfg).expect("run");
+//! println!("final acc = {:.4}", outcome.final_accuracy);
+//! ```
+//!
+//! See `examples/` for full drivers and `rust/benches/` for the harnesses
+//! that regenerate every table and figure of the paper.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod experiments;
+pub mod fleet;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::{Algorithm, ExperimentConfig};
+pub use experiments::{run, Outcome};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,325 @@
+//! `vafl` — launcher CLI for the VAFL asynchronous federated learning
+//! framework.
+//!
+//! ```text
+//! vafl run [--config FILE] [--algorithm afl|vafl|eaflm] [--preset a|b|c|d]
+//!          [--rounds N] [--seed N] [--mock] [--out DIR] [--realtime SCALE]
+//! vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]
+//!     # one preset, all three algorithms, Table III rows + Fig. 4
+//! vafl sweep [--rounds N] [--out DIR] [--mock]
+//!     # all four presets x three algorithms: full Table III + Figs. 4-6
+//! vafl fig3 [--out DIR]
+//!     # dataset distribution tables (Fig. 3)
+//! vafl info
+//!     # artifact + environment report
+//! ```
+//!
+//! Hand-rolled argument parsing (the offline crate set has no clap).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use vafl::config::{Algorithm, Backend, ExperimentConfig};
+use vafl::data::stats::DistributionTable;
+use vafl::data::synth::SynthConfig;
+use vafl::data::partition;
+use vafl::experiments::{self, figures, table3};
+use vafl::metrics::csv::{write_client_acc_csv, write_rounds_csv};
+use vafl::model::ParamSpec;
+use vafl::util::rng::Rng;
+
+fn main() {
+    vafl::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs plus boolean flags.
+struct Flags {
+    map: BTreeMap<String, String>,
+}
+
+impl Flags {
+    const BOOL_FLAGS: [&'static str; 2] = ["mock", "quiet"];
+
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {a:?}"))?;
+            if Self::BOOL_FLAGS.contains(&key) {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let val = args
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?;
+                map.insert(key.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(Flags { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} {v:?}")))
+            .transpose()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    if flags.has("quiet") {
+        vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    }
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "experiment" => cmd_experiment(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "fig3" => cmd_fig3(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (run|experiment|sweep|fig3|info|help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "vafl — Value-based Asynchronous Federated Learning (paper reproduction)\n\n\
+         USAGE:\n  vafl run        [--preset a|b|c|d] [--config FILE] [--algorithm afl|vafl|eaflm]\n\
+         \x20                 [--rounds N] [--seed N] [--mock] [--out DIR] [--realtime SCALE] [--quiet]\n\
+         \x20 vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]\n\
+         \x20 vafl sweep      [--rounds N] [--out DIR] [--mock]\n\
+         \x20 vafl fig3       [--out DIR]\n\
+         \x20 vafl info       [--artifacts DIR]\n"
+    );
+}
+
+/// Assemble a config from --config / --preset / overrides.
+fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        ExperimentConfig::from_toml_file(path)?
+    } else if let Some(p) = flags.get("preset") {
+        let c = p.chars().next().context("--preset needs a letter a-d")?;
+        experiments::preset(c)?
+    } else {
+        experiments::preset('a')?
+    };
+    if let Some(a) = flags.get("algorithm") {
+        cfg.algorithm = Algorithm::from_name(a)?;
+    }
+    if let Some(r) = flags.get_usize("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(s) = flags.get_usize("seed")? {
+        cfg.seed = s as u64;
+    }
+    if flags.has("mock") {
+        cfg.backend = Backend::Mock;
+    } else if let Some(dir) = flags.get("artifacts") {
+        cfg.backend = Backend::Pjrt { artifact_dir: dir.to_string() };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    println!(
+        "running experiment {} / {} ({} clients, {:?}, {} rounds)",
+        cfg.name,
+        cfg.algorithm.name(),
+        cfg.num_clients,
+        cfg.partition,
+        cfg.rounds
+    );
+    let out = experiments::run(&cfg)?;
+    println!(
+        "\nfinal acc = {:.4}  best acc = {:.4}  uploads = {}  vtime = {:.1}s  comm->{:.0}% = {:?}",
+        out.final_accuracy,
+        out.best_accuracy,
+        out.total_uploads,
+        out.total_vtime,
+        cfg.target_acc * 100.0,
+        out.comm_times_to_target
+    );
+    if let Some(dir) = flags.get("out") {
+        let base = format!("{dir}/{}_{}", cfg.name, cfg.algorithm.name());
+        write_rounds_csv(&out.metrics, format!("{base}_rounds.csv"))?;
+        write_client_acc_csv(&out.metrics, format!("{base}_clients.csv"))?;
+        std::fs::write(format!("{base}.json"), out.metrics.to_json().to_string_pretty())?;
+        println!("wrote {base}_rounds.csv, {base}_clients.csv, {base}.json");
+    }
+    if let Some(scale) = flags.get("realtime") {
+        let scale: f64 = scale.parse().context("--realtime SCALE")?;
+        replay_realtime(&out.metrics, scale);
+    }
+    Ok(())
+}
+
+/// Replay the recorded virtual-time trace with wall-clock pacing.
+fn replay_realtime(metrics: &vafl::metrics::RunMetrics, scale: f64) {
+    println!("\nrealtime replay (x{scale} wall seconds per virtual second):");
+    let mut trace = vafl::sim::Trace::default();
+    for r in &metrics.records {
+        trace.record(
+            r.vtime,
+            format!(
+                "round {:>3}  acc={}  uploads={}",
+                r.round,
+                if r.global_acc.is_finite() {
+                    format!("{:.4}", r.global_acc)
+                } else {
+                    "  -  ".into()
+                },
+                r.uploads
+            ),
+        );
+    }
+    trace.replay(scale, |t, label| println!("[vt {t:>8.1}s] {label}"));
+}
+
+fn cmd_experiment(flags: &Flags) -> Result<()> {
+    let base = config_from_flags(flags)?;
+    let outs = experiments::run_all_algorithms(&base)?;
+    let runs: Vec<_> = outs.iter().map(|o| o.metrics.clone()).collect();
+    println!("\n{}", figures::fig4(&base.name, &runs));
+    let rows = table3::rows_for_experiment(&runs);
+    println!("{}", table3::render(&rows));
+    if let Some(dir) = flags.get("out") {
+        persist_runs(dir, &runs)?;
+        std::fs::write(
+            format!("{dir}/table3_{}.json", base.name),
+            table3::to_json(&rows).to_string_pretty(),
+        )?;
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &Flags) -> Result<()> {
+    let mut all_rows = Vec::new();
+    let mut vafl_runs = Vec::new();
+    for which in ['a', 'b', 'c', 'd'] {
+        let mut base = experiments::preset(which)?;
+        if let Some(r) = flags.get_usize("rounds")? {
+            base.rounds = r;
+        }
+        if let Some(s) = flags.get_usize("seed")? {
+            base.seed = s as u64;
+        }
+        if flags.has("mock") {
+            base.backend = Backend::Mock;
+        }
+        let outs = experiments::run_all_algorithms(&base)?;
+        let runs: Vec<_> = outs.iter().map(|o| o.metrics.clone()).collect();
+        println!("\n{}", figures::fig4(&base.name, &runs));
+        if let Some(v) = runs.iter().find(|m| m.algorithm == "vafl") {
+            println!("{}", figures::fig5(&base.name, v));
+            vafl_runs.push(v.clone());
+        }
+        all_rows.extend(table3::rows_for_experiment(&runs));
+        if let Some(dir) = flags.get("out") {
+            persist_runs(dir, &runs)?;
+        }
+    }
+    println!("{}", figures::fig6(&vafl_runs));
+    println!("Table III\n{}", table3::render(&all_rows));
+    let (red, mccr) = table3::headline(&all_rows, "vafl");
+    println!(
+        "headline: VAFL reduces communications by {:.2}% vs AFL, mean CCR {:.2}%",
+        red * 100.0,
+        mccr * 100.0
+    );
+    if let Some(dir) = flags.get("out") {
+        std::fs::write(
+            format!("{dir}/table3.json"),
+            table3::to_json(&all_rows).to_string_pretty(),
+        )?;
+        println!("wrote {dir}/table3.json");
+    }
+    Ok(())
+}
+
+fn persist_runs(dir: &str, runs: &[vafl::metrics::RunMetrics]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    for m in runs {
+        let base = format!("{dir}/{}_{}", m.experiment, m.algorithm);
+        write_rounds_csv(m, format!("{base}_rounds.csv"))?;
+        write_client_acc_csv(m, format!("{base}_clients.csv"))?;
+        std::fs::write(format!("{base}.json"), m.to_json().to_string_pretty())?;
+    }
+    Ok(())
+}
+
+fn cmd_fig3(flags: &Flags) -> Result<()> {
+    let mut tables = Vec::new();
+    for which in ['a', 'b', 'c', 'd'] {
+        let cfg = experiments::preset(which)?;
+        let synth = SynthConfig { pixel_noise: cfg.pixel_noise, ..Default::default() };
+        let (shards, _) = partition(
+            cfg.partition,
+            cfg.num_clients,
+            cfg.samples_per_client,
+            cfg.test_samples,
+            &synth,
+            &Rng::new(cfg.seed),
+        );
+        tables.push((cfg.name.clone(), DistributionTable::from_shards(&shards)));
+    }
+    let text = figures::fig3(&tables);
+    println!("{text}");
+    if let Some(dir) = flags.get("out") {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/fig3.txt"), &text)?;
+        for (name, t) in &tables {
+            std::fs::write(
+                format!("{dir}/fig3_{name}.json"),
+                t.to_json().to_string_pretty(),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(flags: &Flags) -> Result<()> {
+    let dir = flags.get("artifacts").unwrap_or("artifacts");
+    println!("vafl {} — three-layer rust+jax+pallas build", env!("CARGO_PKG_VERSION"));
+    match ParamSpec::load(dir) {
+        Ok(spec) => {
+            println!("artifacts: {}", spec.dir.display());
+            println!("  model         : resnet_lite ({} params)", spec.param_count);
+            println!("  pallas mode   : {}", spec.pallas_mode);
+            println!("  batch/eval    : {}/{}", spec.batch_size, spec.eval_batch);
+            println!("  train flops   : {}", spec.train_step_flops);
+            println!("  layers        : {}", spec.layers.len());
+            for l in &spec.layers {
+                println!("    {:<10} {:?} @ {}", l.name, l.shape, l.offset);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! CSV writers for run metrics (round curves) and summary tables, so the
+//! figures can be re-plotted with any external tool.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::RunMetrics;
+
+/// Write the per-round curve: one row per round.
+pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down\n");
+    for r in &m.records {
+        out.push_str(&format!(
+            "{},{:.6},{},{},{},{},{},{},{:.6},{},{}\n",
+            r.round,
+            r.vtime,
+            fmt(r.global_acc),
+            fmt(r.global_loss),
+            fmt(r.train_loss),
+            r.uploads,
+            r.cum_uploads,
+            fmt(r.threshold),
+            r.idle_seconds,
+            r.bytes_up,
+            r.bytes_down,
+        ));
+    }
+    write_atomic(path.as_ref(), out.as_bytes())
+}
+
+/// Write per-client accuracy curves (Fig. 5): round, then one column per
+/// client.
+pub fn write_client_acc_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
+    let n = m.records.first().map_or(0, |r| r.client_accs.len());
+    let mut out = String::from("round");
+    for c in 0..n {
+        out.push_str(&format!(",client{}", c + 1));
+    }
+    out.push('\n');
+    for r in &m.records {
+        out.push_str(&r.round.to_string());
+        for &a in &r.client_accs {
+            out.push(',');
+            out.push_str(&fmt(a));
+        }
+        out.push('\n');
+    }
+    write_atomic(path.as_ref(), out.as_bytes())
+}
+
+fn fmt(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        String::new() // empty cell for skipped evals
+    }
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{RoundRecord, RunMetrics};
+
+    fn sample() -> RunMetrics {
+        let mut m = RunMetrics::new("a", "vafl", 0.94);
+        m.push(RoundRecord {
+            round: 1,
+            vtime: 1.25,
+            global_acc: 0.5,
+            global_loss: 2.0,
+            train_loss: 2.2,
+            uploads: 2,
+            cum_uploads: 2,
+            bytes_up: 77000,
+            bytes_down: 78000,
+            threshold: 0.1,
+            values: vec![0.2, 0.05],
+            selected: vec![true, false],
+            client_accs: vec![0.5, 0.4],
+            idle_seconds: 0.3,
+        });
+        m
+    }
+
+    #[test]
+    fn rounds_csv_round_trips_fields() {
+        let dir = std::env::temp_dir().join(format!("vafl-csv-{}", std::process::id()));
+        let path = dir.join("rounds.csv");
+        write_rounds_csv(&sample(), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,vtime,acc"));
+        assert!(lines[1].starts_with("1,1.250000,0.500000"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn client_csv_has_one_column_per_client() {
+        let dir = std::env::temp_dir().join(format!("vafl-csv2-{}", std::process::id()));
+        let path = dir.join("clients.csv");
+        write_client_acc_csv(&sample(), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,client1,client2\n"));
+        assert!(text.contains("1,0.500000,0.400000"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,285 @@
+//! Metrics: everything the paper's evaluation section reports — accuracy
+//! curves (Figs. 4–6), communication counts and compression rate (Eq. 4,
+//! Table III) — plus operational telemetry (bytes on the wire, straggler
+//! idle time, virtual wall-clock).
+
+pub mod csv;
+
+use crate::util::json::{obj, Value};
+
+/// One communication round's record.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Virtual time when the round's aggregation completed.
+    pub vtime: f64,
+    /// Global-model accuracy on the server test set (NaN on skipped evals).
+    pub global_acc: f64,
+    pub global_loss: f64,
+    /// Mean of client training losses this round.
+    pub train_loss: f64,
+    /// Model uploads this round (the gated, counted quantity).
+    pub uploads: usize,
+    /// Cumulative model uploads.
+    pub cum_uploads: usize,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Policy threshold (mean-V for VAFL, Eq. 3 RHS for EAFLM).
+    pub threshold: f64,
+    /// Per-client effective values the policy used.
+    pub values: Vec<f64>,
+    /// Per-client upload decision.
+    pub selected: Vec<bool>,
+    /// Per-client probe accuracies (Fig. 5).
+    pub client_accs: Vec<f64>,
+    /// Straggler idle time: sum over clients of (round end - own finish).
+    pub idle_seconds: f64,
+}
+
+/// A full run's metrics.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub experiment: String,
+    pub algorithm: String,
+    pub target_acc: f64,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunMetrics {
+    pub fn new(experiment: &str, algorithm: &str, target_acc: f64) -> Self {
+        RunMetrics {
+            experiment: experiment.to_string(),
+            algorithm: algorithm.to_string(),
+            target_acc,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    /// Cumulative model uploads when the global accuracy first reached the
+    /// target — the paper's "communication times ... to achieve 94 % Acc"
+    /// (Table III). `None` if the target was never reached.
+    pub fn comm_times_to_target(&self) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.global_acc >= self.target_acc)
+            .map(|r| r.cum_uploads)
+    }
+
+    /// Round index where the target accuracy was first reached.
+    pub fn rounds_to_target(&self) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.global_acc >= self.target_acc)
+            .map(|r| r.round)
+    }
+
+    /// Highest accuracy seen (paper: "Acc is the highest Acc rate").
+    pub fn best_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.global_acc)
+            .filter(|a| a.is_finite())
+            .fold(0.0, f64::max)
+    }
+
+    /// Final-round accuracy (last finite eval).
+    pub fn final_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .map(|r| r.global_acc)
+            .find(|a| a.is_finite())
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn total_uploads(&self) -> usize {
+        self.records.last().map_or(0, |r| r.cum_uploads)
+    }
+
+    pub fn total_vtime(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.vtime)
+    }
+
+    pub fn total_idle(&self) -> f64 {
+        self.records.iter().map(|r| r.idle_seconds).sum()
+    }
+
+    /// Accuracy curve as (round, acc) pairs, skipping non-eval rounds.
+    pub fn acc_curve(&self) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter(|r| r.global_acc.is_finite())
+            .map(|r| (r.round, r.global_acc))
+            .collect()
+    }
+
+    /// Per-client accuracy curves (Fig. 5): `curves[c]` = Vec<(round, acc)>.
+    pub fn client_acc_curves(&self) -> Vec<Vec<(usize, f64)>> {
+        let n = self.records.first().map_or(0, |r| r.client_accs.len());
+        let mut out = vec![Vec::new(); n];
+        for r in &self.records {
+            for (c, &a) in r.client_accs.iter().enumerate() {
+                out[c].push((r.round, a));
+            }
+        }
+        out
+    }
+
+    /// JSON export of the whole run.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("experiment", Value::from(self.experiment.as_str())),
+            ("algorithm", Value::from(self.algorithm.as_str())),
+            ("target_acc", Value::from(self.target_acc)),
+            (
+                "comm_times_to_target",
+                self.comm_times_to_target()
+                    .map(Value::from)
+                    .unwrap_or(Value::Null),
+            ),
+            ("best_accuracy", Value::from(self.best_accuracy())),
+            ("total_uploads", Value::from(self.total_uploads())),
+            ("total_vtime", Value::from(self.total_vtime())),
+            (
+                "rounds",
+                Value::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("round", Value::from(r.round)),
+                                ("vtime", Value::from(r.vtime)),
+                                ("acc", finite_or_null(r.global_acc)),
+                                ("loss", finite_or_null(r.global_loss)),
+                                ("train_loss", finite_or_null(r.train_loss)),
+                                ("uploads", Value::from(r.uploads)),
+                                ("cum_uploads", Value::from(r.cum_uploads)),
+                                ("threshold", finite_or_null(r.threshold)),
+                                (
+                                    "selected",
+                                    Value::Arr(
+                                        r.selected.iter().map(|&s| Value::Bool(s)).collect(),
+                                    ),
+                                ),
+                                (
+                                    "client_accs",
+                                    Value::Arr(
+                                        r.client_accs.iter().map(|&a| Value::from(a)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn finite_or_null(x: f64) -> Value {
+    if x.is_finite() {
+        Value::from(x)
+    } else {
+        Value::Null
+    }
+}
+
+/// Communication-compression rate, paper Eq. 4:
+/// `CCR = (C_t0 - C_t1) / C_t0` (reported as a fraction, like Table III).
+pub fn ccr(baseline_comms: usize, compressed_comms: usize) -> f64 {
+    if baseline_comms == 0 {
+        return 0.0;
+    }
+    (baseline_comms as f64 - compressed_comms as f64) / baseline_comms as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, acc: f64, uploads: usize, cum: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            vtime: round as f64,
+            global_acc: acc,
+            global_loss: 1.0,
+            train_loss: 1.0,
+            uploads,
+            cum_uploads: cum,
+            bytes_up: 100,
+            bytes_down: 100,
+            threshold: 0.5,
+            values: vec![1.0, 2.0],
+            selected: vec![true, false],
+            client_accs: vec![acc, acc / 2.0],
+            idle_seconds: 0.1,
+        }
+    }
+
+    fn run() -> RunMetrics {
+        let mut m = RunMetrics::new("a", "vafl", 0.9);
+        m.push(record(1, 0.5, 2, 2));
+        m.push(record(2, 0.92, 1, 3));
+        m.push(record(3, 0.88, 1, 4));
+        m
+    }
+
+    #[test]
+    fn comm_times_to_target_first_crossing() {
+        let m = run();
+        assert_eq!(m.comm_times_to_target(), Some(3));
+        assert_eq!(m.rounds_to_target(), Some(2));
+    }
+
+    #[test]
+    fn target_never_reached() {
+        let mut m = RunMetrics::new("a", "afl", 0.99);
+        m.push(record(1, 0.5, 2, 2));
+        assert_eq!(m.comm_times_to_target(), None);
+    }
+
+    #[test]
+    fn best_and_final_accuracy() {
+        let m = run();
+        assert_eq!(m.best_accuracy(), 0.92);
+        assert_eq!(m.final_accuracy(), 0.88);
+    }
+
+    #[test]
+    fn skipped_evals_are_ignored() {
+        let mut m = RunMetrics::new("a", "afl", 0.9);
+        m.push(record(1, f64::NAN, 1, 1));
+        m.push(record(2, 0.95, 1, 2));
+        assert_eq!(m.comm_times_to_target(), Some(2));
+        assert_eq!(m.acc_curve(), vec![(2, 0.95)]);
+        assert_eq!(m.final_accuracy(), 0.95);
+    }
+
+    #[test]
+    fn ccr_matches_eq4() {
+        // Paper exp b: AFL 84, VAFL 43 -> 0.4881.
+        assert!((ccr(84, 43) - 0.4881).abs() < 1e-4);
+        assert_eq!(ccr(0, 5), 0.0);
+        assert_eq!(ccr(10, 10), 0.0);
+    }
+
+    #[test]
+    fn client_curves_transpose() {
+        let m = run();
+        let curves = m.client_acc_curves();
+        assert_eq!(curves.len(), 2);
+        assert_eq!(curves[0].len(), 3);
+        assert_eq!(curves[1][0], (1, 0.25));
+    }
+
+    #[test]
+    fn json_export_has_rounds() {
+        let v = run().to_json();
+        assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("comm_times_to_target").unwrap().as_usize(), Some(3));
+    }
+}

@@ -1,0 +1,15 @@
+//! Model-side plumbing on the Rust side: the flat-parameter layout
+//! (`params_spec.json` from the AOT bundle), initial parameters, and the
+//! dense vector math the coordinator hot path uses (aggregation, norms).
+//!
+//! The Rust coordinator never knows the network architecture — parameters
+//! are an opaque `f32[P]` vector plus a named layout for diagnostics.
+
+pub mod quant;
+pub mod spec;
+pub mod vector;
+
+pub use spec::{LayerSpec, ParamSpec};
+pub use vector::{
+    axpy, l2_norm_sq, sq_distance, weighted_average, weighted_average_into, ParamVec,
+};

@@ -1,0 +1,249 @@
+//! Payload quantization for model uploads/broadcasts.
+//!
+//! The paper's future-work section points at further communication
+//! compression; this module implements the standard lossy payload codecs —
+//! IEEE half precision (f16) and symmetric per-tensor int8 — so the
+//! framework can trade accuracy for wire bytes (`upload_precision` in the
+//! config, `ablation` benches). Codec error bounds are tested; the server
+//! dequantizes before aggregation so the coordinator math stays in f32.
+
+/// Wire precision of a model payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    F16,
+    Int8,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "f16" => Some(Precision::F16),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Payload bytes for `n` parameters (plus the 64-byte frame header;
+    /// int8 carries an extra f32 scale).
+    pub fn payload_bytes(&self, n: usize) -> u64 {
+        let body = match self {
+            Precision::F32 => 4 * n,
+            Precision::F16 => 2 * n,
+            Precision::Int8 => n + 4,
+        };
+        (body + 64) as u64
+    }
+
+    /// Quantize-dequantize round trip (what the receiver reconstructs).
+    pub fn round_trip(&self, params: &[f32]) -> Vec<f32> {
+        match self {
+            Precision::F32 => params.to_vec(),
+            Precision::F16 => params.iter().map(|&v| f16_to_f32(f32_to_f16(v))).collect(),
+            Precision::Int8 => {
+                let (q, scale) = quantize_int8(params);
+                dequantize_int8(&q, scale)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IEEE 754 binary16 (hand-rolled: no `half` crate offline)
+// ---------------------------------------------------------------------------
+
+/// f32 -> f16 bits with round-to-nearest-even.
+pub fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN.
+        let f16_frac = if frac != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | f16_frac;
+    }
+    // Re-bias: f32 exp-127 -> f16 exp-15.
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal or underflow to zero.
+        if e < -10 {
+            return sign;
+        }
+        let frac = frac | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = frac & ((1u32 << shift) - 1);
+        let mut out = (frac >> shift) as u16;
+        // Round to nearest, ties to even.
+        if rem > half || (rem == half && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out;
+    }
+    // Normal: round mantissa 23 -> 10 bits, nearest even. The integer add
+    // carries mantissa overflow into the exponent, which is exactly the
+    // right behaviour (1.111..·2^e rounds up to 1.0·2^{e+1}).
+    let mut out = sign | ((e as u16) << 10) | (frac >> 13) as u16;
+    let rem = frac & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out = out.wrapping_add(1);
+    }
+    out
+}
+
+/// f16 bits -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign // +-0
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x0400 == 0 {
+                f <<= 1;
+                e += 1;
+            }
+            let f = (f & 0x03ff) << 13;
+            let e = (127 - 15 - e) as u32;
+            sign | (e << 23) | f
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13) // inf/nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// Symmetric per-tensor int8
+// ---------------------------------------------------------------------------
+
+/// Quantize to int8 with a single symmetric scale (max-abs / 127).
+pub fn quantize_int8(params: &[f32]) -> (Vec<i8>, f32) {
+    let max_abs = params.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+    let q = params
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+pub fn dequantize_int8(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trips_exactly_representable() {
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1024.0, -0.25, 65504.0] {
+            let rt = f16_to_f32(f32_to_f16(v));
+            assert_eq!(rt, v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        // Normal range: relative error <= 2^-11.
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..10_000 {
+            let v = (rng.gauss() as f32) * 10.0;
+            if v == 0.0 {
+                continue;
+            }
+            let rt = f16_to_f32(f32_to_f16(v));
+            let rel = ((rt - v) / v).abs();
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "{v} -> {rt} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // Overflow saturates to inf.
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        // Tiny values underflow to (signed) zero or subnormals.
+        let tiny = f16_to_f32(f32_to_f16(1e-8));
+        assert!(tiny.abs() < 1e-4);
+    }
+
+    #[test]
+    fn f16_subnormal_range() {
+        let v = 3.0e-5f32; // subnormal in f16
+        let rt = f16_to_f32(f32_to_f16(v));
+        assert!((rt - v).abs() / v < 0.05, "{v} -> {rt}");
+    }
+
+    #[test]
+    fn int8_round_trip_error_bounded() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let params: Vec<f32> = (0..1000).map(|_| rng.gauss() as f32).collect();
+        let (q, scale) = quantize_int8(&params);
+        let rt = dequantize_int8(&q, scale);
+        let max_abs = params.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        for (a, b) in params.iter().zip(&rt) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-6, "{a} vs {b} (bound {})", max_abs / 254.0);
+        }
+    }
+
+    #[test]
+    fn int8_zero_vector() {
+        let (q, scale) = quantize_int8(&[0.0; 8]);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(dequantize_int8(&q, scale), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn payload_bytes_ordering() {
+        let n = 17290;
+        assert!(Precision::Int8.payload_bytes(n) < Precision::F16.payload_bytes(n));
+        assert!(Precision::F16.payload_bytes(n) < Precision::F32.payload_bytes(n));
+        assert_eq!(Precision::F32.payload_bytes(n), (4 * n + 64) as u64);
+    }
+
+    #[test]
+    fn precision_round_trip_dispatch() {
+        let params = vec![0.1f32, -0.5, 2.0];
+        assert_eq!(Precision::F32.round_trip(&params), params);
+        let h = Precision::F16.round_trip(&params);
+        for (a, b) in params.iter().zip(&h) {
+            assert!((a - b).abs() < 1e-3);
+        }
+        let q = Precision::Int8.round_trip(&params);
+        for (a, b) in params.iter().zip(&q) {
+            assert!((a - b).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            assert_eq!(Precision::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Precision::from_name("bf16"), None);
+    }
+}

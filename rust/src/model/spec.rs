@@ -1,0 +1,190 @@
+//! `params_spec.json` — the contract between the AOT bundle and the
+//! coordinator: flat-vector layout, batch shapes, and the analytic cost
+//! model that drives the device-latency simulator.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub param_count: usize,
+    pub input_dim: usize,
+    pub image_dim: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub eval_batch: usize,
+    pub seed: u64,
+    pub pallas_mode: String,
+    /// Analytic FLOPs of one train step (feeds the device model).
+    pub train_step_flops: u64,
+    pub eval_step_flops: u64,
+    pub layers: Vec<LayerSpec>,
+    /// Directory the spec was loaded from (artifact root).
+    pub dir: PathBuf,
+}
+
+impl ParamSpec {
+    /// Load and validate `params_spec.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("params_spec.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text).context("parsing params_spec.json")?;
+        Self::from_json(&v, dir)
+    }
+
+    fn from_json(v: &Value, dir: PathBuf) -> Result<Self> {
+        let get_usize = |k: &str| -> Result<usize> {
+            v.req(k)?
+                .as_usize()
+                .with_context(|| format!("spec field {k} must be a non-negative integer"))
+        };
+        let layers_v = v.req("layers")?.as_arr().context("layers must be an array")?;
+        let mut layers = Vec::with_capacity(layers_v.len());
+        for lv in layers_v {
+            layers.push(LayerSpec {
+                name: lv.req("name")?.as_str().context("layer name")?.to_string(),
+                shape: lv
+                    .req("shape")?
+                    .as_arr()
+                    .context("layer shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?,
+                offset: lv.req("offset")?.as_usize().context("layer offset")?,
+                size: lv.req("size")?.as_usize().context("layer size")?,
+            });
+        }
+        let spec = ParamSpec {
+            param_count: get_usize("param_count")?,
+            input_dim: get_usize("input_dim")?,
+            image_dim: get_usize("image_dim")?,
+            num_classes: get_usize("num_classes")?,
+            batch_size: get_usize("batch_size")?,
+            eval_batch: get_usize("eval_batch")?,
+            seed: get_usize("seed")? as u64,
+            pallas_mode: v.req("pallas_mode")?.as_str().context("pallas_mode")?.to_string(),
+            train_step_flops: get_usize("train_step_flops")? as u64,
+            eval_step_flops: get_usize("eval_step_flops")? as u64,
+            layers,
+            dir,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Internal consistency: layers are contiguous, sizes match shapes, and
+    /// the total equals `param_count`.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for l in &self.layers {
+            if l.offset != off {
+                bail!("layer {} offset {} != expected {off}", l.name, l.offset);
+            }
+            let prod: usize = l.shape.iter().product();
+            if prod != l.size {
+                bail!("layer {} size {} != shape product {prod}", l.name, l.size);
+            }
+            off += l.size;
+        }
+        if off != self.param_count {
+            bail!("layers sum to {off} != param_count {}", self.param_count);
+        }
+        if self.input_dim != self.image_dim * self.image_dim {
+            bail!("input_dim != image_dim^2");
+        }
+        Ok(())
+    }
+
+    /// Load the server's initial parameters (theta_0, Algorithm 1 line 2).
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("init_params.f32");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.param_count * 4 {
+            bail!(
+                "init_params.f32 is {} bytes, expected {}",
+                bytes.len(),
+                self.param_count * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Path of a named HLO artifact.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Byte size of a serialized model payload (f32 params + 64B header) —
+    /// used by the network simulator for transfer times.
+    pub fn model_payload_bytes(&self) -> u64 {
+        (self.param_count * 4 + 64) as u64
+    }
+
+    /// Find a layer by name.
+    pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_json(param_count: usize) -> String {
+        format!(
+            r#"{{
+              "param_count": {param_count},
+              "input_dim": 784, "image_dim": 28, "num_classes": 10,
+              "batch_size": 32, "eval_batch": 256, "seed": 0,
+              "pallas_mode": "head",
+              "train_step_flops": 1000000, "eval_step_flops": 300000,
+              "layers": [
+                {{"name": "a/w", "shape": [2, 3], "offset": 0, "size": 6}},
+                {{"name": "a/b", "shape": [4], "offset": 6, "size": 4}}
+              ]
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parses_valid_spec() {
+        let v = json::parse(&spec_json(10)).unwrap();
+        let s = ParamSpec::from_json(&v, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(s.param_count, 10);
+        assert_eq!(s.layers.len(), 2);
+        assert_eq!(s.layer("a/b").unwrap().offset, 6);
+        assert_eq!(s.model_payload_bytes(), 10 * 4 + 64);
+    }
+
+    #[test]
+    fn rejects_bad_total() {
+        let v = json::parse(&spec_json(11)).unwrap();
+        assert!(ParamSpec::from_json(&v, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_gap_in_offsets() {
+        let text = spec_json(10).replace("\"offset\": 6", "\"offset\": 7");
+        let v = json::parse(&text).unwrap();
+        assert!(ParamSpec::from_json(&v, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Dense `f32` vector math on the coordinator hot path.
+//!
+//! Aggregation (`weighted_average`) and the EAFLM/VAFL norms run every
+//! round over every participating model, so these are written to
+//! auto-vectorize: flat slices, no bounds checks in the inner loops
+//! (chunked iterators), f64 accumulation for numerical stability.
+
+/// A model parameter vector (opaque to the coordinator).
+pub type ParamVec = Vec<f32>;
+
+/// Squared L2 norm, accumulated in f64.
+pub fn l2_norm_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Squared L2 distance `||a - b||^2`, accumulated in f64.
+///
+/// This is the `||grad_prev - grad||^2` factor of the paper's Eq. 1.
+pub fn sq_distance(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "sq_distance length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// `y += alpha * x` (SGD-style update, mixing, etc.).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// FedAvg aggregation (Algorithm 1 line 16): `theta = sum_i (n_i/n) theta_i`.
+///
+/// `models` and `weights` must be non-empty and same-length; weights are
+/// normalized internally so callers can pass raw sample counts `n_i`.
+pub fn weighted_average(models: &[&[f32]], weights: &[f64]) -> ParamVec {
+    assert!(!models.is_empty(), "weighted_average of zero models");
+    assert_eq!(models.len(), weights.len(), "models/weights length mismatch");
+    let dim = models[0].len();
+    for m in models {
+        assert_eq!(m.len(), dim, "model dimension mismatch");
+    }
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum to a positive value");
+
+    let mut acc = vec![0.0f64; dim];
+    for (m, &w) in models.iter().zip(weights) {
+        let wn = w / total;
+        for (a, &v) in acc.iter_mut().zip(m.iter()) {
+            *a += wn * v as f64;
+        }
+    }
+    acc.into_iter().map(|v| v as f32).collect()
+}
+
+/// In-place weighted average into a reusable buffer (hot-path variant used
+/// by the coordinator to avoid per-round allocation; see EXPERIMENTS.md
+/// §Perf).
+pub fn weighted_average_into(models: &[&[f32]], weights: &[f64], out: &mut [f32], scratch: &mut Vec<f64>) {
+    assert!(!models.is_empty());
+    assert_eq!(models.len(), weights.len());
+    let dim = models[0].len();
+    assert_eq!(out.len(), dim);
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0);
+    scratch.clear();
+    scratch.resize(dim, 0.0);
+    for (m, &w) in models.iter().zip(weights) {
+        let wn = w / total;
+        for (a, &v) in scratch.iter_mut().zip(m.iter()) {
+            *a += wn * v as f64;
+        }
+    }
+    for (o, &a) in out.iter_mut().zip(scratch.iter()) {
+        *o = a as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        assert_eq!(l2_norm_sq(&[3.0, 4.0]), 25.0);
+        assert_eq!(sq_distance(&[1.0, 2.0], [0.0, 0.0].as_slice()), 5.0);
+        assert_eq!(sq_distance(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn sq_distance_checks_len() {
+        sq_distance(&[1.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn axpy_updates() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn weighted_average_normalizes_sample_counts() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![1.0f32, 2.0];
+        // n_a = 3000, n_b = 1000 -> 0.75*a + 0.25*b
+        let avg = weighted_average(&[&a, &b], &[3000.0, 1000.0]);
+        assert_eq!(avg, vec![0.25, 0.5]);
+    }
+
+    #[test]
+    fn weighted_average_single_model_is_identity() {
+        let a = vec![1.5f32, -2.0, 3.0];
+        assert_eq!(weighted_average(&[&a], &[7.0]), a);
+    }
+
+    #[test]
+    fn weighted_average_into_matches_alloc_version() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..100).map(|i| (i * 2) as f32).collect();
+        let want = weighted_average(&[&a, &b], &[1.0, 2.0]);
+        let mut out = vec![0.0f32; 100];
+        let mut scratch = Vec::new();
+        weighted_average_into(&[&a, &b], &[1.0, 2.0], &mut out, &mut scratch);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero models")]
+    fn weighted_average_rejects_empty() {
+        weighted_average(&[], &[]);
+    }
+}

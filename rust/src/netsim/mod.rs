@@ -1,0 +1,179 @@
+//! Network simulator: the paper's LAN (§IV-A — one 2.4 GHz WLAN, measured
+//! 216 Mbps down / 120 Mbps up) as a deterministic latency + bandwidth +
+//! jitter + loss model, with byte-accurate message sizing.
+//!
+//! Communication *counts* (the paper's headline metric, Table III) are
+//! tracked by the metrics stack; this module supplies the *time* a message
+//! occupies the virtual clock, and simulates transient drops (retries) that
+//! make asynchrony matter.
+
+use crate::util::rng::Rng;
+
+/// Direction of a transfer relative to the client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Client -> server (paper: 120 Mbps).
+    Up,
+    /// Server -> client (paper: 216 Mbps).
+    Down,
+}
+
+/// Wire messages of the VAFL protocol (Algorithm 1), with sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Message {
+    /// Scalar communication value V_i + header (Algorithm 1 line 6).
+    ValueReport,
+    /// Full model upload theta_i (line 11) — the gated, counted quantity.
+    ModelUpload { payload_bytes: u64 },
+    /// Global model broadcast theta^{t+1} (end of round).
+    ModelBroadcast { payload_bytes: u64 },
+    /// Server -> client upload request (line 11 "request").
+    UploadRequest,
+}
+
+impl Message {
+    /// Serialized size in bytes (f32 payload + 64-byte framing header).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Message::ValueReport => 64 + 4,
+            Message::UploadRequest => 64,
+            Message::ModelUpload { payload_bytes }
+            | Message::ModelBroadcast { payload_bytes } => *payload_bytes,
+        }
+    }
+
+    pub fn direction(&self) -> Direction {
+        match self {
+            Message::ValueReport | Message::ModelUpload { .. } => Direction::Up,
+            Message::UploadRequest | Message::ModelBroadcast { .. } => Direction::Down,
+        }
+    }
+}
+
+/// Link model parameters.
+#[derive(Debug, Clone)]
+pub struct LinkProfile {
+    pub up_mbps: f64,
+    pub down_mbps: f64,
+    /// One-way base latency, seconds.
+    pub latency_s: f64,
+    /// Sigma of multiplicative log-normal latency jitter.
+    pub jitter_sigma: f64,
+    /// Probability a transfer must be retried once (transient WLAN loss).
+    pub drop_prob: f64,
+}
+
+impl LinkProfile {
+    /// The paper's measured WLAN.
+    pub fn paper_lan() -> Self {
+        LinkProfile {
+            up_mbps: 120.0,
+            down_mbps: 216.0,
+            latency_s: 0.004,
+            jitter_sigma: 0.25,
+            drop_prob: 0.02,
+        }
+    }
+
+    /// An ideal link (ablations: isolate compute heterogeneity).
+    pub fn ideal() -> Self {
+        LinkProfile {
+            up_mbps: f64::INFINITY,
+            down_mbps: f64::INFINITY,
+            latency_s: 0.0,
+            jitter_sigma: 0.0,
+            drop_prob: 0.0,
+        }
+    }
+
+    /// Virtual seconds to deliver `msg`, including retries.
+    pub fn transfer_seconds(&self, msg: &Message, rng: &mut Rng) -> f64 {
+        let mbps = match msg.direction() {
+            Direction::Up => self.up_mbps,
+            Direction::Down => self.down_mbps,
+        };
+        let wire = if mbps.is_finite() {
+            (msg.bytes() * 8) as f64 / (mbps * 1e6)
+        } else {
+            0.0
+        };
+        let mut attempts = 1u32;
+        while self.drop_prob > 0.0 && rng.f64() < self.drop_prob && attempts < 5 {
+            attempts += 1;
+        }
+        (wire + self.latency_s) * attempts as f64 * rng.lognormal_jitter(self.jitter_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_jitter(mut l: LinkProfile) -> LinkProfile {
+        l.jitter_sigma = 0.0;
+        l.drop_prob = 0.0;
+        l
+    }
+
+    #[test]
+    fn message_sizes() {
+        assert_eq!(Message::ValueReport.bytes(), 68);
+        assert_eq!(Message::UploadRequest.bytes(), 64);
+        assert_eq!(Message::ModelUpload { payload_bytes: 1000 }.bytes(), 1000);
+    }
+
+    #[test]
+    fn directions() {
+        assert_eq!(Message::ValueReport.direction(), Direction::Up);
+        assert_eq!(
+            Message::ModelBroadcast { payload_bytes: 1 }.direction(),
+            Direction::Down
+        );
+    }
+
+    #[test]
+    fn upload_slower_than_download() {
+        // Paper asymmetry: 120 up vs 216 down.
+        let l = no_jitter(LinkProfile::paper_lan());
+        let mut rng = Rng::new(1);
+        let up = l.transfer_seconds(&Message::ModelUpload { payload_bytes: 1_000_000 }, &mut rng);
+        let down =
+            l.transfer_seconds(&Message::ModelBroadcast { payload_bytes: 1_000_000 }, &mut rng);
+        assert!(up > 1.5 * down, "up {up} down {down}");
+        // 1 MB at 120 Mbps ~ 66.7 ms + 4 ms latency.
+        assert!((up - (8e6 / 120e6 + 0.004)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ideal_link_is_free() {
+        let mut rng = Rng::new(2);
+        let l = LinkProfile::ideal();
+        assert_eq!(
+            l.transfer_seconds(&Message::ModelUpload { payload_bytes: 1 << 30 }, &mut rng),
+            0.0
+        );
+    }
+
+    #[test]
+    fn drops_add_integer_retries() {
+        let mut l = no_jitter(LinkProfile::paper_lan());
+        l.drop_prob = 0.9999; // force retries up to the cap
+        let mut rng = Rng::new(3);
+        let base = no_jitter(LinkProfile::paper_lan())
+            .transfer_seconds(&Message::UploadRequest, &mut Rng::new(4));
+        let t = l.transfer_seconds(&Message::UploadRequest, &mut rng);
+        let ratio = t / base;
+        assert!((ratio - ratio.round()).abs() < 1e-9, "ratio {ratio}");
+        assert!(ratio >= 2.0 && ratio <= 5.0);
+    }
+
+    #[test]
+    fn deterministic_per_stream() {
+        let l = LinkProfile::paper_lan();
+        let msg = Message::ModelUpload { payload_bytes: 40_000 };
+        let a: Vec<f64> =
+            (0..5).map(|_| l.transfer_seconds(&msg, &mut Rng::new(5))).collect();
+        // same fresh seed each call -> identical
+        assert!(a.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,275 @@
+//! Mock executor: a differentiable synthetic "model" with the same
+//! interface as the PJRT runtime, so the coordinator, simulator, and metric
+//! stack can be tested (and micro-benchmarked) without artifacts.
+//!
+//! The model is a per-class linear scorer on a fixed random projection —
+//! cheap, deterministic, and it genuinely *learns* under SGD, so accuracy
+//! curves, V dynamics (gradient-change norms shrink as training converges)
+//! and 94 %-threshold crossings all behave qualitatively like the real
+//! model.
+
+use super::{EvalOutput, Executor, TrainOutput};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Mock model: logits = W x̃ where x̃ is the input down-projected to
+/// `feat_dim` by a fixed random matrix; params are W (`classes × feat_dim`).
+pub struct MockExecutor {
+    param_count: usize,
+    batch_size: usize,
+    eval_batch: usize,
+    input_dim: usize,
+    classes: usize,
+    feat_dim: usize,
+    /// Fixed random projection `input_dim × feat_dim` (not trained).
+    proj: Vec<f32>,
+}
+
+impl MockExecutor {
+    /// Build with the standard shapes (classes=10).
+    pub fn new(input_dim: usize, feat_dim: usize, batch_size: usize, eval_batch: usize) -> Self {
+        let classes = 10;
+        let mut rng = Rng::new(0xFEED_FACE);
+        let proj = (0..input_dim * feat_dim)
+            .map(|_| rng.gauss() as f32 / (input_dim as f32).sqrt())
+            .collect();
+        MockExecutor {
+            param_count: classes * feat_dim,
+            batch_size,
+            eval_batch,
+            input_dim,
+            classes,
+            feat_dim,
+            proj,
+        }
+    }
+
+    /// Small default: 784-dim inputs, 32-dim features (P = 320).
+    pub fn standard() -> Self {
+        Self::new(784, 32, 32, 256)
+    }
+
+    fn features(&self, x: &[f32]) -> Vec<f32> {
+        // x: [n, input_dim] -> [n, feat_dim]
+        let n = x.len() / self.input_dim;
+        let mut out = vec![0.0f32; n * self.feat_dim];
+        for i in 0..n {
+            let xi = &x[i * self.input_dim..(i + 1) * self.input_dim];
+            let oi = &mut out[i * self.feat_dim..(i + 1) * self.feat_dim];
+            for (k, &xv) in xi.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let prow = &self.proj[k * self.feat_dim..(k + 1) * self.feat_dim];
+                for (o, &p) in oi.iter_mut().zip(prow) {
+                    *o += xv * p;
+                }
+            }
+        }
+        out
+    }
+
+    /// Softmax cross-entropy loss + gradient for one batch.
+    fn loss_and_grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f32, Vec<f32>) {
+        let n = y.len();
+        let feats = self.features(x);
+        let mut grad = vec![0.0f32; self.param_count];
+        let mut loss = 0.0f64;
+        let mut valid = 0usize;
+        for i in 0..n {
+            if y[i] < 0 {
+                continue;
+            }
+            valid += 1;
+            let f = &feats[i * self.feat_dim..(i + 1) * self.feat_dim];
+            // logits_c = params[c,:] . f
+            let mut logits = vec![0.0f64; self.classes];
+            for c in 0..self.classes {
+                let row = &params[c * self.feat_dim..(c + 1) * self.feat_dim];
+                logits[c] = row.iter().zip(f).map(|(&w, &v)| (w * v) as f64).sum();
+            }
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            let label = y[i] as usize;
+            loss += -(exps[label] / z).ln();
+            for c in 0..self.classes {
+                let p = exps[c] / z;
+                let coef = (p - if c == label { 1.0 } else { 0.0 }) as f32;
+                let grow = &mut grad[c * self.feat_dim..(c + 1) * self.feat_dim];
+                for (g, &v) in grow.iter_mut().zip(f) {
+                    *g += coef * v;
+                }
+            }
+        }
+        let scale = 1.0 / valid.max(1) as f32;
+        for g in &mut grad {
+            *g *= scale;
+        }
+        ((loss / valid.max(1) as f64) as f32, grad)
+    }
+}
+
+impl Executor for MockExecutor {
+    fn train_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        anyhow::ensure!(params.len() == self.param_count, "mock param size");
+        anyhow::ensure!(y.len() == self.batch_size, "mock batch size");
+        let (loss, grad) = self.loss_and_grad(params, x, y);
+        let new_params: Vec<f32> = params
+            .iter()
+            .zip(&grad)
+            .map(|(&p, &g)| p - lr * g)
+            .collect();
+        Ok(TrainOutput { new_params, loss, grad })
+    }
+
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput> {
+        anyhow::ensure!(params.len() == self.param_count, "mock param size");
+        let feats = self.features(x);
+        let mut correct = 0.0f32;
+        let mut loss_sum = 0.0f64;
+        for i in 0..y.len() {
+            if y[i] < 0 {
+                continue;
+            }
+            let f = &feats[i * self.feat_dim..(i + 1) * self.feat_dim];
+            let mut best = 0usize;
+            let mut logits = vec![0.0f64; self.classes];
+            for c in 0..self.classes {
+                let row = &params[c * self.feat_dim..(c + 1) * self.feat_dim];
+                logits[c] = row.iter().zip(f).map(|(&w, &v)| (w * v) as f64).sum();
+                if logits[c] > logits[best] {
+                    best = c;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1.0;
+            }
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let z: f64 = logits.iter().map(|&l| (l - m).exp()).sum();
+            loss_sum += -(logits[y[i] as usize] - m - z.ln());
+        }
+        Ok(EvalOutput { correct, loss_sum: loss_sum as f32 })
+    }
+
+    fn value(&mut self, g_prev: &[f32], g_new: &[f32], acc: f32, n: f32) -> Result<f32> {
+        let sq = crate::model::sq_distance(g_prev, g_new);
+        Ok((sq * (1.0 + n as f64 / 1000.0).powf(acc as f64)) as f32)
+    }
+
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::evaluate_with_params;
+
+    fn toy_batch(exec: &MockExecutor, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        // Class-dependent blobs in input space: class c has a bump at
+        // pixels [c*70 .. c*70+40].
+        let mut rng = Rng::new(seed);
+        let b = exec.batch_size();
+        let d = exec.input_dim();
+        let mut x = vec![0.0f32; b * d];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            let c = rng.below(10);
+            y[i] = c as i32;
+            for k in 0..40 {
+                x[i * d + c * 70 + k] = 1.0 + rng.gauss() as f32 * 0.1;
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn mock_learns() {
+        let mut exec = MockExecutor::standard();
+        let mut params = vec![0.0f32; exec.param_count()];
+        let mut first_loss = None;
+        let mut last_loss = 0.0;
+        for step in 0..60 {
+            let (x, y) = toy_batch(&exec, step);
+            let out = exec.train_step(&params, &x, &y, 0.5).unwrap();
+            params = out.new_params;
+            first_loss.get_or_insert(out.loss);
+            last_loss = out.loss;
+        }
+        assert!(
+            last_loss < first_loss.unwrap() * 0.5,
+            "mock failed to learn: {first_loss:?} -> {last_loss}"
+        );
+    }
+
+    #[test]
+    fn mock_eval_counts_and_ignores_padding() {
+        let mut exec = MockExecutor::standard();
+        let params = vec![0.01f32; exec.param_count()];
+        let d = exec.input_dim();
+        let eb = exec.eval_batch();
+        let x = vec![0.0f32; eb * d];
+        let mut y = vec![-1i32; eb];
+        y[0] = 3;
+        let out = exec.eval_step(&params, &x, &y).unwrap();
+        assert!(out.correct <= 1.0);
+    }
+
+    #[test]
+    fn mock_value_matches_formula() {
+        let mut exec = MockExecutor::standard();
+        let p = exec.param_count();
+        let g0 = vec![1.0f32; p];
+        let g1 = vec![0.0f32; p];
+        let v = exec.value(&g0, &g1, 0.5, 7.0).unwrap();
+        let want = p as f64 * (1.0 + 0.007f64).powf(0.5);
+        assert!((v as f64 - want).abs() / want < 1e-5);
+    }
+
+    #[test]
+    fn evaluate_with_params_streams_chunks() {
+        let mut exec = MockExecutor::standard();
+        let d = exec.input_dim();
+        // 300 samples -> 2 chunks of 256 with padded tail.
+        let n = 300;
+        let mut rng = Rng::new(5);
+        let mut images = vec![0.0f32; n * d];
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let c = rng.below(10);
+            labels[i] = c as i32;
+            for k in 0..40 {
+                images[i * d + c * 70 + k] = 1.0;
+            }
+        }
+        // Train a few steps so accuracy is meaningful.
+        let mut params = vec![0.0f32; exec.param_count()];
+        for step in 0..40 {
+            let (x, y) = toy_batch(&exec, 100 + step);
+            params = exec.train_step(&params, &x, &y, 0.5).unwrap().new_params;
+        }
+        let (acc, loss) = evaluate_with_params(&mut exec, &params, &images, &labels).unwrap();
+        assert!(acc > 0.8, "acc {acc}");
+        assert!(loss.is_finite());
+    }
+}

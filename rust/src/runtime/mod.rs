@@ -1,0 +1,111 @@
+//! Runtime: load and execute the AOT HLO artifacts through PJRT.
+//!
+//! The contract with the Python build path (`python/compile/aot.py`):
+//!
+//! * `train_step`: `(params f32[P], x f32[B,784], y i32[B], lr f32[])`
+//!   → tuple `(new_params f32[P], loss f32[], grad f32[P])`
+//! * `eval_step`: `(params f32[P], x f32[EB,784], y i32[EB])`
+//!   → tuple `(correct f32[], loss_sum f32[])`
+//! * `value`: `(g_prev f32[P], g_new f32[P], acc f32[], n f32[])` → `V f32[]`
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`) because
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects
+//! in serialized-proto form; the text parser reassigns ids.
+//!
+//! `PjRtClient` is `Rc`-based (neither `Send` nor `Sync`), so a runtime is
+//! pinned to its creating thread. For multi-threaded callers,
+//! [`service::ExecutorService`] owns the runtime on a dedicated thread and
+//! serves requests over channels. The [`Executor`] trait abstracts the
+//! runtime so the coordinator/simulator can run against [`MockExecutor`]
+//! in unit tests without artifacts.
+
+pub mod mock;
+pub mod pjrt;
+pub mod service;
+
+pub use mock::MockExecutor;
+pub use pjrt::PjrtRuntime;
+pub use service::{ExecutorService, ServiceHandle};
+
+use crate::Result;
+
+/// Output of one training step.
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    pub new_params: Vec<f32>,
+    pub loss: f32,
+    pub grad: Vec<f32>,
+}
+
+/// Output of one evaluation chunk.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOutput {
+    pub correct: f32,
+    pub loss_sum: f32,
+}
+
+/// Abstract model executor — implemented by the PJRT runtime (production)
+/// and by [`MockExecutor`] (tests/benches without artifacts).
+pub trait Executor {
+    /// One fused fwd+bwd+SGD step on a `[B, input_dim]` batch.
+    fn train_step(&mut self, params: &[f32], x: &[f32], y: &[i32], lr: f32)
+        -> Result<TrainOutput>;
+
+    /// Evaluate one `[EB, input_dim]` chunk; labels `< 0` are padding.
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput>;
+
+    /// Paper Eq. 1 on the artifact path:
+    /// `V = ||g_prev - g_new||^2 * (1 + n/1e3)^acc`.
+    fn value(&mut self, g_prev: &[f32], g_new: &[f32], acc: f32, n: f32) -> Result<f32>;
+
+    /// Parameter-vector length the executor expects.
+    fn param_count(&self) -> usize;
+
+    /// Train batch size B.
+    fn batch_size(&self) -> usize;
+
+    /// Eval chunk size EB.
+    fn eval_batch(&self) -> usize;
+
+    /// Input feature dimension (784).
+    fn input_dim(&self) -> usize;
+}
+
+/// Evaluate `params` on a full test set via chunked [`Executor::eval_step`],
+/// padding the tail chunk with label `-1` (ignored by the artifact).
+///
+/// Returns `(accuracy, mean_loss)`.
+pub fn evaluate_with_params(
+    exec: &mut dyn Executor,
+    params: &[f32],
+    images: &[f32],
+    labels: &[i32],
+) -> Result<(f64, f64)> {
+    let d = exec.input_dim();
+    let eb = exec.eval_batch();
+    let n = labels.len();
+    anyhow::ensure!(images.len() == n * d, "image buffer size mismatch");
+    anyhow::ensure!(n > 0, "empty evaluation set");
+
+    let mut correct = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    let mut xbuf = vec![0.0f32; eb * d];
+    let mut ybuf = vec![-1i32; eb];
+    let mut start = 0usize;
+    while start < n {
+        let take = (n - start).min(eb);
+        xbuf[..take * d].copy_from_slice(&images[start * d..(start + take) * d]);
+        for v in xbuf[take * d..].iter_mut() {
+            *v = 0.0;
+        }
+        ybuf[..take].copy_from_slice(&labels[start..start + take]);
+        for v in ybuf[take..].iter_mut() {
+            *v = -1;
+        }
+        let out = exec.eval_step(params, &xbuf, &ybuf)?;
+        correct += out.correct as f64;
+        loss_sum += out.loss_sum as f64;
+        start += take;
+    }
+    Ok((correct / n as f64, loss_sum / n as f64))
+}

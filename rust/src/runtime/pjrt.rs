@@ -1,0 +1,164 @@
+//! Production executor: HLO text artifacts compiled and run on the PJRT
+//! CPU client through the `xla` crate.
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::{EvalOutput, Executor, TrainOutput};
+use crate::model::ParamSpec;
+use crate::Result;
+
+/// PJRT-backed executor. `!Send` (the underlying client is `Rc`-based) —
+/// wrap in [`super::ExecutorService`] for multi-threaded callers.
+pub struct PjrtRuntime {
+    spec: ParamSpec,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    value: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Load the artifact bundle from `dir`, compile all entry points.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let spec = ParamSpec::load(&dir)?;
+        Self::from_spec(spec)
+    }
+
+    /// Compile from an already-parsed spec.
+    pub fn from_spec(spec: ParamSpec) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = spec.hlo_path(name);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(PjrtRuntime {
+            train: compile("train_step")?,
+            eval: compile("eval_step")?,
+            value: compile("value")?,
+            client,
+            spec,
+        })
+    }
+
+    pub fn spec(&self) -> &ParamSpec {
+        &self.spec
+    }
+
+    /// Build a shaped f32 literal in one copy (no vec1 + reshape round
+    /// trip — see EXPERIMENTS.md §Perf).
+    fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+}
+
+/// Execute a compiled artifact and unwrap the `return_tuple=True` wrapper.
+fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args)?;
+    let buffer = &result[0][0];
+    let lit = buffer.to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}
+
+impl Executor for PjrtRuntime {
+    fn train_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        let (p, b, d) = (self.spec.param_count, self.spec.batch_size, self.spec.input_dim);
+        if params.len() != p || x.len() != b * d || y.len() != b {
+            bail!(
+                "train_step shape mismatch: params {} (want {p}), x {} (want {}), y {} (want {b})",
+                params.len(),
+                x.len(),
+                b * d,
+                y.len()
+            );
+        }
+        let args = [
+            Self::literal_f32(params, &[p])?,
+            Self::literal_f32(x, &[b, d])?,
+            xla::Literal::vec1(y),
+            xla::Literal::scalar(lr),
+        ];
+        let mut out = run_tuple(&self.train, &args)?;
+        if out.len() != 3 {
+            bail!("train_step returned {} outputs, want 3", out.len());
+        }
+        let grad = out.pop().unwrap().to_vec::<f32>()?;
+        let loss = out.pop().unwrap().get_first_element::<f32>()?;
+        let new_params = out.pop().unwrap().to_vec::<f32>()?;
+        Ok(TrainOutput { new_params, loss, grad })
+    }
+
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput> {
+        let (p, eb, d) = (self.spec.param_count, self.spec.eval_batch, self.spec.input_dim);
+        if params.len() != p || x.len() != eb * d || y.len() != eb {
+            bail!("eval_step shape mismatch");
+        }
+        let args = [
+            Self::literal_f32(params, &[p])?,
+            Self::literal_f32(x, &[eb, d])?,
+            xla::Literal::vec1(y),
+        ];
+        let out = run_tuple(&self.eval, &args)?;
+        if out.len() != 2 {
+            bail!("eval_step returned {} outputs, want 2", out.len());
+        }
+        Ok(EvalOutput {
+            correct: out[0].get_first_element::<f32>()?,
+            loss_sum: out[1].get_first_element::<f32>()?,
+        })
+    }
+
+    fn value(&mut self, g_prev: &[f32], g_new: &[f32], acc: f32, n: f32) -> Result<f32> {
+        let p = self.spec.param_count;
+        if g_prev.len() != p || g_new.len() != p {
+            bail!("value shape mismatch");
+        }
+        let args = [
+            xla::Literal::vec1(g_prev),
+            xla::Literal::vec1(g_new),
+            xla::Literal::scalar(acc),
+            xla::Literal::scalar(n),
+        ];
+        let out = run_tuple(&self.value, &args)?;
+        Ok(out[0].get_first_element::<f32>()?)
+    }
+
+    fn param_count(&self) -> usize {
+        self.spec.param_count
+    }
+
+    fn batch_size(&self) -> usize {
+        self.spec.batch_size
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.spec.eval_batch
+    }
+
+    fn input_dim(&self) -> usize {
+        self.spec.input_dim
+    }
+}

@@ -1,0 +1,225 @@
+//! Executor service: owns a (non-`Send`) executor on a dedicated thread and
+//! serves [`Executor`] calls over channels, so the realtime fleet driver
+//! (one OS thread per simulated edge device) can share one PJRT runtime.
+//!
+//! This mirrors the paper's deployment: one *server-side* compute substrate
+//! shared by all client processes, with requests serialized at the device.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context};
+
+use super::{EvalOutput, Executor, TrainOutput};
+use crate::Result;
+
+enum Request {
+    Train { params: Vec<f32>, x: Vec<f32>, y: Vec<i32>, lr: f32 },
+    Eval { params: Vec<f32>, x: Vec<f32>, y: Vec<i32> },
+    Value { g_prev: Vec<f32>, g_new: Vec<f32>, acc: f32, n: f32 },
+    Shutdown,
+}
+
+enum Response {
+    Train(Result<TrainOutput>),
+    Eval(Result<EvalOutput>),
+    Value(Result<f32>),
+}
+
+struct Job {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+}
+
+/// Spawned service; dropping it (or calling [`ExecutorService::shutdown`])
+/// stops the worker thread.
+pub struct ExecutorService {
+    tx: mpsc::Sender<Job>,
+    join: Option<JoinHandle<()>>,
+    shape: (usize, usize, usize, usize), // (P, B, EB, D)
+}
+
+/// Cheap cloneable handle implementing [`Executor`] against the service.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: mpsc::Sender<Job>,
+    shape: (usize, usize, usize, usize),
+}
+
+impl ExecutorService {
+    /// Start a service thread. `make_exec` runs *on the service thread*
+    /// (required: PJRT clients must be created where they are used).
+    pub fn spawn<E, F>(make_exec: F) -> Result<Self>
+    where
+        E: Executor,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (shape_tx, shape_rx) = mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name("executor-service".into())
+            .spawn(move || {
+                let mut exec = match make_exec() {
+                    Ok(e) => {
+                        let shape =
+                            (e.param_count(), e.batch_size(), e.eval_batch(), e.input_dim());
+                        let _ = shape_tx.send(Ok(shape));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = shape_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let resp = match job.req {
+                        Request::Train { params, x, y, lr } => {
+                            Response::Train(exec.train_step(&params, &x, &y, lr))
+                        }
+                        Request::Eval { params, x, y } => {
+                            Response::Eval(exec.eval_step(&params, &x, &y))
+                        }
+                        Request::Value { g_prev, g_new, acc, n } => {
+                            Response::Value(exec.value(&g_prev, &g_new, acc, n))
+                        }
+                        Request::Shutdown => break,
+                    };
+                    let _ = job.reply.send(resp);
+                }
+            })
+            .context("spawning executor service thread")?;
+        let shape = shape_rx
+            .recv()
+            .map_err(|_| anyhow!("executor service died during startup"))??;
+        Ok(ExecutorService { tx, join: Some(join), shape })
+    }
+
+    /// A cloneable, `Send` handle for worker threads.
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle { tx: self.tx.clone(), shape: self.shape }
+    }
+
+    /// Stop the service thread and wait for it.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if let Some(join) = self.join.take() {
+            let (reply, _) = mpsc::channel();
+            let _ = self.tx.send(Job { req: Request::Shutdown, reply });
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ExecutorService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl ServiceHandle {
+    fn call(&self, req: Request) -> Result<Response> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job { req, reply: reply_tx })
+            .map_err(|_| anyhow!("executor service is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor service dropped the reply"))
+    }
+}
+
+impl Executor for ServiceHandle {
+    fn train_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<TrainOutput> {
+        match self.call(Request::Train {
+            params: params.to_vec(),
+            x: x.to_vec(),
+            y: y.to_vec(),
+            lr,
+        })? {
+            Response::Train(r) => r,
+            _ => Err(anyhow!("service protocol error")),
+        }
+    }
+
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> Result<EvalOutput> {
+        match self.call(Request::Eval {
+            params: params.to_vec(),
+            x: x.to_vec(),
+            y: y.to_vec(),
+        })? {
+            Response::Eval(r) => r,
+            _ => Err(anyhow!("service protocol error")),
+        }
+    }
+
+    fn value(&mut self, g_prev: &[f32], g_new: &[f32], acc: f32, n: f32) -> Result<f32> {
+        match self.call(Request::Value {
+            g_prev: g_prev.to_vec(),
+            g_new: g_new.to_vec(),
+            acc,
+            n,
+        })? {
+            Response::Value(r) => r,
+            _ => Err(anyhow!("service protocol error")),
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.shape.0
+    }
+
+    fn batch_size(&self) -> usize {
+        self.shape.1
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.shape.2
+    }
+
+    fn input_dim(&self) -> usize {
+        self.shape.3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockExecutor;
+
+    #[test]
+    fn service_round_trips_from_multiple_threads() {
+        let svc = ExecutorService::spawn(|| Ok(MockExecutor::standard())).unwrap();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let mut h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                let p = vec![0.0f32; h.param_count()];
+                let x = vec![0.1f32; h.batch_size() * h.input_dim()];
+                let y = vec![(t % 10) as i32; h.batch_size()];
+                let out = h.train_step(&p, &x, &y, 0.1).unwrap();
+                assert_eq!(out.new_params.len(), p.len());
+                let v = h.value(&out.grad, &out.grad, 0.9, 7.0).unwrap();
+                assert_eq!(v, 0.0);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn spawn_failure_propagates() {
+        let r = ExecutorService::spawn::<MockExecutor, _>(|| anyhow::bail!("nope"));
+        assert!(r.is_err());
+    }
+}

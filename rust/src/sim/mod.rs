@@ -1,0 +1,198 @@
+//! Discrete-event simulation substrate: a virtual clock and an event queue
+//! with deterministic ordering (time, then sequence number), plus the
+//! realtime driver that replays a recorded virtual-time trace with scaled
+//! wall-clock sleeps (the `--realtime` demo mode).
+//!
+//! The round engine uses this to model *when* things happen on the paper's
+//! heterogeneous testbed — client compute, uplink/downlink transfers,
+//! aggregation — while the numerics themselves run through PJRT off the
+//! clock.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds since experiment start.
+pub type VTime = f64;
+
+/// An event scheduled on the virtual clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event<T> {
+    pub time: VTime,
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T> Eq for Event<T> where T: PartialEq {}
+
+impl<T: PartialEq> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T: PartialEq> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. Tie-break on
+        // sequence number so ordering is total and deterministic.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue.
+#[derive(Debug)]
+pub struct EventQueue<T: PartialEq> {
+    heap: BinaryHeap<Event<T>>,
+    now: VTime,
+    seq: u64,
+}
+
+impl<T: PartialEq> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: PartialEq> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> VTime {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `at` (>= now is enforced).
+    pub fn schedule_at(&mut self, at: VTime, payload: T) {
+        let t = if at < self.now { self.now } else { at };
+        let e = Event { time: t, seq: self.seq, payload };
+        self.seq += 1;
+        self.heap.push(e);
+    }
+
+    /// Schedule `payload` after a delay from now.
+    pub fn schedule_in(&mut self, delay: VTime, payload: T) {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.schedule_at(self.now + delay.max(0.0), payload);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        Some(e)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Advance the clock directly (used between rounds).
+    pub fn advance_to(&mut self, t: VTime) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// A recorded (virtual-time, label) trace that the realtime driver can
+/// replay with wall-clock pacing.
+#[derive(Debug, Default, Clone)]
+pub struct Trace {
+    pub points: Vec<(VTime, String)>,
+}
+
+impl Trace {
+    pub fn record(&mut self, t: VTime, label: impl Into<String>) {
+        self.points.push((t, label.into()));
+    }
+
+    /// Replay the trace, sleeping `scale` wall seconds per virtual second,
+    /// invoking `f` at each point. `scale = 0` replays instantly.
+    pub fn replay(&self, scale: f64, mut f: impl FnMut(VTime, &str)) {
+        let mut last = 0.0;
+        for (t, label) in &self.points {
+            let dt = (t - last).max(0.0) * scale;
+            if dt > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(dt.min(1.0)));
+            }
+            last = *t;
+            f(*t, label);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 10);
+        q.schedule_at(1.0, 20);
+        q.schedule_at(1.0, 30);
+        assert_eq!(q.pop().unwrap().payload, 10);
+        assert_eq!(q.pop().unwrap().payload, 20);
+        assert_eq!(q.pop().unwrap().payload, 30);
+    }
+
+    #[test]
+    fn clock_monotone_even_for_past_schedules() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, "x");
+        q.pop();
+        q.schedule_at(1.0, "past"); // clamped to now
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 5.0);
+    }
+
+    #[test]
+    fn schedule_in_accumulates() {
+        let mut q = EventQueue::new();
+        q.schedule_in(2.0, "a");
+        q.pop();
+        q.schedule_in(3.0, "b");
+        let e = q.pop().unwrap();
+        assert!((e.time - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_to_moves_clock_forward_only() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.advance_to(4.0);
+        assert_eq!(q.now(), 4.0);
+        q.advance_to(2.0);
+        assert_eq!(q.now(), 4.0);
+    }
+
+    #[test]
+    fn trace_replay_instant() {
+        let mut tr = Trace::default();
+        tr.record(0.5, "a");
+        tr.record(1.5, "b");
+        let mut seen = Vec::new();
+        tr.replay(0.0, |t, l| seen.push((t, l.to_string())));
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[1].1, "b");
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch (the crate cache has no serde /
+//! rand / log): deterministic RNG streams, a JSON reader/writer, a
+//! TOML-subset config parser, a leveled logger, and simple timers.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod timer;
+pub mod toml;

@@ -1,0 +1,322 @@
+//! Deterministic pseudo-random numbers: SplitMix64 seeding +
+//! xoshiro256++ streams, with the distributions the simulator needs
+//! (uniform, normal, log-normal, Dirichlet-via-Gamma, shuffling).
+//!
+//! Every stochastic choice in an experiment flows from one experiment seed
+//! through *named* sub-streams ([`Rng::fork`]), so results are bit-stable
+//! across module reordering and thread schedules.
+
+/// SplitMix64 step — used for seeding and stream derivation.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over a label, for deriving named sub-streams.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal deviate from the Marsaglia polar transform.
+    spare_gauss: Option<f64>,
+}
+
+impl Rng {
+    /// Seed from a single `u64` (SplitMix64 expansion, as recommended by
+    /// the xoshiro authors).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_gauss: None }
+    }
+
+    /// Derive an independent, reproducible sub-stream for `label`.
+    ///
+    /// `fork` does not advance `self`, so adding a new consumer never
+    /// perturbs existing streams.
+    pub fn fork(&self, label: &str) -> Rng {
+        let mut sm = self.s[0] ^ fnv1a(label.as_bytes()).rotate_left(17);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_gauss: None }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our
+    /// purposes; n must be > 0).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply avoids modulo bias for all practical n.
+        let m = (self.next_u64() as u128) * (n as u128);
+        (m >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal deviate (Marsaglia polar method).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(g) = self.spare_gauss.take() {
+            return g;
+        }
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_gauss = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal with the given mean / standard deviation.
+    pub fn normal(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.gauss()
+    }
+
+    /// Log-normal multiplicative jitter: exp(N(0, sigma)).
+    ///
+    /// `sigma = 0` returns exactly 1.0 (useful to disable jitter).
+    pub fn lognormal_jitter(&mut self, sigma: f64) -> f64 {
+        if sigma == 0.0 {
+            1.0
+        } else {
+            (sigma * self.gauss()).exp()
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (shape > 0).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            return g * self.f64().max(1e-300).powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gauss();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1) sample of length `k` (normalized Gammas).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-12)).collect();
+        let sum: f64 = g.iter().sum();
+        for v in &mut g {
+            *v /= sum;
+        }
+        g
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index according to unnormalized weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut t = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fork_is_stable_and_label_sensitive() {
+        let root = Rng::new(7);
+        let mut a1 = root.fork("data");
+        let mut a2 = root.fork("data");
+        let mut b = root.fork("net");
+        let x = a1.next_u64();
+        assert_eq!(x, a2.next_u64());
+        assert_ne!(x, b.next_u64());
+    }
+
+    #[test]
+    fn fork_does_not_advance_parent() {
+        let root = Rng::new(9);
+        let mut c1 = root.clone();
+        let _ = root.fork("x");
+        let mut c2 = root.clone();
+        assert_eq!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            let i = r.below(7);
+            assert!(i < 7);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gauss();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(6);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let d = r.dirichlet(alpha, 10);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn lognormal_jitter_disabled_at_zero_sigma() {
+        let mut r = Rng::new(8);
+        assert_eq!(r.lognormal_jitter(0.0), 1.0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Rng::new(11);
+        let w = [0.0, 0.0, 1.0];
+        for _ in 0..100 {
+            assert_eq!(r.weighted_index(&w), 2);
+        }
+        let w2 = [1.0, 3.0];
+        let mut counts = [0usize; 2];
+        for _ in 0..40_000 {
+            counts[r.weighted_index(&w2)] += 1;
+        }
+        let frac = counts[1] as f64 / 40_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac {frac}");
+    }
+}

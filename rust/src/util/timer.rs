@@ -1,0 +1,106 @@
+//! Wall-clock timing helpers and a tiny statistics kit used by the bench
+//! harnesses (the offline crate set has no criterion; `rust/benches/*` are
+//! `harness = false` binaries built on these).
+
+use std::time::{Duration, Instant};
+
+/// Measure one closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Benchmark statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchStats {
+    pub fn format_line(&self, name: &str) -> String {
+        format!(
+            "{name:<44} iters={:<5} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} min={:>10.3?}",
+            self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Run `f` for `warmup` discarded iterations then `iters` timed ones.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    BenchStats {
+        iters,
+        mean: total / iters as u32,
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+    }
+}
+
+/// Scalar summary statistics (for accuracy curves etc.).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute summary statistics of a slice (empty slice -> zeros).
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    Summary { n, mean, sd: var.sqrt(), min, max }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_percentiles() {
+        let s = bench(1, 50, || std::hint::black_box(1 + 1));
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn summarize_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        let empty = summarize(&[]);
+        assert_eq!(empty.n, 0);
+    }
+}

@@ -1,0 +1,254 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! Supports the subset the launcher needs: `[section]` / `[a.b]` headers,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays,
+//! plus `#` comments. Values land in a flat `section.key -> Scalar` map;
+//! `config::ExperimentConfig::from_toml` gives them types.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Scalar>),
+}
+
+impl Scalar {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Scalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Scalar::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Scalar::Float(f) => Some(*f),
+            Scalar::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Scalar::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parsed document: flat map of `"section.key"` (or `"key"` at top level).
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Scalar>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Scalar> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Scalar::as_str)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Scalar::as_i64)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Scalar::as_f64)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Scalar::as_bool)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Doc, TomlError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed section"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(err("empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Scalar, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Scalar::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Scalar::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Scalar::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Scalar::Arr(vec![]));
+        }
+        let items = split_top_level(body)
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Scalar::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Scalar::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Scalar::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            # experiment b
+            name = "exp-b"
+            rounds = 200
+            lr = 0.1
+            [data]
+            iid = false
+            labels = [1, 2, 3]
+            [net.link]
+            up_mbps = 120.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("exp-b"));
+        assert_eq!(doc.get_i64("rounds"), Some(200));
+        assert_eq!(doc.get_f64("lr"), Some(0.1));
+        assert_eq!(doc.get_bool("data.iid"), Some(false));
+        assert_eq!(doc.get_f64("net.link.up_mbps"), Some(120.0));
+        match doc.get("data.labels").unwrap() {
+            Scalar::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = parse("s = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3, 4]]").unwrap();
+        match doc.get("m").unwrap() {
+            Scalar::Arr(rows) => {
+                assert_eq!(rows.len(), 2);
+                match &rows[1] {
+                    Scalar::Arr(r) => assert_eq!(r[1], Scalar::Int(4)),
+                    _ => panic!(),
+                }
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! Integration tests: full experiments through the coordinator + fleet +
+//! netsim + metrics stack on the mock executor (no artifacts needed), plus
+//! config/report plumbing end to end.
+
+use vafl::config::{Algorithm, Backend, ExperimentConfig};
+use vafl::data::PartitionScheme;
+use vafl::experiments::{self, figures, table3};
+use vafl::metrics::csv::{write_client_acc_csv, write_rounds_csv};
+
+fn quick(which: char, algorithm: Algorithm, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = algorithm;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 120;
+    cfg.test_samples = 96;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+#[test]
+fn full_grid_runs_on_mock() {
+    for which in ['a', 'b', 'c', 'd'] {
+        for algo in Algorithm::ALL {
+            let out = experiments::run(&quick(which, algo, 3)).unwrap();
+            assert_eq!(out.metrics.records.len(), 3, "{which}/{}", algo.name());
+            assert!(out.total_uploads >= 3, "{which}/{}", algo.name());
+        }
+    }
+}
+
+#[test]
+fn afl_is_upper_bound_on_uploads() {
+    // Gated policies can never exceed AFL's communication (same rounds).
+    for which in ['a', 'd'] {
+        let afl = experiments::run(&quick(which, Algorithm::Afl, 6)).unwrap();
+        for algo in [Algorithm::Vafl, Algorithm::Eaflm] {
+            let out = experiments::run(&quick(which, algo, 6)).unwrap();
+            assert!(
+                out.total_uploads <= afl.total_uploads,
+                "{which}/{}: {} > {}",
+                algo.name(),
+                out.total_uploads,
+                afl.total_uploads
+            );
+        }
+    }
+}
+
+#[test]
+fn vafl_gates_but_everyone_still_reports_values() {
+    let out = experiments::run(&quick('b', Algorithm::Vafl, 6)).unwrap();
+    for r in &out.metrics.records {
+        // 7 value reports every round (68 bytes each) regardless of gating.
+        assert!(r.bytes_up >= 7 * 68);
+        assert_eq!(r.values.len(), 7);
+        assert_eq!(r.selected.len(), 7);
+        // Eq. 2 with >= mean selects at least one client.
+        assert!(r.uploads >= 1);
+    }
+    // ...and at least one round must gate someone out.
+    assert!(out.metrics.records.iter().any(|r| r.uploads < 7));
+}
+
+#[test]
+fn accuracy_improves_over_training_mock() {
+    let out = experiments::run(&quick('a', Algorithm::Vafl, 14)).unwrap();
+    let curve = out.metrics.acc_curve();
+    let early = curve[0].1;
+    let late = curve.last().unwrap().1;
+    assert!(
+        late > early + 0.2,
+        "no learning: {early} -> {late} ({curve:?})"
+    );
+}
+
+#[test]
+fn same_seed_same_run_different_seed_different_run() {
+    let a1 = experiments::run(&quick('c', Algorithm::Vafl, 4)).unwrap();
+    let a2 = experiments::run(&quick('c', Algorithm::Vafl, 4)).unwrap();
+    for (x, y) in a1.metrics.records.iter().zip(&a2.metrics.records) {
+        assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits());
+        assert_eq!(x.selected, y.selected);
+    }
+    let mut cfg = quick('c', Algorithm::Vafl, 4);
+    cfg.seed += 1;
+    let b = experiments::run(&cfg).unwrap();
+    let same = a1
+        .metrics
+        .records
+        .iter()
+        .zip(&b.metrics.records)
+        .all(|(x, y)| x.global_acc.to_bits() == y.global_acc.to_bits());
+    assert!(!same, "seed had no effect");
+}
+
+#[test]
+fn noniid_experiments_have_skewed_shards() {
+    // The d preset must actually produce label skew (Fig. 3 shape).
+    use vafl::data::stats::DistributionTable;
+    use vafl::data::synth::SynthConfig;
+    use vafl::util::rng::Rng;
+    let cfg = experiments::preset('d').unwrap();
+    let (shards, _) = vafl::data::partition(
+        cfg.partition,
+        cfg.num_clients,
+        200,
+        64,
+        &SynthConfig::default(),
+        &Rng::new(cfg.seed),
+    );
+    let t = DistributionTable::from_shards(&shards);
+    assert!(t.skewness() > 0.1, "skewness {}", t.skewness());
+    let labels = t.client_label_counts();
+    assert!(labels.iter().any(|&c| c == 10));
+    assert!(labels.iter().any(|&c| c <= 4));
+}
+
+#[test]
+fn virtual_time_reflects_device_heterogeneity() {
+    // The 4GB Pi (client 0) must finish later than the shared laptop
+    // clients on average -> positive idle time every round.
+    let out = experiments::run(&quick('b', Algorithm::Afl, 4)).unwrap();
+    for r in &out.metrics.records {
+        assert!(r.idle_seconds > 0.0);
+    }
+    assert!(out.total_vtime > 0.0);
+}
+
+#[test]
+fn table3_pipeline_end_to_end() {
+    let runs: Vec<_> = Algorithm::ALL
+        .iter()
+        .map(|&a| experiments::run(&quick('b', a, 6)).unwrap().metrics)
+        .collect();
+    let rows = table3::rows_for_experiment(&runs);
+    assert_eq!(rows.len(), 3);
+    assert_eq!(rows[0].algorithm, "afl");
+    assert_eq!(rows[0].ccr, 0.0);
+    let rendered = table3::render(&rows);
+    assert!(rendered.contains("vafl"));
+    let json = table3::to_json(&rows).to_string_compact();
+    assert!(json.contains("\"ccr\""));
+}
+
+#[test]
+fn figures_render_from_real_runs() {
+    let run = experiments::run(&quick('a', Algorithm::Vafl, 5)).unwrap();
+    let f4 = figures::fig4("a", std::slice::from_ref(&run.metrics));
+    assert!(f4.contains("[*] vafl"));
+    let f5 = figures::fig5("a", &run.metrics);
+    assert!(f5.contains("client1") && f5.contains("client3"));
+    let f6 = figures::fig6(std::slice::from_ref(&run.metrics));
+    assert!(f6.contains("Fig. 6"));
+}
+
+#[test]
+fn csv_outputs_parse_back() {
+    let run = experiments::run(&quick('a', Algorithm::Afl, 3)).unwrap();
+    let dir = std::env::temp_dir().join(format!("vafl-it-{}", std::process::id()));
+    let rounds = dir.join("rounds.csv");
+    let clients = dir.join("clients.csv");
+    write_rounds_csv(&run.metrics, &rounds).unwrap();
+    write_client_acc_csv(&run.metrics, &clients).unwrap();
+    let text = std::fs::read_to_string(&rounds).unwrap();
+    assert_eq!(text.lines().count(), 1 + 3);
+    let header = text.lines().next().unwrap();
+    let cols = header.split(',').count();
+    for line in text.lines().skip(1) {
+        assert_eq!(line.split(',').count(), cols, "{line}");
+    }
+    let ctext = std::fs::read_to_string(&clients).unwrap();
+    assert!(ctext.starts_with("round,client1,client2,client3"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_file_round_trip_drives_run() {
+    let dir = std::env::temp_dir().join(format!("vafl-cfg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+        name = "it"
+        algorithm = "vafl"
+        num_clients = 4
+        partition = "dirichlet"
+        dirichlet_alpha = 0.4
+        samples_per_client = 100
+        test_samples = 64
+        probe_samples = 32
+        rounds = 2
+        local_passes = 1
+        batches_per_pass = 2
+        target_acc = 0.5
+        [backend]
+        kind = "mock"
+        "#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_toml_file(&path).unwrap();
+    assert_eq!(cfg.partition, PartitionScheme::Dirichlet { alpha: 0.4 });
+    let out = experiments::run(&cfg).unwrap();
+    assert_eq!(out.metrics.records.len(), 2);
+    assert_eq!(out.metrics.records[0].client_accs.len(), 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eaflm_threshold_eventually_skips_on_mock() {
+    let mut cfg = quick('a', Algorithm::Eaflm, 10);
+    // Aggressive beta so laziness shows quickly on the mock model.
+    cfg.eaflm.beta = 0.0005;
+    let out = experiments::run(&cfg).unwrap();
+    assert!(
+        out.metrics.records.iter().any(|r| r.uploads < 3),
+        "eaflm never skipped: {:?}",
+        out.metrics
+            .records
+            .iter()
+            .map(|r| r.uploads)
+            .collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Extensions: dropout, payload quantization, staleness decay, threading
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropout_reduces_reports_but_run_completes() {
+    use vafl::coordinator::registry::DropoutModel;
+    let mut cfg = quick('b', Algorithm::Afl, 12);
+    cfg.dropout = DropoutModel::flaky(0.3);
+    let out = experiments::run(&cfg).unwrap();
+    // Some rounds must have fewer than 7 uploads because clients were down.
+    assert!(out.metrics.records.iter().any(|r| r.uploads < 7));
+    // Dropped clients appear as NaN accs in the record.
+    assert!(out
+        .metrics
+        .records
+        .iter()
+        .any(|r| r.client_accs.iter().any(|a| a.is_nan())));
+    // And the model still learns.
+    assert!(out.best_accuracy > 0.3, "{}", out.best_accuracy);
+}
+
+#[test]
+fn quantized_payloads_shrink_bytes_and_still_learn() {
+    use vafl::model::quant::Precision;
+    let mut f32_cfg = quick('a', Algorithm::Afl, 8);
+    f32_cfg.link.drop_prob = 0.0;
+    let full = experiments::run(&f32_cfg).unwrap();
+    let mut q_cfg = quick('a', Algorithm::Afl, 8);
+    q_cfg.link.drop_prob = 0.0;
+    q_cfg.upload_precision = Precision::Int8;
+    let quant = experiments::run(&q_cfg).unwrap();
+    let b_full: u64 = full.metrics.records.iter().map(|r| r.bytes_up).sum();
+    let b_quant: u64 = quant.metrics.records.iter().map(|r| r.bytes_up).sum();
+    assert!(
+        (b_quant as f64) < 0.35 * b_full as f64,
+        "int8 {b_quant} vs f32 {b_full}"
+    );
+    assert!(quant.best_accuracy > 0.5 * full.best_accuracy.max(0.1));
+}
+
+#[test]
+fn staleness_decay_changes_aggregation() {
+    let base = experiments::run(&quick('c', Algorithm::Vafl, 8)).unwrap();
+    let mut cfg = quick('c', Algorithm::Vafl, 8);
+    cfg.staleness_decay = Some(0.5);
+    let decayed = experiments::run(&cfg).unwrap();
+    // Same seed, same gates at round 1; aggregation weights diverge once
+    // staleness accumulates -> different curves by the end.
+    let same = base
+        .metrics
+        .records
+        .iter()
+        .zip(&decayed.metrics.records)
+        .all(|(x, y)| x.global_acc.to_bits() == y.global_acc.to_bits());
+    assert!(!same, "staleness decay had no effect");
+}
+
+#[test]
+fn threaded_round_matches_sequential_bitwise() {
+    use vafl::runtime::{ExecutorService, MockExecutor};
+    let cfg = quick('b', Algorithm::Vafl, 1);
+    let (mut seq_server, mut exec) = experiments::build(&cfg).unwrap();
+    let (mut thr_server, _exec2) = experiments::build(&cfg).unwrap();
+    let svc = ExecutorService::spawn(|| Ok(MockExecutor::standard())).unwrap();
+    for _ in 0..5 {
+        let a = seq_server.run_round(exec.as_mut()).unwrap();
+        let b = thr_server.run_round_threaded(&svc).unwrap();
+        assert_eq!(a.global_acc.to_bits(), b.global_acc.to_bits());
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.vtime.to_bits(), b.vtime.to_bits());
+        assert_eq!(a.bytes_up, b.bytes_up);
+    }
+    svc.shutdown();
+}

@@ -1,0 +1,246 @@
+//! Property-based tests over coordinator invariants (hand-rolled
+//! generator-driven properties — the offline crate set has no proptest;
+//! `Cases` below drives each property over many seeded random inputs and
+//! reports the failing seed, which reproduces deterministically).
+
+use vafl::config::{EaflmParams, ValueFnConfig};
+use vafl::coordinator::policy::{
+    AflPolicy, EaflmPolicy, PolicyContext, SelectionPolicy, VaflPolicy,
+};
+use vafl::fleet::ClientReport;
+use vafl::metrics::ccr;
+use vafl::model::{sq_distance, weighted_average};
+use vafl::netsim::{LinkProfile, Message};
+use vafl::sim::EventQueue;
+use vafl::util::rng::Rng;
+
+/// Mini property harness: run `prop` over `n` seeded cases; panic with the
+/// seed on failure.
+fn cases(n: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xBEEF_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_reports(rng: &mut Rng, n: usize) -> Vec<ClientReport> {
+    (0..n)
+        .map(|i| ClientReport {
+            client_id: i,
+            round: 1,
+            value: rng.f64() * 10.0,
+            acc: rng.f64(),
+            grad_norm_sq: rng.f64() * 5.0,
+            train_loss: rng.f64() * 3.0,
+            num_samples: 50 + rng.below(1000),
+            compute_seconds: rng.f64(),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_vafl_selects_nonempty_and_includes_max() {
+    // Eq. 2 (V_i >= mean V) always admits the maximum-V client, and the
+    // upload set is never empty.
+    cases(200, |rng| {
+        let n = 1 + rng.below(20);
+        let reports = random_reports(rng, n);
+        let ctx = PolicyContext { round: 1, n_clients: n, global_history: &[] };
+        let mut p = VaflPolicy { value_cfg: ValueFnConfig::default() };
+        let s = p.select(&reports, &ctx);
+        assert!(s.selected.iter().any(|&x| x));
+        let argmax = s
+            .values
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(s.selected[argmax]);
+    });
+}
+
+#[test]
+fn prop_vafl_selection_is_threshold_consistent() {
+    // selected[i] <-> values[i] >= threshold, exactly.
+    cases(200, |rng| {
+        let n = 1 + rng.below(16);
+        let reports = random_reports(rng, n);
+        let ctx = PolicyContext { round: 1, n_clients: n, global_history: &[] };
+        let mut p = VaflPolicy { value_cfg: ValueFnConfig::default() };
+        let s = p.select(&reports, &ctx);
+        for i in 0..n {
+            assert_eq!(s.selected[i], s.values[i] >= s.threshold, "client {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_afl_always_selects_all() {
+    cases(50, |rng| {
+        let n = 1 + rng.below(30);
+        let reports = random_reports(rng, n);
+        let ctx = PolicyContext { round: 1, n_clients: n, global_history: &[] };
+        let s = AflPolicy.select(&reports, &ctx);
+        assert!(s.selected.iter().all(|&x| x));
+    });
+}
+
+#[test]
+fn prop_eaflm_monotone_in_gradient_norm() {
+    // If client A is selected and B has a larger gradient norm, B must be
+    // selected too (the gate is a simple threshold).
+    cases(100, |rng| {
+        let n = 2 + rng.below(10);
+        let reports = random_reports(rng, n);
+        let dim = 1 + rng.below(32);
+        let h0: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let h1: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let hist = vec![h0, h1];
+        let ctx = PolicyContext { round: 3, n_clients: n, global_history: &hist };
+        let mut p = EaflmPolicy { params: EaflmParams::default() };
+        let s = p.select(&reports, &ctx);
+        for i in 0..n {
+            for j in 0..n {
+                if s.selected[i] && reports[j].grad_norm_sq > reports[i].grad_norm_sq {
+                    assert!(s.selected[j]);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_average_bounds_and_identity() {
+    // The average lies inside the coordinate-wise min/max envelope, and
+    // averaging identical models is the identity.
+    cases(100, |rng| {
+        let dim = 1 + rng.below(64);
+        let k = 1 + rng.below(6);
+        let models: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let weights: Vec<f64> = (0..k).map(|_| 1.0 + rng.f64() * 9.0).collect();
+        let avg = weighted_average(&refs, &weights);
+        for d in 0..dim {
+            let lo = models.iter().map(|m| m[d]).fold(f32::INFINITY, f32::min);
+            let hi = models.iter().map(|m| m[d]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                avg[d] >= lo - 1e-5 && avg[d] <= hi + 1e-5,
+                "dim {d}: {} not in [{lo}, {hi}]",
+                avg[d]
+            );
+        }
+        let same = weighted_average(&[&models[0], &models[0]], &[3.0, 5.0]);
+        for d in 0..dim {
+            assert!((same[d] - models[0][d]).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_sq_distance_metric_axioms() {
+    cases(100, |rng| {
+        let dim = 1 + rng.below(128);
+        let a: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        assert_eq!(sq_distance(&a, &a), 0.0);
+        let dab = sq_distance(&a, &b);
+        let dba = sq_distance(&b, &a);
+        assert!((dab - dba).abs() < 1e-9);
+        assert!(dab >= 0.0);
+    });
+}
+
+#[test]
+fn prop_event_queue_pops_sorted() {
+    cases(100, |rng| {
+        let mut q = EventQueue::new();
+        let n = 1 + rng.below(200);
+        for i in 0..n {
+            q.schedule_at(rng.f64() * 100.0, i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        while let Some(e) = q.pop() {
+            assert!(e.time >= last);
+            last = e.time;
+        }
+    });
+}
+
+#[test]
+fn prop_netsim_time_positive_and_scales_with_bytes() {
+    cases(100, |rng| {
+        let mut link = LinkProfile::paper_lan();
+        link.jitter_sigma = 0.0;
+        link.drop_prob = 0.0;
+        let small = 100 + rng.below(1000) as u64;
+        let big = small * (2 + rng.below(10) as u64);
+        let ts = link.transfer_seconds(&Message::ModelUpload { payload_bytes: small }, rng);
+        let tb = link.transfer_seconds(&Message::ModelUpload { payload_bytes: big }, rng);
+        assert!(ts > 0.0);
+        assert!(tb > ts);
+    });
+}
+
+#[test]
+fn prop_ccr_bounds() {
+    // CCR is <= 1, equals 0 for equal counts, and is negative when the
+    // "compressed" algorithm communicates more (possible for bad gates).
+    cases(100, |rng| {
+        let c0 = 1 + rng.below(500);
+        let c1 = 1 + rng.below(500);
+        let v = ccr(c0, c1);
+        assert!(v <= 1.0);
+        if c1 == c0 {
+            assert_eq!(v, 0.0);
+        }
+        if c1 > c0 {
+            assert!(v < 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_rng_fork_streams_do_not_collide() {
+    // Named forks of the same parent are pairwise different in their first
+    // 4 outputs (catches weak stream separation).
+    cases(50, |rng| {
+        let parent = Rng::new(rng.next_u64());
+        let labels = ["a", "b", "data", "net", "client-0", "client-1"];
+        let firsts: Vec<Vec<u64>> = labels
+            .iter()
+            .map(|l| {
+                let mut s = parent.fork(l);
+                (0..4).map(|_| s.next_u64()).collect()
+            })
+            .collect();
+        for i in 0..labels.len() {
+            for j in (i + 1)..labels.len() {
+                assert_ne!(firsts[i], firsts[j], "{} vs {}", labels[i], labels[j]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_amplification_monotone() {
+    // Eq. 1 amplification is monotone in raw value, acc, and N.
+    cases(100, |rng| {
+        use vafl::fleet::amplify_value;
+        let cfg = ValueFnConfig::default();
+        let raw = rng.f64() * 10.0;
+        let acc = rng.f64();
+        let n = 1 + rng.below(100);
+        let v = amplify_value(raw, acc, n, cfg);
+        assert!(amplify_value(raw * 2.0, acc, n, cfg) >= v);
+        assert!(amplify_value(raw, (acc + 0.1).min(1.0), n, cfg) >= v);
+        assert!(amplify_value(raw, acc, n + 10, cfg) >= v);
+        assert!(v >= raw); // base > 1, exponent >= 0
+    });
+}

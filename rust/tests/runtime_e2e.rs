@@ -1,0 +1,176 @@
+//! Runtime end-to-end tests against the real AOT artifacts through PJRT.
+//!
+//! These are skipped (with a notice) when `artifacts/` is absent, so
+//! `cargo test` works pre-`make artifacts`; CI and the recorded runs always
+//! build artifacts first.
+
+use vafl::model::{sq_distance, ParamSpec};
+use vafl::runtime::{evaluate_with_params, Executor, ExecutorService, PjrtRuntime};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/params_spec.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn spec_loads_and_validates() {
+    require_artifacts!();
+    let spec = ParamSpec::load("artifacts").unwrap();
+    assert_eq!(spec.input_dim, 784);
+    assert_eq!(spec.num_classes, 10);
+    assert_eq!(spec.batch_size, 32);
+    let init = spec.load_init_params().unwrap();
+    assert_eq!(init.len(), spec.param_count);
+    // He-init: finite, non-degenerate.
+    assert!(init.iter().all(|v| v.is_finite()));
+    assert!(init.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn train_step_descends_and_matches_sgd() {
+    require_artifacts!();
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let params = rt.spec().load_init_params().unwrap();
+    let (b, d) = (rt.batch_size(), rt.input_dim());
+    // A separable batch: class c has bright rows at c*2.
+    let mut x = vec![0.0f32; b * d];
+    let mut y = vec![0i32; b];
+    for i in 0..b {
+        let c = (i % 10) as i32;
+        y[i] = c;
+        for k in 0..56 {
+            x[i * d + (c as usize) * 56 + k] = 1.0;
+        }
+    }
+    let lr = 0.1f32;
+    let out = rt.train_step(&params, &x, &y, lr).unwrap();
+    assert_eq!(out.new_params.len(), params.len());
+    assert_eq!(out.grad.len(), params.len());
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    // SGD identity: new = params - lr*grad.
+    for i in (0..params.len()).step_by(97) {
+        let want = params[i] - lr * out.grad[i];
+        assert!(
+            (out.new_params[i] - want).abs() < 1e-5,
+            "i={i}: {} vs {want}",
+            out.new_params[i]
+        );
+    }
+    // Repeated steps on the same batch reduce loss.
+    let mut p = out.new_params.clone();
+    let mut last = out.loss;
+    for _ in 0..6 {
+        let o = rt.train_step(&p, &x, &y, lr).unwrap();
+        p = o.new_params;
+        last = o.loss;
+    }
+    assert!(last < out.loss, "{} !< {}", last, out.loss);
+}
+
+#[test]
+fn eval_step_counts_and_padding() {
+    require_artifacts!();
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let params = rt.spec().load_init_params().unwrap();
+    let (eb, d) = (rt.eval_batch(), rt.input_dim());
+    let x = vec![0.3f32; eb * d];
+    let all_pad = vec![-1i32; eb];
+    let out = rt.eval_step(&params, &x, &all_pad).unwrap();
+    assert_eq!(out.correct, 0.0);
+    assert_eq!(out.loss_sum, 0.0);
+    // Untrained model on one real label: loss_sum > 0.
+    let mut y = all_pad.clone();
+    y[0] = 4;
+    let out = rt.eval_step(&params, &x, &y).unwrap();
+    assert!(out.loss_sum > 0.0);
+    assert!(out.correct == 0.0 || out.correct == 1.0);
+}
+
+#[test]
+fn value_artifact_matches_rust_formula() {
+    require_artifacts!();
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let p = rt.param_count();
+    let g0: Vec<f32> = (0..p).map(|i| (i % 7) as f32 * 0.01).collect();
+    let g1: Vec<f32> = (0..p).map(|i| (i % 5) as f32 * 0.02).collect();
+    let (acc, n) = (0.87f32, 7.0f32);
+    let hlo = rt.value(&g0, &g1, acc, n).unwrap() as f64;
+    let rust = sq_distance(&g0, &g1) * (1.0 + n as f64 / 1000.0).powf(acc as f64);
+    let rel = (hlo - rust).abs() / rust.max(1e-9);
+    assert!(rel < 1e-4, "hlo {hlo} vs rust {rust}");
+}
+
+#[test]
+fn evaluate_with_params_streams_and_pads() {
+    require_artifacts!();
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let params = rt.spec().load_init_params().unwrap();
+    let d = rt.input_dim();
+    // 200 samples (one full chunk of 128 + padded tail of 72).
+    let n = 200;
+    let images = vec![0.5f32; n * d];
+    let labels: Vec<i32> = (0..n as i32).map(|i| i % 10).collect();
+    let (acc, loss) = evaluate_with_params(&mut rt, &params, &images, &labels).unwrap();
+    // Identical inputs -> one predicted class -> accuracy ~ its share.
+    assert!((0.0..=0.2).contains(&acc), "acc {acc}");
+    assert!(loss > 0.0 && loss.is_finite());
+}
+
+#[test]
+fn shape_mismatches_are_rejected() {
+    require_artifacts!();
+    let mut rt = PjrtRuntime::load("artifacts").unwrap();
+    let params = rt.spec().load_init_params().unwrap();
+    let (b, d) = (rt.batch_size(), rt.input_dim());
+    assert!(rt.train_step(&params[1..], &vec![0.0; b * d], &vec![0; b], 0.1).is_err());
+    assert!(rt.train_step(&params, &vec![0.0; b * d - 1], &vec![0; b], 0.1).is_err());
+    assert!(rt.eval_step(&params, &vec![0.0; 3], &vec![0; 3]).is_err());
+    assert!(rt.value(&params, &params[1..], 0.5, 3.0).is_err());
+}
+
+#[test]
+fn executor_service_wraps_pjrt_across_threads() {
+    require_artifacts!();
+    let svc = ExecutorService::spawn(|| PjrtRuntime::load("artifacts")).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        let mut h = svc.handle();
+        handles.push(std::thread::spawn(move || {
+            let p = vec![0.01f32; h.param_count()];
+            let x = vec![0.5f32; h.batch_size() * h.input_dim()];
+            let y = vec![(t % 10) as i32; h.batch_size()];
+            let out = h.train_step(&p, &x, &y, 0.05).unwrap();
+            assert!(out.loss.is_finite());
+            out.loss
+        }));
+    }
+    let losses: Vec<f32> = handles.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(losses.len(), 3);
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_experiment_smoke() {
+    // Two rounds of the real experiment pipeline end-to-end on PJRT.
+    require_artifacts!();
+    let mut cfg = vafl::experiments::preset('a').unwrap();
+    cfg.rounds = 2;
+    cfg.samples_per_client = 96;
+    cfg.test_samples = 128;
+    cfg.probe_samples = 64;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 1;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let out = vafl::experiments::run(&cfg).unwrap();
+    assert_eq!(out.metrics.records.len(), 2);
+    assert!(out.final_accuracy.is_finite());
+    assert!(out.total_uploads >= 2);
+}
