@@ -1,29 +1,74 @@
 //! Bench: L3 hot paths + the PJRT runtime — the numbers behind
 //! EXPERIMENTS.md §Perf.
 //!
-//!     cargo bench --bench perf_hotpath
+//!     cargo bench --bench perf_hotpath [-- --json]
 //!
 //! Sections:
 //!  1. coordinator primitives (aggregation, norms, value amplification)
 //!  2. simulation substrate (event queue, netsim, data generation)
 //!  3. PJRT runtime steps (skipped with VAFL_BENCH_MOCK=1 / no artifacts)
 //!  4. end-to-end mock round (coordinator overhead with compute ~free)
+//!  5. fused dequantize-aggregate vs naive round_trip-then-aggregate
+//!  6. parallel kernels: 1 vs N workers
+//!
+//! `--json` (or `VAFL_BENCH_JSON=1`) additionally writes every row to
+//! `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
 
 mod common;
 
 use vafl::config::ValueFnConfig;
 use vafl::coordinator::aggregate::Aggregator;
-use vafl::data::synth::{generate, SynthConfig};
+use vafl::data::synth::{generate, generate_t, SynthConfig};
 use vafl::fleet::amplify_value;
-use vafl::model::{l2_norm_sq, sq_distance};
+use vafl::model::quant::{Precision, QuantBuf};
+use vafl::model::{l2_norm_sq, sq_distance, weighted_average_into_t};
 use vafl::netsim::{LinkProfile, Message};
 use vafl::runtime::Executor;
 use vafl::sim::EventQueue;
+use vafl::util::json::{obj, Value};
 use vafl::util::rng::Rng;
-use vafl::util::timer::bench;
+use vafl::util::timer::{bench, BenchStats};
+
+/// Collects every bench row for the optional JSON artifact.
+#[derive(Default)]
+struct Recorder {
+    rows: Vec<(String, BenchStats)>,
+}
+
+impl Recorder {
+    fn emit(&mut self, name: &str, s: BenchStats) {
+        println!("{}", s.format_line(name));
+        self.rows.push((name.to_string(), s));
+    }
+
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|(name, s)| {
+                obj(vec![
+                    ("name", Value::Str(name.clone())),
+                    ("iters", Value::Num(s.iters as f64)),
+                    ("mean_ns", Value::Num(s.mean.as_nanos() as f64)),
+                    ("p50_ns", Value::Num(s.p50.as_nanos() as f64)),
+                    ("p95_ns", Value::Num(s.p95.as_nanos() as f64)),
+                    ("min_ns", Value::Num(s.min.as_nanos() as f64)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("bench", Value::Str("perf_hotpath".into())),
+            ("rows", Value::Arr(rows)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let p = 17290usize; // current artifact parameter count
+    let mut rec = Recorder::default();
+    let want_json = std::env::args().any(|a| a == "--json")
+        || std::env::var("VAFL_BENCH_JSON").is_ok();
 
     common::section("1. coordinator primitives");
     let mut rng = Rng::new(1);
@@ -35,16 +80,16 @@ fn main() -> anyhow::Result<()> {
     let mut out = vec![0.0f32; p];
     let mut agg = Aggregator::new();
     let s = bench(10, 200, || agg.aggregate(&refs, &weights, &mut out));
-    println!("{}", s.format_line(&format!("aggregate 7 x {p} params")));
+    rec.emit(&format!("aggregate 7 x {p} params"), s);
 
     let s = bench(10, 500, || sq_distance(&models[0], &models[1]));
-    println!("{}", s.format_line(&format!("sq_distance {p}")));
+    rec.emit(&format!("sq_distance {p}"), s);
     let s = bench(10, 500, || l2_norm_sq(&models[0]));
-    println!("{}", s.format_line(&format!("l2_norm_sq {p}")));
+    rec.emit(&format!("l2_norm_sq {p}"), s);
     let s = bench(10, 1000, || {
         amplify_value(1.5, 0.93, 7, ValueFnConfig::default())
     });
-    println!("{}", s.format_line("amplify_value (Eq. 1 server side)"));
+    rec.emit("amplify_value (Eq. 1 server side)", s);
 
     common::section("2. simulation substrate");
     let s = bench(5, 50, || {
@@ -54,16 +99,16 @@ fn main() -> anyhow::Result<()> {
         }
         while q.pop().is_some() {}
     });
-    println!("{}", s.format_line("event queue 10k schedule+pop"));
+    rec.emit("event queue 10k schedule+pop", s);
     let link = LinkProfile::paper_lan();
     let mut nrng = Rng::new(2);
     let msg = Message::ModelUpload { payload_bytes: 4 * p as u64 + 64 };
     let s = bench(10, 1000, || link.transfer_seconds(&msg, &mut nrng));
-    println!("{}", s.format_line("netsim transfer_seconds"));
+    rec.emit("netsim transfer_seconds", s);
     let synth = SynthConfig::default();
     let mut drng = Rng::new(3);
     let s = bench(2, 10, || generate(100, &synth, &mut drng));
-    println!("{}", s.format_line("synthdigits generate 100 images"));
+    rec.emit("synthdigits generate 100 images", s);
 
     common::section("3. PJRT runtime steps");
     if std::env::var("VAFL_BENCH_MOCK").is_err()
@@ -76,14 +121,14 @@ fn main() -> anyhow::Result<()> {
         let x = vec![0.5f32; b * d];
         let y: Vec<i32> = (0..b as i32).map(|i| i % 10).collect();
         let s = bench(3, 20, || rt.train_step(&params, &x, &y, 0.1).unwrap());
-        println!("{}", s.format_line(&format!("pjrt train_step B={b}")));
+        rec.emit(&format!("pjrt train_step B={b}"), s);
         let xe = vec![0.5f32; eb * d];
         let ye: Vec<i32> = (0..eb as i32).map(|i| i % 10).collect();
         let s = bench(2, 10, || rt.eval_step(&params, &xe, &ye).unwrap());
-        println!("{}", s.format_line(&format!("pjrt eval_step EB={eb}")));
+        rec.emit(&format!("pjrt eval_step EB={eb}"), s);
         let g = vec![0.1f32; pc];
         let s = bench(5, 50, || rt.value(&g, &params, 0.9, 7.0).unwrap());
-        println!("{}", s.format_line("pjrt value (Eq. 1 on artifact path)"));
+        rec.emit("pjrt value (Eq. 1 on artifact path)", s);
     } else {
         println!("skipped (no artifacts / VAFL_BENCH_MOCK set)");
     }
@@ -98,6 +143,68 @@ fn main() -> anyhow::Result<()> {
     vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
     let (mut server, mut exec) = vafl::experiments::build(&cfg)?;
     let s = bench(2, 20, || server.run_round(exec.as_mut()).unwrap());
-    println!("{}", s.format_line("full mock round, 7 clients"));
+    rec.emit("full mock round, 7 clients", s);
+
+    common::section("5. fused dequantize-aggregate vs naive round_trip");
+    // The old server path decoded every upload to a dense staging Vec
+    // (`round_trip`) and then aggregated it; the fused path encodes into
+    // reusable wire buffers and dequantizes-and-accumulates in one pass.
+    // Both timings include the encode/quantize half so they model one full
+    // server round over 7 uploads.
+    let fweights = vec![1000.0f64; 7];
+    let mut bufs = vec![QuantBuf::new(); 7];
+    let mut naive_scratch = Vec::new();
+    for prec in [Precision::Int8, Precision::F16, Precision::F32] {
+        let s_naive = bench(5, 100, || {
+            let staged: Vec<Vec<f32>> = models.iter().map(|m| prec.round_trip(m)).collect();
+            let views: Vec<&[f32]> = staged.iter().map(|u| u.as_slice()).collect();
+            weighted_average_into_t(&views, &fweights, &mut out, &mut naive_scratch, 1);
+        });
+        let s_fused = bench(5, 100, || {
+            for (b, m) in bufs.iter_mut().zip(&models) {
+                b.encode(prec, m);
+            }
+            agg.aggregate_payloads_t(&bufs, &fweights, &mut out, 1);
+        });
+        let speedup =
+            s_naive.mean.as_nanos() as f64 / s_fused.mean.as_nanos().max(1) as f64;
+        rec.emit(&format!("naive round_trip+aggregate 7x{p} {}", prec.name()), s_naive);
+        rec.emit(&format!("fused encode+aggregate   7x{p} {}", prec.name()), s_fused);
+        println!("    -> fused speedup ({}, 1 worker): {speedup:.2}x", prec.name());
+    }
+
+    common::section("6. parallel kernels: 1 vs N workers");
+    let max_t = vafl::util::par::max_threads().max(1);
+    let mut tlist: Vec<usize> = vec![1, 2, 4, max_t];
+    tlist.retain(|&t| t <= max_t);
+    tlist.sort_unstable();
+    tlist.dedup();
+    let mut scratch = Vec::new();
+    for &t in &tlist {
+        let s = bench(5, 100, || {
+            weighted_average_into_t(&refs, &fweights, &mut out, &mut scratch, t)
+        });
+        rec.emit(&format!("weighted_average_into 7x{p} (workers={t})"), s);
+    }
+    for (b, m) in bufs.iter_mut().zip(&models) {
+        b.encode(Precision::Int8, m);
+    }
+    for &t in &tlist {
+        let s = bench(5, 100, || {
+            agg.aggregate_payloads_t(&bufs, &fweights, &mut out, t)
+        });
+        rec.emit(&format!("fused aggregate int8 7x{p} (workers={t})"), s);
+    }
+    for &t in &tlist {
+        // Fresh RNG per invocation so every worker-count row renders the
+        // identical dataset (comparable rows in BENCH_hotpath.json).
+        let s = bench(1, 5, || generate_t(200, &synth, &mut Rng::new(3), t));
+        rec.emit(&format!("synthdigits generate 200 (workers={t})"), s);
+    }
+
+    if want_json {
+        rec.write_json("BENCH_hotpath.json")?;
+        println!("\nwrote BENCH_hotpath.json ({} rows)", rec.rows.len());
+    }
     Ok(())
 }

@@ -128,6 +128,10 @@ pub struct ExperimentConfig {
     /// FedAsync-style staleness decay for aggregation weights:
     /// w_i = n_i * decay^staleness_i. None = paper's plain n_i/n.
     pub staleness_decay: Option<f64>,
+    /// Worker threads for the parallel kernels (aggregation, data
+    /// generation, mock eval). 0 = auto: `VAFL_THREADS` env var, else the
+    /// machine's available parallelism. See `util::par`.
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -155,6 +159,7 @@ impl Default for ExperimentConfig {
             dropout: DropoutModel::none(),
             upload_precision: Precision::F32,
             staleness_decay: None,
+            threads: 0,
         }
     }
 }
@@ -319,6 +324,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("staleness_decay") {
             cfg.staleness_decay = Some(v);
         }
+        if let Some(v) = doc.get_i64("threads") {
+            cfg.threads = v.max(0) as usize;
+        }
         // [backend]
         match doc.get_str("backend.kind") {
             Some("mock") => cfg.backend = Backend::Mock,
@@ -378,6 +386,13 @@ mod tests {
         assert_eq!(cfg.link.drop_prob, 0.0);
         assert_eq!(cfg.eaflm.alpha, 0.9);
         assert_eq!(cfg.backend, Backend::Mock);
+    }
+
+    #[test]
+    fn threads_key_parses() {
+        let cfg = ExperimentConfig::from_toml("threads = 4\n[backend]\nkind = \"mock\"").unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(ExperimentConfig::default().threads, 0);
     }
 
     #[test]

@@ -1,14 +1,34 @@
 //! FedAvg aggregation (Algorithm 1 lines 15–16):
 //! `theta^{t+1} = sum_{i in K} (n_i / n) theta_i^{t+1}` over the uploaded
 //! models, weighted by local sample counts.
+//!
+//! Two entry families:
+//!
+//! * [`Aggregator::aggregate`] / [`Aggregator::aggregate_weighted`] — dense
+//!   f32 model views (tests, diagnostics, the allocating reference path).
+//! * [`Aggregator::aggregate_payloads`] — the hot path: wire-format
+//!   [`QuantBuf`] payloads are dequantized-and-accumulated in one fused
+//!   pass, fanned out across parameter chunks on scoped threads. No dense
+//!   staging vector is ever materialized and steady-state rounds perform
+//!   zero heap allocation (`tests/alloc_steady_state.rs` asserts this on
+//!   the serial path; the parallel path additionally allocates only thread
+//!   stacks at spawn).
 
+use crate::model::quant::QuantBuf;
 use crate::model::{weighted_average_into, ParamVec};
+use crate::util::par;
+
+/// Minimum parameter count per worker before fused aggregation fans out.
+const PAR_MIN_DIM: usize = 8192;
 
 /// Reusable aggregator (buffers survive across rounds — the hot path does
 /// not allocate; see EXPERIMENTS.md §Perf).
 #[derive(Default)]
 pub struct Aggregator {
     scratch: Vec<f64>,
+    /// Cached weight buffer: `aggregate` reuses it instead of collecting a
+    /// fresh `Vec<f64>` every round.
+    weights: Vec<f64>,
 }
 
 impl Aggregator {
@@ -21,8 +41,9 @@ impl Aggregator {
     /// Panics if `models` is empty — the server must skip aggregation on
     /// rounds where nothing was uploaded (possible under EAFLM).
     pub fn aggregate(&mut self, models: &[&[f32]], sample_counts: &[usize], out: &mut ParamVec) {
-        let weights: Vec<f64> = sample_counts.iter().map(|&n| n as f64).collect();
-        weighted_average_into(models, &weights, out, &mut self.scratch);
+        self.weights.clear();
+        self.weights.extend(sample_counts.iter().map(|&n| n as f64));
+        weighted_average_into(models, &self.weights, out, &mut self.scratch);
     }
 
     /// Aggregate with arbitrary positive weights (n_i, possibly decayed by
@@ -30,11 +51,56 @@ impl Aggregator {
     pub fn aggregate_weighted(&mut self, models: &[&[f32]], weights: &[f64], out: &mut ParamVec) {
         weighted_average_into(models, weights, out, &mut self.scratch);
     }
+
+    /// Fused hot path: aggregate quantized wire payloads straight into
+    /// `out`, dequantizing on the fly — no per-upload `round_trip`
+    /// staging vector. Weights are normalized internally.
+    ///
+    /// Bit-identical to decoding every payload with
+    /// [`crate::model::quant::Precision::round_trip`] and then calling
+    /// [`aggregate_weighted`](Self::aggregate_weighted) (property-tested in
+    /// `tests/proptests.rs`).
+    pub fn aggregate_payloads(&mut self, payloads: &[QuantBuf], weights: &[f64], out: &mut [f32]) {
+        let threads = par::threads_for(out.len(), PAR_MIN_DIM);
+        self.aggregate_payloads_t(payloads, weights, out, threads);
+    }
+
+    /// Explicit-worker-count variant of [`aggregate_payloads`](Self::aggregate_payloads)
+    /// (benches and thread-count equivalence tests). `threads == 1` is
+    /// serial and allocation-free at steady state.
+    pub fn aggregate_payloads_t(
+        &mut self,
+        payloads: &[QuantBuf],
+        weights: &[f64],
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        assert!(!payloads.is_empty(), "aggregate of zero payloads");
+        assert_eq!(payloads.len(), weights.len(), "payloads/weights length mismatch");
+        let dim = payloads[0].len();
+        for p in payloads {
+            assert_eq!(p.len(), dim, "payload dimension mismatch");
+        }
+        assert_eq!(out.len(), dim, "output dimension mismatch");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must sum to a positive value");
+        self.scratch.clear();
+        self.scratch.resize(dim, 0.0);
+        par::par_chunks_mut(self.scratch.as_mut_slice(), threads, 8, |start, acc| {
+            for (p, &w) in payloads.iter().zip(weights) {
+                p.accumulate_dequant_range(start, w / total, acc);
+            }
+        });
+        for (o, &a) in out.iter_mut().zip(self.scratch.iter()) {
+            *o = a as f32;
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::quant::Precision;
 
     #[test]
     fn weights_by_sample_count() {
@@ -59,10 +125,36 @@ mod tests {
     }
 
     #[test]
+    fn payload_aggregation_matches_dense_f32() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..37).map(|i| (36 - i) as f32 * -0.5).collect();
+        let weights = [3.0f64, 1.0];
+        let mut agg = Aggregator::new();
+        let mut want = vec![0.0f32; 37];
+        agg.aggregate_weighted(&[&a, &b], &weights, &mut want);
+        let mut bufs = vec![QuantBuf::new(), QuantBuf::new()];
+        bufs[0].encode(Precision::F32, &a);
+        bufs[1].encode(Precision::F32, &b);
+        let mut got = vec![0.0f32; 37];
+        agg.aggregate_payloads(&bufs, &weights, &mut got);
+        for (x, y) in got.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn empty_upload_set_panics() {
         let mut agg = Aggregator::new();
         let mut out = vec![0.0f32; 1];
         agg.aggregate(&[], &[], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero payloads")]
+    fn empty_payload_set_panics() {
+        let mut agg = Aggregator::new();
+        let mut out = vec![0.0f32; 1];
+        agg.aggregate_payloads(&[], &[], &mut out);
     }
 }

@@ -26,7 +26,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::Aggregator;
 use crate::coordinator::policy::{PolicyContext, SelectionPolicy};
 use crate::coordinator::registry::ClientRegistry;
-use crate::model::quant::Precision;
+use crate::model::quant::{Precision, QuantBuf};
 use crate::data::synth::Dataset;
 use crate::fleet::{Client, ClientReport};
 use crate::metrics::{RoundRecord, RunMetrics};
@@ -57,7 +57,19 @@ pub struct Server {
     pub global: ParamVec,
     /// Recent global models, oldest first (bounded by the policy's needs).
     history: Vec<Vec<f32>>,
+    /// Retired history buffers, recycled so steady-state rounds do not
+    /// allocate (see EXPERIMENTS.md §Perf).
+    history_pool: Vec<Vec<f32>>,
     agg: Aggregator,
+    /// Reusable per-upload wire buffers (one per fleet slot) — uploads are
+    /// encoded here and aggregated by the fused dequantize-accumulate
+    /// path, never staged as dense `Vec<f32>`.
+    upload_bufs: Vec<QuantBuf>,
+    /// Reusable FedAvg weight buffer for the selected upload set.
+    upload_weights: Vec<f64>,
+    /// Reusable broadcast codec buffer + decoded broadcast model.
+    bcast_buf: QuantBuf,
+    bcast_model: Vec<f32>,
     queue: EventQueue<usize>,
     net_rng: Rng,
     pub metrics: RunMetrics,
@@ -77,8 +89,8 @@ impl Server {
     ) -> Self {
         let metrics = RunMetrics::new(&cfg.name, policy.name(), cfg.target_acc);
         let history = vec![init_params.clone()];
-        let registry =
-            ClientRegistry::new(clients.len(), cfg.dropout, root_rng.fork("dropout"));
+        let n_clients = clients.len();
+        let registry = ClientRegistry::new(n_clients, cfg.dropout, root_rng.fork("dropout"));
         Server {
             net_rng: root_rng.fork("netsim"),
             registry,
@@ -88,7 +100,12 @@ impl Server {
             policy,
             global: init_params,
             history,
+            history_pool: Vec::new(),
             agg: Aggregator::new(),
+            upload_bufs: vec![QuantBuf::new(); n_clients],
+            upload_weights: Vec::with_capacity(n_clients),
+            bcast_buf: QuantBuf::new(),
+            bcast_model: Vec::new(),
             queue: EventQueue::new(),
             metrics,
             round: 0,
@@ -253,13 +270,18 @@ impl Server {
 
         // --- 3. Upload + aggregate (lines 15-16). Uploads cross the wire
         // at the configured precision (extension; f32 = the paper) and the
-        // server aggregates what it actually received.
+        // server aggregates exactly what it received: each selected client
+        // encodes into a reusable wire buffer and the fused
+        // dequantize-accumulate path consumes the payload bytes directly —
+        // no per-upload `round_trip` staging Vec, and zero steady-state
+        // heap allocation with serial kernels (even f32 goes through the
+        // codec, which for f32 is a byte-exact memcpy).
         let mut agg_time = last_arrival;
         if n_selected > 0 {
             let payload = self.ctx.model_payload_bytes;
             let precision = self.cfg.upload_precision;
-            let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n_selected);
-            let mut weights: Vec<f64> = Vec::with_capacity(n_selected);
+            self.upload_weights.clear();
+            let mut used = 0usize;
             for (i, client) in self.clients.iter().enumerate() {
                 if fleet_selected[i] {
                     let req = self
@@ -273,31 +295,37 @@ impl Server {
                     agg_time = agg_time.max(last_arrival + req + up);
                     bytes_down += Message::UploadRequest.bytes();
                     bytes_up += payload;
-                    uploads.push(if precision == Precision::F32 {
-                        client.params.clone()
-                    } else {
-                        precision.round_trip(&client.params)
-                    });
+                    client.encode_upload(precision, &mut self.upload_bufs[used]);
                     // FedAvg weight n_i, optionally decayed by staleness
                     // (FedAsync-style extension; None = paper's Alg. 1).
                     let decay = self
                         .cfg
                         .staleness_decay
                         .map_or(1.0, |d| d.powi(client.staleness as i32));
-                    weights.push(client.num_samples() as f64 * decay);
+                    self.upload_weights.push(client.num_samples() as f64 * decay);
+                    used += 1;
                 }
             }
-            let views: Vec<&[f32]> = uploads.iter().map(|u| u.as_slice()).collect();
-            self.agg.aggregate_weighted(&views, &weights, &mut self.global);
+            self.agg.aggregate_payloads(
+                &self.upload_bufs[..used],
+                &self.upload_weights,
+                &mut self.global,
+            );
         }
         self.queue.advance_to(agg_time);
 
         // --- 4. Broadcast to participants; skipped clients go stale.
-        // The broadcast also crosses the wire at the configured precision.
-        let bcast_model = if self.cfg.upload_precision == Precision::F32 {
+        // The broadcast also crosses the wire at the configured precision;
+        // the codec runs once per round into reusable buffers.
+        let bcast_model: Option<&[f32]> = if self.cfg.upload_precision == Precision::F32 {
             None
         } else {
-            Some(self.cfg.upload_precision.round_trip(&self.global))
+            self.bcast_buf.encode(self.cfg.upload_precision, &self.global);
+            // No clear(): after round 1 the resize is a no-op and
+            // decode_into overwrites every element anyway.
+            self.bcast_model.resize(self.global.len(), 0.0);
+            self.bcast_buf.decode_into(&mut self.bcast_model);
+            Some(&self.bcast_model)
         };
         let mut bcast_done = agg_time;
         for (i, client) in self.clients.iter_mut().enumerate() {
@@ -310,19 +338,23 @@ impl Server {
                 );
                 bcast_done = bcast_done.max(agg_time + down);
                 bytes_down += self.ctx.model_payload_bytes;
-                client.sync(bcast_model.as_deref().unwrap_or(&self.global));
+                client.sync(bcast_model.unwrap_or(&self.global));
             } else if self.registry.is_active(i) {
                 client.mark_stale();
             }
         }
         self.queue.advance_to(bcast_done);
 
-        // Bound the history to what the policy needs (plus the current).
-        self.history.push(self.global.clone());
+        // Bound the history to what the policy needs (plus the current);
+        // retired entries are recycled through `history_pool`, so the
+        // steady-state round never allocates here.
+        let mut entry = self.history_pool.pop().unwrap_or_default();
+        entry.clear();
+        entry.extend_from_slice(&self.global);
+        self.history.push(entry);
         let keep = self.policy.history_depth().max(1) + 1;
-        if self.history.len() > keep {
-            let drop = self.history.len() - keep;
-            self.history.drain(..drop);
+        while self.history.len() > keep {
+            self.history_pool.push(self.history.remove(0));
         }
 
         // --- 5. Evaluate + record.

@@ -231,15 +231,37 @@ fn dist2_to_segment(x: f32, y: f32, s: &Seg) -> f32 {
 
 /// Generate `n` samples with labels drawn uniformly (balanced in
 /// expectation), deterministic in `rng`.
+///
+/// Rendering fans out across scoped threads ([`crate::util::par`]): a
+/// serial prologue draws the label stream and one SplitMix-derived seed per
+/// sample from `rng`, then each sample rasterizes from its own stream into
+/// its disjoint slice of the image buffer — so the dataset is bit-identical
+/// for every worker count.
 pub fn generate(n: usize, cfg: &SynthConfig, rng: &mut Rng) -> Dataset {
+    generate_t(n, cfg, rng, crate::util::par::threads_for(n, 16))
+}
+
+/// Explicit-worker-count variant of [`generate`] (benches and the
+/// thread-count equivalence property tests).
+pub fn generate_t(n: usize, cfg: &SynthConfig, rng: &mut Rng, threads: usize) -> Dataset {
     let d = cfg.image_dim * cfg.image_dim;
     let mut images = vec![0.0f32; n * d];
     let mut labels = vec![0i32; n];
-    for i in 0..n {
-        let digit = rng.below(10);
-        labels[i] = digit as i32;
-        render(digit, cfg, rng, &mut images[i * d..(i + 1) * d]);
+    let mut seeds = Vec::with_capacity(n);
+    for lab in labels.iter_mut() {
+        *lab = rng.below(10) as i32;
+        seeds.push(rng.next_u64());
     }
+    let labels_ref = &labels;
+    let seeds_ref = &seeds;
+    crate::util::par::par_chunks_mut(&mut images, threads, d, move |start, chunk| {
+        let first = start / d;
+        for (j, out) in chunk.chunks_mut(d).enumerate() {
+            let i = first + j;
+            let mut srng = Rng::new(seeds_ref[i]);
+            render(labels_ref[i] as usize, cfg, &mut srng, out);
+        }
+    });
     Dataset { images, labels, dim: cfg.image_dim }
 }
 
@@ -278,6 +300,17 @@ mod tests {
         assert_eq!(a.images, b.images);
         let c = generate(20, &cfg, &mut Rng::new(2));
         assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn generation_identical_for_every_worker_count() {
+        let cfg = SynthConfig::default();
+        let base = generate_t(33, &cfg, &mut Rng::new(11), 1);
+        for threads in 2..=8 {
+            let ds = generate_t(33, &cfg, &mut Rng::new(11), threads);
+            assert_eq!(ds.labels, base.labels, "threads={threads}");
+            assert_eq!(ds.images, base.images, "threads={threads}");
+        }
     }
 
     #[test]

@@ -81,6 +81,10 @@ impl Outcome {
 /// benches all go through this).
 pub fn build(cfg: &ExperimentConfig) -> Result<(Server, Box<dyn Executor>)> {
     cfg.validate()?;
+    // Unconditional: threads = 0 *clears* the process-wide override back
+    // to auto, so a later experiment never inherits a stale cap from an
+    // earlier config in the same process.
+    crate::util::par::set_max_threads(cfg.threads);
     let synth_cfg = SynthConfig { pixel_noise: cfg.pixel_noise, ..Default::default() };
     let root_rng = Rng::new(cfg.seed);
     let (shards, test) = partition(

@@ -8,6 +8,7 @@ use anyhow::Result;
 use crate::config::ValueFnConfig;
 use crate::data::{Batcher, ClientShard};
 use crate::device::DeviceProfile;
+use crate::model::quant::{Precision, QuantBuf};
 use crate::model::{sq_distance, ParamVec};
 use crate::runtime::{evaluate_with_params, Executor};
 use crate::util::rng::Rng;
@@ -92,6 +93,13 @@ impl Client {
     /// Mark a round where this client kept its local model.
     pub fn mark_stale(&mut self) {
         self.staleness += 1;
+    }
+
+    /// Encode this client's local model into the reusable wire buffer
+    /// `buf` at `precision` — the upload payload the server consumes via
+    /// the fused dequantize-accumulate path (no dense staging vector).
+    pub fn encode_upload(&self, precision: Precision, buf: &mut QuantBuf) {
+        buf.encode(precision, &self.params);
     }
 
     /// Run one local round (Algorithm 1 lines 19–26): `passes x batches`
@@ -246,6 +254,23 @@ mod tests {
         c.sync(&g);
         assert_eq!(c.staleness, 0);
         assert_eq!(c.params, g);
+    }
+
+    #[test]
+    fn encode_upload_round_trips_wire_payload() {
+        let (mut c, mut exec) = mk_client(4);
+        c.local_round(&mut exec, 1, 1, 2, 0.2, 1, 1).unwrap();
+        let mut buf = QuantBuf::new();
+        for precision in [Precision::F32, Precision::F16, Precision::Int8] {
+            c.encode_upload(precision, &mut buf);
+            assert_eq!(buf.len(), c.params.len());
+            let want = precision.round_trip(&c.params);
+            let mut got = vec![0.0f32; c.params.len()];
+            buf.decode_into(&mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", precision.name());
+            }
+        }
     }
 
     #[test]

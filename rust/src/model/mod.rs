@@ -9,7 +9,9 @@ pub mod quant;
 pub mod spec;
 pub mod vector;
 
+pub use quant::{Precision, QuantBuf};
 pub use spec::{LayerSpec, ParamSpec};
 pub use vector::{
-    axpy, l2_norm_sq, sq_distance, weighted_average, weighted_average_into, ParamVec,
+    axpy, l2_norm_sq, sq_distance, weighted_average, weighted_average_into,
+    weighted_average_into_t, ParamVec,
 };

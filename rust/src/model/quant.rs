@@ -4,8 +4,21 @@
 //! compression; this module implements the standard lossy payload codecs —
 //! IEEE half precision (f16) and symmetric per-tensor int8 — so the
 //! framework can trade accuracy for wire bytes (`upload_precision` in the
-//! config, `ablation` benches). Codec error bounds are tested; the server
-//! dequantizes before aggregation so the coordinator math stays in f32.
+//! config, `ablation` benches).
+//!
+//! Two consumption paths exist:
+//!
+//! * [`Precision::round_trip`] — the naive reference: decode every payload
+//!   to a dense `Vec<f32>` before aggregation. Allocates one full vector
+//!   per upload per round; kept as the semantic oracle for the fused path.
+//! * [`QuantBuf`] — the hot path: clients encode into reusable wire-format
+//!   byte buffers, and the server *dequantizes-and-accumulates in one
+//!   fused pass* ([`QuantBuf::accumulate_dequant`]) straight out of the
+//!   payload bytes into the aggregator's f64 accumulator. No staging
+//!   vector ever exists, and steady-state rounds perform zero heap
+//!   allocation (see EXPERIMENTS.md §Perf). The fused pass is bit-identical
+//!   to the reference path by construction: each lane computes exactly
+//!   `weight * (reconstructed_f32 as f64)` in index order.
 
 /// Wire precision of a model payload.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +65,159 @@ impl Precision {
             Precision::Int8 => {
                 let (q, scale) = quantize_int8(params);
                 dequantize_int8(&q, scale)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming wire buffers (the fused hot path)
+// ---------------------------------------------------------------------------
+
+/// A reusable wire-format payload buffer.
+///
+/// [`QuantBuf::encode`] quantizes a parameter vector into the internal byte
+/// buffer, reusing its capacity across rounds, and the `accumulate_*` /
+/// [`QuantBuf::decode_into`] methods consume the payload without ever
+/// materializing an intermediate dense `Vec<f32>`. Layout: f32/f16 payloads
+/// are little-endian words; int8 payloads are raw bytes plus the symmetric
+/// [`QuantBuf::scale`].
+#[derive(Debug, Clone)]
+pub struct QuantBuf {
+    precision: Precision,
+    data: Vec<u8>,
+    scale: f32,
+    n: usize,
+}
+
+impl Default for QuantBuf {
+    fn default() -> Self {
+        QuantBuf { precision: Precision::F32, data: Vec::new(), scale: 1.0, n: 0 }
+    }
+}
+
+impl QuantBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wire precision of the currently encoded payload.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Number of encoded parameters.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Symmetric int8 scale (1.0 for f32/f16 payloads).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Wire size of this payload (body + the 64-byte frame header).
+    pub fn payload_bytes(&self) -> u64 {
+        self.precision.payload_bytes(self.n)
+    }
+
+    /// Encode `params` at `precision` into the reusable byte buffer.
+    /// Allocation-free once the buffer has grown to its steady-state size.
+    pub fn encode(&mut self, precision: Precision, params: &[f32]) {
+        self.precision = precision;
+        self.n = params.len();
+        self.scale = 1.0;
+        self.data.clear();
+        match precision {
+            Precision::F32 => {
+                self.data.reserve(4 * params.len());
+                for &v in params {
+                    self.data.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Precision::F16 => {
+                self.data.reserve(2 * params.len());
+                for &v in params {
+                    self.data.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+                }
+            }
+            Precision::Int8 => {
+                self.scale = int8_scale(params);
+                self.data.reserve(params.len());
+                for &v in params {
+                    self.data.push(int8_quantize_one(v, self.scale) as u8);
+                }
+            }
+        }
+    }
+
+    /// Fused dequantize-accumulate over the whole payload:
+    /// `acc[i] += weight * dequant(i)` in one pass, no staging vector.
+    ///
+    /// Bit-identical to `round_trip` + f64 weighted accumulation: each lane
+    /// performs exactly `weight * (reconstructed_f32 as f64)` in index
+    /// order.
+    pub fn accumulate_dequant(&self, weight: f64, acc: &mut [f64]) {
+        assert_eq!(acc.len(), self.n, "accumulator length mismatch");
+        self.accumulate_dequant_range(0, weight, acc);
+    }
+
+    /// Fused dequantize-accumulate over params `start .. start + acc.len()`
+    /// (the per-worker span of a parallel aggregation; see
+    /// `coordinator::aggregate`).
+    pub fn accumulate_dequant_range(&self, start: usize, weight: f64, acc: &mut [f64]) {
+        let end = start + acc.len();
+        assert!(end <= self.n, "range {start}..{end} out of payload len {}", self.n);
+        match self.precision {
+            Precision::F32 => {
+                let bytes = &self.data[4 * start..4 * end];
+                for (a, w) in acc.iter_mut().zip(bytes.chunks_exact(4)) {
+                    let v = f32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+                    *a += weight * v as f64;
+                }
+            }
+            Precision::F16 => {
+                let bytes = &self.data[2 * start..2 * end];
+                for (a, w) in acc.iter_mut().zip(bytes.chunks_exact(2)) {
+                    let v = f16_to_f32(u16::from_le_bytes([w[0], w[1]]));
+                    *a += weight * v as f64;
+                }
+            }
+            Precision::Int8 => {
+                let scale = self.scale;
+                let bytes = &self.data[start..end];
+                for (a, &b) in acc.iter_mut().zip(bytes) {
+                    let v = (b as i8) as f32 * scale;
+                    *a += weight * v as f64;
+                }
+            }
+        }
+    }
+
+    /// Decode the whole payload into `out` (the broadcast receive path;
+    /// reuses the caller's buffer instead of allocating).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n, "decode buffer length mismatch");
+        match self.precision {
+            Precision::F32 => {
+                for (o, w) in out.iter_mut().zip(self.data.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+                }
+            }
+            Precision::F16 => {
+                for (o, w) in out.iter_mut().zip(self.data.chunks_exact(2)) {
+                    *o = f16_to_f32(u16::from_le_bytes([w[0], w[1]]));
+                }
+            }
+            Precision::Int8 => {
+                let scale = self.scale;
+                for (o, &b) in out.iter_mut().zip(&self.data) {
+                    *o = (b as i8) as f32 * scale;
+                }
             }
         }
     }
@@ -137,14 +303,44 @@ pub fn f16_to_f32(h: u16) -> f32 {
 // Symmetric per-tensor int8
 // ---------------------------------------------------------------------------
 
+/// Symmetric per-tensor scale (max-abs / 127) over the *finite* entries of
+/// `params`. `f32::max` silently ignores a NaN operand and an infinity
+/// would poison the scale (everything else dequantizes to 0), so
+/// non-finite values are excluded here and handled per-element in
+/// [`int8_quantize_one`].
+pub fn int8_scale(params: &[f32]) -> f32 {
+    let mut max_abs = 0.0f32;
+    for &v in params {
+        if v.is_finite() {
+            max_abs = max_abs.max(v.abs());
+        }
+    }
+    if max_abs > 0.0 {
+        max_abs / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value at `scale`: NaN maps to 0, +/-infinity (and any
+/// finite overflow) saturates to +/-127.
+#[inline]
+pub fn int8_quantize_one(v: f32, scale: f32) -> i8 {
+    if v.is_nan() {
+        return 0;
+    }
+    // `clamp` handles +/-inf; the float->int cast cannot hit NaN here.
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
 /// Quantize to int8 with a single symmetric scale (max-abs / 127).
+///
+/// Non-finite inputs have documented, tested behavior: the scale is
+/// computed over finite values only, NaN quantizes to 0, and +/-infinity
+/// saturate to +/-127 (see `int8_scale` / `int8_quantize_one`).
 pub fn quantize_int8(params: &[f32]) -> (Vec<i8>, f32) {
-    let max_abs = params.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
-    let q = params
-        .iter()
-        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
-        .collect();
+    let scale = int8_scale(params);
+    let q = params.iter().map(|&v| int8_quantize_one(v, scale)).collect();
     (q, scale)
 }
 
@@ -237,6 +433,84 @@ mod tests {
         for (a, b) in params.iter().zip(&q) {
             assert!((a - b).abs() < 0.02);
         }
+    }
+
+    #[test]
+    fn int8_nonfinite_inputs() {
+        let v = [1.0f32, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -2.0];
+        let (q, scale) = quantize_int8(&v);
+        // Scale comes from the finite entries only (max abs 2.0).
+        assert_eq!(scale, 2.0 / 127.0);
+        assert_eq!(q[1], 0, "NaN must quantize to 0");
+        assert_eq!(q[2], 127, "+inf must saturate");
+        assert_eq!(q[3], -127, "-inf must saturate");
+        // All-non-finite input: scale falls back to 1.0, output is defined.
+        let (q2, scale2) = quantize_int8(&[f32::NAN, f32::INFINITY]);
+        assert_eq!(scale2, 1.0);
+        assert_eq!(q2, vec![0, 127]);
+    }
+
+    #[test]
+    fn quantbuf_decode_matches_round_trip() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let params: Vec<f32> = (0..257).map(|_| rng.gauss() as f32).collect();
+        let mut buf = QuantBuf::new();
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            buf.encode(p, &params);
+            assert_eq!(buf.len(), params.len());
+            assert_eq!(buf.precision(), p);
+            assert_eq!(buf.payload_bytes(), p.payload_bytes(params.len()));
+            let want = p.round_trip(&params);
+            let mut got = vec![0.0f32; params.len()];
+            buf.decode_into(&mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn quantbuf_fused_accumulate_is_bit_identical_to_staged() {
+        let mut rng = crate::util::rng::Rng::new(10);
+        let params: Vec<f32> = (0..100).map(|_| rng.gauss() as f32 * 3.0).collect();
+        let mut buf = QuantBuf::new();
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            buf.encode(p, &params);
+            let w = 0.3728_f64;
+            // Staged reference: decode to dense, then accumulate.
+            let staged = p.round_trip(&params);
+            let mut want = vec![0.25f64; params.len()];
+            for (a, &v) in want.iter_mut().zip(&staged) {
+                *a += w * v as f64;
+            }
+            // Fused: straight out of the payload bytes.
+            let mut got = vec![0.25f64; params.len()];
+            buf.accumulate_dequant(w, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", p.name());
+            }
+            // Range variant covers split accumulation (parallel spans).
+            let mut split = vec![0.25f64; params.len()];
+            let (lo, hi) = split.split_at_mut(37);
+            buf.accumulate_dequant_range(0, w, lo);
+            buf.accumulate_dequant_range(37, w, hi);
+            for (a, b) in split.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} (split)", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn quantbuf_reuse_shrinks_and_regrows() {
+        let mut buf = QuantBuf::new();
+        buf.encode(Precision::F32, &[1.0, 2.0, 3.0]);
+        assert_eq!(buf.len(), 3);
+        buf.encode(Precision::Int8, &[0.5]);
+        assert_eq!(buf.len(), 1);
+        let mut out = vec![0.0f32; 1];
+        buf.decode_into(&mut out);
+        assert!((out[0] - 0.5).abs() < 0.01);
+        assert!(!buf.is_empty());
     }
 
     #[test]

@@ -1,37 +1,94 @@
 //! Dense `f32` vector math on the coordinator hot path.
 //!
 //! Aggregation (`weighted_average`) and the EAFLM/VAFL norms run every
-//! round over every participating model, so these are written to
-//! auto-vectorize: flat slices, no bounds checks in the inner loops
-//! (chunked iterators), f64 accumulation for numerical stability.
+//! round over every participating model, so the inner loops are written as
+//! `chunks_exact(8)` + explicit remainder: eight independent accumulator
+//! lanes, no bounds checks, f64 accumulation for numerical stability — a
+//! shape LLVM reliably auto-vectorizes. The averaging kernels additionally
+//! fan out across parameter chunks on scoped threads (`util::par`);
+//! because every output index sees exactly the same operations in the same
+//! order regardless of the split, results are bit-identical for every
+//! worker count (asserted in `tests/proptests.rs`).
 
 /// A model parameter vector (opaque to the coordinator).
 pub type ParamVec = Vec<f32>;
 
-/// Squared L2 norm, accumulated in f64.
+/// Minimum parameter count per worker before the averaging kernels fan out
+/// (below this, spawn cost dominates and the call stays serial and
+/// allocation-free).
+const PAR_MIN_DIM: usize = 8192;
+
+/// Squared L2 norm, accumulated in f64 over eight lanes.
+///
+/// Lane order is fixed, so the result is deterministic (though the
+/// reduction tree differs from a strictly sequential sum).
 pub fn l2_norm_sq(x: &[f32]) -> f64 {
-    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    let mut lanes = [0.0f64; 8];
+    let mut chunks = x.chunks_exact(8);
+    for c in chunks.by_ref() {
+        for (l, &v) in lanes.iter_mut().zip(c) {
+            *l += v as f64 * v as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for &v in chunks.remainder() {
+        tail += v as f64 * v as f64;
+    }
+    lanes.iter().sum::<f64>() + tail
 }
 
-/// Squared L2 distance `||a - b||^2`, accumulated in f64.
+/// Squared L2 distance `||a - b||^2`, accumulated in f64 over eight lanes.
 ///
 /// This is the `||grad_prev - grad||^2` factor of the paper's Eq. 1.
 pub fn sq_distance(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len(), "sq_distance length mismatch");
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| {
+    let mut lanes = [0.0f64; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (x8, y8) in ca.by_ref().zip(cb.by_ref()) {
+        for (l, (&x, &y)) in lanes.iter_mut().zip(x8.iter().zip(y8)) {
             let d = x as f64 - y as f64;
-            d * d
-        })
-        .sum()
+            *l += d * d;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x as f64 - y as f64;
+        tail += d * d;
+    }
+    lanes.iter().sum::<f64>() + tail
 }
 
 /// `y += alpha * x` (SGD-style update, mixing, etc.).
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len(), "axpy length mismatch");
-    for (yi, &xi) in y.iter_mut().zip(x) {
+    let mut cy = y.chunks_exact_mut(8);
+    let mut cx = x.chunks_exact(8);
+    for (y8, x8) in cy.by_ref().zip(cx.by_ref()) {
+        for (yi, &xi) in y8.iter_mut().zip(x8) {
+            *yi += alpha * xi;
+        }
+    }
+    for (yi, &xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
         *yi += alpha * xi;
+    }
+}
+
+/// `acc[i] += w * x[i]` — the 8-lane accumulation kernel shared by the
+/// averaging paths. Elementwise (no cross-index reduction), so chunking
+/// never changes any output bit.
+#[inline]
+fn accumulate_scaled(x: &[f32], w: f64, acc: &mut [f64]) {
+    debug_assert_eq!(x.len(), acc.len());
+    let mut ca = acc.chunks_exact_mut(8);
+    let mut cx = x.chunks_exact(8);
+    for (a8, x8) in ca.by_ref().zip(cx.by_ref()) {
+        for (a, &v) in a8.iter_mut().zip(x8) {
+            *a += w * v as f64;
+        }
+    }
+    for (a, &v) in ca.into_remainder().iter_mut().zip(cx.remainder()) {
+        *a += w * v as f64;
     }
 }
 
@@ -39,44 +96,56 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 ///
 /// `models` and `weights` must be non-empty and same-length; weights are
 /// normalized internally so callers can pass raw sample counts `n_i`.
+/// Allocating reference version — the coordinator uses
+/// [`weighted_average_into`]; this stays as the semantic oracle for tests.
 pub fn weighted_average(models: &[&[f32]], weights: &[f64]) -> ParamVec {
+    let dim = models.first().map_or(0, |m| m.len());
+    let mut out = vec![0.0f32; dim];
+    let mut scratch = Vec::new();
+    weighted_average_into_t(models, weights, &mut out, &mut scratch, 1);
+    out
+}
+
+/// In-place weighted average into a reusable buffer (hot-path variant used
+/// by the coordinator to avoid per-round allocation; see EXPERIMENTS.md
+/// §Perf). Fans out across parameter chunks for large models.
+pub fn weighted_average_into(
+    models: &[&[f32]],
+    weights: &[f64],
+    out: &mut [f32],
+    scratch: &mut Vec<f64>,
+) {
+    let dim = models.first().map_or(0, |m| m.len());
+    let threads = crate::util::par::threads_for(dim, PAR_MIN_DIM);
+    weighted_average_into_t(models, weights, out, scratch, threads);
+}
+
+/// Explicit-worker-count variant of [`weighted_average_into`] (benches and
+/// the thread-count equivalence property tests). Bit-identical for every
+/// `threads` value; `threads == 1` is serial and allocation-free.
+pub fn weighted_average_into_t(
+    models: &[&[f32]],
+    weights: &[f64],
+    out: &mut [f32],
+    scratch: &mut Vec<f64>,
+    threads: usize,
+) {
     assert!(!models.is_empty(), "weighted_average of zero models");
     assert_eq!(models.len(), weights.len(), "models/weights length mismatch");
     let dim = models[0].len();
     for m in models {
         assert_eq!(m.len(), dim, "model dimension mismatch");
     }
+    assert_eq!(out.len(), dim, "output dimension mismatch");
     let total: f64 = weights.iter().sum();
     assert!(total > 0.0, "weights must sum to a positive value");
-
-    let mut acc = vec![0.0f64; dim];
-    for (m, &w) in models.iter().zip(weights) {
-        let wn = w / total;
-        for (a, &v) in acc.iter_mut().zip(m.iter()) {
-            *a += wn * v as f64;
-        }
-    }
-    acc.into_iter().map(|v| v as f32).collect()
-}
-
-/// In-place weighted average into a reusable buffer (hot-path variant used
-/// by the coordinator to avoid per-round allocation; see EXPERIMENTS.md
-/// §Perf).
-pub fn weighted_average_into(models: &[&[f32]], weights: &[f64], out: &mut [f32], scratch: &mut Vec<f64>) {
-    assert!(!models.is_empty());
-    assert_eq!(models.len(), weights.len());
-    let dim = models[0].len();
-    assert_eq!(out.len(), dim);
-    let total: f64 = weights.iter().sum();
-    assert!(total > 0.0);
     scratch.clear();
     scratch.resize(dim, 0.0);
-    for (m, &w) in models.iter().zip(weights) {
-        let wn = w / total;
-        for (a, &v) in scratch.iter_mut().zip(m.iter()) {
-            *a += wn * v as f64;
+    crate::util::par::par_chunks_mut(scratch.as_mut_slice(), threads, 8, |start, acc| {
+        for (m, &w) in models.iter().zip(weights) {
+            accumulate_scaled(&m[start..start + acc.len()], w / total, acc);
         }
-    }
+    });
     for (o, &a) in out.iter_mut().zip(scratch.iter()) {
         *o = a as f32;
     }
@@ -94,6 +163,16 @@ mod tests {
     }
 
     #[test]
+    fn norms_cover_lanes_and_remainder() {
+        // 19 = 2 full 8-lane chunks + 3-element remainder.
+        let x: Vec<f32> = (1..=19).map(|i| i as f32).collect();
+        let want: f64 = (1..=19).map(|i| (i * i) as f64).sum();
+        assert_eq!(l2_norm_sq(&x), want);
+        let zero = vec![0.0f32; 19];
+        assert_eq!(sq_distance(&x, &zero), want);
+    }
+
+    #[test]
     #[should_panic(expected = "length mismatch")]
     fn sq_distance_checks_len() {
         sq_distance(&[1.0], &[1.0, 2.0]);
@@ -104,6 +183,13 @@ mod tests {
         let mut y = vec![1.0, 1.0];
         axpy(2.0, &[1.0, -1.0], &mut y);
         assert_eq!(y, vec![3.0, -1.0]);
+        // Lanes + remainder.
+        let mut y2 = vec![0.0f32; 11];
+        let x2: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        axpy(0.5, &x2, &mut y2);
+        for (i, &v) in y2.iter().enumerate() {
+            assert_eq!(v, i as f32 * 0.5);
+        }
     }
 
     #[test]
@@ -130,6 +216,22 @@ mod tests {
         let mut scratch = Vec::new();
         weighted_average_into(&[&a, &b], &[1.0, 2.0], &mut out, &mut scratch);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn weighted_average_into_t_bit_identical_across_threads() {
+        let a: Vec<f32> = (0..531).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..531).map(|i| (i as f32).cos()).collect();
+        let mut base = vec![0.0f32; 531];
+        let mut scratch = Vec::new();
+        weighted_average_into_t(&[&a, &b], &[3.0, 2.0], &mut base, &mut scratch, 1);
+        for threads in 2..=8 {
+            let mut out = vec![0.0f32; 531];
+            weighted_average_into_t(&[&a, &b], &[3.0, 2.0], &mut out, &mut scratch, threads);
+            for (x, y) in out.iter().zip(&base) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -50,22 +50,30 @@ impl MockExecutor {
     }
 
     fn features(&self, x: &[f32]) -> Vec<f32> {
-        // x: [n, input_dim] -> [n, feat_dim]
+        // x: [n, input_dim] -> [n, feat_dim]. Samples are independent and
+        // each worker writes a disjoint slice of `out`, so the projection
+        // fans out across scoped threads for large (eval-size) batches and
+        // stays bit-identical for every worker count.
         let n = x.len() / self.input_dim;
         let mut out = vec![0.0f32; n * self.feat_dim];
-        for i in 0..n {
-            let xi = &x[i * self.input_dim..(i + 1) * self.input_dim];
-            let oi = &mut out[i * self.feat_dim..(i + 1) * self.feat_dim];
-            for (k, &xv) in xi.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let prow = &self.proj[k * self.feat_dim..(k + 1) * self.feat_dim];
-                for (o, &p) in oi.iter_mut().zip(prow) {
-                    *o += xv * p;
+        let fd = self.feat_dim;
+        let id = self.input_dim;
+        let threads = crate::util::par::threads_for(n, 64);
+        crate::util::par::par_chunks_mut(&mut out, threads, fd, |start, chunk| {
+            let first = start / fd;
+            for (j, oi) in chunk.chunks_mut(fd).enumerate() {
+                let xi = &x[(first + j) * id..(first + j + 1) * id];
+                for (k, &xv) in xi.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let prow = &self.proj[k * fd..(k + 1) * fd];
+                    for (o, &p) in oi.iter_mut().zip(prow) {
+                        *o += xv * p;
+                    }
                 }
             }
-        }
+        });
         out
     }
 

@@ -4,6 +4,7 @@
 
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 pub mod timer;
 pub mod toml;

@@ -1,0 +1,167 @@
+//! Dependency-free scoped-thread data parallelism for the kernel layer
+//! (the offline crate set has no rayon).
+//!
+//! The primitive is [`par_chunks_mut`]: split a mutable slice into disjoint
+//! contiguous chunks (boundaries rounded to an `align` multiple so a
+//! logical record — an 8-lane SIMD group, a sample row, an image — never
+//! straddles two workers) and run a closure over every chunk on
+//! `std::thread::scope` workers. Small jobs and `threads == 1` short-circuit
+//! to a plain serial call with **zero** heap allocation, which is what the
+//! steady-state coordinator round relies on (see EXPERIMENTS.md §Perf).
+//!
+//! Worker counts resolve as: explicit argument (the `_t` kernel variants)
+//! &gt; [`set_max_threads`] (wired from `ExperimentConfig::threads`) &gt;
+//! `VAFL_THREADS` env var &gt; `std::thread::available_parallelism()`.
+//!
+//! Every kernel built on this module is **bit-identical for every worker
+//! count**: each output index is written by exactly one worker and sees
+//! exactly the same operations in the same order regardless of how the
+//! index space is split (asserted by `tests/proptests.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide worker-count override from config (0 = unset).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide worker-count cap (0 clears the override). Wired
+/// from `ExperimentConfig::threads` by `experiments::build`.
+pub fn set_max_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Resolve the worker-count cap: config override, then `VAFL_THREADS`,
+/// then the machine's available parallelism.
+pub fn max_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(s) = std::env::var("VAFL_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Worker count for a job of `n_units` work items, requiring at least
+/// `min_per_thread` items per worker before fan-out pays for spawn cost.
+/// Returns 1 (serial, allocation-free) for small jobs.
+pub fn threads_for(n_units: usize, min_per_thread: usize) -> usize {
+    let cap = max_threads();
+    if cap <= 1 {
+        return 1;
+    }
+    let min = min_per_thread.max(1);
+    if n_units <= min {
+        return 1;
+    }
+    cap.min(n_units / min).max(1)
+}
+
+/// Run `f(start_index, chunk)` over disjoint contiguous chunks of `data`
+/// on up to `threads` scoped workers. Chunk boundaries are multiples of
+/// `align`, so records of `align` elements never split across workers.
+///
+/// `threads <= 1` (or a job smaller than one aligned chunk) runs inline on
+/// the calling thread without spawning — and without allocating.
+pub fn par_chunks_mut<T, F>(data: &mut [T], threads: usize, align: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if threads <= 1 || n == 0 {
+        f(0, data);
+        return;
+    }
+    let align = align.max(1);
+    let chunk = n.div_ceil(threads).div_ceil(align) * align;
+    if chunk >= n {
+        f(0, data);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = data;
+        let mut start = 0usize;
+        while rest.len() > chunk {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(chunk);
+            rest = tail;
+            let s = start;
+            start += chunk;
+            scope.spawn(move || f(s, head));
+        }
+        // The final chunk runs inline — the calling thread would otherwise
+        // sit idle in the scope's join, wasting one spawn per call.
+        f(start, rest);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn covers_every_element_exactly_once() {
+        for threads in 1..=8 {
+            let mut data = vec![0u32; 1000];
+            par_chunks_mut(&mut data, threads, 8, |start, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v += (start + k) as u32 + 1;
+                }
+            });
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as u32 + 1, "threads={threads} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_starts_are_aligned() {
+        let starts = Mutex::new(Vec::new());
+        let mut data = vec![0u8; 997];
+        par_chunks_mut(&mut data, 4, 16, |start, _chunk| {
+            starts.lock().unwrap().push(start);
+        });
+        for &s in starts.lock().unwrap().iter() {
+            assert_eq!(s % 16, 0, "chunk start {s} not 16-aligned");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut empty: Vec<u8> = Vec::new();
+        par_chunks_mut(&mut empty, 8, 8, |_, _| {});
+        let mut one = vec![0u8; 1];
+        par_chunks_mut(&mut one, 8, 8, |_, c| c[0] = 7);
+        assert_eq!(one[0], 7);
+    }
+
+    #[test]
+    fn threads_for_scales_with_work() {
+        assert_eq!(threads_for(0, 100), 1);
+        assert_eq!(threads_for(50, 100), 1);
+        let t = threads_for(1_000_000, 100);
+        assert!(t >= 1 && t <= max_threads());
+    }
+
+    #[test]
+    fn serial_call_matches_parallel() {
+        let mut a = vec![0.0f64; 513];
+        let mut b = vec![0.0f64; 513];
+        let fill = |start: usize, c: &mut [f64]| {
+            for (k, v) in c.iter_mut().enumerate() {
+                *v = ((start + k) as f64).sqrt();
+            }
+        };
+        par_chunks_mut(&mut a, 1, 8, fill);
+        par_chunks_mut(&mut b, 7, 8, fill);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Counting-allocator proof of the zero-allocation claim (EXPERIMENTS.md
+//! §Perf): once the reusable buffers have grown to steady-state size, the
+//! serial encode → fused dequantize-aggregate round performs **zero** heap
+//! allocations. This lives in its own integration-test binary because the
+//! `#[global_allocator]` is process-wide; keep it to this single test so
+//! no concurrent test thread can pollute the counter.
+//!
+//! The parallel (`workers > 1`) path is excluded by design: spawning
+//! scoped worker threads allocates their stacks. `par_chunks_mut` with one
+//! worker short-circuits to an inline call, which is the configuration
+//! this test pins down.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use vafl::coordinator::aggregate::Aggregator;
+use vafl::model::quant::{Precision, QuantBuf};
+use vafl::util::rng::Rng;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_fused_aggregation_does_not_allocate() {
+    let p = 4096usize;
+    let k = 7usize;
+    let mut rng = Rng::new(42);
+    let models: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..p).map(|_| rng.gauss() as f32).collect())
+        .collect();
+    let weights = vec![1000.0f64; k];
+    let mut out = vec![0.0f32; p];
+    let mut bufs: Vec<QuantBuf> = vec![QuantBuf::new(); k];
+    let mut agg = Aggregator::new();
+
+    for precision in [Precision::F32, Precision::F16, Precision::Int8] {
+        // Warm-up round: grows every reusable buffer to steady-state size.
+        for (b, m) in bufs.iter_mut().zip(&models) {
+            b.encode(precision, m);
+        }
+        agg.aggregate_payloads_t(&bufs, &weights, &mut out, 1);
+
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            for (b, m) in bufs.iter_mut().zip(&models) {
+                b.encode(precision, m);
+            }
+            agg.aggregate_payloads_t(&bufs, &weights, &mut out, 1);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after,
+            before,
+            "steady-state rounds allocated {} time(s) at {}",
+            after - before,
+            precision.name()
+        );
+    }
+}

@@ -4,12 +4,15 @@
 //! reports the failing seed, which reproduces deterministically).
 
 use vafl::config::{EaflmParams, ValueFnConfig};
+use vafl::coordinator::aggregate::Aggregator;
 use vafl::coordinator::policy::{
     AflPolicy, EaflmPolicy, PolicyContext, SelectionPolicy, VaflPolicy,
 };
+use vafl::data::synth::{generate_t, SynthConfig};
 use vafl::fleet::ClientReport;
 use vafl::metrics::ccr;
-use vafl::model::{sq_distance, weighted_average};
+use vafl::model::quant::{quantize_int8, Precision, QuantBuf};
+use vafl::model::{sq_distance, weighted_average, weighted_average_into_t};
 use vafl::netsim::{LinkProfile, Message};
 use vafl::sim::EventQueue;
 use vafl::util::rng::Rng;
@@ -225,6 +228,110 @@ fn prop_rng_fork_streams_do_not_collide() {
                 assert_ne!(firsts[i], firsts[j], "{} vs {}", labels[i], labels[j]);
             }
         }
+    });
+}
+
+#[test]
+fn prop_fused_aggregate_bit_identical_to_naive_reference() {
+    // The fused dequantize-accumulate pipeline must reproduce, bit for
+    // bit, the naive reference (decode every payload via `round_trip` to a
+    // dense staging vector, then weighted-average) — for every precision,
+    // random models/weights, and every worker count 1..=8.
+    cases(60, |rng| {
+        let dim = 1 + rng.below(300);
+        let k = 1 + rng.below(7);
+        let models: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32 * 2.0).collect())
+            .collect();
+        let weights: Vec<f64> = (0..k).map(|_| 1.0 + rng.f64() * 9.0).collect();
+        let mut agg = Aggregator::new();
+        for prec in [Precision::F32, Precision::F16, Precision::Int8] {
+            let staged: Vec<Vec<f32>> = models.iter().map(|m| prec.round_trip(m)).collect();
+            let views: Vec<&[f32]> = staged.iter().map(|u| u.as_slice()).collect();
+            let mut want = vec![0.0f32; dim];
+            let mut scratch = Vec::new();
+            weighted_average_into_t(&views, &weights, &mut want, &mut scratch, 1);
+
+            let mut bufs: Vec<QuantBuf> = vec![QuantBuf::new(); k];
+            for (b, m) in bufs.iter_mut().zip(&models) {
+                b.encode(prec, m);
+            }
+            for threads in 1..=8 {
+                let mut got = vec![0.0f32; dim];
+                agg.aggregate_payloads_t(&bufs, &weights, &mut got, threads);
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "prec {} threads {threads} dim {dim} k {k}",
+                        prec.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_weighted_average_matches_serial_all_thread_counts() {
+    cases(60, |rng| {
+        let dim = 1 + rng.below(400);
+        let k = 1 + rng.below(6);
+        let models: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let weights: Vec<f64> = (0..k).map(|_| 0.5 + rng.f64() * 4.0).collect();
+        let mut scratch = Vec::new();
+        let mut base = vec![0.0f32; dim];
+        weighted_average_into_t(&refs, &weights, &mut base, &mut scratch, 1);
+        for threads in 2..=8 {
+            let mut out = vec![0.0f32; dim];
+            weighted_average_into_t(&refs, &weights, &mut out, &mut scratch, threads);
+            for (a, b) in out.iter().zip(&base) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads} dim {dim}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_generate_identical_for_all_thread_counts() {
+    // Each sample renders from its own derived stream, so the dataset must
+    // be byte-identical no matter how rendering is split across workers.
+    cases(6, |rng| {
+        let seed = rng.next_u64();
+        let n = 1 + rng.below(40);
+        let cfg = SynthConfig::default();
+        let base = generate_t(n, &cfg, &mut Rng::new(seed), 1);
+        for threads in 2..=8 {
+            let ds = generate_t(n, &cfg, &mut Rng::new(seed), threads);
+            assert_eq!(ds.labels, base.labels, "threads {threads} n {n}");
+            assert_eq!(ds.images, base.images, "threads {threads} n {n}");
+        }
+    });
+}
+
+#[test]
+fn prop_int8_nonfinite_documented_behavior() {
+    // Scale from finite values only; NaN -> 0; +/-inf saturate to +/-127.
+    cases(40, |rng| {
+        let n = 8 + rng.below(64);
+        let mut v: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        v[0] = f32::NAN;
+        v[1] = f32::INFINITY;
+        v[2] = f32::NEG_INFINITY;
+        let (q, scale) = quantize_int8(&v);
+        assert!(scale.is_finite() && scale > 0.0, "scale {scale}");
+        assert_eq!(q[0], 0);
+        assert_eq!(q[1], 127);
+        assert_eq!(q[2], -127);
+        let max_finite = v
+            .iter()
+            .filter(|x| x.is_finite())
+            .fold(0.0f32, |m, &x| m.max(x.abs()));
+        let want_scale = if max_finite > 0.0 { max_finite / 127.0 } else { 1.0 };
+        assert_eq!(scale.to_bits(), want_scale.to_bits());
     });
 }
 

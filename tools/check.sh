@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Lint + hygiene gate for the Rust coordinator (see EXPERIMENTS.md §Perf).
+#
+#   tools/check.sh          # fmt + clippy -D warnings
+#   tools/check.sh --tests  # ... and the full test suite
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+if [[ "${1:-}" == "--tests" ]]; then
+    echo "== cargo test =="
+    cargo test -q
+fi
+
+echo "OK"
