@@ -1,0 +1,70 @@
+//! Bench: barriered vs. barrier-free wall-clock-to-accuracy under a
+//! straggler-heavy link (`LinkProfile::straggler_wan`), plus a sweep over
+//! buffer sizes and staleness-mixing rules.
+//!
+//!     cargo bench --bench async_engine
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 40), VAFL_BENCH_MOCK=1.
+//!
+//! The headline number is the speedup in virtual seconds to the target
+//! accuracy: the barriered engine pays the slowest client + slowest
+//! transfer every round, the barrier-free engine aggregates whatever
+//! arrives.
+
+mod common;
+
+use vafl::config::AsyncEngineConfig;
+use vafl::coordinator::MixingRule;
+use vafl::experiments::{self, straggler};
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+
+    common::section("Barrier-free engine — straggler scenario (experiment b fleet)");
+    let mut cfg = straggler::straggler_config(&experiments::preset('b')?);
+    common::apply_env(&mut cfg, 40);
+    cfg.target_acc = cfg.target_acc.min(0.5);
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Constant { alpha: 0.9 },
+    };
+    let cmp = straggler::compare_engines(&cfg)?;
+    println!("{}", straggler::render(&cmp));
+    match cmp.speedup() {
+        Some(s) if s > 1.0 => println!(
+            "=> barrier-free reaches {:.0}% accuracy {s:.2}x sooner in virtual wall-clock",
+            cfg.target_acc * 100.0
+        ),
+        Some(s) => println!(
+            "=> no speedup on this configuration ({s:.2}x) — straggler pressure too low?"
+        ),
+        None => println!("=> one engine never reached the target; raise VAFL_BENCH_ROUNDS"),
+    }
+
+    common::section("Buffer size / mixing-rule sweep (vtime to target, uploads)");
+    println!("{:<34} {:>14} {:>9} {:>10}", "configuration", "vtime-to-tgt", "uploads", "best_acc");
+    for (label, k, mixing) in [
+        ("k=1  constant(0.6)", 1, MixingRule::Constant { alpha: 0.6 }),
+        ("k=1  poly(0.8, 0.5)", 1, MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 }),
+        ("k=2  constant(0.9)", 2, MixingRule::Constant { alpha: 0.9 }),
+        ("k=2  hinge(0.9, 4, 0.5)", 2, MixingRule::Hinge { alpha: 0.9, grace: 4, slope: 0.5 }),
+        ("k=4  constant(1.0)", 4, MixingRule::Constant { alpha: 1.0 }),
+    ] {
+        let mut c = cfg.clone();
+        c.engine = vafl::config::EngineMode::BarrierFree;
+        c.async_engine = AsyncEngineConfig { buffer_k: k, mixing };
+        let out = experiments::run(&c)?;
+        println!(
+            "{label:<34} {:>14} {:>9} {:>10.4}",
+            out.metrics
+                .vtime_to_target()
+                .map_or_else(|| "never".to_string(), |v| format!("{v:.1}s")),
+            out.total_uploads,
+            out.best_accuracy,
+        );
+    }
+
+    common::section("Staleness distribution (k=2, constant 0.9)");
+    println!("{}", straggler::staleness_histogram(&cmp.barrier_free.metrics));
+    Ok(())
+}

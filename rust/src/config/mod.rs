@@ -6,6 +6,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::registry::DropoutModel;
+use crate::coordinator::staleness::MixingRule;
 use crate::data::PartitionScheme;
 use crate::model::quant::Precision;
 use crate::netsim::LinkProfile;
@@ -41,6 +42,54 @@ impl Algorithm {
     }
 
     pub const ALL: [Algorithm; 3] = [Algorithm::Afl, Algorithm::Eaflm, Algorithm::Vafl];
+}
+
+/// Which round engine drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// The paper's per-round loop: everyone reports, the server gates,
+    /// aggregates when the last upload lands, then broadcasts. One
+    /// synchronization barrier per communication round.
+    Barriered,
+    /// Barrier-free event-driven engine: clients run on independent
+    /// virtual clocks, the server aggregates on a small buffer of upload
+    /// arrivals with staleness-weighted mixing. `rounds` counts
+    /// aggregations (buffer flushes).
+    BarrierFree,
+}
+
+impl EngineMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineMode::Barriered => "barriered",
+            EngineMode::BarrierFree => "barrier_free",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "barriered" => Ok(EngineMode::Barriered),
+            "barrier_free" | "barrier-free" | "async" => Ok(EngineMode::BarrierFree),
+            other => bail!("unknown engine {other:?} (barriered|barrier_free)"),
+        }
+    }
+}
+
+/// Knobs of the barrier-free engine (ignored by the barriered one).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncEngineConfig {
+    /// Aggregate once this many uploads have arrived (1 = on every
+    /// arrival; clamped to the fleet size — at fleet size with
+    /// `alpha == 1` the engine degenerates to the barriered algorithm).
+    pub buffer_k: usize,
+    /// Staleness-weighted mixing rule `alpha(tau)`.
+    pub mixing: MixingRule,
+}
+
+impl Default for AsyncEngineConfig {
+    fn default() -> Self {
+        AsyncEngineConfig { buffer_k: 1, mixing: MixingRule::default() }
+    }
 }
 
 /// EAFLM gate constants (paper Eq. 3 and §IV-D: xi_d = 1/D, D = 1,
@@ -132,6 +181,11 @@ pub struct ExperimentConfig {
     /// generation, mock eval). 0 = auto: `VAFL_THREADS` env var, else the
     /// machine's available parallelism. See `util::par`.
     pub threads: usize,
+    /// Which round engine drives the run (the paper's barriered loop by
+    /// default; `barrier_free` enables the event-driven engine).
+    pub engine: EngineMode,
+    /// Barrier-free engine knobs (buffer size, staleness mixing).
+    pub async_engine: AsyncEngineConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -160,6 +214,8 @@ impl Default for ExperimentConfig {
             upload_precision: Precision::F32,
             staleness_decay: None,
             threads: 0,
+            engine: EngineMode::Barriered,
+            async_engine: AsyncEngineConfig::default(),
         }
     }
 }
@@ -204,6 +260,17 @@ impl ExperimentConfig {
             if !(0.0 < d && d <= 1.0) {
                 bail!("staleness_decay must be in (0, 1]");
             }
+        }
+        if self.async_engine.buffer_k == 0 {
+            bail!("async_engine.buffer_k must be >= 1");
+        }
+        self.async_engine.mixing.validate()?;
+        if self.engine == EngineMode::BarrierFree && self.staleness_decay.is_some() {
+            bail!(
+                "staleness_decay only applies to the barriered engine; \
+                 the barrier-free engine weights uploads by the async_engine \
+                 mixing rule alpha(tau) instead"
+            );
         }
         if let Algorithm::Eaflm = self.algorithm {
             if !(0.0 < self.eaflm.alpha && self.eaflm.alpha < 1.0) {
@@ -327,6 +394,42 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_i64("threads") {
             cfg.threads = v.max(0) as usize;
         }
+        if let Some(v) = doc.get_str("engine") {
+            cfg.engine = EngineMode::from_name(v)?;
+        }
+        // [async_engine]
+        if let Some(v) = doc.get_i64("async_engine.buffer_k") {
+            cfg.async_engine.buffer_k = v.max(0) as usize;
+        }
+        {
+            let alpha = doc
+                .get_f64("async_engine.mixing_alpha")
+                .unwrap_or(cfg.async_engine.mixing.alpha0());
+            if let Some(rule) = doc.get_str("async_engine.mixing") {
+                cfg.async_engine.mixing = match rule {
+                    "constant" => MixingRule::Constant { alpha },
+                    "polynomial" | "poly" => MixingRule::Polynomial {
+                        alpha,
+                        exponent: doc.get_f64("async_engine.mixing_exponent").unwrap_or(0.5),
+                    },
+                    "hinge" => MixingRule::Hinge {
+                        alpha,
+                        grace: doc.get_i64("async_engine.mixing_grace").unwrap_or(4).max(0)
+                            as usize,
+                        slope: doc.get_f64("async_engine.mixing_slope").unwrap_or(1.0),
+                    },
+                    other => bail!("unknown mixing rule {other:?} (constant|polynomial|hinge)"),
+                };
+            } else if doc.get_f64("async_engine.mixing_alpha").is_some()
+                || doc.get_f64("async_engine.mixing_exponent").is_some()
+            {
+                // Parameters alone re-parameterize the default rule.
+                cfg.async_engine.mixing = MixingRule::Polynomial {
+                    alpha,
+                    exponent: doc.get_f64("async_engine.mixing_exponent").unwrap_or(0.5),
+                };
+            }
+        }
         // [backend]
         match doc.get_str("backend.kind") {
             Some("mock") => cfg.backend = Backend::Mock,
@@ -405,12 +508,55 @@ mod tests {
     }
 
     #[test]
+    fn engine_and_mixing_keys_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            engine = "barrier_free"
+            [async_engine]
+            buffer_k = 3
+            mixing = "hinge"
+            mixing_alpha = 0.5
+            mixing_grace = 2
+            mixing_slope = 0.25
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.engine, EngineMode::BarrierFree);
+        assert_eq!(cfg.async_engine.buffer_k, 3);
+        assert_eq!(
+            cfg.async_engine.mixing,
+            MixingRule::Hinge { alpha: 0.5, grace: 2, slope: 0.25 }
+        );
+        // Defaults: barriered, buffer of 1, polynomial mixing.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.engine, EngineMode::Barriered);
+        assert_eq!(d.async_engine.buffer_k, 1);
+        assert!(ExperimentConfig::from_toml("engine = \"sync\"").is_err());
+    }
+
+    #[test]
     fn rejects_invalid() {
         assert!(ExperimentConfig::from_toml("num_clients = 0").is_err());
         assert!(ExperimentConfig::from_toml("algorithm = \"sgd\"").is_err());
         assert!(ExperimentConfig::from_toml("target_acc = 1.5").is_err());
         assert!(ExperimentConfig::from_toml("partition = \"zipf\"").is_err());
         assert!(ExperimentConfig::from_toml("rounds = 0").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[async_engine]\nbuffer_k = 0\n[backend]\nkind = \"mock\"")
+                .is_err()
+        );
+        assert!(ExperimentConfig::from_toml(
+            "[async_engine]\nmixing = \"constant\"\nmixing_alpha = 2.0\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // staleness_decay is a barriered-engine knob; the barrier-free
+        // engine has alpha(tau) — reject the silently-ignored combination.
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\nstaleness_decay = 0.5\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
         let mut cfg = ExperimentConfig::default();
         cfg.probe_samples = cfg.test_samples + 1;
         assert!(cfg.validate().is_err());

@@ -22,6 +22,31 @@ pub struct PolicyContext<'a> {
     pub global_history: &'a [Vec<f32>],
 }
 
+/// Context for the event-driven single-report gate (barrier-free engine):
+/// there is no per-round report batch, so the policy sees the fleet's
+/// *last-known* values instead.
+pub struct AsyncGateContext<'a> {
+    pub n_clients: usize,
+    /// Most recent effective value per fleet slot (NaN = never reported).
+    /// The deciding client's own slot holds its *previous* value; the gate
+    /// substitutes the fresh one.
+    pub last_values: &'a [f64],
+    /// Global parameter history, most recent last.
+    pub global_history: &'a [Vec<f32>],
+}
+
+/// One report's gate decision in the event-driven engine.
+#[derive(Debug, Clone, Copy)]
+pub struct GateDecision {
+    /// Request a model upload from this client.
+    pub upload: bool,
+    /// The effective value the decision used (stored as the client's
+    /// last-known value).
+    pub value: f64,
+    /// The threshold applied.
+    pub threshold: f64,
+}
+
 /// Decision for one round.
 #[derive(Debug, Clone)]
 pub struct Selection {
@@ -46,6 +71,11 @@ pub trait SelectionPolicy {
 
     /// Decide which of this round's reporters upload their model.
     fn select(&mut self, reports: &[ClientReport], ctx: &PolicyContext<'_>) -> Selection;
+
+    /// Decide one report as it arrives (barrier-free engine). The gated
+    /// upload set over any event stream is a subset of the report stream
+    /// (property-tested in `rust/tests/engine_async.rs`).
+    fn gate_report(&mut self, report: &ClientReport, ctx: &AsyncGateContext<'_>) -> GateDecision;
 }
 
 /// Build the policy for an [`Algorithm`].
@@ -75,6 +105,10 @@ impl SelectionPolicy for AflPolicy {
             values: reports.iter().map(|r| r.value).collect(),
             threshold: 0.0,
         }
+    }
+
+    fn gate_report(&mut self, report: &ClientReport, _ctx: &AsyncGateContext<'_>) -> GateDecision {
+        GateDecision { upload: true, value: report.value, threshold: 0.0 }
     }
 }
 
@@ -113,6 +147,39 @@ impl SelectionPolicy for VaflPolicy {
             threshold: mean,
         }
     }
+
+    fn gate_report(&mut self, report: &ClientReport, ctx: &AsyncGateContext<'_>) -> GateDecision {
+        // Eq. 2 against the fleet's last-known values, with this client's
+        // slot substituted by its fresh V. Slots that have never reported
+        // contribute 0 — early on the threshold is low and everyone
+        // communicates, matching the paper's fast initial convergence. The
+        // max-valued client always passes (its V bounds the mean), so the
+        // event stream can never gate every upload forever.
+        let v = {
+            let amp = amplify_value(report.value, report.acc, ctx.n_clients, self.value_cfg);
+            if amp.is_finite() {
+                amp
+            } else {
+                0.0
+            }
+        };
+        let sum: f64 = ctx
+            .last_values
+            .iter()
+            .enumerate()
+            .map(|(i, &lv)| {
+                if i == report.client_id {
+                    v
+                } else if lv.is_finite() {
+                    lv
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        let mean = sum / ctx.n_clients as f64;
+        GateDecision { upload: v >= mean, value: v, threshold: mean }
+    }
 }
 
 /// EAFLM (paper Eq. 3, §IV-D): skip client i when
@@ -133,28 +200,7 @@ impl SelectionPolicy for EaflmPolicy {
     }
 
     fn select(&mut self, reports: &[ClientReport], ctx: &PolicyContext<'_>) -> Selection {
-        let m = ctx.n_clients as f64;
-        let a2bm2 = self.params.alpha * self.params.alpha * self.params.beta * m * m;
-        // RHS: || sum_{d=1..D} xi_d (theta^{k-d} - theta^{k-1-d}) ||^2.
-        let hist = ctx.global_history;
-        let threshold = if hist.len() < 2 {
-            // No movement history yet: no client is considered lazy.
-            0.0
-        } else {
-            let depth = self.params.depth.min(hist.len() - 1);
-            let xi = 1.0 / depth as f64;
-            let dim = hist[0].len();
-            let mut combo = vec![0.0f64; dim];
-            for d in 1..=depth {
-                let newer = &hist[hist.len() - d];
-                let older = &hist[hist.len() - d - 1];
-                for ((c, &a), &b) in combo.iter_mut().zip(newer).zip(older) {
-                    *c += xi * (a as f64 - b as f64);
-                }
-            }
-            let norm_sq: f64 = combo.iter().map(|&v| v * v).sum();
-            norm_sq / a2bm2
-        };
+        let threshold = eaflm_threshold(&self.params, ctx.global_history, ctx.n_clients);
         let selected: Vec<bool> = reports
             .iter()
             .map(|r| r.grad_norm_sq > threshold)
@@ -165,6 +211,41 @@ impl SelectionPolicy for EaflmPolicy {
             threshold,
         }
     }
+
+    fn gate_report(&mut self, report: &ClientReport, ctx: &AsyncGateContext<'_>) -> GateDecision {
+        // Eq. 3 is already a per-client threshold test; the event-driven
+        // gate applies it against the history at arrival time.
+        let threshold = eaflm_threshold(&self.params, ctx.global_history, ctx.n_clients);
+        GateDecision {
+            upload: report.grad_norm_sq > threshold,
+            value: report.grad_norm_sq,
+            threshold,
+        }
+    }
+}
+
+/// Eq. 3 RHS: `|| sum_{d=1..D} xi_d (theta^{k-d} - theta^{k-1-d}) ||^2 /
+/// (alpha^2 beta m^2)` with `xi_d = 1/D`. Zero (select everyone) before
+/// any movement history exists.
+fn eaflm_threshold(params: &EaflmParams, hist: &[Vec<f32>], n_clients: usize) -> f64 {
+    let m = n_clients as f64;
+    let a2bm2 = params.alpha * params.alpha * params.beta * m * m;
+    if hist.len() < 2 {
+        return 0.0;
+    }
+    let depth = params.depth.min(hist.len() - 1);
+    let xi = 1.0 / depth as f64;
+    let dim = hist[0].len();
+    let mut combo = vec![0.0f64; dim];
+    for d in 1..=depth {
+        let newer = &hist[hist.len() - d];
+        let older = &hist[hist.len() - d - 1];
+        for ((c, &a), &b) in combo.iter_mut().zip(newer).zip(older) {
+            *c += xi * (a as f64 - b as f64);
+        }
+    }
+    let norm_sq: f64 = combo.iter().map(|&v| v * v).sum();
+    norm_sq / a2bm2
 }
 
 #[cfg(test)]
@@ -242,6 +323,68 @@ mod tests {
         let s = p.select(&reports, &ctx);
         assert_eq!(s.selected, vec![false, true]);
         assert!((s.threshold - 4.0 / (0.98f64.powi(2) * 4.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn afl_gate_always_uploads() {
+        let ctx = AsyncGateContext { n_clients: 3, last_values: &[f64::NAN; 3], global_history: &[] };
+        let d = AflPolicy.gate_report(&report(1, 0.0, 0.0, 0.0), &ctx);
+        assert!(d.upload);
+        assert_eq!(d.threshold, 0.0);
+    }
+
+    #[test]
+    fn vafl_gate_uses_last_known_values() {
+        let mut p = VaflPolicy { value_cfg: ValueFnConfig { use_acc_term: false } };
+        // Fleet of 4; others last reported 8, 8, 8. A fresh value of 2
+        // gives mean (8+8+8+2)/4 = 6.5 -> gated out.
+        let last = [8.0, 8.0, 8.0, f64::NAN];
+        let ctx = AsyncGateContext { n_clients: 4, last_values: &last, global_history: &[] };
+        let d = p.gate_report(&report(3, 2.0, 0.0, 0.0), &ctx);
+        assert!(!d.upload);
+        assert!((d.threshold - 6.5).abs() < 1e-12);
+        // A fresh value of 30 clears the mean comfortably.
+        let d = p.gate_report(&report(3, 30.0, 0.0, 0.0), &ctx);
+        assert!(d.upload);
+    }
+
+    #[test]
+    fn vafl_gate_never_reported_slots_count_zero() {
+        let mut p = VaflPolicy { value_cfg: ValueFnConfig { use_acc_term: false } };
+        let last = [f64::NAN; 5];
+        let ctx = AsyncGateContext { n_clients: 5, last_values: &last, global_history: &[] };
+        // First-ever report: mean = v/5 <= v, so it always uploads.
+        let d = p.gate_report(&report(2, 1.0, 0.0, 0.0), &ctx);
+        assert!(d.upload);
+        assert!((d.threshold - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vafl_gate_max_value_client_always_passes() {
+        // Own V >= mean whenever own V is the fleet max (sum <= N * V).
+        let mut p = VaflPolicy { value_cfg: ValueFnConfig { use_acc_term: false } };
+        let last = [3.0, 7.0, 1.0];
+        let ctx = AsyncGateContext { n_clients: 3, last_values: &last, global_history: &[] };
+        let d = p.gate_report(&report(2, 7.5, 0.0, 0.0), &ctx);
+        assert!(d.upload);
+    }
+
+    #[test]
+    fn eaflm_gate_matches_batch_threshold() {
+        let h0 = vec![0.0f32; 4];
+        let h1 = vec![1.0f32; 4];
+        let hist = vec![h0, h1];
+        let params = EaflmParams { beta: 1.0, ..Default::default() };
+        let mut p = EaflmPolicy { params };
+        let ctx = AsyncGateContext { n_clients: 2, last_values: &[f64::NAN; 2], global_history: &hist };
+        let lazy = p.gate_report(&report(0, 0.0, 0.0, 0.5), &ctx);
+        let busy = p.gate_report(&report(1, 0.0, 0.0, 9.0), &ctx);
+        assert!(!lazy.upload);
+        assert!(busy.upload);
+        // Same threshold as the batch path on the same history.
+        let pctx = PolicyContext { round: 3, n_clients: 2, global_history: &hist };
+        let s = p.select(&[report(0, 0.0, 0.0, 0.5)], &pctx);
+        assert_eq!(lazy.threshold.to_bits(), s.threshold.to_bits());
     }
 
     #[test]

@@ -75,32 +75,43 @@ impl ClientRegistry {
         self.status.iter().filter(|s| matches!(s, ClientStatus::Active)).count()
     }
 
+    /// Advance one client's drop/recover chain by a single step: offline
+    /// timers tick down (rejoining at zero), active clients may drop for a
+    /// geometric number of steps with the configured mean. The shared
+    /// sampler keeps the barriered ([`tick`](Self::tick)) and barrier-free
+    /// ([`poll`](Self::poll)) engines on the same dropout model.
+    fn advance(status: ClientStatus, model: &DropoutModel, rng: &mut Rng) -> ClientStatus {
+        match status {
+            ClientStatus::Dropped { remaining } => {
+                if remaining <= 1 {
+                    ClientStatus::Active
+                } else {
+                    ClientStatus::Dropped { remaining: remaining - 1 }
+                }
+            }
+            ClientStatus::Active => {
+                if model.drop_prob > 0.0 && rng.f64() < model.drop_prob {
+                    // Geometric offline duration with the configured mean.
+                    let p = 1.0 / model.mean_offline_rounds.max(1.0);
+                    let mut dur = 1usize;
+                    while rng.f64() > p && dur < 50 {
+                        dur += 1;
+                    }
+                    ClientStatus::Dropped { remaining: dur }
+                } else {
+                    ClientStatus::Active
+                }
+            }
+        }
+    }
+
     /// Advance availability by one round: offline timers tick down, active
     /// clients may drop. Guarantees at least one active client (the server
     /// cannot run a round against an empty fleet; the paper's fleets never
     /// fully vanish either).
     pub fn tick(&mut self) {
-        for s in &mut self.status {
-            match *s {
-                ClientStatus::Dropped { remaining } => {
-                    *s = if remaining <= 1 {
-                        ClientStatus::Active
-                    } else {
-                        ClientStatus::Dropped { remaining: remaining - 1 }
-                    };
-                }
-                ClientStatus::Active => {
-                    if self.model.drop_prob > 0.0 && self.rng.f64() < self.model.drop_prob {
-                        // Geometric offline duration with the configured mean.
-                        let p = 1.0 / self.model.mean_offline_rounds.max(1.0);
-                        let mut dur = 1usize;
-                        while self.rng.f64() > p && dur < 50 {
-                            dur += 1;
-                        }
-                        *s = ClientStatus::Dropped { remaining: dur };
-                    }
-                }
-            }
+        for i in 0..self.status.len() {
+            self.status[i] = Self::advance(self.status[i], &self.model, &mut self.rng);
         }
         if self.active_count() == 0 {
             // Revive the first client: quorum of one.
@@ -112,6 +123,29 @@ impl ClientRegistry {
     /// Indices of currently active clients.
     pub fn active_clients(&self) -> Vec<usize> {
         (0..self.status.len()).filter(|&i| self.is_active(i)).collect()
+    }
+
+    /// Event-driven availability poll (barrier-free engine): advance
+    /// *one* client's drop/recover chain by one step (the shared `advance`
+    /// sampler, so both engines draw from the same distribution *per
+    /// step*) and report whether it may start a local round now. Per
+    /// client because there is no global round to tick on; no quorum
+    /// guarantee is needed — other clients keep their own clocks running,
+    /// and a dropped client retries after a backoff.
+    ///
+    /// Caveat: the step unit differs between engines — [`tick`](Self::tick)
+    /// draws once per *global round*, `poll` once per *local round start*,
+    /// so with `drop_prob > 0` a fast client in the barrier-free engine
+    /// faces the drop lottery more often per virtual second than a
+    /// barriered one. Cross-engine comparisons under dropout measure
+    /// per-attempt availability, not identical time-based availability.
+    pub fn poll(&mut self, client: usize) -> bool {
+        self.status[client] = Self::advance(self.status[client], &self.model, &mut self.rng);
+        let active = self.is_active(client);
+        if !active {
+            self.total_drop_rounds += 1;
+        }
+        active
     }
 }
 
@@ -166,6 +200,41 @@ mod tests {
         let mut reg = ClientRegistry::new(3, DropoutModel::none(), Rng::new(4));
         reg.tick();
         assert_eq!(reg.active_clients(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn poll_never_drops_without_dropout() {
+        let mut reg = ClientRegistry::new(3, DropoutModel::none(), Rng::new(5));
+        for _ in 0..50 {
+            for c in 0..3 {
+                assert!(reg.poll(c));
+            }
+        }
+        assert_eq!(reg.total_drop_rounds, 0);
+    }
+
+    #[test]
+    fn poll_drops_and_recovers_deterministically() {
+        let run = |seed| {
+            let mut reg = ClientRegistry::new(2, DropoutModel::flaky(0.5), Rng::new(seed));
+            (0..200).map(|i| reg.poll(i % 2)).collect::<Vec<bool>>()
+        };
+        let trace = run(11);
+        assert!(trace.iter().any(|&a| !a), "never dropped");
+        assert!(trace.iter().skip(1).any(|&a| a), "never recovered");
+        assert_eq!(trace, run(11));
+        // A dropped client must come back within its bounded offline span.
+        let mut reg = ClientRegistry::new(1, DropoutModel::flaky(1.0), Rng::new(3));
+        let mut recovered = false;
+        let mut polls_down = 0;
+        for _ in 0..200 {
+            if reg.poll(0) {
+                recovered = true;
+                break;
+            }
+            polls_down += 1;
+        }
+        assert!(recovered, "still offline after {polls_down} polls");
     }
 
     #[test]

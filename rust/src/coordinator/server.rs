@@ -24,8 +24,9 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::Aggregator;
-use crate::coordinator::policy::{PolicyContext, SelectionPolicy};
+use crate::coordinator::policy::{AsyncGateContext, PolicyContext, SelectionPolicy};
 use crate::coordinator::registry::ClientRegistry;
+use crate::coordinator::staleness::MixingRule;
 use crate::model::quant::{Precision, QuantBuf};
 use crate::data::synth::Dataset;
 use crate::fleet::{Client, ClientReport};
@@ -36,6 +37,31 @@ use crate::runtime::{evaluate_with_params, Executor};
 use crate::sim::EventQueue;
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info};
+
+/// Events of the round engines on the virtual clock. The barriered engine
+/// only ever schedules [`EngineEvent::Report`]s (its barrier drains them
+/// per round); the barrier-free engine drives the full lifecycle
+/// `Start -> Report -> (gate) -> Upload -> flush -> Start`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineEvent {
+    /// The client may begin its next local round.
+    Start { client: usize },
+    /// The client's V report (68 B) landed at the server.
+    Report { client: usize },
+    /// The client's model upload landed at the server.
+    Upload { client: usize },
+}
+
+/// Per-aggregation-window counters of the barrier-free engine (reset at
+/// every buffer flush).
+#[derive(Debug, Default)]
+struct FlushWindow {
+    reports: usize,
+    train_loss_sum: f64,
+    bytes_up: u64,
+    bytes_down: u64,
+    threshold: f64,
+}
 
 /// Static context the server needs besides the fleet.
 pub struct ServerContext {
@@ -61,16 +87,18 @@ pub struct Server {
     /// allocate (see EXPERIMENTS.md §Perf).
     history_pool: Vec<Vec<f32>>,
     agg: Aggregator,
-    /// Reusable per-upload wire buffers (one per fleet slot) — uploads are
-    /// encoded here and aggregated by the fused dequantize-accumulate
-    /// path, never staged as dense `Vec<f32>`.
+    /// Reusable per-upload wire buffers (one per fleet slot, plus one
+    /// extra slot the barrier-free engine uses to fold the current global
+    /// model into a staleness-weighted mix) — uploads are encoded here and
+    /// aggregated by the fused dequantize-accumulate path, never staged as
+    /// dense `Vec<f32>`.
     upload_bufs: Vec<QuantBuf>,
     /// Reusable FedAvg weight buffer for the selected upload set.
     upload_weights: Vec<f64>,
     /// Reusable broadcast codec buffer + decoded broadcast model.
     bcast_buf: QuantBuf,
     bcast_model: Vec<f32>,
-    queue: EventQueue<usize>,
+    queue: EventQueue<EngineEvent>,
     net_rng: Rng,
     pub metrics: RunMetrics,
     /// Availability registry (dropout model; all-active by default).
@@ -102,7 +130,7 @@ impl Server {
             history,
             history_pool: Vec::new(),
             agg: Aggregator::new(),
-            upload_bufs: vec![QuantBuf::new(); n_clients],
+            upload_bufs: vec![QuantBuf::new(); n_clients + 1],
             upload_weights: Vec::with_capacity(n_clients),
             bcast_buf: QuantBuf::new(),
             bcast_model: Vec::new(),
@@ -231,7 +259,8 @@ impl Server {
         let n_active = reports.len();
         // Order arrivals on the event queue (deterministic tie-break).
         for (i, &t) in report_arrival.iter().enumerate() {
-            self.queue.schedule_at(t, i);
+            self.queue
+                .schedule_at(t, EngineEvent::Report { client: reports[i].client_id });
         }
         let mut last_arrival = round_start;
         while let Some(e) = self.queue.pop() {
@@ -277,6 +306,7 @@ impl Server {
         // heap allocation with serial kernels (even f32 goes through the
         // codec, which for f32 is a byte-exact memcpy).
         let mut agg_time = last_arrival;
+        let mut upload_staleness: Vec<usize> = Vec::with_capacity(n_selected);
         if n_selected > 0 {
             let payload = self.ctx.model_payload_bytes;
             let precision = self.cfg.upload_precision;
@@ -284,6 +314,7 @@ impl Server {
             let mut used = 0usize;
             for (i, client) in self.clients.iter().enumerate() {
                 if fleet_selected[i] {
+                    upload_staleness.push(client.staleness);
                     let req = self
                         .ctx
                         .link
@@ -345,17 +376,7 @@ impl Server {
         }
         self.queue.advance_to(bcast_done);
 
-        // Bound the history to what the policy needs (plus the current);
-        // retired entries are recycled through `history_pool`, so the
-        // steady-state round never allocates here.
-        let mut entry = self.history_pool.pop().unwrap_or_default();
-        entry.clear();
-        entry.extend_from_slice(&self.global);
-        self.history.push(entry);
-        let keep = self.policy.history_depth().max(1) + 1;
-        while self.history.len() > keep {
-            self.history_pool.push(self.history.remove(0));
-        }
+        self.push_history();
 
         // --- 5. Evaluate + record.
         let (global_acc, global_loss) = if round % self.cfg.eval_every == 0 {
@@ -387,6 +408,9 @@ impl Server {
             selected: fleet_selected,
             client_accs: fleet_accs,
             idle_seconds,
+            reports: n_active,
+            in_flight: 0,
+            upload_staleness,
         };
         if global_acc.is_finite() {
             log_info!(
@@ -400,11 +424,339 @@ impl Server {
         Ok(record)
     }
 
+    /// Bound the history to what the policy needs (plus the current);
+    /// retired entries are recycled through `history_pool`, so the
+    /// steady-state round never allocates here.
+    fn push_history(&mut self) {
+        let mut entry = self.history_pool.pop().unwrap_or_default();
+        entry.clear();
+        entry.extend_from_slice(&self.global);
+        self.history.push(entry);
+        let keep = self.policy.history_depth().max(1) + 1;
+        while self.history.len() > keep {
+            self.history_pool.push(self.history.remove(0));
+        }
+    }
+
     /// Run all configured rounds.
     pub fn run(&mut self, exec: &mut dyn Executor) -> Result<()> {
         for _ in 0..self.cfg.rounds {
             self.run_round(exec)?;
         }
+        Ok(())
+    }
+
+    /// Run the barrier-free event-driven engine for `cfg.rounds`
+    /// aggregations (buffer flushes).
+    ///
+    /// Clients run on independent virtual clocks: each `Start -> local
+    /// round -> Report` is gated on arrival ([`SelectionPolicy::
+    /// gate_report`] against the fleet's last-known values), gated clients
+    /// upload, and the server aggregates once `async_engine.buffer_k`
+    /// uploads have accumulated — folding the buffer into the global model
+    /// with the staleness-weighted mixing rule `alpha(tau)`
+    /// ([`MixingRule`]). Skipped clients keep training their (now stale)
+    /// local models immediately; no one ever waits for a straggler.
+    ///
+    /// Determinism: the engine is a single-threaded event loop over the
+    /// deterministic [`EventQueue`] (time, then sequence number), every
+    /// stochastic choice flows from named per-stream forks of the
+    /// experiment seed, and the parallel kernels underneath are
+    /// bit-identical for every worker count — so two runs with the same
+    /// seed and `VAFL_THREADS` produce identical `RoundRecord` streams
+    /// (asserted in `rust/tests/engine_async.rs` and pinned by the
+    /// golden-run snapshot).
+    ///
+    /// With `buffer_k == num_clients` and `alpha == 1` the engine
+    /// degenerates to the barriered algorithm: every flush contains
+    /// exactly one upload per (gated) client and the mix is plain FedAvg
+    /// replacement.
+    pub fn run_event_driven(&mut self, exec: &mut dyn Executor) -> Result<()> {
+        let n = self.clients.len();
+        let k = self.cfg.async_engine.buffer_k.clamp(1, n);
+        let mixing = self.cfg.async_engine.mixing;
+        let passes = self.cfg.local_passes;
+        let batches = self.cfg.batches_per_pass;
+        let lr = self.cfg.lr;
+        let (tf, ef) = (self.ctx.train_flops, self.ctx.eval_flops);
+        let payload = self.ctx.model_payload_bytes;
+
+        // Per-client engine state.
+        let mut pending: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
+        let mut last_values = vec![f64::NAN; n];
+        let mut last_accs = vec![f64::NAN; n];
+        let mut local_rounds = vec![0usize; n];
+        let mut synced_version = vec![0u64; n];
+        // Offline retry backoff: one local-round span of that client.
+        let mut backoff = vec![1.0f64; n];
+        let mut version: u64 = 0;
+
+        // Aggregation buffer: (client, staleness tau, upload arrival time).
+        let mut buffer: Vec<(usize, usize, f64)> = Vec::with_capacity(k);
+        let mut in_flight = 0usize;
+        let mut window = FlushWindow::default();
+        // Consecutive gated-out reports; a long streak force-uploads the
+        // next report so a fully-lazy fleet cannot starve the engine.
+        let mut skip_streak = 0usize;
+
+        let mut flushes = 0usize;
+        let t0 = self.queue.now();
+        for i in 0..n {
+            self.queue.schedule_at(t0, EngineEvent::Start { client: i });
+        }
+
+        while flushes < self.cfg.rounds {
+            let ev = self
+                .queue
+                .pop()
+                .expect("event-driven engine starved (no events, no pending flush)");
+            let t = ev.time;
+            match ev.payload {
+                EngineEvent::Start { client } => {
+                    if !self.registry.poll(client) {
+                        // Offline: the local model goes stale and the
+                        // client retries after one local-round span.
+                        self.clients[client].mark_stale();
+                        self.queue
+                            .schedule_at(t + backoff[client], EngineEvent::Start { client });
+                        continue;
+                    }
+                    local_rounds[client] += 1;
+                    let rep = self.clients[client]
+                        .local_round(exec, local_rounds[client], passes, batches, lr, tf, ef)?;
+                    backoff[client] = rep.compute_seconds.max(1e-9);
+                    let uplink = self
+                        .ctx
+                        .link
+                        .transfer_seconds(&Message::ValueReport, &mut self.net_rng);
+                    let arrive = t + rep.compute_seconds + uplink;
+                    pending[client] = Some(rep);
+                    self.queue.schedule_at(arrive, EngineEvent::Report { client });
+                }
+                EngineEvent::Report { client } => {
+                    let rep = pending[client].take().expect("report without a local round");
+                    window.bytes_up += Message::ValueReport.bytes();
+                    let decision = {
+                        let gctx = AsyncGateContext {
+                            n_clients: n,
+                            last_values: &last_values,
+                            global_history: &self.history,
+                        };
+                        self.policy.gate_report(&rep, &gctx)
+                    };
+                    last_values[client] = decision.value;
+                    last_accs[client] = rep.acc;
+                    window.reports += 1;
+                    window.train_loss_sum += rep.train_loss;
+                    window.threshold = decision.threshold;
+                    let force = !decision.upload && skip_streak >= 8 * n;
+                    if decision.upload || force {
+                        if force {
+                            log_debug!(
+                                "server",
+                                "forcing upload from client {client} after {skip_streak} gated reports"
+                            );
+                        }
+                        skip_streak = 0;
+                        let req = self
+                            .ctx
+                            .link
+                            .transfer_seconds(&Message::UploadRequest, &mut self.net_rng);
+                        let up = self.ctx.link.transfer_seconds(
+                            &Message::ModelUpload { payload_bytes: payload },
+                            &mut self.net_rng,
+                        );
+                        window.bytes_down += Message::UploadRequest.bytes();
+                        window.bytes_up += payload;
+                        in_flight += 1;
+                        self.queue.schedule_at(t + req + up, EngineEvent::Upload { client });
+                    } else {
+                        skip_streak += 1;
+                        self.clients[client].mark_stale();
+                        // Keep training the (now stale) local model.
+                        self.queue.schedule_at(t, EngineEvent::Start { client });
+                    }
+                }
+                EngineEvent::Upload { client } => {
+                    in_flight -= 1;
+                    let tau = (version - synced_version[client]) as usize;
+                    buffer.push((client, tau, t));
+                    if buffer.len() < k {
+                        continue;
+                    }
+                    flushes += 1;
+                    version += 1;
+                    self.flush_buffer(
+                        exec,
+                        &mut buffer,
+                        flushes,
+                        t,
+                        in_flight,
+                        &mut window,
+                        &last_values,
+                        &last_accs,
+                        &mut synced_version,
+                        version,
+                        mixing,
+                    )?;
+                }
+            }
+        }
+        // Abandon in-flight events so a later (barriered) round on the
+        // same server does not see them.
+        while self.queue.pop().is_some() {}
+        Ok(())
+    }
+
+    /// Aggregate the flushed buffer into the global model with
+    /// staleness-weighted mixing, broadcast to its clients, restart them,
+    /// evaluate, and cut one [`RoundRecord`].
+    #[allow(clippy::too_many_arguments)]
+    fn flush_buffer(
+        &mut self,
+        exec: &mut dyn Executor,
+        buffer: &mut Vec<(usize, usize, f64)>,
+        flush_idx: usize,
+        now: f64,
+        in_flight: usize,
+        window: &mut FlushWindow,
+        last_values: &[f64],
+        last_accs: &[f64],
+        synced_version: &mut [u64],
+        version: u64,
+        mixing: MixingRule,
+    ) -> Result<()> {
+        let n = self.clients.len();
+        let kk = buffer.len();
+        let precision = self.cfg.upload_precision;
+        let payload = self.ctx.model_payload_bytes;
+        self.round = flush_idx;
+
+        // Deterministic aggregation order — and a bitwise match with the
+        // barriered engine's client-order FedAvg when the buffer spans the
+        // whole fleet.
+        buffer.sort_by_key(|e| e.0);
+
+        // Buffered clients are blocked between upload and broadcast, so
+        // encoding their (pristine) params now is byte-identical to
+        // encoding at send time.
+        for (j, &(c, _, _)) in buffer.iter().enumerate() {
+            self.clients[c].encode_upload(precision, &mut self.upload_bufs[j]);
+        }
+        // FedAvg weights n_i scaled by alpha(tau_i); the buffer's mean
+        // alpha is the global mixing rate.
+        self.upload_weights.clear();
+        let mut alpha_sum = 0.0f64;
+        for &(c, tau, _) in buffer.iter() {
+            let a = mixing.alpha(tau);
+            alpha_sum += a;
+            self.upload_weights.push(self.clients[c].num_samples() as f64 * a);
+        }
+        let abar = (alpha_sum / kk as f64).min(1.0);
+        if abar >= 1.0 {
+            // Pure FedAvg replacement (the barriered rule).
+            self.agg.aggregate_payloads(
+                &self.upload_bufs[..kk],
+                &self.upload_weights,
+                &mut self.global,
+            );
+        } else {
+            // theta <- (1 - abar) * theta + abar * fedavg(buffer): the
+            // current global model rides along as one extra f32 payload
+            // (slot kk) with weight 1 - abar; the buffered weights are
+            // pre-normalized to sum to abar.
+            let wsum: f64 = self.upload_weights.iter().sum();
+            for w in self.upload_weights.iter_mut() {
+                *w = abar * *w / wsum;
+            }
+            self.upload_weights.push(1.0 - abar);
+            self.upload_bufs[kk].encode(Precision::F32, &self.global);
+            self.agg.aggregate_payloads(
+                &self.upload_bufs[..kk + 1],
+                &self.upload_weights,
+                &mut self.global,
+            );
+        }
+
+        // Broadcast the new global to the flushed clients (at wire
+        // precision, codec once per flush) and restart their clocks.
+        let bcast_model: Option<&[f32]> = if precision == Precision::F32 {
+            None
+        } else {
+            self.bcast_buf.encode(precision, &self.global);
+            self.bcast_model.resize(self.global.len(), 0.0);
+            self.bcast_buf.decode_into(&mut self.bcast_model);
+            Some(&self.bcast_model)
+        };
+        for &(c, _, _) in buffer.iter() {
+            let down = self.ctx.link.transfer_seconds(
+                &Message::ModelBroadcast { payload_bytes: payload },
+                &mut self.net_rng,
+            );
+            window.bytes_down += payload;
+            self.clients[c].sync(bcast_model.unwrap_or(&self.global));
+            synced_version[c] = version;
+            self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
+        }
+        self.push_history();
+
+        let (global_acc, global_loss) = if flush_idx % self.cfg.eval_every == 0 {
+            evaluate_with_params(
+                exec,
+                &self.global,
+                &self.ctx.test_images,
+                &self.ctx.test_labels,
+            )?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        // Buffer wait: how long each upload sat before the flush.
+        let idle_seconds: f64 = buffer.iter().map(|&(_, _, at)| now - at).sum();
+        let mut fleet_selected = vec![false; n];
+        for &(c, _, _) in buffer.iter() {
+            fleet_selected[c] = true;
+        }
+        let cum_uploads = self.metrics.records.last().map_or(0, |r| r.cum_uploads) + kk;
+        // Window telemetry is attributed to the flush that closes the
+        // window: reports/bytes count when their events fire, so an upload
+        // can land in a later flush than the report that caused it. A
+        // window that saw no reports records NaN (no data), not 0.0.
+        let (train_loss, threshold) = if window.reports == 0 {
+            (f64::NAN, f64::NAN)
+        } else {
+            (window.train_loss_sum / window.reports as f64, window.threshold)
+        };
+        let record = RoundRecord {
+            round: flush_idx,
+            vtime: now,
+            global_acc,
+            global_loss,
+            train_loss,
+            uploads: kk,
+            cum_uploads,
+            bytes_up: window.bytes_up,
+            bytes_down: window.bytes_down,
+            threshold,
+            values: last_values.to_vec(),
+            selected: fleet_selected,
+            client_accs: last_accs.to_vec(),
+            idle_seconds,
+            reports: window.reports,
+            in_flight,
+            upload_staleness: buffer.iter().map(|&(_, tau, _)| tau).collect(),
+        };
+        if global_acc.is_finite() {
+            log_info!(
+                "server",
+                "[{}] flush {flush_idx:>3}: acc={global_acc:.4} buffer={kk} in_flight={in_flight} stale_max={} vt={now:.1}s",
+                self.metrics.algorithm,
+                record.staleness_max()
+            );
+        }
+        self.metrics.push(record);
+        *window = FlushWindow::default();
+        buffer.clear();
         Ok(())
     }
 

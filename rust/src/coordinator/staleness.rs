@@ -1,0 +1,146 @@
+//! Staleness-aware mixing rules for the barrier-free engine.
+//!
+//! When the server aggregates on-arrival, an upload may have been computed
+//! against a global model that is `tau` versions old. The mixing rule
+//! `alpha(tau)` controls how much such an upload moves the global model:
+//! the flushed buffer is folded in as
+//! `theta <- (1 - abar) * theta + abar * fedavg(buffer)` with per-upload
+//! FedAvg weights `n_i * alpha(tau_i)` and `abar` the buffer's mean
+//! `alpha(tau_i)` — the standard async-FL family (FedAsync's constant /
+//! polynomial rules, plus a hinge variant). `alpha == 1` everywhere
+//! degenerates to the barriered engine's plain FedAvg replacement.
+//!
+//! Every rule is bounded in `(0, alpha0]` and monotone non-increasing in
+//! `tau` (property-tested in `rust/tests/engine_async.rs`).
+
+use anyhow::{bail, Result};
+
+/// The mixing rule `alpha(tau)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MixingRule {
+    /// `alpha(tau) = alpha0` — staleness-blind.
+    Constant { alpha: f64 },
+    /// `alpha(tau) = alpha0 * (1 + tau)^-exponent` (FedAsync's polynomial).
+    Polynomial { alpha: f64, exponent: f64 },
+    /// `alpha(tau) = alpha0` while `tau <= grace`, then
+    /// `alpha0 / (1 + slope * (tau - grace))` (FedAsync's hinge).
+    Hinge { alpha: f64, grace: usize, slope: f64 },
+}
+
+impl Default for MixingRule {
+    /// Gentle polynomial decay — a sensible default for on-arrival
+    /// aggregation (buffer of 1), where raw replacement (`alpha = 1`)
+    /// would let any single straggler overwrite the global model.
+    fn default() -> Self {
+        MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 }
+    }
+}
+
+impl MixingRule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixingRule::Constant { .. } => "constant",
+            MixingRule::Polynomial { .. } => "polynomial",
+            MixingRule::Hinge { .. } => "hinge",
+        }
+    }
+
+    /// Mixing weight for an upload that is `tau` global versions stale.
+    pub fn alpha(&self, tau: usize) -> f64 {
+        match *self {
+            MixingRule::Constant { alpha } => alpha,
+            MixingRule::Polynomial { alpha, exponent } => {
+                alpha * (1.0 + tau as f64).powf(-exponent)
+            }
+            MixingRule::Hinge { alpha, grace, slope } => {
+                if tau <= grace {
+                    alpha
+                } else {
+                    alpha / (1.0 + slope * (tau - grace) as f64)
+                }
+            }
+        }
+    }
+
+    /// Base rate `alpha(0)` (the rule's upper bound).
+    pub fn alpha0(&self) -> f64 {
+        match *self {
+            MixingRule::Constant { alpha }
+            | MixingRule::Polynomial { alpha, .. }
+            | MixingRule::Hinge { alpha, .. } => alpha,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let a0 = self.alpha0();
+        if !(0.0 < a0 && a0 <= 1.0) {
+            bail!("mixing alpha must be in (0, 1], got {a0}");
+        }
+        match *self {
+            MixingRule::Constant { .. } => {}
+            MixingRule::Polynomial { exponent, .. } => {
+                if !(exponent >= 0.0 && exponent.is_finite()) {
+                    bail!("mixing exponent must be finite and >= 0, got {exponent}");
+                }
+            }
+            MixingRule::Hinge { slope, .. } => {
+                if !(slope >= 0.0 && slope.is_finite()) {
+                    bail!("mixing hinge slope must be finite and >= 0, got {slope}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_ignores_staleness() {
+        let r = MixingRule::Constant { alpha: 0.7 };
+        assert_eq!(r.alpha(0), 0.7);
+        assert_eq!(r.alpha(100), 0.7);
+    }
+
+    #[test]
+    fn polynomial_decays_from_alpha0() {
+        let r = MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 };
+        assert!((r.alpha(0) - 0.8).abs() < 1e-12);
+        assert!((r.alpha(3) - 0.8 / 2.0).abs() < 1e-12); // (1+3)^-0.5 = 1/2
+        assert!(r.alpha(10) < r.alpha(3));
+    }
+
+    #[test]
+    fn hinge_flat_then_decaying() {
+        let r = MixingRule::Hinge { alpha: 0.6, grace: 2, slope: 1.0 };
+        assert_eq!(r.alpha(0), 0.6);
+        assert_eq!(r.alpha(2), 0.6);
+        assert!((r.alpha(3) - 0.3).abs() < 1e-12);
+        assert!((r.alpha(4) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(MixingRule::Constant { alpha: 0.0 }.validate().is_err());
+        assert!(MixingRule::Constant { alpha: 1.5 }.validate().is_err());
+        assert!(MixingRule::Polynomial { alpha: 0.5, exponent: -1.0 }
+            .validate()
+            .is_err());
+        assert!(MixingRule::Hinge { alpha: 0.5, grace: 1, slope: f64::NAN }
+            .validate()
+            .is_err());
+        assert!(MixingRule::default().validate().is_ok());
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(MixingRule::default().name(), "polynomial");
+        assert_eq!(MixingRule::Constant { alpha: 1.0 }.name(), "constant");
+        assert_eq!(
+            MixingRule::Hinge { alpha: 1.0, grace: 0, slope: 1.0 }.name(),
+            "hinge"
+        );
+    }
+}

@@ -123,6 +123,9 @@ mod tests {
                 selected: vec![true],
                 client_accs: vec![a, a / 2.0],
                 idle_seconds: 0.0,
+                reports: 1,
+                in_flight: 0,
+                upload_staleness: vec![0],
             });
         }
         m

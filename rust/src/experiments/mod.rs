@@ -2,11 +2,12 @@
 //! emitters that regenerate every table and figure of §V.
 
 pub mod figures;
+pub mod straggler;
 pub mod table3;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Algorithm, Backend, ExperimentConfig};
+use crate::config::{Algorithm, Backend, EngineMode, ExperimentConfig};
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::server::{build_server, Server};
 use crate::data::synth::SynthConfig;
@@ -129,11 +130,16 @@ pub fn build(cfg: &ExperimentConfig) -> Result<(Server, Box<dyn Executor>)> {
     Ok((server, exec))
 }
 
-/// Run a full experiment to completion.
+/// Run a full experiment to completion on the configured engine
+/// (barriered round loop, or the barrier-free event-driven engine when
+/// `cfg.engine = barrier_free`).
 pub fn run(cfg: &ExperimentConfig) -> Result<Outcome> {
     crate::util::logging::init();
     let (mut server, mut exec) = build(cfg)?;
-    server.run(exec.as_mut())?;
+    match cfg.engine {
+        EngineMode::Barriered => server.run(exec.as_mut())?,
+        EngineMode::BarrierFree => server.run_event_driven(exec.as_mut())?,
+    }
     Ok(Outcome::from_metrics(server.metrics.clone()))
 }
 

@@ -144,6 +144,9 @@ mod tests {
             selected: vec![],
             client_accs: vec![],
             idle_seconds: 0.0,
+            reports: 0,
+            in_flight: 0,
+            upload_staleness: vec![],
         });
         m
     }
@@ -193,6 +196,9 @@ mod tests {
             selected: vec![],
             client_accs: vec![],
             idle_seconds: 0.0,
+            reports: 0,
+            in_flight: 0,
+            upload_staleness: vec![],
         });
         let rows = rows_for_experiment(&[fake_run("a", "afl", 10), m]);
         let text = render(&rows);

@@ -5,7 +5,10 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the asynchronous federated-learning coordinator:
-//!   round engine, communication-value client selection (VAFL, Eq. 1–2),
+//!   two round engines (the paper's barriered loop and a barrier-free
+//!   event-driven engine with staleness-weighted on-arrival aggregation —
+//!   see EXPERIMENTS.md §Engines), communication-value client selection
+//!   (VAFL, Eq. 1–2),
 //!   the paper's comparators (plain async FedAvg "AFL" and the EAFLM
 //!   gradient gate, Eq. 3), a simulated heterogeneous edge fleet
 //!   (Raspberry-Pi-class device models + LAN network simulator), metrics,

@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! vafl run [--config FILE] [--algorithm afl|vafl|eaflm] [--preset a|b|c|d]
-//!          [--rounds N] [--seed N] [--mock] [--out DIR] [--realtime SCALE]
+//!          [--engine barriered|barrier_free] [--rounds N] [--seed N]
+//!          [--mock] [--out DIR] [--realtime SCALE]
 //! vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]
 //!     # one preset, all three algorithms, Table III rows + Fig. 4
 //! vafl sweep [--rounds N] [--out DIR] [--mock]
@@ -110,7 +111,8 @@ fn print_usage() {
     println!(
         "vafl — Value-based Asynchronous Federated Learning (paper reproduction)\n\n\
          USAGE:\n  vafl run        [--preset a|b|c|d] [--config FILE] [--algorithm afl|vafl|eaflm]\n\
-         \x20                 [--rounds N] [--seed N] [--mock] [--out DIR] [--realtime SCALE] [--quiet]\n\
+         \x20                 [--engine barriered|barrier_free] [--rounds N] [--seed N] [--mock]\n\
+         \x20                 [--out DIR] [--realtime SCALE] [--quiet]\n\
          \x20 vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]\n\
          \x20 vafl sweep      [--rounds N] [--out DIR] [--mock]\n\
          \x20 vafl fig3       [--out DIR]\n\
@@ -130,6 +132,9 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
     };
     if let Some(a) = flags.get("algorithm") {
         cfg.algorithm = Algorithm::from_name(a)?;
+    }
+    if let Some(e) = flags.get("engine") {
+        cfg.engine = vafl::config::EngineMode::from_name(e)?;
     }
     if let Some(r) = flags.get_usize("rounds")? {
         cfg.rounds = r;

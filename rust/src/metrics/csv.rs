@@ -11,10 +11,10 @@ use super::RunMetrics;
 /// Write the per-round curve: one row per round.
 pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
     let mut out = String::new();
-    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down\n");
+    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max\n");
     for r in &m.records {
         out.push_str(&format!(
-            "{},{:.6},{},{},{},{},{},{},{:.6},{},{}\n",
+            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{}\n",
             r.round,
             r.vtime,
             fmt(r.global_acc),
@@ -26,6 +26,10 @@ pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
             r.idle_seconds,
             r.bytes_up,
             r.bytes_down,
+            r.reports,
+            r.in_flight,
+            fmt(r.staleness_mean()),
+            r.staleness_max(),
         ));
     }
     write_atomic(path.as_ref(), out.as_bytes())
@@ -98,6 +102,9 @@ mod tests {
             selected: vec![true, false],
             client_accs: vec![0.5, 0.4],
             idle_seconds: 0.3,
+            reports: 2,
+            in_flight: 1,
+            upload_staleness: vec![0, 3],
         });
         m
     }
@@ -111,7 +118,9 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,vtime,acc"));
+        assert!(lines[0].ends_with("reports,in_flight,stale_mean,stale_max"));
         assert!(lines[1].starts_with("1,1.250000,0.500000"));
+        assert!(lines[1].ends_with("2,1,1.500000,3"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

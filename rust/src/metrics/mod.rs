@@ -32,8 +32,36 @@ pub struct RoundRecord {
     pub selected: Vec<bool>,
     /// Per-client probe accuracies (Fig. 5).
     pub client_accs: Vec<f64>,
-    /// Straggler idle time: sum over clients of (round end - own finish).
+    /// Straggler idle time. Barriered: sum over clients of
+    /// (round end - own report arrival). Barrier-free: sum over the
+    /// flushed buffer of (flush time - upload arrival) — time an upload
+    /// sat waiting for the buffer to fill.
     pub idle_seconds: f64,
+    /// V reports processed this round / aggregation window (the gated
+    /// upload set is always a subset of these).
+    pub reports: usize,
+    /// Model uploads still in flight when this record was cut (always 0
+    /// for the barriered engine — the barrier drains them).
+    pub in_flight: usize,
+    /// Staleness (global versions behind) of each aggregated upload, in
+    /// aggregation order. Barriered: rounds since each selected client
+    /// last synced.
+    pub upload_staleness: Vec<usize>,
+}
+
+impl RoundRecord {
+    /// Mean staleness of this record's aggregated uploads (NaN if none).
+    pub fn staleness_mean(&self) -> f64 {
+        if self.upload_staleness.is_empty() {
+            return f64::NAN;
+        }
+        self.upload_staleness.iter().sum::<usize>() as f64 / self.upload_staleness.len() as f64
+    }
+
+    /// Max staleness of this record's aggregated uploads (0 if none).
+    pub fn staleness_max(&self) -> usize {
+        self.upload_staleness.iter().copied().max().unwrap_or(0)
+    }
 }
 
 /// A full run's metrics.
@@ -75,6 +103,34 @@ impl RunMetrics {
             .iter()
             .find(|r| r.global_acc >= self.target_acc)
             .map(|r| r.round)
+    }
+
+    /// Virtual time at which the target accuracy was first reached — the
+    /// wall-clock-to-accuracy metric the engine comparison reports.
+    pub fn vtime_to_target(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.global_acc >= self.target_acc)
+            .map(|r| r.vtime)
+    }
+
+    /// Histogram of upload staleness across the whole run:
+    /// `map[tau] = number of aggregated uploads that were tau versions
+    /// stale`. Empty for runs that recorded no staleness (e.g. seeds
+    /// predating the field).
+    pub fn staleness_histogram(&self) -> std::collections::BTreeMap<usize, usize> {
+        let mut hist = std::collections::BTreeMap::new();
+        for r in &self.records {
+            for &tau in &r.upload_staleness {
+                *hist.entry(tau).or_insert(0) += 1;
+            }
+        }
+        hist
+    }
+
+    /// Total reports processed across the run.
+    pub fn total_reports(&self) -> usize {
+        self.records.iter().map(|r| r.reports).sum()
     }
 
     /// Highest accuracy seen (paper: "Acc is the highest Acc rate").
@@ -158,6 +214,9 @@ impl RunMetrics {
                                 ("train_loss", finite_or_null(r.train_loss)),
                                 ("uploads", Value::from(r.uploads)),
                                 ("cum_uploads", Value::from(r.cum_uploads)),
+                                ("reports", Value::from(r.reports)),
+                                ("in_flight", Value::from(r.in_flight)),
+                                ("stale_max", Value::from(r.staleness_max())),
                                 ("threshold", finite_or_null(r.threshold)),
                                 (
                                     "selected",
@@ -217,6 +276,9 @@ mod tests {
             selected: vec![true, false],
             client_accs: vec![acc, acc / 2.0],
             idle_seconds: 0.1,
+            reports: 2,
+            in_flight: 0,
+            upload_staleness: vec![0, uploads],
         }
     }
 
@@ -274,6 +336,31 @@ mod tests {
         assert_eq!(curves.len(), 2);
         assert_eq!(curves[0].len(), 3);
         assert_eq!(curves[1][0], (1, 0.25));
+    }
+
+    #[test]
+    fn vtime_to_target_first_crossing() {
+        let m = run();
+        // Target 0.9 first crossed at round 2 (vtime = round as f64).
+        assert_eq!(m.vtime_to_target(), Some(2.0));
+        let mut never = RunMetrics::new("a", "afl", 0.99);
+        never.push(record(1, 0.5, 1, 1));
+        assert_eq!(never.vtime_to_target(), None);
+    }
+
+    #[test]
+    fn staleness_stats_and_histogram() {
+        let m = run(); // staleness vecs: [0,2], [0,1], [0,1]
+        assert_eq!(m.records[0].staleness_max(), 2);
+        assert!((m.records[1].staleness_mean() - 0.5).abs() < 1e-12);
+        let h = m.staleness_histogram();
+        assert_eq!(h.get(&0), Some(&3));
+        assert_eq!(h.get(&1), Some(&2));
+        assert_eq!(h.get(&2), Some(&1));
+        assert_eq!(m.total_reports(), 6);
+        let empty = RoundRecord { upload_staleness: vec![], ..m.records[0].clone() };
+        assert!(empty.staleness_mean().is_nan());
+        assert_eq!(empty.staleness_max(), 0);
     }
 
     #[test]

@@ -86,6 +86,33 @@ impl LinkProfile {
         }
     }
 
+    /// A straggler-heavy WAN: thin asymmetric uplink, high latency, heavy
+    /// jitter, frequent transient loss — the regime where the barriered
+    /// engine stalls on its slowest transfer every round and the
+    /// barrier-free engine pulls ahead (see `experiments::straggler` and
+    /// the `async_engine` bench).
+    pub fn straggler_wan() -> Self {
+        LinkProfile {
+            up_mbps: 8.0,
+            down_mbps: 40.0,
+            latency_s: 0.08,
+            jitter_sigma: 0.8,
+            drop_prob: 0.15,
+        }
+    }
+
+    /// Delivery attempts for one transfer: 1 plus one re-delivery per
+    /// transient drop, capped at 5 attempts. Each drop consumes exactly
+    /// one uniform draw from `rng`, so the retry count is reproducible
+    /// from the stream.
+    pub fn sample_attempts(&self, rng: &mut Rng) -> u32 {
+        let mut attempts = 1u32;
+        while self.drop_prob > 0.0 && rng.f64() < self.drop_prob && attempts < 5 {
+            attempts += 1;
+        }
+        attempts
+    }
+
     /// Virtual seconds to deliver `msg`, including retries.
     pub fn transfer_seconds(&self, msg: &Message, rng: &mut Rng) -> f64 {
         let mbps = match msg.direction() {
@@ -97,10 +124,7 @@ impl LinkProfile {
         } else {
             0.0
         };
-        let mut attempts = 1u32;
-        while self.drop_prob > 0.0 && rng.f64() < self.drop_prob && attempts < 5 {
-            attempts += 1;
-        }
+        let attempts = self.sample_attempts(rng);
         (wire + self.latency_s) * attempts as f64 * rng.lognormal_jitter(self.jitter_sigma)
     }
 }
@@ -165,6 +189,68 @@ mod tests {
         let ratio = t / base;
         assert!((ratio - ratio.round()).abs() < 1e-9, "ratio {ratio}");
         assert!(ratio >= 2.0 && ratio <= 5.0);
+    }
+
+    #[test]
+    fn lossy_link_redelivers_exactly_once_per_drop() {
+        // Replay the same seeded stream by hand: the number of delivery
+        // attempts must be exactly 1 + (number of drop draws below
+        // drop_prob before the first success), capped at 5 attempts.
+        let mut l = no_jitter(LinkProfile::paper_lan());
+        for &p in &[0.05, 0.3, 0.7, 0.9999] {
+            l.drop_prob = p;
+            for seed in 0..200u64 {
+                let mut rng = Rng::new(0xD0_0000 + seed);
+                let attempts = l.sample_attempts(&mut rng);
+                let mut oracle = Rng::new(0xD0_0000 + seed);
+                let mut drops = 0u32;
+                while drops < 4 && oracle.f64() < p {
+                    drops += 1;
+                }
+                assert_eq!(attempts, 1 + drops, "p={p} seed={seed}");
+                assert!(attempts <= 5);
+            }
+        }
+        // A lossless link never retries and consumes no randomness.
+        l.drop_prob = 0.0;
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(l.sample_attempts(&mut rng), 1);
+        assert_eq!(rng.next_u64(), before, "lossless path consumed rng");
+    }
+
+    #[test]
+    fn lossy_transfer_time_monotone_in_payload_bytes() {
+        // With the rng stream replayed from the same seed per call, total
+        // simulated transfer time (retries included) is monotone
+        // non-decreasing in payload bytes — a drop multiplies the per-
+        // attempt time, it never reorders sizes.
+        let mut l = LinkProfile::straggler_wan();
+        l.jitter_sigma = 0.4; // keep jitter, pin the stream per call
+        for seed in 0..50u64 {
+            let mut last = 0.0f64;
+            for bytes in [100u64, 1_000, 50_000, 1_000_000, 5_000_000] {
+                let t = l.transfer_seconds(
+                    &Message::ModelUpload { payload_bytes: bytes },
+                    &mut Rng::new(7000 + seed),
+                );
+                assert!(
+                    t >= last,
+                    "seed {seed}: {bytes} B took {t} < smaller payload's {last}"
+                );
+                last = t;
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_wan_is_much_slower_than_paper_lan() {
+        let msg = Message::ModelUpload { payload_bytes: 1_000_000 };
+        let lan = no_jitter(LinkProfile::paper_lan())
+            .transfer_seconds(&msg, &mut Rng::new(1));
+        let wan = no_jitter(LinkProfile::straggler_wan())
+            .transfer_seconds(&msg, &mut Rng::new(1));
+        assert!(wan > 10.0 * lan, "wan {wan} lan {lan}");
     }
 
     #[test]

@@ -34,10 +34,12 @@ impl<T: PartialEq> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert for earliest-first. Tie-break on
         // sequence number so ordering is total and deterministic.
+        // `total_cmp` keeps the order total even for non-finite times
+        // (which [`EventQueue::schedule_at`] rejects at push, so they can
+        // only appear in hand-built events).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -67,7 +69,12 @@ impl<T: PartialEq> EventQueue<T> {
     }
 
     /// Schedule `payload` at absolute time `at` (>= now is enforced).
+    ///
+    /// Panics on non-finite `at`: a NaN-timed event would have no defined
+    /// place in the order (and an infinite one would never be reached), so
+    /// the queue rejects it at push instead of silently mis-sorting.
     pub fn schedule_at(&mut self, at: VTime, payload: T) {
+        assert!(at.is_finite(), "non-finite event time {at}");
         let t = if at < self.now { self.now } else { at };
         let e = Event { time: t, seq: self.seq, payload };
         self.seq += 1;
@@ -97,6 +104,7 @@ impl<T: PartialEq> EventQueue<T> {
 
     /// Advance the clock directly (used between rounds).
     pub fn advance_to(&mut self, t: VTime) {
+        assert!(!t.is_nan(), "NaN clock advance");
         if t > self.now {
             self.now = t;
         }
@@ -183,6 +191,34 @@ mod tests {
         assert_eq!(q.now(), 4.0);
         q.advance_to(2.0);
         assert_eq!(q.now(), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_rejected_at_push() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, "bad");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_rejected_at_push() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::INFINITY, "bad");
+    }
+
+    #[test]
+    fn event_ordering_is_total_even_for_nonfinite_times() {
+        // Hand-built events (bypassing the push guard) must still sort
+        // under a total order: NaN has a defined, consistent rank via
+        // `total_cmp` instead of collapsing to "equal to everything".
+        let nan = Event { time: f64::NAN, seq: 0, payload: 0 };
+        let one = Event { time: 1.0, seq: 1, payload: 1 };
+        assert_ne!(nan.cmp(&one), Ordering::Equal);
+        assert_eq!(nan.cmp(&one), one.cmp(&nan).reverse());
+        let nan2 = Event { time: f64::NAN, seq: 2, payload: 2 };
+        // Equal times (even NaN) fall back to the seq tie-break.
+        assert_eq!(nan.cmp(&nan2), Ordering::Greater); // earlier seq pops first
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Barrier-free engine tests: staleness-mixing properties, gating
+//! invariants, barriered == barrier-free degeneration, determinism, and
+//! the straggler-scenario wall-clock win.
+
+use vafl::config::{Algorithm, AsyncEngineConfig, Backend, EngineMode, ExperimentConfig};
+use vafl::coordinator::MixingRule;
+use vafl::experiments::{self, straggler};
+use vafl::util::rng::Rng;
+
+fn quick(which: char, algorithm: Algorithm, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = algorithm;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 120;
+    cfg.test_samples = 96;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// alpha(tau) mixing-rule properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_mixing_rules_monotone_and_bounded() {
+    // Over random parameterizations: alpha(tau) is in (0, alpha0] and
+    // monotone non-increasing in tau.
+    let mut rng = Rng::new(0xA1FA);
+    for case in 0..200 {
+        let a0 = 0.05 + 0.95 * rng.f64();
+        let rule = match case % 3 {
+            0 => MixingRule::Constant { alpha: a0 },
+            1 => MixingRule::Polynomial { alpha: a0, exponent: rng.f64() * 3.0 },
+            _ => MixingRule::Hinge {
+                alpha: a0,
+                grace: rng.below(10),
+                slope: rng.f64() * 4.0,
+            },
+        };
+        rule.validate().unwrap();
+        let mut prev = f64::INFINITY;
+        for tau in 0..64 {
+            let a = rule.alpha(tau);
+            assert!(a > 0.0, "{rule:?} alpha({tau}) = {a} <= 0");
+            assert!(
+                a <= rule.alpha0() + 1e-15,
+                "{rule:?} alpha({tau}) = {a} > alpha0 {}",
+                rule.alpha0()
+            );
+            assert!(
+                a <= prev + 1e-15,
+                "{rule:?} not monotone at tau={tau}: {a} > {prev}"
+            );
+            prev = a;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gating invariants on full event-driven runs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gated_uploads_are_subset_of_reports() {
+    // Across all three policies the upload count can never exceed the
+    // report count (uploads ⊆ reports), and AFL uploads on every report.
+    for algo in Algorithm::ALL {
+        let mut cfg = quick('b', algo, 8);
+        cfg.engine = EngineMode::BarrierFree;
+        cfg.async_engine = AsyncEngineConfig {
+            buffer_k: 2,
+            mixing: MixingRule::Constant { alpha: 0.9 },
+        };
+        let out = experiments::run(&cfg).unwrap();
+        let uploads = out.total_uploads;
+        let reports = out.metrics.total_reports();
+        assert!(
+            uploads <= reports,
+            "{}: {uploads} uploads > {reports} reports",
+            algo.name()
+        );
+        if algo == Algorithm::Afl {
+            assert_eq!(uploads, reports, "afl must upload on every report");
+        }
+        for r in &out.metrics.records {
+            assert_eq!(r.uploads, r.upload_staleness.len());
+        }
+    }
+}
+
+#[test]
+fn vafl_gate_actually_skips_reports() {
+    // The async VAFL gate must actually exercise its skip path: both
+    // engines flush `rounds` buffers of 2 (equal uploads), but VAFL needs
+    // strictly more reports than uploads — skipped reports keep training
+    // instead of uploading.
+    let mk = |algo| {
+        let mut cfg = quick('b', algo, 12);
+        cfg.engine = EngineMode::BarrierFree;
+        cfg.async_engine =
+            AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+        experiments::run(&cfg).unwrap()
+    };
+    let afl = mk(Algorithm::Afl);
+    let vafl = mk(Algorithm::Vafl);
+    assert_eq!(afl.total_uploads, vafl.total_uploads);
+    assert!(
+        vafl.metrics.total_reports() > vafl.total_uploads,
+        "vafl never gated anything: {} reports for {} uploads",
+        vafl.metrics.total_reports(),
+        vafl.total_uploads
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Degeneration: barrier-free == barriered when nothing is ever stale
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barrier_free_degenerates_to_barriered_with_full_buffer() {
+    // With an ungated policy (AFL), buffer_k = fleet size, and
+    // alpha == 1, every flush contains exactly one upload per client with
+    // zero staleness — the barriered algorithm. The global-model stream
+    // must match bitwise (accuracy is a pure function of the model), as
+    // must the communication accounting. Only virtual timestamps differ
+    // (the engines consume the shared link-rng stream in different
+    // orders).
+    let mut base = quick('a', Algorithm::Afl, 6);
+    base.engine = EngineMode::Barriered;
+    let barriered = experiments::run(&base).unwrap();
+
+    let mut acfg = base.clone();
+    acfg.engine = EngineMode::BarrierFree;
+    acfg.async_engine = AsyncEngineConfig {
+        buffer_k: base.num_clients,
+        mixing: MixingRule::Constant { alpha: 1.0 },
+    };
+    let bfree = experiments::run(&acfg).unwrap();
+
+    assert_eq!(barriered.metrics.records.len(), bfree.metrics.records.len());
+    for (b, a) in barriered.metrics.records.iter().zip(&bfree.metrics.records) {
+        assert_eq!(b.round, a.round);
+        assert_eq!(
+            b.global_acc.to_bits(),
+            a.global_acc.to_bits(),
+            "round {}: {} vs {}",
+            b.round,
+            b.global_acc,
+            a.global_acc
+        );
+        assert_eq!(b.uploads, a.uploads);
+        assert_eq!(b.cum_uploads, a.cum_uploads);
+        assert_eq!(b.selected, a.selected);
+        assert_eq!(b.reports, a.reports);
+        assert_eq!(b.bytes_up, a.bytes_up, "round {}", b.round);
+        assert_eq!(b.bytes_down, a.bytes_down, "round {}", b.round);
+        assert_eq!(b.upload_staleness, a.upload_staleness);
+        assert!((b.train_loss - a.train_loss).abs() < 1e-9);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn event_driven_engine_is_deterministic() {
+    // Two runs, same seed: identical RoundRecord streams, bit for bit.
+    let mk = || {
+        let mut cfg = quick('b', Algorithm::Vafl, 10);
+        cfg.engine = EngineMode::BarrierFree;
+        cfg.async_engine = AsyncEngineConfig { buffer_k: 3, mixing: MixingRule::default() };
+        cfg.link = vafl::netsim::LinkProfile::straggler_wan();
+        experiments::run(&cfg).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits());
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+        assert_eq!(x.threshold.to_bits(), y.threshold.to_bits());
+        assert_eq!(x.selected, y.selected);
+        assert_eq!(x.upload_staleness, y.upload_staleness);
+        assert_eq!(x.in_flight, y.in_flight);
+        assert_eq!(x.bytes_up, y.bytes_up);
+    }
+    // ...and a different seed diverges.
+    let mut cfg = quick('b', Algorithm::Vafl, 10);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig { buffer_k: 3, mixing: MixingRule::default() };
+    cfg.link = vafl::netsim::LinkProfile::straggler_wan();
+    cfg.seed += 1;
+    let c = experiments::run(&cfg).unwrap();
+    let same = a
+        .metrics
+        .records
+        .iter()
+        .zip(&c.metrics.records)
+        .all(|(x, y)| x.vtime.to_bits() == y.vtime.to_bits());
+    assert!(!same, "seed had no effect on the event stream");
+}
+
+#[test]
+fn event_driven_staleness_is_nonzero_under_gating() {
+    // With VAFL gating and a small buffer some uploads must arrive stale
+    // (the whole point of the staleness-aware mix).
+    let mut cfg = quick('b', Algorithm::Vafl, 16);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::default() };
+    let out = experiments::run(&cfg).unwrap();
+    let hist = out.metrics.staleness_histogram();
+    let stale: usize = hist.iter().filter(|(&tau, _)| tau > 0).map(|(_, &c)| c).sum();
+    assert!(stale > 0, "no stale uploads ever aggregated: {hist:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Straggler scenario: the barrier is the bottleneck
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barrier_free_reaches_target_accuracy_sooner_under_stragglers() {
+    // Heterogeneous fleet (Pi 4s vs shared laptops) + straggler-heavy WAN:
+    // the barriered engine pays the slowest chain every round, the
+    // barrier-free engine keeps aggregating whatever arrives. Same seed,
+    // data, fleet, and link for both engines.
+    let mut cfg = straggler::straggler_config(&quick('b', Algorithm::Afl, 40));
+    cfg.target_acc = 0.35;
+    cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    let cmp = straggler::compare_engines(&cfg).unwrap();
+    let (tb, ta) = cmp.vtimes_to_target();
+    let tb = tb.expect("barriered never reached the target");
+    let ta = ta.expect("barrier-free never reached the target");
+    assert!(
+        ta < tb,
+        "barrier-free took {ta:.1}s vs barriered {tb:.1}s to {:.0}% acc",
+        cfg.target_acc * 100.0
+    );
+}

@@ -1,0 +1,143 @@
+//! Golden-run regression tests: a small fixed-seed end-to-end run per
+//! engine whose round-by-round `RoundRecord` stream is pinned to a
+//! checked-in snapshot, so engine refactors that change numerics or event
+//! ordering fail loudly instead of silently drifting.
+//!
+//! Snapshots live in `rust/tests/golden/*.golden`. Floats are serialized
+//! as exact bit patterns (hex of `to_bits`), so any numeric drift — even
+//! one ULP — is caught.
+//!
+//! * First run (no snapshot on disk): the snapshot is created and the
+//!   test passes; commit the file.
+//! * Mismatch: the test fails and writes `<name>.golden.new` next to the
+//!   snapshot; `tools/check.sh` prints the diff. If the change is an
+//!   intended numeric/ordering change, refresh with
+//!   `VAFL_UPDATE_GOLDEN=1 cargo test -q --test golden_run` and commit.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use vafl::config::{Algorithm, AsyncEngineConfig, Backend, EngineMode, ExperimentConfig};
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::metrics::RoundRecord;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = experiments::preset('a').unwrap();
+    cfg.algorithm = Algorithm::Vafl;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = 6;
+    cfg.samples_per_client = 96;
+    cfg.test_samples = 64;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    cfg.seed = 2021;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+/// One snapshot line per round: floats as exact bits, then the discrete
+/// fields. Stable, diffable, bit-exact.
+fn snapshot_line(r: &RoundRecord) -> String {
+    let bits = |x: f64| format!("{:016x}", x.to_bits());
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "round={} vtime={} acc={} train_loss={} threshold={} uploads={} cum={} reports={} in_flight={} bytes_up={} bytes_down={} selected={} stale={}",
+        r.round,
+        bits(r.vtime),
+        bits(r.global_acc),
+        bits(r.train_loss),
+        bits(r.threshold),
+        r.uploads,
+        r.cum_uploads,
+        r.reports,
+        r.in_flight,
+        r.bytes_up,
+        r.bytes_down,
+        r.selected
+            .iter()
+            .map(|&b| if b { '1' } else { '0' })
+            .collect::<String>(),
+        r.upload_staleness
+            .iter()
+            .map(|t| t.to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+    );
+    s
+}
+
+fn run_snapshot(name: &str, cfg: &ExperimentConfig) {
+    let out = experiments::run(cfg).unwrap();
+    let mut got = String::new();
+    for r in &out.metrics.records {
+        got.push_str(&snapshot_line(r));
+        got.push('\n');
+    }
+
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.golden"));
+    let update = std::env::var("VAFL_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::write(&path, &got).unwrap();
+        eprintln!(
+            "golden_run: {} snapshot {} — commit {}",
+            if update { "refreshed" } else { "created" },
+            name,
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    if got != want {
+        let new_path = dir.join(format!("{name}.golden.new"));
+        std::fs::write(&new_path, &got).unwrap();
+        let first_diff = want
+            .lines()
+            .zip(got.lines())
+            .position(|(a, b)| a != b)
+            .map_or_else(
+                || format!("line counts differ: {} vs {}", want.lines().count(), got.lines().count()),
+                |i| {
+                    format!(
+                        "first diff at line {}:\n  want: {}\n  got:  {}",
+                        i + 1,
+                        want.lines().nth(i).unwrap_or(""),
+                        got.lines().nth(i).unwrap_or("")
+                    )
+                },
+            );
+        panic!(
+            "golden-run snapshot {name} drifted ({first_diff})\n\
+             wrote {} — if the numeric/ordering change is intended, refresh with\n\
+             VAFL_UPDATE_GOLDEN=1 cargo test -q --test golden_run",
+            new_path.display()
+        );
+    }
+}
+
+#[test]
+fn golden_barriered_round_stream_is_stable() {
+    let mut cfg = base_cfg();
+    cfg.engine = EngineMode::Barriered;
+    run_snapshot("barriered", &cfg);
+}
+
+#[test]
+fn golden_barrier_free_round_stream_is_stable() {
+    let mut cfg = base_cfg();
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    run_snapshot("barrier_free", &cfg);
+}

@@ -1,8 +1,13 @@
 #!/usr/bin/env bash
-# Lint + hygiene gate for the Rust coordinator (see EXPERIMENTS.md §Perf).
+# Lint + test gate for the Rust coordinator (see EXPERIMENTS.md §Perf).
 #
-#   tools/check.sh          # fmt + clippy -D warnings
-#   tools/check.sh --tests  # ... and the full test suite
+#   tools/check.sh            # fmt + clippy -D warnings + cargo test -q
+#   tools/check.sh --no-tests # lint only
+#   tools/check.sh --tests    # (legacy alias of the default)
+#
+# On test failure, any golden-run snapshot drift (tests/golden/*.golden.new,
+# written by rust/tests/golden_run.rs) is diffed so the numeric/ordering
+# change is visible in the CI log.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -13,9 +18,19 @@ cargo fmt --check
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
-if [[ "${1:-}" == "--tests" ]]; then
-    echo "== cargo test =="
-    cargo test -q
+if [[ "${1:-}" != "--no-tests" ]]; then
+    echo "== cargo test -q =="
+    if ! cargo test -q; then
+        shopt -s nullglob
+        for new in tests/golden/*.golden.new; do
+            golden="${new%.new}"
+            echo
+            echo "== golden-run snapshot drift: ${golden} =="
+            diff -u "$golden" "$new" || true
+            echo "(refresh intended changes with VAFL_UPDATE_GOLDEN=1 cargo test -q --test golden_run)"
+        done
+        exit 1
+    fi
 fi
 
 echo "OK"
