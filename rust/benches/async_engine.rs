@@ -1,24 +1,78 @@
 //! Bench: barriered vs. barrier-free wall-clock-to-accuracy under a
-//! straggler-heavy link (`LinkProfile::straggler_wan`), plus a sweep over
-//! buffer sizes and staleness-mixing rules.
+//! straggler-heavy link (`LinkProfile::straggler_wan`), a sweep over
+//! buffer sizes and staleness-mixing rules, the threaded (speculative
+//! execution) engine's events/sec scaling, and the aggregation-shard
+//! sweep.
 //!
-//!     cargo bench --bench async_engine
+//!     cargo bench --bench async_engine [-- --json]
 //!
 //! Env: VAFL_BENCH_ROUNDS (default 40), VAFL_BENCH_MOCK=1.
 //!
-//! The headline number is the speedup in virtual seconds to the target
-//! accuracy: the barriered engine pays the slowest client + slowest
-//! transfer every round, the barrier-free engine aggregates whatever
-//! arrives.
+//! `--json` (or `VAFL_BENCH_JSON=1`) additionally writes every row to
+//! `BENCH_async_engine.json` (events/sec, wall ms, vtime-to-target,
+//! speculation hit/replay counts per thread/shard configuration) so the
+//! engine perf trajectory is tracked across PRs, the same way
+//! `perf_hotpath` emits `BENCH_hotpath.json`.
+//!
+//! The headline numbers: (1) the speedup in *virtual* seconds to the
+//! target accuracy — the barriered engine pays the slowest client +
+//! slowest transfer every round, the barrier-free engine aggregates
+//! whatever arrives; (2) the speedup in *wall* events/sec from running
+//! client local rounds speculatively on pool workers — the committed
+//! record stream is bitwise identical, only the wall clock moves.
 
 mod common;
 
-use vafl::config::AsyncEngineConfig;
+use vafl::config::{AsyncEngineConfig, ExperimentConfig};
 use vafl::coordinator::MixingRule;
 use vafl::experiments::{self, straggler};
+use vafl::metrics::RunMetrics;
+use vafl::util::json::{obj, Value};
+
+/// Collects every bench row for the optional JSON artifact.
+#[derive(Default)]
+struct Recorder {
+    rows: Vec<Value>,
+}
+
+impl Recorder {
+    fn push(&mut self, fields: Vec<(&'static str, Value)>) {
+        self.rows.push(obj(fields));
+    }
+
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let doc = obj(vec![
+            ("bench", Value::Str("async_engine".into())),
+            ("rows", Value::Arr(self.rows.clone())),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())
+    }
+}
+
+fn opt_f64(v: Option<f64>) -> Value {
+    v.map(Value::Num).unwrap_or(Value::Null)
+}
+
+/// Run the barrier-free engine (threaded per `cfg.engine_opts`); build
+/// and pool construction are excluded from the timing
+/// (`experiments::run_barrier_free_timed`). Best wall-clock of `reps`
+/// runs — the committed metrics are deterministic, so any rep's serve.
+fn timed_run(cfg: &ExperimentConfig, reps: usize) -> anyhow::Result<(RunMetrics, f64)> {
+    let mut best = f64::INFINITY;
+    let mut metrics = None;
+    for _ in 0..reps.max(1) {
+        let (m, wall) = experiments::run_barrier_free_timed(cfg)?;
+        best = best.min(wall);
+        metrics = Some(m);
+    }
+    Ok((metrics.expect("at least one rep"), best))
+}
 
 fn main() -> anyhow::Result<()> {
     vafl::util::logging::init();
+    let mut rec = Recorder::default();
+    let want_json = std::env::args().any(|a| a == "--json")
+        || std::env::var("VAFL_BENCH_JSON").is_ok();
 
     common::section("Barrier-free engine — straggler scenario (experiment b fleet)");
     let mut cfg = straggler::straggler_config(&experiments::preset('b')?);
@@ -39,6 +93,125 @@ fn main() -> anyhow::Result<()> {
             "=> no speedup on this configuration ({s:.2}x) — straggler pressure too low?"
         ),
         None => println!("=> one engine never reached the target; raise VAFL_BENCH_ROUNDS"),
+    }
+    let (tb, ta) = cmp.vtimes_to_target();
+    rec.push(vec![
+        ("section", Value::Str("engine_race".into())),
+        ("name", Value::Str("barriered".into())),
+        ("vtime_to_target_s", opt_f64(tb)),
+        ("uploads", Value::Num(cmp.barriered.total_uploads as f64)),
+    ]);
+    rec.push(vec![
+        ("section", Value::Str("engine_race".into())),
+        ("name", Value::Str("barrier_free".into())),
+        ("vtime_to_target_s", opt_f64(ta)),
+        ("uploads", Value::Num(cmp.barrier_free.total_uploads as f64)),
+    ]);
+
+    common::section("Threaded speculative engine — events/sec scaling (straggler_wan)");
+    // Inner kernels pinned serial (threads = 1) so the sweep isolates the
+    // engine-level overlap; the committed record stream is identical for
+    // every row (asserted in tests/engine_async.rs), only wall moves.
+    let mut tcfg = cfg.clone();
+    tcfg.engine = vafl::config::EngineMode::BarrierFree;
+    tcfg.threads = 1;
+    println!(
+        "{:<26} {:>9} {:>12} {:>9} {:>11} {:>9}",
+        "configuration", "wall_ms", "events/sec", "speedup", "spec_hit", "replays"
+    );
+    let (serial_metrics, serial_wall) = timed_run(&tcfg, 2)?;
+    let serial_eps = serial_metrics.engine_events as f64 / serial_wall.max(1e-9);
+    println!(
+        "{:<26} {:>9.1} {:>12.0} {:>9} {:>11} {:>9}",
+        "serial",
+        serial_wall * 1e3,
+        serial_eps,
+        "1.00x",
+        "-",
+        "-"
+    );
+    rec.push(vec![
+        ("section", Value::Str("thread_sweep".into())),
+        ("name", Value::Str("serial".into())),
+        ("workers", Value::Num(0.0)),
+        ("wall_ms", Value::Num(serial_wall * 1e3)),
+        ("events", Value::Num(serial_metrics.engine_events as f64)),
+        ("events_per_sec", Value::Num(serial_eps)),
+        ("vtime_to_target_s", opt_f64(serial_metrics.vtime_to_target())),
+    ]);
+    for workers in [1usize, 2, 4] {
+        let mut c = tcfg.clone();
+        c.engine_opts.threaded = true;
+        c.engine_opts.workers = workers;
+        let (m, wall) = timed_run(&c, 2)?;
+        let eps = m.engine_events as f64 / wall.max(1e-9);
+        let (hit, replay) = m.speculation_totals();
+        println!(
+            "{:<26} {:>9.1} {:>12.0} {:>8.2}x {:>11} {:>9}",
+            format!("threaded workers={workers}"),
+            wall * 1e3,
+            eps,
+            eps / serial_eps.max(1e-9),
+            hit,
+            replay
+        );
+        assert_eq!(
+            m.engine_events, serial_metrics.engine_events,
+            "threaded engine committed different work"
+        );
+        rec.push(vec![
+            ("section", Value::Str("thread_sweep".into())),
+            ("name", Value::Str(format!("threaded_w{workers}"))),
+            ("workers", Value::Num(workers as f64)),
+            ("wall_ms", Value::Num(wall * 1e3)),
+            ("events", Value::Num(m.engine_events as f64)),
+            ("events_per_sec", Value::Num(eps)),
+            ("speedup_vs_serial", Value::Num(eps / serial_eps.max(1e-9))),
+            ("spec_committed", Value::Num(hit as f64)),
+            ("spec_replayed", Value::Num(replay as f64)),
+            (
+                "spec_replay_rate",
+                Value::Num(if hit + replay > 0 {
+                    replay as f64 / (hit + replay) as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("vtime_to_target_s", opt_f64(m.vtime_to_target())),
+        ]);
+    }
+
+    common::section("Aggregation-shard sweep (S=1 bitwise == unsharded)");
+    println!(
+        "{:<26} {:>14} {:>9} {:>10} {:>16}",
+        "configuration", "vtime-to-tgt", "uploads", "best_acc", "flushes/shard"
+    );
+    for shards in [1usize, 2, 4] {
+        let mut c = tcfg.clone();
+        c.engine_opts.shards = shards.min(c.num_clients);
+        c.engine_opts.reconcile_every = 4;
+        let (m, wall) = timed_run(&c, 1)?;
+        let per_shard = m.per_shard_flushes();
+        let flushes: Vec<String> =
+            per_shard.iter().map(|(s, n)| format!("{s}:{n}")).collect();
+        println!(
+            "{:<26} {:>14} {:>9} {:>10.4} {:>16}",
+            format!("shards={shards} reconcile=4"),
+            m.vtime_to_target()
+                .map_or_else(|| "never".to_string(), |v| format!("{v:.1}s")),
+            m.total_uploads(),
+            m.best_accuracy(),
+            flushes.join(" "),
+        );
+        rec.push(vec![
+            ("section", Value::Str("shard_sweep".into())),
+            ("name", Value::Str(format!("shards_{shards}"))),
+            ("shards", Value::Num(shards as f64)),
+            ("wall_ms", Value::Num(wall * 1e3)),
+            ("vtime_to_target_s", opt_f64(m.vtime_to_target())),
+            ("uploads", Value::Num(m.total_uploads() as f64)),
+            ("best_acc", Value::Num(m.best_accuracy())),
+        ]);
     }
 
     common::section("Buffer size / mixing-rule sweep (vtime to target, uploads)");
@@ -66,5 +239,10 @@ fn main() -> anyhow::Result<()> {
 
     common::section("Staleness distribution (k=2, constant 0.9)");
     println!("{}", straggler::staleness_histogram(&cmp.barrier_free.metrics));
+
+    if want_json {
+        rec.write_json("BENCH_async_engine.json")?;
+        println!("wrote BENCH_async_engine.json ({} rows)", rec.rows.len());
+    }
     Ok(())
 }

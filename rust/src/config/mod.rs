@@ -92,6 +92,40 @@ impl Default for AsyncEngineConfig {
     }
 }
 
+/// Execution strategy of the round engines — how the simulation *runs*,
+/// never what it computes: every knob below is bitwise-neutral on the
+/// committed `RoundRecord` stream (asserted by the serial==threaded
+/// equivalence tests). TOML section `[engine]`; the engine *mode* stays
+/// the top-level `engine = "barriered|barrier_free"` key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Overlap client local rounds on worker threads. Barrier-free:
+    /// speculative execution against training-state snapshots with
+    /// in-order commit (`Server::run_event_driven_threaded`); barriered:
+    /// one thread per active client on a shared executor service
+    /// (`Server::run_round_threaded`).
+    pub threaded: bool,
+    /// Worker threads of the executor pool (0 = auto: the `util::par`
+    /// resolution — `threads` config key, then `VAFL_THREADS`, then the
+    /// machine's available parallelism).
+    pub workers: usize,
+    /// Aggregator shards of the barrier-free engine: the fleet is
+    /// partitioned round-robin across this many buffers-of-K, each
+    /// flushing into its own model replica. 1 = the unsharded engine
+    /// (bitwise identical).
+    pub shards: usize,
+    /// Reconcile the shard model replicas into the true global every this
+    /// many flushes (sample-count-weighted average; ignored at
+    /// `shards == 1`).
+    pub reconcile_every: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { threaded: false, workers: 0, shards: 1, reconcile_every: 4 }
+    }
+}
+
 /// EAFLM gate constants (paper Eq. 3 and §IV-D: xi_d = 1/D, D = 1,
 /// alpha = 0.98; beta·m² folded into one threshold scale).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -186,6 +220,10 @@ pub struct ExperimentConfig {
     pub engine: EngineMode,
     /// Barrier-free engine knobs (buffer size, staleness mixing).
     pub async_engine: AsyncEngineConfig,
+    /// Execution strategy (threading, aggregation sharding) — TOML
+    /// section `[engine]`, CLI `--engine-threads` / `--shards` /
+    /// `--reconcile-every`.
+    pub engine_opts: EngineConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -216,6 +254,7 @@ impl Default for ExperimentConfig {
             threads: 0,
             engine: EngineMode::Barriered,
             async_engine: AsyncEngineConfig::default(),
+            engine_opts: EngineConfig::default(),
         }
     }
 }
@@ -265,6 +304,35 @@ impl ExperimentConfig {
             bail!("async_engine.buffer_k must be >= 1");
         }
         self.async_engine.mixing.validate()?;
+        if self.engine_opts.shards == 0 {
+            bail!("engine.shards must be >= 1");
+        }
+        if self.engine_opts.shards > self.num_clients {
+            bail!(
+                "engine.shards ({}) cannot exceed num_clients ({})",
+                self.engine_opts.shards,
+                self.num_clients
+            );
+        }
+        if self.engine_opts.reconcile_every == 0 {
+            bail!("engine.reconcile_every must be >= 1");
+        }
+        if self.engine_opts.shards > 1 && self.engine == EngineMode::Barriered {
+            bail!(
+                "engine.shards only applies to the barrier_free engine; \
+                 the barriered loop has a single aggregation point per round"
+            );
+        }
+        if self.engine_opts.shards > 1 && self.algorithm == Algorithm::Eaflm {
+            bail!(
+                "engine.shards > 1 is not supported with algorithm = eaflm: \
+                 the Eq. 3 gate thresholds on consecutive global-model \
+                 movement, but sharded flushes interleave different shard \
+                 replicas in the history, so the threshold would measure \
+                 inter-replica divergence instead (per-shard gate history \
+                 is a ROADMAP item)"
+            );
+        }
         if self.engine == EngineMode::BarrierFree && self.staleness_decay.is_some() {
             bail!(
                 "staleness_decay only applies to the barriered engine; \
@@ -396,6 +464,26 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("engine") {
             cfg.engine = EngineMode::from_name(v)?;
+        }
+        // [engine] — execution strategy. `engine.mode` is the
+        // spec-valid way to select the engine from inside the section
+        // (standard TOML rejects a top-level `engine = "..."` string
+        // next to an `[engine]` table; our flat-map parser accepts
+        // both forms, and the section key wins when both are present).
+        if let Some(v) = doc.get_str("engine.mode") {
+            cfg.engine = EngineMode::from_name(v)?;
+        }
+        if let Some(v) = doc.get_bool("engine.threaded") {
+            cfg.engine_opts.threaded = v;
+        }
+        if let Some(v) = doc.get_i64("engine.workers") {
+            cfg.engine_opts.workers = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get_i64("engine.shards") {
+            cfg.engine_opts.shards = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get_i64("engine.reconcile_every") {
+            cfg.engine_opts.reconcile_every = v.max(0) as usize;
         }
         // [async_engine]
         if let Some(v) = doc.get_i64("async_engine.buffer_k") {
@@ -534,6 +622,85 @@ mod tests {
         assert_eq!(d.engine, EngineMode::Barriered);
         assert_eq!(d.async_engine.buffer_k, 1);
         assert!(ExperimentConfig::from_toml("engine = \"sync\"").is_err());
+    }
+
+    #[test]
+    fn engine_opts_keys_parse() {
+        // Spec-valid form: everything under [engine], including the mode.
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            num_clients = 7
+            [engine]
+            mode = "barrier_free"
+            threaded = true
+            workers = 4
+            shards = 2
+            reconcile_every = 8
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.engine, EngineMode::BarrierFree);
+        assert_eq!(
+            cfg.engine_opts,
+            EngineConfig { threaded: true, workers: 4, shards: 2, reconcile_every: 8 }
+        );
+        // Defaults: serial, auto workers, unsharded.
+        let d = EngineConfig::default();
+        assert!(!d.threaded);
+        assert_eq!((d.workers, d.shards, d.reconcile_every), (0, 1, 4));
+        // The legacy top-level string still works alongside the section
+        // in the flat-map parser (not spec-TOML; kept for existing
+        // configs), and the section's `mode` wins when both appear.
+        let legacy = ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nthreaded = true\n[backend]\nkind = \"mock\"",
+        )
+        .unwrap();
+        assert_eq!(legacy.engine, EngineMode::BarrierFree);
+        assert!(legacy.engine_opts.threaded);
+        let both = ExperimentConfig::from_toml(
+            "engine = \"barriered\"\n[engine]\nmode = \"barrier_free\"\n[backend]\nkind = \"mock\"",
+        )
+        .unwrap();
+        assert_eq!(both.engine, EngineMode::BarrierFree);
+    }
+
+    #[test]
+    fn engine_opts_rejected_when_invalid() {
+        // Sharding needs the barrier-free engine...
+        assert!(ExperimentConfig::from_toml(
+            "num_clients = 4\n[engine]\nshards = 2\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // ...at least one shard...
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nshards = 0\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // ...no more shards than clients...
+        assert!(ExperimentConfig::from_toml(
+            "num_clients = 3\nengine = \"barrier_free\"\n[engine]\nshards = 4\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // ...and a positive reconcile cadence.
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nreconcile_every = 0\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // Threading alone is engine-agnostic (barriered uses the shared
+        // executor service).
+        assert!(ExperimentConfig::from_toml(
+            "[engine]\nthreaded = true\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+        // EAFLM's gate thresholds on consecutive global movement, which
+        // sharded histories would corrupt — rejected until the engine
+        // keeps per-shard gate history.
+        assert!(ExperimentConfig::from_toml(
+            "algorithm = \"eaflm\"\nnum_clients = 4\n[engine]\nmode = \"barrier_free\"\nshards = 2\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //! 5. The server evaluates the global model on its held-out test set
 //!    (Fig. 4/6 curves) and the metrics stack records the round.
 
-use anyhow::Result;
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, Result};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::Aggregator;
@@ -33,7 +35,7 @@ use crate::fleet::{Client, ClientReport};
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::model::ParamVec;
 use crate::netsim::{LinkProfile, Message};
-use crate::runtime::{evaluate_with_params, Executor};
+use crate::runtime::{evaluate_with_params, Executor, ExecutorPool};
 use crate::sim::EventQueue;
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info};
@@ -53,7 +55,9 @@ pub enum EngineEvent {
 }
 
 /// Per-aggregation-window counters of the barrier-free engine (reset at
-/// every buffer flush).
+/// every buffer flush). Window telemetry is fleet-wide even under
+/// sharding: reports and bytes count when their events fire and are
+/// attributed to whichever flush closes the window next.
 #[derive(Debug, Default)]
 struct FlushWindow {
     reports: usize,
@@ -61,16 +65,138 @@ struct FlushWindow {
     bytes_up: u64,
     bytes_down: u64,
     threshold: f64,
+    /// Speculative local rounds committed as-is since the last flush.
+    spec_committed: usize,
+    /// Speculative local rounds whose fork state was superseded and were
+    /// recomputed serially at the commit point.
+    spec_replayed: usize,
 }
 
-/// Static context the server needs besides the fleet.
+/// Static per-local-round knobs, bundled so speculative dispatches can
+/// capture them by value.
+#[derive(Clone, Copy)]
+struct RoundKnobs {
+    passes: usize,
+    batches: usize,
+    lr: f32,
+    train_flops: u64,
+    eval_flops: u64,
+}
+
+/// What a speculative worker sends back: the trained ghost client and the
+/// round's report.
+type SpecResult = (Client, Result<ClientReport>);
+
+/// A deferred flush-time evaluation: (record index to patch, result).
+type PendingEval = (usize, mpsc::Receiver<Result<(f64, f64)>>);
+
+/// An in-flight speculative local round of the threaded barrier-free
+/// engine: the trained ghost client and its report arrive on `rx` when a
+/// pool worker finishes. `epoch` is the origin client's training-state
+/// version at fork time — commit requires it to still match, otherwise the
+/// round is replayed serially at the commit point (see
+/// [`Client::commit_speculation`]).
+struct Speculation {
+    epoch: u64,
+    rx: mpsc::Receiver<SpecResult>,
+}
+
+/// Mutable per-run state of the barrier-free engine, grouped so the event
+/// handlers and the shard flush path can borrow it independently of the
+/// server's own fields.
+struct EngineState {
+    /// Reports awaiting their arrival event, one slot per client.
+    pending: Vec<Option<ClientReport>>,
+    /// Fleet-wide last-known gate values / probe accuracies.
+    last_values: Vec<f64>,
+    last_accs: Vec<f64>,
+    /// Completed local rounds per client (the report's round index).
+    local_rounds: Vec<usize>,
+    /// Shard version each client last synced against.
+    synced_version: Vec<u64>,
+    /// Offline retry backoff: one local-round span of that client.
+    backoff: Vec<f64>,
+    /// In-flight speculative local rounds (threaded engine only).
+    spec: Vec<Option<Speculation>>,
+    window: FlushWindow,
+    /// Deferred pool-side evaluations, resolved before the engine returns.
+    pending_evals: Vec<PendingEval>,
+    /// Consecutive gated-out reports; a long streak force-uploads the next
+    /// report so a fully-lazy fleet cannot starve the engine.
+    skip_streak: usize,
+    /// Model uploads currently on the wire.
+    in_flight: usize,
+    /// Aggregator shard of each client (round-robin).
+    shard_of: Vec<usize>,
+    /// Per-shard buffer-of-K threshold (clamped to the shard population).
+    shard_k: Vec<usize>,
+    /// Per-shard aggregation buffers: (client, staleness tau, arrival).
+    buffers: Vec<Vec<(usize, usize, f64)>>,
+    /// Per-shard flush counter = the shard's model version.
+    shard_version: Vec<u64>,
+    /// Per-shard reconciliation weights (total local samples).
+    shard_weight: Vec<f64>,
+}
+
+/// One client local round with the bundled knobs — the single call shape
+/// shared by the serial engine, the speculative worker job, and the
+/// replay fallback, so the three can never drift apart.
+fn run_local_round(
+    client: &mut Client,
+    exec: &mut dyn Executor,
+    round: usize,
+    knobs: RoundKnobs,
+) -> Result<ClientReport> {
+    client.local_round(
+        exec,
+        round,
+        knobs.passes,
+        knobs.batches,
+        knobs.lr,
+        knobs.train_flops,
+        knobs.eval_flops,
+    )
+}
+
+/// Dispatch client `client`'s *next* local round to the pool against a
+/// snapshot of its training state. Called exactly where the engine
+/// schedules `Start { client }`; the result is committed (or replayed)
+/// when that event pops, so the committed record stream is independent of
+/// worker timing. No-op on the serial engine (`pool == None`).
+fn dispatch_speculation(
+    clients: &[Client],
+    st: &mut EngineState,
+    pool: Option<&ExecutorPool>,
+    client: usize,
+    knobs: RoundKnobs,
+) -> Result<()> {
+    let Some(pool) = pool else { return Ok(()) };
+    debug_assert!(st.spec[client].is_none(), "double dispatch for client {client}");
+    let ghost = clients[client].speculate();
+    let epoch = clients[client].epoch();
+    let round = st.local_rounds[client] + 1;
+    let (tx, rx) = mpsc::channel();
+    pool.submit(Box::new(move |exec| {
+        let mut ghost = ghost;
+        let rep = run_local_round(&mut ghost, exec, round, knobs);
+        // The engine may have abandoned this speculation (run ended);
+        // a closed channel is not an error.
+        let _ = tx.send((ghost, rep));
+    }))?;
+    st.spec[client] = Some(Speculation { epoch, rx });
+    Ok(())
+}
+
+/// Static context the server needs besides the fleet. The test set is
+/// `Arc`-shared so deferred evaluations can run on pool workers without
+/// copying it.
 pub struct ServerContext {
     pub link: LinkProfile,
     pub train_flops: u64,
     pub eval_flops: u64,
     pub model_payload_bytes: u64,
-    pub test_images: Vec<f32>,
-    pub test_labels: Vec<i32>,
+    pub test_images: Arc<Vec<f32>>,
+    pub test_labels: Arc<Vec<i32>>,
 }
 
 /// The federated server.
@@ -383,8 +509,8 @@ impl Server {
             evaluate_with_params(
                 exec,
                 &self.global,
-                &self.ctx.test_images,
-                &self.ctx.test_labels,
+                &self.ctx.test_images[..],
+                &self.ctx.test_labels[..],
             )?
         } else {
             (f64::NAN, f64::NAN)
@@ -411,6 +537,9 @@ impl Server {
             reports: n_active,
             in_flight: 0,
             upload_staleness,
+            shard: 0,
+            spec_committed: 0,
+            spec_replayed: 0,
         };
         if global_acc.is_finite() {
             log_info!(
@@ -428,9 +557,17 @@ impl Server {
     /// retired entries are recycled through `history_pool`, so the
     /// steady-state round never allocates here.
     fn push_history(&mut self) {
+        let g = std::mem::take(&mut self.global);
+        self.push_history_from(&g);
+        self.global = g;
+    }
+
+    /// [`Server::push_history`] for an explicit model (the sharded engine
+    /// pushes the flushed shard's model, which is `self.global` at S=1).
+    fn push_history_from(&mut self, model: &[f32]) {
         let mut entry = self.history_pool.pop().unwrap_or_default();
         entry.clear();
-        entry.extend_from_slice(&self.global);
+        entry.extend_from_slice(model);
         self.history.push(entry);
         let keep = self.policy.history_depth().max(1) + 1;
         while self.history.len() > keep {
@@ -472,37 +609,100 @@ impl Server {
     /// exactly one upload per (gated) client and the mix is plain FedAvg
     /// replacement.
     pub fn run_event_driven(&mut self, exec: &mut dyn Executor) -> Result<()> {
+        self.run_event_driven_inner(exec, None)
+    }
+
+    /// [`Server::run_event_driven`] with client compute overlapped on an
+    /// [`ExecutorPool`] via speculative execution.
+    ///
+    /// Wherever the event loop schedules a `Start`, the client's next
+    /// local round is immediately dispatched to a pool worker against a
+    /// snapshot of its training state ([`Client::speculate`]); the result
+    /// is committed strictly when that `Start` pops, in virtual-event
+    /// order. A client's training inputs cannot change between schedule
+    /// and pop in this engine (it is blocked between upload and
+    /// broadcast), so the common case commits the speculation as-is; if
+    /// the forked state was ever superseded (tracked by the client's
+    /// training-state epoch), the round is recomputed serially at the
+    /// commit point. Either way the committed `RoundRecord` stream is
+    /// **bitwise identical** to the serial engine (asserted in
+    /// `rust/tests/engine_async.rs`); only wall-clock changes. Flush-time
+    /// model evaluations are overlapped the same way and patched into
+    /// their records before this method returns.
+    pub fn run_event_driven_threaded(
+        &mut self,
+        exec: &mut dyn Executor,
+        pool: &ExecutorPool,
+    ) -> Result<()> {
+        self.run_event_driven_inner(exec, Some(pool))
+    }
+
+    fn run_event_driven_inner(
+        &mut self,
+        exec: &mut dyn Executor,
+        pool: Option<&ExecutorPool>,
+    ) -> Result<()> {
         let n = self.clients.len();
         let k = self.cfg.async_engine.buffer_k.clamp(1, n);
         let mixing = self.cfg.async_engine.mixing;
-        let passes = self.cfg.local_passes;
-        let batches = self.cfg.batches_per_pass;
-        let lr = self.cfg.lr;
-        let (tf, ef) = (self.ctx.train_flops, self.ctx.eval_flops);
         let payload = self.ctx.model_payload_bytes;
+        let knobs = RoundKnobs {
+            passes: self.cfg.local_passes,
+            batches: self.cfg.batches_per_pass,
+            lr: self.cfg.lr,
+            train_flops: self.ctx.train_flops,
+            eval_flops: self.ctx.eval_flops,
+        };
 
-        // Per-client engine state.
-        let mut pending: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
-        let mut last_values = vec![f64::NAN; n];
-        let mut last_accs = vec![f64::NAN; n];
-        let mut local_rounds = vec![0usize; n];
-        let mut synced_version = vec![0u64; n];
-        // Offline retry backoff: one local-round span of that client.
-        let mut backoff = vec![1.0f64; n];
-        let mut version: u64 = 0;
+        // Shard layout: the fleet is partitioned round-robin across
+        // `engine.shards` aggregator shards, each with its own buffer-of-K
+        // (clamped to the shard population so no shard can starve its own
+        // buffer) and, for S > 1, its own model replica reconciled into
+        // the true global every `engine.reconcile_every` flushes. S == 1
+        // runs directly on `self.global` — bitwise the unsharded engine.
+        let s_count = self.cfg.engine_opts.shards.clamp(1, n);
+        let reconcile_every = self.cfg.engine_opts.reconcile_every.max(1);
+        let shard_of: Vec<usize> = (0..n).map(|c| c % s_count).collect();
+        let mut shard_pop = vec![0usize; s_count];
+        for &s in &shard_of {
+            shard_pop[s] += 1;
+        }
+        let shard_k: Vec<usize> = shard_pop.iter().map(|&p| k.clamp(1, p.max(1))).collect();
+        let mut shard_weight = vec![0.0f64; s_count];
+        for (c, &s) in shard_of.iter().enumerate() {
+            shard_weight[s] += self.clients[c].num_samples() as f64;
+        }
+        let mut shard_models: Vec<Vec<f32>> = if s_count > 1 {
+            (0..s_count).map(|_| self.global.clone()).collect()
+        } else {
+            Vec::new()
+        };
 
-        // Aggregation buffer: (client, staleness tau, upload arrival time).
-        let mut buffer: Vec<(usize, usize, f64)> = Vec::with_capacity(k);
-        let mut in_flight = 0usize;
-        let mut window = FlushWindow::default();
-        // Consecutive gated-out reports; a long streak force-uploads the
-        // next report so a fully-lazy fleet cannot starve the engine.
-        let mut skip_streak = 0usize;
+        let mut st = EngineState {
+            pending: (0..n).map(|_| None).collect(),
+            last_values: vec![f64::NAN; n],
+            last_accs: vec![f64::NAN; n],
+            local_rounds: vec![0usize; n],
+            synced_version: vec![0u64; n],
+            backoff: vec![1.0f64; n],
+            spec: (0..n).map(|_| None).collect(),
+            window: FlushWindow::default(),
+            pending_evals: Vec::new(),
+            skip_streak: 0,
+            in_flight: 0,
+            shard_of,
+            shard_k,
+            buffers: (0..s_count).map(|_| Vec::with_capacity(k)).collect(),
+            shard_version: vec![0u64; s_count],
+            shard_weight,
+        };
 
         let mut flushes = 0usize;
+        let events_before = self.queue.total_popped();
         let t0 = self.queue.now();
         for i in 0..n {
             self.queue.schedule_at(t0, EngineEvent::Start { client: i });
+            dispatch_speculation(&self.clients, &mut st, pool, i, knobs)?;
         }
 
         while flushes < self.cfg.rounds {
@@ -515,49 +715,91 @@ impl Server {
                 EngineEvent::Start { client } => {
                     if !self.registry.poll(client) {
                         // Offline: the local model goes stale and the
-                        // client retries after one local-round span.
+                        // client retries after one local-round span. An
+                        // in-flight speculation stays pending — staleness
+                        // never feeds the local round, so the fork is
+                        // still valid for the retry.
                         self.clients[client].mark_stale();
                         self.queue
-                            .schedule_at(t + backoff[client], EngineEvent::Start { client });
+                            .schedule_at(t + st.backoff[client], EngineEvent::Start { client });
                         continue;
                     }
-                    local_rounds[client] += 1;
-                    let rep = self.clients[client]
-                        .local_round(exec, local_rounds[client], passes, batches, lr, tf, ef)?;
-                    backoff[client] = rep.compute_seconds.max(1e-9);
+                    st.local_rounds[client] += 1;
+                    let rep = match st.spec[client].take() {
+                        Some(spec) => {
+                            let (ghost, rep) = spec.rx.recv().map_err(|_| {
+                                anyhow!("speculative worker dropped client {client}'s round")
+                            })?;
+                            if spec.epoch == self.clients[client].epoch() {
+                                st.window.spec_committed += 1;
+                                self.clients[client].commit_speculation(ghost);
+                                rep?
+                            } else {
+                                // The forked state was superseded: replay
+                                // the round serially at the commit point.
+                                // Unreachable in the current engine (a
+                                // client's training inputs cannot change
+                                // while its round is in flight) — this is
+                                // the safety net for future engine
+                                // changes, and the serial==threaded
+                                // equivalence tests pin its correctness
+                                // the moment any change makes it live.
+                                crate::log_warn!(
+                                    "server",
+                                    "speculation for client {client} superseded; replaying serially"
+                                );
+                                st.window.spec_replayed += 1;
+                                run_local_round(
+                                    &mut self.clients[client],
+                                    exec,
+                                    st.local_rounds[client],
+                                    knobs,
+                                )?
+                            }
+                        }
+                        None => run_local_round(
+                            &mut self.clients[client],
+                            exec,
+                            st.local_rounds[client],
+                            knobs,
+                        )?,
+                    };
+                    st.backoff[client] = rep.compute_seconds.max(1e-9);
                     let uplink = self
                         .ctx
                         .link
                         .transfer_seconds(&Message::ValueReport, &mut self.net_rng);
                     let arrive = t + rep.compute_seconds + uplink;
-                    pending[client] = Some(rep);
+                    st.pending[client] = Some(rep);
                     self.queue.schedule_at(arrive, EngineEvent::Report { client });
                 }
                 EngineEvent::Report { client } => {
-                    let rep = pending[client].take().expect("report without a local round");
-                    window.bytes_up += Message::ValueReport.bytes();
+                    let rep =
+                        st.pending[client].take().expect("report without a local round");
+                    st.window.bytes_up += Message::ValueReport.bytes();
                     let decision = {
                         let gctx = AsyncGateContext {
                             n_clients: n,
-                            last_values: &last_values,
+                            last_values: &st.last_values,
                             global_history: &self.history,
                         };
                         self.policy.gate_report(&rep, &gctx)
                     };
-                    last_values[client] = decision.value;
-                    last_accs[client] = rep.acc;
-                    window.reports += 1;
-                    window.train_loss_sum += rep.train_loss;
-                    window.threshold = decision.threshold;
-                    let force = !decision.upload && skip_streak >= 8 * n;
+                    st.last_values[client] = decision.value;
+                    st.last_accs[client] = rep.acc;
+                    st.window.reports += 1;
+                    st.window.train_loss_sum += rep.train_loss;
+                    st.window.threshold = decision.threshold;
+                    let force = !decision.upload && st.skip_streak >= 8 * n;
                     if decision.upload || force {
                         if force {
                             log_debug!(
                                 "server",
-                                "forcing upload from client {client} after {skip_streak} gated reports"
+                                "forcing upload from client {client} after {} gated reports",
+                                st.skip_streak
                             );
                         }
-                        skip_streak = 0;
+                        st.skip_streak = 0;
                         let req = self
                             .ctx
                             .link
@@ -566,68 +808,93 @@ impl Server {
                             &Message::ModelUpload { payload_bytes: payload },
                             &mut self.net_rng,
                         );
-                        window.bytes_down += Message::UploadRequest.bytes();
-                        window.bytes_up += payload;
-                        in_flight += 1;
+                        st.window.bytes_down += Message::UploadRequest.bytes();
+                        st.window.bytes_up += payload;
+                        st.in_flight += 1;
                         self.queue.schedule_at(t + req + up, EngineEvent::Upload { client });
                     } else {
-                        skip_streak += 1;
+                        st.skip_streak += 1;
                         self.clients[client].mark_stale();
                         // Keep training the (now stale) local model.
                         self.queue.schedule_at(t, EngineEvent::Start { client });
+                        dispatch_speculation(&self.clients, &mut st, pool, client, knobs)?;
                     }
                 }
                 EngineEvent::Upload { client } => {
-                    in_flight -= 1;
-                    let tau = (version - synced_version[client]) as usize;
-                    buffer.push((client, tau, t));
-                    if buffer.len() < k {
+                    st.in_flight -= 1;
+                    let s = st.shard_of[client];
+                    let tau = (st.shard_version[s] - st.synced_version[client]) as usize;
+                    st.buffers[s].push((client, tau, t));
+                    if st.buffers[s].len() < st.shard_k[s] {
                         continue;
                     }
                     flushes += 1;
-                    version += 1;
-                    self.flush_buffer(
-                        exec,
-                        &mut buffer,
-                        flushes,
-                        t,
-                        in_flight,
-                        &mut window,
-                        &last_values,
-                        &last_accs,
-                        &mut synced_version,
-                        version,
-                        mixing,
-                    )?;
+                    st.shard_version[s] += 1;
+                    let version = st.shard_version[s];
+                    // Flush against the shard's model (S == 1: the global
+                    // itself, moved out for the duration of the flush).
+                    let mut model = if s_count == 1 {
+                        std::mem::take(&mut self.global)
+                    } else {
+                        std::mem::take(&mut shard_models[s])
+                    };
+                    let res = self.flush_shard(
+                        exec, pool, &mut st, s, flushes, t, version, mixing, knobs, &mut model,
+                    );
+                    if s_count == 1 {
+                        self.global = model;
+                    } else {
+                        shard_models[s] = model;
+                    }
+                    res?;
+                    if s_count > 1 && flushes % reconcile_every == 0 {
+                        self.reconcile_shards(&mut shard_models, &st.shard_weight);
+                    }
                 }
             }
         }
+        // Committed events = pops of the main loop (the sim's commit-order
+        // bookkeeping), identical for serial and threaded execution;
+        // abandoned events below are excluded.
+        self.metrics.engine_events += (self.queue.total_popped() - events_before) as usize;
         // Abandon in-flight events so a later (barriered) round on the
-        // same server does not see them.
+        // same server does not see them. In-flight speculations are
+        // dropped with the engine state; their workers' result sends fail
+        // harmlessly and the pool drains on shutdown.
         while self.queue.pop().is_some() {}
-        Ok(())
+        // Fold every shard's outstanding work into the true global even
+        // when the run ended between reconciliation points.
+        if s_count > 1 {
+            self.reconcile_shards(&mut shard_models, &st.shard_weight);
+        }
+        self.drain_pending_evals(&mut st)
     }
 
-    /// Aggregate the flushed buffer into the global model with
-    /// staleness-weighted mixing, broadcast to its clients, restart them,
-    /// evaluate, and cut one [`RoundRecord`].
+    /// Aggregate shard `shard`'s flushed buffer into `model` with
+    /// staleness-weighted mixing, broadcast to its clients, restart (and,
+    /// threaded, re-dispatch) them, evaluate, and cut one [`RoundRecord`].
+    ///
+    /// At `shards > 1` the record's accuracy/loss evaluate the flushing
+    /// shard's *replica* (`model`), not the reconciled global — the first
+    /// flush after each reconcile evaluates a replica freshly restarted
+    /// from the global, which re-anchors the trajectory (see
+    /// EXPERIMENTS.md §Engines). At S=1 the replica *is* the global.
     #[allow(clippy::too_many_arguments)]
-    fn flush_buffer(
+    fn flush_shard(
         &mut self,
         exec: &mut dyn Executor,
-        buffer: &mut Vec<(usize, usize, f64)>,
+        pool: Option<&ExecutorPool>,
+        st: &mut EngineState,
+        shard: usize,
         flush_idx: usize,
         now: f64,
-        in_flight: usize,
-        window: &mut FlushWindow,
-        last_values: &[f64],
-        last_accs: &[f64],
-        synced_version: &mut [u64],
         version: u64,
         mixing: MixingRule,
+        knobs: RoundKnobs,
+        model: &mut Vec<f32>,
     ) -> Result<()> {
         let n = self.clients.len();
-        let kk = buffer.len();
+        let kk = st.buffers[shard].len();
         let precision = self.cfg.upload_precision;
         let payload = self.ctx.model_payload_bytes;
         self.round = flush_idx;
@@ -635,19 +902,19 @@ impl Server {
         // Deterministic aggregation order — and a bitwise match with the
         // barriered engine's client-order FedAvg when the buffer spans the
         // whole fleet.
-        buffer.sort_by_key(|e| e.0);
+        st.buffers[shard].sort_by_key(|e| e.0);
 
         // Buffered clients are blocked between upload and broadcast, so
         // encoding their (pristine) params now is byte-identical to
         // encoding at send time.
-        for (j, &(c, _, _)) in buffer.iter().enumerate() {
+        for (j, &(c, _, _)) in st.buffers[shard].iter().enumerate() {
             self.clients[c].encode_upload(precision, &mut self.upload_bufs[j]);
         }
         // FedAvg weights n_i scaled by alpha(tau_i); the buffer's mean
-        // alpha is the global mixing rate.
+        // alpha is the shard's mixing rate.
         self.upload_weights.clear();
         let mut alpha_sum = 0.0f64;
-        for &(c, tau, _) in buffer.iter() {
+        for &(c, tau, _) in st.buffers[shard].iter() {
             let a = mixing.alpha(tau);
             alpha_sum += a;
             self.upload_weights.push(self.clients[c].num_samples() as f64 * a);
@@ -655,14 +922,11 @@ impl Server {
         let abar = (alpha_sum / kk as f64).min(1.0);
         if abar >= 1.0 {
             // Pure FedAvg replacement (the barriered rule).
-            self.agg.aggregate_payloads(
-                &self.upload_bufs[..kk],
-                &self.upload_weights,
-                &mut self.global,
-            );
+            self.agg
+                .aggregate_payloads(&self.upload_bufs[..kk], &self.upload_weights, model);
         } else {
             // theta <- (1 - abar) * theta + abar * fedavg(buffer): the
-            // current global model rides along as one extra f32 payload
+            // current shard model rides along as one extra f32 payload
             // (slot kk) with weight 1 - abar; the buffered weights are
             // pre-normalized to sum to abar.
             let wsum: f64 = self.upload_weights.iter().sum();
@@ -670,51 +934,72 @@ impl Server {
                 *w = abar * *w / wsum;
             }
             self.upload_weights.push(1.0 - abar);
-            self.upload_bufs[kk].encode(Precision::F32, &self.global);
+            self.upload_bufs[kk].encode(Precision::F32, model);
             self.agg.aggregate_payloads(
                 &self.upload_bufs[..kk + 1],
                 &self.upload_weights,
-                &mut self.global,
+                model,
             );
         }
 
-        // Broadcast the new global to the flushed clients (at wire
-        // precision, codec once per flush) and restart their clocks.
+        // Broadcast the new shard model to the flushed clients (at wire
+        // precision, codec once per flush), restart their clocks, and —
+        // threaded — dispatch their next speculative local round against
+        // the state they just synced.
         let bcast_model: Option<&[f32]> = if precision == Precision::F32 {
             None
         } else {
-            self.bcast_buf.encode(precision, &self.global);
-            self.bcast_model.resize(self.global.len(), 0.0);
+            self.bcast_buf.encode(precision, model);
+            self.bcast_model.resize(model.len(), 0.0);
             self.bcast_buf.decode_into(&mut self.bcast_model);
             Some(&self.bcast_model)
         };
-        for &(c, _, _) in buffer.iter() {
+        // Indexed loop (not an iterator): the speculative dispatch below
+        // re-borrows the engine state mutably, and an index avoids
+        // allocating a snapshot of the flushed ids on the hot flush path.
+        #[allow(clippy::needless_range_loop)]
+        for bi in 0..kk {
+            let c = st.buffers[shard][bi].0;
             let down = self.ctx.link.transfer_seconds(
                 &Message::ModelBroadcast { payload_bytes: payload },
                 &mut self.net_rng,
             );
-            window.bytes_down += payload;
-            self.clients[c].sync(bcast_model.unwrap_or(&self.global));
-            synced_version[c] = version;
+            st.window.bytes_down += payload;
+            self.clients[c].sync(bcast_model.unwrap_or(&model[..]));
+            st.synced_version[c] = version;
             self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
+            dispatch_speculation(&self.clients, st, pool, c, knobs)?;
         }
-        self.push_history();
+        self.push_history_from(&model[..]);
 
-        let (global_acc, global_loss) = if flush_idx % self.cfg.eval_every == 0 {
+        let (global_acc, global_loss) = if flush_idx % self.cfg.eval_every != 0 {
+            (f64::NAN, f64::NAN)
+        } else if let Some(pool) = pool {
+            // Overlap the evaluation: snapshot the model, run on a pool
+            // worker, patch the record before the engine returns. The
+            // values are identical to inline evaluation.
+            let params = model.clone();
+            let images = Arc::clone(&self.ctx.test_images);
+            let labels = Arc::clone(&self.ctx.test_labels);
+            let (tx, rx) = mpsc::channel();
+            pool.submit(Box::new(move |ex| {
+                let _ = tx.send(evaluate_with_params(ex, &params, &images[..], &labels[..]));
+            }))?;
+            st.pending_evals.push((self.metrics.records.len(), rx));
+            (f64::NAN, f64::NAN)
+        } else {
             evaluate_with_params(
                 exec,
-                &self.global,
-                &self.ctx.test_images,
-                &self.ctx.test_labels,
+                &model[..],
+                &self.ctx.test_images[..],
+                &self.ctx.test_labels[..],
             )?
-        } else {
-            (f64::NAN, f64::NAN)
         };
 
         // Buffer wait: how long each upload sat before the flush.
-        let idle_seconds: f64 = buffer.iter().map(|&(_, _, at)| now - at).sum();
+        let idle_seconds: f64 = st.buffers[shard].iter().map(|&(_, _, at)| now - at).sum();
         let mut fleet_selected = vec![false; n];
-        for &(c, _, _) in buffer.iter() {
+        for &(c, _, _) in st.buffers[shard].iter() {
             fleet_selected[c] = true;
         }
         let cum_uploads = self.metrics.records.last().map_or(0, |r| r.cum_uploads) + kk;
@@ -722,10 +1007,10 @@ impl Server {
         // window: reports/bytes count when their events fire, so an upload
         // can land in a later flush than the report that caused it. A
         // window that saw no reports records NaN (no data), not 0.0.
-        let (train_loss, threshold) = if window.reports == 0 {
+        let (train_loss, threshold) = if st.window.reports == 0 {
             (f64::NAN, f64::NAN)
         } else {
-            (window.train_loss_sum / window.reports as f64, window.threshold)
+            (st.window.train_loss_sum / st.window.reports as f64, st.window.threshold)
         };
         let record = RoundRecord {
             round: flush_idx,
@@ -735,39 +1020,93 @@ impl Server {
             train_loss,
             uploads: kk,
             cum_uploads,
-            bytes_up: window.bytes_up,
-            bytes_down: window.bytes_down,
+            bytes_up: st.window.bytes_up,
+            bytes_down: st.window.bytes_down,
             threshold,
-            values: last_values.to_vec(),
+            values: st.last_values.to_vec(),
             selected: fleet_selected,
-            client_accs: last_accs.to_vec(),
+            client_accs: st.last_accs.to_vec(),
             idle_seconds,
-            reports: window.reports,
-            in_flight,
-            upload_staleness: buffer.iter().map(|&(_, tau, _)| tau).collect(),
+            reports: st.window.reports,
+            in_flight: st.in_flight,
+            upload_staleness: st.buffers[shard].iter().map(|&(_, tau, _)| tau).collect(),
+            shard,
+            spec_committed: st.window.spec_committed,
+            spec_replayed: st.window.spec_replayed,
         };
         if global_acc.is_finite() {
             log_info!(
                 "server",
-                "[{}] flush {flush_idx:>3}: acc={global_acc:.4} buffer={kk} in_flight={in_flight} stale_max={} vt={now:.1}s",
+                "[{}] flush {flush_idx:>3}: acc={global_acc:.4} shard={shard} buffer={kk} in_flight={} stale_max={} vt={now:.1}s",
                 self.metrics.algorithm,
+                st.in_flight,
                 record.staleness_max()
             );
         }
         self.metrics.push(record);
-        *window = FlushWindow::default();
-        buffer.clear();
+        st.window = FlushWindow::default();
+        st.buffers[shard].clear();
+        Ok(())
+    }
+
+    /// Reconcile the shard model replicas into the true global
+    /// (sample-count-weighted average) and restart every shard from it.
+    /// Transparent to staleness accounting: shard versions do not advance.
+    fn reconcile_shards(&mut self, shard_models: &mut [Vec<f32>], weights: &[f64]) {
+        let views: Vec<&[f32]> = shard_models.iter().map(|m| m.as_slice()).collect();
+        self.agg.aggregate_weighted(&views, weights, &mut self.global);
+        log_debug!(
+            "server",
+            "reconciled {} shard models into the global (flush {})",
+            shard_models.len(),
+            self.round
+        );
+        for m in shard_models.iter_mut() {
+            m.copy_from_slice(&self.global);
+        }
+    }
+
+    /// Resolve deferred pool-side evaluations into their records (threaded
+    /// engine). Values are identical to inline evaluation — only the
+    /// wall-clock point where they were computed differs.
+    fn drain_pending_evals(&mut self, st: &mut EngineState) -> Result<()> {
+        for (idx, rx) in st.pending_evals.drain(..) {
+            let (acc, loss) = rx
+                .recv()
+                .map_err(|_| anyhow!("evaluation worker dropped its result"))??;
+            let r = &mut self.metrics.records[idx];
+            r.global_acc = acc;
+            r.global_loss = loss;
+            if acc.is_finite() {
+                log_info!(
+                    "server",
+                    "[{}] flush {:>3}: acc={acc:.4} shard={} buffer={} in_flight={} stale_max={} vt={:.1}s",
+                    self.metrics.algorithm,
+                    r.round,
+                    r.shard,
+                    r.uploads,
+                    r.in_flight,
+                    r.staleness_max(),
+                    r.vtime
+                );
+            }
+        }
         Ok(())
     }
 
     /// Evaluate the current global model on the server test set.
     pub fn evaluate_global(&self, exec: &mut dyn Executor) -> Result<(f64, f64)> {
-        evaluate_with_params(exec, &self.global, &self.ctx.test_images, &self.ctx.test_labels)
+        evaluate_with_params(
+            exec,
+            &self.global,
+            &self.ctx.test_images[..],
+            &self.ctx.test_labels[..],
+        )
     }
 
     /// The held-out test set (used by examples for extra reporting).
     pub fn test_set(&self) -> (&[f32], &[i32]) {
-        (&self.ctx.test_images, &self.ctx.test_labels)
+        (&self.ctx.test_images[..], &self.ctx.test_labels[..])
     }
 }
 
@@ -816,8 +1155,8 @@ pub fn build_server(
         train_flops: flops.0,
         eval_flops: flops.1,
         model_payload_bytes: payload_bytes,
-        test_images: test.images,
-        test_labels: test.labels,
+        test_images: Arc::new(test.images),
+        test_labels: Arc::new(test.labels),
     };
     Server::new(cfg.clone(), ctx, clients, policy, init_params, &root_rng)
 }

@@ -8,6 +8,9 @@ use crate::util::rng::Rng;
 use super::synth::Dataset;
 
 /// Epoch-reshuffling batcher producing fixed-size `[B, d]` batches.
+/// `Clone` snapshots the full iteration state (order, cursor, RNG), which
+/// the speculative client forks rely on.
+#[derive(Clone)]
 pub struct Batcher {
     order: Vec<usize>,
     cursor: usize,

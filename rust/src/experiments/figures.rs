@@ -126,6 +126,9 @@ mod tests {
                 reports: 1,
                 in_flight: 0,
                 upload_staleness: vec![0],
+                shard: 0,
+                spec_committed: 0,
+                spec_replayed: 0,
             });
         }
         m

@@ -14,7 +14,7 @@ use crate::data::synth::SynthConfig;
 use crate::data::{partition, PartitionScheme};
 use crate::metrics::RunMetrics;
 use crate::model::ParamSpec;
-use crate::runtime::{Executor, MockExecutor, PjrtRuntime};
+use crate::runtime::{Executor, ExecutorPool, ExecutorService, MockExecutor, PjrtRuntime};
 use crate::util::rng::Rng;
 
 /// The paper's four experiments (§V-B), scaled per EXPERIMENTS.md
@@ -130,15 +130,96 @@ pub fn build(cfg: &ExperimentConfig) -> Result<(Server, Box<dyn Executor>)> {
     Ok((server, exec))
 }
 
+/// Spawn the executor pool of the threaded barrier-free engine: `workers`
+/// executors, each constructed on its own worker thread from the config's
+/// backend (PJRT clients must be created where they are used).
+pub fn make_executor_pool(cfg: &ExperimentConfig, workers: usize) -> Result<ExecutorPool> {
+    match &cfg.backend {
+        Backend::Mock => ExecutorPool::spawn(workers, || {
+            Ok(Box::new(MockExecutor::standard()) as Box<dyn Executor>)
+        }),
+        Backend::Pjrt { artifact_dir } => {
+            let dir = artifact_dir.clone();
+            ExecutorPool::spawn(workers, move || {
+                let spec =
+                    ParamSpec::load(&dir).context("loading artifacts for a pool worker")?;
+                Ok(Box::new(PjrtRuntime::from_spec(spec)?) as Box<dyn Executor>)
+            })
+        }
+    }
+}
+
+/// Resolve `engine.workers`: explicit count, else the `util::par` chain
+/// (config `threads` key, `VAFL_THREADS`, available parallelism).
+pub fn engine_workers(cfg: &ExperimentConfig) -> usize {
+    if cfg.engine_opts.workers > 0 {
+        cfg.engine_opts.workers
+    } else {
+        crate::util::par::max_threads()
+    }
+}
+
+/// Build and run the **barrier-free** engine (threaded per
+/// `cfg.engine_opts`), timing only the engine itself: data generation,
+/// server build, and pool construction/shutdown are excluded. Returns
+/// the run metrics and the wall seconds. The engine bench and
+/// `straggler::compare_execution` both go through here so the timing
+/// convention stays uniform.
+pub fn run_barrier_free_timed(cfg: &ExperimentConfig) -> Result<(RunMetrics, f64)> {
+    let (mut server, mut exec) = build(cfg)?;
+    if cfg.engine_opts.threaded {
+        let pool = make_executor_pool(cfg, engine_workers(cfg))?;
+        let t0 = std::time::Instant::now();
+        server.run_event_driven_threaded(exec.as_mut(), &pool)?;
+        let wall = t0.elapsed().as_secs_f64();
+        pool.shutdown();
+        Ok((server.metrics.clone(), wall))
+    } else {
+        let t0 = std::time::Instant::now();
+        server.run_event_driven(exec.as_mut())?;
+        Ok((server.metrics.clone(), t0.elapsed().as_secs_f64()))
+    }
+}
+
 /// Run a full experiment to completion on the configured engine
 /// (barriered round loop, or the barrier-free event-driven engine when
-/// `cfg.engine = barrier_free`).
+/// `cfg.engine = barrier_free`), threaded when `engine.threaded` is set.
 pub fn run(cfg: &ExperimentConfig) -> Result<Outcome> {
     crate::util::logging::init();
     let (mut server, mut exec) = build(cfg)?;
-    match cfg.engine {
-        EngineMode::Barriered => server.run(exec.as_mut())?,
-        EngineMode::BarrierFree => server.run_event_driven(exec.as_mut())?,
+    match (cfg.engine, cfg.engine_opts.threaded) {
+        (EngineMode::Barriered, false) => server.run(exec.as_mut())?,
+        (EngineMode::Barriered, true) => {
+            // One shared service thread (PJRT executors are not Send),
+            // one OS thread per active client per round — bit-identical
+            // to the sequential loop. This path computes exclusively
+            // through the service; release the built executor first so
+            // the PJRT backend never holds two runtimes at once.
+            drop(exec);
+            match &cfg.backend {
+                Backend::Mock => {
+                    let svc = ExecutorService::spawn(|| Ok(MockExecutor::standard()))?;
+                    for _ in 0..cfg.rounds {
+                        server.run_round_threaded(&svc)?;
+                    }
+                    svc.shutdown();
+                }
+                Backend::Pjrt { artifact_dir } => {
+                    let dir = artifact_dir.clone();
+                    let svc = ExecutorService::spawn(move || PjrtRuntime::load(&dir))?;
+                    for _ in 0..cfg.rounds {
+                        server.run_round_threaded(&svc)?;
+                    }
+                    svc.shutdown();
+                }
+            }
+        }
+        (EngineMode::BarrierFree, false) => server.run_event_driven(exec.as_mut())?,
+        (EngineMode::BarrierFree, true) => {
+            let pool = make_executor_pool(cfg, engine_workers(cfg))?;
+            server.run_event_driven_threaded(exec.as_mut(), &pool)?;
+            pool.shutdown();
+        }
     }
     Ok(Outcome::from_metrics(server.metrics.clone()))
 }

@@ -147,6 +147,9 @@ mod tests {
             reports: 0,
             in_flight: 0,
             upload_staleness: vec![],
+            shard: 0,
+            spec_committed: 0,
+            spec_replayed: 0,
         });
         m
     }
@@ -199,6 +202,9 @@ mod tests {
             reports: 0,
             in_flight: 0,
             upload_staleness: vec![],
+            shard: 0,
+            spec_committed: 0,
+            spec_replayed: 0,
         });
         let rows = rows_for_experiment(&[fake_run("a", "afl", 10), m]);
         let text = render(&rows);

@@ -3,6 +3,8 @@
 //! of Algorithm 1 (lines 18–26): local SGD passes, the communication value
 //! V (Eq. 1), and the probe-set accuracy Acc_i.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::ValueFnConfig;
@@ -34,10 +36,16 @@ pub struct ClientReport {
 }
 
 /// A simulated edge client.
+///
+/// The heavy read-only state (data shard, probe set) is `Arc`-shared, so a
+/// `Clone` copies only the mutable training state (model, batcher order,
+/// RNG streams). That makes [`Client::speculate`] cheap enough to fork on
+/// every dispatched local round of the threaded barrier-free engine.
+#[derive(Clone)]
 pub struct Client {
     pub id: usize,
     pub device: DeviceProfile,
-    shard: ClientShard,
+    shard: Arc<ClientShard>,
     batcher: Batcher,
     /// Local model theta_i (diverges from global when uploads are skipped).
     pub params: ParamVec,
@@ -48,8 +56,15 @@ pub struct Client {
     /// RNG stream for device jitter.
     jitter_rng: Rng,
     /// Probe set (slice of the server test set) for Acc_i.
-    probe_images: Vec<f32>,
-    probe_labels: Vec<i32>,
+    probe_images: Arc<Vec<f32>>,
+    probe_labels: Arc<Vec<i32>>,
+    /// Monotonic training-state version: bumped whenever the inputs of a
+    /// future `local_round` change (`local_round` itself, [`Client::sync`],
+    /// [`Client::commit_speculation`]). A speculative fork is valid only
+    /// while the origin's epoch still matches the fork's (compare
+    /// [`Client::epoch`]); `staleness` bookkeeping is deliberately
+    /// excluded — it never feeds the local round.
+    epoch: u64,
 }
 
 impl Client {
@@ -70,12 +85,13 @@ impl Client {
             jitter_rng: root_rng.fork(&format!("jitter-{id}")),
             id,
             device,
-            shard,
+            shard: Arc::new(shard),
             params: init_params,
             prev_grad: None,
             staleness: 0,
-            probe_images,
-            probe_labels,
+            probe_images: Arc::new(probe_images),
+            probe_labels: Arc::new(probe_labels),
+            epoch: 0,
         }
     }
 
@@ -88,6 +104,35 @@ impl Client {
         self.params.clear();
         self.params.extend_from_slice(global);
         self.staleness = 0;
+        self.epoch += 1;
+    }
+
+    /// Current training-state version (see the `epoch` field docs).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Fork a speculative copy for an off-thread local round. The fork
+    /// shares the immutable shard/probe data and snapshots the mutable
+    /// training state; pair it with [`Client::commit_speculation`] once the
+    /// engine reaches the round's commit point in virtual-event order.
+    pub fn speculate(&self) -> Client {
+        self.clone()
+    }
+
+    /// Absorb the training state a speculative fork produced. Only valid
+    /// while `self.epoch() == fork_epoch` recorded at [`Client::speculate`]
+    /// time (the engine replays the round serially otherwise). Staleness is
+    /// *not* taken from the ghost: offline retries may have marked the
+    /// origin stale while the speculation was in flight, and that counter
+    /// never feeds the local round.
+    pub fn commit_speculation(&mut self, ghost: Client) {
+        debug_assert_eq!(self.id, ghost.id, "speculation committed to the wrong client");
+        self.params = ghost.params;
+        self.prev_grad = ghost.prev_grad;
+        self.batcher = ghost.batcher;
+        self.jitter_rng = ghost.jitter_rng;
+        self.epoch += 1;
     }
 
     /// Mark a round where this client kept its local model.
@@ -115,6 +160,7 @@ impl Client {
         train_flops: u64,
         eval_flops: u64,
     ) -> Result<ClientReport> {
+        self.epoch += 1;
         let d = exec.input_dim();
         let b = exec.batch_size();
         let mut x = vec![0.0f32; b * d];
@@ -136,8 +182,12 @@ impl Client {
         let grad = last_grad.expect("at least one step");
 
         // Probe accuracy (Acc_i on the test set, paper §III-A).
-        let (acc, _probe_loss) =
-            evaluate_with_params(exec, &self.params, &self.probe_images, &self.probe_labels)?;
+        let (acc, _probe_loss) = evaluate_with_params(
+            exec,
+            &self.params,
+            &self.probe_images[..],
+            &self.probe_labels[..],
+        )?;
 
         // V_i (Eq. 1). Before the first round there is no nabla^{k-1}: the
         // gradient difference degenerates to ||nabla^1||^2 (nabla^0 = 0),
@@ -271,6 +321,59 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{}", precision.name());
             }
         }
+    }
+
+    #[test]
+    fn speculation_commit_matches_serial_local_round() {
+        // Forking, training the ghost, and committing must be bitwise
+        // indistinguishable from training the client in place.
+        let (mut a, mut exec) = mk_client(10);
+        let (mut b, mut exec2) = mk_client(10);
+        for round in 1..=3 {
+            let ra = a.local_round(&mut exec, round, 1, 2, 0.2, 1, 1).unwrap();
+            let fork_epoch = b.epoch();
+            let mut ghost = b.speculate();
+            let rb = ghost.local_round(&mut exec2, round, 1, 2, 0.2, 1, 1).unwrap();
+            assert_eq!(b.epoch(), fork_epoch, "origin untouched while fork runs");
+            b.commit_speculation(ghost);
+            assert_eq!(ra.value.to_bits(), rb.value.to_bits());
+            assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
+            assert_eq!(ra.compute_seconds.to_bits(), rb.compute_seconds.to_bits());
+            for (x, y) in a.params.iter().zip(&b.params) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn speculation_epoch_detects_superseded_state() {
+        let (mut c, mut exec) = mk_client(11);
+        let fork_epoch = c.epoch();
+        let ghost = c.speculate();
+        // A sync (new global landed) supersedes the fork...
+        let g = vec![0.5f32; c.params.len()];
+        c.sync(&g);
+        assert_ne!(c.epoch(), fork_epoch, "sync must invalidate the fork");
+        drop(ghost);
+        // ...while mark_stale (offline retry path) does not.
+        let e = c.epoch();
+        let _ghost = c.speculate();
+        c.mark_stale();
+        assert_eq!(c.epoch(), e, "staleness bookkeeping must not invalidate");
+        // A serial local round on the origin also supersedes.
+        c.local_round(&mut exec, 1, 1, 1, 0.1, 1, 1).unwrap();
+        assert_ne!(c.epoch(), e);
+    }
+
+    #[test]
+    fn speculation_commit_preserves_origin_staleness() {
+        let (mut c, mut exec) = mk_client(12);
+        let mut ghost = c.speculate();
+        ghost.local_round(&mut exec, 1, 1, 1, 0.1, 1, 1).unwrap();
+        c.mark_stale();
+        c.mark_stale();
+        c.commit_speculation(ghost);
+        assert_eq!(c.staleness, 2, "ghost's staleness=0 must not leak back");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! vafl run [--config FILE] [--algorithm afl|vafl|eaflm] [--preset a|b|c|d]
-//!          [--engine barriered|barrier_free] [--rounds N] [--seed N]
+//!          [--engine barriered|barrier_free] [--engine-threads N]
+//!          [--shards S] [--reconcile-every N] [--rounds N] [--seed N]
 //!          [--mock] [--out DIR] [--realtime SCALE]
 //! vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]
 //!     # one preset, all three algorithms, Table III rows + Fig. 4
@@ -111,7 +112,8 @@ fn print_usage() {
     println!(
         "vafl — Value-based Asynchronous Federated Learning (paper reproduction)\n\n\
          USAGE:\n  vafl run        [--preset a|b|c|d] [--config FILE] [--algorithm afl|vafl|eaflm]\n\
-         \x20                 [--engine barriered|barrier_free] [--rounds N] [--seed N] [--mock]\n\
+         \x20                 [--engine barriered|barrier_free] [--engine-threads N] [--shards S]\n\
+         \x20                 [--reconcile-every N] [--rounds N] [--seed N] [--mock]\n\
          \x20                 [--out DIR] [--realtime SCALE] [--quiet]\n\
          \x20 vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]\n\
          \x20 vafl sweep      [--rounds N] [--out DIR] [--mock]\n\
@@ -135,6 +137,18 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
     }
     if let Some(e) = flags.get("engine") {
         cfg.engine = vafl::config::EngineMode::from_name(e)?;
+    }
+    if let Some(t) = flags.get_usize("engine-threads")? {
+        // --engine-threads N: threaded execution with N pool workers
+        // (0 = auto-resolve from threads config / VAFL_THREADS / cores).
+        cfg.engine_opts.threaded = true;
+        cfg.engine_opts.workers = t;
+    }
+    if let Some(s) = flags.get_usize("shards")? {
+        cfg.engine_opts.shards = s;
+    }
+    if let Some(r) = flags.get_usize("reconcile-every")? {
+        cfg.engine_opts.reconcile_every = r;
     }
     if let Some(r) = flags.get_usize("rounds")? {
         cfg.rounds = r;

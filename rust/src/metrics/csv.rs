@@ -11,10 +11,10 @@ use super::RunMetrics;
 /// Write the per-round curve: one row per round.
 pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
     let mut out = String::new();
-    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max\n");
+    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,spec_committed,spec_replayed\n");
     for r in &m.records {
         out.push_str(&format!(
-            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{}\n",
+            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{},{}\n",
             r.round,
             r.vtime,
             fmt(r.global_acc),
@@ -30,6 +30,9 @@ pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
             r.in_flight,
             fmt(r.staleness_mean()),
             r.staleness_max(),
+            r.shard,
+            r.spec_committed,
+            r.spec_replayed,
         ));
     }
     write_atomic(path.as_ref(), out.as_bytes())
@@ -105,6 +108,9 @@ mod tests {
             reports: 2,
             in_flight: 1,
             upload_staleness: vec![0, 3],
+            shard: 1,
+            spec_committed: 4,
+            spec_replayed: 1,
         });
         m
     }
@@ -118,9 +124,9 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,vtime,acc"));
-        assert!(lines[0].ends_with("reports,in_flight,stale_mean,stale_max"));
+        assert!(lines[0].ends_with("stale_mean,stale_max,shard,spec_committed,spec_replayed"));
         assert!(lines[1].starts_with("1,1.250000,0.500000"));
-        assert!(lines[1].ends_with("2,1,1.500000,3"));
+        assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

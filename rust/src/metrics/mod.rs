@@ -47,6 +47,16 @@ pub struct RoundRecord {
     /// aggregation order. Barriered: rounds since each selected client
     /// last synced.
     pub upload_staleness: Vec<usize>,
+    /// Aggregator shard that flushed this record (always 0 for the
+    /// barriered and unsharded barrier-free engines).
+    pub shard: usize,
+    /// Speculative local rounds committed as-is in this record's window
+    /// (threaded barrier-free engine; 0 on serial runs).
+    pub spec_committed: usize,
+    /// Speculative local rounds whose forked state was superseded and
+    /// were replayed serially at the commit point (threaded engine; 0 on
+    /// serial runs).
+    pub spec_replayed: usize,
 }
 
 impl RoundRecord {
@@ -71,6 +81,10 @@ pub struct RunMetrics {
     pub algorithm: String,
     pub target_acc: f64,
     pub records: Vec<RoundRecord>,
+    /// Simulation events the engine committed (barrier-free runs; the
+    /// denominator-free throughput measure — events/sec in the bench).
+    /// Identical between serial and threaded execution.
+    pub engine_events: usize,
 }
 
 impl RunMetrics {
@@ -80,6 +94,7 @@ impl RunMetrics {
             algorithm: algorithm.to_string(),
             target_acc,
             records: Vec::new(),
+            engine_events: 0,
         }
     }
 
@@ -131,6 +146,35 @@ impl RunMetrics {
     /// Total reports processed across the run.
     pub fn total_reports(&self) -> usize {
         self.records.iter().map(|r| r.reports).sum()
+    }
+
+    /// Flush counts per aggregator shard: `map[shard] = flushes`. A
+    /// single zero entry for unsharded / barriered runs.
+    pub fn per_shard_flushes(&self) -> std::collections::BTreeMap<usize, usize> {
+        let mut map = std::collections::BTreeMap::new();
+        for r in &self.records {
+            *map.entry(r.shard).or_insert(0) += 1;
+        }
+        map
+    }
+
+    /// Total speculative local rounds `(committed, replayed)` across the
+    /// run. `(0, 0)` on serial runs.
+    pub fn speculation_totals(&self) -> (usize, usize) {
+        self.records.iter().fold((0, 0), |(c, p), r| {
+            (c + r.spec_committed, p + r.spec_replayed)
+        })
+    }
+
+    /// Fraction of speculative local rounds committed without a replay
+    /// (NaN when the run had no speculation, i.e. the serial engine).
+    pub fn speculation_hit_rate(&self) -> f64 {
+        let (committed, replayed) = self.speculation_totals();
+        let total = committed + replayed;
+        if total == 0 {
+            return f64::NAN;
+        }
+        committed as f64 / total as f64
     }
 
     /// Highest accuracy seen (paper: "Acc is the highest Acc rate").
@@ -187,6 +231,7 @@ impl RunMetrics {
 
     /// JSON export of the whole run.
     pub fn to_json(&self) -> Value {
+        let (spec_committed, spec_replayed) = self.speculation_totals();
         obj(vec![
             ("experiment", Value::from(self.experiment.as_str())),
             ("algorithm", Value::from(self.algorithm.as_str())),
@@ -200,6 +245,9 @@ impl RunMetrics {
             ("best_accuracy", Value::from(self.best_accuracy())),
             ("total_uploads", Value::from(self.total_uploads())),
             ("total_vtime", Value::from(self.total_vtime())),
+            ("engine_events", Value::from(self.engine_events)),
+            ("spec_committed", Value::from(spec_committed)),
+            ("spec_replayed", Value::from(spec_replayed)),
             (
                 "rounds",
                 Value::Arr(
@@ -217,6 +265,9 @@ impl RunMetrics {
                                 ("reports", Value::from(r.reports)),
                                 ("in_flight", Value::from(r.in_flight)),
                                 ("stale_max", Value::from(r.staleness_max())),
+                                ("shard", Value::from(r.shard)),
+                                ("spec_committed", Value::from(r.spec_committed)),
+                                ("spec_replayed", Value::from(r.spec_replayed)),
                                 ("threshold", finite_or_null(r.threshold)),
                                 (
                                     "selected",
@@ -279,6 +330,9 @@ mod tests {
             reports: 2,
             in_flight: 0,
             upload_staleness: vec![0, uploads],
+            shard: round % 2,
+            spec_committed: uploads,
+            spec_replayed: round % 2,
         }
     }
 
@@ -368,5 +422,22 @@ mod tests {
         let v = run().to_json();
         assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(v.get("comm_times_to_target").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("spec_committed").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn shard_and_speculation_rollups() {
+        // Records at rounds 1..3 carry shard = round % 2 and
+        // spec_committed = uploads (2, 1, 1), spec_replayed = round % 2.
+        let m = run();
+        let shards = m.per_shard_flushes();
+        assert_eq!(shards.get(&0), Some(&1));
+        assert_eq!(shards.get(&1), Some(&2));
+        assert_eq!(m.speculation_totals(), (4, 2));
+        assert!((m.speculation_hit_rate() - 4.0 / 6.0).abs() < 1e-12);
+        // A serial run (no speculation) has an undefined hit rate.
+        let serial = RunMetrics::new("a", "afl", 0.9);
+        assert!(serial.speculation_hit_rate().is_nan());
+        assert_eq!(serial.engine_events, 0);
     }
 }

@@ -25,7 +25,7 @@ pub mod service;
 
 pub use mock::MockExecutor;
 pub use pjrt::PjrtRuntime;
-pub use service::{ExecutorService, ServiceHandle};
+pub use service::{ExecutorPool, ExecutorService, PoolJob, ServiceHandle};
 
 use crate::Result;
 

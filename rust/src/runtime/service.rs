@@ -4,8 +4,14 @@
 //!
 //! This mirrors the paper's deployment: one *server-side* compute substrate
 //! shared by all client processes, with requests serialized at the device.
+//!
+//! [`ExecutorPool`] is the many-substrate sibling: `W` worker threads, each
+//! owning its *own* executor (created on the worker thread, as PJRT
+//! requires), pulling whole jobs — e.g. one speculative client local round
+//! — from a shared queue. The threaded barrier-free engine dispatches on
+//! it; unlike the service, jobs on different workers genuinely overlap.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context};
@@ -100,6 +106,12 @@ impl ExecutorService {
     }
 
     /// Stop the service thread and wait for it.
+    ///
+    /// Drains first: every job enqueued before this call is still executed
+    /// and answered (the shutdown marker rides the same FIFO queue), so no
+    /// [`ServiceHandle`] caller is left hanging on a reply. Jobs submitted
+    /// *after* shutdown get their reply channel dropped and surface as an
+    /// error on the handle, never a deadlock.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
@@ -114,6 +126,125 @@ impl ExecutorService {
 }
 
 impl Drop for ExecutorService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// A job for an [`ExecutorPool`] worker: runs against the worker's own
+/// executor. Jobs report results through whatever channel they capture.
+pub type PoolJob = Box<dyn FnOnce(&mut dyn Executor) + Send>;
+
+/// A pool of worker threads, each owning its **own** executor instance
+/// (constructed by the factory *on the worker thread* — PJRT clients must
+/// be created where they are used). Workers pull [`PoolJob`]s from one
+/// shared FIFO queue, so jobs on different workers run concurrently —
+/// this is what overlaps speculative client local rounds in the threaded
+/// barrier-free engine.
+///
+/// Determinism contract: the pool adds none of its own. A job's output
+/// must be a pure function of its inputs (true for [`super::MockExecutor`]
+/// and the AOT-compiled PJRT artifacts), and the *engine* decides commit
+/// order; which worker ran a job is unobservable.
+///
+/// Lifecycle: [`ExecutorPool::shutdown`] (and `Drop`, including during a
+/// panic unwind) closes the queue, lets every already-submitted job finish,
+/// and joins all workers — no leaked threads, no hanging result channels.
+pub struct ExecutorPool {
+    tx: Option<mpsc::Sender<PoolJob>>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl ExecutorPool {
+    /// Spawn `workers` (>= 1) threads, each constructing its executor via
+    /// `factory` on the worker thread. Fails if any construction fails
+    /// (remaining workers are joined on drop).
+    pub fn spawn<F>(workers: usize, factory: F) -> Result<Self>
+    where
+        F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let factory = Arc::new(factory);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut joins = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            let factory = Arc::clone(&factory);
+            let ready = ready_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("executor-pool-{w}"))
+                .spawn(move || {
+                    let mut exec = match factory() {
+                        Ok(e) => {
+                            let _ = ready.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    loop {
+                        // Hold the lock only for the blocking recv; a job
+                        // in hand releases it so siblings can take the next.
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break, // a sibling panicked mid-recv
+                        };
+                        match job {
+                            Ok(job) => job(exec.as_mut()),
+                            // Queue closed and drained: orderly shutdown.
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .context("spawning executor pool worker")?;
+            joins.push(join);
+        }
+        drop(ready_tx);
+        let pool = ExecutorPool { tx: Some(tx), joins };
+        for _ in 0..workers {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("executor pool worker died during startup"))??;
+        }
+        Ok(pool)
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.joins.len()
+    }
+
+    /// Enqueue a job; any idle worker picks it up. Errors only after
+    /// shutdown.
+    pub fn submit(&self, job: PoolJob) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("executor pool is shut down"))?
+            .send(job)
+            .map_err(|_| anyhow!("executor pool workers are gone"))
+    }
+
+    /// Close the queue, finish every already-submitted job, and join the
+    /// workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Dropping the sender closes the queue; workers drain whatever is
+        // still buffered, then their recv errors and they exit.
+        drop(self.tx.take());
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ExecutorPool {
     fn drop(&mut self) {
         self.shutdown_inner();
     }
@@ -221,5 +352,128 @@ mod tests {
     fn spawn_failure_propagates() {
         let r = ExecutorService::spawn::<MockExecutor, _>(|| anyhow::bail!("nope"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn shutdown_drains_inflight_jobs() {
+        // Every job enqueued before shutdown must still be executed and
+        // answered — shutdown is a drain, not an abort.
+        let svc = ExecutorService::spawn(|| Ok(MockExecutor::standard())).unwrap();
+        let mut pending = Vec::new();
+        for t in 0..8 {
+            let mut h = svc.handle();
+            pending.push(std::thread::spawn(move || {
+                let p = vec![0.0f32; h.param_count()];
+                let x = vec![0.1f32; h.batch_size() * h.input_dim()];
+                let y = vec![(t % 10) as i32; h.batch_size()];
+                h.train_step(&p, &x, &y, 0.1).map(|o| o.new_params.len())
+            }));
+        }
+        // Let the callers enqueue, then shut down while jobs are in flight.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        svc.shutdown();
+        for j in pending {
+            // Each call either completed (drained before the marker) or
+            // errored cleanly (enqueued after it) — never a hang.
+            if let Ok(n) = j.join().unwrap() {
+                assert_eq!(n, MockExecutor::standard().param_count());
+            }
+        }
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_worker() {
+        // A panicking (or just forgetful) event loop drops the service
+        // without calling shutdown; the Drop impl must still stop and join
+        // the worker thread so it cannot leak. Observable: handles created
+        // before the drop error out instead of hanging once it is gone.
+        let svc = ExecutorService::spawn(|| Ok(MockExecutor::standard())).unwrap();
+        let h = svc.handle();
+        drop(svc);
+        let mut h2 = h.clone();
+        let p = vec![0.0f32; h2.param_count()];
+        let x = vec![0.1f32; h2.batch_size() * h2.input_dim()];
+        let y = vec![0i32; h2.batch_size()];
+        assert!(
+            h2.train_step(&p, &x, &y, 0.1).is_err(),
+            "worker must be gone after drop"
+        );
+    }
+
+    #[test]
+    fn pool_runs_jobs_on_all_workers_and_drains_on_shutdown() {
+        let pool = ExecutorPool::spawn(3, || {
+            Ok(Box::new(MockExecutor::standard()) as Box<dyn Executor>)
+        })
+        .unwrap();
+        assert_eq!(pool.workers(), 3);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..16 {
+            let tx = tx.clone();
+            pool.submit(Box::new(move |exec| {
+                let p = vec![0.0f32; exec.param_count()];
+                let x = vec![0.1f32; exec.batch_size() * exec.input_dim()];
+                let y = vec![(i % 10) as i32; exec.batch_size()];
+                let out = exec.train_step(&p, &x, &y, 0.1).unwrap();
+                let _ = tx.send((i, out.new_params.len()));
+            }))
+            .unwrap();
+        }
+        drop(tx);
+        // Shutdown before collecting: it must drain all 16 jobs first.
+        pool.shutdown();
+        let done: Vec<(usize, usize)> = rx.iter().collect();
+        assert_eq!(done.len(), 16, "shutdown dropped queued jobs");
+    }
+
+    #[test]
+    fn pool_drop_without_shutdown_joins_workers() {
+        let pool = ExecutorPool::spawn(2, || {
+            Ok(Box::new(MockExecutor::standard()) as Box<dyn Executor>)
+        })
+        .unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit(Box::new(move |_| {
+            let _ = tx.send(());
+        }))
+        .unwrap();
+        drop(pool); // must drain the job and join both workers
+        assert!(rx.recv().is_ok(), "queued job was dropped, not drained");
+    }
+
+    #[test]
+    fn pool_spawn_failure_propagates() {
+        let r = ExecutorPool::spawn(2, || anyhow::bail!("no accelerator"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn pool_results_are_worker_count_invariant() {
+        // The same job stream must produce bitwise-identical results on a
+        // 1-worker and a 4-worker pool (pure-function executors).
+        let run = |workers: usize| {
+            let pool = ExecutorPool::spawn(workers, || {
+                Ok(Box::new(MockExecutor::standard()) as Box<dyn Executor>)
+            })
+            .unwrap();
+            let (tx, rx) = std::sync::mpsc::channel();
+            for i in 0..6usize {
+                let tx = tx.clone();
+                pool.submit(Box::new(move |exec| {
+                    let p = vec![0.01 * i as f32; exec.param_count()];
+                    let x = vec![0.1f32; exec.batch_size() * exec.input_dim()];
+                    let y = vec![(i % 10) as i32; exec.batch_size()];
+                    let out = exec.train_step(&p, &x, &y, 0.5).unwrap();
+                    let _ = tx.send((i, out.loss.to_bits()));
+                }))
+                .unwrap();
+            }
+            drop(tx);
+            pool.shutdown();
+            let mut got: Vec<(usize, u32)> = rx.iter().collect();
+            got.sort_unstable();
+            got
+        };
+        assert_eq!(run(1), run(4));
     }
 }

@@ -141,12 +141,76 @@ mod tests {
         assert_eq!(one[0], 7);
     }
 
+    /// Serializes tests that read or mutate the process-wide worker-count
+    /// resolution (`OVERRIDE` / `VAFL_THREADS`), so they cannot race each
+    /// other under the parallel test harness.
+    static CAP_LOCK: Mutex<()> = Mutex::new(());
+
     #[test]
     fn threads_for_scales_with_work() {
+        let _guard = CAP_LOCK.lock().unwrap();
         assert_eq!(threads_for(0, 100), 1);
         assert_eq!(threads_for(50, 100), 1);
         let t = threads_for(1_000_000, 100);
         assert!(t >= 1 && t <= max_threads());
+    }
+
+    #[test]
+    fn threads_for_edge_cases() {
+        let _guard = CAP_LOCK.lock().unwrap();
+        // No work at all: always serial, for any min_per_thread (including
+        // the degenerate 0, which threads_for clamps to 1).
+        assert_eq!(threads_for(0, 0), 1);
+        assert_eq!(threads_for(0, 1), 1);
+        // min_per_thread > n_units: fan-out can never pay for the spawn.
+        assert_eq!(threads_for(7, 8), 1);
+        assert_eq!(threads_for(1, usize::MAX), 1);
+        // Exactly min_per_thread units is still serial (n_units <= min).
+        assert_eq!(threads_for(64, 64), 1);
+        // min_per_thread == 0 behaves like 1 (no divide-by-zero).
+        let t = threads_for(1_000, 0);
+        assert!(t >= 1 && t <= max_threads());
+    }
+
+    #[test]
+    fn vafl_threads_env_pins_worker_count() {
+        // `VAFL_THREADS=1` must force every auto-resolved kernel serial.
+        // The config override outranks the env var, so clear it first.
+        // (std's env accessors are internally synchronized and this crate
+        // has no C dependency reading the environment directly, so
+        // set_var under CAP_LOCK is sound on edition 2021.)
+        let _guard = CAP_LOCK.lock().unwrap();
+        // Restore the env var and the override even if an assert unwinds,
+        // so a failure here cannot poison later-scheduled tests.
+        struct Restore {
+            env: Option<String>,
+            cap: usize,
+        }
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                match self.env.take() {
+                    Some(v) => std::env::set_var("VAFL_THREADS", v),
+                    None => std::env::remove_var("VAFL_THREADS"),
+                }
+                OVERRIDE.store(self.cap, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        let _restore = Restore {
+            env: std::env::var("VAFL_THREADS").ok(),
+            cap: OVERRIDE.swap(0, std::sync::atomic::Ordering::Relaxed),
+        };
+        std::env::set_var("VAFL_THREADS", "1");
+        assert_eq!(max_threads(), 1);
+        assert_eq!(threads_for(1_000_000, 1), 1, "env cap of 1 must stay serial");
+        // Garbage and zero fall back past the env var.
+        std::env::set_var("VAFL_THREADS", "0");
+        assert!(max_threads() >= 1);
+        std::env::set_var("VAFL_THREADS", "banana");
+        assert!(max_threads() >= 1);
+        // The config override outranks the env var.
+        set_max_threads(3);
+        std::env::set_var("VAFL_THREADS", "1");
+        assert_eq!(max_threads(), 3);
     }
 
     #[test]

@@ -43,14 +43,18 @@ fn base_cfg() -> ExperimentConfig {
 }
 
 /// One snapshot line per round: floats as exact bits, then the discrete
-/// fields. Stable, diffable, bit-exact.
+/// fields. Stable, diffable, bit-exact. Speculation telemetry
+/// (`spec_committed`/`spec_replayed`) is deliberately excluded: it
+/// reflects *how* the engine executed (serial vs threaded), not what it
+/// computed, and the snapshots pin the computation.
 fn snapshot_line(r: &RoundRecord) -> String {
     let bits = |x: f64| format!("{:016x}", x.to_bits());
     let mut s = String::new();
     let _ = write!(
         s,
-        "round={} vtime={} acc={} train_loss={} threshold={} uploads={} cum={} reports={} in_flight={} bytes_up={} bytes_down={} selected={} stale={}",
+        "round={} shard={} vtime={} acc={} train_loss={} threshold={} uploads={} cum={} reports={} in_flight={} bytes_up={} bytes_down={} selected={} stale={}",
         r.round,
+        r.shard,
         bits(r.vtime),
         bits(r.global_acc),
         bits(r.train_loss),
@@ -140,4 +144,31 @@ fn golden_barrier_free_round_stream_is_stable() {
         mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
     };
     run_snapshot("barrier_free", &cfg);
+}
+
+#[test]
+fn golden_barrier_free_sharded_round_stream_is_stable() {
+    // Pins the S=2 sharded aggregation numerics (per-shard buffers +
+    // model replicas + periodic reconciliation). Uses experiment b's
+    // 7-client fleet so both shards hold multiple clients.
+    let mut cfg = experiments::preset('b').unwrap();
+    cfg.algorithm = Algorithm::Vafl;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = 6;
+    cfg.samples_per_client = 96;
+    cfg.test_samples = 64;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    cfg.seed = 2021;
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.engine_opts.shards = 2;
+    cfg.engine_opts.reconcile_every = 2;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    run_snapshot("barrier_free_sharded", &cfg);
 }

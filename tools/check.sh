@@ -2,15 +2,30 @@
 # Lint + test gate for the Rust coordinator (see EXPERIMENTS.md §Perf).
 #
 #   tools/check.sh            # fmt + clippy -D warnings + cargo test -q
+#                             # + engine equivalence/golden under
+#                             #   VAFL_THREADS=1 and VAFL_THREADS=4
 #   tools/check.sh --no-tests # lint only
 #   tools/check.sh --tests    # (legacy alias of the default)
 #
 # On test failure, any golden-run snapshot drift (tests/golden/*.golden.new,
 # written by rust/tests/golden_run.rs) is diffed so the numeric/ordering
-# change is visible in the CI log.
+# change is visible in the CI log. First runs *create* the snapshots
+# (tests/golden/*.golden) — commit them on the CI reference machine.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
+
+dump_golden_drift() {
+    shopt -s nullglob
+    for new in tests/golden/*.golden.new; do
+        golden="${new%.new}"
+        echo
+        echo "== golden-run snapshot drift: ${golden} =="
+        diff -u "$golden" "$new" || true
+        echo "(refresh intended changes with VAFL_UPDATE_GOLDEN=1 cargo test -q --test golden_run)"
+    done
+    shopt -u nullglob
+}
 
 echo "== cargo fmt --check =="
 cargo fmt --check
@@ -21,16 +36,20 @@ cargo clippy --all-targets -- -D warnings
 if [[ "${1:-}" != "--no-tests" ]]; then
     echo "== cargo test -q =="
     if ! cargo test -q; then
-        shopt -s nullglob
-        for new in tests/golden/*.golden.new; do
-            golden="${new%.new}"
-            echo
-            echo "== golden-run snapshot drift: ${golden} =="
-            diff -u "$golden" "$new" || true
-            echo "(refresh intended changes with VAFL_UPDATE_GOLDEN=1 cargo test -q --test golden_run)"
-        done
+        dump_golden_drift
         exit 1
     fi
+
+    # The threaded engine must commit a bitwise-identical record stream to
+    # the serial engine, and the golden snapshots must hold, at both ends
+    # of the parallel-kernel worker range.
+    for t in 1 4; do
+        echo "== VAFL_THREADS=$t engine equivalence + golden =="
+        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test golden_run; then
+            dump_golden_drift
+            exit 1
+        fi
+    done
 fi
 
 echo "OK"
