@@ -10,9 +10,11 @@
 //!  4. end-to-end mock round (coordinator overhead with compute ~free)
 //!  5. fused dequantize-aggregate vs naive round_trip-then-aggregate
 //!  6. parallel kernels: 1 vs N workers
+//!  7. sparse top-k scatter-aggregation vs dense (O(K·k) vs O(K·n))
 //!
 //! `--json` (or `VAFL_BENCH_JSON=1`) additionally writes every row to
-//! `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
+//! `BENCH_hotpath.json` — and section 7's dense-vs-sparse sweep to
+//! `BENCH_sparse.json` — so the perf trajectory is tracked across PRs.
 
 mod common;
 
@@ -21,6 +23,7 @@ use vafl::coordinator::aggregate::Aggregator;
 use vafl::data::synth::{generate, generate_t, SynthConfig};
 use vafl::fleet::amplify_value;
 use vafl::model::quant::{Precision, QuantBuf};
+use vafl::model::sparse::SparseDelta;
 use vafl::model::{l2_norm_sq, sq_distance, weighted_average_into_t};
 use vafl::netsim::{LinkProfile, Message};
 use vafl::runtime::Executor;
@@ -41,7 +44,7 @@ impl Recorder {
         self.rows.push((name.to_string(), s));
     }
 
-    fn write_json(&self, path: &str) -> std::io::Result<()> {
+    fn write_json_named(&self, path: &str, bench: &str) -> std::io::Result<()> {
         let rows: Vec<Value> = self
             .rows
             .iter()
@@ -57,10 +60,14 @@ impl Recorder {
             })
             .collect();
         let doc = obj(vec![
-            ("bench", Value::Str("perf_hotpath".into())),
+            ("bench", Value::Str(bench.into())),
             ("rows", Value::Arr(rows)),
         ]);
         std::fs::write(path, doc.to_string_pretty())
+    }
+
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        self.write_json_named(path, "perf_hotpath")
     }
 }
 
@@ -202,9 +209,59 @@ fn main() -> anyhow::Result<()> {
         rec.emit(&format!("synthdigits generate 200 (workers={t})"), s);
     }
 
+    common::section("7. sparse top-k scatter-aggregation: time scales with k, not n");
+    // Dense flush cost is O(K·n) no matter how little actually changed;
+    // the sparse scatter touches only the K·k transmitted coordinates.
+    // Sweep k_fraction at two model sizes: sparse rows should track k
+    // (halving k_fraction ≈ halving time) while the dense baseline rows
+    // track n. Encode rows are reported separately — selection is O(n)
+    // by nature (it must look at every delta once), the claim is about
+    // the server-side aggregation.
+    let mut sparse_rec = Recorder::default();
+    let mut srng = Rng::new(7);
+    for &dim in &[p, 4 * p] {
+        let k_clients = 7usize;
+        let models: Vec<Vec<f32>> = (0..k_clients)
+            .map(|_| (0..dim).map(|_| srng.gauss() as f32).collect())
+            .collect();
+        let bases: Vec<Vec<f32>> = (0..k_clients)
+            .map(|_| (0..dim).map(|_| srng.gauss() as f32).collect())
+            .collect();
+        let fweights = vec![1000.0f64; k_clients];
+        let mut out = vec![0.0f32; dim];
+        let mut agg = Aggregator::new();
+        let mut dense_bufs = vec![QuantBuf::new(); k_clients];
+        for (b, m) in dense_bufs.iter_mut().zip(&models) {
+            b.encode(Precision::F32, m);
+        }
+        let s = bench(3, 50, || {
+            agg.aggregate_payloads_t(&dense_bufs, &fweights, &mut out, 1)
+        });
+        sparse_rec.emit(&format!("dense aggregate {k_clients}x{dim}"), s);
+        for kf in [0.01f64, 0.1, 0.5, 1.0] {
+            let k = ((dim as f64 * kf).ceil() as usize).clamp(1, dim);
+            let mut sparse_bufs = vec![SparseDelta::new(); k_clients];
+            let s = bench(3, 20, || {
+                for ((b, m), base) in sparse_bufs.iter_mut().zip(&models).zip(&bases) {
+                    b.encode_topk(Precision::F32, m, base, None, k);
+                }
+            });
+            sparse_rec.emit(&format!("sparse encode    {k_clients}x{dim} k={kf}"), s);
+            let s = bench(3, 50, || {
+                agg.aggregate_sparse_payloads_t(&sparse_bufs, &fweights, 0.0, &mut out, 1)
+            });
+            sparse_rec.emit(&format!("sparse aggregate {k_clients}x{dim} k={kf}"), s);
+        }
+    }
+    for (name, s) in &sparse_rec.rows {
+        rec.rows.push((name.clone(), s.clone()));
+    }
+
     if want_json {
         rec.write_json("BENCH_hotpath.json")?;
         println!("\nwrote BENCH_hotpath.json ({} rows)", rec.rows.len());
+        sparse_rec.write_json_named("BENCH_sparse.json", "sparse_topk")?;
+        println!("wrote BENCH_sparse.json ({} rows)", sparse_rec.rows.len());
     }
     Ok(())
 }

@@ -126,6 +126,64 @@ impl Default for EngineConfig {
     }
 }
 
+/// Upload compression mode (extension; see `model::sparse`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionMode {
+    /// Full dense payloads at `upload_precision` (the paper's system).
+    Dense,
+    /// Sparse top-k payloads: only the `k = ceil(k_fraction · n)`
+    /// coordinates with the largest `local − base (+ residual)` magnitude
+    /// cross the wire. At `k_fraction = 1.0` this is bitwise the dense
+    /// path.
+    TopK,
+}
+
+impl CompressionMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionMode::Dense => "dense",
+            CompressionMode::TopK => "topk",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(CompressionMode::Dense),
+            "topk" | "top_k" | "top-k" => Ok(CompressionMode::TopK),
+            other => bail!("unknown compression mode {other:?} (dense|topk)"),
+        }
+    }
+}
+
+/// Upload compression knobs — TOML section `[compression]`, CLI
+/// `--compression` / `--k-fraction` / `--error-feedback`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressionConfig {
+    pub mode: CompressionMode,
+    /// Fraction of parameters each sparse upload transmits
+    /// (`k = ceil(k_fraction · n)`, clamped to `[1, n]`); must be in
+    /// (0, 1]. Ignored in dense mode.
+    pub k_fraction: f64,
+    /// Accumulate unsent delta mass into the per-client error-feedback
+    /// residual (a coordinate's debt clears when it is transmitted; the
+    /// residual survives model downloads — see `fleet::Client`). Ignored
+    /// in dense mode.
+    pub error_feedback: bool,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        CompressionConfig { mode: CompressionMode::Dense, k_fraction: 1.0, error_feedback: true }
+    }
+}
+
+impl CompressionConfig {
+    /// Transmitted coordinates per upload for an `n`-parameter model.
+    pub fn k_for(&self, n: usize) -> usize {
+        ((n as f64 * self.k_fraction).ceil() as usize).clamp(1, n.max(1))
+    }
+}
+
 /// EAFLM gate constants (paper Eq. 3 and §IV-D: xi_d = 1/D, D = 1,
 /// alpha = 0.98; beta·m² folded into one threshold scale).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -208,6 +266,9 @@ pub struct ExperimentConfig {
     /// Wire precision of model uploads/broadcasts (extension; see
     /// model::quant). The paper's system ships f32.
     pub upload_precision: Precision,
+    /// Upload compression (extension; see model::sparse): dense payloads
+    /// or sparse top-k deltas with error feedback.
+    pub compression: CompressionConfig,
     /// FedAsync-style staleness decay for aggregation weights:
     /// w_i = n_i * decay^staleness_i. None = paper's plain n_i/n.
     pub staleness_decay: Option<f64>,
@@ -250,6 +311,7 @@ impl Default for ExperimentConfig {
             pixel_noise: 0.14,
             dropout: DropoutModel::none(),
             upload_precision: Precision::F32,
+            compression: CompressionConfig::default(),
             staleness_decay: None,
             threads: 0,
             engine: EngineMode::Barriered,
@@ -323,14 +385,10 @@ impl ExperimentConfig {
                  the barriered loop has a single aggregation point per round"
             );
         }
-        if self.engine_opts.shards > 1 && self.algorithm == Algorithm::Eaflm {
+        if !(self.compression.k_fraction > 0.0 && self.compression.k_fraction <= 1.0) {
             bail!(
-                "engine.shards > 1 is not supported with algorithm = eaflm: \
-                 the Eq. 3 gate thresholds on consecutive global-model \
-                 movement, but sharded flushes interleave different shard \
-                 replicas in the history, so the threshold would measure \
-                 inter-replica divergence instead (per-shard gate history \
-                 is a ROADMAP item)"
+                "compression.k_fraction must be in (0, 1], got {}",
+                self.compression.k_fraction
             );
         }
         if self.engine == EngineMode::BarrierFree && self.staleness_decay.is_some() {
@@ -455,6 +513,16 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("upload_precision") {
             cfg.upload_precision = Precision::from_name(v)
                 .with_context(|| format!("unknown upload_precision {v:?}"))?;
+        }
+        // [compression]
+        if let Some(v) = doc.get_str("compression.mode") {
+            cfg.compression.mode = CompressionMode::from_name(v)?;
+        }
+        if let Some(v) = doc.get_f64("compression.k_fraction") {
+            cfg.compression.k_fraction = v;
+        }
+        if let Some(v) = doc.get_bool("compression.error_feedback") {
+            cfg.compression.error_feedback = v;
         }
         if let Some(v) = doc.get_f64("staleness_decay") {
             cfg.staleness_decay = Some(v);
@@ -694,13 +762,65 @@ mod tests {
             "[engine]\nthreaded = true\n[backend]\nkind = \"mock\""
         )
         .is_ok());
-        // EAFLM's gate thresholds on consecutive global movement, which
-        // sharded histories would corrupt — rejected until the engine
-        // keeps per-shard gate history.
+        // EAFLM + shards is supported since each shard replica keeps its
+        // own gate history (Eq. 3 thresholds see consecutive movement of
+        // the same replica).
         assert!(ExperimentConfig::from_toml(
             "algorithm = \"eaflm\"\nnum_clients = 4\n[engine]\nmode = \"barrier_free\"\nshards = 2\n[backend]\nkind = \"mock\""
         )
-        .is_err());
+        .is_ok());
+    }
+
+    #[test]
+    fn compression_keys_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [compression]
+            mode = "topk"
+            k_fraction = 0.25
+            error_feedback = false
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.compression,
+            CompressionConfig {
+                mode: CompressionMode::TopK,
+                k_fraction: 0.25,
+                error_feedback: false,
+            }
+        );
+        // Defaults: dense, full k, error feedback armed.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.compression.mode, CompressionMode::Dense);
+        assert_eq!(d.compression.k_fraction, 1.0);
+        assert!(d.compression.error_feedback);
+        // Mode names round-trip; bad names rejected.
+        for m in [CompressionMode::Dense, CompressionMode::TopK] {
+            assert_eq!(CompressionMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(CompressionMode::from_name("gzip").is_err());
+        // k_fraction outside (0, 1] is rejected.
+        for bad in ["0.0", "-0.5", "1.5"] {
+            let toml =
+                format!("[compression]\nk_fraction = {bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn compression_k_for_rounds_up_and_clamps() {
+        let mut c = CompressionConfig { mode: CompressionMode::TopK, ..Default::default() };
+        c.k_fraction = 0.1;
+        assert_eq!(c.k_for(320), 32);
+        assert_eq!(c.k_for(17290), 1729);
+        assert_eq!(c.k_for(3), 1);
+        c.k_fraction = 1.0;
+        assert_eq!(c.k_for(320), 320);
+        c.k_fraction = 1e-9;
+        assert_eq!(c.k_for(320), 1, "k is never zero");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!   stacks at spawn).
 
 use crate::model::quant::QuantBuf;
+use crate::model::sparse::SparseDelta;
 use crate::model::{weighted_average_into, ParamVec};
 use crate::util::par;
 
@@ -29,6 +30,9 @@ pub struct Aggregator {
     /// Cached weight buffer: `aggregate` reuses it instead of collecting a
     /// fresh `Vec<f64>` every round.
     weights: Vec<f64>,
+    /// Pooled per-payload cursors for the serial sparse merge (the
+    /// parallel path gives each worker its own small cursor vector).
+    cursors: Vec<usize>,
 }
 
 impl Aggregator {
@@ -95,6 +99,150 @@ impl Aggregator {
             *o = a as f32;
         }
     }
+
+    /// Fused sparse scatter path: mix top-k [`SparseDelta`] payloads into
+    /// `out` (the global / shard replica) **in place**, touching only the
+    /// transmitted coordinates — flush cost O(K·k) instead of O(K·n).
+    ///
+    /// For every coordinate `j` transmitted by at least one payload:
+    ///
+    /// ```text
+    /// out[j] <- ( Σ_{i ∋ j} w_i·v_i[j]  +  (self_weight + Σ_{i ∌ j} w_i)·out[j] ) / total
+    /// total  =  Σ_i w_i + self_weight
+    /// ```
+    ///
+    /// i.e. masked FedAvg where the weight mass of payloads that did not
+    /// transmit `j` (and the explicit `self_weight` — the barrier-free
+    /// engine's `1 − ᾱ` keep-rate) falls back to the current value of
+    /// `out`. Coordinates transmitted by no one are not read or written.
+    ///
+    /// When every payload transmits every coordinate (`k == dim`, i.e.
+    /// `k_fraction = 1.0`) this is **bit-identical** to
+    /// [`aggregate_payloads`](Self::aggregate_payloads) over the dense
+    /// encodings of the same uploads — with `self_weight > 0` matching
+    /// the dense path's convention of folding the current model in as one
+    /// trailing f32 payload slot (property-tested in
+    /// `rust/tests/sparse.rs`).
+    pub fn aggregate_sparse_payloads(
+        &mut self,
+        payloads: &[SparseDelta],
+        weights: &[f64],
+        self_weight: f64,
+        out: &mut [f32],
+    ) {
+        let nnz: usize = payloads.iter().map(|p| p.len()).sum();
+        let threads = par::threads_for(nnz, PAR_MIN_DIM);
+        self.aggregate_sparse_payloads_t(payloads, weights, self_weight, out, threads);
+    }
+
+    /// Explicit-worker-count variant of
+    /// [`aggregate_sparse_payloads`](Self::aggregate_sparse_payloads).
+    /// Workers own disjoint contiguous coordinate ranges of `out`, so
+    /// every coordinate is computed by exactly one worker with exactly
+    /// the same operations in the same order for every worker count —
+    /// bit-identical results, like every kernel on `util::par`.
+    /// `threads == 1` is serial and allocation-free at steady state
+    /// (`rust/tests/alloc_sparse.rs`).
+    pub fn aggregate_sparse_payloads_t(
+        &mut self,
+        payloads: &[SparseDelta],
+        weights: &[f64],
+        self_weight: f64,
+        out: &mut [f32],
+        threads: usize,
+    ) {
+        assert!(!payloads.is_empty(), "aggregate of zero sparse payloads");
+        assert_eq!(payloads.len(), weights.len(), "payloads/weights length mismatch");
+        assert!(
+            self_weight >= 0.0 && self_weight.is_finite(),
+            "self_weight must be finite and non-negative"
+        );
+        let dim = payloads[0].dim();
+        for p in payloads {
+            assert_eq!(p.dim(), dim, "payload dimension mismatch");
+        }
+        assert_eq!(out.len(), dim, "output dimension mismatch");
+        // Summation order matches the dense path with the self slot
+        // pushed last, so the k == dim case normalizes identically.
+        let total: f64 = weights.iter().sum::<f64>() + self_weight;
+        assert!(total > 0.0, "weights must sum to a positive value");
+        if threads <= 1 {
+            self.cursors.clear();
+            self.cursors.resize(payloads.len(), 0);
+            scatter_merge_range(payloads, weights, self_weight, total, out, 0, &mut self.cursors);
+        } else {
+            par::par_chunks_mut(out, threads, 8, |start, chunk| {
+                let mut cursors: Vec<usize> = payloads
+                    .iter()
+                    .map(|p| p.indices().partition_point(|&i| (i as usize) < start))
+                    .collect();
+                scatter_merge_range(
+                    payloads,
+                    weights,
+                    self_weight,
+                    total,
+                    chunk,
+                    start,
+                    &mut cursors,
+                );
+            });
+        }
+    }
+}
+
+/// Merge the payloads' sorted index streams over the coordinate range
+/// `start .. start + out_chunk.len()`, mixing each transmitted coordinate
+/// into `out_chunk` in payload order (see
+/// [`Aggregator::aggregate_sparse_payloads`] for the formula).
+/// `cursors[i]` must point at payload `i`'s first index `>= start`.
+///
+/// The min-scan over payloads is O(K) per emitted coordinate (O(K·union)
+/// overall); with the small upload fan-ins of this engine (K = buffer /
+/// fleet size) that beats a heap's bookkeeping and stays allocation-free.
+fn scatter_merge_range(
+    payloads: &[SparseDelta],
+    weights: &[f64],
+    self_weight: f64,
+    total: f64,
+    out_chunk: &mut [f32],
+    start: usize,
+    cursors: &mut [usize],
+) {
+    let end = start + out_chunk.len();
+    loop {
+        // Smallest not-yet-mixed transmitted coordinate in [start, end).
+        let mut j = usize::MAX;
+        for (p, &cur) in payloads.iter().zip(cursors.iter()) {
+            if let Some(&idx) = p.indices().get(cur) {
+                let idx = idx as usize;
+                if idx < end && idx < j {
+                    j = idx;
+                }
+            }
+        }
+        if j == usize::MAX {
+            return;
+        }
+        // Accumulate every payload's contribution at j in payload order —
+        // the exact lane order of the dense fused path — then give the
+        // missing weight mass (plus the explicit self weight, last, to
+        // mirror the dense trailing self slot) to the current value.
+        let mut acc = 0.0f64;
+        let mut miss = 0.0f64;
+        for ((p, cur), &w) in payloads.iter().zip(cursors.iter_mut()).zip(weights) {
+            if p.indices().get(*cur).is_some_and(|&idx| idx as usize == j) {
+                acc += (w / total) * p.value(*cur) as f64;
+                *cur += 1;
+            } else {
+                miss += w;
+            }
+        }
+        miss += self_weight;
+        if miss > 0.0 {
+            acc += (miss / total) * out_chunk[j - start] as f64;
+        }
+        out_chunk[j - start] = acc as f32;
+    }
 }
 
 #[cfg(test)]
@@ -156,5 +304,78 @@ mod tests {
         let mut agg = Aggregator::new();
         let mut out = vec![0.0f32; 1];
         agg.aggregate_payloads(&[], &[], &mut out);
+    }
+
+    #[test]
+    fn sparse_full_k_matches_dense_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let dim = 53;
+        let models: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let base = vec![0.0f32; dim];
+        let weights = [2.0f64, 5.0, 1.0];
+        let mut agg = Aggregator::new();
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            let mut dense: Vec<QuantBuf> = vec![QuantBuf::new(); 3];
+            let mut sparse: Vec<SparseDelta> = vec![SparseDelta::new(); 3];
+            for ((d, s), m) in dense.iter_mut().zip(sparse.iter_mut()).zip(&models) {
+                d.encode(p, m);
+                s.encode_topk(p, m, &base, None, dim);
+            }
+            let mut want = vec![0.0f32; dim];
+            agg.aggregate_payloads(&dense, &weights, &mut want);
+            let mut got = vec![0.5f32; dim]; // prior values must be overwritten
+            agg.aggregate_sparse_payloads(&sparse, &weights, 0.0, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_partial_k_mixes_missing_mass_into_prior() {
+        // Two payloads over dim 4: payload A transmits {0, 1}, B transmits
+        // {1, 2}. Coordinate 3 is untouched; coordinate 0 mixes A with the
+        // prior at B's weight; coordinate 1 is a pure FedAvg of A and B.
+        let a_params = vec![10.0f32, 20.0, 0.0, 0.0];
+        let b_params = vec![0.0f32, 40.0, 30.0, 0.0];
+        let base = vec![0.0f32; 4];
+        let mut sa = SparseDelta::new();
+        let mut sb = SparseDelta::new();
+        sa.encode_topk(Precision::F32, &a_params, &base, None, 2);
+        sb.encode_topk(Precision::F32, &b_params, &base, None, 2);
+        assert_eq!(sa.indices(), &[0, 1]);
+        assert_eq!(sb.indices(), &[1, 2]);
+        let mut out = vec![1.0f32, 1.0, 1.0, 1.0];
+        let mut agg = Aggregator::new();
+        agg.aggregate_sparse_payloads(&[sa, sb], &[1.0, 3.0], 0.0, &mut out);
+        assert!((out[0] - (10.0 + 3.0) / 4.0).abs() < 1e-6, "{}", out[0]);
+        assert!((out[1] - (20.0 + 3.0 * 40.0) / 4.0).abs() < 1e-6, "{}", out[1]);
+        assert!((out[2] - (1.0 + 3.0 * 30.0) / 4.0).abs() < 1e-6, "{}", out[2]);
+        assert_eq!(out[3], 1.0, "untransmitted coordinate must not move");
+    }
+
+    #[test]
+    fn sparse_self_weight_keeps_prior_mass() {
+        // One payload transmitting coordinate 0 with weight 1 and
+        // self_weight 3: out[0] <- (v + 3·prior) / 4.
+        let params = vec![8.0f32, 0.0];
+        let base = vec![0.0f32, 0.0];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 1);
+        let mut out = vec![4.0f32, 4.0];
+        let mut agg = Aggregator::new();
+        agg.aggregate_sparse_payloads(&[sd], &[1.0], 3.0, &mut out);
+        assert!((out[0] - (8.0 + 3.0 * 4.0) / 4.0).abs() < 1e-6);
+        assert_eq!(out[1], 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero sparse payloads")]
+    fn empty_sparse_payload_set_panics() {
+        let mut agg = Aggregator::new();
+        let mut out = vec![0.0f32; 1];
+        agg.aggregate_sparse_payloads(&[], &[], 0.0, &mut out);
     }
 }

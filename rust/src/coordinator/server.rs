@@ -24,12 +24,13 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::ExperimentConfig;
+use crate::config::{CompressionMode, ExperimentConfig};
 use crate::coordinator::aggregate::Aggregator;
 use crate::coordinator::policy::{AsyncGateContext, PolicyContext, SelectionPolicy};
 use crate::coordinator::registry::ClientRegistry;
 use crate::coordinator::staleness::MixingRule;
 use crate::model::quant::{Precision, QuantBuf};
+use crate::model::sparse::{sparse_payload_bytes, SparseDelta};
 use crate::data::synth::Dataset;
 use crate::fleet::{Client, ClientReport};
 use crate::metrics::{RoundRecord, RunMetrics};
@@ -50,8 +51,16 @@ pub enum EngineEvent {
     Start { client: usize },
     /// The client's V report (68 B) landed at the server.
     Report { client: usize },
-    /// The client's model upload landed at the server.
-    Upload { client: usize },
+    /// The client's model upload landed at the server, carrying `bytes`
+    /// wire bytes — attached to the event so uplink byte accounting is
+    /// attributed to the aggregation window the upload *arrives* in (the
+    /// window a flush actually consumes), not the one that requested it.
+    /// Corollary: `bytes_up` counts **delivered** payloads — an upload
+    /// still in flight when the engine stops (it is abandoned with the
+    /// queue, having joined no window) is excluded, bounded by the final
+    /// record's `in_flight`. Downlink request bytes stay at request time
+    /// (the request *was* delivered to the client).
+    Upload { client: usize, bytes: u64 },
 }
 
 /// Per-aggregation-window counters of the barrier-free engine (reset at
@@ -136,6 +145,34 @@ struct EngineState {
     shard_version: Vec<u64>,
     /// Per-shard reconciliation weights (total local samples).
     shard_weight: Vec<f64>,
+    /// Per-shard global-model history, most recent last (S > 1 only;
+    /// empty at S == 1, where the server's own history serves). Keeps the
+    /// EAFLM Eq. 3 gate thresholding on consecutive movement of the
+    /// *same* replica instead of an interleaved mix of all of them.
+    /// Reconcile restarts are not pushed: histories track the
+    /// flush-to-flush movement of each replica lineage, so the first
+    /// flush after a reconcile measures movement from the replica's last
+    /// flushed model (the same re-anchoring semantics as the accuracy
+    /// curve — see EXPERIMENTS.md §Engines).
+    shard_history: Vec<Vec<Vec<f32>>>,
+}
+
+/// Append `model` to `history` (recycling retired entries through
+/// `pool`), bounded to the `keep` most recent entries — shared by the
+/// server's own history and the per-shard gate histories.
+fn push_bounded_history(
+    history: &mut Vec<Vec<f32>>,
+    pool: &mut Vec<Vec<f32>>,
+    keep: usize,
+    model: &[f32],
+) {
+    let mut entry = pool.pop().unwrap_or_default();
+    entry.clear();
+    entry.extend_from_slice(model);
+    history.push(entry);
+    while history.len() > keep {
+        pool.push(history.remove(0));
+    }
 }
 
 /// One client local round with the bundled knobs — the single call shape
@@ -219,6 +256,14 @@ pub struct Server {
     /// aggregated by the fused dequantize-accumulate path, never staged as
     /// dense `Vec<f32>`.
     upload_bufs: Vec<QuantBuf>,
+    /// Reusable sparse wire buffers for `compression.mode = topk` (one
+    /// per fleet slot; the mix's self-weight replaces the extra global
+    /// slot of the dense path). Unused in dense mode.
+    sparse_bufs: Vec<SparseDelta>,
+    /// Wire bytes of one model upload under the configured compression
+    /// (dense: `ctx.model_payload_bytes`; topk: the exact sparse frame
+    /// for k of n values). Broadcasts are always dense.
+    upload_payload_bytes: u64,
     /// Reusable FedAvg weight buffer for the selected upload set.
     upload_weights: Vec<f64>,
     /// Reusable broadcast codec buffer + decoded broadcast model.
@@ -245,6 +290,13 @@ impl Server {
         let history = vec![init_params.clone()];
         let n_clients = clients.len();
         let registry = ClientRegistry::new(n_clients, cfg.dropout, root_rng.fork("dropout"));
+        let upload_payload_bytes = match cfg.compression.mode {
+            CompressionMode::Dense => ctx.model_payload_bytes,
+            CompressionMode::TopK => {
+                let n = init_params.len();
+                sparse_payload_bytes(cfg.upload_precision, cfg.compression.k_for(n), n)
+            }
+        };
         Server {
             net_rng: root_rng.fork("netsim"),
             registry,
@@ -257,6 +309,8 @@ impl Server {
             history_pool: Vec::new(),
             agg: Aggregator::new(),
             upload_bufs: vec![QuantBuf::new(); n_clients + 1],
+            sparse_bufs: vec![SparseDelta::new(); n_clients],
+            upload_payload_bytes,
             upload_weights: Vec::with_capacity(n_clients),
             bcast_buf: QuantBuf::new(),
             bcast_model: Vec::new(),
@@ -434,13 +488,16 @@ impl Server {
         let mut agg_time = last_arrival;
         let mut upload_staleness: Vec<usize> = Vec::with_capacity(n_selected);
         if n_selected > 0 {
-            let payload = self.ctx.model_payload_bytes;
+            let payload = self.upload_payload_bytes;
             let precision = self.cfg.upload_precision;
+            let mode = self.cfg.compression.mode;
+            let sparse_k = self.cfg.compression.k_for(self.global.len());
+            let error_feedback = self.cfg.compression.error_feedback;
             self.upload_weights.clear();
             let mut used = 0usize;
-            for (i, client) in self.clients.iter().enumerate() {
+            for i in 0..n {
                 if fleet_selected[i] {
-                    upload_staleness.push(client.staleness);
+                    upload_staleness.push(self.clients[i].staleness);
                     let req = self
                         .ctx
                         .link
@@ -452,22 +509,42 @@ impl Server {
                     agg_time = agg_time.max(last_arrival + req + up);
                     bytes_down += Message::UploadRequest.bytes();
                     bytes_up += payload;
-                    client.encode_upload(precision, &mut self.upload_bufs[used]);
+                    match mode {
+                        CompressionMode::Dense => self.clients[i]
+                            .encode_upload(precision, &mut self.upload_bufs[used]),
+                        CompressionMode::TopK => self.clients[i].encode_sparse_upload(
+                            precision,
+                            sparse_k,
+                            error_feedback,
+                            &mut self.sparse_bufs[used],
+                        ),
+                    }
                     // FedAvg weight n_i, optionally decayed by staleness
                     // (FedAsync-style extension; None = paper's Alg. 1).
                     let decay = self
                         .cfg
                         .staleness_decay
-                        .map_or(1.0, |d| d.powi(client.staleness as i32));
-                    self.upload_weights.push(client.num_samples() as f64 * decay);
+                        .map_or(1.0, |d| d.powi(self.clients[i].staleness as i32));
+                    self.upload_weights.push(self.clients[i].num_samples() as f64 * decay);
                     used += 1;
                 }
             }
-            self.agg.aggregate_payloads(
-                &self.upload_bufs[..used],
-                &self.upload_weights,
-                &mut self.global,
-            );
+            match mode {
+                CompressionMode::Dense => self.agg.aggregate_payloads(
+                    &self.upload_bufs[..used],
+                    &self.upload_weights,
+                    &mut self.global,
+                ),
+                // Masked FedAvg: transmitted coordinates mix exactly like
+                // the dense path; a coordinate some upload omitted keeps
+                // that upload's weight mass on the current global.
+                CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
+                    &self.sparse_bufs[..used],
+                    &self.upload_weights,
+                    0.0,
+                    &mut self.global,
+                ),
+            }
         }
         self.queue.advance_to(agg_time);
 
@@ -562,17 +639,12 @@ impl Server {
         self.global = g;
     }
 
-    /// [`Server::push_history`] for an explicit model (the sharded engine
-    /// pushes the flushed shard's model, which is `self.global` at S=1).
+    /// [`Server::push_history`] for an explicit model (the unsharded
+    /// engines push the global; sharded flushes go to the per-shard
+    /// histories in `EngineState` instead).
     fn push_history_from(&mut self, model: &[f32]) {
-        let mut entry = self.history_pool.pop().unwrap_or_default();
-        entry.clear();
-        entry.extend_from_slice(model);
-        self.history.push(entry);
         let keep = self.policy.history_depth().max(1) + 1;
-        while self.history.len() > keep {
-            self.history_pool.push(self.history.remove(0));
-        }
+        push_bounded_history(&mut self.history, &mut self.history_pool, keep, model);
     }
 
     /// Run all configured rounds.
@@ -645,7 +717,7 @@ impl Server {
         let n = self.clients.len();
         let k = self.cfg.async_engine.buffer_k.clamp(1, n);
         let mixing = self.cfg.async_engine.mixing;
-        let payload = self.ctx.model_payload_bytes;
+        let upload_payload = self.upload_payload_bytes;
         let knobs = RoundKnobs {
             passes: self.cfg.local_passes,
             batches: self.cfg.batches_per_pass,
@@ -677,6 +749,14 @@ impl Server {
         } else {
             Vec::new()
         };
+        // Per-shard gate history (S > 1): each replica starts its history
+        // at the current global, mirroring `Server::new`'s seeding of the
+        // S == 1 history.
+        let shard_history: Vec<Vec<Vec<f32>>> = if s_count > 1 {
+            (0..s_count).map(|_| vec![self.global.clone()]).collect()
+        } else {
+            Vec::new()
+        };
 
         let mut st = EngineState {
             pending: (0..n).map(|_| None).collect(),
@@ -695,6 +775,7 @@ impl Server {
             buffers: (0..s_count).map(|_| Vec::with_capacity(k)).collect(),
             shard_version: vec![0u64; s_count],
             shard_weight,
+            shard_history,
         };
 
         let mut flushes = 0usize;
@@ -778,10 +859,18 @@ impl Server {
                         st.pending[client].take().expect("report without a local round");
                     st.window.bytes_up += Message::ValueReport.bytes();
                     let decision = {
+                        // Sharded runs gate against the reporting
+                        // client's own shard history, so EAFLM's Eq. 3
+                        // threshold measures consecutive movement of the
+                        // same replica.
                         let gctx = AsyncGateContext {
                             n_clients: n,
                             last_values: &st.last_values,
-                            global_history: &self.history,
+                            global_history: if s_count == 1 {
+                                &self.history
+                            } else {
+                                &st.shard_history[st.shard_of[client]]
+                            },
                         };
                         self.policy.gate_report(&rep, &gctx)
                     };
@@ -805,13 +894,17 @@ impl Server {
                             .link
                             .transfer_seconds(&Message::UploadRequest, &mut self.net_rng);
                         let up = self.ctx.link.transfer_seconds(
-                            &Message::ModelUpload { payload_bytes: payload },
+                            &Message::ModelUpload { payload_bytes: upload_payload },
                             &mut self.net_rng,
                         );
                         st.window.bytes_down += Message::UploadRequest.bytes();
-                        st.window.bytes_up += payload;
                         st.in_flight += 1;
-                        self.queue.schedule_at(t + req + up, EngineEvent::Upload { client });
+                        // Uplink bytes ride on the event and count when
+                        // the upload lands (see `EngineEvent::Upload`).
+                        self.queue.schedule_at(
+                            t + req + up,
+                            EngineEvent::Upload { client, bytes: upload_payload },
+                        );
                     } else {
                         st.skip_streak += 1;
                         self.clients[client].mark_stale();
@@ -820,8 +913,9 @@ impl Server {
                         dispatch_speculation(&self.clients, &mut st, pool, client, knobs)?;
                     }
                 }
-                EngineEvent::Upload { client } => {
+                EngineEvent::Upload { client, bytes } => {
                     st.in_flight -= 1;
+                    st.window.bytes_up += bytes;
                     let s = st.shard_of[client];
                     let tau = (st.shard_version[s] - st.synced_version[client]) as usize;
                     st.buffers[s].push((client, tau, t));
@@ -867,6 +961,11 @@ impl Server {
         if s_count > 1 {
             self.reconcile_shards(&mut shard_models, &st.shard_weight);
         }
+        // Recycle the per-shard gate histories so a later run on the same
+        // server reuses their buffers instead of reallocating.
+        for h in st.shard_history.drain(..) {
+            self.history_pool.extend(h);
+        }
         self.drain_pending_evals(&mut st)
     }
 
@@ -907,8 +1006,21 @@ impl Server {
         // Buffered clients are blocked between upload and broadcast, so
         // encoding their (pristine) params now is byte-identical to
         // encoding at send time.
+        let mode = self.cfg.compression.mode;
+        let sparse_k = self.cfg.compression.k_for(model.len());
+        let error_feedback = self.cfg.compression.error_feedback;
         for (j, &(c, _, _)) in st.buffers[shard].iter().enumerate() {
-            self.clients[c].encode_upload(precision, &mut self.upload_bufs[j]);
+            match mode {
+                CompressionMode::Dense => {
+                    self.clients[c].encode_upload(precision, &mut self.upload_bufs[j])
+                }
+                CompressionMode::TopK => self.clients[c].encode_sparse_upload(
+                    precision,
+                    sparse_k,
+                    error_feedback,
+                    &mut self.sparse_bufs[j],
+                ),
+            }
         }
         // FedAvg weights n_i scaled by alpha(tau_i); the buffer's mean
         // alpha is the shard's mixing rate.
@@ -921,25 +1033,51 @@ impl Server {
         }
         let abar = (alpha_sum / kk as f64).min(1.0);
         if abar >= 1.0 {
-            // Pure FedAvg replacement (the barriered rule).
-            self.agg
-                .aggregate_payloads(&self.upload_bufs[..kk], &self.upload_weights, model);
+            // Pure FedAvg replacement (the barriered rule). The sparse
+            // path is the masked equivalent: untransmitted coordinate
+            // mass falls back to the current shard model.
+            match mode {
+                CompressionMode::Dense => self.agg.aggregate_payloads(
+                    &self.upload_bufs[..kk],
+                    &self.upload_weights,
+                    model,
+                ),
+                CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
+                    &self.sparse_bufs[..kk],
+                    &self.upload_weights,
+                    0.0,
+                    model,
+                ),
+            }
         } else {
             // theta <- (1 - abar) * theta + abar * fedavg(buffer): the
-            // current shard model rides along as one extra f32 payload
-            // (slot kk) with weight 1 - abar; the buffered weights are
-            // pre-normalized to sum to abar.
+            // buffered weights are pre-normalized to sum to abar. Dense:
+            // the current shard model rides along as one extra f32
+            // payload (slot kk) with weight 1 - abar; sparse: the same
+            // 1 - abar enters as the scatter's self-weight, which the
+            // merge applies last per coordinate — the identical lane
+            // order, so k_fraction = 1.0 stays bitwise dense.
             let wsum: f64 = self.upload_weights.iter().sum();
             for w in self.upload_weights.iter_mut() {
                 *w = abar * *w / wsum;
             }
-            self.upload_weights.push(1.0 - abar);
-            self.upload_bufs[kk].encode(Precision::F32, model);
-            self.agg.aggregate_payloads(
-                &self.upload_bufs[..kk + 1],
-                &self.upload_weights,
-                model,
-            );
+            match mode {
+                CompressionMode::Dense => {
+                    self.upload_weights.push(1.0 - abar);
+                    self.upload_bufs[kk].encode(Precision::F32, model);
+                    self.agg.aggregate_payloads(
+                        &self.upload_bufs[..kk + 1],
+                        &self.upload_weights,
+                        model,
+                    );
+                }
+                CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
+                    &self.sparse_bufs[..kk],
+                    &self.upload_weights,
+                    1.0 - abar,
+                    model,
+                ),
+            }
         }
 
         // Broadcast the new shard model to the flushed clients (at wire
@@ -970,7 +1108,19 @@ impl Server {
             self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
             dispatch_speculation(&self.clients, st, pool, c, knobs)?;
         }
-        self.push_history_from(&model[..]);
+        if st.shard_history.is_empty() {
+            self.push_history_from(&model[..]);
+        } else {
+            // Sharded gate history: the flushed model extends its own
+            // replica's window (see the `EngineState::shard_history` docs).
+            let keep = self.policy.history_depth().max(1) + 1;
+            push_bounded_history(
+                &mut st.shard_history[shard],
+                &mut self.history_pool,
+                keep,
+                &model[..],
+            );
+        }
 
         let (global_acc, global_loss) = if flush_idx % self.cfg.eval_every != 0 {
             (f64::NAN, f64::NAN)

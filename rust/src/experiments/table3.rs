@@ -3,7 +3,7 @@
 //! the communication-compression rate vs the AFL baseline, for each
 //! algorithm x experiment.
 
-use crate::metrics::{ccr, RunMetrics};
+use crate::metrics::{ccr, ccr_bytes, RunMetrics};
 use crate::util::json::{obj, Value};
 
 /// One Table III row.
@@ -16,30 +16,40 @@ pub struct Row {
     pub comm_times: Option<usize>,
     pub total_uploads: usize,
     pub ccr: f64,
+    /// Uplink bytes to reach the target Acc (total bytes when the target
+    /// was never reached) — separates the gating axis (fewer
+    /// communications) from the sparse-compression axis (cheaper ones).
+    pub bytes_up: u64,
+    /// Eq. 4 over `bytes_up` against the AFL baseline of the same
+    /// experiment.
+    pub ccr_bytes: f64,
     pub best_acc: f64,
 }
 
 /// Build Table III rows from one experiment's three runs. The CCR baseline
-/// is AFL's communication count within the same experiment (Eq. 4).
+/// is AFL's communication count within the same experiment (Eq. 4); the
+/// byte-level CCR baselines on AFL's uplink bytes the same way.
 pub fn rows_for_experiment(runs: &[RunMetrics]) -> Vec<Row> {
-    let baseline = runs
-        .iter()
-        .find(|r| r.algorithm == "afl")
+    let afl = runs.iter().find(|r| r.algorithm == "afl");
+    let baseline = afl
         .and_then(|r| r.comm_times_to_target())
-        .unwrap_or_else(|| {
-            runs.iter()
-                .find(|r| r.algorithm == "afl")
-                .map_or(0, |r| r.total_uploads())
-        });
+        .unwrap_or_else(|| afl.map_or(0, |r| r.total_uploads()));
+    let baseline_bytes = afl
+        .and_then(|r| r.bytes_up_to_target())
+        .unwrap_or_else(|| afl.map_or(0, |r| r.total_bytes_up()));
     runs.iter()
         .map(|m| {
             let mine = m.comm_times_to_target().unwrap_or(m.total_uploads());
+            let mine_bytes = m.bytes_up_to_target().unwrap_or(m.total_bytes_up());
+            let is_afl = m.algorithm == "afl";
             Row {
                 experiment: m.experiment.clone(),
                 algorithm: m.algorithm.clone(),
                 comm_times: m.comm_times_to_target(),
                 total_uploads: m.total_uploads(),
-                ccr: if m.algorithm == "afl" { 0.0 } else { ccr(baseline, mine) },
+                ccr: if is_afl { 0.0 } else { ccr(baseline, mine) },
+                bytes_up: mine_bytes,
+                ccr_bytes: if is_afl { 0.0 } else { ccr_bytes(baseline_bytes, mine_bytes) },
                 best_acc: m.best_accuracy(),
             }
         })
@@ -49,8 +59,8 @@ pub fn rows_for_experiment(runs: &[RunMetrics]) -> Vec<Row> {
 /// Render rows in the paper's Table III layout.
 pub fn render(rows: &[Row]) -> String {
     let mut s = String::from(
-        "experiment  algorithm  comm_times  CCR      best_acc\n\
-         ---------------------------------------------------\n",
+        "experiment  algorithm  comm_times  CCR      bytes_up      CCR_bytes  best_acc\n\
+         -----------------------------------------------------------------------------\n",
     );
     for r in rows {
         let comm = match r.comm_times {
@@ -58,8 +68,8 @@ pub fn render(rows: &[Row]) -> String {
             None => format!(">{}", r.total_uploads),
         };
         s += &format!(
-            "{:<11} {:<10} {:<11} {:<8.4} {:.4}\n",
-            r.experiment, r.algorithm, comm, r.ccr, r.best_acc
+            "{:<11} {:<10} {:<11} {:<8.4} {:<13} {:<10.4} {:.4}\n",
+            r.experiment, r.algorithm, comm, r.ccr, r.bytes_up, r.ccr_bytes, r.best_acc
         );
     }
     s
@@ -115,6 +125,8 @@ pub fn to_json(rows: &[Row]) -> Value {
                     ),
                     ("total_uploads", Value::from(r.total_uploads)),
                     ("ccr", Value::from(r.ccr)),
+                    ("bytes_up", Value::from(r.bytes_up as usize)),
+                    ("ccr_bytes", Value::from(r.ccr_bytes)),
                     ("best_acc", Value::from(r.best_acc)),
                 ])
             })
@@ -166,6 +178,22 @@ mod tests {
         assert_eq!(rows[0].ccr, 0.0);
         assert!((rows[1].ccr - 0.4643).abs() < 1e-4);
         assert!((rows[2].ccr - 0.4881).abs() < 1e-4);
+    }
+
+    #[test]
+    fn byte_ccr_baselines_on_afl_bytes() {
+        // Same upload counts, but the "compressed" run ships half the
+        // bytes per record: count-CCR 0, byte-CCR 0.5.
+        let mut afl = fake_run("a", "afl", 10);
+        afl.records[0].bytes_up = 4000;
+        let mut topk = fake_run("a", "vafl", 10);
+        topk.records[0].bytes_up = 2000;
+        let rows = rows_for_experiment(&[afl, topk]);
+        assert_eq!(rows[0].bytes_up, 4000);
+        assert_eq!(rows[0].ccr_bytes, 0.0);
+        assert_eq!(rows[1].bytes_up, 2000);
+        assert!((rows[1].ccr_bytes - 0.5).abs() < 1e-12);
+        assert_eq!(rows[1].ccr, 0.0, "count CCR must not see byte compression");
     }
 
     #[test]

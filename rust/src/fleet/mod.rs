@@ -11,6 +11,7 @@ use crate::config::ValueFnConfig;
 use crate::data::{Batcher, ClientShard};
 use crate::device::DeviceProfile;
 use crate::model::quant::{Precision, QuantBuf};
+use crate::model::sparse::SparseDelta;
 use crate::model::{sq_distance, ParamVec};
 use crate::runtime::{evaluate_with_params, Executor};
 use crate::util::rng::Rng;
@@ -49,6 +50,20 @@ pub struct Client {
     batcher: Batcher,
     /// Local model theta_i (diverges from global when uploads are skipped).
     pub params: ParamVec,
+    /// The global model this client last synced to — the delta base of
+    /// the sparse top-k upload path (`local − base` drives coordinate
+    /// selection; see `model::sparse`).
+    base: ParamVec,
+    /// Error-feedback residual of the sparse upload path: delta mass that
+    /// lost the top-k race at encode time, folded into the next
+    /// selection. A coordinate's debt clears only when it is transmitted
+    /// — the residual deliberately **survives model downloads**: in these
+    /// engines every upload is immediately followed by a broadcast sync,
+    /// so a reset-on-download residual could never carry to the next
+    /// encode and error feedback would be inert. Zero (and inert) in
+    /// dense mode. Like `staleness`, it never feeds `local_round`, so it
+    /// is excluded from the speculation `epoch`.
+    residual: Vec<f32>,
     /// Gradient of the previous round (nabla^{k-1}); None before round 1.
     prev_grad: Option<Vec<f32>>,
     /// Rounds since this client last synced with the global model.
@@ -86,6 +101,8 @@ impl Client {
             id,
             device,
             shard: Arc::new(shard),
+            base: init_params.clone(),
+            residual: vec![0.0; init_params.len()],
             params: init_params,
             prev_grad: None,
             staleness: 0,
@@ -100,9 +117,15 @@ impl Client {
     }
 
     /// Receive the aggregated global model (end of Algorithm 1 round).
+    /// Resets the sparse-upload delta base to the downloaded model; the
+    /// error-feedback residual persists (see the `residual` field docs —
+    /// the download wipes the local params, including never-transmitted
+    /// progress, and the residual is exactly the memory of that loss).
     pub fn sync(&mut self, global: &[f32]) {
         self.params.clear();
         self.params.extend_from_slice(global);
+        self.base.clear();
+        self.base.extend_from_slice(global);
         self.staleness = 0;
         self.epoch += 1;
     }
@@ -113,11 +136,29 @@ impl Client {
     }
 
     /// Fork a speculative copy for an off-thread local round. The fork
-    /// shares the immutable shard/probe data and snapshots the mutable
-    /// training state; pair it with [`Client::commit_speculation`] once the
-    /// engine reaches the round's commit point in virtual-event order.
+    /// shares the immutable shard/probe data and snapshots only the state
+    /// a local round actually reads: the sparse-upload `base`/`residual`
+    /// pair stays behind (empty on the ghost) — ghosts never encode an
+    /// upload, and copying two model-sized vectors per dispatch would
+    /// double the fork cost for state that is dead weight. Pair with
+    /// [`Client::commit_speculation`] once the engine reaches the round's
+    /// commit point in virtual-event order.
     pub fn speculate(&self) -> Client {
-        self.clone()
+        Client {
+            id: self.id,
+            device: self.device.clone(),
+            shard: Arc::clone(&self.shard),
+            batcher: self.batcher.clone(),
+            params: self.params.clone(),
+            base: Vec::new(),
+            residual: Vec::new(),
+            prev_grad: self.prev_grad.clone(),
+            staleness: self.staleness,
+            jitter_rng: self.jitter_rng.clone(),
+            probe_images: Arc::clone(&self.probe_images),
+            probe_labels: Arc::clone(&self.probe_labels),
+            epoch: self.epoch,
+        }
     }
 
     /// Absorb the training state a speculative fork produced. Only valid
@@ -125,7 +166,9 @@ impl Client {
     /// time (the engine replays the round serially otherwise). Staleness is
     /// *not* taken from the ghost: offline retries may have marked the
     /// origin stale while the speculation was in flight, and that counter
-    /// never feeds the local round.
+    /// never feeds the local round. The sparse-upload `base`/`residual`
+    /// pair likewise stays on the origin — the ghost carries none (see
+    /// [`Client::speculate`]) and a local round never touches it.
     pub fn commit_speculation(&mut self, ghost: Client) {
         debug_assert_eq!(self.id, ghost.id, "speculation committed to the wrong client");
         self.params = ghost.params;
@@ -145,6 +188,29 @@ impl Client {
     /// the fused dequantize-accumulate path (no dense staging vector).
     pub fn encode_upload(&self, precision: Precision, buf: &mut QuantBuf) {
         buf.encode(precision, &self.params);
+    }
+
+    /// Encode the sparse top-k upload: the `k` coordinates of
+    /// `params − base (+ residual)` with the largest magnitude, as
+    /// absolute values at `precision` (see `model::sparse`). With
+    /// `error_feedback` the unsent delta mass accumulates into this
+    /// client's residual (cleared per coordinate when transmitted, kept
+    /// across syncs); without it, selection uses the raw delta and the
+    /// residual stays untouched.
+    pub fn encode_sparse_upload(
+        &mut self,
+        precision: Precision,
+        k: usize,
+        error_feedback: bool,
+        buf: &mut SparseDelta,
+    ) {
+        let residual = error_feedback.then_some(&mut self.residual[..]);
+        buf.encode_topk(precision, &self.params, &self.base, residual, k);
+    }
+
+    /// Current error-feedback residual (tests/diagnostics).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
     }
 
     /// Run one local round (Algorithm 1 lines 19–26): `passes x batches`
@@ -321,6 +387,68 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{}", precision.name());
             }
         }
+    }
+
+    #[test]
+    fn sparse_upload_residual_survives_sync_and_drives_selection() {
+        let (mut c, mut exec) = mk_client(5);
+        c.local_round(&mut exec, 1, 1, 2, 0.5, 1, 1).unwrap();
+        let mut buf = SparseDelta::new();
+        let k = 8;
+        c.encode_sparse_upload(Precision::F32, k, true, &mut buf);
+        assert_eq!(buf.len(), k);
+        assert_eq!(buf.dim(), c.params.len());
+        // Transmitted values are the absolute local params.
+        for (j, &idx) in buf.indices().iter().enumerate() {
+            assert_eq!(buf.value(j).to_bits(), c.params[idx as usize].to_bits());
+        }
+        // Error feedback: some delta mass was left behind (params moved in
+        // more than k coordinates under SGD)...
+        assert!(c.residual().iter().any(|&r| r != 0.0), "no residual after partial upload");
+        let residual_before: Vec<f32> = c.residual().to_vec();
+        let top_owed: Vec<u32> = {
+            let mut order: Vec<u32> = (0..residual_before.len() as u32).collect();
+            order.sort_by(|&a, &b| {
+                residual_before[b as usize]
+                    .abs()
+                    .total_cmp(&residual_before[a as usize].abs())
+                    .then_with(|| a.cmp(&b))
+            });
+            let mut top: Vec<u32> = order[..k].to_vec();
+            top.sort_unstable();
+            top
+        };
+        // ...and it survives the model download (a reset here would make
+        // error feedback inert: every upload is followed by a sync).
+        let g = vec![0.25f32; c.params.len()];
+        c.sync(&g);
+        assert_eq!(c.residual(), &residual_before[..], "sync must keep the residual");
+        // After sync the delta base is the downloaded model, so the raw
+        // delta is zero everywhere and the residual alone decides the
+        // next selection: the most-owed coordinates win, and transmitting
+        // them clears exactly their debt.
+        c.encode_sparse_upload(Precision::F32, k, true, &mut buf);
+        assert_eq!(buf.indices(), &top_owed[..]);
+        for &i in buf.indices() {
+            assert_eq!(c.residual()[i as usize], 0.0, "transmitted coord keeps its debt");
+        }
+        // Without error feedback the same encode ignores the residual and
+        // leaves it untouched.
+        let before: Vec<f32> = c.residual().to_vec();
+        c.encode_sparse_upload(Precision::F32, k, false, &mut buf);
+        assert_eq!(c.residual(), &before[..]);
+        for j in 0..buf.len() {
+            assert_eq!(buf.value(j), 0.25);
+        }
+    }
+
+    #[test]
+    fn sparse_upload_without_error_feedback_keeps_residual_zero() {
+        let (mut c, mut exec) = mk_client(6);
+        c.local_round(&mut exec, 1, 1, 2, 0.5, 1, 1).unwrap();
+        let mut buf = SparseDelta::new();
+        c.encode_sparse_upload(Precision::F32, 4, false, &mut buf);
+        assert!(c.residual().iter().all(|&r| r == 0.0));
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! vafl run [--config FILE] [--algorithm afl|vafl|eaflm] [--preset a|b|c|d]
 //!          [--engine barriered|barrier_free] [--engine-threads N]
 //!          [--shards S] [--reconcile-every N] [--rounds N] [--seed N]
+//!          [--compression dense|topk] [--k-fraction F]
+//!          [--error-feedback true|false]
 //!          [--mock] [--out DIR] [--realtime SCALE]
 //! vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]
 //!     # one preset, all three algorithms, Table III rows + Fig. 4
@@ -114,6 +116,7 @@ fn print_usage() {
          USAGE:\n  vafl run        [--preset a|b|c|d] [--config FILE] [--algorithm afl|vafl|eaflm]\n\
          \x20                 [--engine barriered|barrier_free] [--engine-threads N] [--shards S]\n\
          \x20                 [--reconcile-every N] [--rounds N] [--seed N] [--mock]\n\
+         \x20                 [--compression dense|topk] [--k-fraction F] [--error-feedback true|false]\n\
          \x20                 [--out DIR] [--realtime SCALE] [--quiet]\n\
          \x20 vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]\n\
          \x20 vafl sweep      [--rounds N] [--out DIR] [--mock]\n\
@@ -150,6 +153,20 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
     if let Some(r) = flags.get_usize("reconcile-every")? {
         cfg.engine_opts.reconcile_every = r;
     }
+    if let Some(c) = flags.get("compression") {
+        cfg.compression.mode = vafl::config::CompressionMode::from_name(c)?;
+    }
+    if let Some(f) = flags.get("k-fraction") {
+        cfg.compression.k_fraction =
+            f.parse::<f64>().with_context(|| format!("--k-fraction {f:?}"))?;
+    }
+    if let Some(e) = flags.get("error-feedback") {
+        cfg.compression.error_feedback = match e {
+            "true" | "on" | "1" => true,
+            "false" | "off" | "0" => false,
+            other => bail!("--error-feedback {other:?} (true|false)"),
+        };
+    }
     if let Some(r) = flags.get_usize("rounds")? {
         cfg.rounds = r;
     }
@@ -177,10 +194,11 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     );
     let out = experiments::run(&cfg)?;
     println!(
-        "\nfinal acc = {:.4}  best acc = {:.4}  uploads = {}  vtime = {:.1}s  comm->{:.0}% = {:?}",
+        "\nfinal acc = {:.4}  best acc = {:.4}  uploads = {}  bytes_up = {}  vtime = {:.1}s  comm->{:.0}% = {:?}",
         out.final_accuracy,
         out.best_accuracy,
         out.total_uploads,
+        out.metrics.total_bytes_up(),
         out.total_vtime,
         cfg.target_acc * 100.0,
         out.comm_times_to_target

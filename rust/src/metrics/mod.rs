@@ -22,6 +22,10 @@ pub struct RoundRecord {
     pub uploads: usize,
     /// Cumulative model uploads.
     pub cum_uploads: usize,
+    /// Uplink wire bytes of this round / window. Barrier-free engine:
+    /// model-upload bytes count when the upload *arrives* (rides on the
+    /// `Upload` event), so uploads still in flight when the run ends are
+    /// excluded — see `coordinator::server::EngineEvent::Upload`.
     pub bytes_up: u64,
     pub bytes_down: u64,
     /// Policy threshold (mean-V for VAFL, Eq. 3 RHS for EAFLM).
@@ -148,6 +152,32 @@ impl RunMetrics {
         self.records.iter().map(|r| r.reports).sum()
     }
 
+    /// Total uplink wire bytes (reports + model uploads) across the run
+    /// — the quantity the sparse top-k compression mode shrinks.
+    pub fn total_bytes_up(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_up).sum()
+    }
+
+    /// Total downlink wire bytes (requests + broadcasts) across the run.
+    pub fn total_bytes_down(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_down).sum()
+    }
+
+    /// Cumulative uplink bytes when the target accuracy was first
+    /// reached — the byte-level companion of
+    /// [`RunMetrics::comm_times_to_target`] for Table III–style
+    /// comparisons across compression modes. `None` if never reached.
+    pub fn bytes_up_to_target(&self) -> Option<u64> {
+        let mut cum = 0u64;
+        for r in &self.records {
+            cum += r.bytes_up;
+            if r.global_acc >= self.target_acc {
+                return Some(cum);
+            }
+        }
+        None
+    }
+
     /// Flush counts per aggregator shard: `map[shard] = flushes`. A
     /// single zero entry for unsharded / barriered runs.
     pub fn per_shard_flushes(&self) -> std::collections::BTreeMap<usize, usize> {
@@ -244,6 +274,14 @@ impl RunMetrics {
             ),
             ("best_accuracy", Value::from(self.best_accuracy())),
             ("total_uploads", Value::from(self.total_uploads())),
+            ("total_bytes_up", Value::from(self.total_bytes_up() as usize)),
+            ("total_bytes_down", Value::from(self.total_bytes_down() as usize)),
+            (
+                "bytes_up_to_target",
+                self.bytes_up_to_target()
+                    .map(|b| Value::from(b as usize))
+                    .unwrap_or(Value::Null),
+            ),
             ("total_vtime", Value::from(self.total_vtime())),
             ("engine_events", Value::from(self.engine_events)),
             ("spec_committed", Value::from(spec_committed)),
@@ -305,6 +343,16 @@ pub fn ccr(baseline_comms: usize, compressed_comms: usize) -> f64 {
         return 0.0;
     }
     (baseline_comms as f64 - compressed_comms as f64) / baseline_comms as f64
+}
+
+/// Eq. 4 over wire bytes instead of communication counts — the axis the
+/// sparse top-k upload mode moves (gating cuts *how often* clients
+/// communicate; top-k cuts *how much* each communication carries).
+pub fn ccr_bytes(baseline_bytes: u64, compressed_bytes: u64) -> f64 {
+    if baseline_bytes == 0 {
+        return 0.0;
+    }
+    (baseline_bytes as f64 - compressed_bytes as f64) / baseline_bytes as f64
 }
 
 #[cfg(test)]
@@ -384,6 +432,26 @@ mod tests {
     }
 
     #[test]
+    fn ccr_bytes_matches_eq4_over_bytes() {
+        assert!((ccr_bytes(1000, 500) - 0.5).abs() < 1e-12);
+        assert_eq!(ccr_bytes(0, 5), 0.0);
+        assert_eq!(ccr_bytes(10, 10), 0.0);
+        assert!(ccr_bytes(10, 20) < 0.0, "expansion must report negative CCR");
+    }
+
+    #[test]
+    fn byte_rollups_and_bytes_to_target() {
+        let m = run(); // 3 records x 100 bytes each way; target hit at #2
+        assert_eq!(m.total_bytes_up(), 300);
+        assert_eq!(m.total_bytes_down(), 300);
+        assert_eq!(m.bytes_up_to_target(), Some(200));
+        let mut never = RunMetrics::new("a", "afl", 0.99);
+        never.push(record(1, 0.5, 1, 1));
+        assert_eq!(never.bytes_up_to_target(), None);
+        assert_eq!(never.total_bytes_up(), 100);
+    }
+
+    #[test]
     fn client_curves_transpose() {
         let m = run();
         let curves = m.client_acc_curves();
@@ -423,6 +491,8 @@ mod tests {
         assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 3);
         assert_eq!(v.get("comm_times_to_target").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("spec_committed").unwrap().as_usize(), Some(4));
+        assert_eq!(v.get("total_bytes_up").unwrap().as_usize(), Some(300));
+        assert_eq!(v.get("bytes_up_to_target").unwrap().as_usize(), Some(200));
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! are an opaque `f32[P]` vector plus a named layout for diagnostics.
 
 pub mod quant;
+pub mod sparse;
 pub mod spec;
 pub mod vector;
 
 pub use quant::{Precision, QuantBuf};
+pub use sparse::{sparse_payload_bytes, SparseDelta};
 pub use spec::{LayerSpec, ParamSpec};
 pub use vector::{
     axpy, l2_norm_sq, sq_distance, weighted_average, weighted_average_into,

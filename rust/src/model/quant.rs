@@ -46,15 +46,20 @@ impl Precision {
         }
     }
 
-    /// Payload bytes for `n` parameters (plus the 64-byte frame header;
-    /// int8 carries an extra f32 scale).
+    /// Value-body bytes for `n` parameters, without the frame header
+    /// (int8 carries an extra f32 scale). The sparse wire format
+    /// (`model::sparse`) composes this with its own index block.
+    pub fn body_bytes(&self, n: usize) -> u64 {
+        match self {
+            Precision::F32 => 4 * n as u64,
+            Precision::F16 => 2 * n as u64,
+            Precision::Int8 => n as u64 + 4,
+        }
+    }
+
+    /// Payload bytes for `n` parameters (plus the 64-byte frame header).
     pub fn payload_bytes(&self, n: usize) -> u64 {
-        let body = match self {
-            Precision::F32 => 4 * n,
-            Precision::F16 => 2 * n,
-            Precision::Int8 => n + 4,
-        };
-        (body + 64) as u64
+        self.body_bytes(n) + 64
     }
 
     /// Quantize-dequantize round trip (what the receiver reconstructs).
@@ -195,6 +200,26 @@ impl QuantBuf {
                     *a += weight * v as f64;
                 }
             }
+        }
+    }
+
+    /// Decode the single value at position `i` — the sparse
+    /// scatter-aggregation path reads one transmitted coordinate at a
+    /// time. Reconstruction is bit-identical to [`QuantBuf::decode_into`]
+    /// at the same position.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        debug_assert!(i < self.n, "value index {i} out of payload len {}", self.n);
+        match self.precision {
+            Precision::F32 => {
+                let w = &self.data[4 * i..4 * i + 4];
+                f32::from_le_bytes([w[0], w[1], w[2], w[3]])
+            }
+            Precision::F16 => {
+                let w = &self.data[2 * i..2 * i + 2];
+                f16_to_f32(u16::from_le_bytes([w[0], w[1]]))
+            }
+            Precision::Int8 => (self.data[i] as i8) as f32 * self.scale,
         }
     }
 
@@ -496,6 +521,21 @@ mod tests {
             buf.accumulate_dequant_range(37, w, hi);
             for (a, b) in split.iter().zip(&want) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{} (split)", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn quantbuf_get_matches_decode_into() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let params: Vec<f32> = (0..63).map(|_| rng.gauss() as f32).collect();
+        let mut buf = QuantBuf::new();
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            buf.encode(p, &params);
+            let mut dense = vec![0.0f32; params.len()];
+            buf.decode_into(&mut dense);
+            for (i, &d) in dense.iter().enumerate() {
+                assert_eq!(buf.get(i).to_bits(), d.to_bits(), "{} idx {i}", p.name());
             }
         }
     }

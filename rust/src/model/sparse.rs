@@ -1,0 +1,360 @@
+//! Sparse top-k delta wire format for model uploads.
+//!
+//! The paper's headline is communication compression (Eq. 4); beyond
+//! gating *whether* a client uploads, this module compresses *what* an
+//! upload carries: only the `k` coordinates whose local model moved the
+//! most since the last sync — the top-k by magnitude of
+//! `local − base (+ residual)` — cross the wire.
+//!
+//! Wire layout of a [`SparseDelta`] payload:
+//!
+//! * 64-byte frame header (dimension, count, precision tag — modeled, not
+//!   materialized, exactly like [`QuantBuf`]'s header),
+//! * `4·k` bytes of sorted `u32` coordinate indices — **elided when
+//!   `k == dim`** (a full payload needs no index block; this makes the
+//!   `k_fraction = 1.0` configuration byte- and bit-identical to the
+//!   dense path),
+//! * the value body at the configured [`Precision`] (reusing the
+//!   f32/f16/int8 codecs of [`crate::model::quant`]; int8 carries its
+//!   per-payload scale, computed over the *transmitted* values only).
+//!
+//! The transmitted values are the client's **absolute** parameters at the
+//! selected coordinates, not the deltas: the delta (plus the
+//! error-feedback residual) drives *selection* only. Shipping absolute
+//! values keeps the server stateless per client (no base tracking), makes
+//! uploads idempotent, and — decisive for testing — makes the
+//! `k == dim` payload literally the dense payload, so the sparse path
+//! degenerates to the dense one bit-for-bit (asserted in
+//! `rust/tests/sparse.rs`).
+//!
+//! The untransmitted remainder of the delta is the caller's
+//! **error-feedback residual**: [`SparseDelta::encode_topk`] folds the
+//! residual into the selection key and writes back the unsent mass, so a
+//! coordinate that keeps losing the top-k race accumulates pressure until
+//! it is transmitted — transmitting clears exactly that coordinate's
+//! debt ([`crate::fleet::Client`] owns the per-client residual and keeps
+//! it across model downloads; see its field docs for why resetting there
+//! would make error feedback inert).
+//!
+//! All scratch (selection keys, index permutation, gathered values) lives
+//! inside the buffer and is reused across rounds: steady-state encodes
+//! perform zero heap allocation (`rust/tests/alloc_sparse.rs`).
+
+use crate::model::quant::{Precision, QuantBuf};
+
+/// Exact wire size of a sparse payload of `k` of `dim` values at
+/// `precision`: 64-byte frame header + `4·k` index bytes (elided at
+/// `k == dim`) + the precision's value body.
+pub fn sparse_payload_bytes(precision: Precision, k: usize, dim: usize) -> u64 {
+    let index_bytes = if k == dim { 0 } else { 4 * k as u64 };
+    64 + index_bytes + precision.body_bytes(k)
+}
+
+/// A reusable sparse top-k wire payload: sorted `u32` indices plus the
+/// quantized values at those coordinates (see the module docs for the
+/// exact layout and the selection semantics).
+#[derive(Debug, Clone, Default)]
+pub struct SparseDelta {
+    /// Transmitted coordinate indices, sorted strictly ascending.
+    indices: Vec<u32>,
+    /// Quantized values at `indices`, in index order.
+    values: QuantBuf,
+    /// Full parameter dimension the indices address.
+    dim: usize,
+    /// Scratch: per-coordinate selection key (delta + residual).
+    key_scratch: Vec<f32>,
+    /// Scratch: candidate index permutation for the top-k select.
+    order_scratch: Vec<u32>,
+    /// Scratch: gathered parameter values before quantization.
+    val_scratch: Vec<f32>,
+}
+
+impl SparseDelta {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sorted transmitted coordinate indices.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// Number of transmitted coordinates (k).
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Full parameter dimension this payload addresses.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Wire precision of the value body.
+    pub fn precision(&self) -> Precision {
+        self.values.precision()
+    }
+
+    /// Dequantize the `i`-th transmitted value (position in the sorted
+    /// index order, not a coordinate). Bit-identical to the dense codec's
+    /// reconstruction of the same value.
+    #[inline]
+    pub fn value(&self, i: usize) -> f32 {
+        self.values.get(i)
+    }
+
+    /// Exact wire size of this payload (see [`sparse_payload_bytes`]).
+    pub fn payload_bytes(&self) -> u64 {
+        sparse_payload_bytes(self.values.precision(), self.indices.len(), self.dim)
+    }
+
+    /// Encode the top-`k`-by-magnitude coordinates of
+    /// `params − base (+ residual)` at `precision` into the reusable
+    /// buffers.
+    ///
+    /// Selection is fully deterministic: candidates are ordered by
+    /// `|delta|` descending under `total_cmp` (NaN deltas rank first —
+    /// a diverged coordinate is "maximally changed") with the coordinate
+    /// index as the tie-break, so the selected *set* is unique for any
+    /// input and identical across platforms and worker counts.
+    ///
+    /// When `residual` is `Some`, the error-feedback state is updated in
+    /// place: transmitted coordinates reset to 0, untransmitted
+    /// coordinates accumulate the unsent delta (which already folds the
+    /// previous residual in, since the residual participated in the key).
+    ///
+    /// `k` is clamped to `[1, params.len()]`; at `k == params.len()` the
+    /// index block is elided on the wire and the value body is exactly
+    /// the dense payload (same bytes, same int8 scale).
+    pub fn encode_topk(
+        &mut self,
+        precision: Precision,
+        params: &[f32],
+        base: &[f32],
+        residual: Option<&mut [f32]>,
+        k: usize,
+    ) {
+        let n = params.len();
+        assert_eq!(base.len(), n, "base/params length mismatch");
+        assert!(n > 0, "cannot encode an empty parameter vector");
+        let k = k.clamp(1, n);
+        self.dim = n;
+
+        // Selection key: how far this coordinate has moved since the last
+        // sync, plus any error-feedback debt.
+        self.key_scratch.clear();
+        match &residual {
+            Some(r) => {
+                assert_eq!(r.len(), n, "residual/params length mismatch");
+                self.key_scratch
+                    .extend(params.iter().zip(base).zip(r.iter()).map(|((&p, &b), &e)| p - b + e));
+            }
+            None => self.key_scratch.extend(params.iter().zip(base).map(|(&p, &b)| p - b)),
+        }
+
+        self.order_scratch.clear();
+        self.order_scratch.extend(0..n as u32);
+        if k < n {
+            let keys = &self.key_scratch;
+            let by_magnitude_desc = |&a: &u32, &b: &u32| {
+                keys[b as usize]
+                    .abs()
+                    .total_cmp(&keys[a as usize].abs())
+                    .then_with(|| a.cmp(&b))
+            };
+            let _ = self.order_scratch.select_nth_unstable_by(k - 1, by_magnitude_desc);
+            self.order_scratch[..k].sort_unstable();
+        }
+        self.indices.clear();
+        self.indices.extend_from_slice(&self.order_scratch[..k]);
+        debug_assert!(self.indices.windows(2).all(|w| w[0] < w[1]), "indices not strictly sorted");
+
+        // Gather the absolute values and run them through the dense codec
+        // (at k == n this is byte-identical to encoding `params`).
+        self.val_scratch.clear();
+        self.val_scratch.extend(self.indices.iter().map(|&i| params[i as usize]));
+        self.values.encode(precision, &self.val_scratch);
+
+        // Error feedback: unsent delta mass carries to the next round.
+        if let Some(r) = residual {
+            r.copy_from_slice(&self.key_scratch);
+            for &i in &self.indices {
+                r[i as usize] = 0.0;
+            }
+        }
+    }
+
+    /// Scatter-decode into a dense vector: transmitted coordinates are
+    /// overwritten with their reconstructed values, every other
+    /// coordinate is left untouched. `out.len()` must equal
+    /// [`SparseDelta::dim`].
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim, "scatter buffer length mismatch");
+        for (j, &idx) in self.indices.iter().enumerate() {
+            out[idx as usize] = self.values.get(j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecs(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let params: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let base: Vec<f32> = (0..n).map(|_| rng.gauss() as f32 * 0.1).collect();
+        (params, base)
+    }
+
+    #[test]
+    fn topk_selects_largest_deltas_sorted() {
+        let params = vec![0.0f32, 5.0, -0.1, -7.0, 0.2, 3.0];
+        let base = vec![0.0f32; 6];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 3);
+        // |delta| = [0, 5, .1, 7, .2, 3] -> top-3 are coords 3, 1, 5.
+        assert_eq!(sd.indices(), &[1, 3, 5]);
+        assert_eq!(sd.len(), 3);
+        assert_eq!(sd.dim(), 6);
+        assert_eq!(sd.value(0), 5.0);
+        assert_eq!(sd.value(1), -7.0);
+        assert_eq!(sd.value(2), 3.0);
+    }
+
+    #[test]
+    fn ties_break_by_lowest_index() {
+        let params = vec![1.0f32, -1.0, 1.0, 1.0];
+        let base = vec![0.0f32; 4];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 2);
+        assert_eq!(sd.indices(), &[0, 1]);
+    }
+
+    #[test]
+    fn full_k_matches_dense_payload_exactly() {
+        let (params, base) = vecs(3, 97);
+        let mut sd = SparseDelta::new();
+        let mut dense = QuantBuf::new();
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            sd.encode_topk(p, &params, &base, None, params.len());
+            dense.encode(p, &params);
+            assert_eq!(sd.len(), params.len());
+            assert_eq!(sd.indices().len(), params.len());
+            // Index block elided: payload bytes equal the dense payload.
+            assert_eq!(sd.payload_bytes(), dense.payload_bytes(), "{}", p.name());
+            for i in 0..params.len() {
+                assert_eq!(sd.value(i).to_bits(), dense.get(i).to_bits(), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn payload_bytes_accounting_is_exact() {
+        assert_eq!(sparse_payload_bytes(Precision::F32, 10, 100), 64 + 40 + 40);
+        assert_eq!(sparse_payload_bytes(Precision::F16, 10, 100), 64 + 40 + 20);
+        assert_eq!(sparse_payload_bytes(Precision::Int8, 10, 100), 64 + 40 + 14);
+        // Full payloads elide the index block entirely.
+        assert_eq!(
+            sparse_payload_bytes(Precision::F32, 100, 100),
+            Precision::F32.payload_bytes(100)
+        );
+        // Partial sparse payloads are smaller than dense ones.
+        assert!(
+            sparse_payload_bytes(Precision::F32, 100, 17290) < Precision::F32.payload_bytes(17290)
+        );
+    }
+
+    #[test]
+    fn scatter_into_touches_only_transmitted_coords() {
+        let (params, base) = vecs(4, 40);
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 7);
+        let mut out = vec![f32::MIN; 40];
+        sd.scatter_into(&mut out);
+        let sent: std::collections::HashSet<u32> = sd.indices().iter().copied().collect();
+        for (i, &v) in out.iter().enumerate() {
+            if sent.contains(&(i as u32)) {
+                assert_eq!(v.to_bits(), params[i].to_bits());
+            } else {
+                assert_eq!(v, f32::MIN, "untransmitted coord {i} was written");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_accumulates_unsent_and_resets_sent() {
+        let params = vec![10.0f32, 0.5, 0.4, 0.0];
+        let base = vec![0.0f32; 4];
+        let mut r = vec![0.0f32; 4];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, Some(&mut r), 1);
+        assert_eq!(sd.indices(), &[0]);
+        assert_eq!(r, vec![0.0, 0.5, 0.4, 0.0]);
+        // Second round, same params: the residual doubles the pressure on
+        // the unsent coordinates (the key folds the residual in), and
+        // coordinate 1 still wins the race behind 0.
+        sd.encode_topk(Precision::F32, &params, &base, Some(&mut r), 2);
+        assert_eq!(sd.indices(), &[0, 1]);
+        assert_eq!(r, vec![0.0, 0.0, 0.8, 0.0]);
+    }
+
+    #[test]
+    fn residual_boosts_selection() {
+        // Coordinate 2 has a tiny fresh delta but a large residual debt:
+        // error feedback must put it in the transmitted set.
+        let params = vec![1.0f32, 0.9, 0.1];
+        let base = vec![0.0f32; 3];
+        let mut r = vec![0.0f32, 0.0, 5.0];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, Some(&mut r), 1);
+        assert_eq!(sd.indices(), &[2]);
+        // Without the residual the same inputs pick coordinate 0.
+        sd.encode_topk(Precision::F32, &params, &base, None, 1);
+        assert_eq!(sd.indices(), &[0]);
+    }
+
+    #[test]
+    fn nan_and_inf_deltas_are_selected_first() {
+        let params = vec![0.1f32, f32::NAN, f32::INFINITY, 100.0];
+        let base = vec![0.0f32; 4];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 2);
+        // total_cmp ranks |NaN| above +inf above any finite magnitude.
+        assert_eq!(sd.indices(), &[1, 2]);
+        assert!(sd.value(0).is_nan());
+        assert_eq!(sd.value(1), f32::INFINITY);
+        // int8 follows the documented dense codec semantics (NaN -> 0,
+        // inf saturates).
+        sd.encode_topk(Precision::Int8, &params, &base, None, 2);
+        assert_eq!(sd.value(0), 0.0);
+    }
+
+    #[test]
+    fn k_is_clamped_to_valid_range() {
+        let (params, base) = vecs(5, 9);
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 0);
+        assert_eq!(sd.len(), 1);
+        sd.encode_topk(Precision::F32, &params, &base, None, 1000);
+        assert_eq!(sd.len(), 9);
+    }
+
+    #[test]
+    fn buffer_reuse_across_shapes() {
+        let (p1, b1) = vecs(6, 64);
+        let (p2, b2) = vecs(7, 16);
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::Int8, &p1, &b1, None, 10);
+        assert_eq!((sd.len(), sd.dim()), (10, 64));
+        sd.encode_topk(Precision::F16, &p2, &b2, None, 4);
+        assert_eq!((sd.len(), sd.dim()), (4, 16));
+        assert!(!sd.is_empty());
+        let mut out = vec![0.0f32; 16];
+        sd.scatter_into(&mut out);
+    }
+}

@@ -114,11 +114,21 @@ impl<T: PartialEq> EventQueue<T> {
     }
 
     /// Advance the clock directly (used between rounds).
+    ///
+    /// Panics on non-finite targets (same policy as
+    /// [`EventQueue::schedule_at`]: a NaN has no defined place in the
+    /// order and an infinity would freeze the clock forever) and on
+    /// backwards targets under `total_cmp` — a driver that asks to rewind
+    /// virtual time (e.g. the planned realtime `EngineEvent` replay) is
+    /// broken, and a silent clamp would let it believe it succeeded.
     pub fn advance_to(&mut self, t: VTime) {
-        assert!(!t.is_nan(), "NaN clock advance");
-        if t > self.now {
-            self.now = t;
-        }
+        assert!(t.is_finite(), "non-finite clock advance {t}");
+        assert!(
+            t.total_cmp(&self.now) != Ordering::Less,
+            "clock rewind: advance_to({t}) with now = {}",
+            self.now
+        );
+        self.now = t;
     }
 }
 
@@ -210,12 +220,36 @@ mod tests {
     }
 
     #[test]
-    fn advance_to_moves_clock_forward_only() {
+    fn advance_to_moves_clock_forward() {
         let mut q: EventQueue<()> = EventQueue::new();
         q.advance_to(4.0);
         assert_eq!(q.now(), 4.0);
-        q.advance_to(2.0);
+        // Advancing to the current time is a legal no-op (the round loop
+        // does this when no uploads extend the aggregation time).
+        q.advance_to(4.0);
         assert_eq!(q.now(), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock rewind")]
+    fn advance_to_rejects_backwards_targets() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.advance_to(4.0);
+        q.advance_to(2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite clock advance")]
+    fn advance_to_rejects_nan() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.advance_to(f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite clock advance")]
+    fn advance_to_rejects_infinity() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.advance_to(f64::INFINITY);
     }
 
     #[test]

@@ -1,0 +1,99 @@
+//! Counting-allocator proof that the sparse top-k upload path is
+//! allocation-free at steady state, mirroring `alloc_steady_state.rs` for
+//! the dense pipeline: once the reusable buffers (selection scratch,
+//! index/value buffers, merge cursors) have grown to steady-state size,
+//! the serial encode → fused scatter-aggregate round performs **zero**
+//! heap allocations. Separate test binary because the
+//! `#[global_allocator]` is process-wide; keep it to this single test.
+//!
+//! The parallel (`workers > 1`) scatter is excluded by design: spawning
+//! scoped workers allocates their stacks plus one small cursor vector per
+//! worker. One worker short-circuits to the inline, pooled-cursor path,
+//! which is the configuration pinned here.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use vafl::coordinator::aggregate::Aggregator;
+use vafl::model::quant::Precision;
+use vafl::model::sparse::SparseDelta;
+use vafl::util::rng::Rng;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_sparse_encode_and_scatter_do_not_allocate() {
+    let p = 4096usize;
+    let clients = 7usize;
+    let k = p / 10;
+    let mut rng = Rng::new(43);
+    let models: Vec<Vec<f32>> = (0..clients)
+        .map(|_| (0..p).map(|_| rng.gauss() as f32).collect())
+        .collect();
+    let bases: Vec<Vec<f32>> = (0..clients)
+        .map(|_| (0..p).map(|_| rng.gauss() as f32).collect())
+        .collect();
+    let mut residuals: Vec<Vec<f32>> = vec![vec![0.0; p]; clients];
+    let weights = vec![1000.0f64; clients];
+    let mut out = vec![0.0f32; p];
+    let mut bufs: Vec<SparseDelta> = vec![SparseDelta::new(); clients];
+    let mut agg = Aggregator::new();
+
+    for precision in [Precision::F32, Precision::F16, Precision::Int8] {
+        // Warm-up round: grows every reusable buffer to steady-state size.
+        for ((b, m), (base, r)) in bufs
+            .iter_mut()
+            .zip(&models)
+            .zip(bases.iter().zip(residuals.iter_mut()))
+        {
+            b.encode_topk(precision, m, base, Some(&mut r[..]), k);
+        }
+        agg.aggregate_sparse_payloads_t(&bufs, &weights, 0.25, &mut out, 1);
+
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            for ((b, m), (base, r)) in bufs
+                .iter_mut()
+                .zip(&models)
+                .zip(bases.iter().zip(residuals.iter_mut()))
+            {
+                b.encode_topk(precision, m, base, Some(&mut r[..]), k);
+            }
+            agg.aggregate_sparse_payloads_t(&bufs, &weights, 0.25, &mut out, 1);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after,
+            before,
+            "steady-state sparse rounds allocated {} time(s) at {}",
+            after - before,
+            precision.name()
+        );
+    }
+}

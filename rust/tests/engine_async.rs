@@ -421,6 +421,38 @@ fn sharding_changes_the_stream_but_s1_is_the_unsharded_engine() {
     assert!(!same, "sharding had no observable effect");
 }
 
+#[test]
+fn eaflm_runs_sharded_with_per_shard_gate_history() {
+    // Each shard replica keeps its own gate-history window, so EAFLM's
+    // Eq. 3 threshold measures consecutive movement of the same replica
+    // (previously rejected in validate()). The run must complete, gate
+    // with finite thresholds once history exists, actually skip somebody
+    // (the gate is live), and be deterministic.
+    let mk = || {
+        let mut cfg = threaded_base(2);
+        cfg.algorithm = Algorithm::Eaflm;
+        cfg.rounds = 12;
+        cfg.validate().expect("eaflm + shards must validate");
+        experiments::run(&cfg).unwrap()
+    };
+    let a = mk();
+    assert_eq!(a.metrics.records.len(), 12);
+    let flushes = a.metrics.per_shard_flushes();
+    assert!(flushes.keys().all(|&s| s < 2), "{flushes:?}");
+    assert!(
+        a.metrics.records.iter().any(|r| r.threshold.is_finite() && r.threshold > 0.0),
+        "Eq. 3 threshold never became positive — per-shard history unused?"
+    );
+    assert!(
+        a.total_uploads <= a.metrics.total_reports(),
+        "uploads must stay a subset of reports under the sharded gate"
+    );
+    let b = mk();
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_equal_modulo_speculation(x, y);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Availability under the straggler_wan profile (registry.poll path)
 // ---------------------------------------------------------------------------

@@ -17,7 +17,10 @@
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
-use vafl::config::{Algorithm, AsyncEngineConfig, Backend, EngineMode, ExperimentConfig};
+use vafl::config::{
+    Algorithm, AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, EngineMode,
+    ExperimentConfig,
+};
 use vafl::coordinator::MixingRule;
 use vafl::experiments;
 use vafl::metrics::RoundRecord;
@@ -144,6 +147,25 @@ fn golden_barrier_free_round_stream_is_stable() {
         mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
     };
     run_snapshot("barrier_free", &cfg);
+}
+
+#[test]
+fn golden_barrier_free_topk_round_stream_is_stable() {
+    // Pins the sparse top-k compression numerics (selection, masked
+    // scatter mix, error feedback, byte accounting) at a partial
+    // k_fraction on the barrier-free engine.
+    let mut cfg = base_cfg();
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.25,
+        error_feedback: true,
+    };
+    run_snapshot("barrier_free_topk", &cfg);
 }
 
 #[test]

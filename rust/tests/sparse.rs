@@ -1,0 +1,460 @@
+//! Sparse top-k upload path tests: wire-format round-trips across every
+//! precision (including non-finite inputs and the empty/full-k edges),
+//! fused sparse scatter-aggregation equivalence against the dense path
+//! and against a semantic reference, thread-count invariance, engine-level
+//! dense == topk bitwise identity at `k_fraction = 1.0` (both engines,
+//! serial and threaded, shards 1 and 4), and the error-feedback
+//! convergence guarantee at `k_fraction = 0.1`.
+
+use vafl::config::{
+    Algorithm, AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, EngineMode,
+    ExperimentConfig,
+};
+use vafl::coordinator::aggregate::Aggregator;
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::metrics::{ccr_bytes, RoundRecord};
+use vafl::model::quant::{Precision, QuantBuf};
+use vafl::model::sparse::SparseDelta;
+use vafl::util::rng::Rng;
+
+/// Mini property harness (same shape as `tests/proptests.rs`): run `prop`
+/// over `n` seeded cases; panic with the reproducing seed on failure.
+fn cases(n: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0x5AB5_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-format round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sparse_round_trip_all_precisions() {
+    // For random params/base/k (k = 1 and k = dim always included via the
+    // modulus) the decoded payload must reproduce, bit for bit, the dense
+    // codec's reconstruction of the gathered values, and scatter only the
+    // transmitted coordinates.
+    cases(120, |rng| {
+        let dim = 1 + rng.below(300);
+        let k = 1 + rng.below(dim);
+        let mut params: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32 * 2.0).collect();
+        let base: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        // A third of the cases get non-finite contamination.
+        if rng.below(3) == 0 {
+            params[rng.below(dim)] = f32::NAN;
+            params[rng.below(dim)] = f32::INFINITY;
+            params[rng.below(dim)] = f32::NEG_INFINITY;
+        }
+        let mut sd = SparseDelta::new();
+        for prec in [Precision::F32, Precision::F16, Precision::Int8] {
+            sd.encode_topk(prec, &params, &base, None, k);
+            assert_eq!(sd.len(), k);
+            assert_eq!(sd.dim(), dim);
+            assert!(
+                sd.indices().windows(2).all(|w| w[0] < w[1]),
+                "indices not strictly sorted"
+            );
+            // The value body must match the dense codec over the gathered
+            // values (same bytes, same int8 scale policy).
+            let gathered: Vec<f32> =
+                sd.indices().iter().map(|&i| params[i as usize]).collect();
+            let mut dense = QuantBuf::new();
+            dense.encode(prec, &gathered);
+            for j in 0..k {
+                let got = sd.value(j);
+                let want = dense.get(j);
+                assert!(
+                    got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                    "{} pos {j}: {got} vs {want}",
+                    prec.name()
+                );
+            }
+            // Scatter touches exactly the transmitted coordinates.
+            let sentinel = -12345.5f32;
+            let mut out = vec![sentinel; dim];
+            sd.scatter_into(&mut out);
+            let mut cursor = 0usize;
+            for (i, &v) in out.iter().enumerate() {
+                if cursor < k && sd.indices()[cursor] as usize == i {
+                    cursor += 1;
+                } else {
+                    assert_eq!(v, sentinel, "coord {i} written without being sent");
+                }
+            }
+            // Exact byte accounting: full payloads cost the dense frame,
+            // partial ones add 4 bytes per transmitted index.
+            let body = prec.payload_bytes(k);
+            let want_bytes = if k == dim { body } else { body + 4 * k as u64 };
+            assert_eq!(sd.payload_bytes(), want_bytes, "{}", prec.name());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fused sparse aggregation: dense equivalence, reference, thread invariance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sparse_aggregate_full_k_bitwise_matches_dense() {
+    // At k == dim the sparse scatter must reproduce the dense fused path
+    // bit for bit — including the mixed branch, where the dense path
+    // folds the current model in as a trailing f32 payload slot and the
+    // sparse path uses the explicit self-weight.
+    cases(80, |rng| {
+        let dim = 1 + rng.below(200);
+        let kc = 1 + rng.below(6);
+        let models: Vec<Vec<f32>> = (0..kc)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32 * 2.0).collect())
+            .collect();
+        let base: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let global: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let weights: Vec<f64> = (0..kc).map(|_| 0.25 + rng.f64() * 4.0).collect();
+        let mut agg = Aggregator::new();
+        for prec in [Precision::F32, Precision::F16, Precision::Int8] {
+            let mut dense: Vec<QuantBuf> = vec![QuantBuf::new(); kc + 1];
+            let mut sparse: Vec<SparseDelta> = vec![SparseDelta::new(); kc];
+            for i in 0..kc {
+                dense[i].encode(prec, &models[i]);
+                sparse[i].encode_topk(prec, &models[i], &base, None, dim);
+            }
+            // Pure FedAvg (self weight 0).
+            let mut want = global.clone();
+            agg.aggregate_payloads(&dense[..kc], &weights, &mut want);
+            let mut got = global.clone();
+            agg.aggregate_sparse_payloads(&sparse, &weights, 0.0, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} pure", prec.name());
+            }
+            // Mixed: dense folds `global` as slot kc with weight s.
+            let s = 0.05 + rng.f64() * 0.9;
+            let mut wmix = weights.clone();
+            wmix.push(s);
+            dense[kc].encode(Precision::F32, &global);
+            let mut want = global.clone();
+            agg.aggregate_payloads(&dense[..kc + 1], &wmix, &mut want);
+            let mut got = global.clone();
+            agg.aggregate_sparse_payloads(&sparse, &weights, s, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} mixed s={s}", prec.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_aggregate_thread_count_invariant() {
+    // Partial-k scatter: identical bits for every worker count 1..=8.
+    cases(60, |rng| {
+        let dim = 1 + rng.below(400);
+        let kc = 1 + rng.below(6);
+        let k = 1 + rng.below(dim);
+        let base: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let mut sparse: Vec<SparseDelta> = vec![SparseDelta::new(); kc];
+        for sd in sparse.iter_mut() {
+            let m: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32 * 2.0).collect();
+            sd.encode_topk(Precision::Int8, &m, &base, None, k);
+        }
+        let weights: Vec<f64> = (0..kc).map(|_| 0.5 + rng.f64() * 3.0).collect();
+        let prior: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let s = rng.f64() * 0.5;
+        let mut agg = Aggregator::new();
+        let mut want = prior.clone();
+        agg.aggregate_sparse_payloads_t(&sparse, &weights, s, &mut want, 1);
+        for threads in 2..=8 {
+            let mut got = prior.clone();
+            agg.aggregate_sparse_payloads_t(&sparse, &weights, s, &mut got, threads);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads} dim {dim} k {k}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_aggregate_matches_semantic_reference() {
+    // Partial k against a straightforward per-coordinate reference:
+    // out[j] = (sum_{i sent j} w_i v_i + (self + sum_{i missed j} w_i) * prior[j]) / total
+    // for transmitted j, untouched otherwise.
+    cases(60, |rng| {
+        let dim = 1 + rng.below(120);
+        let kc = 1 + rng.below(5);
+        let k = 1 + rng.below(dim);
+        let base = vec![0.0f32; dim];
+        let mut sparse: Vec<SparseDelta> = vec![SparseDelta::new(); kc];
+        let mut models: Vec<Vec<f32>> = Vec::new();
+        for sd in sparse.iter_mut() {
+            let m: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+            sd.encode_topk(Precision::F32, &m, &base, None, k);
+            models.push(m);
+        }
+        let weights: Vec<f64> = (0..kc).map(|_| 0.5 + rng.f64() * 3.0).collect();
+        let s = rng.f64();
+        let prior: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        let total: f64 = weights.iter().sum::<f64>() + s;
+
+        let mut want = prior.clone();
+        for j in 0..dim {
+            let mut acc = 0.0f64;
+            let mut miss = s;
+            let mut touched = false;
+            for (i, sd) in sparse.iter().enumerate() {
+                if sd.indices().binary_search(&(j as u32)).is_ok() {
+                    acc += weights[i] * models[i][j] as f64;
+                    touched = true;
+                } else {
+                    miss += weights[i];
+                }
+            }
+            if touched {
+                want[j] = ((acc + miss * prior[j] as f64) / total) as f32;
+            }
+        }
+        let mut got = prior.clone();
+        let mut agg = Aggregator::new();
+        agg.aggregate_sparse_payloads(&sparse, &weights, s, &mut got);
+        for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "coord {j}: {a} vs {b} (dim {dim} k {k})"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level equivalence: topk at k_fraction = 1.0 IS the dense engine
+// ---------------------------------------------------------------------------
+
+fn quick(which: char, algorithm: Algorithm, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = algorithm;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 120;
+    cfg.test_samples = 96;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+/// Full bitwise record equality — *everything*, including virtual time
+/// and byte accounting (the sparse full-k wire format elides its index
+/// block precisely so these match the dense run).
+fn assert_records_identical(x: &RoundRecord, y: &RoundRecord) {
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.shard, y.shard, "round {}", x.round);
+    assert_eq!(x.vtime.to_bits(), y.vtime.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.threshold.to_bits(), y.threshold.to_bits(), "round {}", x.round);
+    assert_eq!(x.idle_seconds.to_bits(), y.idle_seconds.to_bits(), "round {}", x.round);
+    assert_eq!(x.uploads, y.uploads);
+    assert_eq!(x.cum_uploads, y.cum_uploads);
+    assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+    assert_eq!(x.reports, y.reports);
+    assert_eq!(x.in_flight, y.in_flight);
+    assert_eq!(x.selected, y.selected);
+    assert_eq!(x.upload_staleness, y.upload_staleness);
+    let vb = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    assert_eq!(vb(&x.values), vb(&y.values), "round {}", x.round);
+    assert_eq!(vb(&x.client_accs), vb(&y.client_accs), "round {}", x.round);
+}
+
+fn run_pair(base: &ExperimentConfig) {
+    let dense = experiments::run(base).unwrap();
+    let mut scfg = base.clone();
+    scfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 1.0,
+        error_feedback: true,
+    };
+    let sparse = experiments::run(&scfg).unwrap();
+    assert_eq!(dense.metrics.records.len(), sparse.metrics.records.len());
+    for (x, y) in dense.metrics.records.iter().zip(&sparse.metrics.records) {
+        assert_records_identical(x, y);
+    }
+}
+
+#[test]
+fn topk_full_k_is_bitwise_dense_barriered() {
+    let mut cfg = quick('b', Algorithm::Vafl, 6);
+    cfg.engine = EngineMode::Barriered;
+    run_pair(&cfg);
+    // Threaded barriered path (one thread per client on a shared
+    // executor service).
+    cfg.engine_opts.threaded = true;
+    cfg.engine_opts.workers = 3;
+    run_pair(&cfg);
+}
+
+#[test]
+fn topk_full_k_is_bitwise_dense_barrier_free() {
+    for shards in [1usize, 4] {
+        for threaded in [false, true] {
+            let mut cfg = quick('b', Algorithm::Vafl, 8);
+            cfg.engine = EngineMode::BarrierFree;
+            cfg.async_engine = AsyncEngineConfig {
+                buffer_k: 2,
+                // alpha < 1 exercises the mixed (self-weight) branch.
+                mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+            };
+            cfg.engine_opts.shards = shards;
+            cfg.engine_opts.reconcile_every = 3;
+            cfg.engine_opts.threaded = threaded;
+            cfg.engine_opts.workers = 4;
+            run_pair(&cfg);
+        }
+    }
+}
+
+#[test]
+fn topk_full_k_is_bitwise_dense_across_precisions() {
+    // The elided index block + absolute-value payload must keep the
+    // identity for the lossy codecs too (the int8 scale is computed over
+    // the same full value set).
+    for prec in [Precision::F16, Precision::Int8] {
+        let mut cfg = quick('a', Algorithm::Vafl, 5);
+        cfg.engine = EngineMode::Barriered;
+        cfg.upload_precision = prec;
+        run_pair(&cfg);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partial k: compression shows up in bytes, learning survives
+// ---------------------------------------------------------------------------
+
+#[test]
+fn topk_partial_k_cuts_uplink_bytes() {
+    let mut dense_cfg = quick('b', Algorithm::Afl, 6);
+    dense_cfg.engine = EngineMode::BarrierFree;
+    dense_cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    let dense = experiments::run(&dense_cfg).unwrap();
+    let mut scfg = dense_cfg.clone();
+    scfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.1,
+        error_feedback: true,
+    };
+    let sparse = experiments::run(&scfg).unwrap();
+    // Same upload schedule (AFL uploads on every report), far fewer bytes.
+    assert_eq!(dense.total_uploads, sparse.total_uploads);
+    let (db, sb) = (dense.metrics.total_bytes_up(), sparse.metrics.total_bytes_up());
+    assert!(sb < db, "sparse {sb} >= dense {db} uplink bytes");
+    let c = ccr_bytes(db, sb);
+    assert!(c > 0.5, "byte CCR {c} too low for k_fraction = 0.1");
+    // The event-driven engine reports per-record byte telemetry.
+    assert!(sparse.metrics.records.iter().all(|r| r.bytes_up > 0));
+}
+
+#[test]
+fn topk_partial_k_with_error_feedback_still_converges() {
+    // k_fraction = 0.1 + error feedback must reach the dense run's
+    // (near-best) accuracy within 2x the rounds — the acceptance bar of
+    // the compression extension.
+    let mut dense_cfg = quick('a', Algorithm::Afl, 24);
+    dense_cfg.engine = EngineMode::Barriered;
+    let dense = experiments::run(&dense_cfg).unwrap();
+    // Self-calibrating target: 90% of the dense run's own best accuracy
+    // (a fixed constant would silently pin this test to the mock model's
+    // current loss landscape).
+    let target = dense.best_accuracy * 0.9;
+    let dense_rounds = dense
+        .metrics
+        .records
+        .iter()
+        .find(|r| r.global_acc >= target)
+        .map(|r| r.round)
+        .expect("dense run never reached 90% of its own best accuracy");
+
+    let mut scfg = dense_cfg.clone();
+    scfg.rounds = 48;
+    scfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.1,
+        error_feedback: true,
+    };
+    let sparse = experiments::run(&scfg).unwrap();
+    let sparse_rounds = sparse
+        .metrics
+        .records
+        .iter()
+        .find(|r| r.global_acc >= target)
+        .map(|r| r.round);
+    // 2x the dense rounds, with a small floor so a dense run that hits
+    // the self-calibrated target in its very first rounds still grants a
+    // meaningful budget.
+    let budget = (2 * dense_rounds).max(6);
+    match sparse_rounds {
+        Some(r) => assert!(
+            r <= budget,
+            "sparse took {r} rounds to {target:.3}, dense took {dense_rounds} (budget {budget})"
+        ),
+        None => panic!(
+            "sparse run never reached {target:.3} (dense did in {dense_rounds} rounds; \
+             sparse best {:.3})",
+            sparse.best_accuracy
+        ),
+    }
+}
+
+#[test]
+fn error_feedback_actually_changes_the_run() {
+    // EF must be live, not decorative: with a persistent residual the
+    // selection pressure (and therefore the aggregated global) diverges
+    // from the EF-off run within a few rounds.
+    let mk = |error_feedback: bool| {
+        let mut cfg = quick('a', Algorithm::Afl, 10);
+        cfg.engine = EngineMode::Barriered;
+        cfg.compression = CompressionConfig {
+            mode: CompressionMode::TopK,
+            k_fraction: 0.1,
+            error_feedback,
+        };
+        experiments::run(&cfg).unwrap()
+    };
+    let on = mk(true);
+    let off = mk(false);
+    let same = on
+        .metrics
+        .records
+        .iter()
+        .zip(&off.metrics.records)
+        .all(|(x, y)| x.global_acc.to_bits() == y.global_acc.to_bits());
+    assert!(!same, "error_feedback = true produced a bit-identical run to false");
+}
+
+#[test]
+fn topk_runs_deterministically_on_the_event_engine() {
+    let mk = || {
+        let mut cfg = quick('b', Algorithm::Vafl, 8);
+        cfg.engine = EngineMode::BarrierFree;
+        cfg.async_engine =
+            AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::default() };
+        cfg.compression = CompressionConfig {
+            mode: CompressionMode::TopK,
+            k_fraction: 0.25,
+            error_feedback: true,
+        };
+        experiments::run(&cfg).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_identical(x, y);
+    }
+}

@@ -41,11 +41,12 @@ if [[ "${1:-}" != "--no-tests" ]]; then
     fi
 
     # The threaded engine must commit a bitwise-identical record stream to
-    # the serial engine, and the golden snapshots must hold, at both ends
-    # of the parallel-kernel worker range.
+    # the serial engine, the sparse top-k path must stay bitwise dense at
+    # k_fraction = 1.0, and the golden snapshots (including the topk one)
+    # must hold, at both ends of the parallel-kernel worker range.
     for t in 1 4; do
-        echo "== VAFL_THREADS=$t engine equivalence + golden =="
-        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test golden_run; then
+        echo "== VAFL_THREADS=$t engine equivalence + sparse + golden =="
+        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test golden_run; then
             dump_golden_drift
             exit 1
         fi
