@@ -1,0 +1,78 @@
+//! Adaptive control plane demo: the same straggler-heavy barrier-free
+//! run with the knobs fixed vs. closed-loop, plus the live decision log.
+//!
+//!     cargo run --release --example adaptive
+//!
+//! Requires `make artifacts` first (or set VAFL_MOCK=1 to use the
+//! pure-Rust mock model). The adaptive run starts from the *same* knobs
+//! as the fixed one (buffer of 2, alpha 0.9, top-k budget 0.25) and lets
+//! the telemetry-driven controllers retune them online: the staleness
+//! controller moves `buffer_k`/`alpha(tau)` toward its staleness target,
+//! and the compression controller moves `k_fraction` with the observed
+//! error-feedback residual pressure.
+
+use vafl::config::{
+    AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, ControlConfig, EngineMode,
+};
+use vafl::coordinator::MixingRule;
+use vafl::experiments::{self, straggler};
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let mut cfg = straggler::straggler_config(&experiments::preset('b')?);
+    cfg.rounds = 40;
+    cfg.target_acc = 0.5;
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    cfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.25,
+        error_feedback: true,
+    };
+    if std::env::var("VAFL_MOCK").is_ok() {
+        cfg.backend = Backend::Mock;
+    }
+
+    let fixed = experiments::run(&cfg)?;
+
+    let mut acfg = cfg.clone();
+    acfg.control = ControlConfig { enabled: true, interval: 2, window: 8, ..Default::default() };
+    let adaptive = experiments::run(&acfg)?;
+
+    println!("\ndecision log ({} decisions):", adaptive.metrics.control_records.len());
+    for d in &adaptive.metrics.control_records {
+        match d.client {
+            Some(c) => println!(
+                "  flush {:>3} [vt {:>7.1}s] {:<11} migrate c{c}: shard {:.0} -> {:.0}  (skew {:.2})",
+                d.round, d.vtime, d.controller, d.old, d.new, d.signal
+            ),
+            None => println!(
+                "  flush {:>3} [vt {:>7.1}s] {:<11} {:<10} {:.4} -> {:.4}  (signal {:.4})",
+                d.round, d.vtime, d.controller, d.knob, d.old, d.new, d.signal
+            ),
+        }
+    }
+
+    let line = |label: &str, out: &vafl::Outcome| {
+        println!(
+            "  {label:<10} best_acc={:.4}  uploads={:>4}  bytes_up={:>9.1}kB  bytes->{:.0}%={}  vtime->{:.0}%={}",
+            out.best_accuracy,
+            out.total_uploads,
+            out.metrics.total_bytes_up() as f64 / 1e3,
+            cfg.target_acc * 100.0,
+            out.metrics
+                .bytes_up_to_target()
+                .map_or_else(|| "never".into(), |b| format!("{:.1}kB", b as f64 / 1e3)),
+            cfg.target_acc * 100.0,
+            out.metrics
+                .vtime_to_target()
+                .map_or_else(|| "never".into(), |v| format!("{v:.1}s")),
+        );
+    };
+    println!("\nfixed knobs vs adaptive control (same seed, fleet, link):");
+    line("fixed", &fixed);
+    line("adaptive", &adaptive);
+    Ok(())
+}

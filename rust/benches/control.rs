@@ -1,0 +1,275 @@
+//! Bench: static vs. adaptive control on the straggler_wan profile.
+//!
+//!     cargo bench --bench control [-- --json]
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 60), VAFL_BENCH_MOCK=1.
+//!
+//! Two sweeps, both on experiment b's 7-client fleet under the
+//! straggler-heavy WAN with the barrier-free engine:
+//!
+//! 1. **Compression**: every fixed `k_fraction` in the grid vs. the
+//!    adaptive compression controller (starting mid-grid). Reported per
+//!    row: rounds-to-target, bytes-to-target, total uplink bytes, byte
+//!    CCR vs. the dense baseline (Eq. 4 over bytes), best accuracy, and
+//!    the decision count. The acceptance bar: adaptive bytes-to-target
+//!    no worse than the best *fixed* fraction in the sweep.
+//! 2. **Staleness**: fixed `buffer_k` grid vs. the adaptive staleness
+//!    controller retuning `buffer_k`/`alpha(tau)` online.
+//!
+//! `--json` (or `VAFL_BENCH_JSON=1`) writes every row to
+//! `BENCH_control.json`, the same trajectory convention as
+//! `BENCH_async_engine.json`.
+
+mod common;
+
+use vafl::config::{
+    AsyncEngineConfig, CompressionConfig, CompressionMode, ControlConfig, EngineMode,
+    ExperimentConfig,
+};
+use vafl::coordinator::MixingRule;
+use vafl::experiments::{self, straggler};
+use vafl::metrics::{ccr_bytes, RunMetrics};
+use vafl::util::json::{obj, Value};
+
+#[derive(Default)]
+struct Recorder {
+    rows: Vec<Value>,
+}
+
+impl Recorder {
+    fn push(&mut self, fields: Vec<(&'static str, Value)>) {
+        self.rows.push(obj(fields));
+    }
+
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let doc = obj(vec![
+            ("bench", Value::Str("control".into())),
+            ("rows", Value::Arr(self.rows.clone())),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())
+    }
+}
+
+fn opt_usize(v: Option<usize>) -> Value {
+    v.map(Value::from).unwrap_or(Value::Null)
+}
+
+fn opt_u64(v: Option<u64>) -> Value {
+    v.map(|b| Value::from(b as usize)).unwrap_or(Value::Null)
+}
+
+fn fmt_opt_usize(v: Option<usize>) -> String {
+    v.map_or_else(|| "never".into(), |x| x.to_string())
+}
+
+fn fmt_opt_u64(v: Option<u64>) -> String {
+    v.map_or_else(|| "never".into(), |x| format!("{:.1}kB", x as f64 / 1e3))
+}
+
+fn base_cfg() -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = straggler::straggler_config(&experiments::preset('b')?);
+    common::apply_env(&mut cfg, 60);
+    cfg.target_acc = cfg.target_acc.min(0.5);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    Ok(cfg)
+}
+
+fn summarize(m: &RunMetrics) -> (Option<usize>, Option<u64>, u64, f64) {
+    (m.rounds_to_target(), m.bytes_up_to_target(), m.total_bytes_up(), m.best_accuracy())
+}
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let mut rec = Recorder::default();
+    let want_json =
+        std::env::args().any(|a| a == "--json") || std::env::var("VAFL_BENCH_JSON").is_ok();
+
+    // Dense baseline: the byte-CCR denominator for every topk row.
+    common::section("Dense baseline (straggler_wan, barrier-free, buffer 2)");
+    let dense = experiments::run(&base_cfg()?)?;
+    let dense_bytes = dense.metrics.total_bytes_up();
+    println!(
+        "dense: rounds_to_tgt={}  bytes_to_tgt={}  total_up={:.1}kB  best_acc={:.4}",
+        fmt_opt_usize(dense.metrics.rounds_to_target()),
+        fmt_opt_u64(dense.metrics.bytes_up_to_target()),
+        dense_bytes as f64 / 1e3,
+        dense.best_accuracy,
+    );
+    rec.push(vec![
+        ("section", Value::Str("compression_sweep".into())),
+        ("name", Value::Str("dense".into())),
+        ("rounds_to_target", opt_usize(dense.metrics.rounds_to_target())),
+        ("bytes_up_to_target", opt_u64(dense.metrics.bytes_up_to_target())),
+        ("total_bytes_up", Value::from(dense_bytes as usize)),
+        ("best_acc", Value::from(dense.best_accuracy)),
+    ]);
+
+    common::section("Static k_fraction sweep vs adaptive compression controller");
+    println!(
+        "{:<26} {:>14} {:>14} {:>12} {:>10} {:>10} {:>10}",
+        "configuration", "rounds-to-tgt", "bytes-to-tgt", "total_up", "ccr_bytes", "best_acc", "decisions"
+    );
+    let mut best_fixed_bytes: Option<u64> = None;
+    for kf in [0.05f64, 0.1, 0.25, 0.5, 1.0] {
+        let mut c = base_cfg()?;
+        c.compression =
+            CompressionConfig { mode: CompressionMode::TopK, k_fraction: kf, error_feedback: true };
+        let out = experiments::run(&c)?;
+        let (rounds, bytes_tgt, total_up, best) = summarize(&out.metrics);
+        if let Some(b) = bytes_tgt {
+            best_fixed_bytes = Some(best_fixed_bytes.map_or(b, |x: u64| x.min(b)));
+        }
+        println!(
+            "{:<26} {:>14} {:>14} {:>10.1}kB {:>10.4} {:>10.4} {:>10}",
+            format!("fixed kf={kf}"),
+            fmt_opt_usize(rounds),
+            fmt_opt_u64(bytes_tgt),
+            total_up as f64 / 1e3,
+            ccr_bytes(dense_bytes, total_up),
+            best,
+            0,
+        );
+        rec.push(vec![
+            ("section", Value::Str("compression_sweep".into())),
+            ("name", Value::Str(format!("fixed_kf_{kf}"))),
+            ("k_fraction", Value::from(kf)),
+            ("rounds_to_target", opt_usize(rounds)),
+            ("bytes_up_to_target", opt_u64(bytes_tgt)),
+            ("total_bytes_up", Value::from(total_up as usize)),
+            ("ccr_bytes_vs_dense", Value::from(ccr_bytes(dense_bytes, total_up))),
+            ("best_acc", Value::from(best)),
+            ("decisions", Value::from(0usize)),
+        ]);
+    }
+    // Adaptive: compression controller only, starting mid-grid.
+    let mut a = base_cfg()?;
+    a.compression =
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.25, error_feedback: true };
+    a.control = ControlConfig {
+        enabled: true,
+        staleness: false,
+        rebalance: false,
+        interval: 2,
+        window: 8,
+        k_fraction_min: 0.05,
+        k_fraction_max: 1.0,
+        ..Default::default()
+    };
+    let out = experiments::run(&a)?;
+    let (rounds, adaptive_bytes_tgt, total_up, best) = summarize(&out.metrics);
+    let decisions = out.metrics.control_records.len();
+    println!(
+        "{:<26} {:>14} {:>14} {:>10.1}kB {:>10.4} {:>10.4} {:>10}",
+        "adaptive (start kf=0.25)",
+        fmt_opt_usize(rounds),
+        fmt_opt_u64(adaptive_bytes_tgt),
+        total_up as f64 / 1e3,
+        ccr_bytes(dense_bytes, total_up),
+        best,
+        decisions,
+    );
+    rec.push(vec![
+        ("section", Value::Str("compression_sweep".into())),
+        ("name", Value::Str("adaptive_compression".into())),
+        ("k_fraction", Value::from(0.25)),
+        ("rounds_to_target", opt_usize(rounds)),
+        ("bytes_up_to_target", opt_u64(adaptive_bytes_tgt)),
+        ("total_bytes_up", Value::from(total_up as usize)),
+        ("ccr_bytes_vs_dense", Value::from(ccr_bytes(dense_bytes, total_up))),
+        ("best_acc", Value::from(best)),
+        ("decisions", Value::from(decisions)),
+    ]);
+    match (adaptive_bytes_tgt, best_fixed_bytes) {
+        (Some(a), Some(f)) if a <= f => println!(
+            "=> adaptive bytes-to-target {:.1}kB <= best fixed {:.1}kB",
+            a as f64 / 1e3,
+            f as f64 / 1e3
+        ),
+        (Some(a), Some(f)) => println!(
+            "=> adaptive bytes-to-target {:.1}kB vs best fixed {:.1}kB ({:+.1}%)",
+            a as f64 / 1e3,
+            f as f64 / 1e3,
+            (a as f64 / f as f64 - 1.0) * 100.0
+        ),
+        _ => println!("=> a configuration never reached the target; raise VAFL_BENCH_ROUNDS"),
+    }
+
+    common::section("Static buffer_k sweep vs adaptive staleness controller");
+    println!(
+        "{:<26} {:>14} {:>14} {:>10} {:>10}",
+        "configuration", "rounds-to-tgt", "vtime-to-tgt", "best_acc", "decisions"
+    );
+    for k in [1usize, 2, 4] {
+        let mut c = base_cfg()?;
+        c.async_engine.buffer_k = k;
+        let out = experiments::run(&c)?;
+        println!(
+            "{:<26} {:>14} {:>14} {:>10.4} {:>10}",
+            format!("fixed buffer_k={k}"),
+            fmt_opt_usize(out.metrics.rounds_to_target()),
+            out.metrics
+                .vtime_to_target()
+                .map_or_else(|| "never".to_string(), |v| format!("{v:.1}s")),
+            out.best_accuracy,
+            0,
+        );
+        rec.push(vec![
+            ("section", Value::Str("staleness_sweep".into())),
+            ("name", Value::Str(format!("fixed_buffer_{k}"))),
+            ("buffer_k", Value::from(k)),
+            ("rounds_to_target", opt_usize(out.metrics.rounds_to_target())),
+            (
+                "vtime_to_target_s",
+                out.metrics.vtime_to_target().map(Value::from).unwrap_or(Value::Null),
+            ),
+            ("best_acc", Value::from(out.best_accuracy)),
+            ("decisions", Value::from(0usize)),
+        ]);
+    }
+    let mut s = base_cfg()?;
+    s.control = ControlConfig {
+        enabled: true,
+        compression: false,
+        rebalance: false,
+        interval: 2,
+        window: 8,
+        staleness_target: 1.0,
+        staleness_deadband: 0.5,
+        buffer_k_min: 1,
+        buffer_k_max: 4,
+        ..Default::default()
+    };
+    let out = experiments::run(&s)?;
+    let decisions = out.metrics.control_records.len();
+    println!(
+        "{:<26} {:>14} {:>14} {:>10.4} {:>10}",
+        "adaptive (start k=2)",
+        fmt_opt_usize(out.metrics.rounds_to_target()),
+        out.metrics
+            .vtime_to_target()
+            .map_or_else(|| "never".to_string(), |v| format!("{v:.1}s")),
+        out.best_accuracy,
+        decisions,
+    );
+    rec.push(vec![
+        ("section", Value::Str("staleness_sweep".into())),
+        ("name", Value::Str("adaptive_staleness".into())),
+        ("buffer_k", Value::from(2usize)),
+        ("rounds_to_target", opt_usize(out.metrics.rounds_to_target())),
+        (
+            "vtime_to_target_s",
+            out.metrics.vtime_to_target().map(Value::from).unwrap_or(Value::Null),
+        ),
+        ("best_acc", Value::from(out.best_accuracy)),
+        ("decisions", Value::from(decisions)),
+    ]);
+
+    if want_json {
+        rec.write_json("BENCH_control.json")?;
+        println!("wrote BENCH_control.json ({} rows)", rec.rows.len());
+    }
+    Ok(())
+}

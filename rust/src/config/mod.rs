@@ -184,6 +184,137 @@ impl CompressionConfig {
     }
 }
 
+/// Adaptive control plane knobs — TOML section `[control]`, CLI
+/// `--control` / `--control-interval` / `--control-window` (see the
+/// `control` module). With `enabled = false` (the default) the plane is
+/// fully inert and both engines are bitwise identical to a build without
+/// it; with it enabled, pure deterministic controllers retune `buffer_k`
+/// / `alpha(tau)` (barrier-free engine), `compression.k_fraction` (top-k
+/// mode), and the client-to-shard assignment (sharded runs, reconcile
+/// boundaries only) from rolling run telemetry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControlConfig {
+    /// Master switch for the whole plane.
+    pub enabled: bool,
+    /// Per-controller enables (effective only with `enabled = true`).
+    pub staleness: bool,
+    pub compression: bool,
+    pub rebalance: bool,
+    /// Flushes/rounds between knob-controller evaluations.
+    pub interval: usize,
+    /// Telemetry window length (samples); also the rebalancer's
+    /// post-migration cooldown, in flushes.
+    pub window: usize,
+    /// Staleness controller: drive the window's mean upload staleness
+    /// into `target ± deadband` (the deadband is the hysteresis) by
+    /// stepping `buffer_k` within `[buffer_k_min, buffer_k_max]` and the
+    /// mixing base rate within `[alpha_min, alpha_max]`.
+    pub staleness_target: f64,
+    pub staleness_deadband: f64,
+    pub buffer_k_min: usize,
+    pub buffer_k_max: usize,
+    pub alpha_min: f64,
+    pub alpha_max: f64,
+    /// Compression controller: step `k_fraction` by `k_step` within
+    /// `[k_fraction_min, k_fraction_max]`, up when the window's
+    /// error-feedback residual ratio exceeds `residual_hi`, down below
+    /// `residual_lo` (the band between them is the hysteresis).
+    pub k_fraction_min: f64,
+    pub k_fraction_max: f64,
+    pub k_step: f64,
+    pub residual_hi: f64,
+    pub residual_lo: f64,
+    /// Rebalancer: migrate one client off the hottest shard when the
+    /// windowed hottest/coldest flush-count ratio exceeds this (>= 1).
+    pub rebalance_skew: f64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            enabled: false,
+            staleness: true,
+            compression: true,
+            rebalance: true,
+            interval: 4,
+            window: 32,
+            staleness_target: 2.0,
+            staleness_deadband: 1.0,
+            buffer_k_min: 1,
+            buffer_k_max: 16,
+            alpha_min: 0.1,
+            alpha_max: 1.0,
+            k_fraction_min: 0.05,
+            k_fraction_max: 1.0,
+            k_step: 1.5,
+            residual_hi: 0.6,
+            residual_lo: 0.2,
+            rebalance_skew: 2.0,
+        }
+    }
+}
+
+impl ControlConfig {
+    /// Validate the bounds/hysteresis parameters (always, not just when
+    /// enabled: a bad `[control]` section should fail loudly rather than
+    /// lie in wait for the `--control on` run).
+    pub fn validate(&self) -> Result<()> {
+        if self.interval == 0 {
+            bail!("control.interval must be >= 1");
+        }
+        if self.window == 0 {
+            bail!("control.window must be >= 1");
+        }
+        if !(self.staleness_target.is_finite() && self.staleness_target >= 0.0) {
+            bail!("control.staleness_target must be finite and >= 0");
+        }
+        if !(self.staleness_deadband.is_finite() && self.staleness_deadband >= 0.0) {
+            bail!("control.staleness_deadband must be finite and >= 0");
+        }
+        if self.buffer_k_min == 0 || self.buffer_k_min > self.buffer_k_max {
+            bail!(
+                "control buffer_k bounds must satisfy 1 <= buffer_k_min <= buffer_k_max, got [{}, {}]",
+                self.buffer_k_min,
+                self.buffer_k_max
+            );
+        }
+        if !(0.0 < self.alpha_min && self.alpha_min <= self.alpha_max && self.alpha_max <= 1.0) {
+            bail!(
+                "control alpha bounds must satisfy 0 < alpha_min <= alpha_max <= 1, got [{}, {}]",
+                self.alpha_min,
+                self.alpha_max
+            );
+        }
+        if !(0.0 < self.k_fraction_min
+            && self.k_fraction_min <= self.k_fraction_max
+            && self.k_fraction_max <= 1.0)
+        {
+            bail!(
+                "control k_fraction bounds must satisfy 0 < k_fraction_min <= k_fraction_max <= 1, got [{}, {}]",
+                self.k_fraction_min,
+                self.k_fraction_max
+            );
+        }
+        if !(self.k_step.is_finite() && self.k_step > 1.0) {
+            bail!("control.k_step must be finite and > 1, got {}", self.k_step);
+        }
+        if !(0.0 <= self.residual_lo
+            && self.residual_lo < self.residual_hi
+            && self.residual_hi <= 1.0)
+        {
+            bail!(
+                "control residual thresholds must satisfy 0 <= residual_lo < residual_hi <= 1, got [{}, {}]",
+                self.residual_lo,
+                self.residual_hi
+            );
+        }
+        if !(self.rebalance_skew.is_finite() && self.rebalance_skew >= 1.0) {
+            bail!("control.rebalance_skew must be finite and >= 1, got {}", self.rebalance_skew);
+        }
+        Ok(())
+    }
+}
+
 /// EAFLM gate constants (paper Eq. 3 and §IV-D: xi_d = 1/D, D = 1,
 /// alpha = 0.98; beta·m² folded into one threshold scale).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -285,6 +416,15 @@ pub struct ExperimentConfig {
     /// section `[engine]`, CLI `--engine-threads` / `--shards` /
     /// `--reconcile-every`.
     pub engine_opts: EngineConfig,
+    /// Adaptive control plane — TOML section `[control]`, CLI
+    /// `--control` (disabled by default; see the `control` module).
+    pub control: ControlConfig,
+    /// Record the barrier-free engine's committed event stream as a
+    /// `(vtime, label)` trace in `RunMetrics::event_trace` so the
+    /// `--realtime` driver can replay in-flight uploads, buffer
+    /// occupancy, and live controller decisions (set automatically by
+    /// the CLI's `--realtime`; costs one label allocation per event).
+    pub trace_events: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -317,7 +457,22 @@ impl Default for ExperimentConfig {
             engine: EngineMode::Barriered,
             async_engine: AsyncEngineConfig::default(),
             engine_opts: EngineConfig::default(),
+            control: ControlConfig::default(),
+            trace_events: false,
         }
+    }
+}
+
+/// Integer config key as `usize`, rejecting negatives at parse time with
+/// the key name in the error — the `EventQueue::advance_to` strictness
+/// policy: the old `v.max(0)` clamp silently rewrote a negative value and
+/// let validation fail later with a misleading message (or, for keys like
+/// `num_clients`, reinterpreted it as a huge unsigned count).
+fn get_nonneg(doc: &toml::Doc, key: &str) -> Result<Option<usize>> {
+    match doc.get_i64(key) {
+        Some(v) if v < 0 => bail!("{key} must not be negative, got {v}"),
+        Some(v) => Ok(Some(v as usize)),
+        None => Ok(None),
     }
 }
 
@@ -398,6 +553,48 @@ impl ExperimentConfig {
                  mixing rule alpha(tau) instead"
             );
         }
+        self.control.validate()?;
+        if self.control.enabled
+            && self.control.compression
+            && self.compression.mode == CompressionMode::TopK
+            && !(self.control.k_fraction_min <= self.compression.k_fraction
+                && self.compression.k_fraction <= self.control.k_fraction_max)
+        {
+            bail!(
+                "compression.k_fraction ({}) must start inside the control plane's \
+                 [k_fraction_min, k_fraction_max] = [{}, {}]",
+                self.compression.k_fraction,
+                self.control.k_fraction_min,
+                self.control.k_fraction_max
+            );
+        }
+        // Same policy for the staleness controller's knobs: a starting
+        // value outside the bounds would make the first clamped step move
+        // the knob AGAINST the signal (e.g. buffer_k 32 with max 16 drops
+        // to 16 on a "batch more" decision).
+        if self.control.enabled && self.control.staleness && self.engine == EngineMode::BarrierFree
+        {
+            if !(self.control.buffer_k_min <= self.async_engine.buffer_k
+                && self.async_engine.buffer_k <= self.control.buffer_k_max)
+            {
+                bail!(
+                    "async_engine.buffer_k ({}) must start inside the control plane's \
+                     [buffer_k_min, buffer_k_max] = [{}, {}]",
+                    self.async_engine.buffer_k,
+                    self.control.buffer_k_min,
+                    self.control.buffer_k_max
+                );
+            }
+            let a0 = self.async_engine.mixing.alpha0();
+            if !(self.control.alpha_min <= a0 && a0 <= self.control.alpha_max) {
+                bail!(
+                    "async_engine mixing alpha ({a0}) must start inside the control \
+                     plane's [alpha_min, alpha_max] = [{}, {}]",
+                    self.control.alpha_min,
+                    self.control.alpha_max
+                );
+            }
+        }
         if let Algorithm::Eaflm = self.algorithm {
             if !(0.0 < self.eaflm.alpha && self.eaflm.alpha < 1.0) {
                 bail!("eaflm.alpha must be in (0,1)");
@@ -426,8 +623,8 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("algorithm") {
             cfg.algorithm = Algorithm::from_name(v)?;
         }
-        if let Some(v) = doc.get_i64("num_clients") {
-            cfg.num_clients = v as usize;
+        if let Some(v) = get_nonneg(&doc, "num_clients")? {
+            cfg.num_clients = v;
         }
         if let Some(v) = doc.get_str("partition") {
             cfg.partition = match v {
@@ -439,23 +636,23 @@ impl ExperimentConfig {
                 other => bail!("unknown partition {other:?}"),
             };
         }
-        if let Some(v) = doc.get_i64("samples_per_client") {
-            cfg.samples_per_client = v as usize;
+        if let Some(v) = get_nonneg(&doc, "samples_per_client")? {
+            cfg.samples_per_client = v;
         }
-        if let Some(v) = doc.get_i64("test_samples") {
-            cfg.test_samples = v as usize;
+        if let Some(v) = get_nonneg(&doc, "test_samples")? {
+            cfg.test_samples = v;
         }
-        if let Some(v) = doc.get_i64("probe_samples") {
-            cfg.probe_samples = v as usize;
+        if let Some(v) = get_nonneg(&doc, "probe_samples")? {
+            cfg.probe_samples = v;
         }
-        if let Some(v) = doc.get_i64("rounds") {
-            cfg.rounds = v as usize;
+        if let Some(v) = get_nonneg(&doc, "rounds")? {
+            cfg.rounds = v;
         }
-        if let Some(v) = doc.get_i64("local_passes") {
-            cfg.local_passes = v as usize;
+        if let Some(v) = get_nonneg(&doc, "local_passes")? {
+            cfg.local_passes = v;
         }
-        if let Some(v) = doc.get_i64("batches_per_pass") {
-            cfg.batches_per_pass = v as usize;
+        if let Some(v) = get_nonneg(&doc, "batches_per_pass")? {
+            cfg.batches_per_pass = v;
         }
         if let Some(v) = doc.get_f64("lr") {
             cfg.lr = v as f32;
@@ -466,8 +663,8 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_i64("seed") {
             cfg.seed = v as u64;
         }
-        if let Some(v) = doc.get_i64("eval_every") {
-            cfg.eval_every = v as usize;
+        if let Some(v) = get_nonneg(&doc, "eval_every")? {
+            cfg.eval_every = v;
         }
         if let Some(v) = doc.get_f64("pixel_noise") {
             cfg.pixel_noise = v as f32;
@@ -495,8 +692,8 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("eaflm.beta") {
             cfg.eaflm.beta = v;
         }
-        if let Some(v) = doc.get_i64("eaflm.depth") {
-            cfg.eaflm.depth = v as usize;
+        if let Some(v) = get_nonneg(&doc, "eaflm.depth")? {
+            cfg.eaflm.depth = v;
         }
         // [value_fn]
         if let Some(v) = doc.get_bool("value_fn.use_acc_term") {
@@ -527,8 +724,8 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("staleness_decay") {
             cfg.staleness_decay = Some(v);
         }
-        if let Some(v) = doc.get_i64("threads") {
-            cfg.threads = v.max(0) as usize;
+        if let Some(v) = get_nonneg(&doc, "threads")? {
+            cfg.threads = v;
         }
         if let Some(v) = doc.get_str("engine") {
             cfg.engine = EngineMode::from_name(v)?;
@@ -544,18 +741,24 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_bool("engine.threaded") {
             cfg.engine_opts.threaded = v;
         }
-        if let Some(v) = doc.get_i64("engine.workers") {
-            cfg.engine_opts.workers = v.max(0) as usize;
+        if let Some(v) = get_nonneg(&doc, "engine.workers")? {
+            cfg.engine_opts.workers = v;
         }
-        if let Some(v) = doc.get_i64("engine.shards") {
-            cfg.engine_opts.shards = v.max(0) as usize;
+        if let Some(v) = get_nonneg(&doc, "engine.shards")? {
+            cfg.engine_opts.shards = v;
         }
-        if let Some(v) = doc.get_i64("engine.reconcile_every") {
-            cfg.engine_opts.reconcile_every = v.max(0) as usize;
+        if let Some(v) = get_nonneg(&doc, "engine.reconcile_every")? {
+            cfg.engine_opts.reconcile_every = v;
         }
         // [async_engine]
         if let Some(v) = doc.get_i64("async_engine.buffer_k") {
-            cfg.async_engine.buffer_k = v.max(0) as usize;
+            // Strict parse (see `get_nonneg`): a negative buffer used to
+            // clamp to 0 and only fail in validate() with a misleading
+            // "must be >= 1" about a value the user never wrote.
+            if v < 1 {
+                bail!("async_engine.buffer_k must be >= 1, got {v}");
+            }
+            cfg.async_engine.buffer_k = v as usize;
         }
         {
             let alpha = doc
@@ -570,8 +773,7 @@ impl ExperimentConfig {
                     },
                     "hinge" => MixingRule::Hinge {
                         alpha,
-                        grace: doc.get_i64("async_engine.mixing_grace").unwrap_or(4).max(0)
-                            as usize,
+                        grace: get_nonneg(&doc, "async_engine.mixing_grace")?.unwrap_or(4),
                         slope: doc.get_f64("async_engine.mixing_slope").unwrap_or(1.0),
                     },
                     other => bail!("unknown mixing rule {other:?} (constant|polynomial|hinge)"),
@@ -585,6 +787,64 @@ impl ExperimentConfig {
                     exponent: doc.get_f64("async_engine.mixing_exponent").unwrap_or(0.5),
                 };
             }
+        }
+        // [control] — adaptive control plane.
+        if let Some(v) = doc.get_bool("control.enabled") {
+            cfg.control.enabled = v;
+        }
+        if let Some(v) = doc.get_bool("control.staleness") {
+            cfg.control.staleness = v;
+        }
+        if let Some(v) = doc.get_bool("control.compression") {
+            cfg.control.compression = v;
+        }
+        if let Some(v) = doc.get_bool("control.rebalance") {
+            cfg.control.rebalance = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "control.interval")? {
+            cfg.control.interval = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "control.window")? {
+            cfg.control.window = v;
+        }
+        if let Some(v) = doc.get_f64("control.staleness_target") {
+            cfg.control.staleness_target = v;
+        }
+        if let Some(v) = doc.get_f64("control.staleness_deadband") {
+            cfg.control.staleness_deadband = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "control.buffer_k_min")? {
+            cfg.control.buffer_k_min = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "control.buffer_k_max")? {
+            cfg.control.buffer_k_max = v;
+        }
+        if let Some(v) = doc.get_f64("control.alpha_min") {
+            cfg.control.alpha_min = v;
+        }
+        if let Some(v) = doc.get_f64("control.alpha_max") {
+            cfg.control.alpha_max = v;
+        }
+        if let Some(v) = doc.get_f64("control.k_fraction_min") {
+            cfg.control.k_fraction_min = v;
+        }
+        if let Some(v) = doc.get_f64("control.k_fraction_max") {
+            cfg.control.k_fraction_max = v;
+        }
+        if let Some(v) = doc.get_f64("control.k_step") {
+            cfg.control.k_step = v;
+        }
+        if let Some(v) = doc.get_f64("control.residual_hi") {
+            cfg.control.residual_hi = v;
+        }
+        if let Some(v) = doc.get_f64("control.residual_lo") {
+            cfg.control.residual_lo = v;
+        }
+        if let Some(v) = doc.get_f64("control.rebalance_skew") {
+            cfg.control.rebalance_skew = v;
+        }
+        if let Some(v) = doc.get_bool("trace_events") {
+            cfg.trace_events = v;
         }
         // [backend]
         match doc.get_str("backend.kind") {
@@ -821,6 +1081,153 @@ mod tests {
         assert_eq!(c.k_for(320), 320);
         c.k_fraction = 1e-9;
         assert_eq!(c.k_for(320), 1, "k is never zero");
+    }
+
+    #[test]
+    fn control_keys_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            engine = "barrier_free"
+            [async_engine]
+            buffer_k = 4
+            [compression]
+            mode = "topk"
+            k_fraction = 0.25
+            [control]
+            enabled = true
+            rebalance = false
+            interval = 2
+            window = 16
+            staleness_target = 3.0
+            staleness_deadband = 0.5
+            buffer_k_min = 2
+            buffer_k_max = 8
+            alpha_min = 0.2
+            alpha_max = 0.9
+            k_fraction_min = 0.1
+            k_fraction_max = 0.8
+            k_step = 2.0
+            residual_hi = 0.7
+            residual_lo = 0.3
+            rebalance_skew = 3.0
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        let c = cfg.control;
+        assert!(c.enabled && c.staleness && c.compression && !c.rebalance);
+        assert_eq!((c.interval, c.window), (2, 16));
+        assert_eq!((c.buffer_k_min, c.buffer_k_max), (2, 8));
+        assert_eq!((c.alpha_min, c.alpha_max), (0.2, 0.9));
+        assert_eq!((c.k_fraction_min, c.k_fraction_max), (0.1, 0.8));
+        assert_eq!((c.k_step, c.rebalance_skew), (2.0, 3.0));
+        assert_eq!((c.residual_lo, c.residual_hi), (0.3, 0.7));
+        assert_eq!((c.staleness_target, c.staleness_deadband), (3.0, 0.5));
+        // Default: the plane is off and the default bounds validate.
+        let d = ExperimentConfig::default();
+        assert!(!d.control.enabled);
+        d.control.validate().unwrap();
+    }
+
+    #[test]
+    fn control_bounds_are_validated() {
+        for bad in [
+            "interval = 0",
+            "window = 0",
+            "staleness_target = -1.0",
+            "staleness_deadband = -0.1",
+            "buffer_k_min = 0",
+            "buffer_k_min = 5\nbuffer_k_max = 2",
+            "alpha_min = 0.0",
+            "alpha_min = 0.9\nalpha_max = 0.5",
+            "alpha_max = 1.5",
+            "k_fraction_min = 0.0",
+            "k_fraction_min = 0.9\nk_fraction_max = 0.5",
+            "k_fraction_max = 1.5",
+            "k_step = 1.0",
+            "k_step = 0.5",
+            "residual_lo = 0.8\nresidual_hi = 0.4",
+            "residual_hi = 1.5",
+            "residual_lo = -0.1",
+            "rebalance_skew = 0.5",
+            "interval = -3",
+            "window = -1",
+        ] {
+            let toml = format!("[control]\n{bad}\n[backend]\nkind = \"mock\"");
+            assert!(
+                ExperimentConfig::from_toml(&toml).is_err(),
+                "accepted bad [control] {bad:?}"
+            );
+        }
+        // Bad bounds are rejected even with the plane disabled.
+        assert!(ExperimentConfig::from_toml(
+            "[control]\nenabled = false\nk_step = 0.5\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // An enabled compression controller requires the starting
+        // k_fraction inside the control bounds.
+        assert!(ExperimentConfig::from_toml(
+            "[compression]\nmode = \"topk\"\nk_fraction = 0.02\n\
+             [control]\nenabled = true\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // An armed staleness controller requires the starting buffer_k
+        // and mixing alpha inside its bounds — otherwise the first
+        // clamped step would move the knob against the signal.
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[async_engine]\nbuffer_k = 32\n\
+             [control]\nenabled = true\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[async_engine]\nmixing = \"constant\"\nmixing_alpha = 0.05\n\
+             [control]\nenabled = true\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // ...but the barriered engine (staleness knobs unused) and a
+        // disarmed staleness controller stay unconstrained.
+        assert!(ExperimentConfig::from_toml(
+            "[async_engine]\nbuffer_k = 32\n\
+             [control]\nenabled = true\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[async_engine]\nbuffer_k = 32\n\
+             [control]\nenabled = true\nstaleness = false\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn negative_integer_keys_are_rejected_at_parse() {
+        // The old `v.max(0)` clamp turned a negative into 0 and failed
+        // later in validate() with a misleading "must be >= 1" (or, for
+        // fleet-size keys, reinterpreted it as a huge unsigned count).
+        let err = ExperimentConfig::from_toml(
+            "[async_engine]\nbuffer_k = -3\n[backend]\nkind = \"mock\"",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("buffer_k must be >= 1, got -3"), "{err}");
+        for bad in [
+            "num_clients = -1",
+            "rounds = -5",
+            "threads = -2",
+            "samples_per_client = -10",
+            "eval_every = -1",
+        ] {
+            let toml = format!("{bad}\n[backend]\nkind = \"mock\"");
+            let err = ExperimentConfig::from_toml(&toml).unwrap_err();
+            assert!(err.to_string().contains("must not be negative"), "{bad}: {err}");
+        }
+        for bad in ["workers = -4", "shards = -2", "reconcile_every = -1"] {
+            let toml = format!("[engine]\n{bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "{bad}");
+        }
+        assert!(ExperimentConfig::from_toml(
+            "[async_engine]\nmixing = \"hinge\"\nmixing_grace = -2\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,335 @@
+//! Controller policies of the adaptive control plane: pure, deterministic
+//! `fn(window statistics) -> decision` functions with explicit bounds and
+//! deadband hysteresis, so every decision is unit-testable on synthetic
+//! windows and bitwise reproducible across runs and thread counts.
+//!
+//! * [`StalenessController`] — retunes the barrier-free engine's
+//!   `buffer_k` and the `alpha(tau)` base rate from the observed upload
+//!   staleness: high staleness means version counters are outrunning
+//!   client syncs, so batch more per flush (larger buffer) and trust
+//!   stale uploads less (lower alpha); low staleness unwinds both for
+//!   lower aggregation latency.
+//! * [`CompressionController`] — retunes the sparse top-k `k_fraction`
+//!   from the error-feedback residual mass: a large residual ratio means
+//!   the budget is starving the model (ship more), a small one with a
+//!   non-degrading accuracy proxy means there is headroom to compress
+//!   harder.
+//! * [`ShardRebalancer`] — proposes migrating one client off the hottest
+//!   aggregator shard when the windowed flush-rate skew exceeds a
+//!   threshold (the engine applies migrations only at reconcile
+//!   boundaries, where every replica was just reset to the global).
+
+/// A proposed change to one engine knob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KnobChange {
+    /// Barrier-free buffer-of-K threshold.
+    BufferK { from: usize, to: usize },
+    /// Base rate `alpha(0)` of the staleness mixing rule.
+    Alpha0 { from: f64, to: f64 },
+    /// Sparse top-k budget `compression.k_fraction`.
+    KFraction { from: f64, to: f64 },
+}
+
+/// One controller decision: the change plus the window statistic that
+/// triggered it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KnobDecision {
+    pub controller: &'static str,
+    pub change: KnobChange,
+    pub signal: f64,
+}
+
+/// A proposed client migration between aggregator shards (the engine
+/// picks the concrete client deterministically from its own state).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Migration {
+    pub from_shard: usize,
+    pub to_shard: usize,
+    /// Observed hottest/coldest windowed flush-count ratio.
+    pub signal: f64,
+}
+
+/// Staleness controller: drive the window's upload-weighted mean
+/// staleness toward `target` by moving `buffer_k` one step and `alpha0`
+/// one multiplicative step per evaluation. The `deadband` around the
+/// target is the hysteresis: inside it, nothing moves.
+#[derive(Debug, Clone, Copy)]
+pub struct StalenessController {
+    pub target: f64,
+    pub deadband: f64,
+    pub k_min: usize,
+    pub k_max: usize,
+    pub alpha_min: f64,
+    pub alpha_max: f64,
+    /// Multiplicative alpha step in (0, 1): high staleness multiplies
+    /// alpha0 by it, low staleness divides.
+    pub alpha_step: f64,
+}
+
+impl StalenessController {
+    /// Pure decision on a window's mean staleness against the current
+    /// `(buffer_k, alpha0)`. Returns zero, one, or two knob changes
+    /// (both knobs can move in the same evaluation); changes already at
+    /// their bound are suppressed.
+    pub fn decide(&self, mean_staleness: f64, buffer_k: usize, alpha0: f64) -> Vec<KnobDecision> {
+        let mut out = Vec::new();
+        if !mean_staleness.is_finite() {
+            return out;
+        }
+        let push_k = |out: &mut Vec<KnobDecision>, to: usize| {
+            if to != buffer_k {
+                out.push(KnobDecision {
+                    controller: "staleness",
+                    change: KnobChange::BufferK { from: buffer_k, to },
+                    signal: mean_staleness,
+                });
+            }
+        };
+        let push_a = |out: &mut Vec<KnobDecision>, to: f64| {
+            if to != alpha0 {
+                out.push(KnobDecision {
+                    controller: "staleness",
+                    change: KnobChange::Alpha0 { from: alpha0, to },
+                    signal: mean_staleness,
+                });
+            }
+        };
+        if mean_staleness > self.target + self.deadband {
+            push_k(&mut out, (buffer_k + 1).clamp(self.k_min, self.k_max));
+            push_a(&mut out, (alpha0 * self.alpha_step).clamp(self.alpha_min, self.alpha_max));
+        } else if mean_staleness < self.target - self.deadband {
+            push_k(&mut out, buffer_k.saturating_sub(1).clamp(self.k_min, self.k_max));
+            push_a(&mut out, (alpha0 / self.alpha_step).clamp(self.alpha_min, self.alpha_max));
+        }
+        out
+    }
+}
+
+/// Compression controller: move `k_fraction` one multiplicative `step`
+/// per evaluation, up when the residual ratio exceeds `residual_hi`,
+/// down when it falls below `residual_lo` *and* the accuracy proxy is
+/// not degrading. The `[residual_lo, residual_hi]` band is the
+/// hysteresis.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionController {
+    pub k_min: f64,
+    pub k_max: f64,
+    /// Multiplicative step, > 1.
+    pub step: f64,
+    pub residual_hi: f64,
+    pub residual_lo: f64,
+}
+
+impl CompressionController {
+    /// Pure decision on the window's residual ratio and accuracy trend
+    /// (`None` = not enough evidence, which suppresses shrinking only).
+    pub fn decide(
+        &self,
+        residual_ratio: f64,
+        acc_improving: Option<bool>,
+        k_fraction: f64,
+    ) -> Option<KnobDecision> {
+        if !residual_ratio.is_finite() {
+            return None;
+        }
+        let to = if residual_ratio > self.residual_hi {
+            (k_fraction * self.step).clamp(self.k_min, self.k_max)
+        } else if residual_ratio < self.residual_lo && acc_improving == Some(true) {
+            (k_fraction / self.step).clamp(self.k_min, self.k_max)
+        } else {
+            return None;
+        };
+        if to == k_fraction {
+            return None;
+        }
+        Some(KnobDecision {
+            controller: "compression",
+            change: KnobChange::KFraction { from: k_fraction, to },
+            signal: residual_ratio,
+        })
+    }
+}
+
+/// Shard rebalancer: when the hottest shard's windowed flush count
+/// exceeds the coldest's by a factor of `skew`, propose migrating one
+/// client hot -> cold. Ties break toward the lowest shard id, and a
+/// single-client hot shard is never drained.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRebalancer {
+    /// Hottest/coldest flush-count ratio above which one client moves
+    /// (>= 1; below it nothing moves — the hysteresis).
+    pub skew: f64,
+}
+
+impl ShardRebalancer {
+    /// Pure decision on windowed per-shard flush counts and current
+    /// shard populations.
+    pub fn decide(&self, flushes_per_shard: &[usize], shard_pop: &[usize]) -> Option<Migration> {
+        if flushes_per_shard.len() < 2 || flushes_per_shard.len() != shard_pop.len() {
+            return None;
+        }
+        let mut hot = 0usize;
+        let mut cold = 0usize;
+        for (s, &c) in flushes_per_shard.iter().enumerate() {
+            if c > flushes_per_shard[hot] {
+                hot = s;
+            }
+            if c < flushes_per_shard[cold] {
+                cold = s;
+            }
+        }
+        if hot == cold || shard_pop[hot] <= 1 {
+            return None;
+        }
+        let skew =
+            flushes_per_shard[hot] as f64 / flushes_per_shard[cold].max(1) as f64;
+        if skew < self.skew {
+            return None;
+        }
+        Some(Migration { from_shard: hot, to_shard: cold, signal: skew })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn staleness() -> StalenessController {
+        StalenessController {
+            target: 2.0,
+            deadband: 1.0,
+            k_min: 1,
+            k_max: 8,
+            alpha_min: 0.1,
+            alpha_max: 1.0,
+            alpha_step: 0.9,
+        }
+    }
+
+    #[test]
+    fn staleness_deadband_is_hysteresis() {
+        let c = staleness();
+        // Inside target +- deadband: no decision.
+        assert!(c.decide(2.0, 4, 0.8).is_empty());
+        assert!(c.decide(2.9, 4, 0.8).is_empty());
+        assert!(c.decide(1.1, 4, 0.8).is_empty());
+        // NaN (empty window) never decides.
+        assert!(c.decide(f64::NAN, 4, 0.8).is_empty());
+    }
+
+    #[test]
+    fn staleness_high_grows_buffer_and_damps_alpha() {
+        let c = staleness();
+        let ds = c.decide(4.0, 4, 0.8);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].change, KnobChange::BufferK { from: 4, to: 5 });
+        match ds[1].change {
+            KnobChange::Alpha0 { from, to } => {
+                assert_eq!(from, 0.8);
+                assert!((to - 0.72).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(ds[0].signal, 4.0);
+    }
+
+    #[test]
+    fn staleness_low_shrinks_buffer_and_raises_alpha() {
+        let c = staleness();
+        let ds = c.decide(0.2, 4, 0.5);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].change, KnobChange::BufferK { from: 4, to: 3 });
+        match ds[1].change {
+            KnobChange::Alpha0 { to, .. } => assert!((to - 0.5 / 0.9).abs() < 1e-12),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn staleness_clamps_to_bounds_and_suppresses_noops() {
+        let c = staleness();
+        // At k_max / alpha_min, a high-staleness evaluation changes nothing.
+        assert!(c.decide(10.0, 8, 0.1).is_empty());
+        // At k_min / alpha_max, a low-staleness evaluation changes nothing.
+        assert!(c.decide(0.0, 1, 1.0).is_empty());
+        // One step above the bound clamps to it.
+        let ds = c.decide(10.0, 8, 0.105);
+        assert_eq!(ds.len(), 1);
+        match ds[0].change {
+            KnobChange::Alpha0 { to, .. } => assert_eq!(to, 0.1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn compression() -> CompressionController {
+        CompressionController {
+            k_min: 0.05,
+            k_max: 1.0,
+            step: 2.0,
+            residual_hi: 0.6,
+            residual_lo: 0.2,
+        }
+    }
+
+    #[test]
+    fn compression_band_is_hysteresis() {
+        let c = compression();
+        assert_eq!(c.decide(0.4, Some(true), 0.25), None);
+        assert_eq!(c.decide(f64::NAN, Some(true), 0.25), None);
+    }
+
+    #[test]
+    fn compression_grows_k_on_high_residual() {
+        let c = compression();
+        let d = c.decide(0.8, Some(false), 0.25).unwrap();
+        assert_eq!(d.change, KnobChange::KFraction { from: 0.25, to: 0.5 });
+        assert_eq!(d.signal, 0.8);
+        // Growth is clamped to k_max and no-ops at the bound.
+        let d = c.decide(0.8, None, 0.7).unwrap();
+        assert_eq!(d.change, KnobChange::KFraction { from: 0.7, to: 1.0 });
+        assert_eq!(c.decide(0.8, None, 1.0), None);
+    }
+
+    #[test]
+    fn compression_shrinks_only_with_accuracy_evidence() {
+        let c = compression();
+        let d = c.decide(0.1, Some(true), 0.4).unwrap();
+        assert_eq!(d.change, KnobChange::KFraction { from: 0.4, to: 0.2 });
+        // Degrading or unknown accuracy suppresses the shrink.
+        assert_eq!(c.decide(0.1, Some(false), 0.4), None);
+        assert_eq!(c.decide(0.1, None, 0.4), None);
+        // Shrink clamps to k_min and no-ops at the bound.
+        let d = c.decide(0.1, Some(true), 0.08).unwrap();
+        assert_eq!(d.change, KnobChange::KFraction { from: 0.08, to: 0.05 });
+        assert_eq!(c.decide(0.1, Some(true), 0.05), None);
+    }
+
+    #[test]
+    fn rebalancer_migrates_hot_to_cold_above_skew() {
+        let r = ShardRebalancer { skew: 2.0 };
+        let m = r.decide(&[6, 2], &[3, 4]).unwrap();
+        assert_eq!((m.from_shard, m.to_shard), (0, 1));
+        assert_eq!(m.signal, 3.0);
+        // Below the skew threshold: hysteresis holds.
+        assert_eq!(r.decide(&[3, 2], &[3, 4]), None);
+        // A never-flushed cold shard reads as maximal skew.
+        let m = r.decide(&[5, 0], &[3, 4]).unwrap();
+        assert_eq!((m.from_shard, m.to_shard), (0, 1));
+        assert_eq!(m.signal, 5.0);
+    }
+
+    #[test]
+    fn rebalancer_never_drains_a_singleton_or_acts_degenerate() {
+        let r = ShardRebalancer { skew: 1.0 };
+        // Hot shard with one client: no migration.
+        assert_eq!(r.decide(&[9, 1], &[1, 6]), None);
+        // Uniform counts: hot == cold, no migration.
+        assert_eq!(r.decide(&[3, 3], &[4, 3]), None);
+        // Single shard / mismatched inputs: no migration.
+        assert_eq!(r.decide(&[3], &[7]), None);
+        assert_eq!(r.decide(&[3, 1], &[7]), None);
+        // Ties break to the lowest shard ids.
+        let m = r.decide(&[4, 2, 4, 2], &[3, 3, 3, 3]).unwrap();
+        assert_eq!((m.from_shard, m.to_shard), (0, 1));
+    }
+}

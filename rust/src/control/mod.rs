@@ -1,0 +1,267 @@
+//! Adaptive control plane: closes the loop from observed run telemetry
+//! back into the engines' knobs.
+//!
+//! The paper's headline numbers come from *fixed* knobs (buffer size,
+//! staleness weighting, compression budget) chosen offline per
+//! experiment. This subsystem makes them closed-loop, in the spirit of
+//! FedLuck's online compression/cadence co-adaptation and QuAFL's
+//! heterogeneity-tracking buffered asynchrony:
+//!
+//! 1. a **telemetry bus** ([`telemetry::TelemetryBus`]) of bounded
+//!    rolling windows over upload staleness, error-feedback residual
+//!    mass, per-shard flush rates and wire bytes, fed from both engines
+//!    at event-commit time;
+//! 2. **controllers** ([`controllers`]) — pure, deterministic
+//!    `fn(window) -> decision` policies retuning `buffer_k` /
+//!    `alpha(tau)`, `k_fraction`, and the client-to-shard assignment;
+//! 3. the [`ControlPlane`], which owns both and is polled by
+//!    `coordinator::server` at deterministic commit points (every
+//!    `control.interval` flushes/rounds; shard migrations only at
+//!    reconcile boundaries), so serial == threaded stays bitwise.
+//!
+//! With `control.enabled = false` (the default) the plane is fully
+//! inert: no telemetry is collected, no decision is ever taken, and
+//! both engines produce record streams bitwise identical to a build
+//! without this subsystem (asserted in `rust/tests/control.rs` and
+//! pinned by the golden snapshots).
+
+pub mod controllers;
+pub mod telemetry;
+
+pub use controllers::{
+    CompressionController, KnobChange, KnobDecision, Migration, ShardRebalancer,
+    StalenessController,
+};
+pub use telemetry::{FlushSample, TelemetryBus};
+
+use crate::config::ControlConfig;
+
+/// Live knob values, snapshotted by the engine at each decision point.
+#[derive(Debug, Clone, Copy)]
+pub struct Knobs {
+    pub buffer_k: usize,
+    pub alpha0: f64,
+    pub k_fraction: f64,
+    /// The compression controller is inert unless top-k mode is active.
+    pub topk: bool,
+    /// The staleness controller is inert on the barriered engine (its
+    /// knobs only exist on the barrier-free one).
+    pub barrier_free: bool,
+}
+
+/// The control plane: telemetry window + controller set, evaluated at
+/// the engines' commit points.
+pub struct ControlPlane {
+    cfg: ControlConfig,
+    bus: TelemetryBus,
+    staleness: StalenessController,
+    compression: CompressionController,
+    rebalancer: ShardRebalancer,
+    /// Flush index of the last *applied* migration (engine-reported via
+    /// [`ControlPlane::note_migration`]). The rebalancer holds off until
+    /// a full telemetry window of post-migration samples exists — the
+    /// flush-rate skew that justified the move is exactly the data the
+    /// move invalidated.
+    last_migration: Option<usize>,
+}
+
+impl ControlPlane {
+    pub fn new(cfg: &ControlConfig) -> Self {
+        ControlPlane {
+            bus: TelemetryBus::new(cfg.window),
+            staleness: StalenessController {
+                target: cfg.staleness_target,
+                deadband: cfg.staleness_deadband,
+                k_min: cfg.buffer_k_min,
+                k_max: cfg.buffer_k_max,
+                alpha_min: cfg.alpha_min,
+                alpha_max: cfg.alpha_max,
+                alpha_step: 0.9,
+            },
+            compression: CompressionController {
+                k_min: cfg.k_fraction_min,
+                k_max: cfg.k_fraction_max,
+                step: cfg.k_step,
+                residual_hi: cfg.residual_hi,
+                residual_lo: cfg.residual_lo,
+            },
+            rebalancer: ShardRebalancer { skew: cfg.rebalance_skew },
+            last_migration: None,
+            cfg: *cfg,
+        }
+    }
+
+    /// Master switch: whether the plane observes and decides at all.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The telemetry window (diagnostics/tests).
+    pub fn bus(&self) -> &TelemetryBus {
+        &self.bus
+    }
+
+    /// Feed one commit-time sample (no-op while disabled, so the
+    /// disabled plane costs nothing and holds no state).
+    pub fn observe(&mut self, sample: FlushSample) {
+        if self.cfg.enabled {
+            self.bus.push(sample);
+        }
+    }
+
+    /// Whether the knob controllers evaluate at commit index `round`
+    /// (every `control.interval` commits, once telemetry exists).
+    pub fn due(&self, round: usize) -> bool {
+        self.cfg.enabled && round % self.cfg.interval.max(1) == 0 && !self.bus.is_empty()
+    }
+
+    /// Evaluate the staleness + compression controllers against the
+    /// current knob values. Pure in the window: same telemetry, same
+    /// knobs -> same decisions.
+    pub fn decide_knobs(&self, knobs: Knobs) -> Vec<KnobDecision> {
+        let mut out = Vec::new();
+        if !self.cfg.enabled {
+            return out;
+        }
+        if self.cfg.staleness && knobs.barrier_free {
+            out.extend(self.staleness.decide(
+                self.bus.mean_staleness(),
+                knobs.buffer_k,
+                knobs.alpha0,
+            ));
+        }
+        if self.cfg.compression && knobs.topk {
+            if let Some(d) = self.compression.decide(
+                self.bus.residual_ratio(),
+                self.bus.acc_improving(1e-3),
+                knobs.k_fraction,
+            ) {
+                out.push(d);
+            }
+        }
+        out
+    }
+
+    /// Evaluate the shard rebalancer at flush index `flush` (the engine
+    /// calls this only at reconcile boundaries, where every replica was
+    /// just reset to the reconciled global). Cooldown: after an applied
+    /// migration the rebalancer waits one full telemetry window, so it
+    /// never acts twice on skew data the previous move invalidated.
+    pub fn decide_rebalance(&self, flush: usize, shard_pop: &[usize]) -> Option<Migration> {
+        if !(self.cfg.enabled && self.cfg.rebalance) || shard_pop.len() < 2 {
+            return None;
+        }
+        if let Some(last) = self.last_migration {
+            if flush.saturating_sub(last) < self.cfg.window {
+                return None;
+            }
+        }
+        let flushes = self.bus.per_shard_flushes(shard_pop.len());
+        self.rebalancer.decide(&flushes, shard_pop)
+    }
+
+    /// Record that the engine actually applied a migration at flush
+    /// index `flush` (it may decline one — e.g. no eligible client —
+    /// in which case the cooldown must not start).
+    pub fn note_migration(&mut self, flush: usize) {
+        self.last_migration = Some(flush);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(round: usize, shard: usize, stale: usize) -> FlushSample {
+        FlushSample {
+            round,
+            shard,
+            vtime: round as f64,
+            uploads: 2,
+            staleness_sum: stale,
+            staleness_max: stale,
+            bytes_up: 10,
+            residual_l1: 4.0,
+            transmitted_l1: 1.0,
+            acc_proxy: 0.5,
+        }
+    }
+
+    fn enabled_cfg() -> ControlConfig {
+        ControlConfig { enabled: true, ..Default::default() }
+    }
+
+    #[test]
+    fn disabled_plane_is_inert() {
+        let mut p = ControlPlane::new(&ControlConfig::default());
+        assert!(!p.enabled());
+        p.observe(sample(1, 0, 10));
+        assert!(p.bus().is_empty(), "disabled plane must not collect telemetry");
+        assert!(!p.due(4));
+        let knobs =
+            Knobs { buffer_k: 1, alpha0: 0.8, k_fraction: 0.1, topk: true, barrier_free: true };
+        assert!(p.decide_knobs(knobs).is_empty());
+        assert_eq!(p.decide_rebalance(1, &[3, 4]), None);
+    }
+
+    #[test]
+    fn due_respects_interval_and_requires_telemetry() {
+        let cfg = ControlConfig { interval: 3, ..enabled_cfg() };
+        let mut p = ControlPlane::new(&cfg);
+        assert!(!p.due(3), "no telemetry yet");
+        p.observe(sample(1, 0, 0));
+        assert!(p.due(3));
+        assert!(!p.due(4));
+        assert!(p.due(6));
+    }
+
+    #[test]
+    fn knob_decisions_respect_engine_and_mode_gates() {
+        let mut p = ControlPlane::new(&enabled_cfg());
+        // High staleness + high residual window.
+        for r in 1..=4 {
+            p.observe(sample(r, 0, 12));
+        }
+        let all =
+            Knobs { buffer_k: 2, alpha0: 0.8, k_fraction: 0.25, topk: true, barrier_free: true };
+        let ds = p.decide_knobs(all);
+        assert!(ds.iter().any(|d| d.controller == "staleness"));
+        assert!(ds.iter().any(|d| d.controller == "compression"));
+        // Barriered engine: staleness controller is inert.
+        let barriered = Knobs { barrier_free: false, ..all };
+        assert!(p.decide_knobs(barriered).iter().all(|d| d.controller == "compression"));
+        // Dense mode: compression controller is inert.
+        let dense = Knobs { topk: false, ..all };
+        assert!(p.decide_knobs(dense).iter().all(|d| d.controller == "staleness"));
+    }
+
+    #[test]
+    fn rebalance_uses_windowed_flush_rates() {
+        let cfg = ControlConfig { rebalance_skew: 2.0, ..enabled_cfg() };
+        let mut p = ControlPlane::new(&cfg);
+        for r in 1..=6 {
+            p.observe(sample(r, 0, 0)); // all flushes on shard 0
+        }
+        let m = p.decide_rebalance(6, &[4, 3]).unwrap();
+        assert_eq!((m.from_shard, m.to_shard), (0, 1));
+        // Single shard: never.
+        assert_eq!(p.decide_rebalance(6, &[7]), None);
+    }
+
+    #[test]
+    fn rebalance_cooldown_spans_one_telemetry_window() {
+        // After an applied migration the rebalancer must stay quiet until
+        // a full window of post-migration samples exists — the skew that
+        // justified the move is exactly the data the move invalidated.
+        let cfg = ControlConfig { rebalance_skew: 1.0, window: 4, ..enabled_cfg() };
+        let mut p = ControlPlane::new(&cfg);
+        for r in 1..=4 {
+            p.observe(sample(r, 0, 0));
+        }
+        assert!(p.decide_rebalance(4, &[4, 3]).is_some());
+        p.note_migration(4);
+        assert_eq!(p.decide_rebalance(6, &[4, 3]), None, "inside the cooldown");
+        assert_eq!(p.decide_rebalance(7, &[4, 3]), None, "one short of the window");
+        assert!(p.decide_rebalance(8, &[4, 3]).is_some(), "window fully turned over");
+    }
+}

@@ -1,0 +1,234 @@
+//! Telemetry bus of the adaptive control plane: bounded rolling windows
+//! over the signals the controllers consume — upload staleness,
+//! error-feedback residual mass, per-shard flush rates, wire bytes, and
+//! an accuracy proxy.
+//!
+//! Both engines feed the bus at **event-commit time** (every buffer
+//! flush of the barrier-free engine, every round of the barriered one),
+//! so the controllers see a rolling window of recent behaviour instead
+//! of the end-of-run rollups (`RunMetrics::staleness_histogram` /
+//! `per_shard_flushes`). Samples are built exclusively from state that
+//! is identical across execution strategies (never the deferred global
+//! evaluation the threaded engine patches late), which is what keeps
+//! adaptive runs bitwise thread-count invariant.
+
+use std::collections::VecDeque;
+
+/// One aggregation's worth of telemetry: a buffer flush of the
+/// barrier-free engine, or one barriered communication round.
+#[derive(Debug, Clone)]
+pub struct FlushSample {
+    /// Flush / round index that cut this sample.
+    pub round: usize,
+    /// Aggregator shard that flushed (0 for barriered / unsharded runs).
+    pub shard: usize,
+    /// Virtual time of the flush.
+    pub vtime: f64,
+    /// Uploads aggregated in this flush.
+    pub uploads: usize,
+    /// Sum of the flushed uploads' staleness values tau.
+    pub staleness_sum: usize,
+    /// Max staleness in the flushed buffer.
+    pub staleness_max: usize,
+    /// Uplink wire bytes of the window this flush closed.
+    pub bytes_up: u64,
+    /// Unsent selection-key mass of the flushed sparse encodes — exactly
+    /// the error-feedback residual they wrote back when EF is on
+    /// (`SparseDelta::key_l1 - sent_key_l1`); 0 in dense mode.
+    pub residual_l1: f64,
+    /// Transmitted selection-key mass of the flushed sparse encodes
+    /// (`SparseDelta::sent_key_l1`); 0 in dense mode.
+    pub transmitted_l1: f64,
+    /// Accuracy proxy available at commit time on every execution
+    /// strategy: the mean of the fleet's last-known finite probe
+    /// accuracies (NaN while nobody has reported yet).
+    pub acc_proxy: f64,
+}
+
+/// Bounded rolling window of [`FlushSample`]s, oldest first.
+#[derive(Debug, Clone)]
+pub struct TelemetryBus {
+    cap: usize,
+    samples: VecDeque<FlushSample>,
+}
+
+impl TelemetryBus {
+    /// A bus keeping the most recent `cap` samples (at least 1).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        TelemetryBus { cap, samples: VecDeque::with_capacity(cap) }
+    }
+
+    /// Append a sample, evicting the oldest beyond the window bound.
+    pub fn push(&mut self, sample: FlushSample) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(sample);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The window's samples, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &FlushSample> {
+        self.samples.iter()
+    }
+
+    /// Upload-weighted mean staleness over the window (NaN when the
+    /// window holds no uploads).
+    pub fn mean_staleness(&self) -> f64 {
+        let uploads: usize = self.samples.iter().map(|s| s.uploads).sum();
+        if uploads == 0 {
+            return f64::NAN;
+        }
+        let stale: usize = self.samples.iter().map(|s| s.staleness_sum).sum();
+        stale as f64 / uploads as f64
+    }
+
+    /// Fraction of delta mass the compression budget left behind:
+    /// `residual / (residual + transmitted)` over the window (NaN when
+    /// the window carries no mass — dense mode, or nothing flushed yet).
+    pub fn residual_ratio(&self) -> f64 {
+        let r: f64 = self.samples.iter().map(|s| s.residual_l1).sum();
+        let t: f64 = self.samples.iter().map(|s| s.transmitted_l1).sum();
+        if r + t <= 0.0 || !(r + t).is_finite() {
+            return f64::NAN;
+        }
+        r / (r + t)
+    }
+
+    /// Windowed flush counts per shard, for `s_count` shards (shards
+    /// that never flushed in the window count 0).
+    pub fn per_shard_flushes(&self, s_count: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; s_count];
+        for s in &self.samples {
+            if s.shard < s_count {
+                counts[s.shard] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Whether the accuracy proxy is holding or improving across the
+    /// window: mean of the newer half vs. the older half, with `eps`
+    /// slack. `None` when fewer than two finite proxies exist (not
+    /// enough evidence either way).
+    pub fn acc_improving(&self, eps: f64) -> Option<bool> {
+        let finite: Vec<f64> = self
+            .samples
+            .iter()
+            .map(|s| s.acc_proxy)
+            .filter(|a| a.is_finite())
+            .collect();
+        if finite.len() < 2 {
+            return None;
+        }
+        let mid = finite.len() / 2;
+        let older = finite[..mid].iter().sum::<f64>() / mid as f64;
+        let newer = finite[mid..].iter().sum::<f64>() / (finite.len() - mid) as f64;
+        Some(newer + eps >= older)
+    }
+
+    /// Total uplink bytes across the window.
+    pub fn bytes_up(&self) -> u64 {
+        self.samples.iter().map(|s| s.bytes_up).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(round: usize, shard: usize, uploads: usize, stale: usize, acc: f64) -> FlushSample {
+        FlushSample {
+            round,
+            shard,
+            vtime: round as f64,
+            uploads,
+            staleness_sum: stale,
+            staleness_max: stale,
+            bytes_up: 100,
+            residual_l1: 1.0,
+            transmitted_l1: 3.0,
+            acc_proxy: acc,
+        }
+    }
+
+    #[test]
+    fn window_is_bounded_and_evicts_oldest() {
+        let mut bus = TelemetryBus::new(3);
+        for r in 1..=5 {
+            bus.push(sample(r, 0, 1, 0, 0.5));
+        }
+        assert_eq!(bus.len(), 3);
+        let rounds: Vec<usize> = bus.iter().map(|s| s.round).collect();
+        assert_eq!(rounds, vec![3, 4, 5]);
+        assert_eq!(bus.bytes_up(), 300);
+    }
+
+    #[test]
+    fn zero_capacity_still_keeps_one() {
+        let mut bus = TelemetryBus::new(0);
+        bus.push(sample(1, 0, 1, 0, 0.5));
+        bus.push(sample(2, 0, 1, 0, 0.5));
+        assert_eq!(bus.len(), 1);
+        assert_eq!(bus.iter().next().unwrap().round, 2);
+    }
+
+    #[test]
+    fn mean_staleness_is_upload_weighted() {
+        let mut bus = TelemetryBus::new(8);
+        assert!(bus.mean_staleness().is_nan());
+        bus.push(sample(1, 0, 3, 6, 0.5)); // mean 2 over 3 uploads
+        bus.push(sample(2, 0, 1, 0, 0.5)); // mean 0 over 1 upload
+        assert!((bus.mean_staleness() - 6.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_ratio_over_window_mass() {
+        let mut bus = TelemetryBus::new(8);
+        assert!(bus.residual_ratio().is_nan());
+        bus.push(sample(1, 0, 1, 0, 0.5)); // 1 residual vs 3 transmitted
+        assert!((bus.residual_ratio() - 0.25).abs() < 1e-12);
+        let mut dense = TelemetryBus::new(8);
+        dense.push(FlushSample { residual_l1: 0.0, transmitted_l1: 0.0, ..sample(1, 0, 1, 0, 0.5) });
+        assert!(dense.residual_ratio().is_nan(), "no mass must read as no signal");
+    }
+
+    #[test]
+    fn per_shard_flushes_counts_window_only() {
+        let mut bus = TelemetryBus::new(4);
+        for r in 1..=6 {
+            bus.push(sample(r, r % 2, 1, 0, 0.5));
+        }
+        // Window holds rounds 3..=6 -> shards [1, 0, 1, 0].
+        assert_eq!(bus.per_shard_flushes(2), vec![2, 2]);
+        assert_eq!(bus.per_shard_flushes(3), vec![2, 2, 0]);
+    }
+
+    #[test]
+    fn acc_improving_compares_window_halves() {
+        let mut bus = TelemetryBus::new(8);
+        assert_eq!(bus.acc_improving(1e-3), None);
+        bus.push(sample(1, 0, 1, 0, 0.4));
+        assert_eq!(bus.acc_improving(1e-3), None, "one finite proxy is not evidence");
+        bus.push(sample(2, 0, 1, 0, 0.5));
+        assert_eq!(bus.acc_improving(1e-3), Some(true));
+        let mut falling = TelemetryBus::new(8);
+        falling.push(sample(1, 0, 1, 0, 0.6));
+        falling.push(sample(2, 0, 1, 0, 0.3));
+        assert_eq!(falling.acc_improving(1e-3), Some(false));
+        // NaN proxies (nobody reported yet) are skipped, not poisonous.
+        let mut nan = TelemetryBus::new(8);
+        nan.push(sample(1, 0, 1, 0, f64::NAN));
+        nan.push(sample(2, 0, 1, 0, 0.4));
+        nan.push(sample(3, 0, 1, 0, 0.5));
+        assert_eq!(nan.acc_improving(1e-3), Some(true));
+    }
+}

@@ -25,6 +25,7 @@ use std::sync::{mpsc, Arc};
 use anyhow::{anyhow, Result};
 
 use crate::config::{CompressionMode, ExperimentConfig};
+use crate::control::{ControlPlane, FlushSample, KnobChange, Knobs};
 use crate::coordinator::aggregate::Aggregator;
 use crate::coordinator::policy::{AsyncGateContext, PolicyContext, SelectionPolicy};
 use crate::coordinator::registry::ClientRegistry;
@@ -33,7 +34,7 @@ use crate::model::quant::{Precision, QuantBuf};
 use crate::model::sparse::{sparse_payload_bytes, SparseDelta};
 use crate::data::synth::Dataset;
 use crate::fleet::{Client, ClientReport};
-use crate::metrics::{RoundRecord, RunMetrics};
+use crate::metrics::{ControlRecord, RoundRecord, RunMetrics};
 use crate::model::ParamVec;
 use crate::netsim::{LinkProfile, Message};
 use crate::runtime::{evaluate_with_params, Executor, ExecutorPool};
@@ -135,8 +136,22 @@ struct EngineState {
     skip_streak: usize,
     /// Model uploads currently on the wire.
     in_flight: usize,
-    /// Aggregator shard of each client (round-robin).
+    /// Aggregator shard of each client (round-robin at start; the
+    /// control plane's rebalancer may migrate clients at reconcile
+    /// boundaries).
     shard_of: Vec<usize>,
+    /// Clients per shard (kept in sync with `shard_of`).
+    shard_pop: Vec<usize>,
+    /// Whether each client has a model upload on the wire (used to pick
+    /// migratable clients — an in-flight upload pins its sender).
+    upload_in_flight: Vec<bool>,
+    /// Sparse top-k budget each client's outstanding upload was *sized*
+    /// with at request time. The flush encodes with this snapshot, not
+    /// the current `k_for`, so the frame on the wire always matches the
+    /// bytes and transfer time it was charged — even when the
+    /// compression controller retunes `k_fraction` while uploads are in
+    /// flight. Unused in dense mode.
+    upload_k: Vec<usize>,
     /// Per-shard buffer-of-K threshold (clamped to the shard population).
     shard_k: Vec<usize>,
     /// Per-shard aggregation buffers: (client, staleness tau, arrival).
@@ -172,6 +187,26 @@ fn push_bounded_history(
     history.push(entry);
     while history.len() > keep {
         pool.push(history.remove(0));
+    }
+}
+
+/// Mean of the finite entries of `xs` (NaN when none are finite) — the
+/// control plane's accuracy proxy over last-known probe accuracies,
+/// available identically on every execution strategy (unlike the global
+/// eval, which the threaded engine defers).
+fn mean_finite(xs: &[f64]) -> f64 {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for &x in xs {
+        if x.is_finite() {
+            sum += x;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
     }
 }
 
@@ -274,6 +309,17 @@ pub struct Server {
     pub metrics: RunMetrics,
     /// Availability registry (dropout model; all-active by default).
     pub registry: ClientRegistry,
+    /// Adaptive control plane (`[control]`): telemetry window +
+    /// deterministic controllers, polled at commit points. Fully inert
+    /// while `control.enabled = false`.
+    control: ControlPlane,
+    /// Last-known probe accuracy per client — the barriered engine's
+    /// accuracy proxy for control telemetry (the barrier-free engine
+    /// keeps its own in `EngineState::last_accs`). Persisting across
+    /// rounds keeps the proxy's sample composition stable under dropout:
+    /// a low-accuracy client going offline must not read as an accuracy
+    /// jump. Only maintained while the control plane is enabled.
+    last_accs: Vec<f64>,
     round: usize,
 }
 
@@ -300,6 +346,8 @@ impl Server {
         Server {
             net_rng: root_rng.fork("netsim"),
             registry,
+            control: ControlPlane::new(&cfg.control),
+            last_accs: vec![f64::NAN; n_clients],
             cfg,
             ctx,
             clients,
@@ -626,6 +674,41 @@ impl Server {
                 self.queue.now()
             );
         }
+        if self.control.enabled() {
+            // Same commit-time telemetry shape as the barrier-free
+            // engine: one sample per aggregation, shard always 0. The
+            // accuracy proxy reads *last-known* accs, so a client
+            // dropping offline never shifts the mean's composition.
+            for rep in &reports {
+                self.last_accs[rep.client_id] = rep.acc;
+            }
+            let (residual_l1, transmitted_l1) = self.sparse_flush_mass(n_selected);
+            self.control.observe(FlushSample {
+                round,
+                shard: 0,
+                vtime: self.queue.now(),
+                uploads: n_selected,
+                staleness_sum: record.upload_staleness.iter().sum(),
+                staleness_max: record.staleness_max(),
+                bytes_up: record.bytes_up,
+                residual_l1,
+                transmitted_l1,
+                acc_proxy: mean_finite(&self.last_accs),
+            });
+            if self.control.due(round) {
+                let now = self.queue.now();
+                self.control_tick_barriered(round, now);
+            }
+        }
+        if self.cfg.trace_events {
+            // The barriered engine has no per-event lifecycle to trace;
+            // one line per round keeps `--realtime` coherent alongside
+            // any control-decision lines.
+            self.metrics.event_trace.push((
+                self.queue.now(),
+                format!("round {round}  uploads={n_selected}/{n_active}  cum={cum_uploads}"),
+            ));
+        }
         self.metrics.push(record.clone());
         Ok(record)
     }
@@ -715,9 +798,13 @@ impl Server {
         pool: Option<&ExecutorPool>,
     ) -> Result<()> {
         let n = self.clients.len();
-        let k = self.cfg.async_engine.buffer_k.clamp(1, n);
-        let mixing = self.cfg.async_engine.mixing;
-        let upload_payload = self.upload_payload_bytes;
+        // `k` and `mixing` are engine-local state, not config reads: the
+        // control plane's staleness controller may retune both at commit
+        // points (`control_tick_async`). Upload payload bytes are read
+        // from `self` at each schedule so `k_fraction` retunes apply to
+        // the next upload on the wire.
+        let mut k = self.cfg.async_engine.buffer_k.clamp(1, n);
+        let mut mixing = self.cfg.async_engine.mixing;
         let knobs = RoundKnobs {
             passes: self.cfg.local_passes,
             batches: self.cfg.batches_per_pass,
@@ -771,6 +858,9 @@ impl Server {
             skip_streak: 0,
             in_flight: 0,
             shard_of,
+            shard_pop,
+            upload_in_flight: vec![false; n],
+            upload_k: vec![0usize; n],
             shard_k,
             buffers: (0..s_count).map(|_| Vec::with_capacity(k)).collect(),
             shard_version: vec![0u64; s_count],
@@ -846,6 +936,15 @@ impl Server {
                         )?,
                     };
                     st.backoff[client] = rep.compute_seconds.max(1e-9);
+                    if self.cfg.trace_events {
+                        self.metrics.event_trace.push((
+                            t,
+                            format!(
+                                "start c{client}  local_round={}  compute={:.2}s",
+                                st.local_rounds[client], rep.compute_seconds
+                            ),
+                        ));
+                    }
                     let uplink = self
                         .ctx
                         .link
@@ -880,6 +979,16 @@ impl Server {
                     st.window.train_loss_sum += rep.train_loss;
                     st.window.threshold = decision.threshold;
                     let force = !decision.upload && st.skip_streak >= 8 * n;
+                    if self.cfg.trace_events {
+                        self.metrics.event_trace.push((
+                            t,
+                            format!(
+                                "report c{client}  upload={}  in_flight={}",
+                                if decision.upload || force { "yes" } else { "no" },
+                                st.in_flight
+                            ),
+                        ));
+                    }
                     if decision.upload || force {
                         if force {
                             log_debug!(
@@ -889,6 +998,15 @@ impl Server {
                             );
                         }
                         st.skip_streak = 0;
+                        // Read the payload size per upload, not per run:
+                        // the compression controller may have retuned
+                        // `k_fraction` (and with it the sparse frame
+                        // size) since the engine started. The budget is
+                        // snapshotted alongside so the flush-time encode
+                        // matches the bytes charged here.
+                        let upload_payload = self.upload_payload_bytes;
+                        st.upload_k[client] =
+                            self.cfg.compression.k_for(self.global.len());
                         let req = self
                             .ctx
                             .link
@@ -899,6 +1017,7 @@ impl Server {
                         );
                         st.window.bytes_down += Message::UploadRequest.bytes();
                         st.in_flight += 1;
+                        st.upload_in_flight[client] = true;
                         // Uplink bytes ride on the event and count when
                         // the upload lands (see `EngineEvent::Upload`).
                         self.queue.schedule_at(
@@ -915,10 +1034,26 @@ impl Server {
                 }
                 EngineEvent::Upload { client, bytes } => {
                     st.in_flight -= 1;
+                    st.upload_in_flight[client] = false;
                     st.window.bytes_up += bytes;
                     let s = st.shard_of[client];
-                    let tau = (st.shard_version[s] - st.synced_version[client]) as usize;
+                    // saturating: a rebalanced client's synced version is
+                    // re-anchored to its new shard's counter, which a
+                    // concurrent flush of the old shard could outrun.
+                    let tau =
+                        st.shard_version[s].saturating_sub(st.synced_version[client]) as usize;
                     st.buffers[s].push((client, tau, t));
+                    if self.cfg.trace_events {
+                        self.metrics.event_trace.push((
+                            t,
+                            format!(
+                                "upload c{client}  +{bytes}B  shard={s}  buffer={}/{}  in_flight={}",
+                                st.buffers[s].len(),
+                                st.shard_k[s],
+                                st.in_flight
+                            ),
+                        ));
+                    }
                     if st.buffers[s].len() < st.shard_k[s] {
                         continue;
                     }
@@ -943,6 +1078,17 @@ impl Server {
                     res?;
                     if s_count > 1 && flushes % reconcile_every == 0 {
                         self.reconcile_shards(&mut shard_models, &st.shard_weight);
+                        // Adaptive shard rebalancing happens only at
+                        // reconcile boundaries: every replica was just
+                        // reset to the reconciled global, so a migrated
+                        // client never mixes replica lineages mid-stream.
+                        self.maybe_rebalance(&mut st, k, flushes, t);
+                    }
+                    // Knob controllers evaluate on the committed flush
+                    // stream (same deterministic position serially and
+                    // threaded).
+                    if self.control.due(flushes) {
+                        self.control_tick_async(&mut st, &mut k, &mut mixing, flushes, t);
                     }
                 }
             }
@@ -1005,9 +1151,10 @@ impl Server {
 
         // Buffered clients are blocked between upload and broadcast, so
         // encoding their (pristine) params now is byte-identical to
-        // encoding at send time.
+        // encoding at send time — including the sparse budget, which is
+        // the per-upload snapshot taken when the upload was sized and
+        // charged (`EngineState::upload_k`), not the current `k_for`.
         let mode = self.cfg.compression.mode;
-        let sparse_k = self.cfg.compression.k_for(model.len());
         let error_feedback = self.cfg.compression.error_feedback;
         for (j, &(c, _, _)) in st.buffers[shard].iter().enumerate() {
             match mode {
@@ -1016,7 +1163,7 @@ impl Server {
                 }
                 CompressionMode::TopK => self.clients[c].encode_sparse_upload(
                     precision,
-                    sparse_k,
+                    st.upload_k[c],
                     error_feedback,
                     &mut self.sparse_bufs[j],
                 ),
@@ -1193,6 +1340,34 @@ impl Server {
                 record.staleness_max()
             );
         }
+        if self.control.enabled() {
+            // The sample is built from commit-time state only — the
+            // deferred global eval of the threaded engine is
+            // deliberately NOT part of it.
+            let (residual_l1, transmitted_l1) = self.sparse_flush_mass(kk);
+            self.control.observe(FlushSample {
+                round: flush_idx,
+                shard,
+                vtime: now,
+                uploads: kk,
+                staleness_sum: st.buffers[shard].iter().map(|&(_, tau, _)| tau).sum(),
+                staleness_max: record.staleness_max(),
+                bytes_up: record.bytes_up,
+                residual_l1,
+                transmitted_l1,
+                acc_proxy: mean_finite(&st.last_accs),
+            });
+        }
+        if self.cfg.trace_events {
+            self.metrics.event_trace.push((
+                now,
+                format!(
+                    "flush #{flush_idx}  shard={shard}  uploads={kk}  stale_max={}  in_flight={}",
+                    record.staleness_max(),
+                    st.in_flight
+                ),
+            ));
+        }
         self.metrics.push(record);
         st.window = FlushWindow::default();
         st.buffers[shard].clear();
@@ -1214,6 +1389,250 @@ impl Server {
         for m in shard_models.iter_mut() {
             m.copy_from_slice(&self.global);
         }
+    }
+
+    /// Residual/transmitted selection-key mass over the first `count`
+    /// just-encoded sparse flush buffers — the compression controller's
+    /// signal, shared by both engines' commit paths. Runs on the
+    /// event-loop thread over encode-time state, so the sample is
+    /// identical for serial and threaded execution. `(0, 0)` — an empty
+    /// signal, never consumed — in dense mode and when the compression
+    /// controller is disarmed (the sums walk the full key scratch, O(n)
+    /// per buffered upload; don't pay that for a signal nobody reads).
+    fn sparse_flush_mass(&self, count: usize) -> (f64, f64) {
+        if self.cfg.compression.mode != CompressionMode::TopK || !self.cfg.control.compression {
+            return (0.0, 0.0);
+        }
+        let mut residual = 0.0f64;
+        let mut transmitted = 0.0f64;
+        for buf in self.sparse_bufs.iter().take(count) {
+            let sent = buf.sent_key_l1();
+            transmitted += sent;
+            residual += (buf.key_l1() - sent).max(0.0);
+        }
+        (residual, transmitted)
+    }
+
+    /// Apply a retuned `compression.k_fraction` and recompute the wire
+    /// size of one model upload under it; subsequent uploads (next
+    /// barriered round / next barrier-free upload request) ship the new
+    /// frame. Broadcasts stay dense regardless.
+    fn set_k_fraction(&mut self, to: f64) {
+        self.cfg.compression.k_fraction = to;
+        let n = self.global.len();
+        self.upload_payload_bytes = match self.cfg.compression.mode {
+            CompressionMode::Dense => self.ctx.model_payload_bytes,
+            CompressionMode::TopK => sparse_payload_bytes(
+                self.cfg.upload_precision,
+                self.cfg.compression.k_for(n),
+                n,
+            ),
+        };
+    }
+
+    /// Log one applied control decision (metrics stream + optional
+    /// realtime trace).
+    #[allow(clippy::too_many_arguments)]
+    fn push_control_record(
+        &mut self,
+        round: usize,
+        now: f64,
+        controller: &str,
+        knob: &str,
+        old: f64,
+        new: f64,
+        signal: f64,
+        client: Option<usize>,
+    ) {
+        log_debug!(
+            "server",
+            "control {controller}: {knob} {old:.4} -> {new:.4} (signal {signal:.4}, round {round})"
+        );
+        if self.cfg.trace_events {
+            self.metrics.event_trace.push((
+                now,
+                match client {
+                    Some(c) => format!(
+                        "control {controller}: c{c} {knob} {old:.0} -> {new:.0} (signal {signal:.3})"
+                    ),
+                    None => format!(
+                        "control {controller}: {knob} {old:.4} -> {new:.4} (signal {signal:.3})"
+                    ),
+                },
+            ));
+        }
+        self.metrics.control_records.push(ControlRecord {
+            round,
+            vtime: now,
+            controller: controller.to_string(),
+            knob: knob.to_string(),
+            old,
+            new,
+            signal,
+            client,
+        });
+    }
+
+    /// Barrier-free knob-controller tick: evaluate the staleness and
+    /// compression controllers against the telemetry window and apply
+    /// their decisions. Runs on the event-loop thread at a fixed
+    /// position of the committed flush stream, so serial == threaded
+    /// stays bitwise.
+    fn control_tick_async(
+        &mut self,
+        st: &mut EngineState,
+        k: &mut usize,
+        mixing: &mut MixingRule,
+        flushes: usize,
+        now: f64,
+    ) {
+        let knobs = Knobs {
+            buffer_k: *k,
+            alpha0: mixing.alpha0(),
+            k_fraction: self.cfg.compression.k_fraction,
+            topk: self.cfg.compression.mode == CompressionMode::TopK,
+            barrier_free: true,
+        };
+        for d in self.control.decide_knobs(knobs) {
+            match d.change {
+                KnobChange::BufferK { from, to } => {
+                    // Cap at the largest shard population: no shard's
+                    // threshold can exceed its population, so stepping
+                    // past the cap would be pure integrator windup —
+                    // phantom values the controller would have to unwind
+                    // one interval at a time before the buffer actually
+                    // responded again. A grow decision the cap pushes
+                    // back to (or below) the current value is a no-op,
+                    // never an inversion: with single-client shards the
+                    // effective thresholds are already pop-clamped and
+                    // there is nothing to batch more.
+                    let cap = st.shard_pop.iter().copied().max().unwrap_or(1);
+                    let capped = to.min(cap);
+                    if capped == *k || (to > from && capped < *k) {
+                        continue;
+                    }
+                    let to = capped;
+                    *k = to;
+                    // Re-clamp every shard's threshold to its population.
+                    // A buffer already holding >= the new threshold
+                    // flushes on its next upload arrival (flush checks
+                    // happen at arrival), which keeps the change a pure
+                    // commit-stream function.
+                    for (sk, &p) in st.shard_k.iter_mut().zip(&st.shard_pop) {
+                        *sk = to.clamp(1, p.max(1));
+                    }
+                    self.push_control_record(
+                        flushes,
+                        now,
+                        d.controller,
+                        "buffer_k",
+                        from as f64,
+                        to as f64,
+                        d.signal,
+                        None,
+                    );
+                }
+                KnobChange::Alpha0 { from, to } => {
+                    *mixing = mixing.with_alpha0(to);
+                    self.push_control_record(
+                        flushes,
+                        now,
+                        d.controller,
+                        "alpha0",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
+                KnobChange::KFraction { from, to } => {
+                    self.set_k_fraction(to);
+                    self.push_control_record(
+                        flushes,
+                        now,
+                        d.controller,
+                        "k_fraction",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Barriered knob-controller tick: only the compression controller
+    /// applies (buffer/alpha are barrier-free knobs; `decide_knobs`
+    /// already gates them on `barrier_free`).
+    fn control_tick_barriered(&mut self, round: usize, now: f64) {
+        let knobs = Knobs {
+            buffer_k: self.cfg.async_engine.buffer_k,
+            alpha0: self.cfg.async_engine.mixing.alpha0(),
+            k_fraction: self.cfg.compression.k_fraction,
+            topk: self.cfg.compression.mode == CompressionMode::TopK,
+            barrier_free: false,
+        };
+        for d in self.control.decide_knobs(knobs) {
+            if let KnobChange::KFraction { from, to } = d.change {
+                self.set_k_fraction(to);
+                self.push_control_record(
+                    round,
+                    now,
+                    d.controller,
+                    "k_fraction",
+                    from,
+                    to,
+                    d.signal,
+                    None,
+                );
+            }
+        }
+    }
+
+    /// Evaluate the shard rebalancer at a reconcile boundary and migrate
+    /// one client off the hottest shard if the windowed flush-rate skew
+    /// warrants it. The migrated client is the lowest-id client of the
+    /// hot shard with nothing pinned to it: no buffered upload and no
+    /// upload on the wire (a pending V report is fine — gating and
+    /// staleness follow the *current* shard at event time).
+    fn maybe_rebalance(&mut self, st: &mut EngineState, k: usize, flushes: usize, now: f64) {
+        let Some(m) = self.control.decide_rebalance(flushes, &st.shard_pop) else {
+            return;
+        };
+        let Some(c) = (0..st.shard_of.len()).find(|&c| {
+            st.shard_of[c] == m.from_shard
+                && !st.upload_in_flight[c]
+                && !st.buffers[m.from_shard].iter().any(|&(b, _, _)| b == c)
+        }) else {
+            return;
+        };
+        let w = self.clients[c].num_samples() as f64;
+        st.shard_of[c] = m.to_shard;
+        st.shard_pop[m.from_shard] -= 1;
+        st.shard_pop[m.to_shard] += 1;
+        st.shard_weight[m.from_shard] -= w;
+        st.shard_weight[m.to_shard] += w;
+        // Preserve the client's versions-behind estimate across the two
+        // shards' version counters.
+        let behind = st.shard_version[m.from_shard].saturating_sub(st.synced_version[c]);
+        st.synced_version[c] = st.shard_version[m.to_shard].saturating_sub(behind);
+        // Re-clamp buffer thresholds to the new populations.
+        for (sk, &p) in st.shard_k.iter_mut().zip(&st.shard_pop) {
+            *sk = k.clamp(1, p.max(1));
+        }
+        // Start the cooldown only for an *applied* migration.
+        self.control.note_migration(flushes);
+        self.push_control_record(
+            flushes,
+            now,
+            "rebalance",
+            "client_shard",
+            m.from_shard as f64,
+            m.to_shard as f64,
+            m.signal,
+            Some(c),
+        );
     }
 
     /// Resolve deferred pool-side evaluations into their records (threaded

@@ -62,6 +62,21 @@ impl MixingRule {
         }
     }
 
+    /// The same rule re-parameterized to base rate `alpha0` — the
+    /// adaptive control plane retunes only the base rate; the shape
+    /// parameters (exponent, grace, slope) are kept.
+    pub fn with_alpha0(&self, alpha0: f64) -> MixingRule {
+        match *self {
+            MixingRule::Constant { .. } => MixingRule::Constant { alpha: alpha0 },
+            MixingRule::Polynomial { exponent, .. } => {
+                MixingRule::Polynomial { alpha: alpha0, exponent }
+            }
+            MixingRule::Hinge { grace, slope, .. } => {
+                MixingRule::Hinge { alpha: alpha0, grace, slope }
+            }
+        }
+    }
+
     /// Base rate `alpha(0)` (the rule's upper bound).
     pub fn alpha0(&self) -> f64 {
         match *self {
@@ -132,6 +147,17 @@ mod tests {
             .validate()
             .is_err());
         assert!(MixingRule::default().validate().is_ok());
+    }
+
+    #[test]
+    fn with_alpha0_keeps_shape_parameters() {
+        let p = MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 }.with_alpha0(0.4);
+        assert_eq!(p, MixingRule::Polynomial { alpha: 0.4, exponent: 0.5 });
+        let h = MixingRule::Hinge { alpha: 0.9, grace: 3, slope: 0.25 }.with_alpha0(0.6);
+        assert_eq!(h, MixingRule::Hinge { alpha: 0.6, grace: 3, slope: 0.25 });
+        let c = MixingRule::Constant { alpha: 1.0 }.with_alpha0(0.2);
+        assert_eq!(c, MixingRule::Constant { alpha: 0.2 });
+        assert_eq!(c.alpha0(), 0.2);
     }
 
     #[test]

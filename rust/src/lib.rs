@@ -38,6 +38,7 @@
 //! that regenerate every table and figure of the paper.
 
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod device;

@@ -7,6 +7,8 @@
 //!          [--shards S] [--reconcile-every N] [--rounds N] [--seed N]
 //!          [--compression dense|topk] [--k-fraction F]
 //!          [--error-feedback true|false]
+//!          [--control on|off|staleness,compression,rebalance]
+//!          [--control-interval N] [--control-window N]
 //!          [--mock] [--out DIR] [--realtime SCALE]
 //! vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]
 //!     # one preset, all three algorithms, Table III rows + Fig. 4
@@ -29,7 +31,7 @@ use vafl::data::stats::DistributionTable;
 use vafl::data::synth::SynthConfig;
 use vafl::data::partition;
 use vafl::experiments::{self, figures, table3};
-use vafl::metrics::csv::{write_client_acc_csv, write_rounds_csv};
+use vafl::metrics::csv::{write_client_acc_csv, write_control_csv, write_rounds_csv};
 use vafl::model::ParamSpec;
 use vafl::util::rng::Rng;
 
@@ -117,6 +119,8 @@ fn print_usage() {
          \x20                 [--engine barriered|barrier_free] [--engine-threads N] [--shards S]\n\
          \x20                 [--reconcile-every N] [--rounds N] [--seed N] [--mock]\n\
          \x20                 [--compression dense|topk] [--k-fraction F] [--error-feedback true|false]\n\
+         \x20                 [--control on|off|staleness,compression,rebalance]\n\
+         \x20                 [--control-interval N] [--control-window N]\n\
          \x20                 [--out DIR] [--realtime SCALE] [--quiet]\n\
          \x20 vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]\n\
          \x20 vafl sweep      [--rounds N] [--out DIR] [--mock]\n\
@@ -167,6 +171,36 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
             other => bail!("--error-feedback {other:?} (true|false)"),
         };
     }
+    if let Some(c) = flags.get("control") {
+        // --control on|off enables/disables the whole plane; a comma
+        // list enables exactly that controller subset.
+        match c {
+            "on" | "all" | "true" => cfg.control.enabled = true,
+            "off" | "false" => cfg.control.enabled = false,
+            list => {
+                cfg.control.enabled = true;
+                cfg.control.staleness = false;
+                cfg.control.compression = false;
+                cfg.control.rebalance = false;
+                for part in list.split(',') {
+                    match part.trim() {
+                        "staleness" => cfg.control.staleness = true,
+                        "compression" => cfg.control.compression = true,
+                        "rebalance" => cfg.control.rebalance = true,
+                        other => bail!(
+                            "--control {other:?} (on|off|staleness,compression,rebalance)"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+    if let Some(i) = flags.get_usize("control-interval")? {
+        cfg.control.interval = i;
+    }
+    if let Some(w) = flags.get_usize("control-window")? {
+        cfg.control.window = w;
+    }
     if let Some(r) = flags.get_usize("rounds")? {
         cfg.rounds = r;
     }
@@ -183,7 +217,12 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
 }
 
 fn cmd_run(flags: &Flags) -> Result<()> {
-    let cfg = config_from_flags(flags)?;
+    let mut cfg = config_from_flags(flags)?;
+    // `--realtime` replays the committed engine-event stream when one is
+    // available; ask the engine to record it.
+    if flags.get("realtime").is_some() {
+        cfg.trace_events = true;
+    }
     println!(
         "running experiment {} / {} ({} clients, {:?}, {} rounds)",
         cfg.name,
@@ -203,12 +242,19 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         cfg.target_acc * 100.0,
         out.comm_times_to_target
     );
+    if cfg.control.enabled {
+        println!("control decisions = {}", out.metrics.control_records.len());
+    }
     if let Some(dir) = flags.get("out") {
         let base = format!("{dir}/{}_{}", cfg.name, cfg.algorithm.name());
         write_rounds_csv(&out.metrics, format!("{base}_rounds.csv"))?;
         write_client_acc_csv(&out.metrics, format!("{base}_clients.csv"))?;
         std::fs::write(format!("{base}.json"), out.metrics.to_json().to_string_pretty())?;
         println!("wrote {base}_rounds.csv, {base}_clients.csv, {base}.json");
+        if !out.metrics.control_records.is_empty() {
+            write_control_csv(&out.metrics, format!("{base}_control.csv"))?;
+            println!("wrote {base}_control.csv");
+        }
     }
     if let Some(scale) = flags.get("realtime") {
         let scale: f64 = scale.parse().context("--realtime SCALE")?;
@@ -217,9 +263,19 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// Replay the recorded virtual-time trace with wall-clock pacing.
+/// Replay the recorded virtual-time trace with wall-clock pacing: the
+/// committed engine-event stream when one was recorded (barrier-free
+/// engine under `trace_events` — in-flight uploads, buffer occupancy,
+/// live controller decisions), else the per-round record stream.
 fn replay_realtime(metrics: &vafl::metrics::RunMetrics, scale: f64) {
     println!("\nrealtime replay (x{scale} wall seconds per virtual second):");
+    if !metrics.event_trace.is_empty() {
+        println!("({} committed engine events)", metrics.event_trace.len());
+        vafl::sim::Trace::replay_points(&metrics.event_trace, scale, |t, label| {
+            println!("[vt {t:>8.2}s] {label}")
+        });
+        return;
+    }
     let mut trace = vafl::sim::Trace::default();
     for r in &metrics.records {
         trace.record(

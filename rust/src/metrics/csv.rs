@@ -58,6 +58,27 @@ pub fn write_client_acc_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()
     write_atomic(path.as_ref(), out.as_bytes())
 }
 
+/// Write the adaptive control plane's decision log: one row per applied
+/// decision, in commit order (`tools/check.sh` diffs this stream for
+/// drift via the adaptive golden snapshot).
+pub fn write_control_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
+    let mut out = String::from("round,vtime,controller,knob,old,new,signal,client\n");
+    for c in &m.control_records {
+        out.push_str(&format!(
+            "{},{:.6},{},{},{},{},{},{}\n",
+            c.round,
+            c.vtime,
+            c.controller,
+            c.knob,
+            fmt(c.old),
+            fmt(c.new),
+            fmt(c.signal),
+            c.client.map(|i| i.to_string()).unwrap_or_default(),
+        ));
+    }
+    write_atomic(path.as_ref(), out.as_bytes())
+}
+
 fn fmt(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.6}")
@@ -127,6 +148,42 @@ mod tests {
         assert!(lines[0].ends_with("stale_mean,stale_max,shard,spec_committed,spec_replayed"));
         assert!(lines[1].starts_with("1,1.250000,0.500000"));
         assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn control_csv_rows_match_decisions() {
+        let mut m = sample();
+        m.control_records.push(crate::metrics::ControlRecord {
+            round: 4,
+            vtime: 4.25,
+            controller: "staleness".into(),
+            knob: "buffer_k".into(),
+            old: 2.0,
+            new: 3.0,
+            signal: 3.5,
+            client: None,
+        });
+        m.control_records.push(crate::metrics::ControlRecord {
+            round: 6,
+            vtime: 7.5,
+            controller: "rebalance".into(),
+            knob: "client_shard".into(),
+            old: 1.0,
+            new: 0.0,
+            signal: 2.0,
+            client: Some(3),
+        });
+        let dir = std::env::temp_dir().join(format!("vafl-csv3-{}", std::process::id()));
+        let path = dir.join("control.csv");
+        write_control_csv(&m, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "round,vtime,controller,knob,old,new,signal,client");
+        assert!(lines[1].starts_with("4,4.250000,staleness,buffer_k,2.000000,3.000000,3.500000,"));
+        assert!(lines[1].ends_with(','), "no-client rows end with an empty cell");
+        assert!(lines[2].ends_with(",3"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

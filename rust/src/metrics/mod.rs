@@ -78,6 +78,30 @@ impl RoundRecord {
     }
 }
 
+/// One applied decision of the adaptive control plane (`control`
+/// module): which controller moved which knob, from what to what, and
+/// the window statistic that triggered it. Streamed alongside the round
+/// records (CSV via [`csv::write_control_csv`], JSON under `"control"`).
+#[derive(Debug, Clone)]
+pub struct ControlRecord {
+    /// Flush / round index after which the decision took effect.
+    pub round: usize,
+    /// Virtual time of the decision.
+    pub vtime: f64,
+    /// Controller that fired: "staleness" | "compression" | "rebalance".
+    pub controller: String,
+    /// Knob moved: "buffer_k" | "alpha0" | "k_fraction" | "client_shard".
+    pub knob: String,
+    /// Old and new knob values (shard ids for migrations).
+    pub old: f64,
+    pub new: f64,
+    /// The triggering window statistic (mean staleness, residual ratio,
+    /// or flush-rate skew).
+    pub signal: f64,
+    /// Migrated client (rebalance decisions only).
+    pub client: Option<usize>,
+}
+
 /// A full run's metrics.
 #[derive(Debug, Clone)]
 pub struct RunMetrics {
@@ -89,6 +113,13 @@ pub struct RunMetrics {
     /// denominator-free throughput measure — events/sec in the bench).
     /// Identical between serial and threaded execution.
     pub engine_events: usize,
+    /// Per-decision log of the adaptive control plane, in commit order
+    /// (empty while `control.enabled = false`). Identical between serial
+    /// and threaded execution.
+    pub control_records: Vec<ControlRecord>,
+    /// Committed engine-event trace `(vtime, label)` for the realtime
+    /// driver — recorded only under `trace_events` (barrier-free engine).
+    pub event_trace: Vec<(f64, String)>,
 }
 
 impl RunMetrics {
@@ -99,6 +130,8 @@ impl RunMetrics {
             target_acc,
             records: Vec::new(),
             engine_events: 0,
+            control_records: Vec::new(),
+            event_trace: Vec::new(),
         }
     }
 
@@ -286,6 +319,29 @@ impl RunMetrics {
             ("engine_events", Value::from(self.engine_events)),
             ("spec_committed", Value::from(spec_committed)),
             ("spec_replayed", Value::from(spec_replayed)),
+            (
+                "control",
+                Value::Arr(
+                    self.control_records
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("round", Value::from(c.round)),
+                                ("vtime", Value::from(c.vtime)),
+                                ("controller", Value::from(c.controller.as_str())),
+                                ("knob", Value::from(c.knob.as_str())),
+                                ("old", Value::from(c.old)),
+                                ("new", Value::from(c.new)),
+                                ("signal", finite_or_null(c.signal)),
+                                (
+                                    "client",
+                                    c.client.map(Value::from).unwrap_or(Value::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "rounds",
                 Value::Arr(
@@ -493,6 +549,39 @@ mod tests {
         assert_eq!(v.get("spec_committed").unwrap().as_usize(), Some(4));
         assert_eq!(v.get("total_bytes_up").unwrap().as_usize(), Some(300));
         assert_eq!(v.get("bytes_up_to_target").unwrap().as_usize(), Some(200));
+    }
+
+    #[test]
+    fn control_records_export_to_json() {
+        let mut m = run();
+        assert!(m.to_json().get("control").unwrap().as_arr().unwrap().is_empty());
+        m.control_records.push(ControlRecord {
+            round: 4,
+            vtime: 4.5,
+            controller: "compression".into(),
+            knob: "k_fraction".into(),
+            old: 0.25,
+            new: 0.5,
+            signal: 0.8,
+            client: None,
+        });
+        m.control_records.push(ControlRecord {
+            round: 8,
+            vtime: 9.0,
+            controller: "rebalance".into(),
+            knob: "client_shard".into(),
+            old: 0.0,
+            new: 1.0,
+            signal: 3.0,
+            client: Some(5),
+        });
+        let v = m.to_json();
+        let ctl = v.get("control").unwrap().as_arr().unwrap();
+        assert_eq!(ctl.len(), 2);
+        assert_eq!(ctl[0].get("knob").unwrap().as_str(), Some("k_fraction"));
+        assert_eq!(ctl[0].get("client").unwrap(), &Value::Null);
+        assert_eq!(ctl[1].get("client").unwrap().as_usize(), Some(5));
+        assert_eq!(ctl[1].get("controller").unwrap().as_str(), Some("rebalance"));
     }
 
     #[test]

@@ -106,6 +106,38 @@ impl SparseDelta {
         self.values.get(i)
     }
 
+    /// L1 mass of the last encode's full selection key
+    /// (`delta + residual`, all coordinates) — O(n) over the retained
+    /// scratch; only meaningful after [`SparseDelta::encode_topk`].
+    /// Together with [`SparseDelta::sent_key_l1`] this is the control
+    /// plane's residual-ratio signal: `(key_l1 - sent_key_l1) / key_l1`
+    /// is the fraction of delta mass the budget left behind (exactly the
+    /// residual written back when error feedback is on). Non-finite
+    /// coordinates contribute nothing.
+    pub fn key_l1(&self) -> f64 {
+        let mut sum = 0.0f64;
+        for &v in &self.key_scratch {
+            let a = v.abs() as f64;
+            if a.is_finite() {
+                sum += a;
+            }
+        }
+        sum
+    }
+
+    /// L1 mass of the transmitted subset of the last encode's selection
+    /// key — O(k) (see [`SparseDelta::key_l1`]).
+    pub fn sent_key_l1(&self) -> f64 {
+        let mut sum = 0.0f64;
+        for &i in &self.indices {
+            let a = self.key_scratch[i as usize].abs() as f64;
+            if a.is_finite() {
+                sum += a;
+            }
+        }
+        sum
+    }
+
     /// Exact wire size of this payload (see [`sparse_payload_bytes`]).
     pub fn payload_bytes(&self) -> u64 {
         sparse_payload_bytes(self.values.precision(), self.indices.len(), self.dim)
@@ -332,6 +364,33 @@ mod tests {
         // inf saturates).
         sd.encode_topk(Precision::Int8, &params, &base, None, 2);
         assert_eq!(sd.value(0), 0.0);
+    }
+
+    #[test]
+    fn key_mass_splits_into_sent_and_unsent() {
+        // Deltas |3|, |4|, |0.5|, |0| -> top-2 sends coords 0 and 1:
+        // sent key mass 7, total 7.5.
+        let params = vec![3.0f32, -4.0, 0.5, 0.0];
+        let base = vec![0.0f32; 4];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 2);
+        assert!((sd.key_l1() - 7.5).abs() < 1e-9);
+        assert!((sd.sent_key_l1() - 7.0).abs() < 1e-9);
+        // With error feedback, the unsent key mass is exactly the
+        // residual written back.
+        let mut r = vec![0.0f32; 4];
+        sd.encode_topk(Precision::F32, &params, &base, Some(&mut r), 2);
+        let unsent = sd.key_l1() - sd.sent_key_l1();
+        let residual_l1: f64 = r.iter().map(|&x| x.abs() as f64).sum();
+        assert!((unsent - residual_l1).abs() < 1e-9);
+        // Full-k: nothing is left behind.
+        sd.encode_topk(Precision::F32, &params, &base, None, 4);
+        assert!((sd.key_l1() - sd.sent_key_l1()).abs() < 1e-12);
+        // Non-finite keys are skipped in both sums.
+        let nan_params = vec![f32::NAN, -4.0, 0.5, 0.0];
+        sd.encode_topk(Precision::F32, &nan_params, &base, None, 1);
+        assert!((sd.key_l1() - 4.5).abs() < 1e-9);
+        assert_eq!(sd.sent_key_l1(), 0.0, "the NaN coord is selected but adds no mass");
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! Adaptive control plane tests: control-off bitwise identity with the
+//! pre-control engines, thread-count invariance of adaptive runs,
+//! determinism of the decision stream, and the reconcile-boundary-only
+//! migration invariant. (The controllers' decision functions themselves
+//! are unit-tested on synthetic windows in `src/control/controllers.rs`.)
+
+use vafl::config::{
+    Algorithm, AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, ControlConfig,
+    EngineMode, ExperimentConfig,
+};
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::metrics::{ControlRecord, RoundRecord};
+
+fn quick(which: char, algorithm: Algorithm, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = algorithm;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 120;
+    cfg.test_samples = 96;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+/// Barrier-free base: experiment b's 7-client fleet under the
+/// straggler-heavy WAN, buffer of 2, polynomial mixing.
+fn async_base(shards: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = quick('b', Algorithm::Vafl, rounds);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.link = vafl::netsim::LinkProfile::straggler_wan();
+    cfg.engine_opts.shards = shards;
+    cfg.engine_opts.reconcile_every = 3;
+    cfg
+}
+
+/// Bitwise record equality modulo the speculation telemetry (which by
+/// design records how the engine executed, not what it computed).
+fn assert_records_equal(x: &RoundRecord, y: &RoundRecord) {
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.shard, y.shard, "round {}", x.round);
+    assert_eq!(x.vtime.to_bits(), y.vtime.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.threshold.to_bits(), y.threshold.to_bits(), "round {}", x.round);
+    assert_eq!(x.idle_seconds.to_bits(), y.idle_seconds.to_bits(), "round {}", x.round);
+    assert_eq!(x.uploads, y.uploads);
+    assert_eq!(x.cum_uploads, y.cum_uploads);
+    assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+    assert_eq!(x.reports, y.reports);
+    assert_eq!(x.in_flight, y.in_flight);
+    assert_eq!(x.selected, y.selected);
+    assert_eq!(x.upload_staleness, y.upload_staleness);
+    let vb = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    assert_eq!(vb(&x.values), vb(&y.values), "round {}", x.round);
+    assert_eq!(vb(&x.client_accs), vb(&y.client_accs), "round {}", x.round);
+}
+
+/// Bitwise equality of two control decision streams.
+fn assert_control_equal(a: &[ControlRecord], b: &[ControlRecord]) {
+    assert_eq!(a.len(), b.len(), "decision counts differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        assert_eq!(x.controller, y.controller);
+        assert_eq!(x.knob, y.knob);
+        assert_eq!(x.old.to_bits(), y.old.to_bits());
+        assert_eq!(x.new.to_bits(), y.new.to_bits());
+        assert_eq!(x.signal.to_bits(), y.signal.to_bits());
+        assert_eq!(x.client, y.client);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control-off identity: the disabled plane is invisible
+// ---------------------------------------------------------------------------
+
+#[test]
+fn control_off_is_bitwise_identical_both_engines() {
+    // An explicit (but disabled) [control] section with non-default
+    // bounds must be indistinguishable from the default config — across
+    // both engines, serial and threaded, shards 1 and 4.
+    let explicit_off = ControlConfig {
+        enabled: false,
+        interval: 1,
+        window: 4,
+        staleness_target: 0.0,
+        staleness_deadband: 0.0,
+        rebalance_skew: 1.0,
+        ..Default::default()
+    };
+    let mut cases: Vec<ExperimentConfig> = Vec::new();
+    let mut barriered = quick('b', Algorithm::Vafl, 6);
+    barriered.engine = EngineMode::Barriered;
+    cases.push(barriered.clone());
+    let mut barriered_threaded = barriered;
+    barriered_threaded.engine_opts.threaded = true;
+    cases.push(barriered_threaded);
+    for shards in [1usize, 4] {
+        cases.push(async_base(shards, 8));
+        let mut threaded = async_base(shards, 8);
+        threaded.engine_opts.threaded = true;
+        threaded.engine_opts.workers = 2;
+        cases.push(threaded);
+    }
+    for base in cases {
+        let plain = experiments::run(&base).unwrap();
+        let mut off = base.clone();
+        off.control = explicit_off;
+        let with_off = experiments::run(&off).unwrap();
+        assert_eq!(plain.metrics.records.len(), with_off.metrics.records.len());
+        for (x, y) in plain.metrics.records.iter().zip(&with_off.metrics.records) {
+            assert_records_equal(x, y);
+        }
+        assert!(plain.metrics.control_records.is_empty());
+        assert!(with_off.metrics.control_records.is_empty());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive runs: decisions fire, bounds hold, streams stay deterministic
+// ---------------------------------------------------------------------------
+
+/// An adaptive configuration aggressive enough to guarantee decisions in
+/// a short run: staleness target 0 with no deadband (any observed
+/// staleness grows the buffer and damps alpha), every-flush evaluation.
+fn adaptive_base(shards: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = async_base(shards, rounds);
+    cfg.compression =
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, error_feedback: true };
+    cfg.control = ControlConfig {
+        enabled: true,
+        interval: 1,
+        window: 8,
+        staleness_target: 0.0,
+        staleness_deadband: 0.0,
+        buffer_k_min: 1,
+        buffer_k_max: 4,
+        alpha_min: 0.2,
+        alpha_max: 1.0,
+        k_fraction_min: 0.1,
+        k_fraction_max: 0.8,
+        k_step: 1.5,
+        residual_hi: 0.3,
+        residual_lo: 0.05,
+        rebalance_skew: 1.5,
+        ..Default::default()
+    };
+    cfg
+}
+
+#[test]
+fn adaptive_run_actually_decides_within_bounds() {
+    let out = experiments::run(&adaptive_base(1, 16)).unwrap();
+    let decisions = &out.metrics.control_records;
+    assert!(!decisions.is_empty(), "aggressive adaptive config never decided");
+    for d in decisions {
+        assert_ne!(d.old.to_bits(), d.new.to_bits(), "no-op decision logged: {d:?}");
+        assert!(d.round >= 1 && d.round <= 16);
+        assert!(d.vtime.is_finite());
+        match d.knob.as_str() {
+            "buffer_k" => {
+                assert_eq!(d.controller, "staleness");
+                assert!((1.0..=4.0).contains(&d.new), "buffer_k out of bounds: {d:?}");
+            }
+            "alpha0" => {
+                assert_eq!(d.controller, "staleness");
+                assert!((0.2..=1.0).contains(&d.new), "alpha0 out of bounds: {d:?}");
+            }
+            "k_fraction" => {
+                assert_eq!(d.controller, "compression");
+                assert!((0.1..=0.8).contains(&d.new), "k_fraction out of bounds: {d:?}");
+            }
+            other => panic!("unexpected knob {other:?} on an unsharded run"),
+        }
+    }
+    // The staleness controller must have fired (target 0 forces it as
+    // soon as any stale upload lands — guaranteed under gating with a
+    // buffer of 2, see engine_async.rs).
+    assert!(decisions.iter().any(|d| d.controller == "staleness"));
+}
+
+#[test]
+fn adaptive_control_changes_the_run() {
+    // The same config with the plane disabled must diverge from the
+    // adaptive run (otherwise the knobs are not actually wired).
+    let adaptive = experiments::run(&adaptive_base(1, 16)).unwrap();
+    let mut off = adaptive_base(1, 16);
+    off.control.enabled = false;
+    let fixed = experiments::run(&off).unwrap();
+    assert!(!adaptive.metrics.control_records.is_empty());
+    let same = adaptive
+        .metrics
+        .records
+        .iter()
+        .zip(&fixed.metrics.records)
+        .all(|(x, y)| x.vtime.to_bits() == y.vtime.to_bits() && x.bytes_up == y.bytes_up);
+    assert!(!same, "control decisions had no observable effect");
+}
+
+#[test]
+fn adaptive_run_is_thread_count_invariant() {
+    // Telemetry and decisions are built from commit-time state only, so
+    // serial and threaded adaptive runs commit identical records AND
+    // identical decision streams, for unsharded and sharded engines.
+    for shards in [1usize, 2] {
+        let serial = experiments::run(&adaptive_base(shards, 12)).unwrap();
+        for workers in [1usize, 4] {
+            let mut tcfg = adaptive_base(shards, 12);
+            tcfg.engine_opts.threaded = true;
+            tcfg.engine_opts.workers = workers;
+            let threaded = experiments::run(&tcfg).unwrap();
+            assert_eq!(serial.metrics.records.len(), threaded.metrics.records.len());
+            for (x, y) in serial.metrics.records.iter().zip(&threaded.metrics.records) {
+                assert_records_equal(x, y);
+            }
+            assert_control_equal(
+                &serial.metrics.control_records,
+                &threaded.metrics.control_records,
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_run_is_deterministic_and_seed_sensitive() {
+    let a = experiments::run(&adaptive_base(2, 12)).unwrap();
+    let b = experiments::run(&adaptive_base(2, 12)).unwrap();
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_equal(x, y);
+    }
+    assert_control_equal(&a.metrics.control_records, &b.metrics.control_records);
+    let mut seeded = adaptive_base(2, 12);
+    seeded.seed += 1;
+    let c = experiments::run(&seeded).unwrap();
+    let same = a
+        .metrics
+        .records
+        .iter()
+        .zip(&c.metrics.records)
+        .all(|(x, y)| x.vtime.to_bits() == y.vtime.to_bits());
+    assert!(!same, "seed had no effect on the adaptive event stream");
+}
+
+#[test]
+fn compression_controller_grows_k_under_residual_pressure() {
+    // Tiny budget + error feedback + a hair-trigger residual threshold:
+    // the controller must raise k_fraction (never lower it below the
+    // floor), and the later uploads must actually ship more bytes.
+    let mut cfg = adaptive_base(1, 16);
+    cfg.control.staleness = false;
+    cfg.control.rebalance = false;
+    cfg.control.residual_hi = 0.05;
+    cfg.control.residual_lo = 0.001;
+    let out = experiments::run(&cfg).unwrap();
+    let kf: Vec<&ControlRecord> = out
+        .metrics
+        .control_records
+        .iter()
+        .filter(|d| d.knob == "k_fraction")
+        .collect();
+    assert!(!kf.is_empty(), "compression controller never fired");
+    assert!(
+        kf.iter().all(|d| d.controller == "compression"),
+        "foreign controller moved k_fraction"
+    );
+    assert!(kf[0].new > kf[0].old, "first decision should grow the budget");
+    for d in &kf {
+        assert!((0.1..=0.8).contains(&d.new));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard rebalancing: migrations only at reconcile boundaries
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migrations_happen_only_at_reconcile_boundaries() {
+    // AFL (every report uploads) with uneven shards (7 clients over 2 ->
+    // 4/3 split) and a hair-trigger skew: migrations must fire, and
+    // every one must land exactly on a reconcile boundary.
+    let mut cfg = adaptive_base(2, 24);
+    cfg.algorithm = Algorithm::Afl;
+    cfg.compression = CompressionConfig::default();
+    cfg.control.staleness = false;
+    cfg.control.compression = false;
+    cfg.control.rebalance = true;
+    cfg.control.rebalance_skew = 1.0;
+    cfg.engine_opts.reconcile_every = 3;
+    let out = experiments::run(&cfg).unwrap();
+    let migrations: Vec<&ControlRecord> = out
+        .metrics
+        .control_records
+        .iter()
+        .filter(|d| d.controller == "rebalance")
+        .collect();
+    assert!(!migrations.is_empty(), "skew 1.0 on a 4/3 split never migrated");
+    for m in &migrations {
+        assert_eq!(m.round % 3, 0, "migration off a reconcile boundary: {m:?}");
+        assert_eq!(m.knob, "client_shard");
+        assert!(m.client.is_some(), "migration without a client: {m:?}");
+        assert!(m.old != m.new, "migration to the same shard: {m:?}");
+        assert!((0.0..2.0).contains(&m.old) && (0.0..2.0).contains(&m.new));
+    }
+    // The run itself must stay healthy after migrations.
+    assert_eq!(out.metrics.records.len(), 24);
+    assert!(out.metrics.records.iter().all(|r| r.shard < 2));
+}
+
+#[test]
+fn unsharded_runs_never_migrate() {
+    let mut cfg = adaptive_base(1, 12);
+    cfg.control.rebalance_skew = 1.0;
+    let out = experiments::run(&cfg).unwrap();
+    assert!(out
+        .metrics
+        .control_records
+        .iter()
+        .all(|d| d.controller != "rebalance"));
+}
+
+// ---------------------------------------------------------------------------
+// Barriered engine: compression controller works, others stay inert
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barriered_engine_adapts_k_fraction_only() {
+    let mut cfg = quick('a', Algorithm::Vafl, 12);
+    cfg.engine = EngineMode::Barriered;
+    cfg.compression =
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, error_feedback: true };
+    cfg.control = ControlConfig {
+        enabled: true,
+        interval: 1,
+        window: 8,
+        residual_hi: 0.05,
+        residual_lo: 0.001,
+        k_fraction_min: 0.1,
+        k_fraction_max: 0.8,
+        staleness_target: 0.0,
+        staleness_deadband: 0.0,
+        rebalance_skew: 1.0,
+        ..Default::default()
+    };
+    let out = experiments::run(&cfg).unwrap();
+    assert!(
+        !out.metrics.control_records.is_empty(),
+        "barriered compression controller never fired"
+    );
+    for d in &out.metrics.control_records {
+        assert_eq!(d.knob, "k_fraction", "barriered engine moved a barrier-free knob: {d:?}");
+        assert_eq!(d.controller, "compression");
+    }
+    // Threaded barriered execution commits the identical streams.
+    let mut tcfg = cfg.clone();
+    tcfg.engine_opts.threaded = true;
+    let threaded = experiments::run(&tcfg).unwrap();
+    for (x, y) in out.metrics.records.iter().zip(&threaded.metrics.records) {
+        assert_records_equal(x, y);
+    }
+    assert_control_equal(&out.metrics.control_records, &threaded.metrics.control_records);
+}
+
+// ---------------------------------------------------------------------------
+// Event trace for the realtime driver
+// ---------------------------------------------------------------------------
+
+#[test]
+fn event_trace_records_committed_stream_when_enabled() {
+    let mut cfg = adaptive_base(1, 16);
+    cfg.trace_events = true;
+    let out = experiments::run(&cfg).unwrap();
+    let trace = &out.metrics.event_trace;
+    assert!(!trace.is_empty(), "trace_events produced no trace");
+    // Timestamps are the committed event order: monotone non-decreasing.
+    for w in trace.windows(2) {
+        assert!(w[0].0 <= w[1].0, "trace time went backwards: {w:?}");
+    }
+    let has = |needle: &str| trace.iter().any(|(_, l)| l.contains(needle));
+    assert!(has("start c"), "no start events traced");
+    assert!(has("report c"), "no report events traced");
+    assert!(has("upload c"), "no upload events traced");
+    assert!(has("flush #"), "no flush events traced");
+    assert!(has("control "), "no controller decisions traced");
+    // Buffer occupancy is visible on upload labels.
+    assert!(has("buffer="), "no buffer occupancy traced");
+    // The trace is off by default and costs nothing.
+    let mut quiet = adaptive_base(1, 6);
+    quiet.trace_events = false;
+    let silent = experiments::run(&quiet).unwrap();
+    assert!(silent.metrics.event_trace.is_empty());
+}

@@ -18,12 +18,12 @@ use std::fmt::Write as _;
 use std::path::PathBuf;
 
 use vafl::config::{
-    Algorithm, AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, EngineMode,
-    ExperimentConfig,
+    Algorithm, AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, ControlConfig,
+    EngineMode, ExperimentConfig,
 };
 use vafl::coordinator::MixingRule;
 use vafl::experiments;
-use vafl::metrics::RoundRecord;
+use vafl::metrics::{ControlRecord, RoundRecord};
 
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
@@ -81,11 +81,34 @@ fn snapshot_line(r: &RoundRecord) -> String {
     s
 }
 
+/// One snapshot line per applied control decision, appended after the
+/// round lines — bit-exact, so `ControlRecord` drift (a controller
+/// firing earlier/later, a different knob value) fails the snapshot the
+/// same way numeric drift does. Configs with the plane disabled emit no
+/// such lines, so the pre-control snapshots are unchanged.
+fn control_line(c: &ControlRecord) -> String {
+    let bits = |x: f64| format!("{:016x}", x.to_bits());
+    format!(
+        "control round={} controller={} knob={} old={} new={} signal={} client={}",
+        c.round,
+        c.controller,
+        c.knob,
+        bits(c.old),
+        bits(c.new),
+        bits(c.signal),
+        c.client.map(|i| i as i64).unwrap_or(-1),
+    )
+}
+
 fn run_snapshot(name: &str, cfg: &ExperimentConfig) {
     let out = experiments::run(cfg).unwrap();
     let mut got = String::new();
     for r in &out.metrics.records {
         got.push_str(&snapshot_line(r));
+        got.push('\n');
+    }
+    for c in &out.metrics.control_records {
+        got.push_str(&control_line(c));
         got.push('\n');
     }
 
@@ -166,6 +189,58 @@ fn golden_barrier_free_topk_round_stream_is_stable() {
         error_feedback: true,
     };
     run_snapshot("barrier_free_topk", &cfg);
+}
+
+#[test]
+fn golden_barrier_free_adaptive_round_stream_is_stable() {
+    // Pins the adaptive control plane end to end: telemetry windows,
+    // staleness/compression controller decisions, reconcile-boundary
+    // shard migrations, and the ControlRecord stream (the `control`
+    // lines of the snapshot) on the sharded barrier-free engine with
+    // sparse top-k uploads.
+    let mut cfg = experiments::preset('b').unwrap();
+    cfg.algorithm = Algorithm::Vafl;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = 8;
+    cfg.samples_per_client = 96;
+    cfg.test_samples = 64;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    cfg.seed = 2021;
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.engine_opts.shards = 2;
+    cfg.engine_opts.reconcile_every = 2;
+    cfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.5,
+        error_feedback: true,
+    };
+    cfg.control = ControlConfig {
+        enabled: true,
+        interval: 2,
+        window: 8,
+        staleness_target: 0.5,
+        staleness_deadband: 0.25,
+        buffer_k_min: 1,
+        buffer_k_max: 4,
+        alpha_min: 0.2,
+        alpha_max: 1.0,
+        k_fraction_min: 0.1,
+        k_fraction_max: 1.0,
+        k_step: 1.5,
+        residual_hi: 0.3,
+        residual_lo: 0.05,
+        rebalance_skew: 1.0,
+        ..Default::default()
+    };
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    run_snapshot("barrier_free_adaptive", &cfg);
 }
 
 #[test]

@@ -42,11 +42,15 @@ if [[ "${1:-}" != "--no-tests" ]]; then
 
     # The threaded engine must commit a bitwise-identical record stream to
     # the serial engine, the sparse top-k path must stay bitwise dense at
-    # k_fraction = 1.0, and the golden snapshots (including the topk one)
-    # must hold, at both ends of the parallel-kernel worker range.
+    # k_fraction = 1.0, the adaptive control plane must be inert when off
+    # and thread-count invariant when on, and the golden snapshots
+    # (including the topk and adaptive ones — the adaptive snapshot's
+    # `control` lines pin the ControlRecord stream, so controller drift
+    # diffs here) must hold, at both ends of the parallel-kernel worker
+    # range.
     for t in 1 4; do
-        echo "== VAFL_THREADS=$t engine equivalence + sparse + golden =="
-        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test golden_run; then
+        echo "== VAFL_THREADS=$t engine equivalence + sparse + control + golden =="
+        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test control --test golden_run; then
             dump_golden_drift
             exit 1
         fi
