@@ -1,0 +1,258 @@
+//! Bench: fleet-scale memory + flush cost for the virtualized client
+//! fleet — a clients × active-set × edge-fanout grid up to 10^6 clients
+//! on the barrier-free engine.
+//!
+//!     cargo bench --bench fleet_scale [-- --json]
+//!
+//! Env: VAFL_BENCH_ROUNDS (flushes per run, default 6),
+//! VAFL_BENCH_MAX_CLIENTS (cap the sweep, default 1_000_000).
+//!
+//! `--json` (or `VAFL_BENCH_JSON=1`) writes every row to
+//! `BENCH_fleet_scale.json`: peak RSS (VmHWM) and RSS growth per run,
+//! wall-clock per flush, the compact bookkeeping footprints (parked
+//! records, u8 registry), and the fleet lifecycle counters
+//! (hydrations / parks / peak simultaneously-active).
+//!
+//! The headline claim: resident memory scales with the *concurrency
+//! window* (`fleet.active_set`), not fleet size — dense client state for
+//! a 10^6-client fleet would be n · dim · 4 B · 2 (params + sync base)
+//! ≈ 2.6 GB for the 320-param mock model alone, while the active-set
+//! runs keep at most `active_set` clients hydrated and park the rest as
+//! ~100 B records. The bench asserts the process high-water mark stays
+//! under half the dense floor.
+
+mod common;
+
+use vafl::config::{AsyncEngineConfig, Backend, EngineMode, ExperimentConfig};
+use vafl::coordinator::policy::make_policy;
+use vafl::coordinator::server::{build_server_with_data, Server};
+use vafl::coordinator::MixingRule;
+use vafl::data::synth::SynthConfig;
+use vafl::data::{LazyPartition, PartitionScheme};
+use vafl::fleet::FleetData;
+use vafl::runtime::{Executor, MockExecutor};
+use vafl::util::json::{obj, Value};
+use vafl::util::rng::Rng;
+
+/// Collects every bench row for the optional JSON artifact.
+#[derive(Default)]
+struct Recorder {
+    rows: Vec<Value>,
+}
+
+impl Recorder {
+    fn push(&mut self, fields: Vec<(&'static str, Value)>) {
+        self.rows.push(obj(fields));
+    }
+
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let doc = obj(vec![
+            ("bench", Value::Str("fleet_scale".into())),
+            ("rows", Value::Arr(self.rows.clone())),
+        ]);
+        std::fs::write(path, doc.to_string_pretty())
+    }
+}
+
+/// `(VmRSS, VmHWM)` in kB from `/proc/self/status`; `(0, 0)` off Linux.
+fn rss_kb() -> (u64, u64) {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return (0, 0);
+    };
+    let field = |key: &str| {
+        status
+            .lines()
+            .find(|l| l.starts_with(key))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(0)
+    };
+    (field("VmRSS:"), field("VmHWM:"))
+}
+
+fn fleet_cfg(clients: usize, active_set: usize, edge_fanout: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: format!("fleet_scale_n{clients}_a{active_set}_e{edge_fanout}"),
+        num_clients: clients,
+        partition: PartitionScheme::Iid,
+        samples_per_client: 64,
+        test_samples: 200,
+        probe_samples: 32,
+        rounds,
+        local_passes: 1,
+        batches_per_pass: 1,
+        lr: 0.5,
+        target_acc: 2.0, // never reached; this bench measures cost, not acc
+        seed: 11,
+        backend: Backend::Mock,
+        engine: EngineMode::BarrierFree,
+        async_engine: AsyncEngineConfig {
+            buffer_k: 32.min(active_set.max(1)),
+            mixing: MixingRule::Constant { alpha: 0.9 },
+        },
+        ..Default::default()
+    };
+    cfg.engine_opts.edge_fanout = edge_fanout;
+    cfg.fleet.active_set = active_set;
+    // O(n)-per-flush record columns would dominate the very memory this
+    // bench measures.
+    cfg.fleet.compact_records = true;
+    cfg
+}
+
+/// Build the server over a *lazy* partition (no shard pixels resident up
+/// front) and run the barrier-free engine to `cfg.rounds` flushes.
+fn run_one(cfg: &ExperimentConfig) -> anyhow::Result<(Server, f64, f64)> {
+    cfg.validate()?;
+    let root_rng = Rng::new(cfg.seed);
+    let synth_cfg = SynthConfig::default();
+    let build_start = std::time::Instant::now();
+    let lazy = LazyPartition::new(
+        cfg.partition,
+        cfg.num_clients,
+        cfg.samples_per_client,
+        &synth_cfg,
+        &root_rng,
+    );
+    let test = lazy.test_set(cfg.test_samples);
+    let mut exec = MockExecutor::standard();
+    let p = exec.param_count();
+    let policy = make_policy(cfg.algorithm, cfg.value_fn, cfg.eaflm);
+    let payload = cfg.upload_precision.payload_bytes(p);
+    let mut server = build_server_with_data(
+        cfg,
+        FleetData::Lazy(lazy),
+        test,
+        vec![0.0; p],
+        policy,
+        exec.batch_size(),
+        (2_000_000, 600_000),
+        payload,
+    );
+    let build_s = build_start.elapsed().as_secs_f64();
+    let run_start = std::time::Instant::now();
+    server.run_event_driven(&mut exec)?;
+    let run_s = run_start.elapsed().as_secs_f64();
+    Ok((server, build_s, run_s))
+}
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let mut rec = Recorder::default();
+    let want_json = std::env::args().any(|a| a == "--json")
+        || std::env::var("VAFL_BENCH_JSON").is_ok();
+    let rounds = std::env::var("VAFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6usize);
+    let max_clients = std::env::var("VAFL_BENCH_MAX_CLIENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000usize);
+
+    common::section("Fleet scale — clients x active-set x edge-fanout grid");
+    println!(
+        "{:>9} {:>7} {:>7} {:>9} {:>9} {:>9} {:>10} {:>10} {:>9} {:>9} {:>7}",
+        "clients",
+        "active",
+        "fanout",
+        "build_ms",
+        "run_ms",
+        "flush_ms",
+        "rss_kb",
+        "hwm_kb",
+        "parked_kb",
+        "hydr",
+        "peak"
+    );
+
+    let model_dim = MockExecutor::standard().param_count();
+    let mut largest_hwm_kb = 0u64;
+    let mut largest_n = 0usize;
+    for &clients in &[10_000usize, 100_000, 1_000_000] {
+        if clients > max_clients {
+            println!("(skipping n={clients}: VAFL_BENCH_MAX_CLIENTS={max_clients})");
+            continue;
+        }
+        for &active_set in &[256usize, 1024] {
+            for &edge_fanout in &[1usize, 8] {
+                let cfg = fleet_cfg(clients, active_set, edge_fanout, rounds);
+                let (rss_before, _) = rss_kb();
+                let (server, build_s, run_s) = run_one(&cfg)?;
+                let (rss_after, hwm) = rss_kb();
+                let fleet = server.fleet();
+                let parked_kb = fleet.approx_parked_bytes() / 1024;
+                let registry_b = server.registry.approx_bytes();
+                let flushes = server.metrics.records.len().max(1);
+                let flush_ms = run_s * 1e3 / flushes as f64;
+                assert!(
+                    fleet.peak_active() <= active_set,
+                    "active-set window violated: peak {} > {}",
+                    fleet.peak_active(),
+                    active_set
+                );
+                println!(
+                    "{:>9} {:>7} {:>7} {:>9.1} {:>9.1} {:>9.2} {:>10} {:>10} {:>9} {:>9} {:>7}",
+                    clients,
+                    active_set,
+                    edge_fanout,
+                    build_s * 1e3,
+                    run_s * 1e3,
+                    flush_ms,
+                    rss_after,
+                    hwm,
+                    parked_kb,
+                    fleet.hydrations(),
+                    fleet.peak_active()
+                );
+                if clients >= largest_n {
+                    largest_n = clients;
+                    largest_hwm_kb = largest_hwm_kb.max(hwm);
+                }
+                rec.push(vec![
+                    ("section", Value::Str("fleet_grid".into())),
+                    ("clients", Value::Num(clients as f64)),
+                    ("active_set", Value::Num(active_set as f64)),
+                    ("edge_fanout", Value::Num(edge_fanout as f64)),
+                    ("rounds", Value::Num(flushes as f64)),
+                    ("build_ms", Value::Num(build_s * 1e3)),
+                    ("run_ms", Value::Num(run_s * 1e3)),
+                    ("flush_ms", Value::Num(flush_ms)),
+                    ("rss_before_kb", Value::Num(rss_before as f64)),
+                    ("rss_after_kb", Value::Num(rss_after as f64)),
+                    ("vm_hwm_kb", Value::Num(hwm as f64)),
+                    ("parked_bytes", Value::Num(fleet.approx_parked_bytes() as f64)),
+                    ("registry_bytes", Value::Num(registry_b as f64)),
+                    ("hydrations", Value::Num(fleet.hydrations() as f64)),
+                    ("parks", Value::Num(fleet.parks() as f64)),
+                    ("peak_active", Value::Num(fleet.peak_active() as f64)),
+                    ("engine_events", Value::Num(server.metrics.engine_events as f64)),
+                ]);
+            }
+        }
+    }
+
+    // Sublinearity check: dense client state alone for the largest fleet
+    // would be n · dim · 4 B · 2 (params + sync base). The whole process
+    // must peak well under half of that.
+    if largest_n >= 1_000_000 {
+        let dense_floor_kb = (largest_n as u64 * model_dim as u64 * 8) / 1024;
+        println!(
+            "\npeak RSS {largest_hwm_kb} kB vs dense-fleet floor {dense_floor_kb} kB \
+             ({largest_n} clients x {model_dim} params)"
+        );
+        assert!(
+            largest_hwm_kb < dense_floor_kb / 2,
+            "fleet memory is not sublinear: peak RSS {largest_hwm_kb} kB >= half the \
+             dense floor {dense_floor_kb} kB"
+        );
+        println!("=> resident memory tracks the active-set window, not fleet size");
+    }
+
+    if want_json {
+        rec.write_json("BENCH_fleet_scale.json")?;
+        println!("wrote BENCH_fleet_scale.json ({} rows)", rec.rows.len());
+    }
+    Ok(())
+}

@@ -118,11 +118,18 @@ pub struct EngineConfig {
     /// many flushes (sample-count-weighted average; ignored at
     /// `shards == 1`).
     pub reconcile_every: usize,
+    /// Edge aggregators per shard (two-tier aggregation tree, barrier-free
+    /// engine only): uploads fold eagerly into per-edge running sums at
+    /// arrival, and a buffer flush combines the shard's edge accumulators
+    /// instead of re-reading every buffered payload — flush cost
+    /// O(edges · dim), not O(K · dim). 1 (the default) = the single-tier
+    /// engine, bitwise identical to previous builds.
+    pub edge_fanout: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { threaded: false, workers: 0, shards: 1, reconcile_every: 4 }
+        EngineConfig { threaded: false, workers: 0, shards: 1, reconcile_every: 4, edge_fanout: 1 }
     }
 }
 
@@ -156,14 +163,25 @@ impl CompressionMode {
 }
 
 /// Upload compression knobs — TOML section `[compression]`, CLI
-/// `--compression` / `--k-fraction` / `--error-feedback`.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// `--compression` / `--k-fraction` / `--layer-k-fractions` /
+/// `--error-feedback`.
+#[derive(Debug, Clone, PartialEq)]
 pub struct CompressionConfig {
     pub mode: CompressionMode,
     /// Fraction of parameters each sparse upload transmits
     /// (`k = ceil(k_fraction · n)`, clamped to `[1, n]`); must be in
     /// (0, 1]. Ignored in dense mode.
     pub k_fraction: f64,
+    /// Per-layer top-k budgets (extension): one fraction per entry of
+    /// `ParamSpec::layers`, selecting `ceil(f_l · size_l)` coordinates
+    /// *within each layer's parameter range* instead of one global
+    /// top-k over the whole vector. Empty (the default) = uniform
+    /// `k_fraction` over the flat vector. Must match the model's layer
+    /// count when non-empty; each fraction in (0, 1]. With every
+    /// fraction at 1.0 the payload is bitwise the dense path. The
+    /// adaptive compression controller only drives the flat
+    /// `k_fraction`; per-layer budgets are static for the run.
+    pub layer_k_fractions: Vec<f64>,
     /// Accumulate unsent delta mass into the per-client error-feedback
     /// residual (a coordinate's debt clears when it is transmitted; the
     /// residual survives model downloads — see `fleet::Client`). Ignored
@@ -173,7 +191,12 @@ pub struct CompressionConfig {
 
 impl Default for CompressionConfig {
     fn default() -> Self {
-        CompressionConfig { mode: CompressionMode::Dense, k_fraction: 1.0, error_feedback: true }
+        CompressionConfig {
+            mode: CompressionMode::Dense,
+            k_fraction: 1.0,
+            layer_k_fractions: Vec::new(),
+            error_feedback: true,
+        }
     }
 }
 
@@ -181,6 +204,26 @@ impl CompressionConfig {
     /// Transmitted coordinates per upload for an `n`-parameter model.
     pub fn k_for(&self, n: usize) -> usize {
         ((n as f64 * self.k_fraction).ceil() as usize).clamp(1, n.max(1))
+    }
+
+    /// Per-layer transmitted coordinates for layer sizes `sizes`, or
+    /// `None` when no per-layer budgets are configured (flat top-k).
+    pub fn layer_ks(&self, sizes: &[usize]) -> Option<Vec<usize>> {
+        if self.layer_k_fractions.is_empty() {
+            return None;
+        }
+        assert_eq!(
+            self.layer_k_fractions.len(),
+            sizes.len(),
+            "layer_k_fractions must match the model's layer count"
+        );
+        Some(
+            self.layer_k_fractions
+                .iter()
+                .zip(sizes)
+                .map(|(&f, &s)| ((s as f64 * f).ceil() as usize).clamp(1, s.max(1)))
+                .collect(),
+        )
     }
 }
 
@@ -215,6 +258,12 @@ pub struct ControlConfig {
     pub buffer_k_max: usize,
     pub alpha_min: f64,
     pub alpha_max: f64,
+    /// Multiplicative step of the staleness controller's mixing-rate
+    /// moves: too stale and `buffer_k` already at its floor → alpha is
+    /// multiplied by `alpha_step`; too fresh with `buffer_k` at its
+    /// ceiling → divided by it. Must be in (0, 1); smaller = more
+    /// aggressive. (Was hardcoded at 0.9 before this key existed.)
+    pub alpha_step: f64,
     /// Compression controller: step `k_fraction` by `k_step` within
     /// `[k_fraction_min, k_fraction_max]`, up when the window's
     /// error-feedback residual ratio exceeds `residual_hi`, down below
@@ -244,6 +293,7 @@ impl Default for ControlConfig {
             buffer_k_max: 16,
             alpha_min: 0.1,
             alpha_max: 1.0,
+            alpha_step: 0.9,
             k_fraction_min: 0.05,
             k_fraction_max: 1.0,
             k_step: 1.5,
@@ -285,6 +335,9 @@ impl ControlConfig {
                 self.alpha_max
             );
         }
+        if !(self.alpha_step.is_finite() && 0.0 < self.alpha_step && self.alpha_step < 1.0) {
+            bail!("control.alpha_step must be in (0, 1), got {}", self.alpha_step);
+        }
         if !(0.0 < self.k_fraction_min
             && self.k_fraction_min <= self.k_fraction_max
             && self.k_fraction_max <= 1.0)
@@ -312,6 +365,38 @@ impl ControlConfig {
             bail!("control.rebalance_skew must be finite and >= 1, got {}", self.rebalance_skew);
         }
         Ok(())
+    }
+}
+
+/// Virtualized-fleet knobs — TOML section `[fleet]`, CLI `--active-set`
+/// / `--residual-budget` / `--compact-records` (see the `fleet` module's
+/// "Virtualized fleet" docs).
+///
+/// With `active_set = 0` (the default) every client is hydrated up front
+/// and the engines are bitwise identical to previous builds. With
+/// `active_set = a > 0` (barrier-free engine only) at most `a` clients
+/// own dense training state at a time; the rest are parked as compact
+/// records and rotate in at buffer flushes, so resident memory scales
+/// with `a·dim + n·sizeof(ParkedClient)` instead of `n·dim`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Maximum simultaneously hydrated clients (0 = whole fleet; the
+    /// legacy, bitwise-identical mode). Clamped to the fleet size.
+    pub active_set: usize,
+    /// Error-feedback residual coordinates kept per parked client (the
+    /// top-|budget| by magnitude; the rest of the residual is dropped at
+    /// park time). Irrelevant in dense mode or with error feedback off.
+    pub residual_budget: usize,
+    /// Drop the O(n) per-round fleet snapshots (`fleet_values`,
+    /// `fleet_selected`, `client_accs`) from `RoundRecord`s. Required
+    /// reading for the goldens and several tests, so default off; turn
+    /// on for large-fleet runs where records dominate memory.
+    pub compact_records: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { active_set: 0, residual_budget: 32, compact_records: false }
     }
 }
 
@@ -419,6 +504,9 @@ pub struct ExperimentConfig {
     /// Adaptive control plane — TOML section `[control]`, CLI
     /// `--control` (disabled by default; see the `control` module).
     pub control: ControlConfig,
+    /// Virtualized fleet (active-set size, parked-record residual
+    /// budget, compact records) — TOML section `[fleet]`.
+    pub fleet: FleetConfig,
     /// Record the barrier-free engine's committed event stream as a
     /// `(vtime, label)` trace in `RunMetrics::event_trace` so the
     /// `--realtime` driver can replay in-flight uploads, buffer
@@ -458,6 +546,7 @@ impl Default for ExperimentConfig {
             async_engine: AsyncEngineConfig::default(),
             engine_opts: EngineConfig::default(),
             control: ControlConfig::default(),
+            fleet: FleetConfig::default(),
             trace_events: false,
         }
     }
@@ -474,6 +563,24 @@ fn get_nonneg(doc: &toml::Doc, key: &str) -> Result<Option<usize>> {
         Some(v) => Ok(Some(v as usize)),
         None => Ok(None),
     }
+}
+
+/// Parse a comma-separated list of per-layer fractions (the TOML subset
+/// has no arrays, so `[compression] layer_k_fractions` and the CLI's
+/// `--layer-k-fractions` both take e.g. `"0.5,0.1"`). Empty string =
+/// no per-layer budgets.
+pub fn parse_fraction_list(s: &str) -> Result<Vec<f64>> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .with_context(|| format!("bad fraction {:?} in list {s:?}", p.trim()))
+        })
+        .collect()
 }
 
 impl ExperimentConfig {
@@ -540,10 +647,41 @@ impl ExperimentConfig {
                  the barriered loop has a single aggregation point per round"
             );
         }
+        if self.engine_opts.edge_fanout == 0 {
+            bail!("engine.edge_fanout must be >= 1");
+        }
+        if self.engine_opts.edge_fanout > 1 && self.engine == EngineMode::Barriered {
+            bail!(
+                "engine.edge_fanout only applies to the barrier_free engine; \
+                 the barriered loop aggregates all reports at one point"
+            );
+        }
+        if self.fleet.active_set > 0 && self.engine == EngineMode::Barriered {
+            bail!(
+                "fleet.active_set only applies to the barrier_free engine; \
+                 the barriered loop needs every client hydrated each round"
+            );
+        }
         if !(self.compression.k_fraction > 0.0 && self.compression.k_fraction <= 1.0) {
             bail!(
                 "compression.k_fraction must be in (0, 1], got {}",
                 self.compression.k_fraction
+            );
+        }
+        for (l, &f) in self.compression.layer_k_fractions.iter().enumerate() {
+            if !(f > 0.0 && f <= 1.0) {
+                bail!("compression.layer_k_fractions[{l}] must be in (0, 1], got {f}");
+            }
+        }
+        if !self.compression.layer_k_fractions.is_empty()
+            && self.control.enabled
+            && self.control.compression
+            && self.compression.mode == CompressionMode::TopK
+        {
+            bail!(
+                "compression.layer_k_fractions is a static per-layer budget; \
+                 it cannot be combined with the adaptive compression controller \
+                 (disable control.compression or use the flat k_fraction)"
             );
         }
         if self.engine == EngineMode::BarrierFree && self.staleness_decay.is_some() {
@@ -718,6 +856,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("compression.k_fraction") {
             cfg.compression.k_fraction = v;
         }
+        if let Some(v) = doc.get_str("compression.layer_k_fractions") {
+            cfg.compression.layer_k_fractions = parse_fraction_list(v)?;
+        }
         if let Some(v) = doc.get_bool("compression.error_feedback") {
             cfg.compression.error_feedback = v;
         }
@@ -749,6 +890,19 @@ impl ExperimentConfig {
         }
         if let Some(v) = get_nonneg(&doc, "engine.reconcile_every")? {
             cfg.engine_opts.reconcile_every = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "engine.edge_fanout")? {
+            cfg.engine_opts.edge_fanout = v;
+        }
+        // [fleet] — virtualized client state (active-set rotation).
+        if let Some(v) = get_nonneg(&doc, "fleet.active_set")? {
+            cfg.fleet.active_set = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "fleet.residual_budget")? {
+            cfg.fleet.residual_budget = v;
+        }
+        if let Some(v) = doc.get_bool("fleet.compact_records") {
+            cfg.fleet.compact_records = v;
         }
         // [async_engine]
         if let Some(v) = doc.get_i64("async_engine.buffer_k") {
@@ -824,6 +978,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("control.alpha_max") {
             cfg.control.alpha_max = v;
+        }
+        if let Some(v) = doc.get_f64("control.alpha_step") {
+            cfg.control.alpha_step = v;
         }
         if let Some(v) = doc.get_f64("control.k_fraction_min") {
             cfg.control.k_fraction_min = v;
@@ -964,6 +1121,7 @@ mod tests {
             workers = 4
             shards = 2
             reconcile_every = 8
+            edge_fanout = 4
             [backend]
             kind = "mock"
             "#,
@@ -972,12 +1130,18 @@ mod tests {
         assert_eq!(cfg.engine, EngineMode::BarrierFree);
         assert_eq!(
             cfg.engine_opts,
-            EngineConfig { threaded: true, workers: 4, shards: 2, reconcile_every: 8 }
+            EngineConfig {
+                threaded: true,
+                workers: 4,
+                shards: 2,
+                reconcile_every: 8,
+                edge_fanout: 4,
+            }
         );
-        // Defaults: serial, auto workers, unsharded.
+        // Defaults: serial, auto workers, unsharded, single-tier.
         let d = EngineConfig::default();
         assert!(!d.threaded);
-        assert_eq!((d.workers, d.shards, d.reconcile_every), (0, 1, 4));
+        assert_eq!((d.workers, d.shards, d.reconcile_every, d.edge_fanout), (0, 1, 4, 1));
         // The legacy top-level string still works alongside the section
         // in the flat-map parser (not spec-TOML; kept for existing
         // configs), and the section's `mode` wins when both appear.
@@ -1049,6 +1213,7 @@ mod tests {
             CompressionConfig {
                 mode: CompressionMode::TopK,
                 k_fraction: 0.25,
+                layer_k_fractions: Vec::new(),
                 error_feedback: false,
             }
         );
@@ -1066,6 +1231,113 @@ mod tests {
         for bad in ["0.0", "-0.5", "1.5"] {
             let toml =
                 format!("[compression]\nk_fraction = {bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn layer_k_fractions_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [compression]
+            mode = "topk"
+            layer_k_fractions = "0.5, 0.1"
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.compression.layer_k_fractions, vec![0.5, 0.1]);
+        // Per-layer k: ceil(f * size), clamped to [1, size].
+        assert_eq!(cfg.compression.layer_ks(&[320, 10]), Some(vec![160, 1]));
+        // Empty = flat top-k.
+        assert_eq!(CompressionConfig::default().layer_ks(&[320, 10]), None);
+        // Out-of-range fractions and junk are rejected.
+        for bad in ["\"0.0,0.5\"", "\"1.5\"", "\"-0.1\"", "\"abc\""] {
+            let toml = format!(
+                "[compression]\nmode = \"topk\"\nlayer_k_fractions = {bad}\n[backend]\nkind = \"mock\""
+            );
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "{bad}");
+        }
+        // Static per-layer budgets conflict with the adaptive compression
+        // controller (which drives only the flat k_fraction).
+        assert!(ExperimentConfig::from_toml(
+            "[compression]\nmode = \"topk\"\nk_fraction = 0.25\nlayer_k_fractions = \"0.5,0.1\"\n\
+             [control]\nenabled = true\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[compression]\nmode = \"topk\"\nk_fraction = 0.25\nlayer_k_fractions = \"0.5,0.1\"\n\
+             [control]\nenabled = true\ncompression = false\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+        // parse_fraction_list round-trips the empty string.
+        assert!(parse_fraction_list("").unwrap().is_empty());
+        assert_eq!(parse_fraction_list(" 0.25 ,1.0").unwrap(), vec![0.25, 1.0]);
+    }
+
+    #[test]
+    fn fleet_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            engine = "barrier_free"
+            num_clients = 64
+            [fleet]
+            active_set = 8
+            residual_budget = 16
+            compact_records = true
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.fleet,
+            FleetConfig { active_set: 8, residual_budget: 16, compact_records: true }
+        );
+        // Defaults: whole-fleet hydration, budget 32, full records.
+        let d = FleetConfig::default();
+        assert_eq!((d.active_set, d.residual_budget), (0, 32));
+        assert!(!d.compact_records);
+        // Active-set rotation needs the barrier-free engine.
+        assert!(ExperimentConfig::from_toml(
+            "[fleet]\nactive_set = 4\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // ...but active_set = 0 (hydrate everything) is engine-agnostic.
+        assert!(ExperimentConfig::from_toml(
+            "[fleet]\nactive_set = 0\ncompact_records = true\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn edge_fanout_requires_barrier_free() {
+        assert!(ExperimentConfig::from_toml(
+            "[engine]\nedge_fanout = 4\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nedge_fanout = 0\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        let cfg = ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nedge_fanout = 4\n[backend]\nkind = \"mock\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.engine_opts.edge_fanout, 4);
+    }
+
+    #[test]
+    fn alpha_step_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml(
+            "[control]\nalpha_step = 0.5\n[backend]\nkind = \"mock\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.control.alpha_step, 0.5);
+        assert_eq!(ControlConfig::default().alpha_step, 0.9);
+        for bad in ["0.0", "1.0", "1.5", "-0.5"] {
+            let toml = format!("[control]\nalpha_step = {bad}\n[backend]\nkind = \"mock\"");
             assert!(ExperimentConfig::from_toml(&toml).is_err(), "{bad}");
         }
     }

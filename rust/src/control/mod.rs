@@ -76,7 +76,7 @@ impl ControlPlane {
                 k_max: cfg.buffer_k_max,
                 alpha_min: cfg.alpha_min,
                 alpha_max: cfg.alpha_max,
-                alpha_step: 0.9,
+                alpha_step: cfg.alpha_step,
             },
             compression: CompressionController {
                 k_min: cfg.k_fraction_min,

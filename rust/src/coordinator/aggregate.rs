@@ -190,6 +190,139 @@ impl Aggregator {
     }
 }
 
+/// One edge aggregator of the two-tier (edge -> shard) aggregation tree.
+///
+/// The barrier-free engine with `engine.edge_fanout > 1` folds each upload
+/// into its edge's running sums **at arrival time** (the uploading client
+/// is blocked between upload and broadcast, and the shard version only
+/// advances at flush, so the payload and its staleness weight are already
+/// final when the upload lands). Per coordinate `j` the edge keeps
+///
+/// ```text
+/// S[j] = Σ_i w_i · v_i[j]          (folded uploads i on this edge)
+/// T[j] = Σ_{i transmitting j} w_i  (sparse mode only; dense T ≡ W)
+/// ```
+///
+/// plus the scalar totals `W = Σ w_i`, `Σ alpha_i`, and the upload count.
+/// At flush, [`combine_edges`] mixes the shard's edge set into the replica
+/// in O(edges · dim) — independent of the buffer size K, so a deep buffer
+/// costs the flush no more than its edge fan-in:
+///
+/// ```text
+/// c      = min(Σ alpha / K, 1)                    (the legacy ᾱ clamp)
+/// out[j] = (c/W)·ΣS[j] + (1 − (c/W)·ΣT[j])·out[j]
+/// ```
+///
+/// which reproduces all four legacy flush cases (dense/sparse × ᾱ≥1/<1):
+/// the legacy path pre-normalizes upload weights to sum to ᾱ with a
+/// self-weight of 1−ᾱ, which is algebraically exactly this formula. The
+/// summation *order* differs from the per-client flush-time encode, so
+/// `edge_fanout > 1` is deterministic and thread-invariant but not bitwise
+/// against `edge_fanout = 1` (the default, which keeps the legacy path and
+/// the golden snapshots byte-stable).
+#[derive(Default)]
+pub struct EdgeAccum {
+    s: Vec<f64>,
+    t: Vec<f64>,
+    w: f64,
+    alpha: f64,
+    count: usize,
+}
+
+impl EdgeAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear for the next flush window. `sparse` chooses whether the
+    /// per-coordinate transmitted-mass vector `T` is kept (top-k mode) or
+    /// elided (dense mode, where `T ≡ W`).
+    pub fn reset(&mut self, dim: usize, sparse: bool) {
+        self.s.clear();
+        self.s.resize(dim, 0.0);
+        self.t.clear();
+        if sparse {
+            self.t.resize(dim, 0.0);
+        }
+        self.w = 0.0;
+        self.alpha = 0.0;
+        self.count = 0;
+    }
+
+    /// Fold one dense upload with aggregation weight `w` (sample count ×
+    /// staleness decay) and raw staleness weight `alpha`.
+    pub fn fold_dense(&mut self, payload: &QuantBuf, w: f64, alpha: f64) {
+        assert_eq!(payload.len(), self.s.len(), "edge fold dimension mismatch");
+        assert!(self.t.is_empty(), "dense fold into a sparse-mode edge");
+        payload.accumulate_dequant_range(0, w, &mut self.s);
+        self.w += w;
+        self.alpha += alpha;
+        self.count += 1;
+    }
+
+    /// Fold one sparse top-k upload (see [`EdgeAccum::fold_dense`]).
+    pub fn fold_sparse(&mut self, payload: &SparseDelta, w: f64, alpha: f64) {
+        assert_eq!(payload.dim(), self.s.len(), "edge fold dimension mismatch");
+        assert_eq!(self.t.len(), self.s.len(), "sparse fold into a dense-mode edge");
+        for (pos, &idx) in payload.indices().iter().enumerate() {
+            let j = idx as usize;
+            self.s[j] += w * payload.value(pos) as f64;
+            self.t[j] += w;
+        }
+        self.w += w;
+        self.alpha += alpha;
+        self.count += 1;
+    }
+
+    /// Uploads folded since the last reset.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Resident bytes of the accumulator vectors (fleet-scale bench).
+    pub fn approx_bytes(&self) -> usize {
+        (self.s.capacity() + self.t.capacity()) * std::mem::size_of::<f64>()
+    }
+}
+
+/// Combine one shard's edge accumulators into its replica `out` (see
+/// [`EdgeAccum`] for the formula). Panics if no edge folded any upload.
+/// Edges that saw no upload this window contribute zero mass and are
+/// skipped; the rest must agree on mode and dimension.
+pub fn combine_edges(edges: &[EdgeAccum], out: &mut [f32]) {
+    let kk: usize = edges.iter().map(|e| e.count).sum();
+    assert!(kk > 0, "edge combine over an empty flush window");
+    let w_total: f64 = edges.iter().map(|e| e.w).sum();
+    assert!(w_total > 0.0, "edge weights must sum to a positive value");
+    let alpha_sum: f64 = edges.iter().map(|e| e.alpha).sum();
+    let c = (alpha_sum / kk as f64).min(1.0);
+    let scale = c / w_total;
+    let live: Vec<&EdgeAccum> = edges.iter().filter(|e| e.count > 0).collect();
+    let sparse = live[0].t.len() == live[0].s.len() && !live[0].s.is_empty();
+    for e in &live {
+        assert_eq!(e.s.len(), out.len(), "edge/output dimension mismatch");
+        assert_eq!(e.t.is_empty(), !sparse, "mixed dense/sparse edges in one shard");
+    }
+    for j in 0..out.len() {
+        let mut s = 0.0f64;
+        let mut t = 0.0f64;
+        for e in &live {
+            s += e.s[j];
+            if sparse {
+                t += e.t[j];
+            }
+        }
+        if !sparse {
+            t = w_total;
+        }
+        out[j] = (scale * s + (1.0 - scale * t) * out[j] as f64) as f32;
+    }
+}
+
 /// Merge the payloads' sorted index streams over the coordinate range
 /// `start .. start + out_chunk.len()`, mixing each transmitted coordinate
 /// into `out_chunk` in payload order (see
@@ -377,5 +510,128 @@ mod tests {
         let mut agg = Aggregator::new();
         let mut out = vec![0.0f32; 1];
         agg.aggregate_sparse_payloads(&[], &[], 0.0, &mut out);
+    }
+
+    /// Legacy flush reference for the edge tests: pre-normalize weights to
+    /// sum to ᾱ and give 1−ᾱ to the current model (the ᾱ<1 branch of
+    /// `flush_shard`; with ᾱ≥1 weights pass through and the self slot is
+    /// absent).
+    fn legacy_flush_dense(
+        models: &[Vec<f32>],
+        weights: &[f64],
+        alphas: &[f64],
+        out: &mut [f32],
+    ) {
+        let abar: f64 = alphas.iter().sum::<f64>() / alphas.len() as f64;
+        let mut agg = Aggregator::new();
+        let mut views: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        if abar >= 1.0 {
+            let mut tmp = out.to_vec();
+            agg.aggregate_weighted(&views, weights, &mut tmp);
+            out.copy_from_slice(&tmp);
+        } else {
+            let total: f64 = weights.iter().sum();
+            let mut w: Vec<f64> = weights.iter().map(|&x| abar * x / total).collect();
+            let keep = out.to_vec();
+            views.push(&keep);
+            w.push(1.0 - abar);
+            let mut tmp = out.to_vec();
+            agg.aggregate_weighted(&views, &w, &mut tmp);
+            out.copy_from_slice(&tmp);
+        }
+    }
+
+    #[test]
+    fn edge_combine_dense_matches_legacy_flush() {
+        let mut rng = crate::util::rng::Rng::new(33);
+        let dim = 41;
+        let models: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let samples = [3.0f64, 7.0, 2.0, 5.0, 4.0];
+        for alphas in [vec![1.0f64; 5], vec![0.5, 0.25, 1.0, 0.125, 0.5]] {
+            let weights: Vec<f64> =
+                samples.iter().zip(&alphas).map(|(&n, &a)| n * a).collect();
+            let prior: Vec<f32> = (0..dim).map(|j| (j as f32).sin()).collect();
+            let mut want = prior.clone();
+            legacy_flush_dense(&models, &weights, &alphas, &mut want);
+            // Spread the five uploads over two edges.
+            let mut edges = vec![EdgeAccum::new(), EdgeAccum::new()];
+            for e in edges.iter_mut() {
+                e.reset(dim, false);
+            }
+            let mut buf = QuantBuf::new();
+            for (i, m) in models.iter().enumerate() {
+                buf.encode(Precision::F32, m);
+                edges[i % 2].fold_dense(&buf, weights[i], alphas[i]);
+            }
+            let mut got = prior.clone();
+            combine_edges(&edges, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "edge {a} vs legacy {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_combine_sparse_matches_scatter_reference() {
+        // Two sparse uploads over dim 4 on separate edges, ᾱ = 0.5:
+        // compare against aggregate_sparse_payloads with the legacy
+        // pre-normalized weights and self-weight 1−ᾱ.
+        let a_params = vec![10.0f32, 20.0, 0.0, 0.0];
+        let b_params = vec![0.0f32, 40.0, 30.0, 0.0];
+        let base = vec![0.0f32; 4];
+        let mut sa = SparseDelta::new();
+        let mut sb = SparseDelta::new();
+        sa.encode_topk(Precision::F32, &a_params, &base, None, 2);
+        sb.encode_topk(Precision::F32, &b_params, &base, None, 2);
+        let (wa, wb) = (1.0f64, 3.0);
+        let abar = 0.5f64;
+        let mut want = vec![1.0f32, 1.0, 1.0, 1.0];
+        let norm: Vec<f64> = vec![abar * wa / (wa + wb), abar * wb / (wa + wb)];
+        let mut agg = Aggregator::new();
+        agg.aggregate_sparse_payloads(
+            &[sa.clone(), sb.clone()],
+            &norm,
+            1.0 - abar,
+            &mut want,
+        );
+        let mut edges = vec![EdgeAccum::new(), EdgeAccum::new()];
+        for e in edges.iter_mut() {
+            e.reset(4, true);
+        }
+        edges[0].fold_sparse(&sa, wa, abar);
+        edges[1].fold_sparse(&sb, wb, abar);
+        let mut got = vec![1.0f32, 1.0, 1.0, 1.0];
+        combine_edges(&edges, &mut got);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-5, "edge {x} vs reference {y}");
+        }
+        assert_eq!(got[3], 1.0, "untransmitted coordinate must not move");
+    }
+
+    #[test]
+    fn edge_combine_skips_empty_edges() {
+        let m = vec![2.0f32, 4.0];
+        let mut buf = QuantBuf::new();
+        buf.encode(Precision::F32, &m);
+        let mut edges = vec![EdgeAccum::new(), EdgeAccum::new(), EdgeAccum::new()];
+        for e in edges.iter_mut() {
+            e.reset(2, false);
+        }
+        edges[1].fold_dense(&buf, 5.0, 1.0);
+        assert!(edges[0].is_empty() && !edges[1].is_empty());
+        let mut out = vec![0.0f32; 2];
+        combine_edges(&edges, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty flush window")]
+    fn edge_combine_empty_window_panics() {
+        let mut e = EdgeAccum::new();
+        e.reset(2, false);
+        let mut out = vec![0.0f32; 2];
+        combine_edges(&[e], &mut out);
     }
 }

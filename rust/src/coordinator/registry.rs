@@ -10,15 +10,6 @@
 
 use crate::util::rng::Rng;
 
-/// Availability status of one client.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ClientStatus {
-    /// Online: trains and reports this round.
-    Active,
-    /// Offline for the given remaining rounds.
-    Dropped { remaining: usize },
-}
-
 /// Dropout model parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DropoutModel {
@@ -42,7 +33,14 @@ impl DropoutModel {
 
 /// Fleet membership + availability tracking.
 pub struct ClientRegistry {
-    status: Vec<ClientStatus>,
+    /// Compact per-client availability: `0` = active, `k > 0` = offline
+    /// for `k` more steps. The geometric offline duration is capped at 50
+    /// steps (see [`advance`](Self::advance)), so a `u8` encodes every
+    /// reachable state exactly — one byte per client keeps the registry
+    /// at a million clients to a megabyte instead of the 16 MB the
+    /// previous enum representation cost (measured in
+    /// `benches/fleet_scale.rs` via [`ClientRegistry::approx_bytes`]).
+    status: Vec<u8>,
     model: DropoutModel,
     rng: Rng,
     /// Total (client, round) drop events, for metrics.
@@ -52,7 +50,7 @@ pub struct ClientRegistry {
 impl ClientRegistry {
     pub fn new(n_clients: usize, model: DropoutModel, rng: Rng) -> Self {
         ClientRegistry {
-            status: vec![ClientStatus::Active; n_clients],
+            status: vec![0u8; n_clients],
             model,
             rng,
             total_drop_rounds: 0,
@@ -68,11 +66,18 @@ impl ClientRegistry {
     }
 
     pub fn is_active(&self, client: usize) -> bool {
-        matches!(self.status[client], ClientStatus::Active)
+        self.status[client] == 0
     }
 
     pub fn active_count(&self) -> usize {
-        self.status.iter().filter(|s| matches!(s, ClientStatus::Active)).count()
+        self.status.iter().filter(|&&s| s == 0).count()
+    }
+
+    /// Resident bytes of the status storage (the fleet-scale bench
+    /// reports this so registry overhead at 10⁶ clients stays measured
+    /// and bounded).
+    pub fn approx_bytes(&self) -> usize {
+        self.status.capacity() * std::mem::size_of::<u8>()
     }
 
     /// Advance one client's drop/recover chain by a single step: offline
@@ -80,28 +85,21 @@ impl ClientRegistry {
     /// geometric number of steps with the configured mean. The shared
     /// sampler keeps the barriered ([`tick`](Self::tick)) and barrier-free
     /// ([`poll`](Self::poll)) engines on the same dropout model.
-    fn advance(status: ClientStatus, model: &DropoutModel, rng: &mut Rng) -> ClientStatus {
-        match status {
-            ClientStatus::Dropped { remaining } => {
-                if remaining <= 1 {
-                    ClientStatus::Active
-                } else {
-                    ClientStatus::Dropped { remaining: remaining - 1 }
-                }
+    /// Status encoding: `0` = active, `k > 0` = `k` steps still offline.
+    fn advance(status: u8, model: &DropoutModel, rng: &mut Rng) -> u8 {
+        if status > 0 {
+            status - 1
+        } else if model.drop_prob > 0.0 && rng.f64() < model.drop_prob {
+            // Geometric offline duration with the configured mean, capped
+            // at 50 steps (the cap is what makes u8 storage exact).
+            let p = 1.0 / model.mean_offline_rounds.max(1.0);
+            let mut dur = 1u8;
+            while rng.f64() > p && dur < 50 {
+                dur += 1;
             }
-            ClientStatus::Active => {
-                if model.drop_prob > 0.0 && rng.f64() < model.drop_prob {
-                    // Geometric offline duration with the configured mean.
-                    let p = 1.0 / model.mean_offline_rounds.max(1.0);
-                    let mut dur = 1usize;
-                    while rng.f64() > p && dur < 50 {
-                        dur += 1;
-                    }
-                    ClientStatus::Dropped { remaining: dur }
-                } else {
-                    ClientStatus::Active
-                }
-            }
+            dur
+        } else {
+            0
         }
     }
 
@@ -115,7 +113,7 @@ impl ClientRegistry {
         }
         if self.active_count() == 0 {
             // Revive the first client: quorum of one.
-            self.status[0] = ClientStatus::Active;
+            self.status[0] = 0;
         }
         self.total_drop_rounds += self.status.len() - self.active_count();
     }

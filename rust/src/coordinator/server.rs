@@ -20,20 +20,21 @@
 //! 5. The server evaluates the global model on its held-out test set
 //!    (Fig. 4/6 curves) and the metrics stack records the round.
 
+use std::collections::VecDeque;
 use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{CompressionMode, ExperimentConfig};
 use crate::control::{ControlPlane, FlushSample, KnobChange, Knobs};
-use crate::coordinator::aggregate::Aggregator;
+use crate::coordinator::aggregate::{combine_edges, Aggregator, EdgeAccum};
 use crate::coordinator::policy::{AsyncGateContext, PolicyContext, SelectionPolicy};
 use crate::coordinator::registry::ClientRegistry;
 use crate::coordinator::staleness::MixingRule;
 use crate::model::quant::{Precision, QuantBuf};
-use crate::model::sparse::{sparse_payload_bytes, SparseDelta};
+use crate::model::sparse::{sparse_payload_bytes, sparse_payload_bytes_layers, SparseDelta};
 use crate::data::synth::Dataset;
-use crate::fleet::{Client, ClientReport};
+use crate::fleet::{Client, ClientReport, Fleet, FleetData};
 use crate::metrics::{ControlRecord, RoundRecord, RunMetrics};
 use crate::model::ParamVec;
 use crate::netsim::{LinkProfile, Message};
@@ -170,6 +171,23 @@ struct EngineState {
     /// flushed model (the same re-anchoring semantics as the accuracy
     /// curve — see EXPERIMENTS.md §Engines).
     shard_history: Vec<Vec<Vec<f32>>>,
+    /// FIFO of parked clients awaiting a concurrency slot
+    /// (`fleet.active_set > 0` only; empty when the whole fleet is
+    /// hydrated, which keeps the engine on the legacy path bitwise). A
+    /// flushed client parks and joins the back; the front hydrates into
+    /// the freed slot (see `flush_shard`'s broadcast loop).
+    waiting: VecDeque<usize>,
+    /// Edge-tier accumulators, `shards × edge_fanout` of them, indexed
+    /// `shard * edge_fanout + edge` (`engine.edge_fanout > 1` only;
+    /// empty otherwise). Uploads fold in at arrival; flushes combine a
+    /// shard's edge slice in O(edges · dim), independent of buffer depth.
+    edges: Vec<EdgeAccum>,
+    /// Per-shard residual / transmitted selection-key mass accumulated at
+    /// upload arrival — edge mode's replacement for
+    /// `Server::sparse_flush_mass`, which reads flush-time encodes that
+    /// edge mode never performs. Zeroed when a flush samples them.
+    edge_residual: Vec<f64>,
+    edge_transmitted: Vec<f64>,
 }
 
 /// Append `model` to `history` (recycling retired entries through
@@ -236,7 +254,7 @@ fn run_local_round(
 /// when that event pops, so the committed record stream is independent of
 /// worker timing. No-op on the serial engine (`pool == None`).
 fn dispatch_speculation(
-    clients: &[Client],
+    fleet: &Fleet,
     st: &mut EngineState,
     pool: Option<&ExecutorPool>,
     client: usize,
@@ -244,8 +262,8 @@ fn dispatch_speculation(
 ) -> Result<()> {
     let Some(pool) = pool else { return Ok(()) };
     debug_assert!(st.spec[client].is_none(), "double dispatch for client {client}");
-    let ghost = clients[client].speculate();
-    let epoch = clients[client].epoch();
+    let ghost = fleet.client(client).speculate();
+    let epoch = fleet.client(client).epoch();
     let round = st.local_rounds[client] + 1;
     let (tx, rx) = mpsc::channel();
     pool.submit(Box::new(move |exec| {
@@ -275,7 +293,12 @@ pub struct ServerContext {
 pub struct Server {
     cfg: ExperimentConfig,
     ctx: ServerContext,
-    clients: Vec<Client>,
+    /// The client fleet: in-flight clients hold full dense state, the
+    /// parked majority is a compact record hydrated on dispatch (see
+    /// `crate::fleet`). With `fleet.active_set = 0` every client is
+    /// hydrated at construction and the engines behave exactly as if the
+    /// fleet were a plain `Vec<Client>`.
+    fleet: Fleet,
     policy: Box<dyn SelectionPolicy>,
     /// Current global model theta^t.
     pub global: ParamVec,
@@ -285,16 +308,30 @@ pub struct Server {
     /// allocate (see EXPERIMENTS.md §Perf).
     history_pool: Vec<Vec<f32>>,
     agg: Aggregator,
-    /// Reusable per-upload wire buffers (one per fleet slot, plus one
-    /// extra slot the barrier-free engine uses to fold the current global
-    /// model into a staleness-weighted mix) — uploads are encoded here and
-    /// aggregated by the fused dequantize-accumulate path, never staged as
-    /// dense `Vec<f32>`.
+    /// Reusable per-upload wire buffers, grown lazily to the largest
+    /// aggregation fan-in seen (plus one extra slot the barrier-free
+    /// engine uses to fold the current global model into a
+    /// staleness-weighted mix) — never to fleet size, so a million-client
+    /// fleet does not pay a million idle codec buffers
+    /// (`benches/fleet_scale.rs`). Uploads are encoded here and
+    /// aggregated by the fused dequantize-accumulate path, never staged
+    /// as dense `Vec<f32>`.
     upload_bufs: Vec<QuantBuf>,
-    /// Reusable sparse wire buffers for `compression.mode = topk` (one
-    /// per fleet slot; the mix's self-weight replaces the extra global
-    /// slot of the dense path). Unused in dense mode.
+    /// Reusable sparse wire buffers for `compression.mode = topk`, grown
+    /// like `upload_bufs` (the mix's self-weight replaces the extra
+    /// global slot of the dense path). Unused in dense mode.
     sparse_bufs: Vec<SparseDelta>,
+    /// Scratch wire buffers for the edge tier's arrival-time encode
+    /// (`engine.edge_fanout > 1`): each payload folds into its edge
+    /// accumulator immediately, so one buffer serves every upload.
+    edge_buf: QuantBuf,
+    edge_sparse: SparseDelta,
+    /// The model's per-layer parameter sizes (from `ParamSpec::layers`,
+    /// installed by [`Server::set_layer_sizes`]) and the matching
+    /// per-layer top-k budgets from `compression.layer_k_fractions`.
+    /// `layer_ks` empty = flat top-k (the legacy single-budget race).
+    layer_sizes: Vec<usize>,
+    layer_ks: Vec<usize>,
     /// Wire bytes of one model upload under the configured compression
     /// (dense: `ctx.model_payload_bytes`; topk: the exact sparse frame
     /// for k of n values). Broadcasts are always dense.
@@ -327,14 +364,22 @@ impl Server {
     pub fn new(
         cfg: ExperimentConfig,
         ctx: ServerContext,
-        clients: Vec<Client>,
+        mut fleet: Fleet,
         policy: Box<dyn SelectionPolicy>,
         init_params: ParamVec,
         root_rng: &Rng,
     ) -> Self {
         let metrics = RunMetrics::new(&cfg.name, policy.name(), cfg.target_acc);
         let history = vec![init_params.clone()];
-        let n_clients = clients.len();
+        let n_clients = fleet.len();
+        // Hydrate-everything mode: materialize the whole fleet up front —
+        // the engines then behave (and the goldens stay) exactly as
+        // before lazy state existed. With `active_set > 0` (barrier-free
+        // only, config-validated) the engine hydrates its initial window
+        // itself and the rest stay compact records.
+        if cfg.fleet.active_set == 0 {
+            fleet.hydrate_all(&init_params);
+        }
         let registry = ClientRegistry::new(n_clients, cfg.dropout, root_rng.fork("dropout"));
         let upload_payload_bytes = match cfg.compression.mode {
             CompressionMode::Dense => ctx.model_payload_bytes,
@@ -350,16 +395,20 @@ impl Server {
             last_accs: vec![f64::NAN; n_clients],
             cfg,
             ctx,
-            clients,
+            fleet,
             policy,
             global: init_params,
             history,
             history_pool: Vec::new(),
             agg: Aggregator::new(),
-            upload_bufs: vec![QuantBuf::new(); n_clients + 1],
-            sparse_bufs: vec![SparseDelta::new(); n_clients],
+            upload_bufs: Vec::new(),
+            sparse_bufs: Vec::new(),
+            edge_buf: QuantBuf::new(),
+            edge_sparse: SparseDelta::new(),
+            layer_sizes: Vec::new(),
+            layer_ks: Vec::new(),
             upload_payload_bytes,
-            upload_weights: Vec::with_capacity(n_clients),
+            upload_weights: Vec::new(),
             bcast_buf: QuantBuf::new(),
             bcast_model: Vec::new(),
             queue: EventQueue::new(),
@@ -373,12 +422,63 @@ impl Server {
     }
 
     pub fn num_clients(&self) -> usize {
-        self.clients.len()
+        self.fleet.len()
     }
 
-    /// Immutable view of a client (tests/diagnostics).
+    /// Immutable view of a client (tests/diagnostics). Panics if the
+    /// client is parked — use [`Server::fleet`] for park-aware access.
     pub fn client(&self, i: usize) -> &Client {
-        &self.clients[i]
+        self.fleet.client(i)
+    }
+
+    /// The fleet (tests/diagnostics/benches: parked-record accounting,
+    /// hydration counters).
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Grow the reusable per-upload wire buffers to at least `count`
+    /// slots (plus the dense path's trailing self slot). Sized by the
+    /// actual aggregation fan-in, not fleet size.
+    fn ensure_wire_slots(&mut self, count: usize) {
+        match self.cfg.compression.mode {
+            CompressionMode::Dense => {
+                if self.upload_bufs.len() < count + 1 {
+                    self.upload_bufs.resize_with(count + 1, QuantBuf::new);
+                }
+            }
+            CompressionMode::TopK => {
+                if self.sparse_bufs.len() < count {
+                    self.sparse_bufs.resize_with(count, SparseDelta::new);
+                }
+            }
+        }
+    }
+
+    /// Install the model's per-layer parameter layout (the PJRT backend
+    /// passes `ParamSpec::layers`; the mock backend registers one flat
+    /// layer). When `compression.layer_k_fractions` is configured this
+    /// activates per-layer top-k selection and re-prices the upload frame
+    /// via [`sparse_payload_bytes_layers`]; otherwise it only remembers
+    /// the layout. Call once after construction, before running.
+    pub fn set_layer_sizes(&mut self, sizes: Vec<usize>) {
+        assert_eq!(
+            sizes.iter().sum::<usize>(),
+            self.global.len(),
+            "layer sizes must partition the model"
+        );
+        match self.cfg.compression.layer_ks(&sizes) {
+            Some(ks) if self.cfg.compression.mode == CompressionMode::TopK => {
+                self.upload_payload_bytes =
+                    sparse_payload_bytes_layers(self.cfg.upload_precision, &ks, &sizes);
+                self.layer_ks = ks;
+                self.layer_sizes = sizes;
+            }
+            _ => {
+                self.layer_ks.clear();
+                self.layer_sizes = sizes;
+            }
+        }
     }
 
     /// Run one communication round (sequential local rounds). Returns the
@@ -391,9 +491,12 @@ impl Server {
         // neither train nor report this round.
         self.registry.tick();
 
-        // --- 1. Local rounds + V reports (Algorithm 1 lines 4-7).
+        // --- 1. Local rounds + V reports (Algorithm 1 lines 4-7). The
+        // barriered engine always runs fully hydrated (`fleet.active_set`
+        // is barrier-free-only, config-validated), so every slot is live.
         let mut reports: Vec<ClientReport> = Vec::new();
-        for (i, client) in self.clients.iter_mut().enumerate() {
+        for i in 0..self.fleet.len() {
+            let client = self.fleet.client_mut(i);
             if !self.registry.is_active(i) {
                 client.mark_stale();
                 continue;
@@ -430,10 +533,10 @@ impl Server {
         let (tf, ef) = (self.ctx.train_flops, self.ctx.eval_flops);
         let registry = &self.registry;
         let mut slots: Vec<Option<Result<ClientReport>>> =
-            (0..self.clients.len()).map(|_| None).collect();
+            (0..self.fleet.len()).map(|_| None).collect();
         std::thread::scope(|scope| {
             for ((i, client), slot) in
-                self.clients.iter_mut().enumerate().zip(slots.iter_mut())
+                self.fleet.iter_hydrated_mut().zip(slots.iter_mut())
             {
                 if !registry.is_active(i) {
                     client.mark_stale();
@@ -471,7 +574,7 @@ impl Server {
         exec: &mut dyn Executor,
     ) -> Result<RoundRecord> {
         let round = self.round;
-        let n = self.clients.len();
+        let n = self.fleet.len();
         let round_start = self.queue.now();
         // Uplink of each report (68 B) lands after the client's compute.
         let report_arrival: Vec<f64> = reports
@@ -536,6 +639,7 @@ impl Server {
         let mut agg_time = last_arrival;
         let mut upload_staleness: Vec<usize> = Vec::with_capacity(n_selected);
         if n_selected > 0 {
+            self.ensure_wire_slots(n_selected);
             let payload = self.upload_payload_bytes;
             let precision = self.cfg.upload_precision;
             let mode = self.cfg.compression.mode;
@@ -545,7 +649,7 @@ impl Server {
             let mut used = 0usize;
             for i in 0..n {
                 if fleet_selected[i] {
-                    upload_staleness.push(self.clients[i].staleness);
+                    upload_staleness.push(self.fleet.client(i).staleness);
                     let req = self
                         .ctx
                         .link
@@ -558,22 +662,36 @@ impl Server {
                     bytes_down += Message::UploadRequest.bytes();
                     bytes_up += payload;
                     match mode {
-                        CompressionMode::Dense => self.clients[i]
+                        CompressionMode::Dense => self
+                            .fleet
+                            .client_mut(i)
                             .encode_upload(precision, &mut self.upload_bufs[used]),
-                        CompressionMode::TopK => self.clients[i].encode_sparse_upload(
-                            precision,
-                            sparse_k,
-                            error_feedback,
-                            &mut self.sparse_bufs[used],
-                        ),
+                        CompressionMode::TopK if self.layer_ks.is_empty() => {
+                            self.fleet.client_mut(i).encode_sparse_upload(
+                                precision,
+                                sparse_k,
+                                error_feedback,
+                                &mut self.sparse_bufs[used],
+                            )
+                        }
+                        CompressionMode::TopK => {
+                            self.fleet.client_mut(i).encode_sparse_upload_layers(
+                                precision,
+                                &self.layer_sizes,
+                                &self.layer_ks,
+                                error_feedback,
+                                &mut self.sparse_bufs[used],
+                            )
+                        }
                     }
                     // FedAvg weight n_i, optionally decayed by staleness
                     // (FedAsync-style extension; None = paper's Alg. 1).
                     let decay = self
                         .cfg
                         .staleness_decay
-                        .map_or(1.0, |d| d.powi(self.clients[i].staleness as i32));
-                    self.upload_weights.push(self.clients[i].num_samples() as f64 * decay);
+                        .map_or(1.0, |d| d.powi(self.fleet.client(i).staleness as i32));
+                    self.upload_weights
+                        .push(self.fleet.client(i).num_samples() as f64 * decay);
                     used += 1;
                 }
             }
@@ -610,7 +728,7 @@ impl Server {
             Some(&self.bcast_model)
         };
         let mut bcast_done = agg_time;
-        for (i, client) in self.clients.iter_mut().enumerate() {
+        for i in 0..n {
             if n_selected > 0 && fleet_selected[i] {
                 let down = self.ctx.link.transfer_seconds(
                     &Message::ModelBroadcast {
@@ -620,9 +738,9 @@ impl Server {
                 );
                 bcast_done = bcast_done.max(agg_time + down);
                 bytes_down += self.ctx.model_payload_bytes;
-                client.sync(bcast_model.unwrap_or(&self.global));
+                self.fleet.client_mut(i).sync(bcast_model.unwrap_or(&self.global));
             } else if self.registry.is_active(i) {
-                client.mark_stale();
+                self.fleet.client_mut(i).mark_stale();
             }
         }
         self.queue.advance_to(bcast_done);
@@ -643,6 +761,9 @@ impl Server {
 
         let cum_uploads =
             self.metrics.records.last().map_or(0, |r| r.cum_uploads) + n_selected;
+        // Compact records (fleet-scale runs): drop the O(n) per-round
+        // vectors — at 10⁶ clients they would dominate resident memory.
+        let compact = self.cfg.fleet.compact_records;
         let record = RoundRecord {
             round,
             vtime: self.queue.now(),
@@ -655,9 +776,9 @@ impl Server {
             bytes_up,
             bytes_down,
             threshold: selection.threshold,
-            values: fleet_values,
-            selected: fleet_selected,
-            client_accs: fleet_accs,
+            values: if compact { Vec::new() } else { fleet_values },
+            selected: if compact { Vec::new() } else { fleet_selected },
+            client_accs: if compact { Vec::new() } else { fleet_accs },
             idle_seconds,
             reports: n_active,
             in_flight: 0,
@@ -797,7 +918,7 @@ impl Server {
         exec: &mut dyn Executor,
         pool: Option<&ExecutorPool>,
     ) -> Result<()> {
-        let n = self.clients.len();
+        let n = self.fleet.len();
         // `k` and `mixing` are engine-local state, not config reads: the
         // control plane's staleness controller may retune both at commit
         // points (`control_tick_async`). Upload payload bytes are read
@@ -829,7 +950,9 @@ impl Server {
         let shard_k: Vec<usize> = shard_pop.iter().map(|&p| k.clamp(1, p.max(1))).collect();
         let mut shard_weight = vec![0.0f64; s_count];
         for (c, &s) in shard_of.iter().enumerate() {
-            shard_weight[s] += self.clients[c].num_samples() as f64;
+            // Sample counts come from the fleet's park-aware accessor —
+            // reading them must not hydrate anyone.
+            shard_weight[s] += self.fleet.num_samples(c) as f64;
         }
         let mut shard_models: Vec<Vec<f32>> = if s_count > 1 {
             (0..s_count).map(|_| self.global.clone()).collect()
@@ -844,6 +967,31 @@ impl Server {
         } else {
             Vec::new()
         };
+
+        // Active-set window: only the first `active` clients hydrate and
+        // run; the rest wait parked in FIFO order and rotate in as
+        // flushed clients park (see `flush_shard`'s broadcast loop).
+        // `active == n` (including `active_set == 0`, where `Server::new`
+        // hydrated everyone) leaves `waiting` empty and the engine on the
+        // legacy path, bitwise.
+        let active = if self.cfg.fleet.active_set == 0 {
+            n
+        } else {
+            self.cfg.fleet.active_set.min(n)
+        };
+
+        // Edge tier (`engine.edge_fanout > 1`): per-(shard, edge) running
+        // sums, folded at upload arrival and combined at flush.
+        let fanout = self.cfg.engine_opts.edge_fanout;
+        let mut edges: Vec<EdgeAccum> = Vec::new();
+        if fanout > 1 {
+            let dim = self.global.len();
+            let sparse = self.cfg.compression.mode == CompressionMode::TopK;
+            edges.resize_with(s_count * fanout, EdgeAccum::new);
+            for e in edges.iter_mut() {
+                e.reset(dim, sparse);
+            }
+        }
 
         let mut st = EngineState {
             pending: (0..n).map(|_| None).collect(),
@@ -866,14 +1014,20 @@ impl Server {
             shard_version: vec![0u64; s_count],
             shard_weight,
             shard_history,
+            waiting: (active..n).collect(),
+            edges,
+            edge_residual: vec![0.0f64; s_count],
+            edge_transmitted: vec![0.0f64; s_count],
         };
 
         let mut flushes = 0usize;
         let events_before = self.queue.total_popped();
         let t0 = self.queue.now();
-        for i in 0..n {
+        for i in 0..active {
+            // No-op when already hydrated (`active_set == 0` / reruns).
+            self.fleet.hydrate(i, &self.global);
             self.queue.schedule_at(t0, EngineEvent::Start { client: i });
-            dispatch_speculation(&self.clients, &mut st, pool, i, knobs)?;
+            dispatch_speculation(&self.fleet, &mut st, pool, i, knobs)?;
         }
 
         while flushes < self.cfg.rounds {
@@ -890,7 +1044,7 @@ impl Server {
                         // in-flight speculation stays pending — staleness
                         // never feeds the local round, so the fork is
                         // still valid for the retry.
-                        self.clients[client].mark_stale();
+                        self.fleet.client_mut(client).mark_stale();
                         self.queue
                             .schedule_at(t + st.backoff[client], EngineEvent::Start { client });
                         continue;
@@ -901,9 +1055,9 @@ impl Server {
                             let (ghost, rep) = spec.rx.recv().map_err(|_| {
                                 anyhow!("speculative worker dropped client {client}'s round")
                             })?;
-                            if spec.epoch == self.clients[client].epoch() {
+                            if spec.epoch == self.fleet.client(client).epoch() {
                                 st.window.spec_committed += 1;
-                                self.clients[client].commit_speculation(ghost);
+                                self.fleet.client_mut(client).commit_speculation(ghost);
                                 rep?
                             } else {
                                 // The forked state was superseded: replay
@@ -921,7 +1075,7 @@ impl Server {
                                 );
                                 st.window.spec_replayed += 1;
                                 run_local_round(
-                                    &mut self.clients[client],
+                                    self.fleet.client_mut(client),
                                     exec,
                                     st.local_rounds[client],
                                     knobs,
@@ -929,7 +1083,7 @@ impl Server {
                             }
                         }
                         None => run_local_round(
-                            &mut self.clients[client],
+                            self.fleet.client_mut(client),
                             exec,
                             st.local_rounds[client],
                             knobs,
@@ -1026,10 +1180,10 @@ impl Server {
                         );
                     } else {
                         st.skip_streak += 1;
-                        self.clients[client].mark_stale();
+                        self.fleet.client_mut(client).mark_stale();
                         // Keep training the (now stale) local model.
                         self.queue.schedule_at(t, EngineEvent::Start { client });
-                        dispatch_speculation(&self.clients, &mut st, pool, client, knobs)?;
+                        dispatch_speculation(&self.fleet, &mut st, pool, client, knobs)?;
                     }
                 }
                 EngineEvent::Upload { client, bytes } => {
@@ -1043,6 +1197,14 @@ impl Server {
                     let tau =
                         st.shard_version[s].saturating_sub(st.synced_version[client]) as usize;
                     st.buffers[s].push((client, tau, t));
+                    if fanout > 1 {
+                        // Two-tier aggregation: fold the payload into its
+                        // edge accumulator now. The uploader is blocked
+                        // until the flush broadcasts, and the shard's
+                        // version only advances at flush, so both the
+                        // encoded params and tau are already final here.
+                        self.fold_edge_upload(&mut st, client, s, tau, mixing, fanout);
+                    }
                     if self.cfg.trace_events {
                         self.metrics.event_trace.push((
                             t,
@@ -1112,7 +1274,67 @@ impl Server {
         for h in st.shard_history.drain(..) {
             self.history_pool.extend(h);
         }
+        // Fleet lifecycle counters (lifetime totals, so reruns on the
+        // same server report the final state).
+        self.metrics.fleet_hydrations = self.fleet.hydrations();
+        self.metrics.fleet_parks = self.fleet.parks();
+        self.metrics.peak_active = self.fleet.peak_active();
         self.drain_pending_evals(&mut st)
+    }
+
+    /// Fold one just-arrived upload into its edge accumulator
+    /// (`engine.edge_fanout > 1`). Encoding at arrival is byte-identical
+    /// to the legacy flush-time encode — the client's params are pristine
+    /// until the flush broadcasts — so one scratch buffer serves every
+    /// upload and the flush never touches per-client state. The edge of a
+    /// client interleaves the shard layout: `(client / shards) % fanout`,
+    /// so round-robin shard assignment spreads each shard's population
+    /// evenly over its edges.
+    fn fold_edge_upload(
+        &mut self,
+        st: &mut EngineState,
+        client: usize,
+        shard: usize,
+        tau: usize,
+        mixing: MixingRule,
+        fanout: usize,
+    ) {
+        let s_count = st.shard_version.len();
+        let ei = shard * fanout + (client / s_count) % fanout;
+        let a = mixing.alpha(tau);
+        let w = self.fleet.num_samples(client) as f64 * a;
+        let precision = self.cfg.upload_precision;
+        match self.cfg.compression.mode {
+            CompressionMode::Dense => {
+                self.fleet.client(client).encode_upload(precision, &mut self.edge_buf);
+                st.edges[ei].fold_dense(&self.edge_buf, w, a);
+            }
+            CompressionMode::TopK => {
+                let error_feedback = self.cfg.compression.error_feedback;
+                if self.layer_ks.is_empty() {
+                    self.fleet.client_mut(client).encode_sparse_upload(
+                        precision,
+                        st.upload_k[client],
+                        error_feedback,
+                        &mut self.edge_sparse,
+                    );
+                } else {
+                    self.fleet.client_mut(client).encode_sparse_upload_layers(
+                        precision,
+                        &self.layer_sizes,
+                        &self.layer_ks,
+                        error_feedback,
+                        &mut self.edge_sparse,
+                    );
+                }
+                if self.control.enabled() && self.cfg.control.compression {
+                    let sent = self.edge_sparse.sent_key_l1();
+                    st.edge_transmitted[shard] += sent;
+                    st.edge_residual[shard] += (self.edge_sparse.key_l1() - sent).max(0.0);
+                }
+                st.edges[ei].fold_sparse(&self.edge_sparse, w, a);
+            }
+        }
     }
 
     /// Aggregate shard `shard`'s flushed buffer into `model` with
@@ -1138,10 +1360,11 @@ impl Server {
         knobs: RoundKnobs,
         model: &mut Vec<f32>,
     ) -> Result<()> {
-        let n = self.clients.len();
+        let n = self.fleet.len();
         let kk = st.buffers[shard].len();
         let precision = self.cfg.upload_precision;
         let payload = self.ctx.model_payload_bytes;
+        let fanout = self.cfg.engine_opts.edge_fanout;
         self.round = flush_idx;
 
         // Deterministic aggregation order — and a bitwise match with the
@@ -1149,81 +1372,109 @@ impl Server {
         // whole fleet.
         st.buffers[shard].sort_by_key(|e| e.0);
 
-        // Buffered clients are blocked between upload and broadcast, so
-        // encoding their (pristine) params now is byte-identical to
-        // encoding at send time — including the sparse budget, which is
-        // the per-upload snapshot taken when the upload was sized and
-        // charged (`EngineState::upload_k`), not the current `k_for`.
         let mode = self.cfg.compression.mode;
-        let error_feedback = self.cfg.compression.error_feedback;
-        for (j, &(c, _, _)) in st.buffers[shard].iter().enumerate() {
-            match mode {
-                CompressionMode::Dense => {
-                    self.clients[c].encode_upload(precision, &mut self.upload_bufs[j])
-                }
-                CompressionMode::TopK => self.clients[c].encode_sparse_upload(
-                    precision,
-                    st.upload_k[c],
-                    error_feedback,
-                    &mut self.sparse_bufs[j],
-                ),
-            }
-        }
-        // FedAvg weights n_i scaled by alpha(tau_i); the buffer's mean
-        // alpha is the shard's mixing rate.
-        self.upload_weights.clear();
-        let mut alpha_sum = 0.0f64;
-        for &(c, tau, _) in st.buffers[shard].iter() {
-            let a = mixing.alpha(tau);
-            alpha_sum += a;
-            self.upload_weights.push(self.clients[c].num_samples() as f64 * a);
-        }
-        let abar = (alpha_sum / kk as f64).min(1.0);
-        if abar >= 1.0 {
-            // Pure FedAvg replacement (the barriered rule). The sparse
-            // path is the masked equivalent: untransmitted coordinate
-            // mass falls back to the current shard model.
-            match mode {
-                CompressionMode::Dense => self.agg.aggregate_payloads(
-                    &self.upload_bufs[..kk],
-                    &self.upload_weights,
-                    model,
-                ),
-                CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
-                    &self.sparse_bufs[..kk],
-                    &self.upload_weights,
-                    0.0,
-                    model,
-                ),
+        if fanout > 1 {
+            // Two-tier aggregation: every buffered upload was already
+            // folded into its edge accumulator at arrival, so the flush
+            // only combines `fanout` edge summaries — O(edges * dim)
+            // regardless of the buffer size — and resets them for the
+            // next window.
+            let dim = model.len();
+            let sparse = mode == CompressionMode::TopK;
+            let er = shard * fanout..(shard + 1) * fanout;
+            combine_edges(&st.edges[er.clone()], model);
+            for e in &mut st.edges[er] {
+                e.reset(dim, sparse);
             }
         } else {
-            // theta <- (1 - abar) * theta + abar * fedavg(buffer): the
-            // buffered weights are pre-normalized to sum to abar. Dense:
-            // the current shard model rides along as one extra f32
-            // payload (slot kk) with weight 1 - abar; sparse: the same
-            // 1 - abar enters as the scatter's self-weight, which the
-            // merge applies last per coordinate — the identical lane
-            // order, so k_fraction = 1.0 stays bitwise dense.
-            let wsum: f64 = self.upload_weights.iter().sum();
-            for w in self.upload_weights.iter_mut() {
-                *w = abar * *w / wsum;
+            // Buffered clients are blocked between upload and broadcast, so
+            // encoding their (pristine) params now is byte-identical to
+            // encoding at send time — including the sparse budget, which is
+            // the per-upload snapshot taken when the upload was sized and
+            // charged (`EngineState::upload_k`), not the current `k_for`.
+            self.ensure_wire_slots(kk);
+            let error_feedback = self.cfg.compression.error_feedback;
+            for (j, &(c, _, _)) in st.buffers[shard].iter().enumerate() {
+                match mode {
+                    CompressionMode::Dense => self
+                        .fleet
+                        .client(c)
+                        .encode_upload(precision, &mut self.upload_bufs[j]),
+                    CompressionMode::TopK if self.layer_ks.is_empty() => {
+                        self.fleet.client_mut(c).encode_sparse_upload(
+                            precision,
+                            st.upload_k[c],
+                            error_feedback,
+                            &mut self.sparse_bufs[j],
+                        )
+                    }
+                    CompressionMode::TopK => {
+                        self.fleet.client_mut(c).encode_sparse_upload_layers(
+                            precision,
+                            &self.layer_sizes,
+                            &self.layer_ks,
+                            error_feedback,
+                            &mut self.sparse_bufs[j],
+                        )
+                    }
+                }
             }
-            match mode {
-                CompressionMode::Dense => {
-                    self.upload_weights.push(1.0 - abar);
-                    self.upload_bufs[kk].encode(Precision::F32, model);
-                    self.agg.aggregate_payloads(
-                        &self.upload_bufs[..kk + 1],
+            // FedAvg weights n_i scaled by alpha(tau_i); the buffer's mean
+            // alpha is the shard's mixing rate.
+            self.upload_weights.clear();
+            let mut alpha_sum = 0.0f64;
+            for &(c, tau, _) in st.buffers[shard].iter() {
+                let a = mixing.alpha(tau);
+                alpha_sum += a;
+                self.upload_weights.push(self.fleet.num_samples(c) as f64 * a);
+            }
+            let abar = (alpha_sum / kk as f64).min(1.0);
+            if abar >= 1.0 {
+                // Pure FedAvg replacement (the barriered rule). The sparse
+                // path is the masked equivalent: untransmitted coordinate
+                // mass falls back to the current shard model.
+                match mode {
+                    CompressionMode::Dense => self.agg.aggregate_payloads(
+                        &self.upload_bufs[..kk],
                         &self.upload_weights,
                         model,
-                    );
+                    ),
+                    CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
+                        &self.sparse_bufs[..kk],
+                        &self.upload_weights,
+                        0.0,
+                        model,
+                    ),
                 }
-                CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
-                    &self.sparse_bufs[..kk],
-                    &self.upload_weights,
-                    1.0 - abar,
-                    model,
-                ),
+            } else {
+                // theta <- (1 - abar) * theta + abar * fedavg(buffer): the
+                // buffered weights are pre-normalized to sum to abar. Dense:
+                // the current shard model rides along as one extra f32
+                // payload (slot kk) with weight 1 - abar; sparse: the same
+                // 1 - abar enters as the scatter's self-weight, which the
+                // merge applies last per coordinate — the identical lane
+                // order, so k_fraction = 1.0 stays bitwise dense.
+                let wsum: f64 = self.upload_weights.iter().sum();
+                for w in self.upload_weights.iter_mut() {
+                    *w = abar * *w / wsum;
+                }
+                match mode {
+                    CompressionMode::Dense => {
+                        self.upload_weights.push(1.0 - abar);
+                        self.upload_bufs[kk].encode(Precision::F32, model);
+                        self.agg.aggregate_payloads(
+                            &self.upload_bufs[..kk + 1],
+                            &self.upload_weights,
+                            model,
+                        );
+                    }
+                    CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
+                        &self.sparse_bufs[..kk],
+                        &self.upload_weights,
+                        1.0 - abar,
+                        model,
+                    ),
+                }
             }
         }
 
@@ -1250,10 +1501,28 @@ impl Server {
                 &mut self.net_rng,
             );
             st.window.bytes_down += payload;
-            self.clients[c].sync(bcast_model.unwrap_or(&model[..]));
-            st.synced_version[c] = version;
-            self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
-            dispatch_speculation(&self.clients, st, pool, c, knobs)?;
+            if let Some(w) = st.waiting.pop_front() {
+                // Active-set rotation: this broadcast slot goes to the
+                // longest-waiting parked client instead of the uploader.
+                // The flushed client demotes to a parked record (its dense
+                // state is superseded by the broadcast anyway) and rejoins
+                // the back of the queue; the newcomer hydrates from the
+                // broadcast model and is re-anchored to its *own* shard's
+                // current version — it may live on a different shard than
+                // the one that just flushed, and its staleness clock must
+                // start from what it actually synced.
+                self.fleet.park(c);
+                self.fleet.hydrate(w, bcast_model.unwrap_or(&model[..]));
+                st.synced_version[w] = st.shard_version[st.shard_of[w]];
+                self.queue.schedule_at(now + down, EngineEvent::Start { client: w });
+                dispatch_speculation(&self.fleet, st, pool, w, knobs)?;
+                st.waiting.push_back(c);
+            } else {
+                self.fleet.client_mut(c).sync(bcast_model.unwrap_or(&model[..]));
+                st.synced_version[c] = version;
+                self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
+                dispatch_speculation(&self.fleet, st, pool, c, knobs)?;
+            }
         }
         if st.shard_history.is_empty() {
             self.push_history_from(&model[..]);
@@ -1295,10 +1564,18 @@ impl Server {
 
         // Buffer wait: how long each upload sat before the flush.
         let idle_seconds: f64 = st.buffers[shard].iter().map(|&(_, _, at)| now - at).sum();
-        let mut fleet_selected = vec![false; n];
-        for &(c, _, _) in st.buffers[shard].iter() {
-            fleet_selected[c] = true;
-        }
+        // At fleet scale the O(n)-per-flush record columns dominate memory;
+        // `fleet.compact_records` drops them (scalar telemetry is kept).
+        let compact = self.cfg.fleet.compact_records;
+        let fleet_selected = if compact {
+            Vec::new()
+        } else {
+            let mut sel = vec![false; n];
+            for &(c, _, _) in st.buffers[shard].iter() {
+                sel[c] = true;
+            }
+            sel
+        };
         let cum_uploads = self.metrics.records.last().map_or(0, |r| r.cum_uploads) + kk;
         // Window telemetry is attributed to the flush that closes the
         // window: reports/bytes count when their events fire, so an upload
@@ -1320,9 +1597,9 @@ impl Server {
             bytes_up: st.window.bytes_up,
             bytes_down: st.window.bytes_down,
             threshold,
-            values: st.last_values.to_vec(),
+            values: if compact { Vec::new() } else { st.last_values.to_vec() },
             selected: fleet_selected,
-            client_accs: st.last_accs.to_vec(),
+            client_accs: if compact { Vec::new() } else { st.last_accs.to_vec() },
             idle_seconds,
             reports: st.window.reports,
             in_flight: st.in_flight,
@@ -1344,7 +1621,16 @@ impl Server {
             // The sample is built from commit-time state only — the
             // deferred global eval of the threaded engine is
             // deliberately NOT part of it.
-            let (residual_l1, transmitted_l1) = self.sparse_flush_mass(kk);
+            let (residual_l1, transmitted_l1) = if fanout > 1 {
+                // Edge mode encodes at arrival, so the mass was accumulated
+                // there; read-and-reset the shard's window sums.
+                let r = (st.edge_residual[shard], st.edge_transmitted[shard]);
+                st.edge_residual[shard] = 0.0;
+                st.edge_transmitted[shard] = 0.0;
+                r
+            } else {
+                self.sparse_flush_mass(kk)
+            };
             self.control.observe(FlushSample {
                 round: flush_idx,
                 shard,
@@ -1607,7 +1893,10 @@ impl Server {
         }) else {
             return;
         };
-        let w = self.clients[c].num_samples() as f64;
+        // A parked client is a perfectly fine migration target: shard
+        // assignment lives entirely in the engine state, so the record
+        // moves shards without being hydrated.
+        let w = self.fleet.num_samples(c) as f64;
         st.shard_of[c] = m.to_shard;
         st.shard_pop[m.from_shard] -= 1;
         st.shard_pop[m.to_shard] += 1;
@@ -1692,32 +1981,40 @@ pub fn build_server(
     flops: (u64, u64),
     payload_bytes: u64,
 ) -> Server {
+    let data = FleetData::Eager(shards.into_iter().map(Arc::new).collect());
+    build_server_with_data(cfg, data, test, init_params, policy, batch_size, flops, payload_bytes)
+}
+
+/// [`build_server`] over any [`FleetData`] source — the fleet-scale path
+/// passes [`FleetData::Lazy`] so client shards are synthesized on hydration
+/// instead of being resident for the whole fleet up front.
+#[allow(clippy::too_many_arguments)]
+pub fn build_server_with_data(
+    cfg: &ExperimentConfig,
+    data: FleetData,
+    test: Dataset,
+    init_params: ParamVec,
+    policy: Box<dyn SelectionPolicy>,
+    batch_size: usize,
+    flops: (u64, u64),
+    payload_bytes: u64,
+) -> Server {
     let root_rng = Rng::new(cfg.seed);
     let input_dim = test.input_dim();
     // Probe set = leading slice of the test set (paper: clients measure
     // Acc_i on the test set; the probe keeps per-round cost bounded).
     let probe_n = cfg.probe_samples.min(test.len());
-    let probe_images = test.images[..probe_n * input_dim].to_vec();
-    let probe_labels = test.labels[..probe_n].to_vec();
+    let probe_images = Arc::new(test.images[..probe_n * input_dim].to_vec());
+    let probe_labels = Arc::new(test.labels[..probe_n].to_vec());
 
-    let fleet_profiles = crate::device::DeviceProfile::paper_fleet(cfg.num_clients);
-    let clients: Vec<Client> = shards
-        .into_iter()
-        .zip(fleet_profiles)
-        .map(|(shard, device)| {
-            let id = shard.client_id;
-            Client::new(
-                id,
-                shard,
-                device,
-                init_params.clone(),
-                batch_size,
-                probe_images.clone(),
-                probe_labels.clone(),
-                &root_rng,
-            )
-        })
-        .collect();
+    let fleet = Fleet::new(
+        data,
+        batch_size,
+        probe_images,
+        probe_labels,
+        cfg.fleet.residual_budget,
+        root_rng.clone(),
+    );
 
     let ctx = ServerContext {
         link: cfg.link.clone(),
@@ -1727,7 +2024,7 @@ pub fn build_server(
         test_images: Arc::new(test.images),
         test_labels: Arc::new(test.labels),
     };
-    Server::new(cfg.clone(), ctx, clients, policy, init_params, &root_rng)
+    Server::new(cfg.clone(), ctx, fleet, policy, init_params, &root_rng)
 }
 
 #[cfg(test)]

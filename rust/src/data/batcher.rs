@@ -16,20 +16,58 @@ pub struct Batcher {
     cursor: usize,
     batch: usize,
     rng: Rng,
+    /// Total reshuffles performed since construction (`new` counts as 1).
+    /// Together with `cursor` this is the complete iteration position: a
+    /// parked client records `(reshuffles, cursor)` and [`Batcher::restore`]
+    /// replays exactly that many shuffles on a fresh identity order to
+    /// land on the same `(order, cursor, rng)` triple bit-for-bit.
+    reshuffles: u64,
 }
 
 impl Batcher {
     pub fn new(n: usize, batch: usize, rng: Rng) -> Self {
         assert!(n > 0, "empty shard");
         assert!(batch > 0);
-        let mut b = Batcher { order: (0..n).collect(), cursor: 0, batch, rng };
+        let mut b = Batcher { order: (0..n).collect(), cursor: 0, batch, rng, reshuffles: 0 };
         b.reshuffle();
         b
+    }
+
+    /// Rebuild a batcher at a recorded iteration position: replay
+    /// `reshuffles` shuffles (from the same seed RNG `Batcher::new` was
+    /// given) over the identity order, then seek to `cursor`. By
+    /// construction `restore(n, b, rng, 1, 0)` is bitwise
+    /// `Batcher::new(n, b, rng)`, and more generally restoring the
+    /// `(reshuffles(), cursor())` of a live batcher built from the same
+    /// RNG yields a batcher whose future batch stream is identical —
+    /// the parked-client hydration contract (see `fleet`).
+    pub fn restore(n: usize, batch: usize, rng: Rng, reshuffles: u64, cursor: usize) -> Self {
+        assert!(n > 0, "empty shard");
+        assert!(batch > 0);
+        assert!(reshuffles >= 1, "a batcher has always shuffled at least once");
+        assert!(cursor <= n, "cursor beyond shard");
+        let mut b = Batcher { order: (0..n).collect(), cursor: 0, batch, rng, reshuffles: 0 };
+        for _ in 0..reshuffles {
+            b.reshuffle();
+        }
+        b.cursor = cursor;
+        b
+    }
+
+    /// Reshuffle count since construction (≥ 1); see [`Batcher::restore`].
+    pub fn reshuffles(&self) -> u64 {
+        self.reshuffles
+    }
+
+    /// Position within the current epoch order; see [`Batcher::restore`].
+    pub fn cursor(&self) -> usize {
+        self.cursor
     }
 
     fn reshuffle(&mut self) {
         self.rng.shuffle(&mut self.order);
         self.cursor = 0;
+        self.reshuffles += 1;
     }
 
     /// Number of full batches per epoch (at least 1; short shards wrap).
@@ -100,6 +138,37 @@ mod tests {
         // All labels must come from the shard.
         for &l in &y {
             assert!(ds.labels.contains(&l));
+        }
+    }
+
+    #[test]
+    fn restore_resumes_the_exact_batch_stream() {
+        let ds = generate(32, &SynthConfig::default(), &mut Rng::new(9));
+        let seed_rng = Rng::new(77);
+        // restore(.., 1, 0) must be bitwise Batcher::new.
+        let fresh = Batcher::new(32, 8, seed_rng.clone());
+        let restored = Batcher::restore(32, 8, seed_rng.clone(), 1, 0);
+        assert_eq!(fresh.order, restored.order);
+        assert_eq!(fresh.cursor, restored.cursor);
+        assert_eq!(fresh.reshuffles(), restored.reshuffles());
+        // Run a live batcher an arbitrary number of steps, park its
+        // (reshuffles, cursor), restore, and compare future streams.
+        for steps in [0usize, 1, 3, 4, 7, 11] {
+            let mut live = Batcher::new(32, 8, seed_rng.clone());
+            let mut x = vec![0.0; 8 * ds.input_dim()];
+            let mut y = vec![0; 8];
+            for _ in 0..steps {
+                live.next_batch(&ds, &mut x, &mut y);
+            }
+            let mut back =
+                Batcher::restore(32, 8, seed_rng.clone(), live.reshuffles(), live.cursor());
+            for _ in 0..6 {
+                let mut y2 = vec![0; 8];
+                let w1 = live.next_batch(&ds, &mut x, &mut y);
+                let w2 = back.next_batch(&ds, &mut x, &mut y2);
+                assert_eq!(w1, w2, "wrap parity after {steps} steps");
+                assert_eq!(y, y2, "batch stream after {steps} steps");
+            }
         }
     }
 

@@ -8,5 +8,5 @@ pub mod stats;
 pub mod synth;
 
 pub use batcher::Batcher;
-pub use partition::{partition, ClientShard, PartitionScheme};
+pub use partition::{partition, ClientShard, LazyPartition, PartitionScheme};
 pub use synth::{Dataset, SynthConfig};

@@ -120,10 +120,82 @@ fn paper_skew_counts(
     out
 }
 
+/// A deferred partition: the per-client class-count matrix plus the
+/// generator seed, materializing any client's shard **on demand** —
+/// bit-identical to the shard eager [`partition`] would have produced
+/// (same per-client named fork, same serial render, independent of the
+/// order shards are materialized). Holds O(n) counts instead of
+/// O(n · samples · dim) pixels; the active-set fleet hydrates parked
+/// clients' shards from this source.
+#[derive(Clone)]
+pub struct LazyPartition {
+    counts: Vec<[usize; 10]>,
+    cfg: SynthConfig,
+    seed_rng: Rng,
+}
+
+impl LazyPartition {
+    pub fn new(
+        scheme: PartitionScheme,
+        num_clients: usize,
+        samples_per_client: usize,
+        cfg: &SynthConfig,
+        seed_rng: &Rng,
+    ) -> Self {
+        let counts = class_counts(
+            scheme,
+            num_clients,
+            samples_per_client,
+            &mut seed_rng.fork("partition-counts"),
+        );
+        LazyPartition { counts, cfg: cfg.clone(), seed_rng: seed_rng.clone() }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Shard size without materializing pixels (the FedAvg weight n_i and
+    /// the batcher length a parked record needs).
+    pub fn num_samples(&self, client_id: usize) -> usize {
+        self.counts[client_id].iter().sum()
+    }
+
+    /// Render client `client_id`'s shard — bit-identical to eager
+    /// [`partition`]'s shard for the same seed, whenever and however
+    /// often it is called.
+    pub fn materialize(&self, client_id: usize) -> ClientShard {
+        ClientShard {
+            client_id,
+            data: synth::generate_with_counts(
+                &self.counts[client_id],
+                &self.cfg,
+                &mut self.seed_rng.fork(&format!("client-{client_id}")),
+            ),
+        }
+    }
+
+    /// The balanced held-out server test set (same stream as [`partition`]).
+    pub fn test_set(&self, test_samples: usize) -> Dataset {
+        let per = test_samples / 10;
+        let mut tc = [per; 10];
+        for k in 0..test_samples - per * 10 {
+            tc[k % 10] += 1;
+        }
+        synth::generate_with_counts(&tc, &self.cfg, &mut self.seed_rng.fork("test-set"))
+    }
+
+    /// Approximate resident bytes of this source (the counts matrix).
+    pub fn approx_bytes(&self) -> usize {
+        self.counts.len() * std::mem::size_of::<[usize; 10]>()
+    }
+}
+
 /// Build all client shards plus a balanced, held-out server test set.
 ///
 /// The generator streams are forked per client, so shard contents don't
-/// depend on the order clients are materialized.
+/// depend on the order clients are materialized. Implemented on top of
+/// [`LazyPartition`] so the eager and lazy paths cannot drift.
 pub fn partition(
     scheme: PartitionScheme,
     num_clients: usize,
@@ -132,31 +204,9 @@ pub fn partition(
     cfg: &SynthConfig,
     seed_rng: &Rng,
 ) -> (Vec<ClientShard>, Dataset) {
-    let counts = class_counts(
-        scheme,
-        num_clients,
-        samples_per_client,
-        &mut seed_rng.fork("partition-counts"),
-    );
-    let shards = counts
-        .iter()
-        .enumerate()
-        .map(|(client_id, c)| ClientShard {
-            client_id,
-            data: synth::generate_with_counts(
-                c,
-                cfg,
-                &mut seed_rng.fork(&format!("client-{client_id}")),
-            ),
-        })
-        .collect();
-    // Balanced test set.
-    let per = test_samples / 10;
-    let mut tc = [per; 10];
-    for k in 0..test_samples - per * 10 {
-        tc[k % 10] += 1;
-    }
-    let test = synth::generate_with_counts(&tc, cfg, &mut seed_rng.fork("test-set"));
+    let lazy = LazyPartition::new(scheme, num_clients, samples_per_client, cfg, seed_rng);
+    let shards = (0..num_clients).map(|id| lazy.materialize(id)).collect();
+    let test = lazy.test_set(test_samples);
     (shards, test)
 }
 
@@ -228,6 +278,29 @@ mod tests {
         assert_eq!(test.len(), 100);
         let h = test.class_histogram();
         assert!(h.iter().all(|&v| v == 10));
+    }
+
+    #[test]
+    fn lazy_partition_matches_eager_in_any_order() {
+        let cfg = SynthConfig::default();
+        let (eager, test) = partition(PartitionScheme::PaperSkew, 4, 50, 20, &cfg, &rng());
+        let lazy = LazyPartition::new(PartitionScheme::PaperSkew, 4, 50, &cfg, &rng());
+        assert_eq!(lazy.num_clients(), 4);
+        // Materialize out of order, twice — every render must be
+        // bit-identical to the eager shard.
+        for &id in &[3usize, 0, 2, 1, 0, 3] {
+            let s = lazy.materialize(id);
+            assert_eq!(s.client_id, id);
+            assert_eq!(s.data.labels, eager[id].data.labels);
+            assert_eq!(
+                s.data.images.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                eager[id].data.images.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(lazy.num_samples(id), eager[id].num_samples());
+        }
+        let t = lazy.test_set(20);
+        assert_eq!(t.labels, test.labels);
+        assert_eq!(t.images, test.images);
     }
 
     #[test]

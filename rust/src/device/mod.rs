@@ -97,34 +97,46 @@ impl DeviceProfile {
         base * self.mem_pressure * rng.lognormal_jitter(self.jitter_sigma)
     }
 
+    /// The canonical profile table, in a fixed order. Compact fleet
+    /// records ([`crate::fleet::ParkedClient`]) store a 1-byte index into
+    /// this table instead of a heap-named profile, so a million parked
+    /// clients cost a million bytes of device state, not a million
+    /// `String`s.
+    pub fn table() -> [DeviceProfile; 5] {
+        [
+            Self::rpi4_4gb(),
+            Self::rpi4_8gb(),
+            Self::laptop_i5(),
+            Self::laptop_i7(),
+            Self::laptop_shared(),
+        ]
+    }
+
+    /// Index into [`DeviceProfile::table`] of client `i`'s device in the
+    /// `paper_fleet(num_clients)` mix — the allocation-free form of
+    /// [`DeviceProfile::paper_fleet`], used by the virtualized fleet to
+    /// assign devices to parked records without materializing profiles.
+    pub fn paper_fleet_index(num_clients: usize, i: usize) -> u8 {
+        match num_clients {
+            3 => [0u8, 1, 1][i],
+            7 => [0u8, 1, 1, 1, 1, 4, 4][i],
+            _ => [0u8, 1, 1, 4][i % 4],
+        }
+    }
+
     /// The paper's client fleets.
     ///
     /// * 3 clients (exps a, c): 3 Raspberry Pis, one with 4 GB.
     /// * 7 clients (exps b, d): 5 Pis (one 4 GB) + 2 processes on the i5
     ///   laptop.
+    ///
+    /// Defined through [`DeviceProfile::paper_fleet_index`] so the eager
+    /// and compact-record device assignments cannot drift.
     pub fn paper_fleet(num_clients: usize) -> Vec<DeviceProfile> {
-        match num_clients {
-            3 => vec![Self::rpi4_4gb(), Self::rpi4_8gb(), Self::rpi4_8gb()],
-            7 => vec![
-                Self::rpi4_4gb(),
-                Self::rpi4_8gb(),
-                Self::rpi4_8gb(),
-                Self::rpi4_8gb(),
-                Self::rpi4_8gb(),
-                Self::laptop_shared(),
-                Self::laptop_shared(),
-            ],
-            n => {
-                // Generalized fleet: cycle the paper's device mix.
-                let mix = [
-                    Self::rpi4_4gb(),
-                    Self::rpi4_8gb(),
-                    Self::rpi4_8gb(),
-                    Self::laptop_shared(),
-                ];
-                (0..n).map(|i| mix[i % mix.len()].clone()).collect()
-            }
-        }
+        let table = Self::table();
+        (0..num_clients)
+            .map(|i| table[Self::paper_fleet_index(num_clients, i) as usize].clone())
+            .collect()
     }
 }
 
@@ -179,6 +191,21 @@ mod tests {
         assert_eq!(f7.len(), 7);
         assert_eq!(f7.iter().filter(|d| d.name.starts_with("rpi4")).count(), 5);
         assert_eq!(DeviceProfile::paper_fleet(11).len(), 11);
+        // The paper fleets: 3 = {4gb, 8gb, 8gb}, 7 = 5 Pis + 2 shared-i5.
+        assert_eq!(DeviceProfile::paper_fleet(3)[0], DeviceProfile::rpi4_4gb());
+        assert_eq!(f7[5], DeviceProfile::laptop_shared());
+    }
+
+    #[test]
+    fn paper_fleet_index_matches_table_lookup() {
+        let table = DeviceProfile::table();
+        for n in [1usize, 3, 7, 11, 23] {
+            let fleet = DeviceProfile::paper_fleet(n);
+            for (i, d) in fleet.iter().enumerate() {
+                let idx = DeviceProfile::paper_fleet_index(n, i) as usize;
+                assert_eq!(&table[idx], d, "fleet {n} client {i}");
+            }
+        }
     }
 
     #[test]

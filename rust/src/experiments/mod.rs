@@ -98,35 +98,43 @@ pub fn build(cfg: &ExperimentConfig) -> Result<(Server, Box<dyn Executor>)> {
     );
     let policy = make_policy(cfg.algorithm, cfg.value_fn, cfg.eaflm);
 
-    let (exec, init_params, flops, payload): (Box<dyn Executor>, Vec<f32>, (u64, u64), u64) =
-        match &cfg.backend {
-            Backend::Pjrt { artifact_dir } => {
-                let spec = ParamSpec::load(artifact_dir)
-                    .context("loading artifacts (run `make artifacts`)")?;
-                anyhow::ensure!(
-                    spec.input_dim == test.input_dim(),
-                    "artifact input_dim {} != dataset {}",
-                    spec.input_dim,
-                    test.input_dim()
-                );
-                let init = spec.load_init_params()?;
-                let flops = (spec.train_step_flops, spec.eval_step_flops);
-                let payload = cfg.upload_precision.payload_bytes(spec.param_count);
-                let rt = PjrtRuntime::from_spec(spec)?;
-                (Box::new(rt), init, flops, payload)
-            }
-            Backend::Mock => {
-                let exec = MockExecutor::standard();
-                let p = exec.param_count();
-                // Mock "model" cost stands in for the real one.
-                let flops = (2_000_000u64, 600_000u64);
-                let payload = cfg.upload_precision.payload_bytes(p);
-                (Box::new(exec), vec![0.0; p], flops, payload)
-            }
-        };
+    let (exec, init_params, flops, payload, layer_sizes): (
+        Box<dyn Executor>,
+        Vec<f32>,
+        (u64, u64),
+        u64,
+        Vec<usize>,
+    ) = match &cfg.backend {
+        Backend::Pjrt { artifact_dir } => {
+            let spec = ParamSpec::load(artifact_dir)
+                .context("loading artifacts (run `make artifacts`)")?;
+            anyhow::ensure!(
+                spec.input_dim == test.input_dim(),
+                "artifact input_dim {} != dataset {}",
+                spec.input_dim,
+                test.input_dim()
+            );
+            let init = spec.load_init_params()?;
+            let flops = (spec.train_step_flops, spec.eval_step_flops);
+            let payload = cfg.upload_precision.payload_bytes(spec.param_count);
+            let layer_sizes: Vec<usize> = spec.layers.iter().map(|l| l.size).collect();
+            let rt = PjrtRuntime::from_spec(spec)?;
+            (Box::new(rt), init, flops, payload, layer_sizes)
+        }
+        Backend::Mock => {
+            let exec = MockExecutor::standard();
+            let p = exec.param_count();
+            // Mock "model" cost stands in for the real one. The mock net
+            // is a single dense layer as far as the wire is concerned.
+            let flops = (2_000_000u64, 600_000u64);
+            let payload = cfg.upload_precision.payload_bytes(p);
+            (Box::new(exec), vec![0.0; p], flops, payload, vec![p])
+        }
+    };
 
     let batch = exec.batch_size();
-    let server = build_server(cfg, shards, test, init_params, policy, batch, flops, payload);
+    let mut server = build_server(cfg, shards, test, init_params, policy, batch, flops, payload);
+    server.set_layer_sizes(layer_sizes);
     Ok((server, exec))
 }
 

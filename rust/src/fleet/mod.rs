@@ -2,13 +2,64 @@
 //! local shard, local model, batcher, device profile, and the client half
 //! of Algorithm 1 (lines 18–26): local SGD passes, the communication value
 //! V (Eq. 1), and the probe-set accuracy Acc_i.
+//!
+//! # Virtualized fleet: active set + parked records
+//!
+//! A dense [`Client`] carries three O(dim) buffers (params, delta base,
+//! EF residual) plus its materialized data shard — fine for the paper's
+//! 3/7-client testbeds, fatal for the ROADMAP's "millions of users". The
+//! [`Fleet`] therefore keeps only the clients with work in flight (the
+//! **active set**) materialized; everyone else is a compact
+//! [`ParkedClient`] record — batcher replay position, jitter-RNG state,
+//! versions-behind, sample count, a 1-byte device-profile index, and a
+//! sparse top-|budget| summary of the error-feedback residual. Resident
+//! memory scales with the concurrency window, not the fleet size.
+//!
+//! ## Hydration semantics
+//!
+//! Parking and hydration are **deterministic and lossless for every
+//! random stream**:
+//!
+//! * **Batcher.** The shuffle RNG is a named fork (`batcher-{id}`) of the
+//!   experiment seed; the parked record stores `(reshuffles, cursor)` and
+//!   [`Batcher::restore`] replays exactly that many shuffles from a fresh
+//!   fork — the hydrated client's future batch stream is bit-identical to
+//!   a never-parked client's (proptested over park/hydrate cycles).
+//! * **Jitter RNG.** Parked verbatim (the state is four words; the
+//!   log-normal jitter draws a variable number of uniforms, so replaying
+//!   a draw *count* is infeasible). The stream continues exactly where it
+//!   stopped.
+//! * **Data shard.** Never stored: `FleetData::Lazy` re-renders it on
+//!   hydration from the same named generator fork (`client-{id}`) the
+//!   eager partitioner uses — bit-identical pixels, whenever and however
+//!   often the client is hydrated.
+//! * **Model state.** A client is parked only when it holds no novel
+//!   model state: the engines park at flush time, immediately after the
+//!   client's upload was folded into the aggregate (the point where the
+//!   legacy path would overwrite the local model with the broadcast
+//!   anyway). Hydration takes the then-current model as its sync, so
+//!   `params == base == model` and staleness restarts at 0, exactly like
+//!   [`Client::sync`].
+//! * **EF residual.** Summarized as the top-|`residual_budget`| owed
+//!   coordinates (magnitude order, index tie-break); debt below the
+//!   budget is forgotten at park time. With the budget ≥ the count of
+//!   nonzero coordinates the residual round-trips exactly.
+//! * **`prev_grad`.** Deliberately dropped: a parked client's previous
+//!   gradient was measured against a long-gone model, so a re-hydrated
+//!   client reports a fresh-gradient value on its first round — the same
+//!   high initial V as a newly joined client (paper §III-A), which is
+//!   what re-entering the fleet *is*.
+//!
+//! With `fleet.active_set = 0` (the default) every client is hydrated at
+//! construction and nothing ever parks: that mode is bitwise identical to
+//! the pre-virtualization engines and is pinned by the golden snapshots.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::ValueFnConfig;
-use crate::data::{Batcher, ClientShard};
+use crate::data::{Batcher, ClientShard, LazyPartition};
 use crate::device::DeviceProfile;
 use crate::model::quant::{Precision, QuantBuf};
 use crate::model::sparse::SparseDelta;
@@ -83,15 +134,19 @@ pub struct Client {
 }
 
 impl Client {
+    /// Build a fully hydrated client. The probe set and shard are
+    /// `Arc`-shared across the fleet — construction copies no read-only
+    /// data (at a million clients, per-client probe clones were the
+    /// second-largest memory term after the shards themselves).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
-        shard: ClientShard,
+        shard: Arc<ClientShard>,
         device: DeviceProfile,
         init_params: ParamVec,
         batch_size: usize,
-        probe_images: Vec<f32>,
-        probe_labels: Vec<i32>,
+        probe_images: Arc<Vec<f32>>,
+        probe_labels: Arc<Vec<i32>>,
         root_rng: &Rng,
     ) -> Self {
         let n = shard.num_samples();
@@ -100,14 +155,14 @@ impl Client {
             jitter_rng: root_rng.fork(&format!("jitter-{id}")),
             id,
             device,
-            shard: Arc::new(shard),
+            shard,
             base: init_params.clone(),
             residual: vec![0.0; init_params.len()],
             params: init_params,
             prev_grad: None,
             staleness: 0,
-            probe_images: Arc::new(probe_images),
-            probe_labels: Arc::new(probe_labels),
+            probe_images,
+            probe_labels,
             epoch: 0,
         }
     }
@@ -208,6 +263,23 @@ impl Client {
         buf.encode_topk(precision, &self.params, &self.base, residual, k);
     }
 
+    /// Per-layer variant of [`Client::encode_sparse_upload`]: the top-k
+    /// race runs inside each layer's parameter range (`layer_sizes` from
+    /// `ParamSpec::layers`, `ks` from `compression.layer_k_fractions`), so
+    /// a quiet layer keeps its own budget. Error-feedback semantics are
+    /// identical, applied per range.
+    pub fn encode_sparse_upload_layers(
+        &mut self,
+        precision: Precision,
+        layer_sizes: &[usize],
+        ks: &[usize],
+        error_feedback: bool,
+        buf: &mut SparseDelta,
+    ) {
+        let residual = error_feedback.then_some(&mut self.residual[..]);
+        buf.encode_topk_layers(precision, &self.params, &self.base, residual, layer_sizes, ks);
+    }
+
     /// Current error-feedback residual (tests/diagnostics).
     pub fn residual(&self) -> &[f32] {
         &self.residual
@@ -288,6 +360,359 @@ impl Client {
     }
 }
 
+/// Compact record of a client with no work in flight (see the module
+/// docs). Everything a future hydration needs, in O(1) + O(budget) space:
+/// no model buffers, no pixels, no heap strings.
+#[derive(Debug, Clone)]
+pub struct ParkedClient {
+    /// Batcher replay position (see [`Batcher::restore`]).
+    reshuffles: u64,
+    cursor: u32,
+    /// Device-jitter RNG, parked verbatim (four words of state).
+    jitter_rng: Rng,
+    /// Staleness at park time (informational: hydration syncs to the
+    /// current model, which restarts staleness at 0 — like any sync).
+    pub staleness: u32,
+    /// Local sample count n_i — the FedAvg weight and the shard/batcher
+    /// length, readable without hydrating (the rebalancer migrates parked
+    /// clients by this weight alone).
+    pub num_samples: u32,
+    /// Index into [`DeviceProfile::table`].
+    device: u8,
+    /// Training-state epoch at park time; hydration resumes past it.
+    epoch: u64,
+    /// Sparse top-|budget| summary of the EF residual, `(index, value)`
+    /// in ascending index order. Empty in dense mode.
+    residual: Vec<(u32, f32)>,
+}
+
+/// Where the fleet's data shards come from.
+pub enum FleetData {
+    /// Deferred partition: shards render on hydration and drop on park —
+    /// the million-client mode.
+    Lazy(LazyPartition),
+    /// Pre-materialized shards (`Arc`-held, so parking a client does not
+    /// drop its pixels). The small-fleet / direct-test mode.
+    Eager(Vec<Arc<ClientShard>>),
+}
+
+impl FleetData {
+    pub fn num_clients(&self) -> usize {
+        match self {
+            FleetData::Lazy(p) => p.num_clients(),
+            FleetData::Eager(shards) => shards.len(),
+        }
+    }
+
+    fn num_samples(&self, id: usize) -> usize {
+        match self {
+            FleetData::Lazy(p) => p.num_samples(id),
+            FleetData::Eager(shards) => shards[id].num_samples(),
+        }
+    }
+
+    fn shard(&self, id: usize) -> Arc<ClientShard> {
+        match self {
+            FleetData::Lazy(p) => Arc::new(p.materialize(id)),
+            FleetData::Eager(shards) => Arc::clone(&shards[id]),
+        }
+    }
+}
+
+/// One fleet slot: a hydrated client (boxed — the dense struct is large
+/// and most slots are parked) or a compact parked record.
+enum Slot {
+    Active(Box<Client>),
+    Parked(ParkedClient),
+}
+
+/// The virtualized fleet (see the module docs): full [`Client`]s for the
+/// active set, [`ParkedClient`] records for everyone else, with
+/// deterministic park/hydrate transitions.
+pub struct Fleet {
+    slots: Vec<Slot>,
+    source: FleetData,
+    batch_size: usize,
+    probe_images: Arc<Vec<f32>>,
+    probe_labels: Arc<Vec<i32>>,
+    /// Root of the per-client named forks (`batcher-{id}`, `jitter-{id}`)
+    /// — forking never advances this state, so hydration at any time
+    /// reproduces the same streams.
+    root_rng: Rng,
+    profiles: [DeviceProfile; 5],
+    /// Top-|budget| EF-residual coordinates kept across a park.
+    residual_budget: usize,
+    active: usize,
+    peak_active: usize,
+    hydrations: u64,
+    parks: u64,
+}
+
+impl Fleet {
+    /// Build a fleet with every client parked (fresh records: batcher at
+    /// `(1, 0)`, pristine jitter fork, zero residual). Call
+    /// [`Fleet::hydrate`] / [`Fleet::hydrate_all`] to materialize.
+    pub fn new(
+        source: FleetData,
+        batch_size: usize,
+        probe_images: Arc<Vec<f32>>,
+        probe_labels: Arc<Vec<i32>>,
+        residual_budget: usize,
+        root_rng: Rng,
+    ) -> Self {
+        let n = source.num_clients();
+        let slots = (0..n)
+            .map(|id| {
+                let num_samples = source.num_samples(id);
+                assert!(num_samples > 0, "client {id} has an empty shard");
+                assert!(num_samples <= u32::MAX as usize, "shard too large for a parked record");
+                Slot::Parked(ParkedClient {
+                    reshuffles: 1,
+                    cursor: 0,
+                    jitter_rng: root_rng.fork(&format!("jitter-{id}")),
+                    staleness: 0,
+                    num_samples: num_samples as u32,
+                    device: DeviceProfile::paper_fleet_index(n, id),
+                    epoch: 0,
+                    residual: Vec::new(),
+                })
+            })
+            .collect();
+        Fleet {
+            slots,
+            source,
+            batch_size,
+            probe_images,
+            probe_labels,
+            root_rng,
+            profiles: DeviceProfile::table(),
+            residual_budget,
+            active: 0,
+            peak_active: 0,
+            hydrations: 0,
+            parks: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn is_active(&self, id: usize) -> bool {
+        matches!(self.slots[id], Slot::Active(_))
+    }
+
+    /// The hydrated client at `id`. Panics if parked — engines must
+    /// hydrate before touching a client, which keeps accidental
+    /// fleet-wide materialization loud instead of silent.
+    pub fn client(&self, id: usize) -> &Client {
+        match &self.slots[id] {
+            Slot::Active(c) => c,
+            Slot::Parked(_) => panic!("client {id} is parked"),
+        }
+    }
+
+    pub fn client_mut(&mut self, id: usize) -> &mut Client {
+        match &mut self.slots[id] {
+            Slot::Active(c) => c,
+            Slot::Parked(_) => panic!("client {id} is parked"),
+        }
+    }
+
+    /// Sample count n_i without hydrating (active or parked).
+    pub fn num_samples(&self, id: usize) -> usize {
+        match &self.slots[id] {
+            Slot::Active(c) => c.num_samples(),
+            Slot::Parked(p) => p.num_samples as usize,
+        }
+    }
+
+    /// Materialize client `id`, syncing it to `model` (see the module
+    /// docs for exactly what a hydration restores). No-op if already
+    /// active — the engines only hydrate parked clients, but
+    /// `hydrate_all` leans on the idempotence.
+    pub fn hydrate(&mut self, id: usize, model: &[f32]) {
+        let parked = match &mut self.slots[id] {
+            Slot::Active(_) => return,
+            Slot::Parked(p) => std::mem::replace(
+                p,
+                // Placeholder; overwritten by the Active slot below.
+                ParkedClient {
+                    reshuffles: 0,
+                    cursor: 0,
+                    jitter_rng: Rng::new(0),
+                    staleness: 0,
+                    num_samples: 0,
+                    device: 0,
+                    epoch: 0,
+                    residual: Vec::new(),
+                },
+            ),
+        };
+        let shard = self.source.shard(id);
+        let n = shard.num_samples();
+        debug_assert_eq!(n, parked.num_samples as usize);
+        let mut residual = vec![0.0f32; model.len()];
+        for &(i, v) in &parked.residual {
+            residual[i as usize] = v;
+        }
+        let client = Client {
+            batcher: Batcher::restore(
+                n,
+                self.batch_size,
+                self.root_rng.fork(&format!("batcher-{id}")),
+                parked.reshuffles,
+                parked.cursor as usize,
+            ),
+            jitter_rng: parked.jitter_rng,
+            id,
+            device: self.profiles[parked.device as usize].clone(),
+            shard,
+            params: model.to_vec(),
+            base: model.to_vec(),
+            residual,
+            prev_grad: None,
+            staleness: 0,
+            probe_images: Arc::clone(&self.probe_images),
+            probe_labels: Arc::clone(&self.probe_labels),
+            epoch: parked.epoch + 1,
+        };
+        self.slots[id] = Slot::Active(Box::new(client));
+        self.active += 1;
+        self.peak_active = self.peak_active.max(self.active);
+        self.hydrations += 1;
+    }
+
+    /// Demote client `id` to a compact record (see the module docs for
+    /// what survives a park). Panics if already parked or if the client
+    /// still has novel model state the engines would need — callers park
+    /// only at the post-flush point where a sync would have overwritten
+    /// the local model anyway.
+    pub fn park(&mut self, id: usize) {
+        let client = match std::mem::replace(
+            &mut self.slots[id],
+            Slot::Parked(ParkedClient {
+                reshuffles: 0,
+                cursor: 0,
+                jitter_rng: Rng::new(0),
+                staleness: 0,
+                num_samples: 0,
+                device: 0,
+                epoch: 0,
+                residual: Vec::new(),
+            }),
+        ) {
+            Slot::Active(c) => c,
+            Slot::Parked(_) => panic!("client {id} is already parked"),
+        };
+        let residual = summarize_residual(&client.residual, self.residual_budget);
+        self.slots[id] = Slot::Parked(ParkedClient {
+            reshuffles: client.batcher.reshuffles(),
+            cursor: client.batcher.cursor() as u32,
+            jitter_rng: client.jitter_rng,
+            staleness: client.staleness.min(u32::MAX as usize) as u32,
+            num_samples: client.num_samples() as u32,
+            device: DeviceProfile::paper_fleet_index(self.slots.len(), id),
+            epoch: client.epoch,
+            residual,
+        });
+        self.active -= 1;
+        self.parks += 1;
+    }
+
+    /// Hydrate every parked client to `model` — the legacy
+    /// (pre-virtualization) fleet shape, bitwise identical to eager
+    /// construction when the records are fresh.
+    pub fn hydrate_all(&mut self, model: &[f32]) {
+        for id in 0..self.slots.len() {
+            self.hydrate(id, model);
+        }
+    }
+
+    /// The parked record at `id` (tests/diagnostics). None if active.
+    pub fn parked(&self, id: usize) -> Option<&ParkedClient> {
+        match &self.slots[id] {
+            Slot::Parked(p) => Some(p),
+            Slot::Active(_) => None,
+        }
+    }
+
+    /// Iterate the hydrated clients, in id order.
+    pub fn iter_hydrated_mut(&mut self) -> impl Iterator<Item = (usize, &mut Client)> {
+        self.slots.iter_mut().enumerate().filter_map(|(i, s)| match s {
+            Slot::Active(c) => Some((i, &mut **c)),
+            Slot::Parked(_) => None,
+        })
+    }
+
+    /// Hydrated-client count right now.
+    pub fn active_count(&self) -> usize {
+        self.active
+    }
+
+    /// High-water mark of simultaneously hydrated clients.
+    pub fn peak_active(&self) -> usize {
+        self.peak_active
+    }
+
+    /// Total hydrations (initial materializations included).
+    pub fn hydrations(&self) -> u64 {
+        self.hydrations
+    }
+
+    /// Total parks.
+    pub fn parks(&self) -> u64 {
+        self.parks
+    }
+
+    /// Approximate resident bytes of the *parked* representation: slot
+    /// array + residual summaries + the lazy source's count matrix. The
+    /// fleet-scale bench reports this next to process RSS so the
+    /// O(n · parked_record) term is measured, not assumed.
+    pub fn approx_parked_bytes(&self) -> usize {
+        let residual_heap: usize = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Parked(p) => p.residual.capacity() * std::mem::size_of::<(u32, f32)>(),
+                Slot::Active(_) => 0,
+            })
+            .sum();
+        let source = match &self.source {
+            FleetData::Lazy(p) => p.approx_bytes(),
+            FleetData::Eager(_) => 0,
+        };
+        self.slots.len() * std::mem::size_of::<Slot>() + residual_heap + source
+    }
+}
+
+/// Top-|budget| nonzero residual coordinates by magnitude (index
+/// tie-break), returned in ascending index order — the deterministic
+/// park-time EF summary.
+fn summarize_residual(residual: &[f32], budget: usize) -> Vec<(u32, f32)> {
+    if budget == 0 {
+        return Vec::new();
+    }
+    let mut owed: Vec<(u32, f32)> = residual
+        .iter()
+        .enumerate()
+        .filter(|&(_, &v)| v != 0.0)
+        .map(|(i, &v)| (i as u32, v))
+        .collect();
+    if owed.len() > budget {
+        owed.select_nth_unstable_by(budget - 1, |a, b| {
+            b.1.abs().total_cmp(&a.1.abs()).then_with(|| a.0.cmp(&b.0))
+        });
+        owed.truncate(budget);
+    }
+    owed.sort_unstable_by_key(|&(i, _)| i);
+    owed
+}
+
 /// Apply the Eq. 1 amplification server-side:
 /// `V_i = raw * (1 + N/10^3)^{Acc_i}` (identity when the ablation disables
 /// the accuracy term).
@@ -314,12 +739,12 @@ mod tests {
         let shard = ClientShard { client_id: 0, data };
         let client = Client::new(
             0,
-            shard,
+            Arc::new(shard),
             DeviceProfile::rpi4_8gb(),
             vec![0.0; exec.param_count()],
             exec.batch_size(),
-            probe.images.clone(),
-            probe.labels.clone(),
+            Arc::new(probe.images.clone()),
+            Arc::new(probe.labels.clone()),
             &Rng::new(seed),
         );
         (client, exec)
@@ -502,6 +927,159 @@ mod tests {
         c.mark_stale();
         c.commit_speculation(ghost);
         assert_eq!(c.staleness, 2, "ghost's staleness=0 must not leak back");
+    }
+
+    fn mk_fleet(seed: u64, n: usize, budget: usize) -> (Fleet, MockExecutor) {
+        use crate::data::{LazyPartition, PartitionScheme};
+        let exec = MockExecutor::standard();
+        let root = Rng::new(seed);
+        let lazy = LazyPartition::new(
+            PartitionScheme::Iid,
+            n,
+            64,
+            &SynthConfig::default(),
+            &root.fork("data"),
+        );
+        let probe = generate(32, &SynthConfig::default(), &mut root.fork("probe"));
+        let fleet = Fleet::new(
+            FleetData::Lazy(lazy),
+            exec.batch_size(),
+            Arc::new(probe.images),
+            Arc::new(probe.labels),
+            budget,
+            root,
+        );
+        (fleet, exec)
+    }
+
+    #[test]
+    fn fleet_hydrate_all_matches_eager_construction() {
+        // A freshly hydrated fleet must be bitwise the eager Client::new
+        // fleet: same batcher forks, same jitter forks, same shard data.
+        let (mut fleet, mut exec) = mk_fleet(21, 3, 32);
+        let init = vec![0.0f32; exec.param_count()];
+        fleet.hydrate_all(&init);
+        assert_eq!(fleet.active_count(), 3);
+
+        use crate::data::{LazyPartition, PartitionScheme};
+        let root = Rng::new(21);
+        let lazy = LazyPartition::new(
+            PartitionScheme::Iid,
+            3,
+            64,
+            &SynthConfig::default(),
+            &root.fork("data"),
+        );
+        let probe = generate(32, &SynthConfig::default(), &mut root.fork("probe"));
+        let probe_images = Arc::new(probe.images);
+        let probe_labels = Arc::new(probe.labels);
+        let mut exec2 = MockExecutor::standard();
+        for id in 0..3 {
+            let mut eager = Client::new(
+                id,
+                Arc::new(lazy.materialize(id)),
+                DeviceProfile::table()[DeviceProfile::paper_fleet_index(3, id) as usize].clone(),
+                init.clone(),
+                exec.batch_size(),
+                Arc::clone(&probe_images),
+                Arc::clone(&probe_labels),
+                &root,
+            );
+            let ra = eager.local_round(&mut exec2, 1, 1, 2, 0.2, 1_000, 300).unwrap();
+            let rb = fleet
+                .client_mut(id)
+                .local_round(&mut exec, 1, 1, 2, 0.2, 1_000, 300)
+                .unwrap();
+            assert_eq!(ra.value.to_bits(), rb.value.to_bits(), "client {id}");
+            assert_eq!(ra.compute_seconds.to_bits(), rb.compute_seconds.to_bits());
+            for (a, b) in eager.params.iter().zip(&fleet.client(id).params) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn park_hydrate_preserves_batcher_and_jitter_streams() {
+        // A park/hydrate cycle at a sync point must continue the batcher
+        // order and jitter stream exactly where a never-parked client
+        // (synced at the same point) would.
+        let (mut parked_fleet, mut exec) = mk_fleet(22, 2, 32);
+        let (mut straight, mut exec2) = mk_fleet(22, 2, 32);
+        let init = vec![0.0f32; exec.param_count()];
+        parked_fleet.hydrate_all(&init);
+        straight.hydrate_all(&init);
+        let g = vec![0.125f32; init.len()];
+        for cycle in 0..3 {
+            for round in 1..=2 {
+                let r = cycle * 2 + round;
+                let ra = parked_fleet
+                    .client_mut(0)
+                    .local_round(&mut exec, r, 1, 2, 0.3, 1_000, 300)
+                    .unwrap();
+                let rb = straight
+                    .client_mut(0)
+                    .local_round(&mut exec2, r, 1, 2, 0.3, 1_000, 300)
+                    .unwrap();
+                // compute_seconds is pure jitter-stream: bitwise equality
+                // means the RNG stream survived the park.
+                assert_eq!(
+                    ra.compute_seconds.to_bits(),
+                    rb.compute_seconds.to_bits(),
+                    "cycle {cycle} round {round}"
+                );
+            }
+            // Park at a sync point vs. a plain sync.
+            parked_fleet.park(0);
+            assert!(parked_fleet.parked(0).is_some());
+            parked_fleet.hydrate(0, &g);
+            straight.client_mut(0).sync(&g);
+            for (a, b) in parked_fleet.client(0).params.iter().zip(&straight.client(0).params) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(parked_fleet.parks(), 3);
+        assert_eq!(parked_fleet.hydrations(), 2 + 3);
+        assert_eq!(parked_fleet.peak_active(), 2);
+    }
+
+    #[test]
+    fn park_summarizes_residual_top_budget() {
+        let (mut fleet, mut exec) = mk_fleet(23, 1, 4);
+        let init = vec![0.0f32; exec.param_count()];
+        fleet.hydrate_all(&init);
+        fleet.client_mut(0).local_round(&mut exec, 1, 1, 2, 0.5, 1, 1).unwrap();
+        let mut buf = SparseDelta::new();
+        fleet.client_mut(0).encode_sparse_upload(Precision::F32, 8, true, &mut buf);
+        let full: Vec<f32> = fleet.client(0).residual().to_vec();
+        assert!(full.iter().filter(|&&v| v != 0.0).count() > 4, "test needs residual pressure");
+        // Expected top-4 by |v|, index tie-break.
+        let mut owed: Vec<(u32, f32)> = full
+            .iter()
+            .enumerate()
+            .filter(|&(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        owed.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()).then_with(|| a.0.cmp(&b.0)));
+        owed.truncate(4);
+        owed.sort_unstable_by_key(|&(i, _)| i);
+        fleet.park(0);
+        assert_eq!(fleet.parked(0).unwrap().residual, owed);
+        // Hydration expands the summary back into a dense residual.
+        fleet.hydrate(0, &init);
+        for (i, &v) in fleet.client(0).residual().iter().enumerate() {
+            let want = owed.iter().find(|&&(j, _)| j as usize == i).map_or(0.0, |&(_, w)| w);
+            assert_eq!(v.to_bits(), want.to_bits(), "coord {i}");
+        }
+    }
+
+    #[test]
+    fn fleet_reads_samples_without_hydrating() {
+        let (fleet, _) = mk_fleet(24, 5, 0);
+        for id in 0..5 {
+            assert!(!fleet.is_active(id));
+            assert_eq!(fleet.num_samples(id), 64);
+        }
+        assert!(fleet.approx_parked_bytes() > 0);
     }
 
     #[test]

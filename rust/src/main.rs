@@ -119,6 +119,8 @@ fn print_usage() {
          \x20                 [--engine barriered|barrier_free] [--engine-threads N] [--shards S]\n\
          \x20                 [--reconcile-every N] [--rounds N] [--seed N] [--mock]\n\
          \x20                 [--compression dense|topk] [--k-fraction F] [--error-feedback true|false]\n\
+         \x20                 [--layer-k-fractions F1,F2,..] [--active-set N] [--edge-fanout N]\n\
+         \x20                 [--compact-records] [--alpha-step F]\n\
          \x20                 [--control on|off|staleness,compression,rebalance]\n\
          \x20                 [--control-interval N] [--control-window N]\n\
          \x20                 [--out DIR] [--realtime SCALE] [--quiet]\n\
@@ -163,6 +165,24 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
     if let Some(f) = flags.get("k-fraction") {
         cfg.compression.k_fraction =
             f.parse::<f64>().with_context(|| format!("--k-fraction {f:?}"))?;
+    }
+    if let Some(l) = flags.get("layer-k-fractions") {
+        cfg.compression.layer_k_fractions = vafl::config::parse_fraction_list(l)
+            .with_context(|| format!("--layer-k-fractions {l:?}"))?;
+    }
+    if let Some(a) = flags.get("active-set") {
+        cfg.fleet.active_set =
+            a.parse::<usize>().with_context(|| format!("--active-set {a:?}"))?;
+    }
+    if let Some(e) = flags.get_usize("edge-fanout")? {
+        cfg.engine_opts.edge_fanout = e;
+    }
+    if flags.has("compact-records") {
+        cfg.fleet.compact_records = true;
+    }
+    if let Some(s) = flags.get("alpha-step") {
+        cfg.control.alpha_step =
+            s.parse::<f64>().with_context(|| format!("--alpha-step {s:?}"))?;
     }
     if let Some(e) = flags.get("error-feedback") {
         cfg.compression.error_feedback = match e {

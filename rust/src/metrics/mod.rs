@@ -120,6 +120,13 @@ pub struct RunMetrics {
     /// Committed engine-event trace `(vtime, label)` for the realtime
     /// driver — recorded only under `trace_events` (barrier-free engine).
     pub event_trace: Vec<(f64, String)>,
+    /// Fleet lifecycle counters (lifetime totals over the server's fleet;
+    /// see `crate::fleet`): parked-record hydrations, active→parked
+    /// demotions, and the high-water mark of simultaneously hydrated
+    /// clients — the resident-memory driver at fleet scale.
+    pub fleet_hydrations: u64,
+    pub fleet_parks: u64,
+    pub peak_active: usize,
 }
 
 impl RunMetrics {
@@ -132,6 +139,9 @@ impl RunMetrics {
             engine_events: 0,
             control_records: Vec::new(),
             event_trace: Vec::new(),
+            fleet_hydrations: 0,
+            fleet_parks: 0,
+            peak_active: 0,
         }
     }
 
@@ -319,6 +329,9 @@ impl RunMetrics {
             ("engine_events", Value::from(self.engine_events)),
             ("spec_committed", Value::from(spec_committed)),
             ("spec_replayed", Value::from(spec_replayed)),
+            ("fleet_hydrations", Value::from(self.fleet_hydrations as usize)),
+            ("fleet_parks", Value::from(self.fleet_parks as usize)),
+            ("peak_active", Value::from(self.peak_active)),
             (
                 "control",
                 Value::Arr(

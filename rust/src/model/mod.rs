@@ -11,7 +11,7 @@ pub mod spec;
 pub mod vector;
 
 pub use quant::{Precision, QuantBuf};
-pub use sparse::{sparse_payload_bytes, SparseDelta};
+pub use sparse::{sparse_payload_bytes, sparse_payload_bytes_layers, SparseDelta};
 pub use spec::{LayerSpec, ParamSpec};
 pub use vector::{
     axpy, l2_norm_sq, sq_distance, weighted_average, weighted_average_into,

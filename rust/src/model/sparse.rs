@@ -50,6 +50,20 @@ pub fn sparse_payload_bytes(precision: Precision, k: usize, dim: usize) -> u64 {
     64 + index_bytes + precision.body_bytes(k)
 }
 
+/// Exact wire size of a per-layer sparse payload transmitting `ks[l]` of
+/// `sizes[l]` values in each layer: one 64-byte frame header (the
+/// per-layer counts ride in it, like the dimension/precision tags), each
+/// layer's index block elided when that layer is full, and one value
+/// body over all transmitted coordinates. With every layer full this is
+/// exactly the dense payload.
+pub fn sparse_payload_bytes_layers(precision: Precision, ks: &[usize], sizes: &[usize]) -> u64 {
+    assert_eq!(ks.len(), sizes.len(), "per-layer k/size length mismatch");
+    let total_k: usize = ks.iter().sum();
+    let index_bytes: u64 =
+        ks.iter().zip(sizes).map(|(&k, &s)| if k == s { 0 } else { 4 * k as u64 }).sum();
+    64 + index_bytes + precision.body_bytes(total_k)
+}
+
 /// A reusable sparse top-k wire payload: sorted `u32` indices plus the
 /// quantized values at those coordinates (see the module docs for the
 /// exact layout and the selection semantics).
@@ -61,6 +75,10 @@ pub struct SparseDelta {
     values: QuantBuf,
     /// Full parameter dimension the indices address.
     dim: usize,
+    /// Wire bytes of the index block(s) of the last encode (flat: `4·k`,
+    /// elided at `k == dim`; layered: per-layer sum with full layers
+    /// elided).
+    index_bytes: u64,
     /// Scratch: per-coordinate selection key (delta + residual).
     key_scratch: Vec<f32>,
     /// Scratch: candidate index permutation for the top-k select.
@@ -138,9 +156,10 @@ impl SparseDelta {
         sum
     }
 
-    /// Exact wire size of this payload (see [`sparse_payload_bytes`]).
+    /// Exact wire size of this payload (see [`sparse_payload_bytes`] /
+    /// [`sparse_payload_bytes_layers`]).
     pub fn payload_bytes(&self) -> u64 {
-        sparse_payload_bytes(self.values.precision(), self.indices.len(), self.dim)
+        64 + self.index_bytes + self.values.precision().body_bytes(self.indices.len())
     }
 
     /// Encode the top-`k`-by-magnitude coordinates of
@@ -174,22 +193,78 @@ impl SparseDelta {
         assert!(n > 0, "cannot encode an empty parameter vector");
         let k = k.clamp(1, n);
         self.dim = n;
+        self.build_key(params, base, residual.as_deref());
+        self.indices.clear();
+        self.select_range(0, n, k);
+        self.index_bytes = if k == n { 0 } else { 4 * k as u64 };
+        self.gather_and_feedback(precision, params, residual);
+    }
 
-        // Selection key: how far this coordinate has moved since the last
-        // sync, plus any error-feedback debt.
+    /// Per-layer variant of [`SparseDelta::encode_topk`]: the top
+    /// `ks[l]`-by-magnitude coordinates are selected *within each layer's
+    /// parameter range* (`layer_sizes` partitions the flat vector in
+    /// offset order, as validated by `ParamSpec`), so a quiet layer
+    /// cannot be starved by a loud one. Selection semantics, transmitted
+    /// absolute values, and error feedback are exactly the flat encode's,
+    /// applied per range; the concatenated index list stays strictly
+    /// ascending because layers are contiguous. Each `ks[l]` is clamped
+    /// to `[1, layer_sizes[l]]`; with every layer at full k the payload
+    /// is bitwise the dense path (all index blocks elided, value body =
+    /// the dense body).
+    pub fn encode_topk_layers(
+        &mut self,
+        precision: Precision,
+        params: &[f32],
+        base: &[f32],
+        residual: Option<&mut [f32]>,
+        layer_sizes: &[usize],
+        ks: &[usize],
+    ) {
+        let n = params.len();
+        assert_eq!(base.len(), n, "base/params length mismatch");
+        assert!(n > 0, "cannot encode an empty parameter vector");
+        assert_eq!(layer_sizes.len(), ks.len(), "per-layer k/size length mismatch");
+        assert_eq!(
+            layer_sizes.iter().sum::<usize>(),
+            n,
+            "layer sizes must partition the parameter vector"
+        );
+        self.dim = n;
+        self.build_key(params, base, residual.as_deref());
+        self.indices.clear();
+        self.index_bytes = 0;
+        let mut off = 0usize;
+        for (&size, &k) in layer_sizes.iter().zip(ks) {
+            assert!(size > 0, "empty layer in layer_sizes");
+            let k = k.clamp(1, size);
+            self.select_range(off, size, k);
+            self.index_bytes += if k == size { 0 } else { 4 * k as u64 };
+            off += size;
+        }
+        self.gather_and_feedback(precision, params, residual);
+    }
+
+    /// Selection key: how far each coordinate has moved since the last
+    /// sync, plus any error-feedback debt.
+    fn build_key(&mut self, params: &[f32], base: &[f32], residual: Option<&[f32]>) {
         self.key_scratch.clear();
-        match &residual {
+        match residual {
             Some(r) => {
-                assert_eq!(r.len(), n, "residual/params length mismatch");
+                assert_eq!(r.len(), params.len(), "residual/params length mismatch");
                 self.key_scratch
                     .extend(params.iter().zip(base).zip(r.iter()).map(|((&p, &b), &e)| p - b + e));
             }
             None => self.key_scratch.extend(params.iter().zip(base).map(|(&p, &b)| p - b)),
         }
+    }
 
+    /// Append the top-`k`-by-key coordinates of `[off, off + size)` to
+    /// `indices`, sorted ascending (the whole range, selection elided,
+    /// when `k == size`).
+    fn select_range(&mut self, off: usize, size: usize, k: usize) {
         self.order_scratch.clear();
-        self.order_scratch.extend(0..n as u32);
-        if k < n {
+        self.order_scratch.extend(off as u32..(off + size) as u32);
+        if k < size {
             let keys = &self.key_scratch;
             let by_magnitude_desc = |&a: &u32, &b: &u32| {
                 keys[b as usize]
@@ -200,17 +275,24 @@ impl SparseDelta {
             let _ = self.order_scratch.select_nth_unstable_by(k - 1, by_magnitude_desc);
             self.order_scratch[..k].sort_unstable();
         }
-        self.indices.clear();
         self.indices.extend_from_slice(&self.order_scratch[..k]);
         debug_assert!(self.indices.windows(2).all(|w| w[0] < w[1]), "indices not strictly sorted");
+    }
 
-        // Gather the absolute values and run them through the dense codec
-        // (at k == n this is byte-identical to encoding `params`).
+    /// Gather the absolute values at the selected coordinates through the
+    /// dense codec (at full k this is byte-identical to encoding
+    /// `params`), then write back the error-feedback residual: unsent
+    /// delta mass carries to the next round, transmitted coordinates
+    /// clear their debt.
+    fn gather_and_feedback(
+        &mut self,
+        precision: Precision,
+        params: &[f32],
+        residual: Option<&mut [f32]>,
+    ) {
         self.val_scratch.clear();
         self.val_scratch.extend(self.indices.iter().map(|&i| params[i as usize]));
         self.values.encode(precision, &self.val_scratch);
-
-        // Error feedback: unsent delta mass carries to the next round.
         if let Some(r) = residual {
             r.copy_from_slice(&self.key_scratch);
             for &i in &self.indices {
@@ -391,6 +473,76 @@ mod tests {
         sd.encode_topk(Precision::F32, &nan_params, &base, None, 1);
         assert!((sd.key_l1() - 4.5).abs() < 1e-9);
         assert_eq!(sd.sent_key_l1(), 0.0, "the NaN coord is selected but adds no mass");
+    }
+
+    #[test]
+    fn layered_topk_selects_within_each_layer() {
+        // One loud layer and one quiet layer: a flat top-3 would spend the
+        // whole budget on layer 0; per-layer budgets guarantee layer 1
+        // representation.
+        let params = vec![10.0f32, -9.0, 8.0, 7.0, 0.2, 0.1, -0.3, 0.05];
+        let base = vec![0.0f32; 8];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 3);
+        assert_eq!(sd.indices(), &[0, 1, 2], "flat top-3 starves layer 1");
+        sd.encode_topk_layers(Precision::F32, &params, &base, None, &[4, 4], &[2, 1]);
+        assert_eq!(sd.indices(), &[0, 1, 6]);
+        assert_eq!(sd.value(0), 10.0);
+        assert_eq!(sd.value(1), -9.0);
+        assert_eq!(sd.value(2), -0.3);
+        // Index blocks: both layers partial -> 4 bytes per index.
+        assert_eq!(sd.payload_bytes(), 64 + 12 + Precision::F32.body_bytes(3));
+        assert_eq!(
+            sd.payload_bytes(),
+            sparse_payload_bytes_layers(Precision::F32, &[2, 1], &[4, 4])
+        );
+    }
+
+    #[test]
+    fn layered_full_k_matches_dense_payload_exactly() {
+        let (params, base) = vecs(8, 96);
+        let mut sd = SparseDelta::new();
+        let mut dense = QuantBuf::new();
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            sd.encode_topk_layers(p, &params, &base, None, &[64, 32], &[64, 32]);
+            dense.encode(p, &params);
+            assert_eq!(sd.len(), 96);
+            assert_eq!(sd.payload_bytes(), dense.payload_bytes(), "{}", p.name());
+            for i in 0..96 {
+                assert_eq!(sd.value(i).to_bits(), dense.get(i).to_bits(), "{}", p.name());
+            }
+        }
+        // A full layer next to a partial one elides only its own index
+        // block.
+        sd.encode_topk_layers(Precision::F32, &params, &base, None, &[64, 32], &[64, 8]);
+        assert_eq!(sd.len(), 72);
+        assert_eq!(sd.payload_bytes(), 64 + 4 * 8 + Precision::F32.body_bytes(72));
+    }
+
+    #[test]
+    fn layered_error_feedback_matches_flat_semantics_per_range() {
+        let params = vec![3.0f32, 1.0, 0.5, 2.0, 0.25, 0.125];
+        let base = vec![0.0f32; 6];
+        let mut r = vec![0.0f32; 6];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk_layers(Precision::F32, &params, &base, Some(&mut r), &[3, 3], &[1, 1]);
+        assert_eq!(sd.indices(), &[0, 3]);
+        assert_eq!(r, vec![0.0, 1.0, 0.5, 0.0, 0.25, 0.125]);
+        // The residual participates in the next selection within its
+        // layer, exactly like the flat path.
+        sd.encode_topk_layers(Precision::F32, &params, &base, Some(&mut r), &[3, 3], &[1, 1]);
+        assert_eq!(sd.indices(), &[1, 4]);
+    }
+
+    #[test]
+    fn layered_ks_are_clamped_per_layer() {
+        let (params, base) = vecs(9, 10);
+        let mut sd = SparseDelta::new();
+        sd.encode_topk_layers(Precision::F32, &params, &base, None, &[6, 4], &[0, 100]);
+        // k=0 clamps to 1 in layer 0; k=100 clamps to 4 (full layer 1).
+        assert_eq!(sd.len(), 5);
+        assert!(sd.indices()[0] < 6);
+        assert_eq!(&sd.indices()[1..], &[6, 7, 8, 9]);
     }
 
     #[test]

@@ -137,7 +137,7 @@ fn control_off_is_bitwise_identical_both_engines() {
 fn adaptive_base(shards: usize, rounds: usize) -> ExperimentConfig {
     let mut cfg = async_base(shards, rounds);
     cfg.compression =
-        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, error_feedback: true };
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, layer_k_fractions: Vec::new(), error_feedback: true };
     cfg.control = ControlConfig {
         enabled: true,
         interval: 1,
@@ -280,6 +280,109 @@ fn compression_controller_grows_k_under_residual_pressure() {
     }
 }
 
+#[test]
+fn alpha_step_drives_the_staleness_decision_stream() {
+    // `control.alpha_step` (formerly a hardcoded 0.9) is the staleness
+    // controller's multiplicative alpha move. With target 0 and no
+    // deadband every evaluation sees mean staleness above target, so
+    // every alpha0 decision must be exactly `old * alpha_step` clamped
+    // to [alpha_min, alpha_max] — checked bit-for-bit against the
+    // decision stream — and a different step must produce a different
+    // stream.
+    let mk = |step: f64| {
+        let mut cfg = adaptive_base(1, 16);
+        cfg.control.compression = false;
+        cfg.control.rebalance = false;
+        cfg.control.alpha_step = step;
+        experiments::run(&cfg).unwrap()
+    };
+    let half = mk(0.5);
+    let alphas = |out: &vafl::experiments::Outcome| -> Vec<(f64, f64)> {
+        out.metrics
+            .control_records
+            .iter()
+            .filter(|d| d.knob == "alpha0")
+            .map(|d| (d.old, d.new))
+            .collect()
+    };
+    let moves = alphas(&half);
+    assert!(!moves.is_empty(), "staleness controller never moved alpha0");
+    let cfg = adaptive_base(1, 16);
+    for &(old, new) in &moves {
+        let expect = (old * 0.5).clamp(cfg.control.alpha_min, cfg.control.alpha_max);
+        assert_eq!(
+            new.to_bits(),
+            expect.to_bits(),
+            "alpha0 moved {old} -> {new}, expected {expect} under alpha_step = 0.5"
+        );
+    }
+    let default_step = mk(0.9);
+    assert_ne!(
+        alphas(&half),
+        alphas(&default_step),
+        "alpha_step had no effect on the decision stream"
+    );
+}
+
+#[test]
+fn compression_controller_reacts_to_straggler_wan_link() {
+    // The compression controller's residual signal is fed by what
+    // actually arrives over the link, so swapping the calm preset link
+    // for `straggler_wan` must change the decision stream — while every
+    // decision on both links stays consistent with its own signal
+    // (raises above `residual_hi`, cuts below `residual_lo`).
+    let mk = |straggler: bool| {
+        let mut cfg = adaptive_base(1, 16);
+        cfg.control.staleness = false;
+        cfg.control.rebalance = false;
+        cfg.control.residual_hi = 0.05;
+        cfg.control.residual_lo = 0.001;
+        if !straggler {
+            cfg.link = experiments::preset('b').unwrap().link;
+        }
+        experiments::run(&cfg).unwrap()
+    };
+    let wan = mk(true);
+    let calm = mk(false);
+    let cfg = adaptive_base(1, 16);
+    for out in [&wan, &calm] {
+        let kf: Vec<&ControlRecord> = out
+            .metrics
+            .control_records
+            .iter()
+            .filter(|d| d.knob == "k_fraction")
+            .collect();
+        assert!(!kf.is_empty(), "compression controller never fired");
+        for d in kf {
+            assert_eq!(d.controller, "compression");
+            assert!(d.signal.is_finite(), "decision without a residual signal: {d:?}");
+            if d.new > d.old {
+                assert!(d.signal > 0.05, "raise without residual pressure: {d:?}");
+            } else {
+                assert!(d.signal < 0.001, "cut without low residual: {d:?}");
+            }
+            assert!((cfg.control.k_fraction_min..=cfg.control.k_fraction_max).contains(&d.new));
+        }
+    }
+    // Compare the full decision identity including the residual signal:
+    // the knob trajectory alone could coincide (both runs walk the same
+    // multiplicative ladder), but the windowed residual mass that drove
+    // each step cannot survive a different arrival stream.
+    let stream = |out: &vafl::experiments::Outcome| -> Vec<(usize, u64, u64, u64)> {
+        out.metrics
+            .control_records
+            .iter()
+            .filter(|d| d.knob == "k_fraction")
+            .map(|d| (d.round, d.old.to_bits(), d.new.to_bits(), d.signal.to_bits()))
+            .collect()
+    };
+    assert_ne!(
+        stream(&wan),
+        stream(&calm),
+        "the link profile had no effect on compression decisions"
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Shard rebalancing: migrations only at reconcile boundaries
 // ---------------------------------------------------------------------------
@@ -338,7 +441,7 @@ fn barriered_engine_adapts_k_fraction_only() {
     let mut cfg = quick('a', Algorithm::Vafl, 12);
     cfg.engine = EngineMode::Barriered;
     cfg.compression =
-        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, error_feedback: true };
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, layer_k_fractions: Vec::new(), error_feedback: true };
     cfg.control = ControlConfig {
         enabled: true,
         interval: 1,

@@ -1,0 +1,285 @@
+//! Virtualized-fleet engine tests: hydrate-everything mode is bitwise
+//! the pre-fleet engines, the active-set window parks and rotates
+//! without breaking determinism or serial == threaded commit-stream
+//! equivalence, the two-tier (edge) aggregation path tracks the legacy
+//! flush numerically, and `fleet.compact_records` strips exactly the
+//! O(n) record columns.
+
+use vafl::config::{Algorithm, AsyncEngineConfig, Backend, EngineMode, ExperimentConfig};
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::metrics::RoundRecord;
+
+fn quick(which: char, algorithm: Algorithm, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = algorithm;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 120;
+    cfg.test_samples = 96;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+/// Barrier-free base on experiment b's 7-client fleet, straggler WAN.
+fn fleet_base(shards: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = quick('b', Algorithm::Vafl, rounds);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.link = vafl::netsim::LinkProfile::straggler_wan();
+    cfg.engine_opts.shards = shards;
+    cfg.engine_opts.reconcile_every = 3;
+    cfg
+}
+
+/// Bitwise record equality modulo the speculation telemetry.
+fn assert_records_equal(x: &RoundRecord, y: &RoundRecord) {
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.shard, y.shard, "round {}", x.round);
+    assert_eq!(x.vtime.to_bits(), y.vtime.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.threshold.to_bits(), y.threshold.to_bits(), "round {}", x.round);
+    assert_eq!(x.idle_seconds.to_bits(), y.idle_seconds.to_bits(), "round {}", x.round);
+    assert_eq!(x.uploads, y.uploads);
+    assert_eq!(x.cum_uploads, y.cum_uploads);
+    assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+    assert_eq!(x.reports, y.reports);
+    assert_eq!(x.in_flight, y.in_flight);
+    assert_eq!(x.selected, y.selected);
+    assert_eq!(x.upload_staleness, y.upload_staleness);
+    let vb = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    assert_eq!(vb(&x.values), vb(&y.values), "round {}", x.round);
+    assert_eq!(vb(&x.client_accs), vb(&y.client_accs), "round {}", x.round);
+}
+
+// ---------------------------------------------------------------------------
+// Hydrate-everything mode: the fleet is invisible
+// ---------------------------------------------------------------------------
+
+#[test]
+fn active_set_full_fleet_is_bitwise_hydrate_all() {
+    // `active_set = n` hydrates the whole fleet lazily at engine start;
+    // `active_set = 0` hydrates it eagerly at construction. Both leave
+    // the waiting queue empty, so the engines must commit identical
+    // streams bit for bit — serial and threaded, shards 1 and 4.
+    for shards in [1usize, 4] {
+        for threaded in [false, true] {
+            let mut base = fleet_base(shards, 8);
+            if threaded {
+                base.engine_opts.threaded = true;
+                base.engine_opts.workers = 3;
+            }
+            let eager = experiments::run(&base).unwrap();
+            let mut lazy_cfg = base.clone();
+            lazy_cfg.fleet.active_set = base.num_clients;
+            let lazy = experiments::run(&lazy_cfg).unwrap();
+            assert_eq!(eager.metrics.records.len(), lazy.metrics.records.len());
+            for (x, y) in eager.metrics.records.iter().zip(&lazy.metrics.records) {
+                assert_records_equal(x, y);
+            }
+            assert_eq!(eager.metrics.engine_events, lazy.metrics.engine_events);
+            // Full-fleet window: everyone hydrated once, nobody parked.
+            assert_eq!(lazy.metrics.fleet_hydrations, base.num_clients as u64);
+            assert_eq!(lazy.metrics.fleet_parks, 0);
+            assert_eq!(lazy.metrics.peak_active, base.num_clients);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Active-set window: parking, rotation, and the window invariant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn active_set_window_parks_and_rotates() {
+    // AFL (every report uploads) so every flush broadcasts and the
+    // FIFO rotation is guaranteed to cycle parked clients in.
+    let mut cfg = fleet_base(1, 12);
+    cfg.algorithm = Algorithm::Afl;
+    cfg.fleet.active_set = 2;
+    let out = experiments::run(&cfg).unwrap();
+    assert_eq!(out.metrics.records.len(), 12);
+    assert_eq!(out.metrics.peak_active, 2, "window exceeded active_set");
+    assert!(out.metrics.fleet_parks > 0, "nothing was ever parked");
+    // hydrations = initial window + one per park-rotation.
+    assert_eq!(out.metrics.fleet_hydrations, 2 + out.metrics.fleet_parks);
+    // Rotation reaches beyond the initial window: some flushed upload
+    // must come from a client that started parked (id >= 2).
+    let rotated = out
+        .metrics
+        .records
+        .iter()
+        .flat_map(|r| r.selected.iter().enumerate())
+        .any(|(c, &sel)| sel && c >= 2);
+    assert!(rotated, "no initially-parked client ever uploaded");
+    // All records stay well-formed.
+    for r in &out.metrics.records {
+        assert!(r.vtime.is_finite());
+        assert!(r.global_acc.is_nan() || (0.0..=1.0).contains(&r.global_acc));
+    }
+}
+
+#[test]
+fn active_set_is_deterministic_and_differs_from_hydrate_all() {
+    let mut cfg = fleet_base(1, 10);
+    cfg.fleet.active_set = 2;
+    let a = experiments::run(&cfg).unwrap();
+    let b = experiments::run(&cfg).unwrap();
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_equal(x, y);
+    }
+    assert_eq!(a.metrics.fleet_hydrations, b.metrics.fleet_hydrations);
+    assert_eq!(a.metrics.fleet_parks, b.metrics.fleet_parks);
+    // A 2-wide window schedules different work than the full fleet.
+    let full = experiments::run(&fleet_base(1, 10)).unwrap();
+    let same = a
+        .metrics
+        .records
+        .iter()
+        .zip(&full.metrics.records)
+        .all(|(x, y)| x.vtime.to_bits() == y.vtime.to_bits());
+    assert!(!same, "the active-set window had no effect on the stream");
+}
+
+#[test]
+fn active_set_serial_matches_threaded() {
+    // Parked->hydrated rotation interleaves with speculative dispatch;
+    // the committed stream must stay execution-strategy invariant,
+    // unsharded and sharded.
+    for shards in [1usize, 4] {
+        let mut scfg = fleet_base(shards, 10);
+        scfg.fleet.active_set = 3;
+        let serial = experiments::run(&scfg).unwrap();
+        let mut tcfg = scfg.clone();
+        tcfg.engine_opts.threaded = true;
+        tcfg.engine_opts.workers = 4;
+        let threaded = experiments::run(&tcfg).unwrap();
+        assert_eq!(serial.metrics.records.len(), threaded.metrics.records.len());
+        for (x, y) in serial.metrics.records.iter().zip(&threaded.metrics.records) {
+            assert_records_equal(x, y);
+        }
+        assert_eq!(serial.metrics.engine_events, threaded.metrics.engine_events);
+        assert_eq!(serial.metrics.fleet_hydrations, threaded.metrics.fleet_hydrations);
+        assert_eq!(serial.metrics.fleet_parks, threaded.metrics.fleet_parks);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-tier (edge) aggregation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn edge_fanout_tracks_legacy_flush_numerically() {
+    // fanout > 1 reassociates the same weighted sums (commutative edge
+    // partial sums instead of one client-ordered pass), so it is NOT
+    // bitwise the legacy flush — but it computes the same aggregate up
+    // to f32 rounding, and the learning outcome must match closely.
+    let base = fleet_base(1, 12);
+    let legacy = experiments::run(&base).unwrap();
+    let mut ecfg = base.clone();
+    ecfg.engine_opts.edge_fanout = 4;
+    let edged = experiments::run(&ecfg).unwrap();
+    assert_eq!(legacy.metrics.records.len(), edged.metrics.records.len());
+    // Same flush cadence and upload accounting (aggregation changes
+    // values, never scheduling).
+    for (x, y) in legacy.metrics.records.iter().zip(&edged.metrics.records) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.uploads, y.uploads);
+        assert_eq!(x.selected, y.selected, "round {}", x.round);
+        assert_eq!(x.upload_staleness, y.upload_staleness, "round {}", x.round);
+    }
+    let (bl, be) = (legacy.best_accuracy, edged.best_accuracy);
+    assert!(
+        (bl - be).abs() < 0.05,
+        "edge aggregation diverged from the legacy flush: best acc {bl} vs {be}"
+    );
+}
+
+#[test]
+fn edge_fanout_is_deterministic_and_thread_invariant() {
+    for (shards, topk) in [(1usize, false), (2, true)] {
+        let mut cfg = fleet_base(shards, 10);
+        cfg.engine_opts.edge_fanout = 4;
+        if topk {
+            cfg.compression.mode = vafl::config::CompressionMode::TopK;
+            cfg.compression.k_fraction = 0.25;
+        }
+        let a = experiments::run(&cfg).unwrap();
+        let b = experiments::run(&cfg).unwrap();
+        assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+        for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+            assert_records_equal(x, y);
+        }
+        let mut tcfg = cfg.clone();
+        tcfg.engine_opts.threaded = true;
+        tcfg.engine_opts.workers = 3;
+        let threaded = experiments::run(&tcfg).unwrap();
+        assert_eq!(a.metrics.records.len(), threaded.metrics.records.len());
+        for (x, y) in a.metrics.records.iter().zip(&threaded.metrics.records) {
+            assert_records_equal(x, y);
+        }
+    }
+}
+
+#[test]
+fn edge_fanout_composes_with_active_set() {
+    // The full fleet-scale configuration: rotation window + edge tier +
+    // compact records, sharded. Must complete, stay deterministic, and
+    // respect the window invariant.
+    let mk = || {
+        let mut cfg = fleet_base(2, 10);
+        cfg.algorithm = Algorithm::Afl;
+        cfg.fleet.active_set = 4;
+        cfg.fleet.compact_records = true;
+        cfg.engine_opts.edge_fanout = 2;
+        experiments::run(&cfg).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.metrics.records.len(), 10);
+    assert!(a.metrics.peak_active <= 4);
+    assert!(a.metrics.fleet_parks > 0);
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits());
+        assert_eq!(x.bytes_up, y.bytes_up);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compact records
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compact_records_strip_vectors_and_keep_scalars() {
+    let base = fleet_base(1, 8);
+    let full = experiments::run(&base).unwrap();
+    let mut ccfg = base.clone();
+    ccfg.fleet.compact_records = true;
+    let compact = experiments::run(&ccfg).unwrap();
+    assert_eq!(full.metrics.records.len(), compact.metrics.records.len());
+    for (x, y) in full.metrics.records.iter().zip(&compact.metrics.records) {
+        // Scalar telemetry is untouched...
+        assert_eq!(x.vtime.to_bits(), y.vtime.to_bits());
+        assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits());
+        assert_eq!(x.uploads, y.uploads);
+        assert_eq!(x.bytes_up, y.bytes_up);
+        assert_eq!(x.upload_staleness, y.upload_staleness);
+        // ...while the O(n) columns are dropped.
+        assert!(!x.selected.is_empty());
+        assert!(y.selected.is_empty(), "compact record kept `selected`");
+        assert!(y.values.is_empty(), "compact record kept `values`");
+        assert!(y.client_accs.is_empty(), "compact record kept `client_accs`");
+    }
+}

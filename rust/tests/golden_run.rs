@@ -186,6 +186,7 @@ fn golden_barrier_free_topk_round_stream_is_stable() {
     cfg.compression = CompressionConfig {
         mode: CompressionMode::TopK,
         k_fraction: 0.25,
+        layer_k_fractions: Vec::new(),
         error_feedback: true,
     };
     run_snapshot("barrier_free_topk", &cfg);
@@ -219,6 +220,7 @@ fn golden_barrier_free_adaptive_round_stream_is_stable() {
     cfg.compression = CompressionConfig {
         mode: CompressionMode::TopK,
         k_fraction: 0.5,
+        layer_k_fractions: Vec::new(),
         error_feedback: true,
     };
     cfg.control = ControlConfig {

@@ -3,17 +3,23 @@
 //! `Cases` below drives each property over many seeded random inputs and
 //! reports the failing seed, which reproduces deterministically).
 
+use std::sync::Arc;
+
 use vafl::config::{EaflmParams, ValueFnConfig};
 use vafl::coordinator::aggregate::Aggregator;
 use vafl::coordinator::policy::{
     AflPolicy, EaflmPolicy, PolicyContext, SelectionPolicy, VaflPolicy,
 };
-use vafl::data::synth::{generate_t, SynthConfig};
-use vafl::fleet::ClientReport;
+use vafl::data::synth::{generate, generate_t, SynthConfig};
+use vafl::data::ClientShard;
+use vafl::device::DeviceProfile;
+use vafl::fleet::{Client, ClientReport, Fleet, FleetData};
 use vafl::metrics::ccr;
 use vafl::model::quant::{quantize_int8, Precision, QuantBuf};
+use vafl::model::sparse::SparseDelta;
 use vafl::model::{sq_distance, weighted_average, weighted_average_into_t};
 use vafl::netsim::{LinkProfile, Message};
+use vafl::runtime::{Executor, MockExecutor};
 use vafl::sim::EventQueue;
 use vafl::util::rng::Rng;
 
@@ -349,5 +355,216 @@ fn prop_amplification_monotone() {
         assert!(amplify_value(raw, (acc + 0.1).min(1.0), n, cfg) >= v);
         assert!(amplify_value(raw, acc, n + 10, cfg) >= v);
         assert!(v >= raw); // base > 1, exponent >= 0
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Virtualized fleet: park/hydrate determinism
+// ---------------------------------------------------------------------------
+
+/// Small eager fleet over synthetic shards (one RNG stream for data, a
+/// separate root for the per-client batcher/jitter forks, like
+/// `build_server_with_data`).
+fn mk_fleet(seed: u64, n_clients: usize, residual_budget: usize) -> Fleet {
+    let mut rng = Rng::new(seed);
+    let shards: Vec<Arc<ClientShard>> = (0..n_clients)
+        .map(|id| {
+            let data = generate(60, &SynthConfig::default(), &mut rng);
+            Arc::new(ClientShard { client_id: id, data })
+        })
+        .collect();
+    let probe = generate(16, &SynthConfig::default(), &mut rng);
+    Fleet::new(
+        FleetData::Eager(shards),
+        MockExecutor::standard().batch_size(),
+        Arc::new(probe.images),
+        Arc::new(probe.labels),
+        residual_budget,
+        Rng::new(seed ^ 0xF1EE7),
+    )
+}
+
+#[test]
+fn prop_park_hydrate_cycles_preserve_batcher_and_jitter_streams() {
+    // The virtualized-fleet guarantee (fleet module docs): a park/hydrate
+    // cycle at a broadcast point is observationally the broadcast sync it
+    // replaces — the batcher resumes at the same shuffle position and the
+    // device-jitter stream continues unbroken. Drive one client through
+    // random rounds on two identical fleets, parking fleet B at random
+    // sync points, and demand bit-identical training trajectories.
+    // (`value` is exempt on the round right after a hydration: parking
+    // drops nabla^{k-1}, so Eq. 1 degenerates to ||nabla^k||^2 there,
+    // exactly like a client's first-ever round; the gradients themselves
+    // stay bitwise equal, so the streams re-align one round later.)
+    cases(12, |rng| {
+        let seed = 1 + rng.below(1 << 20) as u64;
+        let n = 2 + rng.below(3);
+        let c = rng.below(n);
+        let mut fa = mk_fleet(seed, n, 64);
+        let mut fb = mk_fleet(seed, n, 64);
+        let mut ea = MockExecutor::standard();
+        let mut eb = MockExecutor::standard();
+        let dim = ea.param_count();
+        fa.hydrate(c, &vec![0.0f32; dim]);
+        fb.hydrate(c, &vec![0.0f32; dim]);
+        let rounds = 3 + rng.below(4);
+        let mut hydrated_this_round = false;
+        for round in 1..=rounds {
+            // Fresh "global" each round so both replicas restart from the
+            // same params regardless of parking.
+            let g = vec![0.01 * round as f32; dim];
+            fa.client_mut(c).sync(&g);
+            if rng.below(2) == 0 {
+                fb.park(c);
+                assert!(fb.parked(c).is_some());
+                assert_eq!(fb.num_samples(c), fa.client(c).num_samples());
+                fb.hydrate(c, &g);
+                hydrated_this_round = true;
+            } else {
+                fb.client_mut(c).sync(&g);
+            }
+            let ra =
+                fa.client_mut(c).local_round(&mut ea, round, 1, 2, 0.3, 1_000, 100).unwrap();
+            let rb =
+                fb.client_mut(c).local_round(&mut eb, round, 1, 2, 0.3, 1_000, 100).unwrap();
+            assert_eq!(
+                ra.compute_seconds.to_bits(),
+                rb.compute_seconds.to_bits(),
+                "jitter stream broke at round {round}"
+            );
+            assert_eq!(ra.acc.to_bits(), rb.acc.to_bits(), "round {round}");
+            assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "round {round}");
+            assert_eq!(ra.grad_norm_sq.to_bits(), rb.grad_norm_sq.to_bits(), "round {round}");
+            if !hydrated_this_round {
+                assert_eq!(ra.value.to_bits(), rb.value.to_bits(), "round {round}");
+            }
+            for (x, y) in fa.client(c).params.iter().zip(&fb.client(c).params) {
+                assert_eq!(x.to_bits(), y.to_bits(), "params diverged at round {round}");
+            }
+            hydrated_this_round = false;
+        }
+    });
+}
+
+#[test]
+fn prop_fresh_hydration_is_bitwise_a_never_parked_client() {
+    // Hydrating a pristine parked record reproduces `Client::new` exactly:
+    // batcher and jitter come off the same named root-RNG forks
+    // (`Batcher::restore(n, b, rng, 1, 0)` is `Batcher::new` by
+    // construction) and the device comes off the same paper table — so the
+    // whole report stream, `value` included, is bit-identical.
+    cases(8, |rng| {
+        let seed = 1 + rng.below(1 << 20) as u64;
+        let n = 2 + rng.below(4);
+        let id = rng.below(n);
+        let mut data_rng = Rng::new(seed);
+        let shards: Vec<Arc<ClientShard>> = (0..n)
+            .map(|cid| {
+                let data = generate(60, &SynthConfig::default(), &mut data_rng);
+                Arc::new(ClientShard { client_id: cid, data })
+            })
+            .collect();
+        let probe = generate(16, &SynthConfig::default(), &mut data_rng);
+        let probe_images = Arc::new(probe.images);
+        let probe_labels = Arc::new(probe.labels);
+        let root = Rng::new(seed ^ 0xF1EE7);
+        let mut ef = MockExecutor::standard();
+        let mut es = MockExecutor::standard();
+        let dim = ef.param_count();
+        let mut fleet = Fleet::new(
+            FleetData::Eager(shards.clone()),
+            ef.batch_size(),
+            Arc::clone(&probe_images),
+            Arc::clone(&probe_labels),
+            32,
+            root.clone(),
+        );
+        fleet.hydrate(id, &vec![0.0f32; dim]);
+        let mut solo = Client::new(
+            id,
+            Arc::clone(&shards[id]),
+            DeviceProfile::table()[DeviceProfile::paper_fleet_index(n, id) as usize].clone(),
+            vec![0.0f32; dim],
+            es.batch_size(),
+            probe_images,
+            probe_labels,
+            &root,
+        );
+        for round in 1..=4usize {
+            let g = vec![0.005 * round as f32; dim];
+            fleet.client_mut(id).sync(&g);
+            solo.sync(&g);
+            let rf =
+                fleet.client_mut(id).local_round(&mut ef, round, 1, 2, 0.3, 1_000, 100).unwrap();
+            let rs = solo.local_round(&mut es, round, 1, 2, 0.3, 1_000, 100).unwrap();
+            assert_eq!(rf.value.to_bits(), rs.value.to_bits(), "round {round}");
+            assert_eq!(rf.acc.to_bits(), rs.acc.to_bits(), "round {round}");
+            assert_eq!(rf.train_loss.to_bits(), rs.train_loss.to_bits(), "round {round}");
+            assert_eq!(rf.grad_norm_sq.to_bits(), rs.grad_norm_sq.to_bits(), "round {round}");
+            assert_eq!(
+                rf.compute_seconds.to_bits(),
+                rs.compute_seconds.to_bits(),
+                "round {round}"
+            );
+            assert_eq!(rf.num_samples, rs.num_samples);
+        }
+    });
+}
+
+#[test]
+fn prop_park_keeps_the_top_budget_residual_summary() {
+    // Error-feedback debt survives a park as a top-|budget| magnitude
+    // summary: with budget >= the nonzero count it is lossless, and with
+    // a small budget exactly the |budget| largest-|v| coordinates (index
+    // tie-break) come back, the rest zeroed.
+    cases(8, |rng| {
+        let seed = 1 + rng.below(1 << 20) as u64;
+        let small = 1 + rng.below(8);
+        let k = 1 + rng.below(24);
+        let mut run_upload = |fleet: &mut Fleet, exec: &mut MockExecutor| -> Vec<f32> {
+            let dim = exec.param_count();
+            fleet.hydrate(0, &vec![0.0f32; dim]);
+            fleet.client_mut(0).local_round(exec, 1, 1, 2, 0.5, 1_000, 100).unwrap();
+            let mut buf = SparseDelta::new();
+            fleet.client_mut(0).encode_sparse_upload(Precision::F32, k, true, &mut buf);
+            fleet.client(0).residual().to_vec()
+        };
+        // Budget >= dim: the summary is lossless.
+        let mut big = mk_fleet(seed, 2, MockExecutor::standard().param_count());
+        let mut eb = MockExecutor::standard();
+        let before = run_upload(&mut big, &mut eb);
+        assert!(
+            before.iter().any(|&v| v != 0.0),
+            "top-{k} of a trained delta must owe some residual"
+        );
+        big.park(0);
+        big.hydrate(0, &vec![0.0f32; before.len()]);
+        for (i, (x, y)) in before.iter().zip(big.client(0).residual()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "residual[{i}] not lossless");
+        }
+        // Small budget: exactly the top-|small| by |v| (index tie-break).
+        let mut tight = mk_fleet(seed, 2, small);
+        let mut et = MockExecutor::standard();
+        let before_t = run_upload(&mut tight, &mut et);
+        for (i, (x, y)) in before.iter().zip(&before_t).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "residual[{i}] differs pre-park");
+        }
+        tight.park(0);
+        tight.hydrate(0, &vec![0.0f32; before_t.len()]);
+        let mut expect: Vec<(usize, f32)> = before_t
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(_, v)| v != 0.0)
+            .collect();
+        expect.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()).then_with(|| a.0.cmp(&b.0)));
+        expect.truncate(small);
+        let mut want = vec![0.0f32; before_t.len()];
+        for (i, v) in expect {
+            want[i] = v;
+        }
+        for (i, (x, y)) in want.iter().zip(tight.client(0).residual()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "summary residual[{i}] wrong");
+        }
     });
 }

@@ -278,6 +278,7 @@ fn run_pair(base: &ExperimentConfig) {
     scfg.compression = CompressionConfig {
         mode: CompressionMode::TopK,
         k_fraction: 1.0,
+        layer_k_fractions: Vec::new(),
         error_feedback: true,
     };
     let sparse = experiments::run(&scfg).unwrap();
@@ -347,6 +348,7 @@ fn topk_partial_k_cuts_uplink_bytes() {
     scfg.compression = CompressionConfig {
         mode: CompressionMode::TopK,
         k_fraction: 0.1,
+        layer_k_fractions: Vec::new(),
         error_feedback: true,
     };
     let sparse = experiments::run(&scfg).unwrap();
@@ -385,6 +387,7 @@ fn topk_partial_k_with_error_feedback_still_converges() {
     scfg.compression = CompressionConfig {
         mode: CompressionMode::TopK,
         k_fraction: 0.1,
+        layer_k_fractions: Vec::new(),
         error_feedback: true,
     };
     let sparse = experiments::run(&scfg).unwrap();
@@ -422,6 +425,7 @@ fn error_feedback_actually_changes_the_run() {
         cfg.compression = CompressionConfig {
             mode: CompressionMode::TopK,
             k_fraction: 0.1,
+            layer_k_fractions: Vec::new(),
             error_feedback,
         };
         experiments::run(&cfg).unwrap()
@@ -447,6 +451,7 @@ fn topk_runs_deterministically_on_the_event_engine() {
         cfg.compression = CompressionConfig {
             mode: CompressionMode::TopK,
             k_fraction: 0.25,
+            layer_k_fractions: Vec::new(),
             error_feedback: true,
         };
         experiments::run(&cfg).unwrap()
@@ -457,4 +462,119 @@ fn topk_runs_deterministically_on_the_event_engine() {
     for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
         assert_records_identical(x, y);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer k: the top-k race runs inside each layer's range
+// ---------------------------------------------------------------------------
+
+/// Build the server by hand, mirroring `experiments::build` for the mock
+/// backend, so the 320-parameter mock model can be registered as arbitrary
+/// layer splits — `experiments::build` installs the single flat layer, and
+/// `CompressionConfig::layer_ks` insists the fraction list matches the
+/// layer count.
+fn run_layered(cfg: &ExperimentConfig, layer_sizes: Vec<usize>) -> Vec<RoundRecord> {
+    use vafl::coordinator::policy::make_policy;
+    use vafl::coordinator::server::build_server;
+    use vafl::data::{partition, SynthConfig};
+    use vafl::runtime::{Executor, MockExecutor};
+
+    let synth = SynthConfig { pixel_noise: cfg.pixel_noise, ..Default::default() };
+    let (shards, test) = partition(
+        cfg.partition,
+        cfg.num_clients,
+        cfg.samples_per_client,
+        cfg.test_samples,
+        &synth,
+        &Rng::new(cfg.seed),
+    );
+    let policy = make_policy(cfg.algorithm, cfg.value_fn, cfg.eaflm);
+    let mut exec = MockExecutor::standard();
+    let p = exec.param_count();
+    let mut server = build_server(
+        cfg,
+        shards,
+        test,
+        vec![0.0; p],
+        policy,
+        exec.batch_size(),
+        (2_000_000, 600_000),
+        cfg.upload_precision.payload_bytes(p),
+    );
+    server.set_layer_sizes(layer_sizes);
+    match cfg.engine {
+        EngineMode::Barriered => server.run(&mut exec).unwrap(),
+        EngineMode::BarrierFree => server.run_event_driven(&mut exec).unwrap(),
+    }
+    server.metrics.records.clone()
+}
+
+#[test]
+fn per_layer_full_k_is_bitwise_dense() {
+    // Two 160-wide layers at k_fraction 1.0 each: every layer's race
+    // selects its whole range and every layer's index block is elided,
+    // so records — wire bytes included — must match the dense run bit
+    // for bit, on both engines.
+    for engine in [EngineMode::Barriered, EngineMode::BarrierFree] {
+        let mut cfg = quick('b', Algorithm::Vafl, 6);
+        cfg.engine = engine;
+        if engine == EngineMode::BarrierFree {
+            cfg.async_engine = AsyncEngineConfig {
+                buffer_k: 2,
+                // alpha < 1 exercises the mixed (self-weight) branch.
+                mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+            };
+        }
+        let dense = run_layered(&cfg, vec![160, 160]);
+        let mut scfg = cfg.clone();
+        scfg.compression = CompressionConfig {
+            mode: CompressionMode::TopK,
+            k_fraction: 1.0,
+            layer_k_fractions: vec![1.0, 1.0],
+            error_feedback: true,
+        };
+        let sparse = run_layered(&scfg, vec![160, 160]);
+        assert_eq!(dense.len(), sparse.len());
+        for (x, y) in dense.iter().zip(&sparse) {
+            assert_records_identical(x, y);
+        }
+    }
+}
+
+#[test]
+fn per_layer_partial_k_prices_each_layer_and_stays_deterministic() {
+    // One full layer + one 10% layer: AFL keeps the upload schedule
+    // identical, so the byte saving is pure per-layer compression —
+    // strictly between dense pricing and flat 10% pricing.
+    let mut cfg = quick('b', Algorithm::Afl, 6);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    let dense = run_layered(&cfg, vec![160, 160]);
+    let mut scfg = cfg.clone();
+    scfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 1.0, // flat budget unused once the per-layer list is set
+        layer_k_fractions: vec![1.0, 0.1],
+        error_feedback: true,
+    };
+    let a = run_layered(&scfg, vec![160, 160]);
+    let b = run_layered(&scfg, vec![160, 160]);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_records_identical(x, y);
+    }
+    let mut fcfg = scfg.clone();
+    fcfg.compression.k_fraction = 0.1;
+    fcfg.compression.layer_k_fractions = Vec::new();
+    let flat = run_layered(&fcfg, vec![160, 160]);
+    let sum = |rs: &[RoundRecord]| rs.iter().map(|r| r.bytes_up).sum::<u64>();
+    let (db, lb, fb) = (sum(&dense), sum(&a), sum(&flat));
+    assert_eq!(
+        dense.iter().map(|r| r.uploads).sum::<usize>(),
+        a.iter().map(|r| r.uploads).sum::<usize>(),
+        "AFL upload schedule must not depend on the wire format"
+    );
+    assert!(lb < db, "per-layer [1.0, 0.1] should beat dense bytes: {lb} >= {db}");
+    assert!(fb < lb, "flat 0.1 should beat [1.0, 0.1] bytes: {fb} >= {lb}");
 }
