@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         mode: CompressionMode::TopK,
         k_fraction: 0.25,
         error_feedback: true,
+        ..Default::default()
     };
     if std::env::var("VAFL_MOCK").is_ok() {
         cfg.backend = Backend::Mock;

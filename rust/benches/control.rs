@@ -116,7 +116,7 @@ fn main() -> anyhow::Result<()> {
     for kf in [0.05f64, 0.1, 0.25, 0.5, 1.0] {
         let mut c = base_cfg()?;
         c.compression =
-            CompressionConfig { mode: CompressionMode::TopK, k_fraction: kf, layer_k_fractions: Vec::new(), error_feedback: true };
+            CompressionConfig { mode: CompressionMode::TopK, k_fraction: kf, error_feedback: true, ..Default::default() };
         let out = experiments::run(&c)?;
         let (rounds, bytes_tgt, total_up, best) = summarize(&out.metrics);
         if let Some(b) = bytes_tgt {
@@ -147,7 +147,7 @@ fn main() -> anyhow::Result<()> {
     // Adaptive: compression controller only, starting mid-grid.
     let mut a = base_cfg()?;
     a.compression =
-        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.25, layer_k_fractions: Vec::new(), error_feedback: true };
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.25, error_feedback: true, ..Default::default() };
     a.control = ControlConfig {
         enabled: true,
         staleness: false,

@@ -20,6 +20,7 @@ mod common;
 
 use vafl::config::ValueFnConfig;
 use vafl::coordinator::aggregate::Aggregator;
+use vafl::coordinator::Downlink;
 use vafl::data::synth::{generate, generate_t, SynthConfig};
 use vafl::fleet::amplify_value;
 use vafl::model::quant::{Precision, QuantBuf};
@@ -253,6 +254,32 @@ fn main() -> anyhow::Result<()> {
             sparse_rec.emit(&format!("sparse aggregate {k_clients}x{dim} k={kf}"), s);
         }
     }
+    common::section("8. bidirectional round trip: downlink encode + client apply at down_k=0.25");
+    // The broadcast mirror of section 7: per active client the server
+    // encodes top-k of (global - acked base) with error feedback, then
+    // the client scatters the frame onto its replica. Sweep the same two
+    // model sizes at the EXPERIMENTS.md reference budget
+    // (down_k_fraction = 0.25) — rows land in BENCH_sparse.json next to
+    // the uplink sweep so the round-trip cost is tracked across PRs.
+    for &dim in &[p, 4 * p] {
+        let k_clients = 7usize;
+        let down_k = ((dim as f64 * 0.25).ceil() as usize).clamp(1, dim);
+        let global: Vec<f32> = (0..dim).map(|_| srng.gauss() as f32).collect();
+        let mut replicas: Vec<Vec<f32>> =
+            (0..k_clients).map(|_| (0..dim).map(|_| srng.gauss() as f32).collect()).collect();
+        let mut dl = Downlink::new(k_clients, Precision::F32, true);
+        for (c, r) in replicas.iter_mut().enumerate() {
+            dl.ack_dense(c, r);
+        }
+        let s = bench(3, 20, || {
+            for (c, r) in replicas.iter_mut().enumerate() {
+                let delta = dl.encode_for(c, &global, down_k).unwrap();
+                delta.scatter_into(r);
+            }
+        });
+        sparse_rec.emit(&format!("downlink rt      {k_clients}x{dim} k=0.25"), s);
+    }
+
     for (name, s) in &sparse_rec.rows {
         rec.rows.push((name.clone(), s.clone()));
     }

@@ -164,7 +164,7 @@ impl CompressionMode {
 
 /// Upload compression knobs — TOML section `[compression]`, CLI
 /// `--compression` / `--k-fraction` / `--layer-k-fractions` /
-/// `--error-feedback`.
+/// `--error-feedback` / `--down-mode` / `--down-k-fraction`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompressionConfig {
     pub mode: CompressionMode,
@@ -187,6 +187,21 @@ pub struct CompressionConfig {
     /// residual survives model downloads — see `fleet::Client`). Ignored
     /// in dense mode.
     pub error_feedback: bool,
+    /// Downlink (broadcast) compression mode. `Dense` (the default) is
+    /// the paper's system: every sync ships the full model. `TopK`
+    /// mirrors the upload path downstream: the server keeps a last-acked
+    /// base model + error-feedback residual per active client and ships
+    /// the top-k of `global − base` (see `coordinator::downlink`). A
+    /// client with no acked base (first contact, or freshly hydrated
+    /// from the parked set) is force-fed a dense frame. Downlink
+    /// compression is flat-only — `layer_k_fractions` applies to uploads
+    /// only.
+    pub down_mode: CompressionMode,
+    /// Fraction of parameters each sparse broadcast transmits
+    /// (`k = ceil(down_k_fraction · n)`, clamped to `[1, n]`); must be
+    /// in (0, 1]. Ignored when `down_mode` is dense. At 1.0 the sparse
+    /// frame is byte- and bit-identical to the dense broadcast.
+    pub down_k_fraction: f64,
 }
 
 impl Default for CompressionConfig {
@@ -196,6 +211,8 @@ impl Default for CompressionConfig {
             k_fraction: 1.0,
             layer_k_fractions: Vec::new(),
             error_feedback: true,
+            down_mode: CompressionMode::Dense,
+            down_k_fraction: 1.0,
         }
     }
 }
@@ -204,6 +221,12 @@ impl CompressionConfig {
     /// Transmitted coordinates per upload for an `n`-parameter model.
     pub fn k_for(&self, n: usize) -> usize {
         ((n as f64 * self.k_fraction).ceil() as usize).clamp(1, n.max(1))
+    }
+
+    /// Transmitted coordinates per sparse broadcast for an `n`-parameter
+    /// model.
+    pub fn down_k_for(&self, n: usize) -> usize {
+        ((n as f64 * self.down_k_fraction).ceil() as usize).clamp(1, n.max(1))
     }
 
     /// Per-layer transmitted coordinates for layer sizes `sizes`, or
@@ -673,6 +696,12 @@ impl ExperimentConfig {
                 bail!("compression.layer_k_fractions[{l}] must be in (0, 1], got {f}");
             }
         }
+        if !(self.compression.down_k_fraction > 0.0 && self.compression.down_k_fraction <= 1.0) {
+            bail!(
+                "compression.down_k_fraction must be in (0, 1], got {}",
+                self.compression.down_k_fraction
+            );
+        }
         if !self.compression.layer_k_fractions.is_empty()
             && self.control.enabled
             && self.control.compression
@@ -702,6 +731,22 @@ impl ExperimentConfig {
                 "compression.k_fraction ({}) must start inside the control plane's \
                  [k_fraction_min, k_fraction_max] = [{}, {}]",
                 self.compression.k_fraction,
+                self.control.k_fraction_min,
+                self.control.k_fraction_max
+            );
+        }
+        // The downlink knob shares the compression controller's bounds,
+        // so the same starting-inside-the-bounds policy applies.
+        if self.control.enabled
+            && self.control.compression
+            && self.compression.down_mode == CompressionMode::TopK
+            && !(self.control.k_fraction_min <= self.compression.down_k_fraction
+                && self.compression.down_k_fraction <= self.control.k_fraction_max)
+        {
+            bail!(
+                "compression.down_k_fraction ({}) must start inside the control plane's \
+                 [k_fraction_min, k_fraction_max] = [{}, {}]",
+                self.compression.down_k_fraction,
                 self.control.k_fraction_min,
                 self.control.k_fraction_max
             );
@@ -861,6 +906,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_bool("compression.error_feedback") {
             cfg.compression.error_feedback = v;
+        }
+        if let Some(v) = doc.get_str("compression.down_mode") {
+            cfg.compression.down_mode = CompressionMode::from_name(v)?;
+        }
+        if let Some(v) = doc.get_f64("compression.down_k_fraction") {
+            cfg.compression.down_k_fraction = v;
         }
         if let Some(v) = doc.get_f64("staleness_decay") {
             cfg.staleness_decay = Some(v);
@@ -1215,13 +1266,16 @@ mod tests {
                 k_fraction: 0.25,
                 layer_k_fractions: Vec::new(),
                 error_feedback: false,
+                ..Default::default()
             }
         );
-        // Defaults: dense, full k, error feedback armed.
+        // Defaults: dense both ways, full k, error feedback armed.
         let d = ExperimentConfig::default();
         assert_eq!(d.compression.mode, CompressionMode::Dense);
         assert_eq!(d.compression.k_fraction, 1.0);
         assert!(d.compression.error_feedback);
+        assert_eq!(d.compression.down_mode, CompressionMode::Dense);
+        assert_eq!(d.compression.down_k_fraction, 1.0);
         // Mode names round-trip; bad names rejected.
         for m in [CompressionMode::Dense, CompressionMode::TopK] {
             assert_eq!(CompressionMode::from_name(m.name()).unwrap(), m);
@@ -1233,6 +1287,46 @@ mod tests {
                 format!("[compression]\nk_fraction = {bad}\n[backend]\nkind = \"mock\"");
             assert!(ExperimentConfig::from_toml(&toml).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn downlink_compression_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [compression]
+            down_mode = "topk"
+            down_k_fraction = 0.25
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.compression.down_mode, CompressionMode::TopK);
+        assert_eq!(cfg.compression.down_k_fraction, 0.25);
+        // Uplink stays dense: the two directions are independent knobs.
+        assert_eq!(cfg.compression.mode, CompressionMode::Dense);
+        // down_k = ceil(f * n), clamped to [1, n].
+        assert_eq!(cfg.compression.down_k_for(100), 25);
+        assert_eq!(cfg.compression.down_k_for(1), 1);
+        assert_eq!(CompressionConfig::default().down_k_for(100), 100);
+        // down_k_fraction outside (0, 1] is rejected.
+        for bad in ["0.0", "-0.5", "1.5"] {
+            let toml =
+                format!("[compression]\ndown_k_fraction = {bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "{bad}");
+        }
+        // With the adaptive compression controller armed, the downlink
+        // knob must start inside the shared [k_min, k_max] bounds.
+        assert!(ExperimentConfig::from_toml(
+            "[compression]\ndown_mode = \"topk\"\ndown_k_fraction = 0.01\n\
+             [control]\nenabled = true\nk_fraction_min = 0.1\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[compression]\ndown_mode = \"topk\"\ndown_k_fraction = 0.5\n\
+             [control]\nenabled = true\nk_fraction_min = 0.1\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
     }
 
     #[test]

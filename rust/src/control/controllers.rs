@@ -28,6 +28,10 @@ pub enum KnobChange {
     Alpha0 { from: f64, to: f64 },
     /// Sparse top-k budget `compression.k_fraction`.
     KFraction { from: f64, to: f64 },
+    /// Sparse downlink budget `compression.down_k_fraction` (the
+    /// broadcast mirror of [`KnobChange::KFraction`], driven by the
+    /// downlink residual ratio).
+    DownKFraction { from: f64, to: f64 },
 }
 
 /// One controller decision: the change plus the window statistic that

@@ -44,6 +44,10 @@ pub struct Knobs {
     pub k_fraction: f64,
     /// The compression controller is inert unless top-k mode is active.
     pub topk: bool,
+    pub down_k_fraction: f64,
+    /// The downlink compression arm is inert unless sparse broadcasts
+    /// (`compression.down_mode = topk`) are active.
+    pub down_topk: bool,
     /// The staleness controller is inert on the barriered engine (its
     /// knobs only exist on the barrier-free one).
     pub barrier_free: bool,
@@ -139,6 +143,23 @@ impl ControlPlane {
                 out.push(d);
             }
         }
+        if self.cfg.compression && knobs.down_topk {
+            // Same stateless controller, driven by the downlink residual
+            // ratio; its KFraction decision is remapped onto the
+            // down_k_fraction knob.
+            if let Some(d) = self.compression.decide(
+                self.bus.down_residual_ratio(),
+                self.bus.acc_improving(1e-3),
+                knobs.down_k_fraction,
+            ) {
+                if let KnobChange::KFraction { from, to } = d.change {
+                    out.push(KnobDecision {
+                        change: KnobChange::DownKFraction { from, to },
+                        ..d
+                    });
+                }
+            }
+        }
         out
     }
 
@@ -183,6 +204,8 @@ mod tests {
             bytes_up: 10,
             residual_l1: 4.0,
             transmitted_l1: 1.0,
+            down_residual_l1: 0.0,
+            down_transmitted_l1: 0.0,
             acc_proxy: 0.5,
         }
     }
@@ -198,8 +221,15 @@ mod tests {
         p.observe(sample(1, 0, 10));
         assert!(p.bus().is_empty(), "disabled plane must not collect telemetry");
         assert!(!p.due(4));
-        let knobs =
-            Knobs { buffer_k: 1, alpha0: 0.8, k_fraction: 0.1, topk: true, barrier_free: true };
+        let knobs = Knobs {
+            buffer_k: 1,
+            alpha0: 0.8,
+            k_fraction: 0.1,
+            topk: true,
+            down_k_fraction: 0.1,
+            down_topk: true,
+            barrier_free: true,
+        };
         assert!(p.decide_knobs(knobs).is_empty());
         assert_eq!(p.decide_rebalance(1, &[3, 4]), None);
     }
@@ -222,8 +252,15 @@ mod tests {
         for r in 1..=4 {
             p.observe(sample(r, 0, 12));
         }
-        let all =
-            Knobs { buffer_k: 2, alpha0: 0.8, k_fraction: 0.25, topk: true, barrier_free: true };
+        let all = Knobs {
+            buffer_k: 2,
+            alpha0: 0.8,
+            k_fraction: 0.25,
+            topk: true,
+            down_k_fraction: 0.25,
+            down_topk: false,
+            barrier_free: true,
+        };
         let ds = p.decide_knobs(all);
         assert!(ds.iter().any(|d| d.controller == "staleness"));
         assert!(ds.iter().any(|d| d.controller == "compression"));
@@ -233,6 +270,43 @@ mod tests {
         // Dense mode: compression controller is inert.
         let dense = Knobs { topk: false, ..all };
         assert!(p.decide_knobs(dense).iter().all(|d| d.controller == "staleness"));
+    }
+
+    #[test]
+    fn downlink_arm_is_driven_by_downlink_mass_only() {
+        let mut p = ControlPlane::new(&enabled_cfg());
+        // High *downlink* residual, no uplink mass at all: only the
+        // DownKFraction decision may fire.
+        for r in 1..=4 {
+            p.observe(FlushSample {
+                residual_l1: 0.0,
+                transmitted_l1: 0.0,
+                down_residual_l1: 4.0,
+                down_transmitted_l1: 1.0,
+                ..sample(r, 0, 0)
+            });
+        }
+        let knobs = Knobs {
+            buffer_k: 2,
+            alpha0: 0.8,
+            k_fraction: 0.25,
+            topk: true,
+            down_k_fraction: 0.25,
+            down_topk: true,
+            barrier_free: false,
+        };
+        let ds = p.decide_knobs(knobs);
+        assert_eq!(ds.len(), 1, "uplink carries no mass -> no KFraction decision");
+        match ds[0].change {
+            KnobChange::DownKFraction { from, to } => {
+                assert_eq!(from, 0.25);
+                assert!(to > from, "high downlink residual must grow the budget");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Dense broadcasts gate the downlink arm off entirely.
+        let dense_down = Knobs { down_topk: false, ..knobs };
+        assert!(p.decide_knobs(dense_down).is_empty());
     }
 
     #[test]

@@ -39,6 +39,13 @@ pub struct FlushSample {
     /// Transmitted selection-key mass of the flushed sparse encodes
     /// (`SparseDelta::sent_key_l1`); 0 in dense mode.
     pub transmitted_l1: f64,
+    /// Downlink analogue of `residual_l1`: unsent selection-key mass of
+    /// the sparse *broadcasts* since the previous sample (drained from
+    /// the server's downlink compressor); 0 when `down_mode` is dense.
+    pub down_residual_l1: f64,
+    /// Downlink analogue of `transmitted_l1`; 0 when `down_mode` is
+    /// dense.
+    pub down_transmitted_l1: f64,
     /// Accuracy proxy available at commit time on every execution
     /// strategy: the mean of the fleet's last-known finite probe
     /// accuracies (NaN while nobody has reported yet).
@@ -103,6 +110,19 @@ impl TelemetryBus {
         r / (r + t)
     }
 
+    /// Downlink mirror of [`TelemetryBus::residual_ratio`]: the fraction
+    /// of broadcast delta mass the `down_k_fraction` budget left behind
+    /// (NaN when the window carries no downlink mass — dense broadcasts,
+    /// or nothing synced yet).
+    pub fn down_residual_ratio(&self) -> f64 {
+        let r: f64 = self.samples.iter().map(|s| s.down_residual_l1).sum();
+        let t: f64 = self.samples.iter().map(|s| s.down_transmitted_l1).sum();
+        if r + t <= 0.0 || !(r + t).is_finite() {
+            return f64::NAN;
+        }
+        r / (r + t)
+    }
+
     /// Windowed flush counts per shard, for `s_count` shards (shards
     /// that never flushed in the window count 0).
     pub fn per_shard_flushes(&self, s_count: usize) -> Vec<usize> {
@@ -156,6 +176,8 @@ mod tests {
             bytes_up: 100,
             residual_l1: 1.0,
             transmitted_l1: 3.0,
+            down_residual_l1: 0.0,
+            down_transmitted_l1: 0.0,
             acc_proxy: acc,
         }
     }
@@ -199,6 +221,23 @@ mod tests {
         let mut dense = TelemetryBus::new(8);
         dense.push(FlushSample { residual_l1: 0.0, transmitted_l1: 0.0, ..sample(1, 0, 1, 0, 0.5) });
         assert!(dense.residual_ratio().is_nan(), "no mass must read as no signal");
+    }
+
+    #[test]
+    fn down_residual_ratio_is_independent_of_uplink_mass() {
+        let mut bus = TelemetryBus::new(8);
+        assert!(bus.down_residual_ratio().is_nan());
+        // Uplink mass alone must not fabricate a downlink signal.
+        bus.push(sample(1, 0, 1, 0, 0.5));
+        assert!(bus.down_residual_ratio().is_nan(), "dense broadcasts carry no downlink mass");
+        bus.push(FlushSample {
+            down_residual_l1: 3.0,
+            down_transmitted_l1: 1.0,
+            ..sample(2, 0, 1, 0, 0.5)
+        });
+        assert!((bus.down_residual_ratio() - 0.75).abs() < 1e-12);
+        // And the uplink ratio stays untouched by downlink mass.
+        assert!((bus.residual_ratio() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Server-side downlink compressor: sparse broadcasts against
+//! per-client acked bases (the mirror image of the sparse upload path).
+//!
+//! QAFeL-style bidirectional compression (PAPERS.md, arXiv 2206.10032)
+//! needs the server to know exactly what model each client last held:
+//! the broadcast then ships only the top-k coordinates of
+//! `global − base` and the client rebuilds the new global on top of the
+//! base it acked. This module keeps that hidden state — one
+//! [`DownlinkSlot`] (last-acked base + error-feedback residual) per
+//! *active* client — and reuses the upload path's [`SparseDelta`] wire
+//! format, so at `k == dim` the frame is byte- and bit-identical to the
+//! dense broadcast.
+//!
+//! Invariants the engines rely on:
+//!
+//! * A client with no slot (first contact, or freshly hydrated from the
+//!   parked set) **must** receive a dense frame: [`Downlink::encode_for`]
+//!   returns `None` and the caller ships the full model, then records the
+//!   new shared base with [`Downlink::ack_dense`]. A sparse delta against
+//!   a base the client never acked would silently diverge the fleet.
+//! * After a sparse encode the slot's base is advanced by scattering the
+//!   *decoded* transmitted values — exactly the computation the client
+//!   performs in `fleet::Client::sync_sparse` — so server and client
+//!   bases stay bitwise identical at every precision.
+//! * Parking a client drops its slot ([`Downlink::drop_client`]): the
+//!   parked record keeps only a summarized upload residual (a full base
+//!   would be ~`4·dim` bytes per parked client, defeating fleet
+//!   virtualization), so re-entry always pays one dense frame.
+//!
+//! The encoder accumulates the selection-key mass it transmitted and
+//! left behind (drained by [`Downlink::take_mass`]) so the control
+//! plane's compression controller can drive `down_k_fraction` from the
+//! downlink residual ratio, symmetrically to the uplink knob.
+
+use crate::model::quant::Precision;
+use crate::model::sparse::SparseDelta;
+
+/// Per-client downlink state: the model the client last acked and the
+/// server-side error-feedback residual for this client's broadcasts.
+struct DownlinkSlot {
+    base: Vec<f32>,
+    residual: Vec<f32>,
+}
+
+/// Server-side downlink compressor state for one engine.
+pub struct Downlink {
+    precision: Precision,
+    error_feedback: bool,
+    /// Indexed by client id; `None` until the client acks a dense frame.
+    /// Boxed so the idle entries of a virtualized fleet cost one pointer.
+    slots: Vec<Option<Box<DownlinkSlot>>>,
+    /// Reusable encode buffer (steady-state encodes allocate nothing).
+    delta: SparseDelta,
+    /// Selection-key mass left untransmitted / transmitted since the
+    /// last [`Downlink::take_mass`] drain.
+    residual_l1: f64,
+    transmitted_l1: f64,
+    /// Lifetime counters (diagnostics/tests).
+    forced_dense: u64,
+    sparse_syncs: u64,
+}
+
+impl Downlink {
+    pub fn new(num_clients: usize, precision: Precision, error_feedback: bool) -> Self {
+        let mut slots = Vec::with_capacity(num_clients);
+        slots.resize_with(num_clients, || None);
+        Downlink {
+            precision,
+            error_feedback,
+            slots,
+            delta: SparseDelta::new(),
+            residual_l1: 0.0,
+            transmitted_l1: 0.0,
+            forced_dense: 0,
+            sparse_syncs: 0,
+        }
+    }
+
+    /// Whether `client` holds an acked base a sparse delta can build on.
+    pub fn has_base(&self, client: usize) -> bool {
+        self.slots.get(client).is_some_and(|s| s.is_some())
+    }
+
+    /// The base `client` last acked (tests/debug assertions).
+    pub fn base_of(&self, client: usize) -> Option<&[f32]> {
+        self.slots.get(client)?.as_ref().map(|s| s.base.as_slice())
+    }
+
+    /// Encode the top-`k` sparse broadcast `model − base` for `client`,
+    /// advance the slot's base to the decoded post-sync model, and
+    /// return the frame. `None` when the client holds no acked base —
+    /// the caller must ship a dense frame and [`Downlink::ack_dense`] it.
+    pub fn encode_for(&mut self, client: usize, model: &[f32], k: usize) -> Option<&SparseDelta> {
+        let slot = self.slots.get_mut(client)?.as_deref_mut()?;
+        debug_assert_eq!(slot.base.len(), model.len(), "downlink base/model length mismatch");
+        let residual = self.error_feedback.then_some(&mut slot.residual[..]);
+        self.delta.encode_topk(self.precision, model, &slot.base, residual, k);
+        let sent = self.delta.sent_key_l1();
+        self.residual_l1 += self.delta.key_l1() - sent;
+        self.transmitted_l1 += sent;
+        // Server-side replay of the client's apply: overwrite the
+        // transmitted coordinates with their *decoded* values.
+        self.delta.scatter_into(&mut slot.base);
+        self.sparse_syncs += 1;
+        Some(&self.delta)
+    }
+
+    /// Record that `client` just received (and therefore acked) the full
+    /// dense model `decoded` — the broadcast bytes as the client decodes
+    /// them, not the raw f32 global. Creates the slot on first contact;
+    /// resets the error-feedback residual either way (a dense frame
+    /// clears all downlink debt).
+    pub fn ack_dense(&mut self, client: usize, decoded: &[f32]) {
+        if client >= self.slots.len() {
+            self.slots.resize_with(client + 1, || None);
+        }
+        self.forced_dense += 1;
+        match &mut self.slots[client] {
+            Some(slot) => {
+                slot.base.copy_from_slice(decoded);
+                slot.residual.iter_mut().for_each(|r| *r = 0.0);
+            }
+            empty => {
+                *empty = Some(Box::new(DownlinkSlot {
+                    base: decoded.to_vec(),
+                    residual: vec![0.0; decoded.len()],
+                }));
+            }
+        }
+    }
+
+    /// Forget `client`'s base (active-set rotation parks it); its next
+    /// sync is forced dense.
+    pub fn drop_client(&mut self, client: usize) {
+        if let Some(slot) = self.slots.get_mut(client) {
+            *slot = None;
+        }
+    }
+
+    /// Drain the accumulated (residual, transmitted) selection-key mass
+    /// since the previous drain — the downlink analogue of the uplink's
+    /// per-flush residual telemetry.
+    pub fn take_mass(&mut self) -> (f64, f64) {
+        let out = (self.residual_l1, self.transmitted_l1);
+        self.residual_l1 = 0.0;
+        self.transmitted_l1 = 0.0;
+        out
+    }
+
+    /// Dense frames shipped because no acked base existed (plus explicit
+    /// dense-mode acks routed through [`Downlink::ack_dense`]).
+    pub fn forced_dense(&self) -> u64 {
+        self.forced_dense
+    }
+
+    /// Sparse frames encoded over the lifetime of this compressor.
+    pub fn sparse_syncs(&self) -> u64 {
+        self.sparse_syncs
+    }
+
+    /// Approximate heap footprint of the live slots (capacity planning,
+    /// mirrors `Fleet::approx_parked_bytes`).
+    pub fn approx_bytes(&self) -> u64 {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| 4 * (s.base.len() + s.residual.len()) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sparse::sparse_payload_bytes;
+
+    fn model(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| seed + i as f32 * 0.25).collect()
+    }
+
+    #[test]
+    fn no_base_forces_dense_until_acked() {
+        let mut dl = Downlink::new(2, Precision::F32, true);
+        assert!(!dl.has_base(0));
+        assert!(dl.encode_for(0, &model(8, 1.0), 4).is_none());
+        dl.ack_dense(0, &model(8, 1.0));
+        assert!(dl.has_base(0));
+        assert_eq!(dl.forced_dense(), 1);
+        assert!(dl.encode_for(0, &model(8, 2.0), 4).is_some());
+        assert_eq!(dl.sparse_syncs(), 1);
+        // The other client is untouched.
+        assert!(!dl.has_base(1));
+    }
+
+    #[test]
+    fn sparse_encode_advances_base_to_client_view() {
+        let n = 16;
+        let mut dl = Downlink::new(1, Precision::F32, true);
+        let base = model(n, 0.0);
+        dl.ack_dense(0, &base);
+        let global = model(n, 3.0);
+        // Client-side replay: base with the transmitted coords overwritten.
+        let mut client = base.clone();
+        {
+            let delta = dl.encode_for(0, &global, 4).unwrap();
+            assert_eq!(delta.len(), 4);
+            assert_eq!(delta.payload_bytes(), sparse_payload_bytes(Precision::F32, 4, n));
+            delta.scatter_into(&mut client);
+        }
+        assert_eq!(dl.base_of(0).unwrap(), &client[..]);
+        // At full k the frame carries the whole decoded model and the
+        // base converges to it exactly.
+        dl.encode_for(0, &global, n).unwrap();
+        assert_eq!(dl.base_of(0).unwrap(), &global[..]);
+    }
+
+    #[test]
+    fn drop_client_forces_dense_reentry() {
+        let mut dl = Downlink::new(3, Precision::F32, false);
+        dl.ack_dense(2, &model(4, 1.0));
+        assert!(dl.has_base(2));
+        dl.drop_client(2);
+        assert!(!dl.has_base(2));
+        assert!(dl.encode_for(2, &model(4, 2.0), 2).is_none());
+        // Re-ack resurrects the slot.
+        dl.ack_dense(2, &model(4, 2.0));
+        assert!(dl.encode_for(2, &model(4, 3.0), 2).is_some());
+    }
+
+    #[test]
+    fn error_feedback_accumulates_and_dense_ack_clears_it() {
+        let mut ef = Downlink::new(1, Precision::F32, true);
+        let mut no_ef = Downlink::new(1, Precision::F32, false);
+        ef.ack_dense(0, &vec![0.0; 4]);
+        no_ef.ack_dense(0, &vec![0.0; 4]);
+        // Two rounds with a budget of 1. Round 1 ships coord 0 either
+        // way; with EF coord 1's unsent 0.9 carries as debt. Round 2's
+        // raw deltas are [2.0, 1.5, ...] (coord 0 still loudest) but the
+        // EF key for coord 1 is 1.5 + 0.9 = 2.4, flipping the selection.
+        let g1 = vec![1.0f32, 0.9, 0.0, 0.0];
+        let g2 = vec![3.0f32, 1.5, 0.0, 0.0];
+        assert_eq!(ef.encode_for(0, &g1, 1).unwrap().indices(), &[0]);
+        assert_eq!(no_ef.encode_for(0, &g1, 1).unwrap().indices(), &[0]);
+        let (r_ef, t_ef) = ef.take_mass();
+        assert!(r_ef > 0.0 && t_ef > 0.0);
+        assert_eq!(ef.encode_for(0, &g2, 1).unwrap().indices(), &[1]);
+        assert_eq!(no_ef.encode_for(0, &g2, 1).unwrap().indices(), &[0]);
+        // A dense ack clears all downlink debt.
+        ef.ack_dense(0, &g2);
+        ef.take_mass();
+        ef.encode_for(0, &g2, 1).unwrap();
+        assert_eq!(ef.take_mass(), (0.0, 0.0), "zero delta after dense ack");
+    }
+
+    #[test]
+    fn mass_drain_resets_counters() {
+        let mut dl = Downlink::new(1, Precision::F32, true);
+        dl.ack_dense(0, &vec![0.0; 4]);
+        dl.encode_for(0, &model(4, 1.0), 2).unwrap();
+        let (r, t) = dl.take_mass();
+        assert!(r > 0.0 && t > 0.0);
+        assert_eq!(dl.take_mass(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn approx_bytes_tracks_live_slots() {
+        let mut dl = Downlink::new(4, Precision::F32, true);
+        assert_eq!(dl.approx_bytes(), 0);
+        dl.ack_dense(0, &vec![0.0; 10]);
+        dl.ack_dense(3, &vec![0.0; 10]);
+        assert_eq!(dl.approx_bytes(), 2 * 4 * 20);
+        dl.drop_client(0);
+        assert_eq!(dl.approx_bytes(), 4 * 20);
+    }
+}

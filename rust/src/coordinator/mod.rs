@@ -3,17 +3,21 @@
 //! * [`policy`] — the upload-gating policies: AFL (upload always), VAFL
 //!   (Eq. 1–2 communication-value gate), EAFLM (Eq. 3 gradient gate).
 //! * [`aggregate`] — FedAvg weighted aggregation (Algorithm 1 line 16).
+//! * [`downlink`] — server-side sparse broadcast compressor: per-client
+//!   acked bases + error-feedback residuals (bidirectional compression).
 //! * [`staleness`] — `alpha(tau)` mixing rules for on-arrival aggregation.
 //! * [`server`] — the round engines orchestrating the fleet, the network
 //!   simulator, the virtual clock, and the metrics stack: the paper's
 //!   barriered round loop and the barrier-free event-driven engine.
 
 pub mod aggregate;
+pub mod downlink;
 pub mod policy;
 pub mod registry;
 pub mod server;
 pub mod staleness;
 
+pub use downlink::Downlink;
 pub use policy::{AflPolicy, EaflmPolicy, SelectionPolicy, VaflPolicy};
 pub use registry::{ClientRegistry, DropoutModel};
 pub use server::{Server, ServerContext};

@@ -28,6 +28,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{CompressionMode, ExperimentConfig};
 use crate::control::{ControlPlane, FlushSample, KnobChange, Knobs};
 use crate::coordinator::aggregate::{combine_edges, Aggregator, EdgeAccum};
+use crate::coordinator::downlink::Downlink;
 use crate::coordinator::policy::{AsyncGateContext, PolicyContext, SelectionPolicy};
 use crate::coordinator::registry::ClientRegistry;
 use crate::coordinator::staleness::MixingRule;
@@ -75,6 +76,10 @@ struct FlushWindow {
     train_loss_sum: f64,
     bytes_up: u64,
     bytes_down: u64,
+    /// Control-frame share of `bytes_up` / `bytes_down` (V reports /
+    /// upload requests); the payload share is the difference.
+    bytes_up_ctrl: u64,
+    bytes_down_ctrl: u64,
     threshold: f64,
     /// Speculative local rounds committed as-is since the last flush.
     spec_committed: usize,
@@ -334,8 +339,15 @@ pub struct Server {
     layer_ks: Vec<usize>,
     /// Wire bytes of one model upload under the configured compression
     /// (dense: `ctx.model_payload_bytes`; topk: the exact sparse frame
-    /// for k of n values). Broadcasts are always dense.
+    /// for k of n values). Broadcast frames are priced per-broadcast
+    /// from the downlink compressor's actual encode (dense `down_mode`:
+    /// always `ctx.model_payload_bytes`).
     upload_payload_bytes: u64,
+    /// Server-side downlink compressor (`compression.down_mode = topk`):
+    /// per-active-client acked bases + error-feedback residuals, sparse
+    /// broadcast frames in the upload wire format. Holds no slots (and
+    /// is never consulted) in dense downlink mode.
+    downlink: Downlink,
     /// Reusable FedAvg weight buffer for the selected upload set.
     upload_weights: Vec<f64>,
     /// Reusable broadcast codec buffer + decoded broadcast model.
@@ -393,6 +405,11 @@ impl Server {
             registry,
             control: ControlPlane::new(&cfg.control),
             last_accs: vec![f64::NAN; n_clients],
+            downlink: Downlink::new(
+                n_clients,
+                cfg.upload_precision,
+                cfg.compression.error_feedback,
+            ),
             cfg,
             ctx,
             fleet,
@@ -599,8 +616,14 @@ impl Server {
         }
         let idle_seconds: f64 =
             report_arrival.iter().map(|&t| last_arrival - t).sum();
-        let mut bytes_up: u64 = n_active as u64 * Message::ValueReport.bytes();
+        // Control frames (V reports up, upload requests down) are
+        // tracked separately from model payloads so byte-level CCR can
+        // compare payload against payload (`RoundRecord::bytes_up` /
+        // `bytes_down` stay the ctrl+payload totals for compatibility).
+        let bytes_up_ctrl: u64 = n_active as u64 * Message::ValueReport.bytes();
+        let mut bytes_up: u64 = bytes_up_ctrl;
         let mut bytes_down: u64 = 0;
+        let mut bytes_down_ctrl: u64 = 0;
 
         // --- 2. Gate (lines 8-14).
         let selection = {
@@ -660,6 +683,7 @@ impl Server {
                     );
                     agg_time = agg_time.max(last_arrival + req + up);
                     bytes_down += Message::UploadRequest.bytes();
+                    bytes_down_ctrl += Message::UploadRequest.bytes();
                     bytes_up += payload;
                     match mode {
                         CompressionMode::Dense => self
@@ -728,17 +752,44 @@ impl Server {
             Some(&self.bcast_model)
         };
         let mut bcast_done = agg_time;
+        let down_topk = self.cfg.compression.down_mode == CompressionMode::TopK;
+        let down_k = self.cfg.compression.down_k_for(self.global.len());
         for i in 0..n {
             if n_selected > 0 && fleet_selected[i] {
+                // Encode (or force-dense) first: the frame's actual wire
+                // size drives both the transfer time and the bytes
+                // charged, so they can never diverge from the encode.
+                let payload_bytes = if down_topk {
+                    match self.downlink.encode_for(i, &self.global, down_k) {
+                        Some(delta) => {
+                            let b = delta.payload_bytes();
+                            self.fleet.client_mut(i).sync_sparse(delta);
+                            b
+                        }
+                        // No acked base (first contact): dense frame,
+                        // which establishes the shared base.
+                        None => {
+                            let target = bcast_model.unwrap_or(&self.global);
+                            self.fleet.client_mut(i).sync(target);
+                            self.downlink.ack_dense(i, target);
+                            self.ctx.model_payload_bytes
+                        }
+                    }
+                } else {
+                    self.fleet.client_mut(i).sync(bcast_model.unwrap_or(&self.global));
+                    self.ctx.model_payload_bytes
+                };
+                debug_assert!(
+                    !down_topk
+                        || self.downlink.base_of(i) == Some(self.fleet.client(i).sync_base()),
+                    "downlink base diverged from client {i}'s acked base"
+                );
                 let down = self.ctx.link.transfer_seconds(
-                    &Message::ModelBroadcast {
-                        payload_bytes: self.ctx.model_payload_bytes,
-                    },
+                    &Message::ModelBroadcast { payload_bytes },
                     &mut self.net_rng,
                 );
                 bcast_done = bcast_done.max(agg_time + down);
-                bytes_down += self.ctx.model_payload_bytes;
-                self.fleet.client_mut(i).sync(bcast_model.unwrap_or(&self.global));
+                bytes_down += payload_bytes;
             } else if self.registry.is_active(i) {
                 self.fleet.client_mut(i).mark_stale();
             }
@@ -775,6 +826,8 @@ impl Server {
             cum_uploads,
             bytes_up,
             bytes_down,
+            bytes_up_ctrl,
+            bytes_down_ctrl,
             threshold: selection.threshold,
             values: if compact { Vec::new() } else { fleet_values },
             selected: if compact { Vec::new() } else { fleet_selected },
@@ -804,6 +857,7 @@ impl Server {
                 self.last_accs[rep.client_id] = rep.acc;
             }
             let (residual_l1, transmitted_l1) = self.sparse_flush_mass(n_selected);
+            let (down_residual_l1, down_transmitted_l1) = self.down_flush_mass();
             self.control.observe(FlushSample {
                 round,
                 shard: 0,
@@ -814,6 +868,8 @@ impl Server {
                 bytes_up: record.bytes_up,
                 residual_l1,
                 transmitted_l1,
+                down_residual_l1,
+                down_transmitted_l1,
                 acc_proxy: mean_finite(&self.last_accs),
             });
             if self.control.due(round) {
@@ -1111,6 +1167,7 @@ impl Server {
                     let rep =
                         st.pending[client].take().expect("report without a local round");
                     st.window.bytes_up += Message::ValueReport.bytes();
+                    st.window.bytes_up_ctrl += Message::ValueReport.bytes();
                     let decision = {
                         // Sharded runs gate against the reporting
                         // client's own shard history, so EAFLM's Eq. 3
@@ -1170,6 +1227,7 @@ impl Server {
                             &mut self.net_rng,
                         );
                         st.window.bytes_down += Message::UploadRequest.bytes();
+                        st.window.bytes_down_ctrl += Message::UploadRequest.bytes();
                         st.in_flight += 1;
                         st.upload_in_flight[client] = true;
                         // Uplink bytes ride on the event and count when
@@ -1493,14 +1551,10 @@ impl Server {
         // Indexed loop (not an iterator): the speculative dispatch below
         // re-borrows the engine state mutably, and an index avoids
         // allocating a snapshot of the flushed ids on the hot flush path.
+        let down_topk = self.cfg.compression.down_mode == CompressionMode::TopK;
         #[allow(clippy::needless_range_loop)]
         for bi in 0..kk {
             let c = st.buffers[shard][bi].0;
-            let down = self.ctx.link.transfer_seconds(
-                &Message::ModelBroadcast { payload_bytes: payload },
-                &mut self.net_rng,
-            );
-            st.window.bytes_down += payload;
             if let Some(w) = st.waiting.pop_front() {
                 // Active-set rotation: this broadcast slot goes to the
                 // longest-waiting parked client instead of the uploader.
@@ -1511,14 +1565,67 @@ impl Server {
                 // current version — it may live on a different shard than
                 // the one that just flushed, and its staleness clock must
                 // start from what it actually synced.
+                //
+                // The newcomer never acked any downlink base (`hydrate`
+                // rebuilds it from a parked record, and storing a full
+                // base per parked client would defeat fleet
+                // virtualization), so a sparse downlink MUST ship this
+                // frame dense: it establishes the shared base the next
+                // sparse delta builds on. The parked client's slot is
+                // dropped for the same reason.
+                let down = self.ctx.link.transfer_seconds(
+                    &Message::ModelBroadcast { payload_bytes: payload },
+                    &mut self.net_rng,
+                );
+                st.window.bytes_down += payload;
+                let target = bcast_model.unwrap_or(&model[..]);
                 self.fleet.park(c);
-                self.fleet.hydrate(w, bcast_model.unwrap_or(&model[..]));
+                self.fleet.hydrate(w, target);
+                if down_topk {
+                    self.downlink.drop_client(c);
+                    self.downlink.ack_dense(w, target);
+                }
                 st.synced_version[w] = st.shard_version[st.shard_of[w]];
                 self.queue.schedule_at(now + down, EngineEvent::Start { client: w });
                 dispatch_speculation(&self.fleet, st, pool, w, knobs)?;
                 st.waiting.push_back(c);
             } else {
-                self.fleet.client_mut(c).sync(bcast_model.unwrap_or(&model[..]));
+                // The downlink budget is read per broadcast and the
+                // frame is charged from its own encode, so a mid-run
+                // `down_k_fraction` retune can never desynchronize the
+                // charged bytes from the bytes on the wire (the
+                // downlink mirror of the `upload_k` snapshot).
+                let frame_bytes = if down_topk {
+                    let down_k = self.cfg.compression.down_k_for(model.len());
+                    match self.downlink.encode_for(c, &model[..], down_k) {
+                        Some(delta) => {
+                            let b = delta.payload_bytes();
+                            self.fleet.client_mut(c).sync_sparse(delta);
+                            b
+                        }
+                        // First contact since hydration: no acked base,
+                        // force-dense (establishes it).
+                        None => {
+                            let target = bcast_model.unwrap_or(&model[..]);
+                            self.fleet.client_mut(c).sync(target);
+                            self.downlink.ack_dense(c, target);
+                            payload
+                        }
+                    }
+                } else {
+                    self.fleet.client_mut(c).sync(bcast_model.unwrap_or(&model[..]));
+                    payload
+                };
+                debug_assert!(
+                    !down_topk
+                        || self.downlink.base_of(c) == Some(self.fleet.client(c).sync_base()),
+                    "downlink base diverged from client {c}'s acked base"
+                );
+                let down = self.ctx.link.transfer_seconds(
+                    &Message::ModelBroadcast { payload_bytes: frame_bytes },
+                    &mut self.net_rng,
+                );
+                st.window.bytes_down += frame_bytes;
                 st.synced_version[c] = version;
                 self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
                 dispatch_speculation(&self.fleet, st, pool, c, knobs)?;
@@ -1596,6 +1703,8 @@ impl Server {
             cum_uploads,
             bytes_up: st.window.bytes_up,
             bytes_down: st.window.bytes_down,
+            bytes_up_ctrl: st.window.bytes_up_ctrl,
+            bytes_down_ctrl: st.window.bytes_down_ctrl,
             threshold,
             values: if compact { Vec::new() } else { st.last_values.to_vec() },
             selected: fleet_selected,
@@ -1631,6 +1740,7 @@ impl Server {
             } else {
                 self.sparse_flush_mass(kk)
             };
+            let (down_residual_l1, down_transmitted_l1) = self.down_flush_mass();
             self.control.observe(FlushSample {
                 round: flush_idx,
                 shard,
@@ -1641,6 +1751,8 @@ impl Server {
                 bytes_up: record.bytes_up,
                 residual_l1,
                 transmitted_l1,
+                down_residual_l1,
+                down_transmitted_l1,
                 acc_proxy: mean_finite(&st.last_accs),
             });
         }
@@ -1699,10 +1811,24 @@ impl Server {
         (residual, transmitted)
     }
 
+    /// Downlink analogue of [`Server::sparse_flush_mass`]: drain the
+    /// (residual, transmitted) selection-key mass the downlink
+    /// compressor accumulated since the previous commit sample. Gated
+    /// exactly like the uplink mass so the disabled control plane stays
+    /// inert and cost-free.
+    fn down_flush_mass(&mut self) -> (f64, f64) {
+        if self.cfg.compression.down_mode != CompressionMode::TopK
+            || !self.cfg.control.compression
+        {
+            return (0.0, 0.0);
+        }
+        self.downlink.take_mass()
+    }
+
     /// Apply a retuned `compression.k_fraction` and recompute the wire
     /// size of one model upload under it; subsequent uploads (next
     /// barriered round / next barrier-free upload request) ship the new
-    /// frame. Broadcasts stay dense regardless.
+    /// frame. The downlink budget is the separate `down_k_fraction` knob.
     fn set_k_fraction(&mut self, to: f64) {
         self.cfg.compression.k_fraction = to;
         let n = self.global.len();
@@ -1714,6 +1840,15 @@ impl Server {
                 n,
             ),
         };
+    }
+
+    /// Apply a retuned `compression.down_k_fraction`. Takes effect at
+    /// the next broadcast: the engines size, charge, and time every
+    /// downlink frame from the actual encode at broadcast time, so a
+    /// mid-run retune can never desynchronize charged and encoded bytes
+    /// (the downlink mirror of the `upload_k` snapshot discipline).
+    fn set_down_k_fraction(&mut self, to: f64) {
+        self.cfg.compression.down_k_fraction = to;
     }
 
     /// Log one applied control decision (metrics stream + optional
@@ -1777,6 +1912,8 @@ impl Server {
             alpha0: mixing.alpha0(),
             k_fraction: self.cfg.compression.k_fraction,
             topk: self.cfg.compression.mode == CompressionMode::TopK,
+            down_k_fraction: self.cfg.compression.down_k_fraction,
+            down_topk: self.cfg.compression.down_mode == CompressionMode::TopK,
             barrier_free: true,
         };
         for d in self.control.decide_knobs(knobs) {
@@ -1844,6 +1981,19 @@ impl Server {
                         None,
                     );
                 }
+                KnobChange::DownKFraction { from, to } => {
+                    self.set_down_k_fraction(to);
+                    self.push_control_record(
+                        flushes,
+                        now,
+                        d.controller,
+                        "down_k_fraction",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
             }
         }
     }
@@ -1857,21 +2007,41 @@ impl Server {
             alpha0: self.cfg.async_engine.mixing.alpha0(),
             k_fraction: self.cfg.compression.k_fraction,
             topk: self.cfg.compression.mode == CompressionMode::TopK,
+            down_k_fraction: self.cfg.compression.down_k_fraction,
+            down_topk: self.cfg.compression.down_mode == CompressionMode::TopK,
             barrier_free: false,
         };
         for d in self.control.decide_knobs(knobs) {
-            if let KnobChange::KFraction { from, to } = d.change {
-                self.set_k_fraction(to);
-                self.push_control_record(
-                    round,
-                    now,
-                    d.controller,
-                    "k_fraction",
-                    from,
-                    to,
-                    d.signal,
-                    None,
-                );
+            match d.change {
+                KnobChange::KFraction { from, to } => {
+                    self.set_k_fraction(to);
+                    self.push_control_record(
+                        round,
+                        now,
+                        d.controller,
+                        "k_fraction",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
+                KnobChange::DownKFraction { from, to } => {
+                    self.set_down_k_fraction(to);
+                    self.push_control_record(
+                        round,
+                        now,
+                        d.controller,
+                        "down_k_fraction",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
+                // Buffer/alpha are barrier-free knobs; `decide_knobs`
+                // never emits them here.
+                KnobChange::BufferK { .. } | KnobChange::Alpha0 { .. } => {}
             }
         }
     }
@@ -2162,5 +2332,12 @@ mod tests {
         assert_eq!(rec.bytes_up, 3 * 68 + 3 * payload);
         // 3 upload requests + 3 broadcasts.
         assert_eq!(rec.bytes_down, 3 * 64 + 3 * payload);
+        // Hand-counted control/payload split: the totals above decompose
+        // into fixed-size control frames (68-byte V reports up, 64-byte
+        // upload requests down) and model payloads — nothing else.
+        assert_eq!(rec.bytes_up_ctrl, 3 * 68);
+        assert_eq!(rec.bytes_down_ctrl, 3 * 64);
+        assert_eq!(rec.bytes_up_payload(), 3 * payload);
+        assert_eq!(rec.bytes_down_payload(), 3 * payload);
     }
 }

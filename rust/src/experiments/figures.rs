@@ -118,6 +118,8 @@ mod tests {
                 cum_uploads: i + 1,
                 bytes_up: 0,
                 bytes_down: 0,
+                bytes_up_ctrl: 0,
+                bytes_down_ctrl: 0,
                 threshold: 0.0,
                 values: vec![],
                 selected: vec![true],

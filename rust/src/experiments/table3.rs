@@ -23,6 +23,14 @@ pub struct Row {
     /// Eq. 4 over `bytes_up` against the AFL baseline of the same
     /// experiment.
     pub ccr_bytes: f64,
+    /// Round-trip *payload* bytes across the run: model uploads plus
+    /// model broadcasts, with the fixed-size control frames (V reports,
+    /// upload requests) excluded from both links — bidirectional
+    /// compression is graded only on the bytes it can actually move.
+    pub bytes_rt_payload: u64,
+    /// Eq. 4 over `bytes_rt_payload` against the AFL baseline of the
+    /// same experiment: the full round-trip compression rate.
+    pub ccr_bytes_rt: f64,
     pub best_acc: f64,
 }
 
@@ -37,10 +45,14 @@ pub fn rows_for_experiment(runs: &[RunMetrics]) -> Vec<Row> {
     let baseline_bytes = afl
         .and_then(|r| r.bytes_up_to_target())
         .unwrap_or_else(|| afl.map_or(0, |r| r.total_bytes_up()));
+    let rt_payload =
+        |r: &RunMetrics| r.total_bytes_up_payload() + r.total_bytes_down_payload();
+    let baseline_rt = afl.map_or(0, rt_payload);
     runs.iter()
         .map(|m| {
             let mine = m.comm_times_to_target().unwrap_or(m.total_uploads());
             let mine_bytes = m.bytes_up_to_target().unwrap_or(m.total_bytes_up());
+            let mine_rt = rt_payload(m);
             let is_afl = m.algorithm == "afl";
             Row {
                 experiment: m.experiment.clone(),
@@ -50,6 +62,8 @@ pub fn rows_for_experiment(runs: &[RunMetrics]) -> Vec<Row> {
                 ccr: if is_afl { 0.0 } else { ccr(baseline, mine) },
                 bytes_up: mine_bytes,
                 ccr_bytes: if is_afl { 0.0 } else { ccr_bytes(baseline_bytes, mine_bytes) },
+                bytes_rt_payload: mine_rt,
+                ccr_bytes_rt: if is_afl { 0.0 } else { ccr_bytes(baseline_rt, mine_rt) },
                 best_acc: m.best_accuracy(),
             }
         })
@@ -59,8 +73,8 @@ pub fn rows_for_experiment(runs: &[RunMetrics]) -> Vec<Row> {
 /// Render rows in the paper's Table III layout.
 pub fn render(rows: &[Row]) -> String {
     let mut s = String::from(
-        "experiment  algorithm  comm_times  CCR      bytes_up      CCR_bytes  best_acc\n\
-         -----------------------------------------------------------------------------\n",
+        "experiment  algorithm  comm_times  CCR      bytes_up      CCR_bytes  CCR_rt     best_acc\n\
+         ---------------------------------------------------------------------------------------\n",
     );
     for r in rows {
         let comm = match r.comm_times {
@@ -68,8 +82,15 @@ pub fn render(rows: &[Row]) -> String {
             None => format!(">{}", r.total_uploads),
         };
         s += &format!(
-            "{:<11} {:<10} {:<11} {:<8.4} {:<13} {:<10.4} {:.4}\n",
-            r.experiment, r.algorithm, comm, r.ccr, r.bytes_up, r.ccr_bytes, r.best_acc
+            "{:<11} {:<10} {:<11} {:<8.4} {:<13} {:<10.4} {:<10.4} {:.4}\n",
+            r.experiment,
+            r.algorithm,
+            comm,
+            r.ccr,
+            r.bytes_up,
+            r.ccr_bytes,
+            r.ccr_bytes_rt,
+            r.best_acc
         );
     }
     s
@@ -127,6 +148,8 @@ pub fn to_json(rows: &[Row]) -> Value {
                     ("ccr", Value::from(r.ccr)),
                     ("bytes_up", Value::from(r.bytes_up as usize)),
                     ("ccr_bytes", Value::from(r.ccr_bytes)),
+                    ("bytes_rt_payload", Value::from(r.bytes_rt_payload as usize)),
+                    ("ccr_bytes_rt", Value::from(r.ccr_bytes_rt)),
                     ("best_acc", Value::from(r.best_acc)),
                 ])
             })
@@ -151,6 +174,8 @@ mod tests {
             cum_uploads: comms_at_target,
             bytes_up: 0,
             bytes_down: 0,
+            bytes_up_ctrl: 0,
+            bytes_down_ctrl: 0,
             threshold: 0.0,
             values: vec![],
             selected: vec![],
@@ -197,6 +222,30 @@ mod tests {
     }
 
     #[test]
+    fn round_trip_ccr_is_payload_only_both_links() {
+        // AFL ships 4000 up + 4000 down, 500 of each being control
+        // frames. The compressed run halves only the payloads; control
+        // frames are identical. Payload round trip: 7000 -> 3500.
+        let mut afl = fake_run("a", "afl", 10);
+        afl.records[0].bytes_up = 4000;
+        afl.records[0].bytes_down = 4000;
+        afl.records[0].bytes_up_ctrl = 500;
+        afl.records[0].bytes_down_ctrl = 500;
+        let mut bidir = fake_run("a", "vafl", 10);
+        bidir.records[0].bytes_up = 2250; // 1750 payload + 500 ctrl
+        bidir.records[0].bytes_down = 2250;
+        bidir.records[0].bytes_up_ctrl = 500;
+        bidir.records[0].bytes_down_ctrl = 500;
+        let rows = rows_for_experiment(&[afl, bidir]);
+        assert_eq!(rows[0].bytes_rt_payload, 7000);
+        assert_eq!(rows[0].ccr_bytes_rt, 0.0);
+        assert_eq!(rows[1].bytes_rt_payload, 3500);
+        assert!((rows[1].ccr_bytes_rt - 0.5).abs() < 1e-12, "ctrl frames must not dilute CCR");
+        let text = render(&rows);
+        assert!(text.contains("CCR_rt"), "{text}");
+    }
+
+    #[test]
     fn headline_averages_over_experiments() {
         // Two experiments with VAFL halving comms -> 50 % reduction, CCR 0.5.
         let mut rows = rows_for_experiment(&[fake_run("a", "afl", 40), fake_run("a", "vafl", 20)]);
@@ -222,6 +271,8 @@ mod tests {
             cum_uploads: 3,
             bytes_up: 0,
             bytes_down: 0,
+            bytes_up_ctrl: 0,
+            bytes_down_ctrl: 0,
             threshold: 0.0,
             values: vec![],
             selected: vec![],

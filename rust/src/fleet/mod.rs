@@ -185,6 +185,33 @@ impl Client {
         self.epoch += 1;
     }
 
+    /// Receive a sparse downlink frame (bidirectional compression): the
+    /// new global is the last-acked `base` with the frame's transmitted
+    /// coordinates overwritten by their decoded absolute values. The
+    /// reconstruction becomes both the working params and the next
+    /// upload/download base — exactly what [`Client::sync`] does with a
+    /// dense frame, and bitwise the same computation the server replays
+    /// against its `coordinator::downlink` slot. The caller must
+    /// guarantee this client acked the base the delta was encoded
+    /// against (the engine force-feeds a dense frame otherwise). The
+    /// upload error-feedback residual persists, as in a dense sync.
+    pub fn sync_sparse(&mut self, delta: &SparseDelta) {
+        self.params.clear();
+        self.params.extend_from_slice(&self.base);
+        delta.scatter_into(&mut self.params);
+        self.base.clear();
+        self.base.extend_from_slice(&self.params);
+        self.staleness = 0;
+        self.epoch += 1;
+    }
+
+    /// The sparse-delta base model this client last acked
+    /// (tests/diagnostics — the downlink compressor's per-client slot
+    /// must stay bitwise equal to this).
+    pub fn sync_base(&self) -> &[f32] {
+        &self.base
+    }
+
     /// Current training-state version (see the `epoch` field docs).
     pub fn epoch(&self) -> u64 {
         self.epoch

@@ -7,6 +7,7 @@
 //!          [--shards S] [--reconcile-every N] [--rounds N] [--seed N]
 //!          [--compression dense|topk] [--k-fraction F]
 //!          [--error-feedback true|false]
+//!          [--down-mode dense|topk] [--down-k-fraction F]
 //!          [--control on|off|staleness,compression,rebalance]
 //!          [--control-interval N] [--control-window N]
 //!          [--mock] [--out DIR] [--realtime SCALE]
@@ -119,6 +120,7 @@ fn print_usage() {
          \x20                 [--engine barriered|barrier_free] [--engine-threads N] [--shards S]\n\
          \x20                 [--reconcile-every N] [--rounds N] [--seed N] [--mock]\n\
          \x20                 [--compression dense|topk] [--k-fraction F] [--error-feedback true|false]\n\
+         \x20                 [--down-mode dense|topk] [--down-k-fraction F]\n\
          \x20                 [--layer-k-fractions F1,F2,..] [--active-set N] [--edge-fanout N]\n\
          \x20                 [--compact-records] [--alpha-step F]\n\
          \x20                 [--control on|off|staleness,compression,rebalance]\n\
@@ -169,6 +171,13 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
     if let Some(l) = flags.get("layer-k-fractions") {
         cfg.compression.layer_k_fractions = vafl::config::parse_fraction_list(l)
             .with_context(|| format!("--layer-k-fractions {l:?}"))?;
+    }
+    if let Some(c) = flags.get("down-mode") {
+        cfg.compression.down_mode = vafl::config::CompressionMode::from_name(c)?;
+    }
+    if let Some(f) = flags.get("down-k-fraction") {
+        cfg.compression.down_k_fraction =
+            f.parse::<f64>().with_context(|| format!("--down-k-fraction {f:?}"))?;
     }
     if let Some(a) = flags.get("active-set") {
         cfg.fleet.active_set =

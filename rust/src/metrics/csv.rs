@@ -11,10 +11,10 @@ use super::RunMetrics;
 /// Write the per-round curve: one row per round.
 pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
     let mut out = String::new();
-    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,spec_committed,spec_replayed\n");
+    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl\n");
     for r in &m.records {
         out.push_str(&format!(
-            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{},{}\n",
+            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{}\n",
             r.round,
             r.vtime,
             fmt(r.global_acc),
@@ -33,6 +33,10 @@ pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
             r.shard,
             r.spec_committed,
             r.spec_replayed,
+            // Control-frame split appended last so existing column
+            // indices (external plotting scripts) stay stable.
+            r.bytes_up_ctrl,
+            r.bytes_down_ctrl,
         ));
     }
     write_atomic(path.as_ref(), out.as_bytes())
@@ -121,6 +125,8 @@ mod tests {
             cum_uploads: 2,
             bytes_up: 77000,
             bytes_down: 78000,
+            bytes_up_ctrl: 136,
+            bytes_down_ctrl: 128,
             threshold: 0.1,
             values: vec![0.2, 0.05],
             selected: vec![true, false],
@@ -145,9 +151,10 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,vtime,acc"));
-        assert!(lines[0].ends_with("stale_mean,stale_max,shard,spec_committed,spec_replayed"));
+        assert!(lines[0]
+            .ends_with("stale_mean,stale_max,shard,spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl"));
         assert!(lines[1].starts_with("1,1.250000,0.500000"));
-        assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1"));
+        assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1,136,128"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -28,6 +28,17 @@ pub struct RoundRecord {
     /// excluded — see `coordinator::server::EngineEvent::Upload`.
     pub bytes_up: u64,
     pub bytes_down: u64,
+    /// Control-frame share of `bytes_up`: the fixed-size V reports
+    /// (`Message::ValueReport`), which no compression mode shrinks. The
+    /// payload share is `bytes_up - bytes_up_ctrl`. Kept separate so
+    /// compression ratios compare payloads, not payloads diluted by
+    /// protocol overhead (`bytes_up` stays the total for CSV/JSON/golden
+    /// compatibility).
+    pub bytes_up_ctrl: u64,
+    /// Control-frame share of `bytes_down`: the fixed-size upload
+    /// requests (`Message::UploadRequest`). The broadcast payload share
+    /// is `bytes_down - bytes_down_ctrl`.
+    pub bytes_down_ctrl: u64,
     /// Policy threshold (mean-V for VAFL, Eq. 3 RHS for EAFLM).
     pub threshold: f64,
     /// Per-client effective values the policy used.
@@ -64,6 +75,19 @@ pub struct RoundRecord {
 }
 
 impl RoundRecord {
+    /// Model-payload share of the uplink bytes (total minus the fixed
+    /// V-report control frames) — the quantity sparse uploads shrink.
+    pub fn bytes_up_payload(&self) -> u64 {
+        self.bytes_up.saturating_sub(self.bytes_up_ctrl)
+    }
+
+    /// Broadcast-payload share of the downlink bytes (total minus the
+    /// fixed upload-request control frames) — the quantity sparse
+    /// broadcasts shrink.
+    pub fn bytes_down_payload(&self) -> u64 {
+        self.bytes_down.saturating_sub(self.bytes_down_ctrl)
+    }
+
     /// Mean staleness of this record's aggregated uploads (NaN if none).
     pub fn staleness_mean(&self) -> f64 {
         if self.upload_staleness.is_empty() {
@@ -90,7 +114,8 @@ pub struct ControlRecord {
     pub vtime: f64,
     /// Controller that fired: "staleness" | "compression" | "rebalance".
     pub controller: String,
-    /// Knob moved: "buffer_k" | "alpha0" | "k_fraction" | "client_shard".
+    /// Knob moved: "buffer_k" | "alpha0" | "k_fraction" |
+    /// "down_k_fraction" | "client_shard".
     pub knob: String,
     /// Old and new knob values (shard ids for migrations).
     pub old: f64,
@@ -206,6 +231,20 @@ impl RunMetrics {
         self.records.iter().map(|r| r.bytes_down).sum()
     }
 
+    /// Total uplink *payload* bytes (model uploads only, V-report control
+    /// frames excluded) — the numerator/denominator Eq. 4 byte ratios
+    /// should use, so a compression mode is not graded on protocol
+    /// overhead it cannot touch.
+    pub fn total_bytes_up_payload(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_up_payload()).sum()
+    }
+
+    /// Total downlink *payload* bytes (model broadcasts only,
+    /// upload-request control frames excluded).
+    pub fn total_bytes_down_payload(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_down_payload()).sum()
+    }
+
     /// Cumulative uplink bytes when the target accuracy was first
     /// reached — the byte-level companion of
     /// [`RunMetrics::comm_times_to_target`] for Table III–style
@@ -319,6 +358,14 @@ impl RunMetrics {
             ("total_uploads", Value::from(self.total_uploads())),
             ("total_bytes_up", Value::from(self.total_bytes_up() as usize)),
             ("total_bytes_down", Value::from(self.total_bytes_down() as usize)),
+            (
+                "total_bytes_up_payload",
+                Value::from(self.total_bytes_up_payload() as usize),
+            ),
+            (
+                "total_bytes_down_payload",
+                Value::from(self.total_bytes_down_payload() as usize),
+            ),
             (
                 "bytes_up_to_target",
                 self.bytes_up_to_target()
@@ -439,6 +486,8 @@ mod tests {
             cum_uploads: cum,
             bytes_up: 100,
             bytes_down: 100,
+            bytes_up_ctrl: 30,
+            bytes_down_ctrl: 20,
             threshold: 0.5,
             values: vec![1.0, 2.0],
             selected: vec![true, false],
@@ -513,6 +562,14 @@ mod tests {
         let m = run(); // 3 records x 100 bytes each way; target hit at #2
         assert_eq!(m.total_bytes_up(), 300);
         assert_eq!(m.total_bytes_down(), 300);
+        // Payload = total - control frames (30 up / 20 down per record).
+        assert_eq!(m.records[0].bytes_up_payload(), 70);
+        assert_eq!(m.records[0].bytes_down_payload(), 80);
+        assert_eq!(m.total_bytes_up_payload(), 210);
+        assert_eq!(m.total_bytes_down_payload(), 240);
+        // A ctrl count exceeding the total (malformed seed) saturates.
+        let odd = RoundRecord { bytes_up_ctrl: 500, ..m.records[0].clone() };
+        assert_eq!(odd.bytes_up_payload(), 0);
         assert_eq!(m.bytes_up_to_target(), Some(200));
         let mut never = RunMetrics::new("a", "afl", 0.99);
         never.push(record(1, 0.5, 1, 1));
@@ -561,6 +618,8 @@ mod tests {
         assert_eq!(v.get("comm_times_to_target").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("spec_committed").unwrap().as_usize(), Some(4));
         assert_eq!(v.get("total_bytes_up").unwrap().as_usize(), Some(300));
+        assert_eq!(v.get("total_bytes_up_payload").unwrap().as_usize(), Some(210));
+        assert_eq!(v.get("total_bytes_down_payload").unwrap().as_usize(), Some(240));
         assert_eq!(v.get("bytes_up_to_target").unwrap().as_usize(), Some(200));
     }
 

@@ -1,0 +1,87 @@
+//! Counting-allocator proof that the sparse *downlink* path is
+//! allocation-free at steady state, mirroring `alloc_sparse.rs` for the
+//! upload direction: once a client's slot has been acked and the shared
+//! frame buffer has grown to steady-state size, each broadcast —
+//! server-side `encode_for` (top-k selection against the acked base with
+//! error feedback) plus the client-side scatter apply — performs
+//! **zero** heap allocations. Separate test binary because the
+//! `#[global_allocator]` is process-wide; keep it to this single test.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use vafl::coordinator::Downlink;
+use vafl::model::quant::Precision;
+use vafl::util::rng::Rng;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_downlink_encode_and_apply_do_not_allocate() {
+    let p = 4096usize;
+    let clients = 7usize;
+    let k = p / 10;
+    let mut rng = Rng::new(47);
+    let mut global: Vec<f32> = (0..p).map(|_| rng.gauss() as f32).collect();
+    // Client replicas: params + acked base, as `fleet` keeps them.
+    let mut params: Vec<Vec<f32>> = vec![global.clone(); clients];
+
+    for precision in [Precision::F32, Precision::F16, Precision::Int8] {
+        let mut dl = Downlink::new(clients, precision, true);
+        // Warm-up: ack every slot (allocates the per-client base +
+        // residual) and run one broadcast round to grow the shared
+        // frame buffer to steady-state size.
+        for (c, cp) in params.iter_mut().enumerate() {
+            dl.ack_dense(c, cp);
+            let delta = dl.encode_for(c, &global, k).unwrap();
+            delta.scatter_into(cp);
+        }
+
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            // The global model drifts in place between broadcasts so
+            // every frame carries fresh coordinates.
+            for g in global.iter_mut() {
+                *g += rng.gauss() as f32 * 0.01;
+            }
+            for (c, cp) in params.iter_mut().enumerate() {
+                let delta = dl.encode_for(c, &global, k).unwrap();
+                delta.scatter_into(cp);
+            }
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after,
+            before,
+            "steady-state downlink rounds allocated {} time(s) at {}",
+            after - before,
+            precision.name()
+        );
+    }
+}

@@ -1,0 +1,428 @@
+//! Bidirectional (downlink) sparse broadcast tests: full-k sparse
+//! broadcasts are bitwise the dense engine (both engines, serial and
+//! threaded, shards 1 and 4, every precision), downlink frames
+//! round-trip bit-exactly against the server's per-client acked base
+//! (including non-finite contamination), downlink error feedback is
+//! live, active-set rotation always re-establishes a base with a dense
+//! frame before any sparse delta applies, the control plane's
+//! `down_k_fraction` knob retunes deterministically, and the
+//! control/payload byte split is pinned by hand-counted frames.
+
+use vafl::config::{
+    Algorithm, AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, ControlConfig,
+    EngineMode, ExperimentConfig,
+};
+use vafl::coordinator::{Downlink, MixingRule};
+use vafl::experiments;
+use vafl::metrics::{ccr_bytes, RoundRecord};
+use vafl::model::quant::{Precision, QuantBuf};
+use vafl::model::sparse::sparse_payload_bytes;
+use vafl::util::rng::Rng;
+
+/// Mini property harness (same shape as `tests/sparse.rs`).
+fn cases(n: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xB10A_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn quick(which: char, algorithm: Algorithm, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = algorithm;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 120;
+    cfg.test_samples = 96;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+/// Full bitwise record equality, byte accounting included (the downlink
+/// full-k frame elides its index block precisely so these match dense).
+fn assert_records_identical(x: &RoundRecord, y: &RoundRecord) {
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.shard, y.shard, "round {}", x.round);
+    assert_eq!(x.vtime.to_bits(), y.vtime.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.threshold.to_bits(), y.threshold.to_bits(), "round {}", x.round);
+    assert_eq!(x.idle_seconds.to_bits(), y.idle_seconds.to_bits(), "round {}", x.round);
+    assert_eq!(x.uploads, y.uploads);
+    assert_eq!(x.cum_uploads, y.cum_uploads);
+    assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+    assert_eq!(x.bytes_up_ctrl, y.bytes_up_ctrl, "round {}", x.round);
+    assert_eq!(x.bytes_down_ctrl, y.bytes_down_ctrl, "round {}", x.round);
+    assert_eq!(x.reports, y.reports);
+    assert_eq!(x.in_flight, y.in_flight);
+    assert_eq!(x.selected, y.selected);
+    assert_eq!(x.upload_staleness, y.upload_staleness);
+    let vb = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    assert_eq!(vb(&x.values), vb(&y.values), "round {}", x.round);
+    assert_eq!(vb(&x.client_accs), vb(&y.client_accs), "round {}", x.round);
+}
+
+/// Run `base` as-is (downlink dense) and with `down_mode = topk` at
+/// `down_k_fraction = 1.0`; the record streams must be bitwise equal.
+fn run_down_pair(base: &ExperimentConfig) {
+    let dense = experiments::run(base).unwrap();
+    let mut scfg = base.clone();
+    scfg.compression = CompressionConfig {
+        down_mode: CompressionMode::TopK,
+        down_k_fraction: 1.0,
+        ..base.compression.clone()
+    };
+    let sparse = experiments::run(&scfg).unwrap();
+    assert_eq!(dense.metrics.records.len(), sparse.metrics.records.len());
+    for (x, y) in dense.metrics.records.iter().zip(&sparse.metrics.records) {
+        assert_records_identical(x, y);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-k sparse broadcasts ARE the dense engine (both engines, both
+// execution strategies, shards 1 and 4, every precision)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn down_full_k_is_bitwise_dense_barriered() {
+    let mut cfg = quick('b', Algorithm::Vafl, 6);
+    cfg.engine = EngineMode::Barriered;
+    run_down_pair(&cfg);
+    // Threaded barriered path.
+    cfg.engine_opts.threaded = true;
+    cfg.engine_opts.workers = 3;
+    run_down_pair(&cfg);
+}
+
+#[test]
+fn down_full_k_is_bitwise_dense_barrier_free() {
+    for shards in [1usize, 4] {
+        for threaded in [false, true] {
+            let mut cfg = quick('b', Algorithm::Vafl, 8);
+            cfg.engine = EngineMode::BarrierFree;
+            cfg.async_engine = AsyncEngineConfig {
+                buffer_k: 2,
+                mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+            };
+            cfg.engine_opts.shards = shards;
+            cfg.engine_opts.reconcile_every = 3;
+            cfg.engine_opts.threaded = threaded;
+            cfg.engine_opts.workers = 4;
+            run_down_pair(&cfg);
+        }
+    }
+}
+
+#[test]
+fn down_full_k_is_bitwise_dense_across_precisions_and_with_sparse_uploads() {
+    // The lossy codecs must keep the identity (the broadcast's decoded
+    // values come through the same codec as the dense frame), and the
+    // identity must hold with sparse *uploads* active at the same time —
+    // the two directions share config but not state.
+    for prec in [Precision::F16, Precision::Int8] {
+        let mut cfg = quick('a', Algorithm::Vafl, 5);
+        cfg.engine = EngineMode::Barriered;
+        cfg.upload_precision = prec;
+        run_down_pair(&cfg);
+    }
+    let mut cfg = quick('b', Algorithm::Vafl, 6);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    cfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.25,
+        error_feedback: true,
+        ..Default::default()
+    };
+    run_down_pair(&cfg);
+}
+
+// ---------------------------------------------------------------------------
+// Downlink frame round-trips against the acked base
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_downlink_frame_round_trips_all_precisions() {
+    // For random global/base (a third of the cases contaminated with
+    // NaN/±inf) and random k, the server's post-encode slot base must be
+    // bitwise the client-side reconstruction, at every precision; at
+    // k == dim the frame must decode to exactly the dense codec's view
+    // of the model and cost exactly the dense payload bytes.
+    cases(80, |rng| {
+        let dim = 1 + rng.below(300);
+        let k = 1 + rng.below(dim);
+        let mut global: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32 * 2.0).collect();
+        let base: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+        if rng.below(3) == 0 {
+            global[rng.below(dim)] = f32::NAN;
+            global[rng.below(dim)] = f32::INFINITY;
+            global[rng.below(dim)] = f32::NEG_INFINITY;
+        }
+        for prec in [Precision::F32, Precision::F16, Precision::Int8] {
+            let mut dl = Downlink::new(1, prec, true);
+            dl.ack_dense(0, &base);
+            // Partial k: client replay == server slot, bit for bit.
+            let mut client = base.clone();
+            {
+                let delta = dl.encode_for(0, &global, k).unwrap();
+                assert_eq!(delta.payload_bytes(), sparse_payload_bytes(prec, k, dim));
+                delta.scatter_into(&mut client);
+            }
+            let srv = dl.base_of(0).unwrap();
+            for (i, (a, b)) in srv.iter().zip(&client).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                    "{} coord {i}: server {a} vs client {b}",
+                    prec.name()
+                );
+            }
+            // Full k: the frame carries the whole model through the
+            // codec — same bits as a dense broadcast, same byte cost.
+            let frame_bytes = dl.encode_for(0, &global, dim).unwrap().payload_bytes();
+            assert_eq!(frame_bytes, prec.payload_bytes(dim));
+            let mut dense = QuantBuf::new();
+            dense.encode(prec, &global);
+            let mut want = vec![0.0f32; dim];
+            dense.decode_into(&mut want);
+            for (i, (a, b)) in dl.base_of(0).unwrap().iter().zip(&want).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                    "{} full-k coord {i}: sparse {a} vs dense {b}",
+                    prec.name()
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Downlink error feedback and partial-k learning
+// ---------------------------------------------------------------------------
+
+#[test]
+fn down_error_feedback_actually_changes_the_run() {
+    // Same uplink (dense), sparse downlink at a starving budget: the EF
+    // residual must alter which coordinates later broadcasts ship, and
+    // with them the clients' training trajectories.
+    let mk = |error_feedback: bool| {
+        let mut cfg = quick('a', Algorithm::Afl, 10);
+        cfg.engine = EngineMode::Barriered;
+        cfg.compression = CompressionConfig {
+            error_feedback,
+            down_mode: CompressionMode::TopK,
+            down_k_fraction: 0.1,
+            ..Default::default()
+        };
+        experiments::run(&cfg).unwrap()
+    };
+    let on = mk(true);
+    let off = mk(false);
+    let same = on
+        .metrics
+        .records
+        .iter()
+        .zip(&off.metrics.records)
+        .all(|(x, y)| x.global_acc.to_bits() == y.global_acc.to_bits());
+    assert!(!same, "downlink error feedback produced a bit-identical run to EF off");
+}
+
+#[test]
+fn bidir_partial_k_cuts_downlink_payload_and_round_trip_bytes() {
+    // AFL (uploads every round) so both runs have the same schedule;
+    // bidirectional top-k at 0.25 must cut the *payload* bytes on both
+    // links while the control-frame bytes stay identical.
+    let mut dense_cfg = quick('b', Algorithm::Afl, 6);
+    dense_cfg.engine = EngineMode::BarrierFree;
+    dense_cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    let dense = experiments::run(&dense_cfg).unwrap();
+    let mut bcfg = dense_cfg.clone();
+    bcfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.25,
+        error_feedback: true,
+        down_mode: CompressionMode::TopK,
+        down_k_fraction: 0.25,
+        ..Default::default()
+    };
+    let bidir = experiments::run(&bcfg).unwrap();
+    assert_eq!(dense.total_uploads, bidir.total_uploads);
+    let (d_down, b_down) = (
+        dense.metrics.total_bytes_down_payload(),
+        bidir.metrics.total_bytes_down_payload(),
+    );
+    assert!(b_down < d_down, "bidir {b_down} >= dense {d_down} downlink payload bytes");
+    // Control frames are fixed-size protocol overhead — identical runs.
+    let ctrl = |m: &vafl::metrics::RunMetrics| {
+        m.records.iter().map(|r| r.bytes_down_ctrl).sum::<u64>()
+    };
+    assert_eq!(ctrl(&dense.metrics), ctrl(&bidir.metrics));
+    // Round-trip payload CCR (Eq. 4 over payload-only both links) is
+    // positive and material at a 0.25/0.25 budget.
+    let rt = |m: &vafl::metrics::RunMetrics| {
+        m.total_bytes_up_payload() + m.total_bytes_down_payload()
+    };
+    let c = ccr_bytes(rt(&dense.metrics), rt(&bidir.metrics));
+    assert!(c > 0.3, "round-trip payload CCR {c} too low for 0.25 budgets");
+    // Forced-dense first contacts mean the downlink CCR is below the
+    // naive 1 - 0.25, but it must still be well clear of zero.
+    let cd = ccr_bytes(d_down, b_down);
+    assert!(cd > 0.3, "downlink payload CCR {cd} too low for down_k_fraction 0.25");
+}
+
+// ---------------------------------------------------------------------------
+// Active-set rotation: re-entry is always dense-first
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rotation_with_full_k_downlink_is_bitwise_dense() {
+    // Rotation constantly parks clients (dropping their downlink slots)
+    // and hydrates newcomers with no acked base. At full k the forced
+    // dense frames and the sparse frames are byte- and bit-identical, so
+    // the whole rotating run must match the dense-downlink rotating run
+    // exactly — proving a sparse delta is never applied against a base
+    // the client didn't ack (any such divergence shows up in acc bits).
+    // The engine's debug_assert cross-checks server vs client bases on
+    // every broadcast (tests run with debug assertions on).
+    let mut cfg = quick('b', Algorithm::Vafl, 8);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+    cfg.fleet.active_set = 4; // 7-client fleet, 4 hydrated: rotation on
+    run_down_pair(&cfg);
+}
+
+#[test]
+fn rotation_with_partial_k_downlink_is_deterministic_and_learns() {
+    let mk = || {
+        let mut cfg = quick('b', Algorithm::Vafl, 10);
+        cfg.engine = EngineMode::BarrierFree;
+        cfg.async_engine =
+            AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+        cfg.fleet.active_set = 4;
+        cfg.compression = CompressionConfig {
+            down_mode: CompressionMode::TopK,
+            down_k_fraction: 0.25,
+            ..Default::default()
+        };
+        experiments::run(&cfg).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_identical(x, y);
+    }
+    assert!(a.best_accuracy.is_finite() && a.best_accuracy > 0.0);
+    // Rotation must actually have happened for this test to mean much.
+    assert!(a.metrics.fleet_parks > 0, "active_set = 4 of 7 never rotated");
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive down_k_fraction: the knob is live, bounded, deterministic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adaptive_down_k_fraction_retunes_deterministically() {
+    let mk = || {
+        let mut cfg = quick('b', Algorithm::Vafl, 10);
+        cfg.engine = EngineMode::BarrierFree;
+        cfg.async_engine =
+            AsyncEngineConfig { buffer_k: 2, mixing: MixingRule::Constant { alpha: 0.9 } };
+        cfg.compression = CompressionConfig {
+            mode: CompressionMode::TopK,
+            k_fraction: 0.25,
+            error_feedback: true,
+            down_mode: CompressionMode::TopK,
+            // Starving downlink budget: the residual ratio is far above
+            // `residual_hi`, so the controller must grow the knob.
+            down_k_fraction: 0.1,
+            ..Default::default()
+        };
+        cfg.control = ControlConfig {
+            enabled: true,
+            staleness: false,
+            rebalance: false,
+            interval: 2,
+            window: 8,
+            k_fraction_min: 0.1,
+            k_fraction_max: 1.0,
+            k_step: 1.5,
+            // A tight band so the controller actually moves in 10 rounds.
+            residual_hi: 0.3,
+            residual_lo: 0.05,
+            ..Default::default()
+        };
+        experiments::run(&cfg).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_identical(x, y);
+    }
+    assert_eq!(a.metrics.control_records.len(), b.metrics.control_records.len());
+    let down_moves: Vec<_> = a
+        .metrics
+        .control_records
+        .iter()
+        .filter(|c| c.knob == "down_k_fraction")
+        .collect();
+    assert!(
+        !down_moves.is_empty(),
+        "a starving down_k_fraction = 0.25 never triggered the downlink controller"
+    );
+    for c in &down_moves {
+        assert_eq!(c.controller, "compression");
+        assert!(c.new >= 0.1 && c.new <= 1.0, "knob left its bounds: {}", c.new);
+        assert!(c.signal.is_finite());
+    }
+    // The downlink knob must not have hijacked the uplink one: both move
+    // independently, each logged under its own name.
+    assert!(a
+        .metrics
+        .control_records
+        .iter()
+        .all(|c| c.knob == "down_k_fraction" || c.knob == "k_fraction"));
+}
+
+// ---------------------------------------------------------------------------
+// Hand-counted control/payload frame split
+// ---------------------------------------------------------------------------
+
+#[test]
+fn byte_split_matches_hand_counted_frames() {
+    // Barriered AFL on preset 'a': 3 clients, every one reports and
+    // uploads every round, everything at F32 on the 320-parameter mock
+    // model. Per round, by hand:
+    //   uplink:   3 V reports (68 B each) + 3 uploads   of 4*320+64 B
+    //   downlink: 3 upload requests (64 B) + 3 broadcasts of 4*320+64 B
+    let mut cfg = quick('a', Algorithm::Afl, 2);
+    cfg.engine = EngineMode::Barriered;
+    let out = experiments::run(&cfg).unwrap();
+    let payload: u64 = 4 * 320 + 64;
+    for r in &out.metrics.records {
+        assert_eq!(r.reports, 3);
+        assert_eq!(r.uploads, 3);
+        assert_eq!(r.bytes_up_ctrl, 3 * 68, "round {}", r.round);
+        assert_eq!(r.bytes_down_ctrl, 3 * 64, "round {}", r.round);
+        assert_eq!(r.bytes_up, 3 * 68 + 3 * payload, "round {}", r.round);
+        assert_eq!(r.bytes_down, 3 * 64 + 3 * payload, "round {}", r.round);
+        assert_eq!(r.bytes_up_payload(), 3 * payload);
+        assert_eq!(r.bytes_down_payload(), 3 * payload);
+    }
+    // And the run-level payload rollups agree with the per-round split.
+    assert_eq!(out.metrics.total_bytes_up_payload(), 2 * 3 * payload);
+    assert_eq!(out.metrics.total_bytes_down_payload(), 2 * 3 * payload);
+}

@@ -137,7 +137,7 @@ fn control_off_is_bitwise_identical_both_engines() {
 fn adaptive_base(shards: usize, rounds: usize) -> ExperimentConfig {
     let mut cfg = async_base(shards, rounds);
     cfg.compression =
-        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, layer_k_fractions: Vec::new(), error_feedback: true };
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, error_feedback: true, ..Default::default() };
     cfg.control = ControlConfig {
         enabled: true,
         interval: 1,
@@ -441,7 +441,7 @@ fn barriered_engine_adapts_k_fraction_only() {
     let mut cfg = quick('a', Algorithm::Vafl, 12);
     cfg.engine = EngineMode::Barriered;
     cfg.compression =
-        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, layer_k_fractions: Vec::new(), error_feedback: true };
+        CompressionConfig { mode: CompressionMode::TopK, k_fraction: 0.2, error_feedback: true, ..Default::default() };
     cfg.control = ControlConfig {
         enabled: true,
         interval: 1,

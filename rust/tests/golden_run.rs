@@ -186,10 +186,33 @@ fn golden_barrier_free_topk_round_stream_is_stable() {
     cfg.compression = CompressionConfig {
         mode: CompressionMode::TopK,
         k_fraction: 0.25,
-        layer_k_fractions: Vec::new(),
         error_feedback: true,
+        ..Default::default()
     };
     run_snapshot("barrier_free_topk", &cfg);
+}
+
+#[test]
+fn golden_barrier_free_bidir_round_stream_is_stable() {
+    // Pins the bidirectional path: sparse top-k uploads *and* sparse
+    // broadcasts against per-client acked bases (downlink error
+    // feedback, forced-dense first contact, per-broadcast byte
+    // accounting) at partial budgets on the barrier-free engine.
+    let mut cfg = base_cfg();
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.25,
+        error_feedback: true,
+        down_mode: CompressionMode::TopK,
+        down_k_fraction: 0.25,
+        ..Default::default()
+    };
+    run_snapshot("barrier_free_bidir", &cfg);
 }
 
 #[test]
@@ -220,8 +243,8 @@ fn golden_barrier_free_adaptive_round_stream_is_stable() {
     cfg.compression = CompressionConfig {
         mode: CompressionMode::TopK,
         k_fraction: 0.5,
-        layer_k_fractions: Vec::new(),
         error_feedback: true,
+        ..Default::default()
     };
     cfg.control = ControlConfig {
         enabled: true,

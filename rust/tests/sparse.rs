@@ -280,6 +280,7 @@ fn run_pair(base: &ExperimentConfig) {
         k_fraction: 1.0,
         layer_k_fractions: Vec::new(),
         error_feedback: true,
+        ..Default::default()
     };
     let sparse = experiments::run(&scfg).unwrap();
     assert_eq!(dense.metrics.records.len(), sparse.metrics.records.len());
@@ -350,6 +351,7 @@ fn topk_partial_k_cuts_uplink_bytes() {
         k_fraction: 0.1,
         layer_k_fractions: Vec::new(),
         error_feedback: true,
+        ..Default::default()
     };
     let sparse = experiments::run(&scfg).unwrap();
     // Same upload schedule (AFL uploads on every report), far fewer bytes.
@@ -389,6 +391,7 @@ fn topk_partial_k_with_error_feedback_still_converges() {
         k_fraction: 0.1,
         layer_k_fractions: Vec::new(),
         error_feedback: true,
+        ..Default::default()
     };
     let sparse = experiments::run(&scfg).unwrap();
     let sparse_rounds = sparse
@@ -427,6 +430,7 @@ fn error_feedback_actually_changes_the_run() {
             k_fraction: 0.1,
             layer_k_fractions: Vec::new(),
             error_feedback,
+            ..Default::default()
         };
         experiments::run(&cfg).unwrap()
     };
@@ -453,6 +457,7 @@ fn topk_runs_deterministically_on_the_event_engine() {
             k_fraction: 0.25,
             layer_k_fractions: Vec::new(),
             error_feedback: true,
+            ..Default::default()
         };
         experiments::run(&cfg).unwrap()
     };
@@ -532,6 +537,7 @@ fn per_layer_full_k_is_bitwise_dense() {
             k_fraction: 1.0,
             layer_k_fractions: vec![1.0, 1.0],
             error_feedback: true,
+            ..Default::default()
         };
         let sparse = run_layered(&scfg, vec![160, 160]);
         assert_eq!(dense.len(), sparse.len());
@@ -557,6 +563,7 @@ fn per_layer_partial_k_prices_each_layer_and_stays_deterministic() {
         k_fraction: 1.0, // flat budget unused once the per-layer list is set
         layer_k_fractions: vec![1.0, 0.1],
         error_feedback: true,
+        ..Default::default()
     };
     let a = run_layered(&scfg, vec![160, 160]);
     let b = run_layered(&scfg, vec![160, 160]);
