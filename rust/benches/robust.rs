@@ -1,0 +1,149 @@
+//! Bench: robust aggregation under model poisoning.
+//!
+//!     cargo bench --bench robust [-- --json]
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 60), VAFL_BENCH_MOCK=1.
+//!
+//! One grid on experiment b's 7-client fleet under the straggler-heavy
+//! WAN with the barrier-free engine (buffer_k = 4, so flushes carry five
+//! lanes and `trim = 0.25` drops one lane per end): every aggregation
+//! mode in {fedavg, trimmed_mean, median} x sign-flip attacker fraction
+//! in {0.0, 0.1, 0.2, 0.3}. The robust rows run with trust scoring on.
+//! Reported per row: best/final accuracy, rounds-to-target, and the
+//! quarantined-upload total.
+//!
+//! The headline, printed after the grid and embedded in the JSON: at a
+//! 20% sign-flip fraction, how much of the clean-vs-poisoned-FedAvg
+//! accuracy gap each robust mode recovers. The acceptance bar is >= 0.5.
+//!
+//! `--json` (or `VAFL_BENCH_JSON=1`) writes every row plus the recovery
+//! summary to `BENCH_robust.json`.
+
+mod common;
+
+use vafl::config::{
+    AsyncEngineConfig, AttackConfig, AttackMode, EngineMode, ExperimentConfig, RobustConfig,
+    RobustMode,
+};
+use vafl::coordinator::MixingRule;
+use vafl::experiments::{self, straggler};
+use vafl::util::json::{obj, Value};
+
+fn base_cfg() -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = straggler::straggler_config(&experiments::preset('b')?);
+    common::apply_env(&mut cfg, 60);
+    cfg.target_acc = cfg.target_acc.min(0.5);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine =
+        AsyncEngineConfig { buffer_k: 4, mixing: MixingRule::Constant { alpha: 0.9 } };
+    Ok(cfg)
+}
+
+fn mode_name(mode: RobustMode) -> &'static str {
+    match mode {
+        RobustMode::None => "fedavg",
+        RobustMode::TrimmedMean => "trimmed_mean",
+        RobustMode::Median => "median",
+    }
+}
+
+fn fmt_opt_usize(v: Option<usize>) -> String {
+    v.map_or_else(|| "never".into(), |x| x.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let want_json =
+        std::env::args().any(|a| a == "--json") || std::env::var("VAFL_BENCH_JSON").is_ok();
+    let mut rows: Vec<Value> = Vec::new();
+    // best accuracy per (mode, fraction) cell, for the recovery summary.
+    let mut best = std::collections::BTreeMap::new();
+
+    common::section("Robust aggregation x sign-flip fraction (straggler_wan, buffer 4)");
+    println!(
+        "{:<16} {:>9} {:>10} {:>10} {:>14} {:>12}",
+        "mode", "attack", "best_acc", "final_acc", "rounds-to-tgt", "quarantined"
+    );
+    for mode in [RobustMode::None, RobustMode::TrimmedMean, RobustMode::Median] {
+        for frac in [0.0f64, 0.1, 0.2, 0.3] {
+            let mut cfg = base_cfg()?;
+            if mode != RobustMode::None {
+                cfg.robust = RobustConfig {
+                    mode,
+                    trim_fraction: 0.25,
+                    trust: true,
+                    trust_threshold: 0.3,
+                    ..Default::default()
+                };
+            }
+            if frac > 0.0 {
+                cfg.attack = AttackConfig {
+                    mode: AttackMode::SignFlip,
+                    fraction: frac,
+                    ..Default::default()
+                };
+            }
+            let out = experiments::run(&cfg)?;
+            let quarantined: usize = out.metrics.records.iter().map(|r| r.quarantined).sum();
+            best.insert((mode_name(mode), (frac * 100.0) as usize), out.best_accuracy);
+            println!(
+                "{:<16} {:>8.0}% {:>10.4} {:>10.4} {:>14} {:>12}",
+                mode_name(mode),
+                frac * 100.0,
+                out.best_accuracy,
+                out.final_accuracy,
+                fmt_opt_usize(out.metrics.rounds_to_target()),
+                quarantined,
+            );
+            rows.push(obj(vec![
+                ("section", Value::Str("poison_grid".into())),
+                ("mode", Value::Str(mode_name(mode).into())),
+                ("attack_fraction", Value::from(frac)),
+                ("best_acc", Value::from(out.best_accuracy)),
+                ("final_acc", Value::from(out.final_accuracy)),
+                (
+                    "rounds_to_target",
+                    out.metrics.rounds_to_target().map(Value::from).unwrap_or(Value::Null),
+                ),
+                ("quarantined_total", Value::from(quarantined)),
+            ]));
+        }
+    }
+
+    // Recovery headline at the 20% cell: fraction of the clean-FedAvg vs
+    // poisoned-FedAvg gap each robust mode wins back.
+    common::section("Recovery at 20% sign-flip");
+    let clean = best[&("fedavg", 0)];
+    let poisoned = best[&("fedavg", 20)];
+    let gap = clean - poisoned;
+    let mut recovery_rows: Vec<Value> = Vec::new();
+    for name in ["trimmed_mean", "median"] {
+        let acc = best[&(name, 20)];
+        let recovered = if gap.abs() > 1e-9 { (acc - poisoned) / gap } else { 1.0 };
+        println!(
+            "{name:<16} acc={acc:.4}  (clean fedavg {clean:.4}, poisoned fedavg {poisoned:.4}) \
+             => recovered {:.0}% of the gap {}",
+            recovered * 100.0,
+            if recovered >= 0.5 { "[>= 50% OK]" } else { "[below 50%]" },
+        );
+        recovery_rows.push(obj(vec![
+            ("mode", Value::Str(name.into())),
+            ("best_acc", Value::from(acc)),
+            ("clean_fedavg_acc", Value::from(clean)),
+            ("poisoned_fedavg_acc", Value::from(poisoned)),
+            ("gap_recovered", Value::from(recovered)),
+        ]));
+    }
+
+    if want_json {
+        let doc = obj(vec![
+            ("bench", Value::Str("robust".into())),
+            ("rows", Value::Arr(rows)),
+            ("recovery_at_20pct_signflip", Value::Arr(recovery_rows)),
+        ]);
+        std::fs::write("BENCH_robust.json", doc.to_string_pretty())?;
+        println!("wrote BENCH_robust.json");
+    }
+    Ok(())
+}

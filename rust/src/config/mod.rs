@@ -202,6 +202,12 @@ pub struct CompressionConfig {
     /// in (0, 1]. Ignored when `down_mode` is dense. At 1.0 the sparse
     /// frame is byte- and bit-identical to the dense broadcast.
     pub down_k_fraction: f64,
+    /// Independent wire precision for broadcasts (both dense frames and
+    /// sparse downlink deltas). `None` (the default) reuses
+    /// `upload_precision`, which is bitwise the legacy behaviour;
+    /// `Some(p)` decouples the two directions (e.g. int8 down, f32 up) —
+    /// uplink payloads are untouched.
+    pub down_precision: Option<Precision>,
 }
 
 impl Default for CompressionConfig {
@@ -213,6 +219,7 @@ impl Default for CompressionConfig {
             error_feedback: true,
             down_mode: CompressionMode::Dense,
             down_k_fraction: 1.0,
+            down_precision: None,
         }
     }
 }
@@ -227,6 +234,12 @@ impl CompressionConfig {
     /// model.
     pub fn down_k_for(&self, n: usize) -> usize {
         ((n as f64 * self.down_k_fraction).ceil() as usize).clamp(1, n.max(1))
+    }
+
+    /// Effective broadcast precision: the independent `down_precision`
+    /// when set, else the run's `upload_precision` (the legacy coupling).
+    pub fn down_precision_or(&self, upload: Precision) -> Precision {
+        self.down_precision.unwrap_or(upload)
     }
 
     /// Per-layer transmitted coordinates for layer sizes `sizes`, or
@@ -299,6 +312,19 @@ pub struct ControlConfig {
     /// Rebalancer: migrate one client off the hottest shard when the
     /// windowed hottest/coldest flush-count ratio exceeds this (>= 1).
     pub rebalance_skew: f64,
+    /// Trust controller enable (effective only with `enabled = true` and
+    /// an armed trust score, i.e. `robust.trust` with `robust.mode !=
+    /// none`): drive the window's mean outlier rate into
+    /// `trust_target ± trust_deadband` by stepping
+    /// `robust.trust_threshold` within
+    /// `[trust_threshold_min, trust_threshold_max]`.
+    pub trust: bool,
+    pub trust_target: f64,
+    pub trust_deadband: f64,
+    pub trust_threshold_min: f64,
+    pub trust_threshold_max: f64,
+    /// Additive step of the trust controller's threshold moves, in (0, 1).
+    pub trust_step: f64,
 }
 
 impl Default for ControlConfig {
@@ -323,6 +349,12 @@ impl Default for ControlConfig {
             residual_hi: 0.6,
             residual_lo: 0.2,
             rebalance_skew: 2.0,
+            trust: true,
+            trust_target: 0.1,
+            trust_deadband: 0.05,
+            trust_threshold_min: 0.1,
+            trust_threshold_max: 0.9,
+            trust_step: 0.05,
         }
     }
 }
@@ -387,7 +419,182 @@ impl ControlConfig {
         if !(self.rebalance_skew.is_finite() && self.rebalance_skew >= 1.0) {
             bail!("control.rebalance_skew must be finite and >= 1, got {}", self.rebalance_skew);
         }
+        if !(self.trust_target.is_finite() && (0.0..=1.0).contains(&self.trust_target)) {
+            bail!("control.trust_target must be in [0, 1], got {}", self.trust_target);
+        }
+        if !(self.trust_deadband.is_finite() && self.trust_deadband >= 0.0) {
+            bail!("control.trust_deadband must be finite and >= 0, got {}", self.trust_deadband);
+        }
+        if !(0.0 < self.trust_threshold_min
+            && self.trust_threshold_min <= self.trust_threshold_max
+            && self.trust_threshold_max <= 1.0)
+        {
+            bail!(
+                "control trust_threshold bounds must satisfy 0 < min <= max <= 1, got [{}, {}]",
+                self.trust_threshold_min,
+                self.trust_threshold_max
+            );
+        }
+        if !(self.trust_step.is_finite() && 0.0 < self.trust_step && self.trust_step < 1.0) {
+            bail!("control.trust_step must be in (0, 1), got {}", self.trust_step);
+        }
         Ok(())
+    }
+}
+
+/// Byzantine-robust aggregation mode — TOML section `[robust]`, CLI
+/// `--robust-mode` (see `coordinator::aggregate`). `None` (the default)
+/// is the trusting FedAvg merge, bitwise identical to previous builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RobustMode {
+    /// Trust every upload (plain weighted FedAvg — the paper's system).
+    None,
+    /// Coordinate-wise trimmed mean: per coordinate, sort the value lanes
+    /// (`total_cmp`, lane-index tie-break), drop
+    /// `floor(trim_fraction · lanes)` from each end, renormalize the
+    /// surviving weights. `trim_fraction = 0` degenerates bitwise to the
+    /// plain merge.
+    TrimmedMean,
+    /// Coordinate-wise weighted (lower) median over the sorted lanes.
+    Median,
+}
+
+impl RobustMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RobustMode::None => "none",
+            RobustMode::TrimmedMean => "trimmed_mean",
+            RobustMode::Median => "median",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" | "fedavg" => Ok(RobustMode::None),
+            "trimmed_mean" | "trimmed-mean" | "trimmed" | "trim" => Ok(RobustMode::TrimmedMean),
+            "median" => Ok(RobustMode::Median),
+            other => bail!("unknown robust mode {other:?} (none|trimmed_mean|median)"),
+        }
+    }
+}
+
+/// Byzantine-robust aggregation knobs — TOML section `[robust]` (see
+/// `coordinator::aggregate` for the merge and `control::telemetry` for
+/// the trust book). With `mode = none` (the default) every path is
+/// bitwise identical to previous builds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustConfig {
+    pub mode: RobustMode,
+    /// Per-end trim fraction of the coordinate-wise trimmed mean:
+    /// `floor(trim_fraction · lanes)` lanes are dropped from each end of
+    /// the sorted lane order (clamped so at least one lane survives).
+    /// Must be in [0, 0.5). Ignored by `median`.
+    pub trim_fraction: f64,
+    /// Arm the per-client trust score: clients whose rolling outlier rate
+    /// exceeds `trust_threshold` get their aggregation weight scaled down
+    /// (soft quarantine) at flush time. Requires `mode != none` (the
+    /// outlier statistic falls out of the robust merge).
+    pub trust: bool,
+    /// EWMA decay of the per-client outlier-rate score
+    /// (`score <- decay·score + (1−decay)·rate`); must be in (0, 1).
+    pub trust_decay: f64,
+    /// Outlier-rate score above which a client's weight starts shrinking
+    /// (`weight ×= max(threshold/score, trust_floor)`); must be in (0, 1].
+    /// The `TrustController` can retune this online.
+    pub trust_threshold: f64,
+    /// Minimum soft-quarantine weight multiplier, in (0, 1]: even a fully
+    /// distrusted client keeps this fraction of its weight (no hard
+    /// eviction — scores can recover).
+    pub trust_floor: f64,
+}
+
+impl Default for RobustConfig {
+    fn default() -> Self {
+        RobustConfig {
+            mode: RobustMode::None,
+            trim_fraction: 0.25,
+            trust: false,
+            trust_decay: 0.8,
+            trust_threshold: 0.5,
+            trust_floor: 0.1,
+        }
+    }
+}
+
+/// Malicious-client attack mode — TOML section `[attack]`, CLI
+/// `--attack` (see `fleet::AttackProfile`). Attacks are applied at
+/// gradient-encode time, so they flow through sparsification, error
+/// feedback, and speculation unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttackMode {
+    /// No attackers (the default; bitwise identical to previous builds).
+    None,
+    /// Data poisoning: the attacker trains on labels remapped `l → 9−l`.
+    LabelFlip,
+    /// Model poisoning: the attacker reports its update reflected around
+    /// its last synced base (`base − (params − base)`).
+    SignFlip,
+    /// Model poisoning: the attacker inflates its update by
+    /// `attack.scale` (`base + scale·(params − base)`).
+    Scale,
+    /// Targeted poisoning: the attacker spikes a fixed trigger pattern of
+    /// `attack.backdoor_coords` coordinates by `attack.backdoor_boost`.
+    Backdoor,
+}
+
+impl AttackMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackMode::None => "none",
+            AttackMode::LabelFlip => "label_flip",
+            AttackMode::SignFlip => "sign_flip",
+            AttackMode::Scale => "scale",
+            AttackMode::Backdoor => "backdoor",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(AttackMode::None),
+            "label_flip" | "label-flip" | "labelflip" => Ok(AttackMode::LabelFlip),
+            "sign_flip" | "sign-flip" | "signflip" => Ok(AttackMode::SignFlip),
+            "scale" | "scaling" => Ok(AttackMode::Scale),
+            "backdoor" => Ok(AttackMode::Backdoor),
+            other => bail!(
+                "unknown attack mode {other:?} (none|label_flip|sign_flip|scale|backdoor)"
+            ),
+        }
+    }
+}
+
+/// Malicious-client simulator knobs — TOML section `[attack]`. The
+/// attacker set is a deterministic function of the experiment seed
+/// (`root_rng.fork("attack")`), so attacked runs are reproducible and
+/// thread-count invariant like everything else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttackConfig {
+    pub mode: AttackMode,
+    /// Fraction of the fleet that is malicious
+    /// (`count = round(fraction · num_clients)`); must be in [0, 1].
+    pub fraction: f64,
+    /// Update inflation gain of the `scale` attack (> 0).
+    pub scale: f64,
+    /// Trigger-pattern size of the `backdoor` attack (coordinates spiked
+    /// per upload, spread evenly over the parameter vector; >= 1).
+    pub backdoor_coords: usize,
+    /// Spike magnitude added at each trigger coordinate (finite).
+    pub backdoor_boost: f64,
+}
+
+impl Default for AttackConfig {
+    fn default() -> Self {
+        AttackConfig {
+            mode: AttackMode::None,
+            fraction: 0.0,
+            scale: 10.0,
+            backdoor_coords: 16,
+            backdoor_boost: 1.0,
+        }
     }
 }
 
@@ -530,6 +737,12 @@ pub struct ExperimentConfig {
     /// Virtualized fleet (active-set size, parked-record residual
     /// budget, compact records) — TOML section `[fleet]`.
     pub fleet: FleetConfig,
+    /// Byzantine-robust aggregation (trimmed mean / median + trust
+    /// scores) — TOML section `[robust]`, CLI `--robust-mode`.
+    pub robust: RobustConfig,
+    /// Malicious-client simulator — TOML section `[attack]`, CLI
+    /// `--attack` / `--attack-fraction`.
+    pub attack: AttackConfig,
     /// Record the barrier-free engine's committed event stream as a
     /// `(vtime, label)` trace in `RunMetrics::event_trace` so the
     /// `--realtime` driver can replay in-flight uploads, buffer
@@ -570,6 +783,8 @@ impl Default for ExperimentConfig {
             engine_opts: EngineConfig::default(),
             control: ControlConfig::default(),
             fleet: FleetConfig::default(),
+            robust: RobustConfig::default(),
+            attack: AttackConfig::default(),
             trace_events: false,
         }
     }
@@ -778,6 +993,75 @@ impl ExperimentConfig {
                 );
             }
         }
+        if !(self.robust.trim_fraction.is_finite()
+            && (0.0..0.5).contains(&self.robust.trim_fraction))
+        {
+            bail!("robust.trim_fraction must be in [0, 0.5), got {}", self.robust.trim_fraction);
+        }
+        if !(self.robust.trust_decay.is_finite()
+            && 0.0 < self.robust.trust_decay
+            && self.robust.trust_decay < 1.0)
+        {
+            bail!("robust.trust_decay must be in (0, 1), got {}", self.robust.trust_decay);
+        }
+        if !(self.robust.trust_threshold.is_finite()
+            && 0.0 < self.robust.trust_threshold
+            && self.robust.trust_threshold <= 1.0)
+        {
+            bail!(
+                "robust.trust_threshold must be in (0, 1], got {}",
+                self.robust.trust_threshold
+            );
+        }
+        if !(self.robust.trust_floor.is_finite()
+            && 0.0 < self.robust.trust_floor
+            && self.robust.trust_floor <= 1.0)
+        {
+            bail!("robust.trust_floor must be in (0, 1], got {}", self.robust.trust_floor);
+        }
+        if self.robust.trust && self.robust.mode == RobustMode::None {
+            bail!(
+                "robust.trust requires a robust aggregation mode \
+                 (the trust score is the robust merge's outlier statistic); \
+                 set robust.mode = trimmed_mean or median"
+            );
+        }
+        if self.robust.mode != RobustMode::None && self.engine_opts.edge_fanout > 1 {
+            bail!(
+                "robust aggregation cannot be combined with engine.edge_fanout > 1: \
+                 edge accumulators fold uploads into running sums at arrival, \
+                 destroying the per-payload value lanes the coordinate-wise \
+                 trimmed mean / median sorts over"
+            );
+        }
+        if !((0.0..=1.0).contains(&self.attack.fraction) && self.attack.fraction.is_finite()) {
+            bail!("attack.fraction must be in [0, 1], got {}", self.attack.fraction);
+        }
+        if !(self.attack.scale.is_finite() && self.attack.scale > 0.0) {
+            bail!("attack.scale must be finite and > 0, got {}", self.attack.scale);
+        }
+        if self.attack.backdoor_coords == 0 {
+            bail!("attack.backdoor_coords must be >= 1");
+        }
+        if !self.attack.backdoor_boost.is_finite() {
+            bail!("attack.backdoor_boost must be finite, got {}", self.attack.backdoor_boost);
+        }
+        // Same starting-inside-the-bounds policy as the other armed
+        // controllers (see the staleness/compression checks above).
+        if self.control.enabled
+            && self.control.trust
+            && self.robust.trust
+            && !(self.control.trust_threshold_min <= self.robust.trust_threshold
+                && self.robust.trust_threshold <= self.control.trust_threshold_max)
+        {
+            bail!(
+                "robust.trust_threshold ({}) must start inside the control plane's \
+                 [trust_threshold_min, trust_threshold_max] = [{}, {}]",
+                self.robust.trust_threshold,
+                self.control.trust_threshold_min,
+                self.control.trust_threshold_max
+            );
+        }
         if let Algorithm::Eaflm = self.algorithm {
             if !(0.0 < self.eaflm.alpha && self.eaflm.alpha < 1.0) {
                 bail!("eaflm.alpha must be in (0,1)");
@@ -912,6 +1196,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("compression.down_k_fraction") {
             cfg.compression.down_k_fraction = v;
+        }
+        if let Some(v) = doc.get_str("compression.down_precision") {
+            cfg.compression.down_precision = Some(
+                Precision::from_name(v)
+                    .with_context(|| format!("unknown compression.down_precision {v:?}"))?,
+            );
         }
         if let Some(v) = doc.get_f64("staleness_decay") {
             cfg.staleness_decay = Some(v);
@@ -1050,6 +1340,59 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("control.rebalance_skew") {
             cfg.control.rebalance_skew = v;
+        }
+        if let Some(v) = doc.get_bool("control.trust") {
+            cfg.control.trust = v;
+        }
+        if let Some(v) = doc.get_f64("control.trust_target") {
+            cfg.control.trust_target = v;
+        }
+        if let Some(v) = doc.get_f64("control.trust_deadband") {
+            cfg.control.trust_deadband = v;
+        }
+        if let Some(v) = doc.get_f64("control.trust_threshold_min") {
+            cfg.control.trust_threshold_min = v;
+        }
+        if let Some(v) = doc.get_f64("control.trust_threshold_max") {
+            cfg.control.trust_threshold_max = v;
+        }
+        if let Some(v) = doc.get_f64("control.trust_step") {
+            cfg.control.trust_step = v;
+        }
+        // [robust] — Byzantine-robust aggregation.
+        if let Some(v) = doc.get_str("robust.mode") {
+            cfg.robust.mode = RobustMode::from_name(v)?;
+        }
+        if let Some(v) = doc.get_f64("robust.trim_fraction") {
+            cfg.robust.trim_fraction = v;
+        }
+        if let Some(v) = doc.get_bool("robust.trust") {
+            cfg.robust.trust = v;
+        }
+        if let Some(v) = doc.get_f64("robust.trust_decay") {
+            cfg.robust.trust_decay = v;
+        }
+        if let Some(v) = doc.get_f64("robust.trust_threshold") {
+            cfg.robust.trust_threshold = v;
+        }
+        if let Some(v) = doc.get_f64("robust.trust_floor") {
+            cfg.robust.trust_floor = v;
+        }
+        // [attack] — malicious-client simulator.
+        if let Some(v) = doc.get_str("attack.mode") {
+            cfg.attack.mode = AttackMode::from_name(v)?;
+        }
+        if let Some(v) = doc.get_f64("attack.fraction") {
+            cfg.attack.fraction = v;
+        }
+        if let Some(v) = doc.get_f64("attack.scale") {
+            cfg.attack.scale = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "attack.backdoor_coords")? {
+            cfg.attack.backdoor_coords = v;
+        }
+        if let Some(v) = doc.get_f64("attack.backdoor_boost") {
+            cfg.attack.backdoor_boost = v;
         }
         if let Some(v) = doc.get_bool("trace_events") {
             cfg.trace_events = v;
@@ -1330,6 +1673,162 @@ mod tests {
     }
 
     #[test]
+    fn down_precision_parses_and_defaults() {
+        let cfg = ExperimentConfig::from_toml(
+            "upload_precision = \"f32\"\n[compression]\ndown_precision = \"int8\"\n\
+             [backend]\nkind = \"mock\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.compression.down_precision, Some(Precision::Int8));
+        assert_eq!(cfg.compression.down_precision_or(cfg.upload_precision), Precision::Int8);
+        // Unset: broadcasts reuse the upload precision (legacy coupling).
+        let d = ExperimentConfig::default();
+        assert_eq!(d.compression.down_precision, None);
+        assert_eq!(d.compression.down_precision_or(Precision::F16), Precision::F16);
+        // Unknown precision names are rejected with the key in the error.
+        let err = ExperimentConfig::from_toml(
+            "[compression]\ndown_precision = \"bf16\"\n[backend]\nkind = \"mock\"",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("down_precision"), "{err:#}");
+    }
+
+    #[test]
+    fn robust_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [robust]
+            mode = "trimmed_mean"
+            trim_fraction = 0.3
+            trust = true
+            trust_decay = 0.9
+            trust_threshold = 0.4
+            trust_floor = 0.2
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.robust,
+            RobustConfig {
+                mode: RobustMode::TrimmedMean,
+                trim_fraction: 0.3,
+                trust: true,
+                trust_decay: 0.9,
+                trust_threshold: 0.4,
+                trust_floor: 0.2,
+            }
+        );
+        // Defaults: robust off, trust disarmed — the legacy engines.
+        let d = RobustConfig::default();
+        assert_eq!(d.mode, RobustMode::None);
+        assert!(!d.trust);
+        // Mode names round-trip; bad names rejected.
+        for m in [RobustMode::None, RobustMode::TrimmedMean, RobustMode::Median] {
+            assert_eq!(RobustMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(RobustMode::from_name("krum").is_err());
+        // Bounds: trim in [0, 0.5), decay in (0, 1), threshold/floor in
+        // (0, 1].
+        for bad in [
+            "trim_fraction = 0.5",
+            "trim_fraction = -0.1",
+            "trust_decay = 0.0",
+            "trust_decay = 1.0",
+            "trust_threshold = 0.0",
+            "trust_threshold = 1.5",
+            "trust_floor = 0.0",
+        ] {
+            let toml = format!("[robust]\n{bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "accepted bad [robust] {bad:?}");
+        }
+        // Trust weighting without a robust mode has no outlier statistic
+        // to score — rejected.
+        assert!(ExperimentConfig::from_toml(
+            "[robust]\ntrust = true\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // Edge-fanout folding destroys the per-payload lanes the robust
+        // merges sort over — the combination is rejected.
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nedge_fanout = 2\n\
+             [robust]\nmode = \"median\"\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nedge_fanout = 2\n\
+             [robust]\nmode = \"none\"\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+        // An armed trust controller requires the starting threshold
+        // inside its bounds.
+        assert!(ExperimentConfig::from_toml(
+            "[robust]\nmode = \"median\"\ntrust = true\ntrust_threshold = 0.05\n\
+             [control]\nenabled = true\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[robust]\nmode = \"median\"\ntrust = true\ntrust_threshold = 0.5\n\
+             [control]\nenabled = true\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn attack_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            num_clients = 10
+            [attack]
+            mode = "sign_flip"
+            fraction = 0.2
+            scale = 5.0
+            backdoor_coords = 8
+            backdoor_boost = 0.5
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.attack,
+            AttackConfig {
+                mode: AttackMode::SignFlip,
+                fraction: 0.2,
+                scale: 5.0,
+                backdoor_coords: 8,
+                backdoor_boost: 0.5,
+            }
+        );
+        // Defaults: no attackers.
+        let d = AttackConfig::default();
+        assert_eq!(d.mode, AttackMode::None);
+        assert_eq!(d.fraction, 0.0);
+        // Mode names round-trip; bad names rejected.
+        for m in [
+            AttackMode::None,
+            AttackMode::LabelFlip,
+            AttackMode::SignFlip,
+            AttackMode::Scale,
+            AttackMode::Backdoor,
+        ] {
+            assert_eq!(AttackMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(AttackMode::from_name("dos").is_err());
+        for bad in [
+            "fraction = 1.5",
+            "fraction = -0.1",
+            "scale = 0.0",
+            "scale = -2.0",
+            "backdoor_coords = 0",
+        ] {
+            let toml = format!("[attack]\n{bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "accepted bad [attack] {bad:?}");
+        }
+    }
+
+    #[test]
     fn layer_k_fractions_parse_and_validate() {
         let cfg = ExperimentConfig::from_toml(
             r#"
@@ -1519,6 +2018,14 @@ mod tests {
             "rebalance_skew = 0.5",
             "interval = -3",
             "window = -1",
+            "trust_target = 1.5",
+            "trust_target = -0.1",
+            "trust_deadband = -0.1",
+            "trust_threshold_min = 0.0",
+            "trust_threshold_min = 0.8\ntrust_threshold_max = 0.4",
+            "trust_threshold_max = 1.5",
+            "trust_step = 0.0",
+            "trust_step = 1.0",
         ] {
             let toml = format!("[control]\n{bad}\n[backend]\nkind = \"mock\"");
             assert!(

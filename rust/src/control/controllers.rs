@@ -32,6 +32,9 @@ pub enum KnobChange {
     /// broadcast mirror of [`KnobChange::KFraction`], driven by the
     /// downlink residual ratio).
     DownKFraction { from: f64, to: f64 },
+    /// Soft-quarantine threshold `robust.trust_threshold` of the robust
+    /// aggregation path (driven by the windowed outlier rate).
+    TrustThreshold { from: f64, to: f64 },
 }
 
 /// One controller decision: the change plus the window statistic that
@@ -150,6 +153,51 @@ impl CompressionController {
             controller: "compression",
             change: KnobChange::KFraction { from: k_fraction, to },
             signal: residual_ratio,
+        })
+    }
+}
+
+/// Trust controller: drive the windowed mean outlier rate toward
+/// `target` by moving the soft-quarantine threshold
+/// (`robust.trust_threshold`) one additive `step` per evaluation — an
+/// outlier rate above the band means the trimmer keeps firing (an attack
+/// or a badly mis-set threshold), so *tighten*: lower the threshold and
+/// quarantine suspicious clients harder. A rate below the band means the
+/// fleet looks clean; relax the threshold so honest-but-noisy stragglers
+/// recover full weight. The `deadband` around the target is the
+/// hysteresis; NaN (robust off, or no robust flush in the window) never
+/// decides.
+#[derive(Debug, Clone, Copy)]
+pub struct TrustController {
+    pub target: f64,
+    pub deadband: f64,
+    pub t_min: f64,
+    pub t_max: f64,
+    /// Additive threshold step in (0, 1).
+    pub step: f64,
+}
+
+impl TrustController {
+    /// Pure decision on the window's mean outlier rate against the
+    /// current threshold. Changes already at their bound are suppressed.
+    pub fn decide(&self, mean_outlier_rate: f64, threshold: f64) -> Option<KnobDecision> {
+        if !mean_outlier_rate.is_finite() {
+            return None;
+        }
+        let to = if mean_outlier_rate > self.target + self.deadband {
+            (threshold - self.step).clamp(self.t_min, self.t_max)
+        } else if mean_outlier_rate < self.target - self.deadband {
+            (threshold + self.step).clamp(self.t_min, self.t_max)
+        } else {
+            return None;
+        };
+        if to == threshold {
+            return None;
+        }
+        Some(KnobDecision {
+            controller: "trust",
+            change: KnobChange::TrustThreshold { from: threshold, to },
+            signal: mean_outlier_rate,
         })
     }
 }
@@ -306,6 +354,55 @@ mod tests {
         let d = c.decide(0.1, Some(true), 0.08).unwrap();
         assert_eq!(d.change, KnobChange::KFraction { from: 0.08, to: 0.05 });
         assert_eq!(c.decide(0.1, Some(true), 0.05), None);
+    }
+
+    fn trust() -> TrustController {
+        TrustController { target: 0.1, deadband: 0.05, t_min: 0.1, t_max: 0.9, step: 0.05 }
+    }
+
+    #[test]
+    fn trust_deadband_and_nan_are_hysteresis() {
+        let c = trust();
+        assert_eq!(c.decide(0.1, 0.5), None);
+        assert_eq!(c.decide(0.14, 0.5), None);
+        assert_eq!(c.decide(0.06, 0.5), None);
+        assert_eq!(c.decide(f64::NAN, 0.5), None, "robust off must never decide");
+    }
+
+    #[test]
+    fn trust_tightens_on_high_outlier_rate() {
+        let c = trust();
+        let d = c.decide(0.4, 0.5).unwrap();
+        assert_eq!(d.controller, "trust");
+        match d.change {
+            KnobChange::TrustThreshold { from, to } => {
+                assert_eq!(from, 0.5);
+                assert!((to - 0.45).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(d.signal, 0.4);
+        // Clamped at t_min; no-op at the bound.
+        let d = c.decide(0.4, 0.12).unwrap();
+        assert_eq!(d.change, KnobChange::TrustThreshold { from: 0.12, to: 0.1 });
+        assert_eq!(c.decide(0.4, 0.1), None);
+    }
+
+    #[test]
+    fn trust_relaxes_on_clean_window() {
+        let c = trust();
+        let d = c.decide(0.0, 0.5).unwrap();
+        match d.change {
+            KnobChange::TrustThreshold { from, to } => {
+                assert_eq!(from, 0.5);
+                assert!((to - 0.55).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Clamped at t_max; no-op at the bound.
+        let d = c.decide(0.0, 0.88).unwrap();
+        assert_eq!(d.change, KnobChange::TrustThreshold { from: 0.88, to: 0.9 });
+        assert_eq!(c.decide(0.0, 0.9), None);
     }
 
     #[test]

@@ -30,9 +30,9 @@ pub mod telemetry;
 
 pub use controllers::{
     CompressionController, KnobChange, KnobDecision, Migration, ShardRebalancer,
-    StalenessController,
+    StalenessController, TrustController,
 };
-pub use telemetry::{FlushSample, TelemetryBus};
+pub use telemetry::{FlushSample, TelemetryBus, TrustBook};
 
 use crate::config::ControlConfig;
 
@@ -51,6 +51,11 @@ pub struct Knobs {
     /// The staleness controller is inert on the barriered engine (its
     /// knobs only exist on the barrier-free one).
     pub barrier_free: bool,
+    /// Current soft-quarantine threshold (`robust.trust_threshold`).
+    pub trust_threshold: f64,
+    /// The trust controller is inert unless a robust aggregation mode is
+    /// active *and* trust scoring is on (`robust.trust = true`).
+    pub trust_armed: bool,
 }
 
 /// The control plane: telemetry window + controller set, evaluated at
@@ -61,6 +66,7 @@ pub struct ControlPlane {
     staleness: StalenessController,
     compression: CompressionController,
     rebalancer: ShardRebalancer,
+    trust: TrustController,
     /// Flush index of the last *applied* migration (engine-reported via
     /// [`ControlPlane::note_migration`]). The rebalancer holds off until
     /// a full telemetry window of post-migration samples exists — the
@@ -90,6 +96,13 @@ impl ControlPlane {
                 residual_lo: cfg.residual_lo,
             },
             rebalancer: ShardRebalancer { skew: cfg.rebalance_skew },
+            trust: TrustController {
+                target: cfg.trust_target,
+                deadband: cfg.trust_deadband,
+                t_min: cfg.trust_threshold_min,
+                t_max: cfg.trust_threshold_max,
+                step: cfg.trust_step,
+            },
             last_migration: None,
             cfg: *cfg,
         }
@@ -160,6 +173,12 @@ impl ControlPlane {
                 }
             }
         }
+        if self.cfg.trust && knobs.trust_armed {
+            let rate = self.bus.mean_outlier_rate();
+            if let Some(d) = self.trust.decide(rate, knobs.trust_threshold) {
+                out.push(d);
+            }
+        }
         out
     }
 
@@ -207,6 +226,7 @@ mod tests {
             down_residual_l1: 0.0,
             down_transmitted_l1: 0.0,
             acc_proxy: 0.5,
+            outlier_rate: f64::NAN,
         }
     }
 
@@ -229,6 +249,8 @@ mod tests {
             down_k_fraction: 0.1,
             down_topk: true,
             barrier_free: true,
+            trust_threshold: 0.5,
+            trust_armed: true,
         };
         assert!(p.decide_knobs(knobs).is_empty());
         assert_eq!(p.decide_rebalance(1, &[3, 4]), None);
@@ -260,6 +282,8 @@ mod tests {
             down_k_fraction: 0.25,
             down_topk: false,
             barrier_free: true,
+            trust_threshold: 0.5,
+            trust_armed: false,
         };
         let ds = p.decide_knobs(all);
         assert!(ds.iter().any(|d| d.controller == "staleness"));
@@ -294,6 +318,8 @@ mod tests {
             down_k_fraction: 0.25,
             down_topk: true,
             barrier_free: false,
+            trust_threshold: 0.5,
+            trust_armed: false,
         };
         let ds = p.decide_knobs(knobs);
         assert_eq!(ds.len(), 1, "uplink carries no mass -> no KFraction decision");
@@ -307,6 +333,52 @@ mod tests {
         // Dense broadcasts gate the downlink arm off entirely.
         let dense_down = Knobs { down_topk: false, ..knobs };
         assert!(p.decide_knobs(dense_down).is_empty());
+    }
+
+    #[test]
+    fn trust_arm_needs_robust_evidence_and_the_armed_gate() {
+        let mut p = ControlPlane::new(&enabled_cfg());
+        // Robust-off samples (NaN outlier rate): armed or not, no signal.
+        for r in 1..=4 {
+            p.observe(sample(r, 0, 0));
+        }
+        let knobs = Knobs {
+            buffer_k: 2,
+            alpha0: 0.8,
+            k_fraction: 0.25,
+            topk: false,
+            down_k_fraction: 0.25,
+            down_topk: false,
+            barrier_free: true,
+            trust_threshold: 0.5,
+            trust_armed: true,
+        };
+        assert!(p
+            .decide_knobs(knobs)
+            .iter()
+            .all(|d| !matches!(d.change, KnobChange::TrustThreshold { .. })));
+        // A dirty window tightens the threshold — but only when armed.
+        for r in 5..=8 {
+            p.observe(FlushSample { outlier_rate: 0.4, ..sample(r, 0, 0) });
+        }
+        let ds = p.decide_knobs(knobs);
+        let trust: Vec<_> = ds
+            .iter()
+            .filter(|d| matches!(d.change, KnobChange::TrustThreshold { .. }))
+            .collect();
+        assert_eq!(trust.len(), 1);
+        match trust[0].change {
+            KnobChange::TrustThreshold { from, to } => {
+                assert_eq!(from, 0.5);
+                assert!(to < from, "dirty window must tighten the threshold");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let disarmed = Knobs { trust_armed: false, ..knobs };
+        assert!(p
+            .decide_knobs(disarmed)
+            .iter()
+            .all(|d| !matches!(d.change, KnobChange::TrustThreshold { .. })));
     }
 
     #[test]

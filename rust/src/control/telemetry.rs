@@ -50,6 +50,12 @@ pub struct FlushSample {
     /// strategy: the mean of the fleet's last-known finite probe
     /// accuracies (NaN while nobody has reported yet).
     pub acc_proxy: f64,
+    /// Mean per-payload outlier rate of this flush under a robust
+    /// aggregation mode: for each flushed upload, the fraction of its
+    /// participating coordinates whose lane was trimmed (or, for the
+    /// median, ranked most extreme), averaged over the buffer. NaN when
+    /// robust aggregation is off — no signal, not "zero outliers".
+    pub outlier_rate: f64,
 }
 
 /// Bounded rolling window of [`FlushSample`]s, oldest first.
@@ -159,6 +165,85 @@ impl TelemetryBus {
     pub fn bytes_up(&self) -> u64 {
         self.samples.iter().map(|s| s.bytes_up).sum()
     }
+
+    /// Mean outlier rate over the window's robust flushes (NaN when no
+    /// sample in the window carries a finite rate — robust mode off, or
+    /// nothing flushed yet). The [`crate::control::TrustController`]'s
+    /// input signal.
+    pub fn mean_outlier_rate(&self) -> f64 {
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for s in &self.samples {
+            if s.outlier_rate.is_finite() {
+                sum += s.outlier_rate;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            return f64::NAN;
+        }
+        sum / n as f64
+    }
+}
+
+/// Per-client rolling trust score: an exponentially-weighted mean of the
+/// client's observed per-flush outlier rate (the update-deviation
+/// statistic of ISSUE 8 / ASTRA's dynamic trust). Scores start at 0
+/// (fully trusted); a client whose lanes keep getting trimmed drifts
+/// toward 1. [`TrustBook::multiplier`] converts the score into the
+/// soft-quarantine weight applied to the client's uploads at flush.
+///
+/// Updates happen only at the deterministic flush commit points and read
+/// only the aggregation's outlier counts (identical across execution
+/// strategies), so trust-on runs stay bitwise thread-count invariant.
+#[derive(Debug, Clone)]
+pub struct TrustBook {
+    decay: f64,
+    scores: Vec<f64>,
+}
+
+impl TrustBook {
+    /// A book for `n` clients with EWMA factor `decay` in (0, 1): each
+    /// observation moves the score by `1 − decay` of the gap.
+    pub fn new(n: usize, decay: f64) -> Self {
+        assert!(decay > 0.0 && decay < 1.0, "trust decay must be in (0, 1)");
+        TrustBook { decay, scores: vec![0.0; n] }
+    }
+
+    /// Fold one flush's outlier rate for client `c` into its score.
+    /// Non-finite rates are ignored (no evidence, no drift).
+    pub fn update(&mut self, c: usize, rate: f64) {
+        if rate.is_finite() {
+            self.scores[c] = self.decay * self.scores[c] + (1.0 - self.decay) * rate;
+        }
+    }
+
+    /// Current deviation score of client `c` (0 = trusted).
+    pub fn score(&self, c: usize) -> f64 {
+        self.scores[c]
+    }
+
+    /// Soft-quarantine weight for client `c`: 1.0 while the score is at
+    /// or under `threshold`, then `threshold / score` (clamped below by
+    /// `floor`) — suspicion scales the client's aggregation weight down
+    /// smoothly instead of ejecting it, so a falsely accused straggler
+    /// recovers as its score decays.
+    pub fn multiplier(&self, c: usize, threshold: f64, floor: f64) -> f64 {
+        let s = self.scores[c];
+        if s <= threshold {
+            1.0
+        } else {
+            (threshold / s).max(floor)
+        }
+    }
+
+    /// Mean score across the fleet (diagnostics / metrics).
+    pub fn mean_score(&self) -> f64 {
+        if self.scores.is_empty() {
+            return f64::NAN;
+        }
+        self.scores.iter().sum::<f64>() / self.scores.len() as f64
+    }
 }
 
 #[cfg(test)]
@@ -179,6 +264,7 @@ mod tests {
             down_residual_l1: 0.0,
             down_transmitted_l1: 0.0,
             acc_proxy: acc,
+            outlier_rate: f64::NAN,
         }
     }
 
@@ -249,6 +335,47 @@ mod tests {
         // Window holds rounds 3..=6 -> shards [1, 0, 1, 0].
         assert_eq!(bus.per_shard_flushes(2), vec![2, 2]);
         assert_eq!(bus.per_shard_flushes(3), vec![2, 2, 0]);
+    }
+
+    #[test]
+    fn mean_outlier_rate_skips_nan_samples() {
+        let mut bus = TelemetryBus::new(8);
+        assert!(bus.mean_outlier_rate().is_nan());
+        bus.push(sample(1, 0, 1, 0, 0.5)); // robust off: NaN rate
+        assert!(bus.mean_outlier_rate().is_nan(), "NaN samples are no evidence");
+        bus.push(FlushSample { outlier_rate: 0.2, ..sample(2, 0, 1, 0, 0.5) });
+        bus.push(FlushSample { outlier_rate: 0.4, ..sample(3, 0, 1, 0, 0.5) });
+        assert!((bus.mean_outlier_rate() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trust_book_ewma_and_soft_quarantine() {
+        let mut book = TrustBook::new(2, 0.5);
+        assert_eq!(book.score(0), 0.0);
+        assert_eq!(book.multiplier(0, 0.5, 0.1), 1.0, "fresh clients are fully trusted");
+        // Client 0 keeps tripping the trimmer; client 1 stays clean.
+        for _ in 0..4 {
+            book.update(0, 1.0);
+            book.update(1, 0.0);
+        }
+        assert!((book.score(0) - 0.9375).abs() < 1e-12);
+        assert_eq!(book.score(1), 0.0);
+        // Soft quarantine: threshold / score, floored.
+        let m = book.multiplier(0, 0.5, 0.1);
+        assert!((m - 0.5 / 0.9375).abs() < 1e-12);
+        assert_eq!(book.multiplier(0, 0.01, 0.1), 0.1, "floor bounds the down-weight");
+        assert_eq!(book.multiplier(1, 0.5, 0.1), 1.0);
+        // NaN observations (robust off that flush) must not move scores.
+        let before = book.score(0);
+        book.update(0, f64::NAN);
+        assert_eq!(book.score(0), before);
+        // Recovery: clean flushes decay the score back toward trust.
+        for _ in 0..8 {
+            book.update(0, 0.0);
+        }
+        assert!(book.score(0) < 0.005);
+        assert_eq!(book.multiplier(0, 0.5, 0.1), 1.0);
+        assert!((book.mean_score() - book.score(0) / 2.0).abs() < 1e-15);
     }
 
     #[test]

@@ -14,6 +14,9 @@
 //!   the serial path; the parallel path additionally allocates only thread
 //!   stacks at spawn).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::RobustMode;
 use crate::model::quant::QuantBuf;
 use crate::model::sparse::SparseDelta;
 use crate::model::{weighted_average_into, ParamVec};
@@ -21,6 +24,36 @@ use crate::util::par;
 
 /// Minimum parameter count per worker before fused aggregation fans out.
 const PAR_MIN_DIM: usize = 8192;
+
+/// Lane tag of the implicit prior-model lane in the robust merges (the
+/// weight mass of non-transmitting payloads plus the engine's explicit
+/// self weight). Never counted as an outlier — it is not a payload.
+const PRIOR_LANE: u32 = u32::MAX;
+
+/// Byzantine-robust merge parameters (see [`Aggregator::aggregate_payloads_robust`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustSpec {
+    pub mode: RobustMode,
+    /// Per-end trim fraction of the trimmed mean (`t = floor(trim · lanes)`,
+    /// clamped so at least one lane survives). Ignored by `Median`.
+    pub trim: f64,
+}
+
+/// Pooled per-coordinate scratch of the robust merges: the value lanes of
+/// one coordinate, the sorted lane order, and the trim mask. Reused across
+/// coordinates (and rounds, on the serial path); parallel workers build
+/// their own small instance per spawn, like the sparse cursor vectors.
+#[derive(Default)]
+struct LaneScratch {
+    /// `(value, weight, payload index | PRIOR_LANE)` in lane order:
+    /// transmitting payloads in payload order, the prior lane last —
+    /// exactly the plain merge's summation order.
+    lanes: Vec<(f64, f64, u32)>,
+    /// Lane ids sorted by `(value total_cmp, lane id)`.
+    order: Vec<u32>,
+    /// Trim mask over lane ids.
+    dropped: Vec<bool>,
+}
 
 /// Reusable aggregator (buffers survive across rounds — the hot path does
 /// not allocate; see EXPERIMENTS.md §Perf).
@@ -33,6 +66,12 @@ pub struct Aggregator {
     /// Pooled per-payload cursors for the serial sparse merge (the
     /// parallel path gives each worker its own small cursor vector).
     cursors: Vec<usize>,
+    /// Pooled lane scratch of the serial robust merges.
+    robust: LaneScratch,
+    /// Pooled per-payload outlier counters of the robust merges (atomic so
+    /// parallel workers over disjoint coordinate ranges can bump them with
+    /// relaxed integer adds — commutative, hence thread-count invariant).
+    counts: Vec<AtomicU64>,
 }
 
 impl Aggregator {
@@ -187,6 +226,237 @@ impl Aggregator {
                 );
             });
         }
+    }
+
+    /// Byzantine-robust dense merge: per coordinate, collect one value
+    /// lane per payload (plus a prior lane reading `out` at
+    /// `prior_weight`, when positive — the barrier-free engine's `1 − ᾱ`
+    /// keep-mass, folded in *without* a trailing self payload slot so the
+    /// prior cannot be trimmed into a wire round-trip), sort the lanes by
+    /// `total_cmp` with lane-index tie-breaks, and reduce by coordinate-wise
+    /// trimmed mean or weighted lower median (see [`RobustSpec`]).
+    ///
+    /// `outliers[i]` receives the number of coordinates at which payload
+    /// `i`'s lane was trimmed (or, for `Median`, ranked most extreme) —
+    /// the per-flush outlier statistic behind the trust scores. The prior
+    /// lane is never counted.
+    ///
+    /// A coordinate whose lane count yields a trim of zero is reduced by
+    /// **exactly** the plain merge's summation (lane order, prior last),
+    /// so `trim = 0.0` is bitwise identical to
+    /// [`aggregate_payloads`](Self::aggregate_payloads) (with
+    /// `prior_weight > 0` matching the dense path's trailing-self-slot
+    /// convention). `RobustMode::None` must use the plain entry points.
+    pub fn aggregate_payloads_robust(
+        &mut self,
+        payloads: &[QuantBuf],
+        weights: &[f64],
+        prior_weight: f64,
+        spec: RobustSpec,
+        out: &mut [f32],
+        outliers: &mut [u64],
+    ) {
+        let threads = par::threads_for(out.len(), PAR_MIN_DIM);
+        self.aggregate_payloads_robust_t(
+            payloads,
+            weights,
+            prior_weight,
+            spec,
+            out,
+            outliers,
+            threads,
+        );
+    }
+
+    /// Explicit-worker-count variant of
+    /// [`aggregate_payloads_robust`](Self::aggregate_payloads_robust).
+    /// Workers own disjoint contiguous coordinate ranges and outlier
+    /// counters are bumped with relaxed atomic adds (integer addition
+    /// commutes), so values *and* counts are bit-identical for every
+    /// worker count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn aggregate_payloads_robust_t(
+        &mut self,
+        payloads: &[QuantBuf],
+        weights: &[f64],
+        prior_weight: f64,
+        spec: RobustSpec,
+        out: &mut [f32],
+        outliers: &mut [u64],
+        threads: usize,
+    ) {
+        assert!(spec.mode != RobustMode::None, "RobustMode::None must use aggregate_payloads");
+        assert!(!payloads.is_empty(), "aggregate of zero payloads");
+        assert_eq!(payloads.len(), weights.len(), "payloads/weights length mismatch");
+        assert_eq!(payloads.len(), outliers.len(), "payloads/outliers length mismatch");
+        assert!(
+            prior_weight >= 0.0 && prior_weight.is_finite(),
+            "prior_weight must be finite and non-negative"
+        );
+        let dim = payloads[0].len();
+        for p in payloads {
+            assert_eq!(p.len(), dim, "payload dimension mismatch");
+        }
+        assert_eq!(out.len(), dim, "output dimension mismatch");
+        let total: f64 = weights.iter().sum::<f64>() + prior_weight;
+        assert!(total > 0.0, "weights must sum to a positive value");
+        reset_counts(&mut self.counts, payloads.len());
+        let counts = &self.counts[..payloads.len()];
+        if threads <= 1 {
+            robust_dense_range(
+                payloads,
+                weights,
+                prior_weight,
+                total,
+                spec,
+                out,
+                0,
+                counts,
+                &mut self.robust,
+            );
+        } else {
+            par::par_chunks_mut(out, threads, 8, |start, chunk| {
+                let mut scratch = LaneScratch::default();
+                robust_dense_range(
+                    payloads,
+                    weights,
+                    prior_weight,
+                    total,
+                    spec,
+                    chunk,
+                    start,
+                    counts,
+                    &mut scratch,
+                );
+            });
+        }
+        for (o, c) in outliers.iter_mut().zip(counts) {
+            *o = c.load(Ordering::Relaxed);
+        }
+    }
+
+    /// Byzantine-robust sparse scatter merge: like
+    /// [`aggregate_sparse_payloads`](Self::aggregate_sparse_payloads), but
+    /// each transmitted coordinate's value lanes (transmitting payloads in
+    /// payload order + one prior lane carrying the missing weight mass and
+    /// `self_weight`) are reduced by coordinate-wise trimmed mean or
+    /// weighted median instead of the weighted sum. Coordinates
+    /// transmitted by no one are not read or written — robustness
+    /// operates on the partially-overlapping top-k streams exactly as
+    /// they arrive.
+    ///
+    /// `trim = 0.0` (and every coordinate whose lane count trims to zero)
+    /// is bitwise identical to the plain scatter merge; `outliers` is
+    /// filled as in
+    /// [`aggregate_payloads_robust`](Self::aggregate_payloads_robust).
+    pub fn aggregate_sparse_payloads_robust(
+        &mut self,
+        payloads: &[SparseDelta],
+        weights: &[f64],
+        self_weight: f64,
+        spec: RobustSpec,
+        out: &mut [f32],
+        outliers: &mut [u64],
+    ) {
+        let nnz: usize = payloads.iter().map(|p| p.len()).sum();
+        let threads = par::threads_for(nnz, PAR_MIN_DIM);
+        self.aggregate_sparse_payloads_robust_t(
+            payloads,
+            weights,
+            self_weight,
+            spec,
+            out,
+            outliers,
+            threads,
+        );
+    }
+
+    /// Explicit-worker-count variant of
+    /// [`aggregate_sparse_payloads_robust`](Self::aggregate_sparse_payloads_robust);
+    /// bit-identical (values and outlier counts) for every worker count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn aggregate_sparse_payloads_robust_t(
+        &mut self,
+        payloads: &[SparseDelta],
+        weights: &[f64],
+        self_weight: f64,
+        spec: RobustSpec,
+        out: &mut [f32],
+        outliers: &mut [u64],
+        threads: usize,
+    ) {
+        assert!(
+            spec.mode != RobustMode::None,
+            "RobustMode::None must use aggregate_sparse_payloads"
+        );
+        assert!(!payloads.is_empty(), "aggregate of zero sparse payloads");
+        assert_eq!(payloads.len(), weights.len(), "payloads/weights length mismatch");
+        assert_eq!(payloads.len(), outliers.len(), "payloads/outliers length mismatch");
+        assert!(
+            self_weight >= 0.0 && self_weight.is_finite(),
+            "self_weight must be finite and non-negative"
+        );
+        let dim = payloads[0].dim();
+        for p in payloads {
+            assert_eq!(p.dim(), dim, "payload dimension mismatch");
+        }
+        assert_eq!(out.len(), dim, "output dimension mismatch");
+        let total: f64 = weights.iter().sum::<f64>() + self_weight;
+        assert!(total > 0.0, "weights must sum to a positive value");
+        reset_counts(&mut self.counts, payloads.len());
+        let counts = &self.counts[..payloads.len()];
+        if threads <= 1 {
+            self.cursors.clear();
+            self.cursors.resize(payloads.len(), 0);
+            robust_scatter_range(
+                payloads,
+                weights,
+                self_weight,
+                total,
+                spec,
+                out,
+                0,
+                &mut self.cursors,
+                counts,
+                &mut self.robust,
+            );
+        } else {
+            par::par_chunks_mut(out, threads, 8, |start, chunk| {
+                let mut cursors: Vec<usize> = payloads
+                    .iter()
+                    .map(|p| p.indices().partition_point(|&i| (i as usize) < start))
+                    .collect();
+                let mut scratch = LaneScratch::default();
+                robust_scatter_range(
+                    payloads,
+                    weights,
+                    self_weight,
+                    total,
+                    spec,
+                    chunk,
+                    start,
+                    &mut cursors,
+                    counts,
+                    &mut scratch,
+                );
+            });
+        }
+        for (o, c) in outliers.iter_mut().zip(counts) {
+            *o = c.load(Ordering::Relaxed);
+        }
+    }
+
+}
+
+/// Grow the pooled atomic outlier counters to `n` and zero the first `n`
+/// (`AtomicU64` is not `Clone`, so no `resize`). A free function so the
+/// caller keeps disjoint borrows of the aggregator's other scratch fields.
+fn reset_counts(counts: &mut Vec<AtomicU64>, n: usize) {
+    while counts.len() < n {
+        counts.push(AtomicU64::new(0));
+    }
+    for c in &counts[..n] {
+        c.store(0, Ordering::Relaxed);
     }
 }
 
@@ -375,6 +645,199 @@ fn scatter_merge_range(
             acc += (miss / total) * out_chunk[j - start] as f64;
         }
         out_chunk[j - start] = acc as f32;
+    }
+}
+
+/// Robust dense merge over `start .. start + out_chunk.len()`: per
+/// coordinate, one lane per payload in payload order (each dequantized via
+/// [`QuantBuf::get`], bit-identical to the fused accumulate), plus the
+/// prior lane last when `prior_weight > 0`.
+#[allow(clippy::too_many_arguments)]
+fn robust_dense_range(
+    payloads: &[QuantBuf],
+    weights: &[f64],
+    prior_weight: f64,
+    total: f64,
+    spec: RobustSpec,
+    out_chunk: &mut [f32],
+    start: usize,
+    counts: &[AtomicU64],
+    scratch: &mut LaneScratch,
+) {
+    for (k, o) in out_chunk.iter_mut().enumerate() {
+        let j = start + k;
+        scratch.lanes.clear();
+        for (pi, (p, &w)) in payloads.iter().zip(weights).enumerate() {
+            scratch.lanes.push((p.get(j) as f64, w, pi as u32));
+        }
+        if prior_weight > 0.0 {
+            scratch.lanes.push((*o as f64, prior_weight, PRIOR_LANE));
+        }
+        *o = robust_reduce_lanes(
+            spec,
+            total,
+            &scratch.lanes,
+            &mut scratch.order,
+            &mut scratch.dropped,
+            counts,
+        );
+    }
+}
+
+/// Robust sparse scatter merge: the min-scan of [`scatter_merge_range`],
+/// but each transmitted coordinate's contributions become value lanes
+/// (transmitters in payload order, then one prior lane carrying the
+/// missing weight mass plus `self_weight`) reduced by
+/// [`robust_reduce_lanes`]. `cursors[i]` must point at payload `i`'s first
+/// index `>= start`.
+#[allow(clippy::too_many_arguments)]
+fn robust_scatter_range(
+    payloads: &[SparseDelta],
+    weights: &[f64],
+    self_weight: f64,
+    total: f64,
+    spec: RobustSpec,
+    out_chunk: &mut [f32],
+    start: usize,
+    cursors: &mut [usize],
+    counts: &[AtomicU64],
+    scratch: &mut LaneScratch,
+) {
+    let end = start + out_chunk.len();
+    loop {
+        let mut j = usize::MAX;
+        for (p, &cur) in payloads.iter().zip(cursors.iter()) {
+            if let Some(&idx) = p.indices().get(cur) {
+                let idx = idx as usize;
+                if idx < end && idx < j {
+                    j = idx;
+                }
+            }
+        }
+        if j == usize::MAX {
+            return;
+        }
+        scratch.lanes.clear();
+        let mut miss = 0.0f64;
+        for (pi, ((p, cur), &w)) in
+            payloads.iter().zip(cursors.iter_mut()).zip(weights).enumerate()
+        {
+            if p.indices().get(*cur).is_some_and(|&idx| idx as usize == j) {
+                scratch.lanes.push((p.value(*cur) as f64, w, pi as u32));
+                *cur += 1;
+            } else {
+                miss += w;
+            }
+        }
+        miss += self_weight;
+        if miss > 0.0 {
+            scratch.lanes.push((out_chunk[j - start] as f64, miss, PRIOR_LANE));
+        }
+        out_chunk[j - start] = robust_reduce_lanes(
+            spec,
+            total,
+            &scratch.lanes,
+            &mut scratch.order,
+            &mut scratch.dropped,
+            counts,
+        );
+    }
+}
+
+/// Sort lane ids by value (`total_cmp`) with lane-id tie-breaks —
+/// deterministic for every input, including NaNs and signed zeros.
+fn sort_order(lanes: &[(f64, f64, u32)], order: &mut Vec<u32>) {
+    order.clear();
+    order.extend(0..lanes.len() as u32);
+    order.sort_unstable_by(|&a, &b| {
+        lanes[a as usize].0.total_cmp(&lanes[b as usize].0).then(a.cmp(&b))
+    });
+}
+
+/// Reduce one coordinate's value lanes to its merged value.
+///
+/// * `TrimmedMean` with an effective trim of zero replays the plain
+///   merge's summation — `Σ (w/total)·v` in lane order — bit-for-bit.
+///   With `t = min(floor(trim·lanes), (lanes−1)/2) > 0` the `t` smallest
+///   and `t` largest lanes are dropped (their payloads' outlier counters
+///   bumped), and the survivors are averaged over their own weight mass
+///   in lane order.
+/// * `Median` returns the weighted lower median: the first lane in value
+///   order whose cumulative weight reaches half the total lane mass.
+///   With ≥ 3 lanes the extreme-ranked payload lanes are counted as
+///   outliers (rank, not trim, is the deviation signal here).
+///
+/// The prior lane ([`PRIOR_LANE`]) participates in sorting, trimming and
+/// the median walk like any other lane but never touches `counts`.
+fn robust_reduce_lanes(
+    spec: RobustSpec,
+    total: f64,
+    lanes: &[(f64, f64, u32)],
+    order: &mut Vec<u32>,
+    dropped: &mut Vec<bool>,
+    counts: &[AtomicU64],
+) -> f32 {
+    let l = lanes.len();
+    match spec.mode {
+        RobustMode::None => unreachable!("robust merge with RobustMode::None"),
+        RobustMode::TrimmedMean => {
+            let t = ((spec.trim * l as f64).floor() as usize).min(l.saturating_sub(1) / 2);
+            if t == 0 {
+                // Bitwise-plain fallback: identical operations in identical
+                // order to scatter_merge_range / the fused dense path.
+                let mut acc = 0.0f64;
+                for &(v, w, _) in lanes {
+                    acc += (w / total) * v;
+                }
+                return acc as f32;
+            }
+            sort_order(lanes, order);
+            dropped.clear();
+            dropped.resize(l, false);
+            for &id in order[..t].iter().chain(order[l - t..].iter()) {
+                dropped[id as usize] = true;
+                let tag = lanes[id as usize].2;
+                if tag != PRIOR_LANE {
+                    counts[tag as usize].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Renormalize over the surviving mass, in lane order so the
+            // summation sequence is input-determined (not sort-determined).
+            let mut wsum = 0.0f64;
+            for (lane, &drop) in lanes.iter().zip(dropped.iter()) {
+                if !drop {
+                    wsum += lane.1;
+                }
+            }
+            let mut acc = 0.0f64;
+            for (&(v, w, _), &drop) in lanes.iter().zip(dropped.iter()) {
+                if !drop {
+                    acc += (w / wsum) * v;
+                }
+            }
+            acc as f32
+        }
+        RobustMode::Median => {
+            sort_order(lanes, order);
+            if l >= 3 {
+                for &id in [order[0], order[l - 1]].iter() {
+                    let tag = lanes[id as usize].2;
+                    if tag != PRIOR_LANE {
+                        counts[tag as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            let wsum: f64 = lanes.iter().map(|&(_, w, _)| w).sum();
+            let mut cum = 0.0f64;
+            for &id in order.iter() {
+                let (v, w, _) = lanes[id as usize];
+                cum += w;
+                if cum >= 0.5 * wsum {
+                    return v as f32;
+                }
+            }
+            lanes[order[l - 1] as usize].0 as f32
+        }
     }
 }
 
@@ -633,5 +1096,253 @@ mod tests {
         e.reset(2, false);
         let mut out = vec![0.0f32; 2];
         combine_edges(&[e], &mut out);
+    }
+
+    const TRIM0: RobustSpec = RobustSpec { mode: RobustMode::TrimmedMean, trim: 0.0 };
+
+    #[test]
+    fn robust_trim0_dense_matches_plain_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let dim = 67;
+        let models: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let weights = [2.0f64, 5.0, 1.0, 3.0];
+        let mut bufs: Vec<QuantBuf> = vec![QuantBuf::new(); 4];
+        for (b, m) in bufs.iter_mut().zip(&models) {
+            b.encode(Precision::F32, m);
+        }
+        let mut agg = Aggregator::new();
+        // No prior: robust(prior = 0) vs plain.
+        let mut want = vec![0.0f32; dim];
+        agg.aggregate_payloads(&bufs, &weights, &mut want);
+        let mut got = vec![0.0f32; dim];
+        let mut outliers = vec![0u64; 4];
+        agg.aggregate_payloads_robust(&bufs, &weights, 0.0, TRIM0, &mut got, &mut outliers);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(outliers, vec![0; 4], "trim = 0 must never count outliers");
+        // With a prior: plain path folds the prior in as a trailing F32
+        // payload slot; the robust path takes it as prior_weight.
+        let prior: Vec<f32> = (0..dim).map(|j| (j as f32).cos()).collect();
+        let mut with_slot = bufs.clone();
+        let mut slot = QuantBuf::new();
+        slot.encode(Precision::F32, &prior);
+        with_slot.push(slot);
+        let mut w_slot = weights.to_vec();
+        w_slot.push(0.75);
+        let mut want = vec![0.0f32; dim];
+        agg.aggregate_payloads(&with_slot, &w_slot, &mut want);
+        let mut got = prior.clone();
+        agg.aggregate_payloads_robust(&bufs, &weights, 0.75, TRIM0, &mut got, &mut outliers);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn robust_trim0_sparse_matches_plain_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(78);
+        let dim = 61;
+        let base = vec![0.0f32; dim];
+        let mut payloads: Vec<SparseDelta> = Vec::new();
+        for _ in 0..4 {
+            let m: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+            let mut sd = SparseDelta::new();
+            sd.encode_topk(Precision::F32, &m, &base, None, dim / 3);
+            payloads.push(sd);
+        }
+        let weights = [1.0f64, 4.0, 2.0, 3.0];
+        let prior: Vec<f32> = (0..dim).map(|j| (j as f32).sin()).collect();
+        let mut agg = Aggregator::new();
+        for self_weight in [0.0f64, 0.5] {
+            let mut want = prior.clone();
+            agg.aggregate_sparse_payloads(&payloads, &weights, self_weight, &mut want);
+            let mut got = prior.clone();
+            let mut outliers = vec![0u64; 4];
+            agg.aggregate_sparse_payloads_robust(
+                &payloads,
+                &weights,
+                self_weight,
+                TRIM0,
+                &mut got,
+                &mut outliers,
+            );
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "self_weight {self_weight}");
+            }
+            assert_eq!(outliers, vec![0; 4]);
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes_and_counts_them() {
+        // Five single-coordinate payloads [0, 1, 2, 3, 100], equal weight,
+        // trim 0.25 -> t = floor(1.25) = 1: drop 0 and 100, mean of 1,2,3.
+        let mut bufs: Vec<QuantBuf> = Vec::new();
+        for v in [0.0f32, 1.0, 2.0, 3.0, 100.0] {
+            let mut b = QuantBuf::new();
+            b.encode(Precision::F32, &[v]);
+            bufs.push(b);
+        }
+        let weights = [1.0f64; 5];
+        let spec = RobustSpec { mode: RobustMode::TrimmedMean, trim: 0.25 };
+        let mut agg = Aggregator::new();
+        let mut out = vec![0.0f32; 1];
+        let mut outliers = vec![0u64; 5];
+        agg.aggregate_payloads_robust(&bufs, &weights, 0.0, spec, &mut out, &mut outliers);
+        assert!((out[0] - 2.0).abs() < 1e-6, "{}", out[0]);
+        assert_eq!(outliers, vec![1, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn trimmed_mean_prior_lane_is_trimmable_but_uncounted() {
+        // Payload lanes 5 and 6, prior 100 at weight 1, trim 0.34 over
+        // three lanes -> t = 1: drops 5 (payload 0, counted) and the prior
+        // (never counted); the survivor 6 carries the full mass.
+        let mut bufs: Vec<QuantBuf> = Vec::new();
+        for v in [5.0f32, 6.0] {
+            let mut b = QuantBuf::new();
+            b.encode(Precision::F32, &[v]);
+            bufs.push(b);
+        }
+        let spec = RobustSpec { mode: RobustMode::TrimmedMean, trim: 0.34 };
+        let mut agg = Aggregator::new();
+        let mut out = vec![100.0f32];
+        let mut outliers = vec![0u64; 2];
+        agg.aggregate_payloads_robust(&bufs, &[1.0, 1.0], 1.0, spec, &mut out, &mut outliers);
+        assert!((out[0] - 6.0).abs() < 1e-6, "{}", out[0]);
+        assert_eq!(outliers, vec![1, 0]);
+    }
+
+    #[test]
+    fn median_returns_weighted_lower_median() {
+        let mut bufs: Vec<QuantBuf> = Vec::new();
+        for v in [0.0f32, 10.0, 100.0] {
+            let mut b = QuantBuf::new();
+            b.encode(Precision::F32, &[v]);
+            bufs.push(b);
+        }
+        let spec = RobustSpec { mode: RobustMode::Median, trim: 0.0 };
+        let mut agg = Aggregator::new();
+        // Equal weights: cumulative mass reaches 1.5 at the middle lane.
+        let mut out = vec![0.0f32];
+        let mut outliers = vec![0u64; 3];
+        agg.aggregate_payloads_robust(&bufs, &[1.0; 3], 0.0, spec, &mut out, &mut outliers);
+        assert_eq!(out[0], 10.0);
+        assert_eq!(outliers, vec![1, 0, 1], "extreme ranks are the deviation signal");
+        // Skewed weights: the heavy smallest lane alone crosses half mass.
+        agg.aggregate_payloads_robust(&bufs, &[5.0, 1.0, 1.0], 0.0, spec, &mut out, &mut outliers);
+        assert_eq!(out[0], 0.0);
+    }
+
+    #[test]
+    fn robust_sparse_is_thread_count_invariant() {
+        let mut rng = crate::util::rng::Rng::new(79);
+        let dim = 1201;
+        let base = vec![0.0f32; dim];
+        let mut payloads: Vec<SparseDelta> = Vec::new();
+        for _ in 0..6 {
+            let m: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+            let mut sd = SparseDelta::new();
+            sd.encode_topk(Precision::F16, &m, &base, None, dim / 2);
+            payloads.push(sd);
+        }
+        let weights = [1.0f64, 2.0, 3.0, 1.5, 2.5, 0.5];
+        let prior: Vec<f32> = (0..dim).map(|j| (j as f32 * 0.01).sin()).collect();
+        for mode in [RobustMode::TrimmedMean, RobustMode::Median] {
+            let spec = RobustSpec { mode, trim: 0.25 };
+            let mut agg = Aggregator::new();
+            let mut want = prior.clone();
+            let mut want_outliers = vec![0u64; 6];
+            agg.aggregate_sparse_payloads_robust_t(
+                &payloads,
+                &weights,
+                0.5,
+                spec,
+                &mut want,
+                &mut want_outliers,
+                1,
+            );
+            for threads in [2usize, 4, 7] {
+                let mut got = prior.clone();
+                let mut outliers = vec![0u64; 6];
+                agg.aggregate_sparse_payloads_robust_t(
+                    &payloads,
+                    &weights,
+                    0.5,
+                    spec,
+                    &mut got,
+                    &mut outliers,
+                    threads,
+                );
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} threads {threads}");
+                }
+                assert_eq!(outliers, want_outliers, "{mode:?} threads {threads}");
+            }
+            assert!(
+                want_outliers.iter().sum::<u64>() > 0,
+                "{mode:?}: expected some outlier attribution on random lanes"
+            );
+        }
+    }
+
+    #[test]
+    fn robust_dense_is_thread_count_invariant() {
+        let mut rng = crate::util::rng::Rng::new(80);
+        let dim = 997;
+        let models: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..dim).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let weights = [2.0f64, 1.0, 3.0, 2.0, 1.0];
+        let mut bufs: Vec<QuantBuf> = vec![QuantBuf::new(); 5];
+        for (b, m) in bufs.iter_mut().zip(&models) {
+            b.encode(Precision::Int8, m);
+        }
+        let prior: Vec<f32> = (0..dim).map(|j| (j as f32 * 0.02).cos()).collect();
+        let spec = RobustSpec { mode: RobustMode::TrimmedMean, trim: 0.2 };
+        let mut agg = Aggregator::new();
+        let mut want = prior.clone();
+        let mut want_outliers = vec![0u64; 5];
+        agg.aggregate_payloads_robust_t(
+            &bufs,
+            &weights,
+            0.25,
+            spec,
+            &mut want,
+            &mut want_outliers,
+            1,
+        );
+        for threads in [3usize, 8] {
+            let mut got = prior.clone();
+            let mut outliers = vec![0u64; 5];
+            agg.aggregate_payloads_robust_t(
+                &bufs,
+                &weights,
+                0.25,
+                spec,
+                &mut got,
+                &mut outliers,
+                threads,
+            );
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}");
+            }
+            assert_eq!(outliers, want_outliers, "threads {threads}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "RobustMode::None")]
+    fn robust_mode_none_panics() {
+        let mut b = QuantBuf::new();
+        b.encode(Precision::F32, &[1.0]);
+        let spec = RobustSpec { mode: RobustMode::None, trim: 0.0 };
+        let mut agg = Aggregator::new();
+        let mut out = vec![0.0f32];
+        let mut outliers = vec![0u64];
+        agg.aggregate_payloads_robust(&[b], &[1.0], 0.0, spec, &mut out, &mut outliers);
     }
 }

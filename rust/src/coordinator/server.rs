@@ -25,9 +25,9 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{CompressionMode, ExperimentConfig};
-use crate::control::{ControlPlane, FlushSample, KnobChange, Knobs};
-use crate::coordinator::aggregate::{combine_edges, Aggregator, EdgeAccum};
+use crate::config::{AttackMode, CompressionMode, ExperimentConfig, RobustMode};
+use crate::control::{ControlPlane, FlushSample, KnobChange, Knobs, TrustBook};
+use crate::coordinator::aggregate::{combine_edges, Aggregator, EdgeAccum, RobustSpec};
 use crate::coordinator::downlink::Downlink;
 use crate::coordinator::policy::{AsyncGateContext, PolicyContext, SelectionPolicy};
 use crate::coordinator::registry::ClientRegistry;
@@ -35,7 +35,7 @@ use crate::coordinator::staleness::MixingRule;
 use crate::model::quant::{Precision, QuantBuf};
 use crate::model::sparse::{sparse_payload_bytes, sparse_payload_bytes_layers, SparseDelta};
 use crate::data::synth::Dataset;
-use crate::fleet::{Client, ClientReport, Fleet, FleetData};
+use crate::fleet::{AttackProfile, Client, ClientReport, Fleet, FleetData};
 use crate::metrics::{ControlRecord, RoundRecord, RunMetrics};
 use crate::model::ParamVec;
 use crate::netsim::{LinkProfile, Message};
@@ -348,6 +348,18 @@ pub struct Server {
     /// broadcast frames in the upload wire format. Holds no slots (and
     /// is never consulted) in dense downlink mode.
     downlink: Downlink,
+    /// Wire bytes of one dense broadcast frame under the effective
+    /// downlink precision. `compression.down_precision = None` reads
+    /// `ctx.model_payload_bytes`, keeping pre-split byte streams bitwise.
+    down_payload_bytes: u64,
+    /// Per-client trust scores (rolling outlier-rate EWMA; see
+    /// `control::telemetry::TrustBook`). Only updated and consulted while
+    /// `robust.trust` is armed.
+    trust: TrustBook,
+    /// Per-payload trimmed-coordinate counts of the latest robust
+    /// aggregation, reused across flushes. Empty while `robust.mode` is
+    /// `none`.
+    outlier_counts: Vec<u64>,
     /// Reusable FedAvg weight buffer for the selected upload set.
     upload_weights: Vec<f64>,
     /// Reusable broadcast codec buffer + decoded broadcast model.
@@ -400,6 +412,10 @@ impl Server {
                 sparse_payload_bytes(cfg.upload_precision, cfg.compression.k_for(n), n)
             }
         };
+        let down_payload_bytes = cfg
+            .compression
+            .down_precision
+            .map_or(ctx.model_payload_bytes, |p| p.payload_bytes(init_params.len()));
         Server {
             net_rng: root_rng.fork("netsim"),
             registry,
@@ -407,9 +423,12 @@ impl Server {
             last_accs: vec![f64::NAN; n_clients],
             downlink: Downlink::new(
                 n_clients,
-                cfg.upload_precision,
+                cfg.compression.down_precision_or(cfg.upload_precision),
                 cfg.compression.error_feedback,
             ),
+            down_payload_bytes,
+            trust: TrustBook::new(n_clients, cfg.robust.trust_decay),
+            outlier_counts: Vec::new(),
             cfg,
             ctx,
             fleet,
@@ -661,6 +680,12 @@ impl Server {
         // codec, which for f32 is a byte-exact memcpy).
         let mut agg_time = last_arrival;
         let mut upload_staleness: Vec<usize> = Vec::with_capacity(n_selected);
+        let robust = self.cfg.robust.mode != RobustMode::None;
+        let trust_on = robust && self.cfg.robust.trust;
+        let mut quarantined = 0usize;
+        // NaN = no robust signal this round (mode off or empty selection),
+        // distinct from a clean 0.0 rate.
+        let mut outlier_rate = f64::NAN;
         if n_selected > 0 {
             self.ensure_wire_slots(n_selected);
             let payload = self.upload_payload_bytes;
@@ -709,21 +734,58 @@ impl Server {
                         }
                     }
                     // FedAvg weight n_i, optionally decayed by staleness
-                    // (FedAsync-style extension; None = paper's Alg. 1).
+                    // (FedAsync-style extension; None = paper's Alg. 1),
+                    // then soft-quarantined by the trust score (armed
+                    // trust only — disarmed runs keep weights bitwise).
                     let decay = self
                         .cfg
                         .staleness_decay
                         .map_or(1.0, |d| d.powi(self.fleet.client(i).staleness as i32));
-                    self.upload_weights
-                        .push(self.fleet.client(i).num_samples() as f64 * decay);
+                    let mut w = self.fleet.client(i).num_samples() as f64 * decay;
+                    if trust_on {
+                        let m = self.trust.multiplier(
+                            i,
+                            self.cfg.robust.trust_threshold,
+                            self.cfg.robust.trust_floor,
+                        );
+                        if m < 1.0 {
+                            quarantined += 1;
+                        }
+                        w *= m;
+                    }
+                    self.upload_weights.push(w);
                     used += 1;
                 }
             }
+            if robust {
+                self.outlier_counts.clear();
+                self.outlier_counts.resize(used, 0);
+            }
+            let spec = RobustSpec {
+                mode: self.cfg.robust.mode,
+                trim: self.cfg.robust.trim_fraction,
+            };
             match mode {
+                CompressionMode::Dense if robust => self.agg.aggregate_payloads_robust(
+                    &self.upload_bufs[..used],
+                    &self.upload_weights,
+                    0.0,
+                    spec,
+                    &mut self.global,
+                    &mut self.outlier_counts,
+                ),
                 CompressionMode::Dense => self.agg.aggregate_payloads(
                     &self.upload_bufs[..used],
                     &self.upload_weights,
                     &mut self.global,
+                ),
+                CompressionMode::TopK if robust => self.agg.aggregate_sparse_payloads_robust(
+                    &self.sparse_bufs[..used],
+                    &self.upload_weights,
+                    0.0,
+                    spec,
+                    &mut self.global,
+                    &mut self.outlier_counts,
                 ),
                 // Masked FedAvg: transmitted coordinates mix exactly like
                 // the dense path; a coordinate some upload omitted keeps
@@ -735,16 +797,46 @@ impl Server {
                     &mut self.global,
                 ),
             }
+            if robust {
+                // Per-payload trimmed-coordinate rates feed the trust book
+                // (payload order here is ascending client id).
+                let dim = self.global.len();
+                let mut rate_sum = 0.0f64;
+                let mut j = 0usize;
+                for i in 0..n {
+                    if !fleet_selected[i] {
+                        continue;
+                    }
+                    let denom = match mode {
+                        CompressionMode::Dense => dim,
+                        CompressionMode::TopK => self.sparse_bufs[j].len(),
+                    };
+                    let rate = if denom == 0 {
+                        0.0
+                    } else {
+                        self.outlier_counts[j] as f64 / denom as f64
+                    };
+                    rate_sum += rate;
+                    if trust_on {
+                        self.trust.update(i, rate);
+                    }
+                    j += 1;
+                }
+                outlier_rate = rate_sum / used as f64;
+            }
         }
         self.queue.advance_to(agg_time);
 
         // --- 4. Broadcast to participants; skipped clients go stale.
-        // The broadcast also crosses the wire at the configured precision;
-        // the codec runs once per round into reusable buffers.
-        let bcast_model: Option<&[f32]> = if self.cfg.upload_precision == Precision::F32 {
+        // The broadcast crosses the wire at the effective downlink
+        // precision (`compression.down_precision`, defaulting to the
+        // upload precision); the codec runs once per round into reusable
+        // buffers.
+        let down_precision = self.cfg.compression.down_precision_or(self.cfg.upload_precision);
+        let bcast_model: Option<&[f32]> = if down_precision == Precision::F32 {
             None
         } else {
-            self.bcast_buf.encode(self.cfg.upload_precision, &self.global);
+            self.bcast_buf.encode(down_precision, &self.global);
             // No clear(): after round 1 the resize is a no-op and
             // decode_into overwrites every element anyway.
             self.bcast_model.resize(self.global.len(), 0.0);
@@ -772,12 +864,12 @@ impl Server {
                             let target = bcast_model.unwrap_or(&self.global);
                             self.fleet.client_mut(i).sync(target);
                             self.downlink.ack_dense(i, target);
-                            self.ctx.model_payload_bytes
+                            self.down_payload_bytes
                         }
                     }
                 } else {
                     self.fleet.client_mut(i).sync(bcast_model.unwrap_or(&self.global));
-                    self.ctx.model_payload_bytes
+                    self.down_payload_bytes
                 };
                 debug_assert!(
                     !down_topk
@@ -839,6 +931,8 @@ impl Server {
             shard: 0,
             spec_committed: 0,
             spec_replayed: 0,
+            quarantined,
+            trust_mean: if trust_on { self.trust.mean_score() } else { f64::NAN },
         };
         if global_acc.is_finite() {
             log_info!(
@@ -871,6 +965,7 @@ impl Server {
                 down_residual_l1,
                 down_transmitted_l1,
                 acc_proxy: mean_finite(&self.last_accs),
+                outlier_rate,
             });
             if self.control.due(round) {
                 let now = self.queue.now();
@@ -1364,7 +1459,7 @@ impl Server {
         let precision = self.cfg.upload_precision;
         match self.cfg.compression.mode {
             CompressionMode::Dense => {
-                self.fleet.client(client).encode_upload(precision, &mut self.edge_buf);
+                self.fleet.client_mut(client).encode_upload(precision, &mut self.edge_buf);
                 st.edges[ei].fold_dense(&self.edge_buf, w, a);
             }
             CompressionMode::TopK => {
@@ -1421,8 +1516,14 @@ impl Server {
         let n = self.fleet.len();
         let kk = st.buffers[shard].len();
         let precision = self.cfg.upload_precision;
-        let payload = self.ctx.model_payload_bytes;
+        // Dense broadcast frames are priced at the effective downlink
+        // precision (`down_precision = None` reads `ctx` — bitwise).
+        let payload = self.down_payload_bytes;
         let fanout = self.cfg.engine_opts.edge_fanout;
+        let robust = self.cfg.robust.mode != RobustMode::None;
+        let trust_on = robust && self.cfg.robust.trust;
+        let mut quarantined = 0usize;
+        let mut outlier_rate = f64::NAN;
         self.round = flush_idx;
 
         // Deterministic aggregation order — and a bitwise match with the
@@ -1456,7 +1557,7 @@ impl Server {
                 match mode {
                     CompressionMode::Dense => self
                         .fleet
-                        .client(c)
+                        .client_mut(c)
                         .encode_upload(precision, &mut self.upload_bufs[j]),
                     CompressionMode::TopK if self.layer_ks.is_empty() => {
                         self.fleet.client_mut(c).encode_sparse_upload(
@@ -1477,26 +1578,68 @@ impl Server {
                     }
                 }
             }
-            // FedAvg weights n_i scaled by alpha(tau_i); the buffer's mean
-            // alpha is the shard's mixing rate.
+            // FedAvg weights n_i scaled by alpha(tau_i), then
+            // soft-quarantined by the trust score (armed trust only, so
+            // disarmed runs keep weights bitwise); the buffer's mean
+            // alpha is the shard's mixing rate, deliberately untouched by
+            // trust — quarantine shifts relative shares, not how much of
+            // the prior model survives.
             self.upload_weights.clear();
             let mut alpha_sum = 0.0f64;
             for &(c, tau, _) in st.buffers[shard].iter() {
                 let a = mixing.alpha(tau);
                 alpha_sum += a;
-                self.upload_weights.push(self.fleet.num_samples(c) as f64 * a);
+                let mut w = self.fleet.num_samples(c) as f64 * a;
+                if trust_on {
+                    let m = self.trust.multiplier(
+                        c,
+                        self.cfg.robust.trust_threshold,
+                        self.cfg.robust.trust_floor,
+                    );
+                    if m < 1.0 {
+                        quarantined += 1;
+                    }
+                    w *= m;
+                }
+                self.upload_weights.push(w);
             }
             let abar = (alpha_sum / kk as f64).min(1.0);
+            if robust {
+                self.outlier_counts.clear();
+                self.outlier_counts.resize(kk, 0);
+            }
+            let spec = RobustSpec {
+                mode: self.cfg.robust.mode,
+                trim: self.cfg.robust.trim_fraction,
+            };
             if abar >= 1.0 {
                 // Pure FedAvg replacement (the barriered rule). The sparse
                 // path is the masked equivalent: untransmitted coordinate
                 // mass falls back to the current shard model.
                 match mode {
+                    CompressionMode::Dense if robust => self.agg.aggregate_payloads_robust(
+                        &self.upload_bufs[..kk],
+                        &self.upload_weights,
+                        0.0,
+                        spec,
+                        model,
+                        &mut self.outlier_counts,
+                    ),
                     CompressionMode::Dense => self.agg.aggregate_payloads(
                         &self.upload_bufs[..kk],
                         &self.upload_weights,
                         model,
                     ),
+                    CompressionMode::TopK if robust => {
+                        self.agg.aggregate_sparse_payloads_robust(
+                            &self.sparse_bufs[..kk],
+                            &self.upload_weights,
+                            0.0,
+                            spec,
+                            model,
+                            &mut self.outlier_counts,
+                        )
+                    }
                     CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
                         &self.sparse_bufs[..kk],
                         &self.upload_weights,
@@ -1511,12 +1654,22 @@ impl Server {
                 // payload (slot kk) with weight 1 - abar; sparse: the same
                 // 1 - abar enters as the scatter's self-weight, which the
                 // merge applies last per coordinate — the identical lane
-                // order, so k_fraction = 1.0 stays bitwise dense.
+                // order, so k_fraction = 1.0 stays bitwise dense. The
+                // robust merges take the same 1 - abar as the prior lane's
+                // weight instead of a trailing payload slot.
                 let wsum: f64 = self.upload_weights.iter().sum();
                 for w in self.upload_weights.iter_mut() {
                     *w = abar * *w / wsum;
                 }
                 match mode {
+                    CompressionMode::Dense if robust => self.agg.aggregate_payloads_robust(
+                        &self.upload_bufs[..kk],
+                        &self.upload_weights,
+                        1.0 - abar,
+                        spec,
+                        model,
+                        &mut self.outlier_counts,
+                    ),
                     CompressionMode::Dense => {
                         self.upload_weights.push(1.0 - abar);
                         self.upload_bufs[kk].encode(Precision::F32, model);
@@ -1526,6 +1679,16 @@ impl Server {
                             model,
                         );
                     }
+                    CompressionMode::TopK if robust => {
+                        self.agg.aggregate_sparse_payloads_robust(
+                            &self.sparse_bufs[..kk],
+                            &self.upload_weights,
+                            1.0 - abar,
+                            spec,
+                            model,
+                            &mut self.outlier_counts,
+                        )
+                    }
                     CompressionMode::TopK => self.agg.aggregate_sparse_payloads(
                         &self.sparse_bufs[..kk],
                         &self.upload_weights,
@@ -1534,16 +1697,40 @@ impl Server {
                     ),
                 }
             }
+            if robust {
+                // Per-payload trimmed-coordinate rates feed the trust book
+                // (the buffer is sorted by client id, so the order — and
+                // with it every EWMA trajectory — is deterministic).
+                let dim = model.len();
+                let mut rate_sum = 0.0f64;
+                for (j, &(c, _, _)) in st.buffers[shard].iter().enumerate() {
+                    let denom = match mode {
+                        CompressionMode::Dense => dim,
+                        CompressionMode::TopK => self.sparse_bufs[j].len(),
+                    };
+                    let rate = if denom == 0 {
+                        0.0
+                    } else {
+                        self.outlier_counts[j] as f64 / denom as f64
+                    };
+                    rate_sum += rate;
+                    if trust_on {
+                        self.trust.update(c, rate);
+                    }
+                }
+                outlier_rate = rate_sum / kk as f64;
+            }
         }
 
-        // Broadcast the new shard model to the flushed clients (at wire
-        // precision, codec once per flush), restart their clocks, and —
-        // threaded — dispatch their next speculative local round against
-        // the state they just synced.
-        let bcast_model: Option<&[f32]> = if precision == Precision::F32 {
+        // Broadcast the new shard model to the flushed clients (at the
+        // effective downlink precision, codec once per flush), restart
+        // their clocks, and — threaded — dispatch their next speculative
+        // local round against the state they just synced.
+        let down_precision = self.cfg.compression.down_precision_or(precision);
+        let bcast_model: Option<&[f32]> = if down_precision == Precision::F32 {
             None
         } else {
-            self.bcast_buf.encode(precision, model);
+            self.bcast_buf.encode(down_precision, model);
             self.bcast_model.resize(model.len(), 0.0);
             self.bcast_buf.decode_into(&mut self.bcast_model);
             Some(&self.bcast_model)
@@ -1716,6 +1903,8 @@ impl Server {
             shard,
             spec_committed: st.window.spec_committed,
             spec_replayed: st.window.spec_replayed,
+            quarantined,
+            trust_mean: if trust_on { self.trust.mean_score() } else { f64::NAN },
         };
         if global_acc.is_finite() {
             log_info!(
@@ -1754,6 +1943,7 @@ impl Server {
                 down_residual_l1,
                 down_transmitted_l1,
                 acc_proxy: mean_finite(&st.last_accs),
+                outlier_rate,
             });
         }
         if self.cfg.trace_events {
@@ -1915,6 +2105,8 @@ impl Server {
             down_k_fraction: self.cfg.compression.down_k_fraction,
             down_topk: self.cfg.compression.down_mode == CompressionMode::TopK,
             barrier_free: true,
+            trust_threshold: self.cfg.robust.trust_threshold,
+            trust_armed: self.cfg.robust.mode != RobustMode::None && self.cfg.robust.trust,
         };
         for d in self.control.decide_knobs(knobs) {
             match d.change {
@@ -1994,6 +2186,23 @@ impl Server {
                         None,
                     );
                 }
+                KnobChange::TrustThreshold { from, to } => {
+                    // Takes effect at the next flush's weight build; the
+                    // trust book itself is untouched, so relaxing the
+                    // threshold immediately un-quarantines clients whose
+                    // scores now clear it.
+                    self.cfg.robust.trust_threshold = to;
+                    self.push_control_record(
+                        flushes,
+                        now,
+                        d.controller,
+                        "trust_threshold",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
             }
         }
     }
@@ -2010,6 +2219,8 @@ impl Server {
             down_k_fraction: self.cfg.compression.down_k_fraction,
             down_topk: self.cfg.compression.down_mode == CompressionMode::TopK,
             barrier_free: false,
+            trust_threshold: self.cfg.robust.trust_threshold,
+            trust_armed: self.cfg.robust.mode != RobustMode::None && self.cfg.robust.trust,
         };
         for d in self.control.decide_knobs(knobs) {
             match d.change {
@@ -2033,6 +2244,19 @@ impl Server {
                         now,
                         d.controller,
                         "down_k_fraction",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
+                KnobChange::TrustThreshold { from, to } => {
+                    self.cfg.robust.trust_threshold = to;
+                    self.push_control_record(
+                        round,
+                        now,
+                        d.controller,
+                        "trust_threshold",
                         from,
                         to,
                         d.signal,
@@ -2177,7 +2401,7 @@ pub fn build_server_with_data(
     let probe_images = Arc::new(test.images[..probe_n * input_dim].to_vec());
     let probe_labels = Arc::new(test.labels[..probe_n].to_vec());
 
-    let fleet = Fleet::new(
+    let mut fleet = Fleet::new(
         data,
         batch_size,
         probe_images,
@@ -2185,6 +2409,12 @@ pub fn build_server_with_data(
         cfg.fleet.residual_budget,
         root_rng.clone(),
     );
+    if cfg.attack.mode != AttackMode::None && cfg.attack.fraction > 0.0 {
+        // Attack assignment must precede Server::new — set_attacks
+        // asserts no client is hydrated yet, so the very first gradient
+        // any compromised client ever produces is already poisoned.
+        fleet.set_attacks(attack_table(cfg, fleet.len(), &root_rng));
+    }
 
     let ctx = ServerContext {
         link: cfg.link.clone(),
@@ -2195,6 +2425,32 @@ pub fn build_server_with_data(
         test_labels: Arc::new(test.labels),
     };
     Server::new(cfg.clone(), ctx, fleet, policy, init_params, &root_rng)
+}
+
+/// Build the per-client attack table for a fleet of `n` clients: a
+/// seed-derived shuffle picks `round(n * fraction)` compromised ids, so
+/// the same seed always corrupts the same clients regardless of which
+/// attack mode (or fleet rotation schedule) is in play.
+fn attack_table(cfg: &ExperimentConfig, n: usize, root: &Rng) -> Vec<AttackProfile> {
+    let profile = match cfg.attack.mode {
+        AttackMode::None => return vec![AttackProfile::Benign; n],
+        AttackMode::LabelFlip => AttackProfile::LabelFlip,
+        AttackMode::SignFlip => AttackProfile::SignFlip,
+        AttackMode::Scale => AttackProfile::Scale { gain: cfg.attack.scale as f32 },
+        AttackMode::Backdoor => AttackProfile::Backdoor {
+            coords: cfg.attack.backdoor_coords,
+            boost: cfg.attack.backdoor_boost as f32,
+        },
+    };
+    let mut ids: Vec<usize> = (0..n).collect();
+    let mut r = root.fork("attack");
+    r.shuffle(&mut ids);
+    let count = ((n as f64 * cfg.attack.fraction).round() as usize).min(n);
+    let mut table = vec![AttackProfile::Benign; n];
+    for &id in ids.iter().take(count) {
+        table[id] = profile;
+    }
+    table
 }
 
 #[cfg(test)]

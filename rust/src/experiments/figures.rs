@@ -131,6 +131,8 @@ mod tests {
                 shard: 0,
                 spec_committed: 0,
                 spec_replayed: 0,
+                quarantined: 0,
+                trust_mean: f64::NAN,
             });
         }
         m

@@ -187,6 +187,8 @@ mod tests {
             shard: 0,
             spec_committed: 0,
             spec_replayed: 0,
+            quarantined: 0,
+            trust_mean: f64::NAN,
         });
         m
     }
@@ -284,6 +286,8 @@ mod tests {
             shard: 0,
             spec_committed: 0,
             spec_replayed: 0,
+            quarantined: 0,
+            trust_mean: f64::NAN,
         });
         let rows = rows_for_experiment(&[fake_run("a", "afl", 10), m]);
         let text = render(&rows);

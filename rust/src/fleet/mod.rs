@@ -67,6 +67,33 @@ use crate::model::{sq_distance, ParamVec};
 use crate::runtime::{evaluate_with_params, Executor};
 use crate::util::rng::Rng;
 
+/// Per-client malicious behavior of the attack simulator (ISSUE 8 /
+/// `[attack]` config). Profiles are applied **at gradient-encode time**
+/// (or, for [`AttackProfile::LabelFlip`], at shard hydration), so the
+/// poisoned update flows through sparsification, error-feedback residuals,
+/// and speculation exactly like an honest one — the robust aggregator
+/// must catch it on the wire, not via a side channel. The table lives on
+/// the [`Fleet`], so a profile survives park/hydrate cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum AttackProfile {
+    /// Honest client.
+    #[default]
+    Benign,
+    /// Data poisoning: every shard label `l` becomes `9 − l` (the synth
+    /// datasets are 10-class), applied when the shard materializes.
+    LabelFlip,
+    /// Model poisoning: the upload is the local update reflected around
+    /// the sync base (`2·base − params`), i.e. an exact sign flip of the
+    /// update direction.
+    SignFlip,
+    /// Model poisoning: the update is amplified by `gain`
+    /// (`base + gain·(params − base)`).
+    Scale { gain: f32 },
+    /// Backdoor: `coords` evenly strided coordinates of the upload are
+    /// overwritten with the fixed trigger value `boost`.
+    Backdoor { coords: usize, boost: f32 },
+}
+
 /// What a client sends to the server at the end of a local round
 /// (Algorithm 1 line 6: "upload the V_i to server").
 #[derive(Debug, Clone)]
@@ -131,6 +158,13 @@ pub struct Client {
     /// [`Client::epoch`]); `staleness` bookkeeping is deliberately
     /// excluded — it never feeds the local round.
     epoch: u64,
+    /// Malicious behavior applied when this client's upload is encoded
+    /// (`Benign` trains and encodes exactly the pre-attack code paths).
+    attack: AttackProfile,
+    /// Scratch for the attacked parameter view at encode time — reused
+    /// across rounds; empty (and never touched) for benign clients and
+    /// on speculative forks, which never encode.
+    attack_buf: Vec<f32>,
 }
 
 impl Client {
@@ -164,6 +198,8 @@ impl Client {
             probe_images,
             probe_labels,
             epoch: 0,
+            attack: AttackProfile::Benign,
+            attack_buf: Vec::new(),
         }
     }
 
@@ -240,6 +276,8 @@ impl Client {
             probe_images: Arc::clone(&self.probe_images),
             probe_labels: Arc::clone(&self.probe_labels),
             epoch: self.epoch,
+            attack: self.attack,
+            attack_buf: Vec::new(),
         }
     }
 
@@ -265,11 +303,20 @@ impl Client {
         self.staleness += 1;
     }
 
+    /// This client's attack profile (Benign unless the fleet's attack
+    /// table marked it malicious).
+    pub fn attack(&self) -> AttackProfile {
+        self.attack
+    }
+
     /// Encode this client's local model into the reusable wire buffer
     /// `buf` at `precision` — the upload payload the server consumes via
     /// the fused dequantize-accumulate path (no dense staging vector).
-    pub fn encode_upload(&self, precision: Precision, buf: &mut QuantBuf) {
-        buf.encode(precision, &self.params);
+    /// Malicious profiles transform the transmitted view here, after
+    /// training and before quantization.
+    pub fn encode_upload(&mut self, precision: Precision, buf: &mut QuantBuf) {
+        let view = attacked_params(self.attack, &self.params, &self.base, &mut self.attack_buf);
+        buf.encode(precision, view);
     }
 
     /// Encode the sparse top-k upload: the `k` coordinates of
@@ -286,8 +333,9 @@ impl Client {
         error_feedback: bool,
         buf: &mut SparseDelta,
     ) {
+        let view = attacked_params(self.attack, &self.params, &self.base, &mut self.attack_buf);
         let residual = error_feedback.then_some(&mut self.residual[..]);
-        buf.encode_topk(precision, &self.params, &self.base, residual, k);
+        buf.encode_topk(precision, view, &self.base, residual, k);
     }
 
     /// Per-layer variant of [`Client::encode_sparse_upload`]: the top-k
@@ -303,8 +351,9 @@ impl Client {
         error_feedback: bool,
         buf: &mut SparseDelta,
     ) {
+        let view = attacked_params(self.attack, &self.params, &self.base, &mut self.attack_buf);
         let residual = error_feedback.then_some(&mut self.residual[..]);
-        buf.encode_topk_layers(precision, &self.params, &self.base, residual, layer_sizes, ks);
+        buf.encode_topk_layers(precision, view, &self.base, residual, layer_sizes, ks);
     }
 
     /// Current error-feedback residual (tests/diagnostics).
@@ -385,6 +434,58 @@ impl Client {
             compute_seconds,
         })
     }
+}
+
+/// The parameter view an upload encode actually transmits: the honest
+/// local params for [`AttackProfile::Benign`] / [`AttackProfile::LabelFlip`]
+/// (the latter poisons data, not the wire), or the attacked view built
+/// into `scratch`. Model-poisoning profiles need the sync `base` (the
+/// update is defined relative to it) — speculative ghosts carry an empty
+/// base and never encode, which the debug assert keeps loud.
+fn attacked_params<'a>(
+    attack: AttackProfile,
+    params: &'a [f32],
+    base: &[f32],
+    scratch: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    match attack {
+        AttackProfile::Benign | AttackProfile::LabelFlip => params,
+        AttackProfile::SignFlip => {
+            debug_assert_eq!(base.len(), params.len(), "sign-flip encode without a sync base");
+            scratch.clear();
+            scratch.extend(params.iter().zip(base).map(|(&p, &b)| 2.0 * b - p));
+            scratch
+        }
+        AttackProfile::Scale { gain } => {
+            debug_assert_eq!(base.len(), params.len(), "scale encode without a sync base");
+            scratch.clear();
+            scratch.extend(params.iter().zip(base).map(|(&p, &b)| b + gain * (p - b)));
+            scratch
+        }
+        AttackProfile::Backdoor { coords, boost } => {
+            scratch.clear();
+            scratch.extend_from_slice(params);
+            let n = params.len();
+            let coords = coords.clamp(1, n);
+            let stride = (n / coords).max(1);
+            for h in 0..coords {
+                scratch[h * stride] = boost;
+            }
+            scratch
+        }
+    }
+}
+
+/// Label-flip data poisoning: every label `l` of the shard becomes
+/// `9 − l` (the synth datasets are 10-class; see `data::synth`). Applied
+/// when a [`AttackProfile::LabelFlip`] client's shard materializes, so
+/// the poison survives park/hydrate and lazy re-rendering alike.
+fn flip_labels(shard: &ClientShard) -> ClientShard {
+    let mut data = shard.data.clone();
+    for l in data.labels.iter_mut() {
+        *l = 9 - *l;
+    }
+    ClientShard { client_id: shard.client_id, data }
 }
 
 /// Compact record of a client with no work in flight (see the module
@@ -469,6 +570,9 @@ pub struct Fleet {
     profiles: [DeviceProfile; 5],
     /// Top-|budget| EF-residual coordinates kept across a park.
     residual_budget: usize,
+    /// Per-client attack profile (all Benign by default). Lives here, not
+    /// on the parked record, so it survives park/hydrate for free.
+    attacks: Vec<AttackProfile>,
     active: usize,
     peak_active: usize,
     hydrations: u64,
@@ -514,6 +618,7 @@ impl Fleet {
             root_rng,
             profiles: DeviceProfile::table(),
             residual_budget,
+            attacks: vec![AttackProfile::Benign; n],
             active: 0,
             peak_active: 0,
             hydrations: 0,
@@ -550,6 +655,21 @@ impl Fleet {
         }
     }
 
+    /// Install the per-client attack table (one profile per client, in id
+    /// order). Must be called before any client hydrates — label-flip
+    /// poisoning is applied when the shard materializes, so a profile set
+    /// after hydration would silently miss the data transform.
+    pub fn set_attacks(&mut self, attacks: Vec<AttackProfile>) {
+        assert_eq!(attacks.len(), self.slots.len(), "attack table / fleet size mismatch");
+        assert_eq!(self.active, 0, "set_attacks after hydration would miss label flips");
+        self.attacks = attacks;
+    }
+
+    /// The attack profile of client `id` (active or parked).
+    pub fn attack_of(&self, id: usize) -> AttackProfile {
+        self.attacks[id]
+    }
+
     /// Sample count n_i without hydrating (active or parked).
     pub fn num_samples(&self, id: usize) -> usize {
         match &self.slots[id] {
@@ -580,7 +700,11 @@ impl Fleet {
                 },
             ),
         };
-        let shard = self.source.shard(id);
+        let attack = self.attacks[id];
+        let shard = match attack {
+            AttackProfile::LabelFlip => Arc::new(flip_labels(&self.source.shard(id))),
+            _ => self.source.shard(id),
+        };
         let n = shard.num_samples();
         debug_assert_eq!(n, parked.num_samples as usize);
         let mut residual = vec![0.0f32; model.len()];
@@ -607,6 +731,8 @@ impl Fleet {
             probe_images: Arc::clone(&self.probe_images),
             probe_labels: Arc::clone(&self.probe_labels),
             epoch: parked.epoch + 1,
+            attack,
+            attack_buf: Vec::new(),
         };
         self.slots[id] = Slot::Active(Box::new(client));
         self.active += 1;
@@ -1107,6 +1233,104 @@ mod tests {
             assert_eq!(fleet.num_samples(id), 64);
         }
         assert!(fleet.approx_parked_bytes() > 0);
+    }
+
+    #[test]
+    fn sign_flip_encodes_reflected_update() {
+        let (mut c, mut exec) = mk_client(30);
+        c.local_round(&mut exec, 1, 1, 2, 0.5, 1, 1).unwrap();
+        c.attack = AttackProfile::SignFlip;
+        let want: Vec<f32> =
+            c.params.iter().zip(c.sync_base()).map(|(&p, &b)| 2.0 * b - p).collect();
+        let mut buf = QuantBuf::new();
+        c.encode_upload(Precision::F32, &mut buf);
+        for (i, &w) in want.iter().enumerate() {
+            assert_eq!(buf.get(i).to_bits(), w.to_bits());
+        }
+        // The local model itself is untouched — only the wire view lies.
+        c.attack = AttackProfile::Benign;
+        c.encode_upload(Precision::F32, &mut buf);
+        for (i, &p) in c.params.iter().enumerate() {
+            assert_eq!(buf.get(i).to_bits(), p.to_bits());
+        }
+    }
+
+    #[test]
+    fn scale_attack_amplifies_update_around_base() {
+        let (mut c, _) = mk_client(31);
+        let g = vec![0.5f32; c.params.len()];
+        c.sync(&g);
+        for (i, p) in c.params.iter_mut().enumerate() {
+            *p += (i % 3) as f32 * 0.125;
+        }
+        c.attack = AttackProfile::Scale { gain: 4.0 };
+        let want: Vec<f32> =
+            c.params.iter().zip(c.sync_base()).map(|(&p, &b)| b + 4.0 * (p - b)).collect();
+        let mut buf = QuantBuf::new();
+        c.encode_upload(Precision::F32, &mut buf);
+        for (i, &w) in want.iter().enumerate() {
+            assert_eq!(buf.get(i).to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn backdoor_spikes_trigger_coords_through_sparse_path() {
+        let (mut c, mut exec) = mk_client(32);
+        c.local_round(&mut exec, 1, 1, 2, 0.5, 1, 1).unwrap();
+        c.attack = AttackProfile::Backdoor { coords: 4, boost: 9.5 };
+        let n = c.params.len();
+        let stride = (n / 4).max(1);
+        let mut buf = SparseDelta::new();
+        c.encode_sparse_upload(Precision::F32, n, false, &mut buf);
+        for h in 0..4 {
+            let idx = (h * stride) as u32;
+            assert_eq!(buf.value_at(idx), Some(9.5), "trigger coord {idx} not spiked");
+        }
+        // Untouched coordinates still carry the honest params.
+        let clean = (1..n).find(|j| j % stride != 0).unwrap();
+        assert_eq!(buf.value_at(clean as u32).unwrap().to_bits(), c.params[clean].to_bits());
+    }
+
+    #[test]
+    fn label_flip_applies_at_hydration_and_survives_park() {
+        let (mut fleet, exec) = mk_fleet(33, 2, 8);
+        fleet.set_attacks(vec![AttackProfile::LabelFlip, AttackProfile::Benign]);
+        let init = vec![0.0f32; exec.param_count()];
+        fleet.hydrate_all(&init);
+        assert_eq!(fleet.attack_of(0), AttackProfile::LabelFlip);
+        assert_eq!(fleet.client(0).attack(), AttackProfile::LabelFlip);
+        assert_eq!(fleet.client(1).attack(), AttackProfile::Benign);
+        // Reference: the honest shard from an identically seeded source.
+        use crate::data::{LazyPartition, PartitionScheme};
+        let root = Rng::new(33);
+        let lazy = LazyPartition::new(
+            PartitionScheme::Iid,
+            2,
+            64,
+            &SynthConfig::default(),
+            &root.fork("data"),
+        );
+        let honest = lazy.materialize(0);
+        let flipped: Vec<i32> = fleet.client(0).shard.data.labels.clone();
+        assert_eq!(flipped.len(), honest.data.labels.len());
+        for (f, h) in flipped.iter().zip(&honest.data.labels) {
+            assert_eq!(*f, 9 - *h);
+        }
+        assert!(flipped != honest.data.labels, "flip must change at least one label");
+        // The poison is re-applied on every hydration after a park.
+        fleet.park(0);
+        fleet.hydrate(0, &init);
+        assert_eq!(fleet.client(0).attack(), AttackProfile::LabelFlip);
+        assert_eq!(fleet.client(0).shard.data.labels, flipped);
+    }
+
+    #[test]
+    fn ghost_of_attacker_keeps_profile() {
+        let (mut c, _) = mk_client(34);
+        c.attack = AttackProfile::SignFlip;
+        let ghost = c.speculate();
+        assert_eq!(ghost.attack, AttackProfile::SignFlip);
+        assert!(ghost.attack_buf.is_empty() && ghost.sync_base().is_empty());
     }
 
     #[test]

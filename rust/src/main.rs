@@ -8,6 +8,10 @@
 //!          [--compression dense|topk] [--k-fraction F]
 //!          [--error-feedback true|false]
 //!          [--down-mode dense|topk] [--down-k-fraction F]
+//!          [--down-precision f32|f16|int8]
+//!          [--robust-mode none|trimmed_mean|median] [--trim-fraction F]
+//!          [--trust on|off] [--attack none|label_flip|sign_flip|scale|backdoor]
+//!          [--attack-fraction F]
 //!          [--control on|off|staleness,compression,rebalance]
 //!          [--control-interval N] [--control-window N]
 //!          [--mock] [--out DIR] [--realtime SCALE]
@@ -120,7 +124,9 @@ fn print_usage() {
          \x20                 [--engine barriered|barrier_free] [--engine-threads N] [--shards S]\n\
          \x20                 [--reconcile-every N] [--rounds N] [--seed N] [--mock]\n\
          \x20                 [--compression dense|topk] [--k-fraction F] [--error-feedback true|false]\n\
-         \x20                 [--down-mode dense|topk] [--down-k-fraction F]\n\
+         \x20                 [--down-mode dense|topk] [--down-k-fraction F] [--down-precision f32|f16|int8]\n\
+         \x20                 [--robust-mode none|trimmed_mean|median] [--trim-fraction F] [--trust on|off]\n\
+         \x20                 [--attack none|label_flip|sign_flip|scale|backdoor] [--attack-fraction F]\n\
          \x20                 [--layer-k-fractions F1,F2,..] [--active-set N] [--edge-fanout N]\n\
          \x20                 [--compact-records] [--alpha-step F]\n\
          \x20                 [--control on|off|staleness,compression,rebalance]\n\
@@ -178,6 +184,33 @@ fn config_from_flags(flags: &Flags) -> Result<ExperimentConfig> {
     if let Some(f) = flags.get("down-k-fraction") {
         cfg.compression.down_k_fraction =
             f.parse::<f64>().with_context(|| format!("--down-k-fraction {f:?}"))?;
+    }
+    if let Some(p) = flags.get("down-precision") {
+        cfg.compression.down_precision = Some(
+            vafl::model::quant::Precision::from_name(p)
+                .with_context(|| format!("--down-precision {p:?} (f32|f16|int8)"))?,
+        );
+    }
+    if let Some(m) = flags.get("robust-mode") {
+        cfg.robust.mode = vafl::config::RobustMode::from_name(m)?;
+    }
+    if let Some(f) = flags.get("trim-fraction") {
+        cfg.robust.trim_fraction =
+            f.parse::<f64>().with_context(|| format!("--trim-fraction {f:?}"))?;
+    }
+    if let Some(t) = flags.get("trust") {
+        cfg.robust.trust = match t {
+            "true" | "on" | "1" => true,
+            "false" | "off" | "0" => false,
+            other => bail!("--trust {other:?} (on|off)"),
+        };
+    }
+    if let Some(a) = flags.get("attack") {
+        cfg.attack.mode = vafl::config::AttackMode::from_name(a)?;
+    }
+    if let Some(f) = flags.get("attack-fraction") {
+        cfg.attack.fraction =
+            f.parse::<f64>().with_context(|| format!("--attack-fraction {f:?}"))?;
     }
     if let Some(a) = flags.get("active-set") {
         cfg.fleet.active_set =

@@ -11,10 +11,10 @@ use super::RunMetrics;
 /// Write the per-round curve: one row per round.
 pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
     let mut out = String::new();
-    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl\n");
+    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl,quarantined,trust_mean\n");
     for r in &m.records {
         out.push_str(&format!(
-            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             r.round,
             r.vtime,
             fmt(r.global_acc),
@@ -33,10 +33,12 @@ pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
             r.shard,
             r.spec_committed,
             r.spec_replayed,
-            // Control-frame split appended last so existing column
-            // indices (external plotting scripts) stay stable.
+            // Later columns appended after the originals so existing
+            // column indices (external plotting scripts) stay stable.
             r.bytes_up_ctrl,
             r.bytes_down_ctrl,
+            r.quarantined,
+            fmt(r.trust_mean),
         ));
     }
     write_atomic(path.as_ref(), out.as_bytes())
@@ -138,6 +140,8 @@ mod tests {
             shard: 1,
             spec_committed: 4,
             spec_replayed: 1,
+            quarantined: 2,
+            trust_mean: f64::NAN,
         });
         m
     }
@@ -151,10 +155,10 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,vtime,acc"));
-        assert!(lines[0]
-            .ends_with("stale_mean,stale_max,shard,spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl"));
+        assert!(lines[0].ends_with("bytes_up_ctrl,bytes_down_ctrl,quarantined,trust_mean"));
         assert!(lines[1].starts_with("1,1.250000,0.500000"));
-        assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1,136,128"));
+        // NaN trust_mean formats as an empty trailing cell.
+        assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1,136,128,2,"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -72,6 +72,13 @@ pub struct RoundRecord {
     /// were replayed serially at the commit point (threaded engine; 0 on
     /// serial runs).
     pub spec_replayed: usize,
+    /// Aggregated uploads in this record whose trust multiplier was below
+    /// 1.0 when the weights were built (soft-quarantined clients). Always
+    /// 0 while trust scoring is off.
+    pub quarantined: usize,
+    /// Mean per-client trust score at flush time. NaN while trust scoring
+    /// is off — no signal, not perfect trust.
+    pub trust_mean: f64,
 }
 
 impl RoundRecord {
@@ -422,6 +429,8 @@ impl RunMetrics {
                                 ("shard", Value::from(r.shard)),
                                 ("spec_committed", Value::from(r.spec_committed)),
                                 ("spec_replayed", Value::from(r.spec_replayed)),
+                                ("quarantined", Value::from(r.quarantined)),
+                                ("trust_mean", finite_or_null(r.trust_mean)),
                                 ("threshold", finite_or_null(r.threshold)),
                                 (
                                     "selected",
@@ -499,6 +508,8 @@ mod tests {
             shard: round % 2,
             spec_committed: uploads,
             spec_replayed: round % 2,
+            quarantined: round % 2,
+            trust_mean: f64::NAN,
         }
     }
 
@@ -615,6 +626,9 @@ mod tests {
     fn json_export_has_rounds() {
         let v = run().to_json();
         assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 3);
+        let r0 = &v.get("rounds").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("quarantined").unwrap().as_usize(), Some(1));
+        assert_eq!(r0.get("trust_mean").unwrap(), &Value::Null);
         assert_eq!(v.get("comm_times_to_target").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("spec_committed").unwrap().as_usize(), Some(4));
         assert_eq!(v.get("total_bytes_up").unwrap().as_usize(), Some(300));

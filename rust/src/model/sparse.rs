@@ -301,6 +301,13 @@ impl SparseDelta {
         }
     }
 
+    /// Dequantized value at coordinate `idx`, or `None` when `idx` was not
+    /// transmitted — binary search over the sorted index block (attack /
+    /// robustness diagnostics; the hot paths walk cursors instead).
+    pub fn value_at(&self, idx: u32) -> Option<f32> {
+        self.indices.binary_search(&idx).ok().map(|pos| self.values.get(pos))
+    }
+
     /// Scatter-decode into a dense vector: transmitted coordinates are
     /// overwritten with their reconstructed values, every other
     /// coordinate is left untouched. `out.len()` must equal
@@ -543,6 +550,18 @@ mod tests {
         assert_eq!(sd.len(), 5);
         assert!(sd.indices()[0] < 6);
         assert_eq!(&sd.indices()[1..], &[6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn value_at_finds_transmitted_coords_only() {
+        let params = vec![0.0f32, 5.0, -0.1, -7.0, 0.2, 3.0];
+        let base = vec![0.0f32; 6];
+        let mut sd = SparseDelta::new();
+        sd.encode_topk(Precision::F32, &params, &base, None, 3);
+        assert_eq!(sd.value_at(1), Some(5.0));
+        assert_eq!(sd.value_at(3), Some(-7.0));
+        assert_eq!(sd.value_at(0), None);
+        assert_eq!(sd.value_at(4), None);
     }
 
     #[test]

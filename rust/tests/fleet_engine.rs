@@ -176,6 +176,73 @@ fn active_set_serial_matches_threaded() {
 }
 
 // ---------------------------------------------------------------------------
+// Dropout x rotation: offline timers interleaved with park/hydrate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropout_composes_with_active_set_rotation() {
+    // A client can be offline (registry timer running) while parked, or
+    // go offline right after hydrating; the rotation queue and the
+    // availability chain advance independently and the run must stay
+    // deterministic and well-formed through both.
+    let mut cfg = fleet_base(1, 12);
+    cfg.algorithm = Algorithm::Afl;
+    cfg.fleet.active_set = 3;
+    cfg.dropout = vafl::coordinator::DropoutModel { drop_prob: 0.3, mean_offline_rounds: 2.0 };
+    let a = experiments::run(&cfg).unwrap();
+    let b = experiments::run(&cfg).unwrap();
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_equal(x, y);
+    }
+    assert_eq!(a.metrics.fleet_parks, b.metrics.fleet_parks);
+    assert!(a.metrics.peak_active <= 3, "window exceeded active_set");
+    assert!(a.metrics.fleet_parks > 0, "rotation never cycled under dropout");
+    for r in &a.metrics.records {
+        assert!(r.vtime.is_finite());
+        assert!(r.global_acc.is_nan() || (0.0..=1.0).contains(&r.global_acc));
+    }
+    // Dropout actually perturbed the schedule vs the always-up window.
+    let mut up_cfg = cfg.clone();
+    up_cfg.dropout = vafl::coordinator::DropoutModel::none();
+    let up = experiments::run(&up_cfg).unwrap();
+    let same = a
+        .metrics
+        .records
+        .iter()
+        .zip(&up.metrics.records)
+        .all(|(x, y)| x.vtime.to_bits() == y.vtime.to_bits());
+    assert!(!same, "dropout had no effect on the committed stream");
+}
+
+#[test]
+fn dropout_with_rotation_serial_matches_threaded() {
+    // Offline retries reschedule through the event queue; speculative
+    // dispatch must not let a worker race a timer into a different
+    // commit order — the stream stays execution-strategy invariant,
+    // unsharded and sharded.
+    for shards in [1usize, 2] {
+        let mut scfg = fleet_base(shards, 10);
+        scfg.algorithm = Algorithm::Afl;
+        scfg.fleet.active_set = 3;
+        scfg.dropout =
+            vafl::coordinator::DropoutModel { drop_prob: 0.25, mean_offline_rounds: 2.0 };
+        let serial = experiments::run(&scfg).unwrap();
+        let mut tcfg = scfg.clone();
+        tcfg.engine_opts.threaded = true;
+        tcfg.engine_opts.workers = 4;
+        let threaded = experiments::run(&tcfg).unwrap();
+        assert_eq!(serial.metrics.records.len(), threaded.metrics.records.len());
+        for (x, y) in serial.metrics.records.iter().zip(&threaded.metrics.records) {
+            assert_records_equal(x, y);
+        }
+        assert_eq!(serial.metrics.engine_events, threaded.metrics.engine_events);
+        assert_eq!(serial.metrics.fleet_hydrations, threaded.metrics.fleet_hydrations);
+        assert_eq!(serial.metrics.fleet_parks, threaded.metrics.fleet_parks);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Two-tier (edge) aggregation
 // ---------------------------------------------------------------------------
 

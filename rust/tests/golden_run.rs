@@ -18,8 +18,8 @@ use std::fmt::Write as _;
 use std::path::PathBuf;
 
 use vafl::config::{
-    Algorithm, AsyncEngineConfig, Backend, CompressionConfig, CompressionMode, ControlConfig,
-    EngineMode, ExperimentConfig,
+    Algorithm, AsyncEngineConfig, AttackConfig, AttackMode, Backend, CompressionConfig,
+    CompressionMode, ControlConfig, EngineMode, ExperimentConfig, RobustConfig, RobustMode,
 };
 use vafl::coordinator::MixingRule;
 use vafl::experiments;
@@ -266,6 +266,45 @@ fn golden_barrier_free_adaptive_round_stream_is_stable() {
     };
     vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
     run_snapshot("barrier_free_adaptive", &cfg);
+}
+
+#[test]
+fn golden_barrier_free_robust_round_stream_is_stable() {
+    // Pins the robust aggregation numerics end to end: the trimmed-mean
+    // sorted-cursor merge, trust-book EWMA trajectories, soft-quarantine
+    // weighting, and the attack simulator's seed-derived sign-flip
+    // assignment. Uses experiment b's 7-client fleet with buffer_k = 4 so
+    // flushes carry 5 lanes (4 uploads + prior) and trim 0.25 actually
+    // drops one lane per end.
+    let mut cfg = experiments::preset('b').unwrap();
+    cfg.algorithm = Algorithm::Vafl;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = 6;
+    cfg.samples_per_client = 96;
+    cfg.test_samples = 64;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    cfg.seed = 2021;
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 4,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.robust = RobustConfig {
+        mode: RobustMode::TrimmedMean,
+        trim_fraction: 0.25,
+        trust: true,
+        ..Default::default()
+    };
+    cfg.attack = AttackConfig {
+        mode: AttackMode::SignFlip,
+        fraction: 0.1,
+        ..Default::default()
+    };
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    run_snapshot("barrier_free_robust", &cfg);
 }
 
 #[test]

@@ -1,0 +1,390 @@
+//! Robust aggregation tests: the trimmed-mean / median merge degenerates
+//! bitwise to FedAvg when disarmed (mode off, or trim = 0 with trust
+//! disarmed) across engines x threading x shards, stays deterministic and
+//! thread-count invariant when armed, actually recovers accuracy under
+//! model poisoning, and the trust book soft-quarantines attackers without
+//! touching clean runs.
+
+use vafl::config::{
+    Algorithm, AsyncEngineConfig, AttackConfig, AttackMode, Backend, CompressionConfig,
+    CompressionMode, EngineMode, ExperimentConfig, RobustConfig, RobustMode,
+};
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::metrics::RoundRecord;
+
+fn quick(which: char, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = Algorithm::Vafl;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 120;
+    cfg.test_samples = 96;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+/// Barrier-free base on experiment b's 7-client fleet with buffer_k = 4:
+/// flushes carry 5 lanes (4 uploads + prior), so `trim = 0.25` drops one
+/// lane per end instead of degenerating.
+fn robust_base(shards: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = quick('b', rounds);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 4,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.engine_opts.shards = shards;
+    cfg.engine_opts.reconcile_every = 3;
+    cfg
+}
+
+/// Full bitwise record equality, including the new robustness columns.
+fn assert_records_identical(x: &RoundRecord, y: &RoundRecord) {
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.shard, y.shard, "round {}", x.round);
+    assert_eq!(x.vtime.to_bits(), y.vtime.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.threshold.to_bits(), y.threshold.to_bits(), "round {}", x.round);
+    assert_eq!(x.idle_seconds.to_bits(), y.idle_seconds.to_bits(), "round {}", x.round);
+    assert_eq!(x.trust_mean.to_bits(), y.trust_mean.to_bits(), "round {}", x.round);
+    assert_eq!(x.quarantined, y.quarantined, "round {}", x.round);
+    assert_eq!(x.uploads, y.uploads);
+    assert_eq!(x.cum_uploads, y.cum_uploads);
+    assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+    assert_eq!(x.reports, y.reports);
+    assert_eq!(x.in_flight, y.in_flight);
+    assert_eq!(x.selected, y.selected);
+    assert_eq!(x.upload_staleness, y.upload_staleness);
+    let vb = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    assert_eq!(vb(&x.values), vb(&y.values), "round {}", x.round);
+    assert_eq!(vb(&x.client_accs), vb(&y.client_accs), "round {}", x.round);
+}
+
+fn assert_runs_identical(a: &vafl::experiments::Outcome, b: &vafl::experiments::Outcome) {
+    assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+    for (x, y) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_records_identical(x, y);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Disarmed robust aggregation is bitwise FedAvg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trim_zero_is_bitwise_fedavg_barrier_free() {
+    // `mode = trimmed_mean, trim = 0, trust = off` routes through the
+    // robust merge but must reproduce the plain fused path bit for bit —
+    // including the mixed (abar < 1) branch, where the robust path feeds
+    // the prior as a lane weight instead of a trailing payload slot.
+    // Dense and sparse, serial and threaded, shards 1 and 4.
+    for shards in [1usize, 4] {
+        for threaded in [false, true] {
+            for topk in [false, true] {
+                let mut plain = robust_base(shards, 8);
+                if threaded {
+                    plain.engine_opts.threaded = true;
+                    plain.engine_opts.workers = 4;
+                }
+                if topk {
+                    plain.compression = CompressionConfig {
+                        mode: CompressionMode::TopK,
+                        k_fraction: 0.5,
+                        error_feedback: true,
+                        ..Default::default()
+                    };
+                }
+                let mut robust = plain.clone();
+                robust.robust = RobustConfig {
+                    mode: RobustMode::TrimmedMean,
+                    trim_fraction: 0.0,
+                    trust: false,
+                    ..Default::default()
+                };
+                let a = experiments::run(&plain).unwrap();
+                let b = experiments::run(&robust).unwrap();
+                assert_runs_identical(&a, &b);
+                for r in &b.metrics.records {
+                    assert_eq!(r.quarantined, 0, "disarmed run quarantined someone");
+                    assert!(r.trust_mean.is_nan(), "disarmed run reported trust");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn trim_zero_is_bitwise_fedavg_barriered() {
+    let mut plain = quick('b', 6);
+    plain.engine = EngineMode::Barriered;
+    let mut robust = plain.clone();
+    robust.robust = RobustConfig {
+        mode: RobustMode::TrimmedMean,
+        trim_fraction: 0.0,
+        trust: false,
+        ..Default::default()
+    };
+    let a = experiments::run(&plain).unwrap();
+    let b = experiments::run(&robust).unwrap();
+    assert_runs_identical(&a, &b);
+}
+
+// ---------------------------------------------------------------------------
+// Armed robust modes: deterministic, thread-count invariant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn robust_modes_are_deterministic_and_thread_invariant() {
+    for mode in [RobustMode::TrimmedMean, RobustMode::Median] {
+        for shards in [1usize, 4] {
+            let mut cfg = robust_base(shards, 8);
+            cfg.robust = RobustConfig {
+                mode,
+                trim_fraction: 0.25,
+                trust: true,
+                ..Default::default()
+            };
+            cfg.attack =
+                AttackConfig { mode: AttackMode::SignFlip, fraction: 0.15, ..Default::default() };
+            let a = experiments::run(&cfg).unwrap();
+            let b = experiments::run(&cfg).unwrap();
+            assert_runs_identical(&a, &b);
+            let mut tcfg = cfg.clone();
+            tcfg.engine_opts.threaded = true;
+            tcfg.engine_opts.workers = 4;
+            let threaded = experiments::run(&tcfg).unwrap();
+            assert_runs_identical(&a, &threaded);
+        }
+    }
+}
+
+#[test]
+fn robust_aggregation_changes_the_stream_when_armed() {
+    // With trim > 0 the merge really is a different estimator: the
+    // committed stream must diverge from FedAvg even without any attack.
+    let base = robust_base(1, 8);
+    let plain = experiments::run(&base).unwrap();
+    let mut rcfg = base.clone();
+    rcfg.robust =
+        RobustConfig { mode: RobustMode::TrimmedMean, trim_fraction: 0.25, ..Default::default() };
+    let robust = experiments::run(&rcfg).unwrap();
+    let same = plain
+        .metrics
+        .records
+        .iter()
+        .zip(&robust.metrics.records)
+        .all(|(x, y)| x.global_loss.to_bits() == y.global_loss.to_bits());
+    assert!(!same, "trim 0.25 left the model stream untouched");
+}
+
+// ---------------------------------------------------------------------------
+// Poisoning recovery + trust quarantine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trimmed_mean_recovers_accuracy_under_scale_attack() {
+    // One scale-25 attacker out of 7 clients wrecks plain FedAvg; the
+    // trimmed mean drops the extreme lane per coordinate and must do at
+    // least as well as the poisoned FedAvg run.
+    let mut fedavg = robust_base(1, 10);
+    fedavg.attack = AttackConfig {
+        mode: AttackMode::Scale,
+        fraction: 0.15,
+        scale: 25.0,
+        ..Default::default()
+    };
+    let mut trimmed = fedavg.clone();
+    trimmed.robust =
+        RobustConfig { mode: RobustMode::TrimmedMean, trim_fraction: 0.25, ..Default::default() };
+    let f = experiments::run(&fedavg).unwrap();
+    let t = experiments::run(&trimmed).unwrap();
+    assert!(
+        t.best_accuracy >= f.best_accuracy,
+        "trimmed mean under attack ({}) did worse than poisoned FedAvg ({})",
+        t.best_accuracy,
+        f.best_accuracy
+    );
+}
+
+#[test]
+fn trust_soft_quarantines_attackers() {
+    let mut cfg = robust_base(1, 10);
+    // Threshold 0.3: the attacker's near-1.0 outlier rate crosses it
+    // after two flush appearances (EWMA decay 0.8), leaving plenty of
+    // later flushes to observe the quarantined weight.
+    cfg.robust = RobustConfig {
+        mode: RobustMode::TrimmedMean,
+        trim_fraction: 0.25,
+        trust: true,
+        trust_threshold: 0.3,
+        ..Default::default()
+    };
+    cfg.attack = AttackConfig {
+        mode: AttackMode::Scale,
+        fraction: 0.15,
+        scale: 25.0,
+        ..Default::default()
+    };
+    let out = experiments::run(&cfg).unwrap();
+    assert!(
+        out.metrics.records.iter().any(|r| r.quarantined > 0),
+        "the scale attacker was never quarantined"
+    );
+    assert!(
+        out.metrics.records.iter().any(|r| r.trust_mean.is_finite()),
+        "trust_mean never reported while armed"
+    );
+    // A clean armed run must keep everyone's weight intact.
+    let mut clean = cfg.clone();
+    clean.attack = AttackConfig::default();
+    let c = experiments::run(&clean).unwrap();
+    let total: usize = c.metrics.records.iter().map(|r| r.quarantined).sum();
+    assert_eq!(total, 0, "clean clients were quarantined");
+}
+
+#[test]
+fn trust_controller_tunes_the_threshold_online() {
+    // With the control plane on and a sustained outlier signal from the
+    // scale attacker, the trust controller must tighten
+    // `robust.trust_threshold` and log the knob change.
+    let mut cfg = robust_base(1, 12);
+    cfg.robust = RobustConfig {
+        mode: RobustMode::TrimmedMean,
+        trim_fraction: 0.25,
+        trust: true,
+        ..Default::default()
+    };
+    cfg.attack = AttackConfig {
+        mode: AttackMode::Scale,
+        fraction: 0.15,
+        scale: 25.0,
+        ..Default::default()
+    };
+    cfg.control.enabled = true;
+    cfg.control.staleness = false;
+    cfg.control.compression = false;
+    cfg.control.rebalance = false;
+    cfg.control.interval = 2;
+    cfg.control.window = 4;
+    let out = experiments::run(&cfg).unwrap();
+    let tuned: Vec<_> = out
+        .metrics
+        .control_records
+        .iter()
+        .filter(|c| c.knob == "trust_threshold")
+        .collect();
+    assert!(!tuned.is_empty(), "trust controller never fired");
+    for c in &tuned {
+        assert_eq!(c.controller, "trust");
+        assert!(c.new < c.old, "outlier pressure should tighten the threshold");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Attacks survive fleet rotation; label flip poisons at hydration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn attacks_survive_park_hydrate_rotation() {
+    // A compromised client keeps its profile across park/hydrate cycles:
+    // the trust book must still catch it in a rotating active-set window.
+    let mut cfg = robust_base(1, 14);
+    cfg.algorithm = Algorithm::Afl;
+    // Window of 5 keeps the 4-upload buffer fillable while still leaving
+    // two clients parked to rotate through.
+    cfg.fleet.active_set = 5;
+    cfg.robust = RobustConfig {
+        mode: RobustMode::TrimmedMean,
+        trim_fraction: 0.25,
+        trust: true,
+        trust_threshold: 0.3,
+        ..Default::default()
+    };
+    cfg.attack = AttackConfig {
+        mode: AttackMode::Scale,
+        fraction: 0.15,
+        scale: 25.0,
+        ..Default::default()
+    };
+    let a = experiments::run(&cfg).unwrap();
+    let b = experiments::run(&cfg).unwrap();
+    assert_runs_identical(&a, &b);
+    assert!(a.metrics.fleet_parks > 0, "rotation never cycled");
+    assert!(
+        a.metrics.records.iter().any(|r| r.quarantined > 0),
+        "rotation laundered the attacker's trust score"
+    );
+}
+
+#[test]
+fn label_flip_poisons_at_hydration_and_runs_clean() {
+    // Data poisoning flows through shard materialization (not the wire),
+    // so the run must complete deterministically with well-formed records
+    // and a different stream than the honest run.
+    let mut cfg = robust_base(1, 8);
+    cfg.attack =
+        AttackConfig { mode: AttackMode::LabelFlip, fraction: 0.3, ..Default::default() };
+    let a = experiments::run(&cfg).unwrap();
+    let b = experiments::run(&cfg).unwrap();
+    assert_runs_identical(&a, &b);
+    for r in &a.metrics.records {
+        assert!(r.vtime.is_finite());
+        assert!(r.global_acc.is_nan() || (0.0..=1.0).contains(&r.global_acc));
+    }
+    let honest = experiments::run(&robust_base(1, 8)).unwrap();
+    let same = a
+        .metrics
+        .records
+        .iter()
+        .zip(&honest.metrics.records)
+        .all(|(x, y)| x.global_loss.to_bits() == y.global_loss.to_bits());
+    assert!(!same, "label flip had no effect on the stream");
+}
+
+// ---------------------------------------------------------------------------
+// Downlink precision (satellite): byte accounting + clean composition
+// ---------------------------------------------------------------------------
+
+#[test]
+fn down_precision_shrinks_broadcast_bytes() {
+    use vafl::model::quant::Precision;
+    let base = robust_base(1, 8);
+    let full = experiments::run(&base).unwrap();
+    let mut half = base.clone();
+    half.compression.down_precision = Some(Precision::F16);
+    let h = experiments::run(&half).unwrap();
+    let (fb, hb) = (full.metrics.total_bytes_down(), h.metrics.total_bytes_down());
+    assert!(hb < fb, "f16 downlink did not shrink bytes_down: {hb} vs {fb}");
+    // An explicit f32 override prices identically to the default.
+    let mut explicit = base.clone();
+    explicit.compression.down_precision = Some(Precision::F32);
+    let e = experiments::run(&explicit).unwrap();
+    assert_runs_identical(&full, &e);
+}
+
+#[test]
+fn down_precision_composes_with_robust_modes() {
+    let mut cfg = robust_base(1, 8);
+    cfg.compression.down_precision = Some(vafl::model::quant::Precision::F16);
+    cfg.robust = RobustConfig {
+        mode: RobustMode::Median,
+        trust: true,
+        ..Default::default()
+    };
+    cfg.attack =
+        AttackConfig { mode: AttackMode::SignFlip, fraction: 0.15, ..Default::default() };
+    let a = experiments::run(&cfg).unwrap();
+    let mut tcfg = cfg.clone();
+    tcfg.engine_opts.threaded = true;
+    tcfg.engine_opts.workers = 4;
+    let threaded = experiments::run(&tcfg).unwrap();
+    assert_runs_identical(&a, &threaded);
+}

@@ -33,6 +33,12 @@ cargo fmt --check
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+# Examples and benches are plain binaries that `cargo test` never builds;
+# a standalone check keeps them compiling even when clippy's target cache
+# is warm enough to skip them.
+echo "== cargo check --examples --benches =="
+cargo check --examples --benches
+
 if [[ "${1:-}" != "--no-tests" ]]; then
     echo "== cargo test -q =="
     if ! cargo test -q; then
@@ -44,14 +50,15 @@ if [[ "${1:-}" != "--no-tests" ]]; then
     # the serial engine, the sparse top-k path must stay bitwise dense at
     # k_fraction = 1.0 — in BOTH directions: uploads (sparse) and
     # broadcasts (broadcast) — the adaptive control plane must be inert
-    # when off and thread-count invariant when on, and the golden
-    # snapshots (including the topk, bidir, and adaptive ones — the
-    # adaptive snapshot's `control` lines pin the ControlRecord stream,
-    # so controller drift diffs here) must hold, at both ends of the
-    # parallel-kernel worker range.
+    # when off and thread-count invariant when on, the robust merge must
+    # stay bitwise FedAvg when disarmed and thread-count invariant when
+    # armed, and the golden snapshots (including the topk, bidir,
+    # adaptive, and robust ones — the adaptive snapshot's `control` lines
+    # pin the ControlRecord stream, so controller drift diffs here) must
+    # hold, at both ends of the parallel-kernel worker range.
     for t in 1 4; do
-        echo "== VAFL_THREADS=$t engine equivalence + sparse + broadcast + control + golden =="
-        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test broadcast --test control --test golden_run; then
+        echo "== VAFL_THREADS=$t engine equivalence + sparse + broadcast + control + robust + golden =="
+        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test broadcast --test control --test robust --test golden_run; then
             dump_golden_drift
             exit 1
         fi
@@ -62,7 +69,7 @@ if [[ "${1:-}" != "--no-tests" ]]; then
     # files are committed.
     missing=0
     for g in barriered barrier_free barrier_free_topk barrier_free_bidir \
-             barrier_free_adaptive barrier_free_sharded; do
+             barrier_free_adaptive barrier_free_sharded barrier_free_robust; do
         if ! git ls-files --error-unmatch "tests/golden/$g.golden" >/dev/null 2>&1; then
             echo "NOTE: golden snapshot tests/golden/$g.golden is not committed yet —"
             echo "      this run (re)generated it; commit it from the CI reference"
