@@ -1,0 +1,220 @@
+//! Bench: fault injection and crash recovery.
+//!
+//!     cargo bench --bench faults [-- --json]
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 40), VAFL_BENCH_MOCK=1.
+//!
+//! Two sections:
+//!
+//! 1. A fault-intensity grid on experiment b's 7-client fleet under the
+//!    straggler-heavy WAN with the barrier-free engine: clean / light /
+//!    moderate / heavy plans. Per row: best/final accuracy,
+//!    rounds-to-target, final virtual time, total uplink bytes (the
+//!    retransmit + duplicate wire tax), and the six fault counters —
+//!    showing what the recovery machinery costs and that training still
+//!    converges through it.
+//!
+//! 2. Checkpoint overhead: the same moderate-fault run at
+//!    `checkpoint_every` in {0, 4, 1}, reporting wall time per run and
+//!    the serialized checkpoint size, plus a kill/restore smoke check
+//!    (resumed final accuracy bitwise equal to the uninterrupted run).
+//!
+//! `--json` (or `VAFL_BENCH_JSON=1`) writes every row to
+//! `BENCH_faults.json`.
+
+mod common;
+
+use vafl::config::{AsyncEngineConfig, EngineMode, ExperimentConfig, FaultConfig};
+use vafl::coordinator::MixingRule;
+use vafl::experiments::{self, straggler};
+use vafl::metrics::FaultCounters;
+use vafl::util::json::{obj, Value};
+
+fn base_cfg() -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = straggler::straggler_config(&experiments::preset('b')?);
+    common::apply_env(&mut cfg, 40);
+    cfg.target_acc = cfg.target_acc.min(0.5);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    Ok(cfg)
+}
+
+fn plan(name: &str) -> FaultConfig {
+    match name {
+        "clean" => FaultConfig::default(),
+        "light" => FaultConfig {
+            enabled: true,
+            loss_prob: 0.05,
+            corrupt_prob: 0.01,
+            dup_prob: 0.02,
+            down_loss_prob: 0.02,
+            reorder_prob: 0.1,
+            reorder_window: 0.25,
+            ..Default::default()
+        },
+        "moderate" => FaultConfig {
+            enabled: true,
+            loss_prob: 0.15,
+            corrupt_prob: 0.05,
+            dup_prob: 0.10,
+            down_loss_prob: 0.10,
+            down_corrupt_prob: 0.05,
+            reorder_prob: 0.2,
+            reorder_window: 0.5,
+            max_retransmits: 3,
+            crash_prob: 0.01,
+            crash_downtime: 2.0,
+            ..Default::default()
+        },
+        "heavy" => FaultConfig {
+            enabled: true,
+            loss_prob: 0.30,
+            corrupt_prob: 0.10,
+            dup_prob: 0.15,
+            down_loss_prob: 0.20,
+            down_corrupt_prob: 0.10,
+            reorder_prob: 0.4,
+            reorder_window: 1.0,
+            max_retransmits: 4,
+            crash_prob: 0.03,
+            crash_downtime: 4.0,
+            outage_every: 60.0,
+            outage_len: 4.0,
+            ..Default::default()
+        },
+        other => panic!("unknown plan {other}"),
+    }
+}
+
+fn totals(m: &vafl::metrics::RunMetrics) -> FaultCounters {
+    let mut t = FaultCounters::default();
+    for r in &m.records {
+        t.add(&r.faults);
+    }
+    t
+}
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let want_json =
+        std::env::args().any(|a| a == "--json") || std::env::var("VAFL_BENCH_JSON").is_ok();
+    let mut rows: Vec<Value> = Vec::new();
+
+    common::section("Fault-intensity grid (straggler_wan, barrier-free, buffer 2)");
+    println!(
+        "{:<10} {:>9} {:>10} {:>12} {:>12} {:>7} {:>6} {:>7} {:>5} {:>7} {:>6}",
+        "plan", "best_acc", "final_acc", "vtime_final", "bytes_up", "retx", "lost", "corrupt",
+        "dup", "resync", "recov"
+    );
+    for name in ["clean", "light", "moderate", "heavy"] {
+        let mut cfg = base_cfg()?;
+        cfg.faults = plan(name);
+        let out = experiments::run(&cfg)?;
+        let t = totals(&out.metrics);
+        let vtime = out.metrics.records.last().map_or(0.0, |r| r.vtime);
+        let bytes_up = out.metrics.total_bytes_up();
+        println!(
+            "{:<10} {:>9.4} {:>10.4} {:>12.1} {:>12} {:>7} {:>6} {:>7} {:>5} {:>7} {:>6}",
+            name,
+            out.best_accuracy,
+            out.final_accuracy,
+            vtime,
+            bytes_up,
+            t.retransmits,
+            t.frames_lost,
+            t.frames_corrupt,
+            t.dup_suppressed,
+            t.resyncs,
+            t.recoveries,
+        );
+        rows.push(obj(vec![
+            ("section", Value::Str("fault_grid".into())),
+            ("plan", Value::Str(name.into())),
+            ("best_acc", Value::from(out.best_accuracy)),
+            ("final_acc", Value::from(out.final_accuracy)),
+            (
+                "rounds_to_target",
+                out.metrics.rounds_to_target().map(Value::from).unwrap_or(Value::Null),
+            ),
+            ("vtime_final", Value::from(vtime)),
+            ("bytes_up_total", Value::from(bytes_up as usize)),
+            ("retransmits", Value::from(t.retransmits as usize)),
+            ("frames_lost", Value::from(t.frames_lost as usize)),
+            ("frames_corrupt", Value::from(t.frames_corrupt as usize)),
+            ("dup_suppressed", Value::from(t.dup_suppressed as usize)),
+            ("resyncs", Value::from(t.resyncs as usize)),
+            ("recoveries", Value::from(t.recoveries as usize)),
+            ("link_capped", Value::from(out.metrics.link_capped as usize)),
+        ]));
+    }
+
+    common::section("Checkpoint overhead (moderate faults)");
+    println!("{:<18} {:>10} {:>12}", "checkpoint_every", "wall_ms", "ckpt_bytes");
+    let mut ckpt_bytes_at_1 = 0usize;
+    for every in [0usize, 4, 1] {
+        let mut cfg = base_cfg()?;
+        cfg.faults = FaultConfig { checkpoint_every: every, ..plan("moderate") };
+        let t0 = std::time::Instant::now();
+        let (mut server, mut exec) = experiments::build(&cfg)?;
+        server.run_event_driven(exec.as_mut())?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let ckpt = server.checkpoint_bytes().map_or(0, |b| b.len());
+        if every == 1 {
+            ckpt_bytes_at_1 = ckpt;
+        }
+        println!("{every:<18} {wall_ms:>10.1} {ckpt:>12}");
+        rows.push(obj(vec![
+            ("section", Value::Str("checkpoint_overhead".into())),
+            ("checkpoint_every", Value::from(every)),
+            ("wall_ms", Value::from(wall_ms)),
+            ("ckpt_bytes", Value::from(ckpt)),
+        ]));
+    }
+
+    // Kill/restore smoke check: resume from the mid-run checkpoint and
+    // demand the committed stream converges to the identical final state.
+    let mut cfg = base_cfg()?;
+    cfg.faults = FaultConfig { checkpoint_every: 1, ..plan("moderate") };
+    let (mut full, mut ef) = experiments::build(&cfg)?;
+    full.run_event_driven(ef.as_mut())?;
+    let stop = (cfg.rounds / 2).max(1);
+    let (mut killed, mut ek) = experiments::build(&cfg)?;
+    killed.stop_after(stop);
+    killed.run_event_driven(ek.as_mut())?;
+    let blob = killed.checkpoint_bytes().expect("checkpoint after stop_after").to_vec();
+    let (mut resumed, mut er) = experiments::build(&cfg)?;
+    resumed.restore_checkpoint(&blob);
+    resumed.run_event_driven(er.as_mut())?;
+    let (a, b) = (
+        full.metrics.records.last().expect("full run empty"),
+        resumed.metrics.records.last().expect("resumed run empty"),
+    );
+    let identical = a.vtime.to_bits() == b.vtime.to_bits()
+        && a.global_acc.to_bits() == b.global_acc.to_bits()
+        && full.metrics.records.len() == resumed.metrics.records.len();
+    println!(
+        "kill@{stop}/restore: {} (final vtime {:.1}, acc {:.4}, ckpt {} B)",
+        if identical { "bitwise-identical resume OK" } else { "MISMATCH" },
+        a.vtime,
+        a.global_acc,
+        ckpt_bytes_at_1,
+    );
+    assert!(identical, "kill/restore diverged from the uninterrupted run");
+    rows.push(obj(vec![
+        ("section", Value::Str("kill_restore".into())),
+        ("stop_after", Value::from(stop)),
+        ("identical", Value::from(identical)),
+        ("ckpt_bytes", Value::from(blob.len())),
+    ]));
+
+    if want_json {
+        let doc = obj(vec![("bench", Value::Str("faults".into())), ("rows", Value::Arr(rows))]);
+        std::fs::write("BENCH_faults.json", doc.to_string_pretty())?;
+        println!("wrote BENCH_faults.json");
+    }
+    Ok(())
+}

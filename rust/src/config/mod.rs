@@ -325,6 +325,19 @@ pub struct ControlConfig {
     pub trust_threshold_max: f64,
     /// Additive step of the trust controller's threshold moves, in (0, 1).
     pub trust_step: f64,
+    /// Adaptive trim controller enable (effective only with
+    /// `enabled = true` and `robust.mode = trimmed_mean`): drive the
+    /// window's mean outlier rate into `trim_target ± trim_deadband` by
+    /// stepping `robust.trim_fraction` within `[trim_min, trim_max]` —
+    /// widening the trim under heavy outlier pressure, relaxing it toward
+    /// `trim_min` when the fleet looks clean.
+    pub trim: bool,
+    pub trim_target: f64,
+    pub trim_deadband: f64,
+    pub trim_min: f64,
+    pub trim_max: f64,
+    /// Additive step of the trim controller's moves, in (0, 0.5).
+    pub trim_step: f64,
 }
 
 impl Default for ControlConfig {
@@ -355,6 +368,12 @@ impl Default for ControlConfig {
             trust_threshold_min: 0.1,
             trust_threshold_max: 0.9,
             trust_step: 0.05,
+            trim: true,
+            trim_target: 0.15,
+            trim_deadband: 0.05,
+            trim_min: 0.0,
+            trim_max: 0.45,
+            trim_step: 0.05,
         }
     }
 }
@@ -437,6 +456,27 @@ impl ControlConfig {
         }
         if !(self.trust_step.is_finite() && 0.0 < self.trust_step && self.trust_step < 1.0) {
             bail!("control.trust_step must be in (0, 1), got {}", self.trust_step);
+        }
+        if !(self.trim_target.is_finite() && (0.0..=1.0).contains(&self.trim_target)) {
+            bail!("control.trim_target must be in [0, 1], got {}", self.trim_target);
+        }
+        if !(self.trim_deadband.is_finite() && self.trim_deadband >= 0.0) {
+            bail!("control.trim_deadband must be finite and >= 0, got {}", self.trim_deadband);
+        }
+        if !(self.trim_min.is_finite()
+            && self.trim_max.is_finite()
+            && 0.0 <= self.trim_min
+            && self.trim_min <= self.trim_max
+            && self.trim_max < 0.5)
+        {
+            bail!(
+                "control trim bounds must satisfy 0 <= trim_min <= trim_max < 0.5, got [{}, {}]",
+                self.trim_min,
+                self.trim_max
+            );
+        }
+        if !(self.trim_step.is_finite() && 0.0 < self.trim_step && self.trim_step < 0.5) {
+            bail!("control.trim_step must be in (0, 0.5), got {}", self.trim_step);
         }
         Ok(())
     }
@@ -630,6 +670,151 @@ impl Default for FleetConfig {
     }
 }
 
+/// Deterministic fault injection — TOML section `[faults]` (see
+/// `netsim::FaultPlan` for the draw discipline and `coordinator::server`
+/// for the recovery machinery). With `enabled = false` (the default) no
+/// fault stream is ever consumed, no integrity header is charged, and both
+/// engines are bitwise identical to previous builds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch for the whole fault layer.
+    pub enabled: bool,
+    /// Per-uplink-frame terminal loss probability (the frame never
+    /// arrives; sender times out, backs off, retransmits).
+    pub loss_prob: f64,
+    /// Per-uplink-frame corruption probability (frame arrives, integrity
+    /// checksum fails, receiver discards it; same retransmit path as loss
+    /// but counted separately).
+    pub corrupt_prob: f64,
+    /// Per-uplink-frame duplication probability (a stale copy arrives
+    /// after the original; suppressed via the per-client sequence number
+    /// but still charged on the wire).
+    pub dup_prob: f64,
+    /// Per-broadcast-frame terminal loss probability (client NACKs and is
+    /// force-fed a dense resync through the `ack_dense` path).
+    pub down_loss_prob: f64,
+    /// Per-broadcast-frame corruption probability (checksum mismatch at
+    /// the client; same NACK + dense resync, counted separately).
+    pub down_corrupt_prob: f64,
+    /// Probability a delivered uplink frame is held for a reordering
+    /// window before arriving.
+    pub reorder_prob: f64,
+    /// Maximum extra delay of a reordered frame, seconds.
+    pub reorder_window: f64,
+    /// Retransmits the sender attempts after the original frame before
+    /// giving the round up (the client then marks itself stale and
+    /// reschedules; 0 = give up immediately).
+    pub max_retransmits: u32,
+    /// First retransmit backoff, seconds; doubles per attempt.
+    pub backoff_base: f64,
+    /// Upper bound on any single backoff, seconds.
+    pub backoff_cap: f64,
+    /// Per-scheduling-point client crash probability (barrier-free engine
+    /// only: the client is parked on the spot, losing local state, and
+    /// rehydrates as a fresh joiner after `crash_downtime`).
+    pub crash_prob: f64,
+    /// Seconds a crashed client stays down before rejoining.
+    pub crash_downtime: f64,
+    /// Server outage cadence, seconds (0 = no outages). Windows open at
+    /// `outage_every, 2·outage_every, ...` and last `outage_len` seconds;
+    /// every uplink frame landing inside one is lost.
+    pub outage_every: f64,
+    /// Length of each server outage window, seconds.
+    pub outage_len: f64,
+    /// Write a full engine-state checkpoint every this many committed
+    /// flushes (barrier-free) or rounds (barriered); 0 = no checkpoints.
+    /// Kill-at-checkpoint + restore resumes bitwise (see
+    /// `Server::checkpoint_bytes` / `Server::restore_checkpoint`).
+    pub checkpoint_every: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            loss_prob: 0.0,
+            corrupt_prob: 0.0,
+            dup_prob: 0.0,
+            down_loss_prob: 0.0,
+            down_corrupt_prob: 0.0,
+            reorder_prob: 0.0,
+            reorder_window: 0.25,
+            max_retransmits: 5,
+            backoff_base: 0.05,
+            backoff_cap: 2.0,
+            crash_prob: 0.0,
+            crash_downtime: 5.0,
+            outage_every: 0.0,
+            outage_len: 0.0,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Validate bounds (always, like `ControlConfig::validate`: a bad
+    /// `[faults]` section fails loudly even when disabled).
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("faults.loss_prob", self.loss_prob),
+            ("faults.corrupt_prob", self.corrupt_prob),
+            ("faults.dup_prob", self.dup_prob),
+            ("faults.down_loss_prob", self.down_loss_prob),
+            ("faults.down_corrupt_prob", self.down_corrupt_prob),
+            ("faults.reorder_prob", self.reorder_prob),
+            ("faults.crash_prob", self.crash_prob),
+        ] {
+            if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                bail!("{name} must be in [0, 1], got {p}");
+            }
+        }
+        if self.loss_prob + self.corrupt_prob + self.dup_prob > 1.0 {
+            bail!(
+                "faults loss_prob + corrupt_prob + dup_prob must be <= 1 \
+                 (they partition one fate draw), got {}",
+                self.loss_prob + self.corrupt_prob + self.dup_prob
+            );
+        }
+        if self.down_loss_prob + self.down_corrupt_prob > 1.0 {
+            bail!(
+                "faults down_loss_prob + down_corrupt_prob must be <= 1, got {}",
+                self.down_loss_prob + self.down_corrupt_prob
+            );
+        }
+        if !(self.reorder_window.is_finite() && self.reorder_window >= 0.0) {
+            bail!("faults.reorder_window must be finite and >= 0, got {}", self.reorder_window);
+        }
+        if !(self.backoff_base.is_finite() && self.backoff_base > 0.0) {
+            bail!("faults.backoff_base must be finite and > 0, got {}", self.backoff_base);
+        }
+        if !(self.backoff_cap.is_finite() && self.backoff_cap >= self.backoff_base) {
+            bail!(
+                "faults.backoff_cap must be finite and >= backoff_base ({}), got {}",
+                self.backoff_base,
+                self.backoff_cap
+            );
+        }
+        if !(self.crash_downtime.is_finite() && self.crash_downtime > 0.0) {
+            bail!("faults.crash_downtime must be finite and > 0, got {}", self.crash_downtime);
+        }
+        if !(self.outage_every.is_finite() && self.outage_every >= 0.0) {
+            bail!("faults.outage_every must be finite and >= 0, got {}", self.outage_every);
+        }
+        if !(self.outage_len.is_finite() && self.outage_len >= 0.0) {
+            bail!("faults.outage_len must be finite and >= 0, got {}", self.outage_len);
+        }
+        if self.outage_every > 0.0 && self.outage_len >= self.outage_every {
+            bail!(
+                "faults.outage_len ({}) must be shorter than faults.outage_every ({}); \
+                 a window covering the whole period is a dead server",
+                self.outage_len,
+                self.outage_every
+            );
+        }
+        Ok(())
+    }
+}
+
 /// EAFLM gate constants (paper Eq. 3 and §IV-D: xi_d = 1/D, D = 1,
 /// alpha = 0.98; beta·m² folded into one threshold scale).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -743,6 +928,9 @@ pub struct ExperimentConfig {
     /// Malicious-client simulator — TOML section `[attack]`, CLI
     /// `--attack` / `--attack-fraction`.
     pub attack: AttackConfig,
+    /// Deterministic fault injection + crash-safe checkpointing — TOML
+    /// section `[faults]` (see `netsim::FaultPlan`).
+    pub faults: FaultConfig,
     /// Record the barrier-free engine's committed event stream as a
     /// `(vtime, label)` trace in `RunMetrics::event_trace` so the
     /// `--realtime` driver can replay in-flight uploads, buffer
@@ -785,6 +973,7 @@ impl Default for ExperimentConfig {
             fleet: FleetConfig::default(),
             robust: RobustConfig::default(),
             attack: AttackConfig::default(),
+            faults: FaultConfig::default(),
             trace_events: false,
         }
     }
@@ -1062,6 +1251,43 @@ impl ExperimentConfig {
                 self.control.trust_threshold_max
             );
         }
+        // Same starting-inside-the-bounds policy for the adaptive trim
+        // controller (which drives robust.trim_fraction online).
+        if self.control.enabled
+            && self.control.trim
+            && self.robust.mode == RobustMode::TrimmedMean
+            && !(self.control.trim_min <= self.robust.trim_fraction
+                && self.robust.trim_fraction <= self.control.trim_max)
+        {
+            bail!(
+                "robust.trim_fraction ({}) must start inside the control plane's \
+                 [trim_min, trim_max] = [{}, {}]",
+                self.robust.trim_fraction,
+                self.control.trim_min,
+                self.control.trim_max
+            );
+        }
+        if self.link.max_attempts == 0 {
+            bail!("link.max_attempts must be >= 1");
+        }
+        self.faults.validate()?;
+        if self.faults.enabled
+            && self.faults.crash_prob > 0.0
+            && self.engine == EngineMode::Barriered
+        {
+            bail!(
+                "faults.crash_prob only applies to the barrier_free engine: \
+                 crash = park-on-crash + rehydrate, and the barriered loop \
+                 needs every client hydrated each round"
+            );
+        }
+        if self.faults.checkpoint_every > 0 && self.engine_opts.edge_fanout > 1 {
+            bail!(
+                "faults.checkpoint_every cannot be combined with \
+                 engine.edge_fanout > 1: edge accumulators are not serialized \
+                 in engine checkpoints yet"
+            );
+        }
         if let Algorithm::Eaflm = self.algorithm {
             if !(0.0 < self.eaflm.alpha && self.eaflm.alpha < 1.0) {
                 bail!("eaflm.alpha must be in (0,1)");
@@ -1151,6 +1377,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("link.drop_prob") {
             cfg.link.drop_prob = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "link.max_attempts")? {
+            if v == 0 || v > u32::MAX as usize {
+                bail!("link.max_attempts must be in [1, 2^32), got {v}");
+            }
+            cfg.link.max_attempts = v as u32;
         }
         // [eaflm]
         if let Some(v) = doc.get_f64("eaflm.alpha") {
@@ -1359,6 +1591,24 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("control.trust_step") {
             cfg.control.trust_step = v;
         }
+        if let Some(v) = doc.get_bool("control.trim") {
+            cfg.control.trim = v;
+        }
+        if let Some(v) = doc.get_f64("control.trim_target") {
+            cfg.control.trim_target = v;
+        }
+        if let Some(v) = doc.get_f64("control.trim_deadband") {
+            cfg.control.trim_deadband = v;
+        }
+        if let Some(v) = doc.get_f64("control.trim_min") {
+            cfg.control.trim_min = v;
+        }
+        if let Some(v) = doc.get_f64("control.trim_max") {
+            cfg.control.trim_max = v;
+        }
+        if let Some(v) = doc.get_f64("control.trim_step") {
+            cfg.control.trim_step = v;
+        }
         // [robust] — Byzantine-robust aggregation.
         if let Some(v) = doc.get_str("robust.mode") {
             cfg.robust.mode = RobustMode::from_name(v)?;
@@ -1393,6 +1643,58 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("attack.backdoor_boost") {
             cfg.attack.backdoor_boost = v;
+        }
+        // [faults] — deterministic fault injection + checkpointing.
+        if let Some(v) = doc.get_bool("faults.enabled") {
+            cfg.faults.enabled = v;
+        }
+        if let Some(v) = doc.get_f64("faults.loss_prob") {
+            cfg.faults.loss_prob = v;
+        }
+        if let Some(v) = doc.get_f64("faults.corrupt_prob") {
+            cfg.faults.corrupt_prob = v;
+        }
+        if let Some(v) = doc.get_f64("faults.dup_prob") {
+            cfg.faults.dup_prob = v;
+        }
+        if let Some(v) = doc.get_f64("faults.down_loss_prob") {
+            cfg.faults.down_loss_prob = v;
+        }
+        if let Some(v) = doc.get_f64("faults.down_corrupt_prob") {
+            cfg.faults.down_corrupt_prob = v;
+        }
+        if let Some(v) = doc.get_f64("faults.reorder_prob") {
+            cfg.faults.reorder_prob = v;
+        }
+        if let Some(v) = doc.get_f64("faults.reorder_window") {
+            cfg.faults.reorder_window = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "faults.max_retransmits")? {
+            if v > u32::MAX as usize {
+                bail!("faults.max_retransmits must fit in u32, got {v}");
+            }
+            cfg.faults.max_retransmits = v as u32;
+        }
+        if let Some(v) = doc.get_f64("faults.backoff_base") {
+            cfg.faults.backoff_base = v;
+        }
+        if let Some(v) = doc.get_f64("faults.backoff_cap") {
+            cfg.faults.backoff_cap = v;
+        }
+        if let Some(v) = doc.get_f64("faults.crash_prob") {
+            cfg.faults.crash_prob = v;
+        }
+        if let Some(v) = doc.get_f64("faults.crash_downtime") {
+            cfg.faults.crash_downtime = v;
+        }
+        if let Some(v) = doc.get_f64("faults.outage_every") {
+            cfg.faults.outage_every = v;
+        }
+        if let Some(v) = doc.get_f64("faults.outage_len") {
+            cfg.faults.outage_len = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "faults.checkpoint_every")? {
+            cfg.faults.checkpoint_every = v;
         }
         if let Some(v) = doc.get_bool("trace_events") {
             cfg.trace_events = v;
@@ -2101,6 +2403,174 @@ mod tests {
             "[async_engine]\nmixing = \"hinge\"\nmixing_grace = -2\n[backend]\nkind = \"mock\""
         )
         .is_err());
+    }
+
+    #[test]
+    fn fault_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            engine = "barrier_free"
+            [faults]
+            enabled = true
+            loss_prob = 0.1
+            corrupt_prob = 0.05
+            dup_prob = 0.05
+            down_loss_prob = 0.08
+            down_corrupt_prob = 0.02
+            reorder_prob = 0.1
+            reorder_window = 0.5
+            max_retransmits = 3
+            backoff_base = 0.1
+            backoff_cap = 1.5
+            crash_prob = 0.01
+            crash_downtime = 4.0
+            outage_every = 60.0
+            outage_len = 2.0
+            checkpoint_every = 8
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.faults,
+            FaultConfig {
+                enabled: true,
+                loss_prob: 0.1,
+                corrupt_prob: 0.05,
+                dup_prob: 0.05,
+                down_loss_prob: 0.08,
+                down_corrupt_prob: 0.02,
+                reorder_prob: 0.1,
+                reorder_window: 0.5,
+                max_retransmits: 3,
+                backoff_base: 0.1,
+                backoff_cap: 1.5,
+                crash_prob: 0.01,
+                crash_downtime: 4.0,
+                outage_every: 60.0,
+                outage_len: 2.0,
+                checkpoint_every: 8,
+            }
+        );
+        // Defaults: fully inert.
+        let d = FaultConfig::default();
+        assert!(!d.enabled);
+        assert_eq!(d.loss_prob, 0.0);
+        assert_eq!(d.checkpoint_every, 0);
+        d.validate().unwrap();
+        // Bad bounds are rejected even when disabled.
+        for bad in [
+            "loss_prob = 1.5",
+            "loss_prob = -0.1",
+            "corrupt_prob = 2.0",
+            "loss_prob = 0.6\ncorrupt_prob = 0.3\ndup_prob = 0.2",
+            "down_loss_prob = 0.7\ndown_corrupt_prob = 0.4",
+            "reorder_window = -1.0",
+            "backoff_base = 0.0",
+            "backoff_base = 0.5\nbackoff_cap = 0.1",
+            "crash_downtime = 0.0",
+            "outage_every = 10.0\noutage_len = 10.0",
+            "outage_len = -1.0",
+        ] {
+            let toml = format!("[faults]\n{bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "accepted bad [faults] {bad:?}");
+        }
+        // Crashes need the barrier-free park/hydrate machinery.
+        assert!(ExperimentConfig::from_toml(
+            "[faults]\nenabled = true\ncrash_prob = 0.1\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // Checkpoints don't serialize edge accumulators yet.
+        assert!(ExperimentConfig::from_toml(
+            "engine = \"barrier_free\"\n[engine]\nedge_fanout = 2\n\
+             [faults]\ncheckpoint_every = 4\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // Checkpointing without armed faults is allowed (pure crash-safety).
+        assert!(ExperimentConfig::from_toml(
+            "[faults]\ncheckpoint_every = 4\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn link_max_attempts_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml(
+            "[link]\nmax_attempts = 3\n[backend]\nkind = \"mock\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.link.max_attempts, 3);
+        // Default preserves the historical cap of 5 (bitwise streams).
+        assert_eq!(ExperimentConfig::default().link.max_attempts, 5);
+        assert!(ExperimentConfig::from_toml(
+            "[link]\nmax_attempts = 0\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[link]\nmax_attempts = -2\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn trim_controller_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [robust]
+            mode = "trimmed_mean"
+            trim_fraction = 0.2
+            [control]
+            enabled = true
+            trim = true
+            trim_target = 0.2
+            trim_deadband = 0.1
+            trim_min = 0.05
+            trim_max = 0.4
+            trim_step = 0.1
+            [backend]
+            kind = "mock"
+            "#,
+        )
+        .unwrap();
+        let c = cfg.control;
+        assert!(c.trim);
+        assert_eq!((c.trim_target, c.trim_deadband), (0.2, 0.1));
+        assert_eq!((c.trim_min, c.trim_max, c.trim_step), (0.05, 0.4, 0.1));
+        // Defaults validate and arm the controller (subject to robust mode).
+        let d = ControlConfig::default();
+        assert!(d.trim);
+        d.validate().unwrap();
+        for bad in [
+            "trim_target = 1.5",
+            "trim_deadband = -0.1",
+            "trim_min = -0.1",
+            "trim_min = 0.4\ntrim_max = 0.2",
+            "trim_max = 0.5",
+            "trim_step = 0.0",
+            "trim_step = 0.5",
+        ] {
+            let toml = format!("[control]\n{bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "accepted bad trim {bad:?}");
+        }
+        // Armed trim controller: starting trim_fraction must be inside
+        // bounds.
+        assert!(ExperimentConfig::from_toml(
+            "[robust]\nmode = \"trimmed_mean\"\ntrim_fraction = 0.02\n\
+             [control]\nenabled = true\ntrim_min = 0.1\n[backend]\nkind = \"mock\""
+        )
+        .is_err());
+        // ...unless the controller (or the trimmed mode) is disarmed.
+        assert!(ExperimentConfig::from_toml(
+            "[robust]\nmode = \"trimmed_mean\"\ntrim_fraction = 0.02\n\
+             [control]\nenabled = true\ntrim = false\ntrim_min = 0.1\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
+        assert!(ExperimentConfig::from_toml(
+            "[robust]\nmode = \"median\"\ntrim_fraction = 0.02\n\
+             [control]\nenabled = true\ntrim_min = 0.1\n[backend]\nkind = \"mock\""
+        )
+        .is_ok());
     }
 
     #[test]

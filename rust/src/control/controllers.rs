@@ -35,6 +35,11 @@ pub enum KnobChange {
     /// Soft-quarantine threshold `robust.trust_threshold` of the robust
     /// aggregation path (driven by the windowed outlier rate).
     TrustThreshold { from: f64, to: f64 },
+    /// Robust trimming strength `robust.trim_fraction` of the
+    /// trimmed-mean aggregator (driven by the same windowed outlier rate
+    /// as [`KnobChange::TrustThreshold`], in the opposite direction:
+    /// outliers firing means trim *harder*).
+    TrimFraction { from: f64, to: f64 },
 }
 
 /// One controller decision: the change plus the window statistic that
@@ -197,6 +202,51 @@ impl TrustController {
         Some(KnobDecision {
             controller: "trust",
             change: KnobChange::TrustThreshold { from: threshold, to },
+            signal: mean_outlier_rate,
+        })
+    }
+}
+
+/// Trim controller: drive the windowed mean outlier rate toward `target`
+/// by moving the trimmed-mean strength (`robust.trim_fraction`) one
+/// additive `step` per evaluation — the *inverse* sense of
+/// [`TrustController`]: a rate above the band means coordinate outliers
+/// keep surviving into the aggregate, so *widen* the trim and cut more
+/// tails; a rate below the band means the fleet looks clean, so relax the
+/// trim and keep more honest mass. The `deadband` around the target is
+/// the hysteresis; NaN (robust off, or no robust flush in the window)
+/// never decides.
+#[derive(Debug, Clone, Copy)]
+pub struct TrimController {
+    pub target: f64,
+    pub deadband: f64,
+    pub t_min: f64,
+    pub t_max: f64,
+    /// Additive trim step in (0, 0.5).
+    pub step: f64,
+}
+
+impl TrimController {
+    /// Pure decision on the window's mean outlier rate against the
+    /// current trim fraction. Changes already at their bound are
+    /// suppressed.
+    pub fn decide(&self, mean_outlier_rate: f64, trim_fraction: f64) -> Option<KnobDecision> {
+        if !mean_outlier_rate.is_finite() {
+            return None;
+        }
+        let to = if mean_outlier_rate > self.target + self.deadband {
+            (trim_fraction + self.step).clamp(self.t_min, self.t_max)
+        } else if mean_outlier_rate < self.target - self.deadband {
+            (trim_fraction - self.step).clamp(self.t_min, self.t_max)
+        } else {
+            return None;
+        };
+        if to == trim_fraction {
+            return None;
+        }
+        Some(KnobDecision {
+            controller: "trim",
+            change: KnobChange::TrimFraction { from: trim_fraction, to },
             signal: mean_outlier_rate,
         })
     }
@@ -403,6 +453,56 @@ mod tests {
         let d = c.decide(0.0, 0.88).unwrap();
         assert_eq!(d.change, KnobChange::TrustThreshold { from: 0.88, to: 0.9 });
         assert_eq!(c.decide(0.0, 0.9), None);
+    }
+
+    fn trim() -> TrimController {
+        TrimController { target: 0.15, deadband: 0.05, t_min: 0.0, t_max: 0.45, step: 0.05 }
+    }
+
+    #[test]
+    fn trim_deadband_and_nan_are_hysteresis() {
+        let c = trim();
+        assert_eq!(c.decide(0.15, 0.2), None);
+        assert_eq!(c.decide(0.19, 0.2), None);
+        assert_eq!(c.decide(0.11, 0.2), None);
+        assert_eq!(c.decide(f64::NAN, 0.2), None, "robust off must never decide");
+    }
+
+    #[test]
+    fn trim_widens_on_high_outlier_rate() {
+        let c = trim();
+        // Opposite sense of the trust controller: outliers -> trim MORE.
+        let d = c.decide(0.4, 0.2).unwrap();
+        assert_eq!(d.controller, "trim");
+        match d.change {
+            KnobChange::TrimFraction { from, to } => {
+                assert_eq!(from, 0.2);
+                assert!((to - 0.25).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(d.signal, 0.4);
+        // Clamped at t_max; no-op at the bound.
+        let d = c.decide(0.4, 0.42).unwrap();
+        assert_eq!(d.change, KnobChange::TrimFraction { from: 0.42, to: 0.45 });
+        assert_eq!(c.decide(0.4, 0.45), None);
+    }
+
+    #[test]
+    fn trim_relaxes_on_clean_window() {
+        let c = trim();
+        let d = c.decide(0.0, 0.2).unwrap();
+        match d.change {
+            KnobChange::TrimFraction { from, to } => {
+                assert_eq!(from, 0.2);
+                assert!((to - 0.15).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Clamped at t_min; no-op at the bound.
+        let d = c.decide(0.0, 0.03).unwrap();
+        assert_eq!(d.change, KnobChange::TrimFraction { from: 0.03, to: 0.0 });
+        assert_eq!(c.decide(0.0, 0.0), None);
     }
 
     #[test]

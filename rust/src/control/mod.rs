@@ -30,11 +30,13 @@ pub mod telemetry;
 
 pub use controllers::{
     CompressionController, KnobChange, KnobDecision, Migration, ShardRebalancer,
-    StalenessController, TrustController,
+    StalenessController, TrimController, TrustController,
 };
 pub use telemetry::{FlushSample, TelemetryBus, TrustBook};
 
 use crate::config::ControlConfig;
+use crate::util::codec::{Dec, Enc};
+use anyhow::Result;
 
 /// Live knob values, snapshotted by the engine at each decision point.
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +58,11 @@ pub struct Knobs {
     /// The trust controller is inert unless a robust aggregation mode is
     /// active *and* trust scoring is on (`robust.trust = true`).
     pub trust_armed: bool,
+    /// Current trimmed-mean strength (`robust.trim_fraction`).
+    pub trim_fraction: f64,
+    /// The trim controller is inert unless the trimmed-mean aggregator
+    /// is active (`robust.mode = trimmed_mean`).
+    pub trim_armed: bool,
 }
 
 /// The control plane: telemetry window + controller set, evaluated at
@@ -67,6 +74,7 @@ pub struct ControlPlane {
     compression: CompressionController,
     rebalancer: ShardRebalancer,
     trust: TrustController,
+    trim: TrimController,
     /// Flush index of the last *applied* migration (engine-reported via
     /// [`ControlPlane::note_migration`]). The rebalancer holds off until
     /// a full telemetry window of post-migration samples exists — the
@@ -102,6 +110,13 @@ impl ControlPlane {
                 t_min: cfg.trust_threshold_min,
                 t_max: cfg.trust_threshold_max,
                 step: cfg.trust_step,
+            },
+            trim: TrimController {
+                target: cfg.trim_target,
+                deadband: cfg.trim_deadband,
+                t_min: cfg.trim_min,
+                t_max: cfg.trim_max,
+                step: cfg.trim_step,
             },
             last_migration: None,
             cfg: *cfg,
@@ -179,6 +194,12 @@ impl ControlPlane {
                 out.push(d);
             }
         }
+        if self.cfg.trim && knobs.trim_armed {
+            let rate = self.bus.mean_outlier_rate();
+            if let Some(d) = self.trim.decide(rate, knobs.trim_fraction) {
+                out.push(d);
+            }
+        }
         out
     }
 
@@ -205,6 +226,28 @@ impl ControlPlane {
     /// in which case the cooldown must not start).
     pub fn note_migration(&mut self, flush: usize) {
         self.last_migration = Some(flush);
+    }
+
+    /// Serialize the plane's mutable state (telemetry window + migration
+    /// cooldown) for a checkpoint. The controllers and config are pure
+    /// and rebuilt from the experiment config at restore.
+    pub fn save(&self, enc: &mut Enc) {
+        self.bus.save(enc);
+        match self.last_migration {
+            Some(f) => {
+                enc.bool(true);
+                enc.usize(f);
+            }
+            None => enc.bool(false),
+        }
+    }
+
+    /// Restore the mutable state saved by [`ControlPlane::save`] into a
+    /// freshly constructed plane.
+    pub fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        self.bus.load(dec)?;
+        self.last_migration = if dec.bool()? { Some(dec.usize()?) } else { None };
+        Ok(())
     }
 }
 
@@ -251,6 +294,8 @@ mod tests {
             barrier_free: true,
             trust_threshold: 0.5,
             trust_armed: true,
+            trim_fraction: 0.2,
+            trim_armed: true,
         };
         assert!(p.decide_knobs(knobs).is_empty());
         assert_eq!(p.decide_rebalance(1, &[3, 4]), None);
@@ -284,6 +329,8 @@ mod tests {
             barrier_free: true,
             trust_threshold: 0.5,
             trust_armed: false,
+            trim_fraction: 0.2,
+            trim_armed: false,
         };
         let ds = p.decide_knobs(all);
         assert!(ds.iter().any(|d| d.controller == "staleness"));
@@ -320,6 +367,8 @@ mod tests {
             barrier_free: false,
             trust_threshold: 0.5,
             trust_armed: false,
+            trim_fraction: 0.2,
+            trim_armed: false,
         };
         let ds = p.decide_knobs(knobs);
         assert_eq!(ds.len(), 1, "uplink carries no mass -> no KFraction decision");
@@ -352,6 +401,8 @@ mod tests {
             barrier_free: true,
             trust_threshold: 0.5,
             trust_armed: true,
+            trim_fraction: 0.2,
+            trim_armed: false,
         };
         assert!(p
             .decide_knobs(knobs)
@@ -379,6 +430,91 @@ mod tests {
             .decide_knobs(disarmed)
             .iter()
             .all(|d| !matches!(d.change, KnobChange::TrustThreshold { .. })));
+    }
+
+    #[test]
+    fn trim_arm_widens_on_dirty_window_only_when_armed() {
+        let mut p = ControlPlane::new(&enabled_cfg());
+        for r in 1..=4 {
+            p.observe(FlushSample { outlier_rate: 0.4, ..sample(r, 0, 0) });
+        }
+        let knobs = Knobs {
+            buffer_k: 2,
+            alpha0: 0.8,
+            k_fraction: 0.25,
+            topk: false,
+            down_k_fraction: 0.25,
+            down_topk: false,
+            barrier_free: true,
+            trust_threshold: 0.5,
+            trust_armed: false,
+            trim_fraction: 0.1,
+            trim_armed: true,
+        };
+        let trims: Vec<_> = p
+            .decide_knobs(knobs)
+            .into_iter()
+            .filter(|d| matches!(d.change, KnobChange::TrimFraction { .. }))
+            .collect();
+        assert_eq!(trims.len(), 1);
+        match trims[0].change {
+            KnobChange::TrimFraction { from, to } => {
+                assert_eq!(from, 0.1);
+                assert!(to > from, "dirty window must widen the trim");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Disarmed (robust mode != trimmed_mean): never.
+        let disarmed = Knobs { trim_armed: false, ..knobs };
+        assert!(p
+            .decide_knobs(disarmed)
+            .iter()
+            .all(|d| !matches!(d.change, KnobChange::TrimFraction { .. })));
+        // A clean window relaxes the trim back toward trim_min.
+        for r in 5..=12 {
+            p.observe(FlushSample { outlier_rate: 0.0, ..sample(r, 0, 0) });
+        }
+        let ds = p.decide_knobs(knobs);
+        match ds.iter().find(|d| d.controller == "trim").expect("clean-window decision").change {
+            KnobChange::TrimFraction { from, to } => {
+                assert_eq!(from, 0.1);
+                assert!(to < from, "clean window must relax the trim");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plane_save_load_round_trips_decisions() {
+        let cfg = enabled_cfg();
+        let mut p = ControlPlane::new(&cfg);
+        for r in 1..=4 {
+            p.observe(FlushSample { outlier_rate: 0.4, ..sample(r, 0, 12) });
+        }
+        p.note_migration(3);
+        let mut enc = Enc::new();
+        p.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut q = ControlPlane::new(&cfg);
+        let mut dec = Dec::new(&bytes);
+        q.load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        let knobs = Knobs {
+            buffer_k: 2,
+            alpha0: 0.8,
+            k_fraction: 0.25,
+            topk: true,
+            down_k_fraction: 0.25,
+            down_topk: true,
+            barrier_free: true,
+            trust_threshold: 0.5,
+            trust_armed: true,
+            trim_fraction: 0.1,
+            trim_armed: true,
+        };
+        assert_eq!(p.decide_knobs(knobs), q.decide_knobs(knobs));
+        assert_eq!(p.decide_rebalance(5, &[4, 3]), q.decide_rebalance(5, &[4, 3]));
+        assert_eq!(p.due(4), q.due(4));
     }
 
     #[test]

@@ -14,6 +14,9 @@
 
 use std::collections::VecDeque;
 
+use crate::util::codec::{Dec, Enc};
+use anyhow::Result;
+
 /// One aggregation's worth of telemetry: a buffer flush of the
 /// barrier-free engine, or one barriered communication round.
 #[derive(Debug, Clone)]
@@ -166,6 +169,53 @@ impl TelemetryBus {
         self.samples.iter().map(|s| s.bytes_up).sum()
     }
 
+    /// Serialize the window for a checkpoint (cap + samples, oldest
+    /// first).
+    pub fn save(&self, enc: &mut Enc) {
+        enc.usize(self.cap);
+        enc.usize(self.samples.len());
+        for s in &self.samples {
+            enc.usize(s.round);
+            enc.usize(s.shard);
+            enc.f64(s.vtime);
+            enc.usize(s.uploads);
+            enc.usize(s.staleness_sum);
+            enc.usize(s.staleness_max);
+            enc.u64(s.bytes_up);
+            enc.f64(s.residual_l1);
+            enc.f64(s.transmitted_l1);
+            enc.f64(s.down_residual_l1);
+            enc.f64(s.down_transmitted_l1);
+            enc.f64(s.acc_proxy);
+            enc.f64(s.outlier_rate);
+        }
+    }
+
+    /// Restore the window saved by [`TelemetryBus::save`].
+    pub fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        self.cap = dec.usize()?.max(1);
+        let n = dec.usize()?;
+        self.samples.clear();
+        for _ in 0..n {
+            self.samples.push_back(FlushSample {
+                round: dec.usize()?,
+                shard: dec.usize()?,
+                vtime: dec.f64()?,
+                uploads: dec.usize()?,
+                staleness_sum: dec.usize()?,
+                staleness_max: dec.usize()?,
+                bytes_up: dec.u64()?,
+                residual_l1: dec.f64()?,
+                transmitted_l1: dec.f64()?,
+                down_residual_l1: dec.f64()?,
+                down_transmitted_l1: dec.f64()?,
+                acc_proxy: dec.f64()?,
+                outlier_rate: dec.f64()?,
+            });
+        }
+        Ok(())
+    }
+
     /// Mean outlier rate over the window's robust flushes (NaN when no
     /// sample in the window carries a finite rate — robust mode off, or
     /// nothing flushed yet). The [`crate::control::TrustController`]'s
@@ -243,6 +293,19 @@ impl TrustBook {
             return f64::NAN;
         }
         self.scores.iter().sum::<f64>() / self.scores.len() as f64
+    }
+
+    /// Serialize the book for a checkpoint (decay + scores, bit-exact).
+    pub fn save(&self, enc: &mut Enc) {
+        enc.f64(self.decay);
+        enc.f64s(&self.scores);
+    }
+
+    /// Restore the state saved by [`TrustBook::save`].
+    pub fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        self.decay = dec.f64()?;
+        self.scores = dec.f64s()?;
+        Ok(())
     }
 }
 
@@ -376,6 +439,42 @@ mod tests {
         assert!(book.score(0) < 0.005);
         assert_eq!(book.multiplier(0, 0.5, 0.1), 1.0);
         assert!((book.mean_score() - book.score(0) / 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bus_and_book_save_load_round_trip() {
+        let mut bus = TelemetryBus::new(3);
+        for r in 1..=5 {
+            bus.push(FlushSample { outlier_rate: 0.1 * r as f64, ..sample(r, r % 2, 2, r, 0.5) });
+        }
+        let mut book = TrustBook::new(3, 0.75);
+        book.update(1, 0.8);
+        book.update(2, f64::NAN);
+        let mut enc = Enc::new();
+        bus.save(&mut enc);
+        book.save(&mut enc);
+        let bytes = enc.into_bytes();
+
+        let mut bus2 = TelemetryBus::new(1);
+        let mut book2 = TrustBook::new(1, 0.5);
+        let mut dec = Dec::new(&bytes);
+        bus2.load(&mut dec).unwrap();
+        book2.load(&mut dec).unwrap();
+        dec.finish().unwrap();
+
+        assert_eq!(bus2.len(), bus.len());
+        assert_eq!(bus2.mean_staleness().to_bits(), bus.mean_staleness().to_bits());
+        assert_eq!(bus2.mean_outlier_rate().to_bits(), bus.mean_outlier_rate().to_bits());
+        assert_eq!(bus2.per_shard_flushes(2), bus.per_shard_flushes(2));
+        // Restored cap still evicts correctly.
+        bus2.push(sample(6, 0, 1, 0, 0.5));
+        assert_eq!(bus2.len(), 3);
+        for c in 0..3 {
+            assert_eq!(book2.score(c).to_bits(), book.score(c).to_bits());
+        }
+        book2.update(1, 0.8);
+        book.update(1, 0.8);
+        assert_eq!(book2.score(1).to_bits(), book.score(1).to_bits());
     }
 
     #[test]

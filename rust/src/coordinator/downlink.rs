@@ -34,6 +34,8 @@
 
 use crate::model::quant::Precision;
 use crate::model::sparse::SparseDelta;
+use crate::util::codec::{Dec, Enc};
+use anyhow::Result;
 
 /// Per-client downlink state: the model the client last acked and the
 /// server-side error-feedback residual for this client's broadcasts.
@@ -158,6 +160,61 @@ impl Downlink {
         self.sparse_syncs
     }
 
+    /// Whether `client`'s acked base is bitwise identical to `expected`
+    /// — the runtime form of the engines' base-agreement `debug_assert`,
+    /// promoted to a recoverable check when fault injection is armed (a
+    /// mismatch routes the client through a forced dense re-sync instead
+    /// of silently diverging the fleet).
+    pub fn base_matches(&self, client: usize, expected: &[f32]) -> bool {
+        match self.base_of(client) {
+            Some(base) => {
+                base.len() == expected.len()
+                    && base.iter().zip(expected).all(|(a, b)| a.to_bits() == b.to_bits())
+            }
+            None => false,
+        }
+    }
+
+    /// Serialize the compressor's mutable state (slots + mass + lifetime
+    /// counters) for a checkpoint. Precision and error-feedback mode are
+    /// config-derived and rebuilt at restore.
+    pub fn save(&self, enc: &mut Enc) {
+        enc.usize(self.slots.len());
+        for slot in &self.slots {
+            match slot {
+                Some(s) => {
+                    enc.bool(true);
+                    enc.f32s(&s.base);
+                    enc.f32s(&s.residual);
+                }
+                None => enc.bool(false),
+            }
+        }
+        enc.f64(self.residual_l1);
+        enc.f64(self.transmitted_l1);
+        enc.u64(self.forced_dense);
+        enc.u64(self.sparse_syncs);
+    }
+
+    /// Restore the state saved by [`Downlink::save`].
+    pub fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        let n = dec.usize()?;
+        self.slots.clear();
+        self.slots.reserve(n);
+        for _ in 0..n {
+            self.slots.push(if dec.bool()? {
+                Some(Box::new(DownlinkSlot { base: dec.f32s()?, residual: dec.f32s()? }))
+            } else {
+                None
+            });
+        }
+        self.residual_l1 = dec.f64()?;
+        self.transmitted_l1 = dec.f64()?;
+        self.forced_dense = dec.u64()?;
+        self.sparse_syncs = dec.u64()?;
+        Ok(())
+    }
+
     /// Approximate heap footprint of the live slots (capacity planning,
     /// mirrors `Fleet::approx_parked_bytes`).
     pub fn approx_bytes(&self) -> u64 {
@@ -260,6 +317,48 @@ mod tests {
         let (r, t) = dl.take_mass();
         assert!(r > 0.0 && t > 0.0);
         assert_eq!(dl.take_mass(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn base_matches_is_bitwise() {
+        let mut dl = Downlink::new(2, Precision::F32, true);
+        let m = model(4, 1.0);
+        assert!(!dl.base_matches(0, &m), "no slot, no agreement");
+        dl.ack_dense(0, &m);
+        assert!(dl.base_matches(0, &m));
+        let mut off = m.clone();
+        off[2] += 1e-6;
+        assert!(!dl.base_matches(0, &off));
+        assert!(!dl.base_matches(0, &m[..3]));
+    }
+
+    #[test]
+    fn save_load_round_trips_slots_and_counters() {
+        let mut dl = Downlink::new(3, Precision::F32, true);
+        dl.ack_dense(0, &model(6, 1.0));
+        dl.ack_dense(2, &model(6, 2.0));
+        dl.encode_for(0, &model(6, 3.0), 2).unwrap();
+        let mut enc = Enc::new();
+        dl.save(&mut enc);
+        let bytes = enc.into_bytes();
+
+        let mut dl2 = Downlink::new(3, Precision::F32, true);
+        let mut dec = Dec::new(&bytes);
+        dl2.load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(dl2.base_of(0).unwrap(), dl.base_of(0).unwrap());
+        assert_eq!(dl2.base_of(2).unwrap(), dl.base_of(2).unwrap());
+        assert!(!dl2.has_base(1));
+        assert_eq!(dl2.forced_dense(), dl.forced_dense());
+        assert_eq!(dl2.sparse_syncs(), dl.sparse_syncs());
+        // Undrained mass survives the round trip bit-exactly...
+        assert_eq!(dl2.take_mass(), dl.take_mass());
+        // ...and subsequent encodes stay bitwise identical.
+        let g = model(6, 4.0);
+        let a = dl.encode_for(0, &g, 2).unwrap().checksum();
+        let b = dl2.encode_for(0, &g, 2).unwrap().checksum();
+        assert_eq!(a, b);
+        assert_eq!(dl.base_of(0).unwrap(), dl2.base_of(0).unwrap());
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! its (now stale) local model. The round engine consults the registry so
 //! dropped clients neither train, report, nor receive broadcasts.
 
+use crate::util::codec::{Dec, Enc};
 use crate::util::rng::Rng;
+use anyhow::Result;
 
 /// Dropout model parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -145,6 +147,35 @@ impl ClientRegistry {
         }
         active
     }
+
+    /// Serialize the registry's mutable state (status timers, drop
+    /// counter, RNG stream position) for a checkpoint. The dropout model
+    /// is config-derived and rebuilt at restore.
+    pub fn save(&self, enc: &mut Enc) {
+        enc.usize(self.status.len());
+        for &s in &self.status {
+            enc.u8(s);
+        }
+        enc.usize(self.total_drop_rounds);
+        let (s, spare) = self.rng.state();
+        enc.u64s(&s);
+        enc.opt_f64(spare);
+    }
+
+    /// Restore the state saved by [`ClientRegistry::save`].
+    pub fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        let n = dec.usize()?;
+        self.status.clear();
+        self.status.reserve(n);
+        for _ in 0..n {
+            self.status.push(dec.u8()?);
+        }
+        self.total_drop_rounds = dec.usize()?;
+        let s = dec.u64s()?;
+        anyhow::ensure!(s.len() == 4, "registry rng state must hold 4 words, got {}", s.len());
+        self.rng = Rng::from_state([s[0], s[1], s[2], s[3]], dec.opt_f64()?);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +264,32 @@ mod tests {
             polls_down += 1;
         }
         assert!(recovered, "still offline after {polls_down} polls");
+    }
+
+    #[test]
+    fn save_load_resumes_the_drop_lottery_bitwise() {
+        let mut reg = ClientRegistry::new(4, DropoutModel::flaky(0.4), Rng::new(7));
+        for _ in 0..9 {
+            reg.tick();
+        }
+        let mut enc = Enc::new();
+        reg.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut reg2 = ClientRegistry::new(4, DropoutModel::flaky(0.4), Rng::new(999));
+        let mut dec = Dec::new(&bytes);
+        reg2.load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(reg2.total_drop_rounds, reg.total_drop_rounds);
+        assert_eq!(reg2.active_clients(), reg.active_clients());
+        // The restored RNG continues the same lottery, tick and poll.
+        for _ in 0..30 {
+            reg.tick();
+            reg2.tick();
+            assert_eq!(reg2.active_clients(), reg.active_clients());
+        }
+        for i in 0..40 {
+            assert_eq!(reg.poll(i % 4), reg2.poll(i % 4));
+        }
     }
 
     #[test]

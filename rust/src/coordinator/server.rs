@@ -36,11 +36,12 @@ use crate::model::quant::{Precision, QuantBuf};
 use crate::model::sparse::{sparse_payload_bytes, sparse_payload_bytes_layers, SparseDelta};
 use crate::data::synth::Dataset;
 use crate::fleet::{AttackProfile, Client, ClientReport, Fleet, FleetData};
-use crate::metrics::{ControlRecord, RoundRecord, RunMetrics};
+use crate::metrics::{ControlRecord, FaultCounters, RoundRecord, RunMetrics};
 use crate::model::ParamVec;
-use crate::netsim::{LinkProfile, Message};
+use crate::netsim::{FaultPlan, FrameFate, LinkProfile, Message, INTEGRITY_HEADER_BYTES};
 use crate::runtime::{evaluate_with_params, Executor, ExecutorPool};
 use crate::sim::EventQueue;
+use crate::util::codec::{Dec, Enc};
 use crate::util::rng::Rng;
 use crate::{log_debug, log_info};
 
@@ -63,7 +64,59 @@ pub enum EngineEvent {
     /// queue, having joined no window) is excluded, bounded by the final
     /// record's `in_flight`. Downlink request bytes stay at request time
     /// (the request *was* delivered to the client).
-    Upload { client: usize, bytes: u64 },
+    ///
+    /// With fault injection armed the event also carries the sender's
+    /// per-client monotone sequence number `seq` (duplicate suppression)
+    /// and the retransmit `attempt` index (0 = first transmission) so the
+    /// capped-backoff retransmit loop is a pure function of the event.
+    /// Fault-free runs always carry `seq = 0, attempt = 0`, keeping the
+    /// event stream identical to pre-fault builds.
+    Upload { client: usize, bytes: u64, seq: u64, attempt: u32 },
+    /// A crashed client's downtime expired; rehydrate it as a fresh
+    /// joiner (fault injection only).
+    Restart { client: usize },
+}
+
+impl EngineEvent {
+    /// Checkpoint codec for the queue payloads (see `EventQueue::save`).
+    fn save(&self, enc: &mut Enc) {
+        match *self {
+            EngineEvent::Start { client } => {
+                enc.u8(0);
+                enc.usize(client);
+            }
+            EngineEvent::Report { client } => {
+                enc.u8(1);
+                enc.usize(client);
+            }
+            EngineEvent::Upload { client, bytes, seq, attempt } => {
+                enc.u8(2);
+                enc.usize(client);
+                enc.u64(bytes);
+                enc.u64(seq);
+                enc.u32(attempt);
+            }
+            EngineEvent::Restart { client } => {
+                enc.u8(3);
+                enc.usize(client);
+            }
+        }
+    }
+
+    fn load(dec: &mut Dec) -> Result<Self> {
+        Ok(match dec.u8()? {
+            0 => EngineEvent::Start { client: dec.usize()? },
+            1 => EngineEvent::Report { client: dec.usize()? },
+            2 => EngineEvent::Upload {
+                client: dec.usize()?,
+                bytes: dec.u64()?,
+                seq: dec.u64()?,
+                attempt: dec.u32()?,
+            },
+            3 => EngineEvent::Restart { client: dec.usize()? },
+            tag => anyhow::bail!("unknown engine event tag {tag}"),
+        })
+    }
 }
 
 /// Per-aggregation-window counters of the barrier-free engine (reset at
@@ -86,6 +139,9 @@ struct FlushWindow {
     /// Speculative local rounds whose fork state was superseded and were
     /// recomputed serially at the commit point.
     spec_replayed: usize,
+    /// Fault-layer counters of the window (all zero while faults are
+    /// disabled).
+    faults: FaultCounters,
 }
 
 /// Static per-local-round knobs, bundled so speculative dispatches can
@@ -193,6 +249,174 @@ struct EngineState {
     /// edge mode never performs. Zeroed when a flush samples them.
     edge_residual: Vec<f64>,
     edge_transmitted: Vec<f64>,
+    /// Per-client monotone upload sequence numbers (fault injection):
+    /// `tx_seq` is stamped on each transmission at the sender, `rx_seq`
+    /// is the highest sequence the server has accepted — a frame whose
+    /// `seq <= rx_seq` is a stale duplicate and is suppressed. Always
+    /// zero while faults are disabled.
+    tx_seq: Vec<u64>,
+    rx_seq: Vec<u64>,
+}
+
+fn save_report(r: &ClientReport, enc: &mut Enc) {
+    enc.usize(r.client_id);
+    enc.usize(r.round);
+    enc.f64(r.value);
+    enc.f64(r.acc);
+    enc.f64(r.grad_norm_sq);
+    enc.f64(r.train_loss);
+    enc.usize(r.num_samples);
+    enc.f64(r.compute_seconds);
+}
+
+fn load_report(dec: &mut Dec) -> Result<ClientReport> {
+    Ok(ClientReport {
+        client_id: dec.usize()?,
+        round: dec.usize()?,
+        value: dec.f64()?,
+        acc: dec.f64()?,
+        grad_norm_sq: dec.f64()?,
+        train_loss: dec.f64()?,
+        num_samples: dec.usize()?,
+        compute_seconds: dec.f64()?,
+    })
+}
+
+impl FlushWindow {
+    fn save(&self, enc: &mut Enc) {
+        enc.usize(self.reports);
+        enc.f64(self.train_loss_sum);
+        enc.u64(self.bytes_up);
+        enc.u64(self.bytes_down);
+        enc.u64(self.bytes_up_ctrl);
+        enc.u64(self.bytes_down_ctrl);
+        enc.f64(self.threshold);
+        enc.usize(self.spec_committed);
+        enc.usize(self.spec_replayed);
+        self.faults.save(enc);
+    }
+
+    fn load(dec: &mut Dec) -> Result<Self> {
+        Ok(FlushWindow {
+            reports: dec.usize()?,
+            train_loss_sum: dec.f64()?,
+            bytes_up: dec.u64()?,
+            bytes_down: dec.u64()?,
+            bytes_up_ctrl: dec.u64()?,
+            bytes_down_ctrl: dec.u64()?,
+            threshold: dec.f64()?,
+            spec_committed: dec.usize()?,
+            spec_replayed: dec.usize()?,
+            faults: FaultCounters::load(dec)?,
+        })
+    }
+}
+
+impl EngineState {
+    /// Serialize the engine's mutable per-run state for a checkpoint.
+    /// Speculations and deferred evaluations are deliberately excluded:
+    /// evals are drained before every snapshot, and a restored `Start`
+    /// pops with an empty speculation slot and replays its round serially
+    /// — bitwise identical to committing the fork. The edge tier is
+    /// excluded too; config validation rejects checkpointing with
+    /// `engine.edge_fanout > 1`.
+    fn save(&self, enc: &mut Enc) {
+        enc.usize(self.pending.len());
+        for p in &self.pending {
+            enc.bool(p.is_some());
+            if let Some(r) = p {
+                save_report(r, enc);
+            }
+        }
+        enc.f64s(&self.last_values);
+        enc.f64s(&self.last_accs);
+        enc.usizes(&self.local_rounds);
+        enc.u64s(&self.synced_version);
+        enc.f64s(&self.backoff);
+        self.window.save(enc);
+        enc.usize(self.skip_streak);
+        enc.usize(self.in_flight);
+        enc.usizes(&self.shard_of);
+        enc.usizes(&self.shard_pop);
+        enc.bools(&self.upload_in_flight);
+        enc.usizes(&self.upload_k);
+        enc.usizes(&self.shard_k);
+        enc.usize(self.buffers.len());
+        for b in &self.buffers {
+            enc.usize(b.len());
+            for &(c, tau, at) in b {
+                enc.usize(c);
+                enc.usize(tau);
+                enc.f64(at);
+            }
+        }
+        enc.u64s(&self.shard_version);
+        enc.f64s(&self.shard_weight);
+        enc.usize(self.shard_history.len());
+        for h in &self.shard_history {
+            enc.usize(h.len());
+            for m in h {
+                enc.f32s(m);
+            }
+        }
+        let waiting: Vec<usize> = self.waiting.iter().copied().collect();
+        enc.usizes(&waiting);
+        enc.f64s(&self.edge_residual);
+        enc.f64s(&self.edge_transmitted);
+        enc.u64s(&self.tx_seq);
+        enc.u64s(&self.rx_seq);
+    }
+
+    /// Restore the state saved by [`EngineState::save`] into a freshly
+    /// built engine state of the same configuration.
+    fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        let n = dec.usize()?;
+        self.pending.clear();
+        for _ in 0..n {
+            self.pending.push(if dec.bool()? { Some(load_report(dec)?) } else { None });
+        }
+        self.last_values = dec.f64s()?;
+        self.last_accs = dec.f64s()?;
+        self.local_rounds = dec.usizes()?;
+        self.synced_version = dec.u64s()?;
+        self.backoff = dec.f64s()?;
+        self.window = FlushWindow::load(dec)?;
+        self.skip_streak = dec.usize()?;
+        self.in_flight = dec.usize()?;
+        self.shard_of = dec.usizes()?;
+        self.shard_pop = dec.usizes()?;
+        self.upload_in_flight = dec.bools()?;
+        self.upload_k = dec.usizes()?;
+        self.shard_k = dec.usizes()?;
+        let bn = dec.usize()?;
+        self.buffers.clear();
+        for _ in 0..bn {
+            let len = dec.usize()?;
+            let mut b = Vec::with_capacity(len);
+            for _ in 0..len {
+                b.push((dec.usize()?, dec.usize()?, dec.f64()?));
+            }
+            self.buffers.push(b);
+        }
+        self.shard_version = dec.u64s()?;
+        self.shard_weight = dec.f64s()?;
+        let hn = dec.usize()?;
+        self.shard_history.clear();
+        for _ in 0..hn {
+            let len = dec.usize()?;
+            let mut h = Vec::with_capacity(len);
+            for _ in 0..len {
+                h.push(dec.f32s()?);
+            }
+            self.shard_history.push(h);
+        }
+        self.waiting = dec.usizes()?.into_iter().collect();
+        self.edge_residual = dec.f64s()?;
+        self.edge_transmitted = dec.f64s()?;
+        self.tx_seq = dec.u64s()?;
+        self.rx_seq = dec.u64s()?;
+        Ok(())
+    }
 }
 
 /// Append `model` to `history` (recycling retired entries through
@@ -382,6 +606,28 @@ pub struct Server {
     /// jump. Only maintained while the control plane is enabled.
     last_accs: Vec<f64>,
     round: usize,
+    /// Deterministic fault-injection plan (`[faults] enabled = true`):
+    /// per-frame fates, crash schedules and outage windows from RNG
+    /// streams forked off the experiment root. `None` while disabled —
+    /// fault-free runs build no plan and consume no extra randomness.
+    faults: Option<FaultPlan>,
+    /// Transfers whose link-layer retry loop was stopped by the attempt
+    /// cap instead of an observed success draw (see
+    /// `LinkProfile::sample_attempts_counted`); exported as
+    /// `RunMetrics::link_capped`.
+    link_capped: u64,
+    /// Fault counters of the in-progress barriered round (the
+    /// barrier-free engine keeps its own in `FlushWindow::faults`).
+    round_faults: FaultCounters,
+    /// Latest committed checkpoint (`faults.checkpoint_every > 0`),
+    /// refreshed at deterministic commit points.
+    checkpoint: Option<Vec<u8>>,
+    /// A snapshot queued by [`Server::restore_checkpoint`]; consumed at
+    /// the start of the next `run*` call, which resumes mid-stream.
+    restore: Option<Vec<u8>>,
+    /// Kill switch for crash tests: abandon the run right after this many
+    /// commits (flushes / rounds) have been recorded. 0 = run to the end.
+    stop_after: usize,
 }
 
 impl Server {
@@ -416,9 +662,16 @@ impl Server {
             .compression
             .down_precision
             .map_or(ctx.model_payload_bytes, |p| p.payload_bytes(init_params.len()));
+        let faults = cfg.faults.enabled.then(|| FaultPlan::new(&cfg.faults, root_rng));
         Server {
             net_rng: root_rng.fork("netsim"),
             registry,
+            faults,
+            link_capped: 0,
+            round_faults: FaultCounters::default(),
+            checkpoint: None,
+            restore: None,
+            stop_after: 0,
             control: ControlPlane::new(&cfg.control),
             last_accs: vec![f64::NAN; n_clients],
             downlink: Downlink::new(
@@ -616,10 +869,11 @@ impl Server {
         let report_arrival: Vec<f64> = reports
             .iter()
             .map(|rep| {
-                let uplink = self
-                    .ctx
-                    .link
-                    .transfer_seconds(&Message::ValueReport, &mut self.net_rng);
+                let uplink = self.ctx.link.transfer_seconds_counted(
+                    &Message::ValueReport,
+                    &mut self.net_rng,
+                    &mut self.link_capped,
+                );
                 round_start + rep.compute_seconds + uplink
             })
             .collect();
@@ -639,7 +893,7 @@ impl Server {
         // tracked separately from model payloads so byte-level CCR can
         // compare payload against payload (`RoundRecord::bytes_up` /
         // `bytes_down` stay the ctrl+payload totals for compatibility).
-        let bytes_up_ctrl: u64 = n_active as u64 * Message::ValueReport.bytes();
+        let mut bytes_up_ctrl: u64 = n_active as u64 * Message::ValueReport.bytes();
         let mut bytes_up: u64 = bytes_up_ctrl;
         let mut bytes_down: u64 = 0;
         let mut bytes_down_ctrl: u64 = 0;
@@ -683,6 +937,8 @@ impl Server {
         let robust = self.cfg.robust.mode != RobustMode::None;
         let trust_on = robust && self.cfg.robust.trust;
         let mut quarantined = 0usize;
+        // Selected uploads whose retransmit budget ran dry (faults only).
+        let mut lost_uploads = 0usize;
         // NaN = no robust signal this round (mode off or empty selection),
         // distinct from a clean 0.0 rate.
         let mut outlier_rate = f64::NAN;
@@ -697,18 +953,84 @@ impl Server {
             let mut used = 0usize;
             for i in 0..n {
                 if fleet_selected[i] {
-                    upload_staleness.push(self.fleet.client(i).staleness);
-                    let req = self
-                        .ctx
-                        .link
-                        .transfer_seconds(&Message::UploadRequest, &mut self.net_rng);
-                    let up = self.ctx.link.transfer_seconds(
+                    let req = self.ctx.link.transfer_seconds_counted(
+                        &Message::UploadRequest,
+                        &mut self.net_rng,
+                        &mut self.link_capped,
+                    );
+                    let up = self.ctx.link.transfer_seconds_counted(
                         &Message::ModelUpload { payload_bytes: payload },
                         &mut self.net_rng,
+                        &mut self.link_capped,
                     );
                     agg_time = agg_time.max(last_arrival + req + up);
                     bytes_down += Message::UploadRequest.bytes();
                     bytes_down_ctrl += Message::UploadRequest.bytes();
+                    // Fault layer (armed only): the payload frame carries
+                    // an integrity header and may be terminally lost,
+                    // corrupted, or duplicated. Loss/corruption triggers
+                    // sender retransmits with capped exponential backoff;
+                    // every attempt's wire bytes are charged. A client
+                    // whose retransmit budget runs dry drops out of this
+                    // round's aggregation (its next report re-enters the
+                    // gate as usual).
+                    let mut delivered = true;
+                    if let Some(plan) = self.faults.as_mut() {
+                        let frame = payload + INTEGRITY_HEADER_BYTES;
+                        let mut arrival = last_arrival + req + up;
+                        let mut attempt = 0u32;
+                        loop {
+                            match plan.up_fate(arrival) {
+                                FrameFate::Delivered => break,
+                                FrameFate::Duplicated => {
+                                    // Intact, plus a stale copy later: both
+                                    // cross the wire; the copy is suppressed
+                                    // by its stale sequence number.
+                                    self.round_faults.dup_suppressed += 1;
+                                    bytes_up += frame;
+                                    break;
+                                }
+                                fate => {
+                                    if fate == FrameFate::Lost {
+                                        self.round_faults.frames_lost += 1;
+                                    } else {
+                                        self.round_faults.frames_corrupt += 1;
+                                    }
+                                    // The failed attempt's bytes were
+                                    // transmitted even though they never
+                                    // arrived.
+                                    bytes_up += frame;
+                                    if attempt >= plan.max_retransmits() {
+                                        delivered = false;
+                                        break;
+                                    }
+                                    attempt += 1;
+                                    self.round_faults.retransmits += 1;
+                                    let redo = self.ctx.link.transfer_seconds_counted(
+                                        &Message::ModelUpload { payload_bytes: frame },
+                                        &mut self.net_rng,
+                                        &mut self.link_capped,
+                                    );
+                                    arrival += plan.backoff(attempt) + redo;
+                                    agg_time = agg_time.max(arrival);
+                                }
+                            }
+                        }
+                        if delivered {
+                            // The delivered frame's header; its payload is
+                            // charged below with the fault-free path.
+                            bytes_up += INTEGRITY_HEADER_BYTES;
+                        }
+                    }
+                    if !delivered {
+                        // Terminal loss: the server never received this
+                        // upload, so the client neither joins the
+                        // aggregation nor gets the broadcast.
+                        fleet_selected[i] = false;
+                        lost_uploads += 1;
+                        continue;
+                    }
+                    upload_staleness.push(self.fleet.client(i).staleness);
                     bytes_up += payload;
                     match mode {
                         CompressionMode::Dense => self
@@ -765,7 +1087,10 @@ impl Server {
                 mode: self.cfg.robust.mode,
                 trim: self.cfg.robust.trim_fraction,
             };
+            // With fault injection every selected upload may have been
+            // lost; an empty fan-in leaves the global model untouched.
             match mode {
+                _ if used == 0 => {}
                 CompressionMode::Dense if robust => self.agg.aggregate_payloads_robust(
                     &self.upload_bufs[..used],
                     &self.upload_weights,
@@ -797,7 +1122,7 @@ impl Server {
                     &mut self.global,
                 ),
             }
-            if robust {
+            if robust && used > 0 {
                 // Per-payload trimmed-coordinate rates feed the trust book
                 // (payload order here is ascending client id).
                 let dim = self.global.len();
@@ -846,8 +1171,23 @@ impl Server {
         let mut bcast_done = agg_time;
         let down_topk = self.cfg.compression.down_mode == CompressionMode::TopK;
         let down_k = self.cfg.compression.down_k_for(self.global.len());
+        let armed = self.faults.is_some();
         for i in 0..n {
             if n_selected > 0 && fleet_selected[i] {
+                // Runtime promotion of the base-agreement debug_assert
+                // (armed only): a divergent acked base — e.g. from a frame
+                // the client never actually applied — routes through a
+                // forced dense re-sync instead of shipping a delta against
+                // the wrong base.
+                if armed
+                    && down_topk
+                    && self.downlink.has_base(i)
+                    && !self.downlink.base_matches(i, self.fleet.client(i).sync_base())
+                {
+                    self.round_faults.resyncs += 1;
+                    self.round_faults.recoveries += 1;
+                    self.downlink.drop_client(i);
+                }
                 // Encode (or force-dense) first: the frame's actual wire
                 // size drives both the transfer time and the bytes
                 // charged, so they can never diverge from the encode.
@@ -872,16 +1212,55 @@ impl Server {
                     self.down_payload_bytes
                 };
                 debug_assert!(
-                    !down_topk
+                    armed
+                        || !down_topk
                         || self.downlink.base_of(i) == Some(self.fleet.client(i).sync_base()),
                     "downlink base diverged from client {i}'s acked base"
                 );
-                let down = self.ctx.link.transfer_seconds(
-                    &Message::ModelBroadcast { payload_bytes },
+                let mut frame_bytes = payload_bytes;
+                // Fault layer (armed only): the broadcast frame carries an
+                // integrity header and may be lost or corrupted in
+                // transit; the client NACKs (one 68 B control frame up)
+                // and the server answers with a forced dense re-sync,
+                // which always re-establishes the shared base.
+                if let Some(plan) = self.faults.as_mut() {
+                    frame_bytes += INTEGRITY_HEADER_BYTES;
+                    let fate = plan.down_fate();
+                    if matches!(fate, FrameFate::Lost | FrameFate::Corrupt) {
+                        if fate == FrameFate::Lost {
+                            self.round_faults.frames_lost += 1;
+                        } else {
+                            self.round_faults.frames_corrupt += 1;
+                        }
+                        self.round_faults.resyncs += 1;
+                        // The failed frame still occupied the wire.
+                        bytes_down += frame_bytes;
+                        let failed = self.ctx.link.transfer_seconds_counted(
+                            &Message::ModelBroadcast { payload_bytes: frame_bytes },
+                            &mut self.net_rng,
+                            &mut self.link_capped,
+                        );
+                        bcast_done = bcast_done.max(agg_time + failed);
+                        // NACK control frame on the uplink.
+                        bytes_up += Message::ValueReport.bytes();
+                        bytes_up_ctrl += Message::ValueReport.bytes();
+                        // Forced dense re-sync (idempotent for clients the
+                        // dense path already synced).
+                        let target = bcast_model.unwrap_or(&self.global);
+                        self.fleet.client_mut(i).sync(target);
+                        if down_topk {
+                            self.downlink.ack_dense(i, target);
+                        }
+                        frame_bytes = self.down_payload_bytes + INTEGRITY_HEADER_BYTES;
+                    }
+                }
+                let down = self.ctx.link.transfer_seconds_counted(
+                    &Message::ModelBroadcast { payload_bytes: frame_bytes },
                     &mut self.net_rng,
+                    &mut self.link_capped,
                 );
                 bcast_done = bcast_done.max(agg_time + down);
-                bytes_down += payload_bytes;
+                bytes_down += frame_bytes;
             } else if self.registry.is_active(i) {
                 self.fleet.client_mut(i).mark_stale();
             }
@@ -902,8 +1281,11 @@ impl Server {
             (f64::NAN, f64::NAN)
         };
 
+        // Uploads count *delivered* payloads; a selected upload whose
+        // retransmit budget ran dry (faults only) joined no aggregation.
+        let n_delivered = n_selected - lost_uploads;
         let cum_uploads =
-            self.metrics.records.last().map_or(0, |r| r.cum_uploads) + n_selected;
+            self.metrics.records.last().map_or(0, |r| r.cum_uploads) + n_delivered;
         // Compact records (fleet-scale runs): drop the O(n) per-round
         // vectors — at 10⁶ clients they would dominate resident memory.
         let compact = self.cfg.fleet.compact_records;
@@ -914,7 +1296,7 @@ impl Server {
             global_loss,
             train_loss: reports.iter().map(|r| r.train_loss).sum::<f64>()
                 / n_active.max(1) as f64,
-            uploads: n_selected,
+            uploads: n_delivered,
             cum_uploads,
             bytes_up,
             bytes_down,
@@ -933,6 +1315,7 @@ impl Server {
             spec_replayed: 0,
             quarantined,
             trust_mean: if trust_on { self.trust.mean_score() } else { f64::NAN },
+            faults: std::mem::take(&mut self.round_faults),
         };
         if global_acc.is_finite() {
             log_info!(
@@ -982,6 +1365,7 @@ impl Server {
             ));
         }
         self.metrics.push(record.clone());
+        self.metrics.link_capped = self.link_capped;
         Ok(record)
     }
 
@@ -1002,12 +1386,212 @@ impl Server {
         push_bounded_history(&mut self.history, &mut self.history_pool, keep, model);
     }
 
-    /// Run all configured rounds.
+    /// Run all configured rounds. With a queued [`Server::restore_checkpoint`]
+    /// snapshot the loop resumes mid-stream; with
+    /// `faults.checkpoint_every > 0` it refreshes [`Server::checkpoint_bytes`]
+    /// at round boundaries; with a [`Server::stop_after`] kill switch it
+    /// abandons the run right after that many rounds (crash tests).
     pub fn run(&mut self, exec: &mut dyn Executor) -> Result<()> {
-        for _ in 0..self.cfg.rounds {
+        if let Some(bytes) = self.restore.take() {
+            self.apply_barriered_checkpoint(&bytes)?;
+        }
+        while self.round < self.cfg.rounds {
             self.run_round(exec)?;
+            let every = self.cfg.faults.checkpoint_every;
+            if every > 0 && self.round % every == 0 {
+                self.checkpoint = Some(self.save_barriered_checkpoint());
+            }
+            if self.stop_after > 0 && self.round >= self.stop_after {
+                return Ok(());
+            }
         }
         Ok(())
+    }
+
+    /// Latest committed checkpoint snapshot (`faults.checkpoint_every`).
+    pub fn checkpoint_bytes(&self) -> Option<&[u8]> {
+        self.checkpoint.as_deref()
+    }
+
+    /// Queue a checkpoint snapshot for the next `run*` call, which resumes
+    /// the killed run mid-stream on this freshly built (same-config) server.
+    pub fn restore_checkpoint(&mut self, bytes: &[u8]) {
+        self.restore = Some(bytes.to_vec());
+    }
+
+    /// Abandon the run right after `commits` rounds/flushes have been
+    /// recorded — the deterministic "kill -9" of the crash-recovery tests.
+    /// 0 disables the switch.
+    pub fn stop_after(&mut self, commits: usize) {
+        self.stop_after = commits;
+    }
+
+    const CKPT_MAGIC: &'static [u8; 8] = b"VAFLCKPT";
+    const CKPT_VERSION: u32 = 1;
+
+    /// Serialize the mutable server state shared by both engines. Config-
+    /// derived state (aggregator scratch, wire buffers, policies — all
+    /// stateless) is rebuilt by constructing the same-config server the
+    /// snapshot is later applied to.
+    fn save_core(&self, enc: &mut Enc) {
+        enc.usize(self.round);
+        enc.f32s(&self.global);
+        enc.usize(self.history.len());
+        for h in &self.history {
+            enc.f32s(h);
+        }
+        enc.f64s(&self.last_accs);
+        // Knob floats the control plane may have retuned away from config.
+        enc.f64(self.cfg.compression.k_fraction);
+        enc.f64(self.cfg.compression.down_k_fraction);
+        enc.f64(self.cfg.robust.trust_threshold);
+        enc.f64(self.cfg.robust.trim_fraction);
+        enc.u64(self.link_capped);
+        self.queue.save(enc, |p, e| p.save(e));
+        let (s, spare) = self.net_rng.state();
+        enc.u64s(&s);
+        enc.opt_f64(spare);
+        self.fleet.save(enc);
+        self.registry.save(enc);
+        self.downlink.save(enc);
+        self.trust.save(enc);
+        self.control.save(enc);
+        enc.bool(self.faults.is_some());
+        if let Some(plan) = &self.faults {
+            plan.save(enc);
+        }
+        // The committed metrics prefix: restore replays nothing — the
+        // record stream continues bitwise from here.
+        enc.usize(self.metrics.records.len());
+        for r in &self.metrics.records {
+            r.save(enc);
+        }
+        enc.usize(self.metrics.control_records.len());
+        for c in &self.metrics.control_records {
+            c.save(enc);
+        }
+        enc.usize(self.metrics.engine_events);
+    }
+
+    /// Restore the state saved by [`Server::save_core`] into this freshly
+    /// built same-config server.
+    fn load_core(&mut self, dec: &mut Dec) -> Result<()> {
+        self.round = dec.usize()?;
+        self.global = dec.f32s()?;
+        let hn = dec.usize()?;
+        self.history.clear();
+        for _ in 0..hn {
+            self.history.push(dec.f32s()?);
+        }
+        self.last_accs = dec.f64s()?;
+        let kf = dec.f64()?;
+        self.set_k_fraction(kf);
+        let dkf = dec.f64()?;
+        self.set_down_k_fraction(dkf);
+        self.cfg.robust.trust_threshold = dec.f64()?;
+        self.cfg.robust.trim_fraction = dec.f64()?;
+        self.link_capped = dec.u64()?;
+        self.queue = EventQueue::load(dec, EngineEvent::load)?;
+        let s = dec.u64s()?;
+        anyhow::ensure!(s.len() == 4, "bad net_rng state length {}", s.len());
+        self.net_rng = Rng::from_state([s[0], s[1], s[2], s[3]], dec.opt_f64()?);
+        self.fleet.load(dec)?;
+        self.registry.load(dec)?;
+        self.downlink.load(dec)?;
+        self.trust.load(dec)?;
+        self.control.load(dec)?;
+        let armed = dec.bool()?;
+        anyhow::ensure!(
+            armed == self.faults.is_some(),
+            "checkpoint fault-arming disagrees with this server's config"
+        );
+        if let Some(plan) = self.faults.as_mut() {
+            plan.load(dec)?;
+        }
+        let rn = dec.usize()?;
+        self.metrics.records.clear();
+        for _ in 0..rn {
+            self.metrics.records.push(RoundRecord::load(dec)?);
+        }
+        let cn = dec.usize()?;
+        self.metrics.control_records.clear();
+        for _ in 0..cn {
+            self.metrics.control_records.push(ControlRecord::load(dec)?);
+        }
+        self.metrics.engine_events = dec.usize()?;
+        self.metrics.link_capped = self.link_capped;
+        Ok(())
+    }
+
+    /// Full barriered-engine checkpoint (engine tag 0): the shared core is
+    /// the whole mutable state — the barriered loop keeps nothing else
+    /// between rounds.
+    fn save_barriered_checkpoint(&self) -> Vec<u8> {
+        let mut enc = Enc::new();
+        enc.header(Self::CKPT_MAGIC, Self::CKPT_VERSION);
+        enc.u8(0);
+        self.save_core(&mut enc);
+        enc.into_bytes()
+    }
+
+    fn apply_barriered_checkpoint(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut dec = Dec::new(bytes);
+        dec.expect_header(Self::CKPT_MAGIC, Self::CKPT_VERSION)?;
+        anyhow::ensure!(dec.u8()? == 0, "not a barriered-engine checkpoint");
+        self.load_core(&mut dec)?;
+        dec.finish()
+    }
+
+    /// Full barrier-free-engine checkpoint (engine tag 1): the shared
+    /// core plus the event loop's own state — retuned knobs, the flush
+    /// counter, the engine state, and (S > 1) the shard model replicas.
+    fn save_async_checkpoint(
+        &self,
+        st: &EngineState,
+        k: usize,
+        mixing: MixingRule,
+        flushes: usize,
+        shard_models: &[Vec<f32>],
+    ) -> Vec<u8> {
+        let mut enc = Enc::new();
+        enc.header(Self::CKPT_MAGIC, Self::CKPT_VERSION);
+        enc.u8(1);
+        self.save_core(&mut enc);
+        enc.usize(k);
+        enc.f64(mixing.alpha0());
+        enc.usize(flushes);
+        st.save(&mut enc);
+        enc.usize(shard_models.len());
+        for m in shard_models {
+            enc.f32s(m);
+        }
+        enc.into_bytes()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply_async_checkpoint(
+        &mut self,
+        bytes: &[u8],
+        st: &mut EngineState,
+        k: &mut usize,
+        mixing: &mut MixingRule,
+        flushes: &mut usize,
+        shard_models: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let mut dec = Dec::new(bytes);
+        dec.expect_header(Self::CKPT_MAGIC, Self::CKPT_VERSION)?;
+        anyhow::ensure!(dec.u8()? == 1, "not a barrier-free-engine checkpoint");
+        self.load_core(&mut dec)?;
+        *k = dec.usize()?;
+        *mixing = mixing.with_alpha0(dec.f64()?);
+        *flushes = dec.usize()?;
+        st.load(&mut dec)?;
+        let sn = dec.usize()?;
+        shard_models.clear();
+        for _ in 0..sn {
+            shard_models.push(dec.f32s()?);
+        }
+        dec.finish()
     }
 
     /// Run the barrier-free event-driven engine for `cfg.rounds`
@@ -1169,16 +1753,35 @@ impl Server {
             edges,
             edge_residual: vec![0.0f64; s_count],
             edge_transmitted: vec![0.0f64; s_count],
+            tx_seq: vec![0u64; n],
+            rx_seq: vec![0u64; n],
         };
 
         let mut flushes = 0usize;
         let events_before = self.queue.total_popped();
         let t0 = self.queue.now();
-        for i in 0..active {
-            // No-op when already hydrated (`active_set == 0` / reruns).
-            self.fleet.hydrate(i, &self.global);
-            self.queue.schedule_at(t0, EngineEvent::Start { client: i });
-            dispatch_speculation(&self.fleet, &mut st, pool, i, knobs)?;
+        if let Some(bytes) = self.restore.take() {
+            // Resume a killed run mid-stream: the queue, fleet, RNG
+            // streams, and the committed record prefix all restore
+            // bitwise. Speculations are deliberately not re-dispatched —
+            // a restored `Start` pops with an empty slot and replays its
+            // round serially, which is bitwise identical to committing
+            // the speculation (the engine's core invariant).
+            self.apply_async_checkpoint(
+                &bytes,
+                &mut st,
+                &mut k,
+                &mut mixing,
+                &mut flushes,
+                &mut shard_models,
+            )?;
+        } else {
+            for i in 0..active {
+                // No-op when already hydrated (`active_set == 0` / reruns).
+                self.fleet.hydrate(i, &self.global);
+                self.queue.schedule_at(t0, EngineEvent::Start { client: i });
+                dispatch_speculation(&self.fleet, &mut st, pool, i, knobs)?;
+            }
         }
 
         while flushes < self.cfg.rounds {
@@ -1199,6 +1802,31 @@ impl Server {
                         self.queue
                             .schedule_at(t + st.backoff[client], EngineEvent::Start { client });
                         continue;
+                    }
+                    if let Some(plan) = self.faults.as_mut() {
+                        if plan.crash() {
+                            // Crash: the client loses its volatile training
+                            // state and parks; it reboots from a fresh dense
+                            // sync after the configured downtime (see the
+                            // `Restart` arm). A speculation forked from the
+                            // now-lost state is dropped — its worker's send
+                            // fails harmlessly, as in the post-loop drain.
+                            st.spec[client] = None;
+                            self.fleet.park(client);
+                            if self.cfg.compression.down_mode == CompressionMode::TopK {
+                                // The acked downlink base died with the
+                                // client.
+                                self.downlink.drop_client(client);
+                            }
+                            if self.cfg.trace_events {
+                                self.metrics.event_trace.push((t, format!("crash c{client}")));
+                            }
+                            self.queue.schedule_at(
+                                t + plan.crash_downtime(),
+                                EngineEvent::Restart { client },
+                            );
+                            continue;
+                        }
                     }
                     st.local_rounds[client] += 1;
                     let rep = match st.spec[client].take() {
@@ -1250,10 +1878,11 @@ impl Server {
                             ),
                         ));
                     }
-                    let uplink = self
-                        .ctx
-                        .link
-                        .transfer_seconds(&Message::ValueReport, &mut self.net_rng);
+                    let uplink = self.ctx.link.transfer_seconds_counted(
+                        &Message::ValueReport,
+                        &mut self.net_rng,
+                        &mut self.link_capped,
+                    );
                     let arrive = t + rep.compute_seconds + uplink;
                     st.pending[client] = Some(rep);
                     self.queue.schedule_at(arrive, EngineEvent::Report { client });
@@ -1313,23 +1942,42 @@ impl Server {
                         let upload_payload = self.upload_payload_bytes;
                         st.upload_k[client] =
                             self.cfg.compression.k_for(self.global.len());
-                        let req = self
-                            .ctx
-                            .link
-                            .transfer_seconds(&Message::UploadRequest, &mut self.net_rng);
-                        let up = self.ctx.link.transfer_seconds(
+                        let req = self.ctx.link.transfer_seconds_counted(
+                            &Message::UploadRequest,
+                            &mut self.net_rng,
+                            &mut self.link_capped,
+                        );
+                        let up = self.ctx.link.transfer_seconds_counted(
                             &Message::ModelUpload { payload_bytes: upload_payload },
                             &mut self.net_rng,
+                            &mut self.link_capped,
                         );
                         st.window.bytes_down += Message::UploadRequest.bytes();
                         st.window.bytes_down_ctrl += Message::UploadRequest.bytes();
                         st.in_flight += 1;
                         st.upload_in_flight[client] = true;
+                        // Faults armed: stamp the frame with the client's
+                        // next monotone sequence number (duplicate
+                        // suppression at the receiver) and let reordering
+                        // hold the frame past its natural arrival.
+                        let mut arrive = t + req + up;
+                        let seq = if let Some(plan) = self.faults.as_mut() {
+                            arrive += plan.reorder_delay();
+                            st.tx_seq[client] += 1;
+                            st.tx_seq[client]
+                        } else {
+                            0
+                        };
                         // Uplink bytes ride on the event and count when
                         // the upload lands (see `EngineEvent::Upload`).
                         self.queue.schedule_at(
-                            t + req + up,
-                            EngineEvent::Upload { client, bytes: upload_payload },
+                            arrive,
+                            EngineEvent::Upload {
+                                client,
+                                bytes: upload_payload,
+                                seq,
+                                attempt: 0,
+                            },
                         );
                     } else {
                         st.skip_streak += 1;
@@ -1339,10 +1987,84 @@ impl Server {
                         dispatch_speculation(&self.fleet, &mut st, pool, client, knobs)?;
                     }
                 }
-                EngineEvent::Upload { client, bytes } => {
+                EngineEvent::Upload { client, bytes, seq, attempt } => {
+                    // Fault layer (armed only): every arriving frame pays
+                    // the integrity header; its fate decides between
+                    // delivery, duplicate suppression, retransmission
+                    // with capped exponential backoff, and giving up.
+                    let mut frame = bytes;
+                    if let Some(plan) = self.faults.as_mut() {
+                        frame += INTEGRITY_HEADER_BYTES;
+                        if seq <= st.rx_seq[client] {
+                            // Stale duplicate of an already-accepted
+                            // transmission: it occupied the wire but has
+                            // no effect on the engine.
+                            st.window.faults.dup_suppressed += 1;
+                            st.window.bytes_up += frame;
+                            continue;
+                        }
+                        match plan.up_fate(t) {
+                            FrameFate::Delivered => {}
+                            FrameFate::Duplicated => {
+                                // This copy lands; the network injects a
+                                // second copy that pops later and is
+                                // suppressed by its sequence number.
+                                self.queue.schedule_at(
+                                    t + plan.reorder_delay(),
+                                    EngineEvent::Upload { client, bytes, seq, attempt },
+                                );
+                            }
+                            fate => {
+                                if fate == FrameFate::Lost {
+                                    st.window.faults.frames_lost += 1;
+                                } else {
+                                    st.window.faults.frames_corrupt += 1;
+                                }
+                                // The failed frame still occupied the wire.
+                                st.window.bytes_up += frame;
+                                if attempt >= plan.max_retransmits() {
+                                    // Retransmit budget exhausted: abandon
+                                    // the round. The client goes stale and
+                                    // starts a fresh local round instead
+                                    // of blocking on a flush that will
+                                    // never include it.
+                                    st.in_flight -= 1;
+                                    st.upload_in_flight[client] = false;
+                                    self.fleet.client_mut(client).mark_stale();
+                                    self.queue
+                                        .schedule_at(t, EngineEvent::Start { client });
+                                    dispatch_speculation(
+                                        &self.fleet,
+                                        &mut st,
+                                        pool,
+                                        client,
+                                        knobs,
+                                    )?;
+                                    continue;
+                                }
+                                st.window.faults.retransmits += 1;
+                                let redo = self.ctx.link.transfer_seconds_counted(
+                                    &Message::ModelUpload { payload_bytes: bytes },
+                                    &mut self.net_rng,
+                                    &mut self.link_capped,
+                                );
+                                self.queue.schedule_at(
+                                    t + plan.backoff(attempt + 1) + redo,
+                                    EngineEvent::Upload {
+                                        client,
+                                        bytes,
+                                        seq,
+                                        attempt: attempt + 1,
+                                    },
+                                );
+                                continue;
+                            }
+                        }
+                        st.rx_seq[client] = seq;
+                    }
                     st.in_flight -= 1;
                     st.upload_in_flight[client] = false;
-                    st.window.bytes_up += bytes;
+                    st.window.bytes_up += frame;
                     let s = st.shard_of[client];
                     // saturating: a rebalanced client's synced version is
                     // re-anchored to its new shard's counter, which a
@@ -1405,6 +2127,54 @@ impl Server {
                     if self.control.due(flushes) {
                         self.control_tick_async(&mut st, &mut k, &mut mixing, flushes, t);
                     }
+                    // Deterministic commit point: snapshot the full engine
+                    // state right after the flush (and its control tick)
+                    // committed. Pool-side evaluations are drained first so
+                    // the snapshotted record prefix is complete.
+                    let every = self.cfg.faults.checkpoint_every;
+                    if every > 0 && flushes % every == 0 {
+                        self.drain_pending_evals(&mut st)?;
+                        self.checkpoint = Some(self.save_async_checkpoint(
+                            &st,
+                            k,
+                            mixing,
+                            flushes,
+                            &shard_models,
+                        ));
+                    }
+                    if self.stop_after > 0 && flushes >= self.stop_after {
+                        // The deterministic "kill -9" of the recovery
+                        // tests: abandon the run right after this commit.
+                        break;
+                    }
+                }
+                EngineEvent::Restart { client } => {
+                    // Reboot after a crash: rehydrate from the current
+                    // shard model (a dense frame — the crash lost both the
+                    // local model and any acked downlink base), re-anchor
+                    // the staleness clock, and rejoin the local-round loop
+                    // once the sync frame lands.
+                    let s = st.shard_of[client];
+                    let target: &[f32] =
+                        if s_count == 1 { &self.global } else { &shard_models[s] };
+                    self.fleet.hydrate(client, target);
+                    if self.cfg.compression.down_mode == CompressionMode::TopK {
+                        self.downlink.ack_dense(client, target);
+                    }
+                    st.synced_version[client] = st.shard_version[s];
+                    st.window.faults.recoveries += 1;
+                    let dense = self.down_payload_bytes + INTEGRITY_HEADER_BYTES;
+                    st.window.bytes_down += dense;
+                    let down = self.ctx.link.transfer_seconds_counted(
+                        &Message::ModelBroadcast { payload_bytes: dense },
+                        &mut self.net_rng,
+                        &mut self.link_capped,
+                    );
+                    if self.cfg.trace_events {
+                        self.metrics.event_trace.push((t, format!("restart c{client}")));
+                    }
+                    self.queue.schedule_at(t + down, EngineEvent::Start { client });
+                    dispatch_speculation(&self.fleet, &mut st, pool, client, knobs)?;
                 }
             }
         }
@@ -1432,6 +2202,7 @@ impl Server {
         self.metrics.fleet_hydrations = self.fleet.hydrations();
         self.metrics.fleet_parks = self.fleet.parks();
         self.metrics.peak_active = self.fleet.peak_active();
+        self.metrics.link_capped = self.link_capped;
         self.drain_pending_evals(&mut st)
     }
 
@@ -1739,6 +2510,7 @@ impl Server {
         // re-borrows the engine state mutably, and an index avoids
         // allocating a snapshot of the flushed ids on the hot flush path.
         let down_topk = self.cfg.compression.down_mode == CompressionMode::TopK;
+        let armed = self.faults.is_some();
         #[allow(clippy::needless_range_loop)]
         for bi in 0..kk {
             let c = st.buffers[shard][bi].0;
@@ -1760,11 +2532,39 @@ impl Server {
                 // frame dense: it establishes the shared base the next
                 // sparse delta builds on. The parked client's slot is
                 // dropped for the same reason.
-                let down = self.ctx.link.transfer_seconds(
-                    &Message::ModelBroadcast { payload_bytes: payload },
+                let mut frame_bytes = payload;
+                let mut extra = 0.0f64;
+                if let Some(plan) = self.faults.as_mut() {
+                    // The hydration frame rides the same faulty downlink:
+                    // a lost/corrupt frame is NACKed and re-sent dense
+                    // (it already was dense — the re-send is a retry).
+                    frame_bytes += INTEGRITY_HEADER_BYTES;
+                    let fate = plan.down_fate();
+                    if matches!(fate, FrameFate::Lost | FrameFate::Corrupt) {
+                        if fate == FrameFate::Lost {
+                            st.window.faults.frames_lost += 1;
+                        } else {
+                            st.window.faults.frames_corrupt += 1;
+                        }
+                        st.window.faults.resyncs += 1;
+                        st.window.bytes_down += frame_bytes;
+                        extra += self.ctx.link.transfer_seconds_counted(
+                            &Message::ModelBroadcast { payload_bytes: frame_bytes },
+                            &mut self.net_rng,
+                            &mut self.link_capped,
+                        );
+                        // NACK control frame on the uplink.
+                        st.window.bytes_up += Message::ValueReport.bytes();
+                        st.window.bytes_up_ctrl += Message::ValueReport.bytes();
+                    }
+                }
+                let down = self.ctx.link.transfer_seconds_counted(
+                    &Message::ModelBroadcast { payload_bytes: frame_bytes },
                     &mut self.net_rng,
+                    &mut self.link_capped,
                 );
-                st.window.bytes_down += payload;
+                let down = extra + down;
+                st.window.bytes_down += frame_bytes;
                 let target = bcast_model.unwrap_or(&model[..]);
                 self.fleet.park(c);
                 self.fleet.hydrate(w, target);
@@ -1777,6 +2577,19 @@ impl Server {
                 dispatch_speculation(&self.fleet, st, pool, w, knobs)?;
                 st.waiting.push_back(c);
             } else {
+                // Runtime promotion of the base-agreement debug_assert
+                // (armed only): a divergent acked base routes through a
+                // forced dense re-sync instead of shipping a delta
+                // against the wrong base.
+                if armed
+                    && down_topk
+                    && self.downlink.has_base(c)
+                    && !self.downlink.base_matches(c, self.fleet.client(c).sync_base())
+                {
+                    st.window.faults.resyncs += 1;
+                    st.window.faults.recoveries += 1;
+                    self.downlink.drop_client(c);
+                }
                 // The downlink budget is read per broadcast and the
                 // frame is charged from its own encode, so a mid-run
                 // `down_k_fraction` retune can never desynchronize the
@@ -1804,14 +2617,52 @@ impl Server {
                     payload
                 };
                 debug_assert!(
-                    !down_topk
+                    armed
+                        || !down_topk
                         || self.downlink.base_of(c) == Some(self.fleet.client(c).sync_base()),
                     "downlink base diverged from client {c}'s acked base"
                 );
-                let down = self.ctx.link.transfer_seconds(
+                let mut frame_bytes = frame_bytes;
+                let mut extra = 0.0f64;
+                // Fault layer (armed only): a lost or corrupt broadcast
+                // is NACKed (one 68 B control frame up) and answered
+                // with a forced dense re-sync, which always
+                // re-establishes the shared base.
+                if let Some(plan) = self.faults.as_mut() {
+                    frame_bytes += INTEGRITY_HEADER_BYTES;
+                    let fate = plan.down_fate();
+                    if matches!(fate, FrameFate::Lost | FrameFate::Corrupt) {
+                        if fate == FrameFate::Lost {
+                            st.window.faults.frames_lost += 1;
+                        } else {
+                            st.window.faults.frames_corrupt += 1;
+                        }
+                        st.window.faults.resyncs += 1;
+                        // The failed frame still occupied the wire.
+                        st.window.bytes_down += frame_bytes;
+                        extra += self.ctx.link.transfer_seconds_counted(
+                            &Message::ModelBroadcast { payload_bytes: frame_bytes },
+                            &mut self.net_rng,
+                            &mut self.link_capped,
+                        );
+                        st.window.bytes_up += Message::ValueReport.bytes();
+                        st.window.bytes_up_ctrl += Message::ValueReport.bytes();
+                        // Forced dense re-sync (idempotent for clients
+                        // the dense path already synced).
+                        let target = bcast_model.unwrap_or(&model[..]);
+                        self.fleet.client_mut(c).sync(target);
+                        if down_topk {
+                            self.downlink.ack_dense(c, target);
+                        }
+                        frame_bytes = payload + INTEGRITY_HEADER_BYTES;
+                    }
+                }
+                let down = self.ctx.link.transfer_seconds_counted(
                     &Message::ModelBroadcast { payload_bytes: frame_bytes },
                     &mut self.net_rng,
+                    &mut self.link_capped,
                 );
+                let down = extra + down;
                 st.window.bytes_down += frame_bytes;
                 st.synced_version[c] = version;
                 self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
@@ -1905,6 +2756,7 @@ impl Server {
             spec_replayed: st.window.spec_replayed,
             quarantined,
             trust_mean: if trust_on { self.trust.mean_score() } else { f64::NAN },
+            faults: std::mem::take(&mut st.window.faults),
         };
         if global_acc.is_finite() {
             log_info!(
@@ -2107,6 +2959,8 @@ impl Server {
             barrier_free: true,
             trust_threshold: self.cfg.robust.trust_threshold,
             trust_armed: self.cfg.robust.mode != RobustMode::None && self.cfg.robust.trust,
+            trim_fraction: self.cfg.robust.trim_fraction,
+            trim_armed: self.cfg.robust.mode == RobustMode::TrimmedMean,
         };
         for d in self.control.decide_knobs(knobs) {
             match d.change {
@@ -2203,6 +3057,21 @@ impl Server {
                         None,
                     );
                 }
+                KnobChange::TrimFraction { from, to } => {
+                    // Takes effect at the next flush's robust aggregation
+                    // (`RobustSpec` reads the config at flush time).
+                    self.cfg.robust.trim_fraction = to;
+                    self.push_control_record(
+                        flushes,
+                        now,
+                        d.controller,
+                        "trim_fraction",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
             }
         }
     }
@@ -2221,6 +3090,8 @@ impl Server {
             barrier_free: false,
             trust_threshold: self.cfg.robust.trust_threshold,
             trust_armed: self.cfg.robust.mode != RobustMode::None && self.cfg.robust.trust,
+            trim_fraction: self.cfg.robust.trim_fraction,
+            trim_armed: self.cfg.robust.mode == RobustMode::TrimmedMean,
         };
         for d in self.control.decide_knobs(knobs) {
             match d.change {
@@ -2257,6 +3128,19 @@ impl Server {
                         now,
                         d.controller,
                         "trust_threshold",
+                        from,
+                        to,
+                        d.signal,
+                        None,
+                    );
+                }
+                KnobChange::TrimFraction { from, to } => {
+                    self.cfg.robust.trim_fraction = to;
+                    self.push_control_record(
+                        round,
+                        now,
+                        d.controller,
+                        "trim_fraction",
                         from,
                         to,
                         d.signal,

@@ -133,6 +133,7 @@ mod tests {
                 spec_replayed: 0,
                 quarantined: 0,
                 trust_mean: f64::NAN,
+                faults: Default::default(),
             });
         }
         m

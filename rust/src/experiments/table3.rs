@@ -189,6 +189,7 @@ mod tests {
             spec_replayed: 0,
             quarantined: 0,
             trust_mean: f64::NAN,
+            faults: Default::default(),
         });
         m
     }
@@ -288,6 +289,7 @@ mod tests {
             spec_replayed: 0,
             quarantined: 0,
             trust_mean: f64::NAN,
+            faults: Default::default(),
         });
         let rows = rows_for_experiment(&[fake_run("a", "afl", 10), m]);
         let text = render(&rows);

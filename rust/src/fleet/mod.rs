@@ -65,6 +65,7 @@ use crate::model::quant::{Precision, QuantBuf};
 use crate::model::sparse::SparseDelta;
 use crate::model::{sq_distance, ParamVec};
 use crate::runtime::{evaluate_with_params, Executor};
+use crate::util::codec::{Dec, Enc};
 use crate::util::rng::Rng;
 
 /// Per-client malicious behavior of the attack simulator (ISSUE 8 /
@@ -841,6 +842,162 @@ impl Fleet {
         };
         self.slots.len() * std::mem::size_of::<Slot>() + residual_heap + source
     }
+
+    /// Serialize the fleet's mutable state for a checkpoint: every slot
+    /// (active clients in full — params, delta base, EF residual,
+    /// previous gradient, staleness, epoch, jitter-RNG stream, batcher
+    /// replay position; parked records verbatim) plus the window
+    /// counters. Config-derived state (shards, probe set, device
+    /// profiles, attack table, root RNG) is **not** written — a restore
+    /// rebuilds it through normal construction, exactly like hydration
+    /// does, so a checkpoint stays O(active·dim + n·budget), not O(data).
+    pub fn save(&self, enc: &mut Enc) {
+        enc.usize(self.slots.len());
+        for slot in &self.slots {
+            match slot {
+                Slot::Active(c) => {
+                    enc.bool(true);
+                    enc.f32s(&c.params);
+                    enc.f32s(&c.base);
+                    enc.f32s(&c.residual);
+                    match &c.prev_grad {
+                        Some(g) => {
+                            enc.bool(true);
+                            enc.f32s(g);
+                        }
+                        None => enc.bool(false),
+                    }
+                    enc.usize(c.staleness);
+                    enc.u64(c.epoch);
+                    let (s, spare) = c.jitter_rng.state();
+                    enc.u64s(&s);
+                    enc.opt_f64(spare);
+                    enc.u64(c.batcher.reshuffles());
+                    enc.usize(c.batcher.cursor());
+                }
+                Slot::Parked(p) => {
+                    enc.bool(false);
+                    enc.u64(p.reshuffles);
+                    enc.u32(p.cursor);
+                    let (s, spare) = p.jitter_rng.state();
+                    enc.u64s(&s);
+                    enc.opt_f64(spare);
+                    enc.u32(p.staleness);
+                    enc.u32(p.num_samples);
+                    enc.u8(p.device);
+                    enc.u64(p.epoch);
+                    enc.usize(p.residual.len());
+                    for &(i, v) in &p.residual {
+                        enc.u32(i);
+                        enc.f32(v);
+                    }
+                }
+            }
+        }
+        enc.usize(self.active);
+        enc.usize(self.peak_active);
+        enc.u64(self.hydrations);
+        enc.u64(self.parks);
+    }
+
+    /// Restore the state saved by [`Fleet::save`] into a freshly built
+    /// fleet (same config, same data source, attack table already
+    /// installed via [`Fleet::set_attacks`] — label-flip shards rebuild
+    /// from the table here, as in hydration). Active clients come back
+    /// with their exact training state — **not** through
+    /// [`Fleet::hydrate`], which deliberately resets
+    /// params/base/staleness/`prev_grad` to fresh-joiner values.
+    pub fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        let n = dec.usize()?;
+        anyhow::ensure!(
+            n == self.slots.len(),
+            "fleet checkpoint holds {n} clients, this fleet has {}",
+            self.slots.len()
+        );
+        for id in 0..n {
+            if dec.bool()? {
+                let params = dec.f32s()?;
+                let base = dec.f32s()?;
+                let residual = dec.f32s()?;
+                let prev_grad = if dec.bool()? { Some(dec.f32s()?) } else { None };
+                let staleness = dec.usize()?;
+                let epoch = dec.u64()?;
+                let jitter_rng = rng_from(dec)?;
+                let reshuffles = dec.u64()?;
+                let cursor = dec.usize()?;
+                let attack = self.attacks[id];
+                let shard = match attack {
+                    AttackProfile::LabelFlip => Arc::new(flip_labels(&self.source.shard(id))),
+                    _ => self.source.shard(id),
+                };
+                let samples = shard.num_samples();
+                let client = Client {
+                    batcher: Batcher::restore(
+                        samples,
+                        self.batch_size,
+                        self.root_rng.fork(&format!("batcher-{id}")),
+                        reshuffles,
+                        cursor,
+                    ),
+                    jitter_rng,
+                    id,
+                    device: self.profiles
+                        [DeviceProfile::paper_fleet_index(n, id) as usize]
+                        .clone(),
+                    shard,
+                    params,
+                    base,
+                    residual,
+                    prev_grad,
+                    staleness,
+                    probe_images: Arc::clone(&self.probe_images),
+                    probe_labels: Arc::clone(&self.probe_labels),
+                    epoch,
+                    attack,
+                    attack_buf: Vec::new(),
+                };
+                self.slots[id] = Slot::Active(Box::new(client));
+            } else {
+                let reshuffles = dec.u64()?;
+                let cursor = dec.u32()?;
+                let jitter_rng = rng_from(dec)?;
+                let staleness = dec.u32()?;
+                let num_samples = dec.u32()?;
+                let device = dec.u8()?;
+                let epoch = dec.u64()?;
+                let pairs = dec.usize()?;
+                let mut residual = Vec::with_capacity(pairs);
+                for _ in 0..pairs {
+                    let i = dec.u32()?;
+                    let v = dec.f32()?;
+                    residual.push((i, v));
+                }
+                self.slots[id] = Slot::Parked(ParkedClient {
+                    reshuffles,
+                    cursor,
+                    jitter_rng,
+                    staleness,
+                    num_samples,
+                    device,
+                    epoch,
+                    residual,
+                });
+            }
+        }
+        self.active = dec.usize()?;
+        self.peak_active = dec.usize()?;
+        self.hydrations = dec.u64()?;
+        self.parks = dec.u64()?;
+        Ok(())
+    }
+}
+
+/// Decode a four-word xoshiro state (+ spare Gaussian) written by
+/// [`Rng::state`].
+fn rng_from(dec: &mut Dec) -> Result<Rng> {
+    let s = dec.u64s()?;
+    anyhow::ensure!(s.len() == 4, "rng state must hold 4 words, got {}", s.len());
+    Ok(Rng::from_state([s[0], s[1], s[2], s[3]], dec.opt_f64()?))
 }
 
 /// Top-|budget| nonzero residual coordinates by magnitude (index
@@ -874,6 +1031,153 @@ pub fn amplify_value(raw: f64, acc: f64, n_clients: usize, cfg: ValueFnConfig) -
         raw * (1.0 + n_clients as f64 / 1000.0).powf(acc)
     } else {
         raw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn shard(id: usize, n: usize, dim: usize) -> ClientShard {
+        let mut rng = Rng::new(90 + id as u64);
+        let images = (0..n * dim).map(|_| rng.f64() as f32).collect();
+        let labels = (0..n).map(|i| (i % 10) as i32).collect();
+        ClientShard { client_id: id, data: Dataset { images, labels, dim } }
+    }
+
+    fn build() -> Fleet {
+        let shards: Vec<_> = (0..3).map(|id| Arc::new(shard(id, 12, 4))).collect();
+        let mut fleet = Fleet::new(
+            FleetData::Eager(shards),
+            4,
+            Arc::new(vec![0.0f32; 8]),
+            Arc::new(vec![0i32; 2]),
+            8,
+            Rng::new(7),
+        );
+        fleet.set_attacks(vec![
+            AttackProfile::Benign,
+            AttackProfile::LabelFlip,
+            AttackProfile::Benign,
+        ]);
+        fleet
+    }
+
+    #[test]
+    fn save_load_round_trips_active_and_parked_state() {
+        let model = vec![0.25f32; 6];
+        let mut a = build();
+        a.hydrate_all(&model);
+        // Dirty every kind of mutable state a checkpoint must carry.
+        {
+            let c = a.client_mut(0);
+            c.params[1] = 1.5;
+            c.residual[3] = -0.75;
+            c.prev_grad = Some(vec![0.1f32; 6]);
+            c.staleness = 2;
+            c.epoch = 5;
+            c.jitter_rng.f64();
+        }
+        // Advance client 1's batcher into mid-epoch.
+        let data1 = Arc::clone(&a.client(1).shard);
+        let mut x = vec![0.0f32; 4 * 4];
+        let mut y = vec![0i32; 4];
+        a.client_mut(1).batcher.next_batch(&data1.data, &mut x, &mut y);
+        // Park client 2 so a parked record rides the checkpoint too.
+        a.client_mut(2).residual[5] = 0.5;
+        a.park(2);
+
+        let mut enc = Enc::new();
+        a.save(&mut enc);
+        let bytes = enc.into_bytes();
+
+        let mut b = build();
+        let mut dec = Dec::new(&bytes);
+        b.load(&mut dec).unwrap();
+        dec.finish().unwrap();
+
+        assert_eq!(b.active_count(), a.active_count());
+        assert_eq!(b.peak_active(), a.peak_active());
+        assert_eq!(b.hydrations(), a.hydrations());
+        assert_eq!(b.parks(), a.parks());
+
+        let fb = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        for id in 0..2 {
+            assert!(b.is_active(id));
+            let (ca, cb) = (a.client(id), b.client(id));
+            assert_eq!(fb(&cb.params), fb(&ca.params), "client {id} params");
+            assert_eq!(fb(&cb.base), fb(&ca.base), "client {id} base");
+            assert_eq!(fb(&cb.residual), fb(&ca.residual), "client {id} residual");
+            assert_eq!(
+                cb.prev_grad.as_deref().map(fb),
+                ca.prev_grad.as_deref().map(fb),
+                "client {id} prev_grad"
+            );
+            assert_eq!(cb.staleness, ca.staleness);
+            assert_eq!(cb.epoch, ca.epoch);
+            assert_eq!(cb.batcher.reshuffles(), ca.batcher.reshuffles());
+            assert_eq!(cb.batcher.cursor(), ca.batcher.cursor());
+            assert_eq!(cb.attack, ca.attack);
+        }
+        // The label-flip shard was rebuilt poisoned, not honest.
+        assert_eq!(b.client(1).shard.data.labels, a.client(1).shard.data.labels);
+        assert_ne!(b.client(1).shard.data.labels, shard(1, 12, 4).data.labels);
+
+        let (pa, pb) = (a.parked(2).unwrap(), b.parked(2).unwrap());
+        assert_eq!(pb.reshuffles, pa.reshuffles);
+        assert_eq!(pb.cursor, pa.cursor);
+        assert_eq!(pb.staleness, pa.staleness);
+        assert_eq!(pb.num_samples, pa.num_samples);
+        assert_eq!(pb.device, pa.device);
+        assert_eq!(pb.epoch, pa.epoch);
+        assert_eq!(pb.residual, pa.residual);
+
+        // The restored fleet *continues* bitwise: jitter streams, batch
+        // order, and a hydration of the parked client all line up.
+        for _ in 0..5 {
+            assert_eq!(
+                a.client_mut(0).jitter_rng.f64().to_bits(),
+                b.client_mut(0).jitter_rng.f64().to_bits()
+            );
+        }
+        let (mut xa, mut ya) = (vec![0.0f32; 4 * 4], vec![0i32; 4]);
+        let (mut xb, mut yb) = (vec![0.0f32; 4 * 4], vec![0i32; 4]);
+        for _ in 0..7 {
+            let da = Arc::clone(&a.client(1).shard);
+            let db = Arc::clone(&b.client(1).shard);
+            a.client_mut(1).batcher.next_batch(&da.data, &mut xa, &mut ya);
+            b.client_mut(1).batcher.next_batch(&db.data, &mut xb, &mut yb);
+            assert_eq!(fb(&xa), fb(&xb));
+            assert_eq!(ya, yb);
+        }
+        let fresh = vec![0.5f32; 6];
+        a.hydrate(2, &fresh);
+        b.hydrate(2, &fresh);
+        let (ca, cb) = (a.client(2), b.client(2));
+        assert_eq!(fb(&cb.params), fb(&ca.params));
+        assert_eq!(fb(&cb.residual), fb(&ca.residual), "EF summary re-expanded identically");
+        assert_eq!(cb.epoch, ca.epoch);
+        assert_eq!(cb.batcher.reshuffles(), ca.batcher.reshuffles());
+    }
+
+    #[test]
+    fn load_rejects_fleet_size_mismatch() {
+        let mut a = build();
+        let mut enc = Enc::new();
+        a.hydrate_all(&[0.0f32; 6]);
+        a.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let shards: Vec<_> = (0..2).map(|id| Arc::new(shard(id, 12, 4))).collect();
+        let mut small = Fleet::new(
+            FleetData::Eager(shards),
+            4,
+            Arc::new(vec![0.0f32; 8]),
+            Arc::new(vec![0i32; 2]),
+            8,
+            Rng::new(7),
+        );
+        assert!(small.load(&mut Dec::new(&bytes)).is_err());
     }
 }
 

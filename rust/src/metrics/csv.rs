@@ -11,10 +11,10 @@ use super::RunMetrics;
 /// Write the per-round curve: one row per round.
 pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
     let mut out = String::new();
-    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl,quarantined,trust_mean\n");
+    out.push_str("round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl,quarantined,trust_mean,retransmits,frames_lost,frames_corrupt,dup_suppressed,resyncs,recoveries\n");
     for r in &m.records {
         out.push_str(&format!(
-            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             r.round,
             r.vtime,
             fmt(r.global_acc),
@@ -39,6 +39,12 @@ pub fn write_rounds_csv(m: &RunMetrics, path: impl AsRef<Path>) -> Result<()> {
             r.bytes_down_ctrl,
             r.quarantined,
             fmt(r.trust_mean),
+            r.faults.retransmits,
+            r.faults.frames_lost,
+            r.faults.frames_corrupt,
+            r.faults.dup_suppressed,
+            r.faults.resyncs,
+            r.faults.recoveries,
         ));
     }
     write_atomic(path.as_ref(), out.as_bytes())
@@ -113,7 +119,7 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::{RoundRecord, RunMetrics};
+    use crate::metrics::{FaultCounters, RoundRecord, RunMetrics};
 
     fn sample() -> RunMetrics {
         let mut m = RunMetrics::new("a", "vafl", 0.94);
@@ -142,6 +148,14 @@ mod tests {
             spec_replayed: 1,
             quarantined: 2,
             trust_mean: f64::NAN,
+            faults: FaultCounters {
+                retransmits: 7,
+                frames_lost: 1,
+                frames_corrupt: 0,
+                dup_suppressed: 2,
+                resyncs: 3,
+                recoveries: 1,
+            },
         });
         m
     }
@@ -155,10 +169,13 @@ mod tests {
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,vtime,acc"));
-        assert!(lines[0].ends_with("bytes_up_ctrl,bytes_down_ctrl,quarantined,trust_mean"));
+        assert!(lines[0].ends_with(
+            "quarantined,trust_mean,retransmits,frames_lost,frames_corrupt,dup_suppressed,resyncs,recoveries"
+        ));
         assert!(lines[1].starts_with("1,1.250000,0.500000"));
-        // NaN trust_mean formats as an empty trailing cell.
-        assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1,136,128,2,"));
+        // NaN trust_mean formats as an empty cell; the fault counters
+        // follow it.
+        assert!(lines[1].ends_with("2,1,1.500000,3,1,4,1,136,128,2,,7,1,0,2,3,1"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

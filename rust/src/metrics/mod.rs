@@ -5,7 +5,71 @@
 
 pub mod csv;
 
+use crate::util::codec::{Dec, Enc};
 use crate::util::json::{obj, Value};
+use anyhow::Result;
+
+/// Per-record fault/recovery telemetry of the deterministic
+/// fault-injection layer (`netsim::FaultPlan`). All zero — and absent
+/// from every code path — while `faults.enabled = false`, which keeps
+/// fault-free runs bitwise identical to pre-fault seeds.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Upload frames rescheduled after a loss/corruption verdict
+    /// (each retransmission re-charges wire bytes).
+    pub retransmits: u64,
+    /// Upload/broadcast frames the fault plan dropped outright.
+    pub frames_lost: u64,
+    /// Frames delivered with a failed integrity check (length/checksum/
+    /// sequence header mismatch) — handled exactly like a loss, but
+    /// counted separately so corruption grids read directly.
+    pub frames_corrupt: u64,
+    /// Duplicate deliveries suppressed by the per-client monotone
+    /// sequence number (bytes charged, effects skipped).
+    pub dup_suppressed: u64,
+    /// Downlink resyncs: a lost/corrupt sparse broadcast (or a base-
+    /// version mismatch) NACKed into a forced dense re-sync.
+    pub resyncs: u64,
+    /// Client crash/restart recoveries (park-on-crash + rehydrate).
+    pub recoveries: u64,
+}
+
+impl FaultCounters {
+    /// True if any counter fired (CSV/JSON writers and tests).
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+
+    /// Fold another window's counters into this one.
+    pub fn add(&mut self, other: &FaultCounters) {
+        self.retransmits += other.retransmits;
+        self.frames_lost += other.frames_lost;
+        self.frames_corrupt += other.frames_corrupt;
+        self.dup_suppressed += other.dup_suppressed;
+        self.resyncs += other.resyncs;
+        self.recoveries += other.recoveries;
+    }
+
+    pub fn save(&self, enc: &mut Enc) {
+        enc.u64(self.retransmits);
+        enc.u64(self.frames_lost);
+        enc.u64(self.frames_corrupt);
+        enc.u64(self.dup_suppressed);
+        enc.u64(self.resyncs);
+        enc.u64(self.recoveries);
+    }
+
+    pub fn load(dec: &mut Dec) -> Result<Self> {
+        Ok(FaultCounters {
+            retransmits: dec.u64()?,
+            frames_lost: dec.u64()?,
+            frames_corrupt: dec.u64()?,
+            dup_suppressed: dec.u64()?,
+            resyncs: dec.u64()?,
+            recoveries: dec.u64()?,
+        })
+    }
+}
 
 /// One communication round's record.
 #[derive(Debug, Clone)]
@@ -79,6 +143,9 @@ pub struct RoundRecord {
     /// Mean per-client trust score at flush time. NaN while trust scoring
     /// is off — no signal, not perfect trust.
     pub trust_mean: f64,
+    /// Fault/recovery events of this record's window (all zero while
+    /// `faults.enabled = false`).
+    pub faults: FaultCounters,
 }
 
 impl RoundRecord {
@@ -107,6 +174,67 @@ impl RoundRecord {
     pub fn staleness_max(&self) -> usize {
         self.upload_staleness.iter().copied().max().unwrap_or(0)
     }
+
+    /// Serialize for a checkpoint (every field, floats by bits — a
+    /// restored record stream must stay bitwise identical).
+    pub fn save(&self, enc: &mut Enc) {
+        enc.usize(self.round);
+        enc.f64(self.vtime);
+        enc.f64(self.global_acc);
+        enc.f64(self.global_loss);
+        enc.f64(self.train_loss);
+        enc.usize(self.uploads);
+        enc.usize(self.cum_uploads);
+        enc.u64(self.bytes_up);
+        enc.u64(self.bytes_down);
+        enc.u64(self.bytes_up_ctrl);
+        enc.u64(self.bytes_down_ctrl);
+        enc.f64(self.threshold);
+        enc.f64s(&self.values);
+        enc.bools(&self.selected);
+        enc.f64s(&self.client_accs);
+        enc.f64(self.idle_seconds);
+        enc.usize(self.reports);
+        enc.usize(self.in_flight);
+        enc.usizes(&self.upload_staleness);
+        enc.usize(self.shard);
+        enc.usize(self.spec_committed);
+        enc.usize(self.spec_replayed);
+        enc.usize(self.quarantined);
+        enc.f64(self.trust_mean);
+        self.faults.save(enc);
+    }
+
+    /// Decode a record written by [`RoundRecord::save`].
+    pub fn load(dec: &mut Dec) -> Result<Self> {
+        Ok(RoundRecord {
+            round: dec.usize()?,
+            vtime: dec.f64()?,
+            global_acc: dec.f64()?,
+            global_loss: dec.f64()?,
+            train_loss: dec.f64()?,
+            uploads: dec.usize()?,
+            cum_uploads: dec.usize()?,
+            bytes_up: dec.u64()?,
+            bytes_down: dec.u64()?,
+            bytes_up_ctrl: dec.u64()?,
+            bytes_down_ctrl: dec.u64()?,
+            threshold: dec.f64()?,
+            values: dec.f64s()?,
+            selected: dec.bools()?,
+            client_accs: dec.f64s()?,
+            idle_seconds: dec.f64()?,
+            reports: dec.usize()?,
+            in_flight: dec.usize()?,
+            upload_staleness: dec.usizes()?,
+            shard: dec.usize()?,
+            spec_committed: dec.usize()?,
+            spec_replayed: dec.usize()?,
+            quarantined: dec.usize()?,
+            trust_mean: dec.f64()?,
+            faults: FaultCounters::load(dec)?,
+        })
+    }
 }
 
 /// One applied decision of the adaptive control plane (`control`
@@ -134,6 +262,40 @@ pub struct ControlRecord {
     pub client: Option<usize>,
 }
 
+impl ControlRecord {
+    /// Serialize for a checkpoint.
+    pub fn save(&self, enc: &mut Enc) {
+        enc.usize(self.round);
+        enc.f64(self.vtime);
+        enc.str(&self.controller);
+        enc.str(&self.knob);
+        enc.f64(self.old);
+        enc.f64(self.new);
+        enc.f64(self.signal);
+        match self.client {
+            Some(c) => {
+                enc.bool(true);
+                enc.usize(c);
+            }
+            None => enc.bool(false),
+        }
+    }
+
+    /// Decode a record written by [`ControlRecord::save`].
+    pub fn load(dec: &mut Dec) -> Result<Self> {
+        Ok(ControlRecord {
+            round: dec.usize()?,
+            vtime: dec.f64()?,
+            controller: dec.str()?,
+            knob: dec.str()?,
+            old: dec.f64()?,
+            new: dec.f64()?,
+            signal: dec.f64()?,
+            client: if dec.bool()? { Some(dec.usize()?) } else { None },
+        })
+    }
+}
+
 /// A full run's metrics.
 #[derive(Debug, Clone)]
 pub struct RunMetrics {
@@ -159,6 +321,11 @@ pub struct RunMetrics {
     pub fleet_hydrations: u64,
     pub fleet_parks: u64,
     pub peak_active: usize,
+    /// Link transfers that hit the retry cap and were force-delivered by
+    /// the legacy lossy-link model (`LinkProfile::max_attempts`) — the
+    /// previously silent 5th-attempt success, now counted. Distinct from
+    /// `FaultCounters::retransmits`, which belongs to the fault plan.
+    pub link_capped: u64,
 }
 
 impl RunMetrics {
@@ -174,7 +341,17 @@ impl RunMetrics {
             fleet_hydrations: 0,
             fleet_parks: 0,
             peak_active: 0,
+            link_capped: 0,
         }
+    }
+
+    /// Whole-run fault totals (all zero for fault-free runs).
+    pub fn fault_totals(&self) -> FaultCounters {
+        let mut total = FaultCounters::default();
+        for r in &self.records {
+            total.add(&r.faults);
+        }
+        total
     }
 
     pub fn push(&mut self, r: RoundRecord) {
@@ -351,6 +528,7 @@ impl RunMetrics {
     /// JSON export of the whole run.
     pub fn to_json(&self) -> Value {
         let (spec_committed, spec_replayed) = self.speculation_totals();
+        let totals = self.fault_totals();
         obj(vec![
             ("experiment", Value::from(self.experiment.as_str())),
             ("algorithm", Value::from(self.algorithm.as_str())),
@@ -386,6 +564,13 @@ impl RunMetrics {
             ("fleet_hydrations", Value::from(self.fleet_hydrations as usize)),
             ("fleet_parks", Value::from(self.fleet_parks as usize)),
             ("peak_active", Value::from(self.peak_active)),
+            ("link_capped", Value::from(self.link_capped as usize)),
+            ("retransmits", Value::from(totals.retransmits as usize)),
+            ("frames_lost", Value::from(totals.frames_lost as usize)),
+            ("frames_corrupt", Value::from(totals.frames_corrupt as usize)),
+            ("dup_suppressed", Value::from(totals.dup_suppressed as usize)),
+            ("resyncs", Value::from(totals.resyncs as usize)),
+            ("recoveries", Value::from(totals.recoveries as usize)),
             (
                 "control",
                 Value::Arr(
@@ -431,6 +616,18 @@ impl RunMetrics {
                                 ("spec_replayed", Value::from(r.spec_replayed)),
                                 ("quarantined", Value::from(r.quarantined)),
                                 ("trust_mean", finite_or_null(r.trust_mean)),
+                                ("retransmits", Value::from(r.faults.retransmits as usize)),
+                                ("frames_lost", Value::from(r.faults.frames_lost as usize)),
+                                (
+                                    "frames_corrupt",
+                                    Value::from(r.faults.frames_corrupt as usize),
+                                ),
+                                (
+                                    "dup_suppressed",
+                                    Value::from(r.faults.dup_suppressed as usize),
+                                ),
+                                ("resyncs", Value::from(r.faults.resyncs as usize)),
+                                ("recoveries", Value::from(r.faults.recoveries as usize)),
                                 ("threshold", finite_or_null(r.threshold)),
                                 (
                                     "selected",
@@ -510,6 +707,7 @@ mod tests {
             spec_replayed: round % 2,
             quarantined: round % 2,
             trust_mean: f64::NAN,
+            faults: FaultCounters { retransmits: round as u64, ..FaultCounters::default() },
         }
     }
 
@@ -668,6 +866,77 @@ mod tests {
         assert_eq!(ctl[0].get("client").unwrap(), &Value::Null);
         assert_eq!(ctl[1].get("client").unwrap().as_usize(), Some(5));
         assert_eq!(ctl[1].get("controller").unwrap().as_str(), Some("rebalance"));
+    }
+
+    #[test]
+    fn fault_totals_roll_up_and_export() {
+        let m = run(); // retransmits = round (1, 2, 3), everything else 0
+        let totals = m.fault_totals();
+        assert_eq!(totals.retransmits, 6);
+        assert_eq!(totals.frames_lost, 0);
+        assert!(totals.any());
+        assert!(!FaultCounters::default().any());
+        let v = m.to_json();
+        assert_eq!(v.get("retransmits").unwrap().as_usize(), Some(6));
+        assert_eq!(v.get("resyncs").unwrap().as_usize(), Some(0));
+        assert_eq!(v.get("link_capped").unwrap().as_usize(), Some(0));
+        let r2 = &v.get("rounds").unwrap().as_arr().unwrap()[1];
+        assert_eq!(r2.get("retransmits").unwrap().as_usize(), Some(2));
+        assert_eq!(r2.get("frames_lost").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn record_codecs_round_trip_bitwise() {
+        let mut original = record(3, f64::NAN, 2, 7);
+        original.faults = FaultCounters {
+            retransmits: 1,
+            frames_lost: 2,
+            frames_corrupt: 3,
+            dup_suppressed: 4,
+            resyncs: 5,
+            recoveries: 6,
+        };
+        let ctl = ControlRecord {
+            round: 4,
+            vtime: 4.5,
+            controller: "trim".into(),
+            knob: "trim_fraction".into(),
+            old: 0.1,
+            new: 0.15,
+            signal: f64::NAN,
+            client: Some(9),
+        };
+        let mut enc = Enc::new();
+        original.save(&mut enc);
+        ctl.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let r = RoundRecord::load(&mut dec).unwrap();
+        let c = ControlRecord::load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(r.round, original.round);
+        assert_eq!(r.vtime.to_bits(), original.vtime.to_bits());
+        assert_eq!(r.global_acc.to_bits(), original.global_acc.to_bits(), "NaN by bits");
+        assert_eq!(r.trust_mean.to_bits(), original.trust_mean.to_bits());
+        assert_eq!(r.cum_uploads, original.cum_uploads);
+        assert_eq!(r.bytes_up, original.bytes_up);
+        assert_eq!(r.bytes_down_ctrl, original.bytes_down_ctrl);
+        let vb = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(vb(&r.values), vb(&original.values));
+        assert_eq!(r.selected, original.selected);
+        assert_eq!(vb(&r.client_accs), vb(&original.client_accs));
+        assert_eq!(r.upload_staleness, original.upload_staleness);
+        assert_eq!(r.shard, original.shard);
+        assert_eq!(r.spec_committed, original.spec_committed);
+        assert_eq!(r.quarantined, original.quarantined);
+        assert_eq!(r.faults, original.faults);
+        assert_eq!(c.round, ctl.round);
+        assert_eq!(c.controller, ctl.controller);
+        assert_eq!(c.knob, ctl.knob);
+        assert_eq!(c.old.to_bits(), ctl.old.to_bits());
+        assert_eq!(c.new.to_bits(), ctl.new.to_bits());
+        assert_eq!(c.signal.to_bits(), ctl.signal.to_bits());
+        assert_eq!(c.client, ctl.client);
     }
 
     #[test]

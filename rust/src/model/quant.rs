@@ -223,6 +223,33 @@ impl QuantBuf {
         }
     }
 
+    /// FNV-1a checksum over the payload's wire content (precision tag,
+    /// length, int8 scale bits, body bytes) — the integrity field of the
+    /// fault-injection layer's frame header. Deterministic, and any
+    /// single-byte payload change flips it.
+    pub fn checksum(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        };
+        eat(match self.precision {
+            Precision::F32 => 0,
+            Precision::F16 => 1,
+            Precision::Int8 => 2,
+        });
+        for b in (self.n as u64).to_le_bytes() {
+            eat(b);
+        }
+        for b in self.scale.to_bits().to_le_bytes() {
+            eat(b);
+        }
+        for &b in &self.data {
+            eat(b);
+        }
+        h
+    }
+
     /// Decode the whole payload into `out` (the broadcast receive path;
     /// reuses the caller's buffer instead of allocating).
     pub fn decode_into(&self, out: &mut [f32]) {
@@ -551,6 +578,25 @@ mod tests {
         buf.decode_into(&mut out);
         assert!((out[0] - 0.5).abs() < 0.01);
         assert!(!buf.is_empty());
+    }
+
+    #[test]
+    fn checksum_is_deterministic_and_content_sensitive() {
+        let params = vec![0.1f32, -0.5, 2.0, 7.25];
+        let mut a = QuantBuf::new();
+        let mut b = QuantBuf::new();
+        for p in [Precision::F32, Precision::F16, Precision::Int8] {
+            a.encode(p, &params);
+            b.encode(p, &params);
+            assert_eq!(a.checksum(), b.checksum(), "{}", p.name());
+        }
+        // Any value change flips the sum.
+        a.encode(Precision::F32, &params);
+        b.encode(Precision::F32, &[0.1f32, -0.5, 2.0, 7.26]);
+        assert_ne!(a.checksum(), b.checksum());
+        // Precision is part of the sum even for similar bodies.
+        b.encode(Precision::F16, &params);
+        assert_ne!(a.checksum(), b.checksum());
     }
 
     #[test]

@@ -301,6 +301,34 @@ impl SparseDelta {
         }
     }
 
+    /// FNV-1a checksum over the payload's wire content (dimension, sorted
+    /// index block, value-body checksum) — the integrity field of the
+    /// fault-injection layer's frame header. A payload with every index
+    /// block elided (`k == dim`) hashes its (empty) index list the same
+    /// way, so the sum stays well-defined across both layouts.
+    pub fn checksum(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        };
+        for b in (self.dim as u64).to_le_bytes() {
+            eat(b);
+        }
+        for b in (self.indices.len() as u64).to_le_bytes() {
+            eat(b);
+        }
+        for &i in &self.indices {
+            for b in i.to_le_bytes() {
+                eat(b);
+            }
+        }
+        for b in self.values.checksum().to_le_bytes() {
+            eat(b);
+        }
+        h
+    }
+
     /// Dequantized value at coordinate `idx`, or `None` when `idx` was not
     /// transmitted — binary search over the sorted index block (attack /
     /// robustness diagnostics; the hot paths walk cursors instead).
@@ -562,6 +590,24 @@ mod tests {
         assert_eq!(sd.value_at(3), Some(-7.0));
         assert_eq!(sd.value_at(0), None);
         assert_eq!(sd.value_at(4), None);
+    }
+
+    #[test]
+    fn checksum_covers_indices_and_values() {
+        let (params, base) = vecs(12, 50);
+        let mut a = SparseDelta::new();
+        let mut b = SparseDelta::new();
+        a.encode_topk(Precision::F32, &params, &base, None, 10);
+        b.encode_topk(Precision::F32, &params, &base, None, 10);
+        assert_eq!(a.checksum(), b.checksum(), "same encode, same sum");
+        // A different selection budget changes the index block.
+        b.encode_topk(Precision::F32, &params, &base, None, 11);
+        assert_ne!(a.checksum(), b.checksum());
+        // Same k, different values.
+        let mut bumped = params.clone();
+        bumped[0] += 100.0;
+        b.encode_topk(Precision::F32, &bumped, &base, None, 10);
+        assert_ne!(a.checksum(), b.checksum());
     }
 
     #[test]

@@ -7,7 +7,16 @@
 //! occupies the virtual clock, and simulates transient drops (retries) that
 //! make asynchrony matter.
 
+use crate::config::FaultConfig;
+use crate::util::codec::{Dec, Enc};
 use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Bytes the integrity header adds to every payload frame when fault
+/// injection is armed: 4-byte length + 8-byte checksum + 4-byte per-client
+/// monotone sequence number. Charged on uploads and sparse broadcasts; with
+/// faults disabled no header is sent and byte accounting is unchanged.
+pub const INTEGRITY_HEADER_BYTES: u64 = 16;
 
 /// Direction of a transfer relative to the client.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,6 +70,11 @@ pub struct LinkProfile {
     pub jitter_sigma: f64,
     /// Probability a transfer must be retried once (transient WLAN loss).
     pub drop_prob: f64,
+    /// Cap on delivery attempts per transfer (>= 1). When the retry loop
+    /// hits this cap the link-layer model stops retrying; callers that care
+    /// use [`LinkProfile::sample_attempts_counted`] to learn how often the
+    /// cap bound the loop instead of an observed success.
+    pub max_attempts: u32,
 }
 
 impl LinkProfile {
@@ -72,6 +86,7 @@ impl LinkProfile {
             latency_s: 0.004,
             jitter_sigma: 0.25,
             drop_prob: 0.02,
+            max_attempts: 5,
         }
     }
 
@@ -83,6 +98,7 @@ impl LinkProfile {
             latency_s: 0.0,
             jitter_sigma: 0.0,
             drop_prob: 0.0,
+            max_attempts: 5,
         }
     }
 
@@ -98,16 +114,38 @@ impl LinkProfile {
             latency_s: 0.08,
             jitter_sigma: 0.8,
             drop_prob: 0.15,
+            max_attempts: 5,
         }
     }
 
     /// Delivery attempts for one transfer: 1 plus one re-delivery per
-    /// transient drop, capped at 5 attempts. Each drop consumes exactly
-    /// one uniform draw from `rng`, so the retry count is reproducible
-    /// from the stream.
+    /// transient drop, capped at `max_attempts`. Each drop consumes
+    /// exactly one uniform draw from `rng`, so the retry count is
+    /// reproducible from the stream.
     pub fn sample_attempts(&self, rng: &mut Rng) -> u32 {
+        let mut capped = 0u64;
+        self.sample_attempts_counted(rng, &mut capped)
+    }
+
+    /// [`LinkProfile::sample_attempts`], but counting the transfers whose
+    /// retry loop was stopped by the attempt cap rather than by a success
+    /// draw. The old model pretended the capped-out attempt succeeded;
+    /// the count makes that optimism visible in telemetry instead of
+    /// silent. Draw-stream identical to `sample_attempts`.
+    pub fn sample_attempts_counted(&self, rng: &mut Rng, capped: &mut u64) -> u32 {
+        let cap = self.max_attempts.max(1);
         let mut attempts = 1u32;
-        while self.drop_prob > 0.0 && rng.f64() < self.drop_prob && attempts < 5 {
+        while self.drop_prob > 0.0 {
+            let dropped = rng.f64() < self.drop_prob;
+            if !dropped {
+                break; // observed success
+            }
+            if attempts >= cap {
+                // The draw said "dropped again" but the cap forces the
+                // loop to stop and assume delivery it never sampled.
+                *capped += 1;
+                break;
+            }
             attempts += 1;
         }
         attempts
@@ -115,6 +153,13 @@ impl LinkProfile {
 
     /// Virtual seconds to deliver `msg`, including retries.
     pub fn transfer_seconds(&self, msg: &Message, rng: &mut Rng) -> f64 {
+        let mut capped = 0u64;
+        self.transfer_seconds_counted(msg, rng, &mut capped)
+    }
+
+    /// [`LinkProfile::transfer_seconds`] with capped-out retry accounting
+    /// (see [`LinkProfile::sample_attempts_counted`]).
+    pub fn transfer_seconds_counted(&self, msg: &Message, rng: &mut Rng, capped: &mut u64) -> f64 {
         let mbps = match msg.direction() {
             Direction::Up => self.up_mbps,
             Direction::Down => self.down_mbps,
@@ -124,8 +169,159 @@ impl LinkProfile {
         } else {
             0.0
         };
-        let attempts = self.sample_attempts(rng);
+        let attempts = self.sample_attempts_counted(rng, capped);
         (wire + self.latency_s) * attempts as f64 * rng.lognormal_jitter(self.jitter_sigma)
+    }
+}
+
+/// What happened to one injected frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFate {
+    /// Arrived intact.
+    Delivered,
+    /// Terminally lost (no bytes arrive; sender times out and retransmits).
+    Lost,
+    /// Arrived but fails its integrity checksum (receiver treats it as
+    /// lost and NACKs / waits for retransmit); counted separately.
+    Corrupt,
+    /// Arrived intact and a stale duplicate arrives later (suppressed at
+    /// the receiver via the monotone per-client sequence number).
+    Duplicated,
+}
+
+/// Deterministic fault-injection plan: terminal loss, corruption,
+/// duplication, reordering, client crashes, and server outage windows, all
+/// drawn from RNG streams forked off the experiment root. Every draw
+/// happens at an event-queue pop point in the (single-threaded) engine
+/// loop, so fault schedules are seed-reproducible and thread-count
+/// invariant by construction.
+///
+/// With `[faults] enabled = false` no plan is built and no stream is ever
+/// consumed — fault-free runs stay bitwise identical to pre-fault builds.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// Uplink frame fates + reorder delays.
+    up_rng: Rng,
+    /// Downlink (broadcast) frame fates.
+    down_rng: Rng,
+    /// Client crash schedule.
+    crash_rng: Rng,
+}
+
+impl FaultPlan {
+    /// Fork the fault streams off the experiment root RNG.
+    pub fn new(cfg: &FaultConfig, root: &Rng) -> Self {
+        FaultPlan {
+            cfg: *cfg,
+            up_rng: root.fork("faults/up"),
+            down_rng: root.fork("faults/down"),
+            crash_rng: root.fork("faults/crash"),
+        }
+    }
+
+    pub fn cfg(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Classify one fate draw `u` against stacked probability bands.
+    fn fate(u: f64, loss: f64, corrupt: f64, dup: f64) -> FrameFate {
+        if u < loss {
+            FrameFate::Lost
+        } else if u < loss + corrupt {
+            FrameFate::Corrupt
+        } else if u < loss + corrupt + dup {
+            FrameFate::Duplicated
+        } else {
+            FrameFate::Delivered
+        }
+    }
+
+    /// Fate of one uplink payload frame arriving at virtual time `now`.
+    /// During a server outage window every frame is lost without consuming
+    /// a draw (the outage schedule is purely arithmetic); otherwise exactly
+    /// one uniform is drawn per call.
+    pub fn up_fate(&mut self, now: f64) -> FrameFate {
+        if self.in_outage(now) {
+            return FrameFate::Lost;
+        }
+        let u = self.up_rng.f64();
+        Self::fate(u, self.cfg.loss_prob, self.cfg.corrupt_prob, self.cfg.dup_prob)
+    }
+
+    /// Fate of one downlink (broadcast) frame; one uniform per call.
+    /// Duplication is not modeled downstream — a duplicate broadcast is
+    /// harmlessly idempotent on the client.
+    pub fn down_fate(&mut self) -> FrameFate {
+        let u = self.down_rng.f64();
+        Self::fate(u, self.cfg.down_loss_prob, self.cfg.down_corrupt_prob, 0.0)
+    }
+
+    /// True while the server sits inside a scheduled outage window.
+    /// Windows open at `outage_every, 2*outage_every, ...` (never at t=0,
+    /// which would kill the boot uploads) and last `outage_len` seconds.
+    pub fn in_outage(&self, now: f64) -> bool {
+        self.cfg.outage_every > 0.0
+            && now >= self.cfg.outage_every
+            && (now % self.cfg.outage_every) < self.cfg.outage_len
+    }
+
+    /// Crash draw for a client reaching a scheduling point. Consumes one
+    /// uniform per call only when crashes are armed.
+    pub fn crash(&mut self) -> bool {
+        self.cfg.crash_prob > 0.0 && self.crash_rng.f64() < self.cfg.crash_prob
+    }
+
+    /// Extra delivery delay modeling reordering: with `reorder_prob`, a
+    /// delivered frame is held for up to `reorder_window` extra seconds,
+    /// letting later frames overtake it (the sequence number makes the
+    /// overtaken frame a suppressible stale duplicate when it mattered).
+    pub fn reorder_delay(&mut self) -> f64 {
+        if self.cfg.reorder_prob > 0.0 && self.up_rng.f64() < self.cfg.reorder_prob {
+            self.up_rng.f64() * self.cfg.reorder_window
+        } else {
+            0.0
+        }
+    }
+
+    /// Sender backoff before retransmit number `attempt` (1-based):
+    /// `backoff_base * 2^(attempt-1)`, capped at `backoff_cap`.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(30);
+        (self.cfg.backoff_base * f64::powi(2.0, exp as i32)).min(self.cfg.backoff_cap)
+    }
+
+    pub fn max_retransmits(&self) -> u32 {
+        self.cfg.max_retransmits
+    }
+
+    pub fn crash_downtime(&self) -> f64 {
+        self.cfg.crash_downtime
+    }
+
+    pub fn checkpoint_every(&self) -> usize {
+        self.cfg.checkpoint_every
+    }
+
+    /// Serialize the three stream positions (the config half is rebuilt
+    /// from the experiment config on restore).
+    pub fn save(&self, enc: &mut Enc) {
+        for rng in [&self.up_rng, &self.down_rng, &self.crash_rng] {
+            let (s, spare) = rng.state();
+            enc.u64s(&s);
+            enc.opt_f64(spare);
+        }
+    }
+
+    /// Restore stream positions into a freshly built plan.
+    pub fn load(&mut self, dec: &mut Dec) -> Result<()> {
+        for rng in [&mut self.up_rng, &mut self.down_rng, &mut self.crash_rng] {
+            let s = dec.u64s()?;
+            anyhow::ensure!(s.len() == 4, "bad rng state length {}", s.len());
+            let spare = dec.opt_f64()?;
+            *rng = Rng::from_state([s[0], s[1], s[2], s[3]], spare);
+        }
+        Ok(())
     }
 }
 
@@ -261,5 +457,178 @@ mod tests {
             (0..5).map(|_| l.transfer_seconds(&msg, &mut Rng::new(5))).collect();
         // same fresh seed each call -> identical
         assert!(a.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn attempt_cap_is_configurable_and_counted() {
+        let mut l = no_jitter(LinkProfile::paper_lan());
+        l.drop_prob = 0.9999;
+        // With a near-certain drop, every transfer caps out at max_attempts
+        // and each cap-out is counted instead of silently "succeeding".
+        for cap in [1u32, 2, 3, 8] {
+            l.max_attempts = cap;
+            let mut capped = 0u64;
+            let mut rng = Rng::new(77);
+            for _ in 0..50 {
+                let a = l.sample_attempts_counted(&mut rng, &mut capped);
+                assert_eq!(a, cap, "cap {cap}");
+            }
+            assert_eq!(capped, 50, "cap {cap}");
+        }
+        // A reliable link never caps out.
+        l.drop_prob = 0.0;
+        l.max_attempts = 3;
+        let mut capped = 0u64;
+        let mut rng = Rng::new(78);
+        assert_eq!(l.sample_attempts_counted(&mut rng, &mut capped), 1);
+        assert_eq!(capped, 0);
+    }
+
+    #[test]
+    fn counted_variant_matches_legacy_draw_stream() {
+        // sample_attempts (cap 5) must consume the exact same uniforms as
+        // the pre-cap-fix loop so all golden streams stay bitwise. Oracle:
+        // one draw per iteration; success draw exits; a drop draw at the
+        // cap exits (that draw is still consumed).
+        let mut l = no_jitter(LinkProfile::paper_lan());
+        for &p in &[0.05, 0.5, 0.9999] {
+            l.drop_prob = p;
+            for seed in 0..100u64 {
+                let mut rng = Rng::new(0xCAFE + seed);
+                let _ = l.sample_attempts(&mut rng);
+                let mut oracle = Rng::new(0xCAFE + seed);
+                let mut attempts = 1u32;
+                while oracle.f64() < p {
+                    if attempts >= 5 {
+                        break;
+                    }
+                    attempts += 1;
+                }
+                // Both streams must now be at the same position.
+                assert_eq!(rng.next_u64(), oracle.next_u64(), "p={p} seed={seed}");
+            }
+        }
+    }
+
+    fn chaos_cfg() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            loss_prob: 0.2,
+            corrupt_prob: 0.1,
+            dup_prob: 0.1,
+            down_loss_prob: 0.15,
+            down_corrupt_prob: 0.05,
+            reorder_prob: 0.25,
+            reorder_window: 0.5,
+            max_retransmits: 4,
+            backoff_base: 0.05,
+            backoff_cap: 1.0,
+            crash_prob: 0.01,
+            crash_downtime: 5.0,
+            outage_every: 40.0,
+            outage_len: 2.0,
+            checkpoint_every: 0,
+        }
+    }
+
+    #[test]
+    fn fault_plan_is_seed_reproducible() {
+        let cfg = chaos_cfg();
+        let root = Rng::new(2021);
+        let mut a = FaultPlan::new(&cfg, &root);
+        let mut b = FaultPlan::new(&cfg, &root);
+        for i in 0..500 {
+            let t = i as f64 * 0.37;
+            assert_eq!(a.up_fate(t), b.up_fate(t));
+            assert_eq!(a.down_fate(), b.down_fate());
+            assert_eq!(a.crash(), b.crash());
+            assert_eq!(a.reorder_delay().to_bits(), b.reorder_delay().to_bits());
+        }
+    }
+
+    #[test]
+    fn fault_plan_streams_are_independent() {
+        // Consuming only the downlink stream must not move the uplink
+        // stream (forked labels), so adding down-faults never perturbs
+        // up-fault schedules.
+        let cfg = chaos_cfg();
+        let root = Rng::new(99);
+        let mut a = FaultPlan::new(&cfg, &root);
+        let mut b = FaultPlan::new(&cfg, &root);
+        for _ in 0..100 {
+            let _ = b.down_fate();
+        }
+        for _ in 0..100 {
+            assert_eq!(a.up_fate(1.0), b.up_fate(1.0));
+        }
+    }
+
+    #[test]
+    fn disabled_faults_consume_no_randomness() {
+        let mut cfg = chaos_cfg();
+        cfg.crash_prob = 0.0;
+        cfg.reorder_prob = 0.0;
+        let root = Rng::new(5);
+        let mut plan = FaultPlan::new(&cfg, &root);
+        // crash and reorder draws are gated on their probabilities.
+        let before = plan.crash_rng.clone().next_u64();
+        assert!(!plan.crash());
+        assert_eq!(plan.crash_rng.next_u64(), before);
+        let before = plan.up_rng.clone().next_u64();
+        assert_eq!(plan.reorder_delay(), 0.0);
+        assert_eq!(plan.up_rng.next_u64(), before);
+    }
+
+    #[test]
+    fn outage_windows_are_arithmetic_and_never_at_boot() {
+        let cfg = chaos_cfg(); // every 40 s, 2 s long
+        let root = Rng::new(1);
+        let plan = FaultPlan::new(&cfg, &root);
+        assert!(!plan.in_outage(0.0), "no outage at boot");
+        assert!(!plan.in_outage(1.9));
+        assert!(plan.in_outage(40.5));
+        assert!(!plan.in_outage(42.5));
+        assert!(plan.in_outage(81.0));
+        // Disabled outages.
+        let mut cfg2 = cfg;
+        cfg2.outage_every = 0.0;
+        let plan2 = FaultPlan::new(&cfg2, &root);
+        assert!(!plan2.in_outage(40.5));
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let cfg = chaos_cfg(); // base 0.05, cap 1.0
+        let plan = FaultPlan::new(&cfg, &Rng::new(1));
+        assert!((plan.backoff(1) - 0.05).abs() < 1e-12);
+        assert!((plan.backoff(2) - 0.10).abs() < 1e-12);
+        assert!((plan.backoff(3) - 0.20).abs() < 1e-12);
+        assert_eq!(plan.backoff(30), 1.0, "cap binds");
+        assert_eq!(plan.backoff(200), 1.0, "huge attempts saturate safely");
+    }
+
+    #[test]
+    fn fault_plan_save_load_resumes_streams_bitwise() {
+        let cfg = chaos_cfg();
+        let root = Rng::new(7);
+        let mut a = FaultPlan::new(&cfg, &root);
+        for i in 0..57 {
+            let _ = a.up_fate(i as f64);
+            let _ = a.down_fate();
+            let _ = a.crash();
+        }
+        let mut enc = Enc::new();
+        a.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut b = FaultPlan::new(&cfg, &root);
+        let mut dec = Dec::new(&bytes);
+        b.load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        for i in 0..200 {
+            let t = 100.0 + i as f64;
+            assert_eq!(a.up_fate(t), b.up_fate(t));
+            assert_eq!(a.down_fate(), b.down_fate());
+            assert_eq!(a.crash(), b.crash());
+        }
     }
 }

@@ -1,0 +1,382 @@
+//! Versioned little-endian binary codec for engine checkpoints (the crate
+//! cache has no serde): a push-only [`Enc`] writer and a bounds-checked
+//! [`Dec`] reader. Floats round-trip through their raw bits, so a
+//! save/load cycle is bitwise lossless — the property the crash-recovery
+//! tests pin (kill-at-checkpoint + restore must reproduce the committed
+//! record stream exactly).
+//!
+//! The format is deliberately dumb: fixed-width integers, length-prefixed
+//! slices, no field tags. Every consumer writes a magic + version header
+//! first ([`Enc::header`] / [`Dec::expect_header`]) and bumps the version
+//! whenever its field layout changes; a reader never skips unknown bytes.
+
+use anyhow::{bail, Result};
+
+/// Append-only checkpoint writer.
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    /// Finish, yielding the raw bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Write a section header: 8 magic bytes + a format version.
+    pub fn header(&mut self, magic: &[u8; 8], version: u32) {
+        self.buf.extend_from_slice(magic);
+        self.u32(version);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` is written as `u64` so checkpoints are word-size portable.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Bit-exact float: NaN payloads and signed zeros survive.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.f64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed `f32` slice (bit-exact).
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    /// Length-prefixed `f64` slice (bit-exact).
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    /// Length-prefixed `usize` slice.
+    pub fn usizes(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+
+    /// Length-prefixed `u64` slice.
+    pub fn u64s(&mut self, v: &[u64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    /// Length-prefixed `bool` slice (one byte per flag).
+    pub fn bools(&mut self, v: &[bool]) {
+        self.usize(v.len());
+        for &x in v {
+            self.bool(x);
+        }
+    }
+}
+
+/// Bounds-checked checkpoint reader over a borrowed byte slice.
+#[derive(Debug)]
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "checkpoint truncated: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read and verify a section header written by [`Enc::header`].
+    pub fn expect_header(&mut self, magic: &[u8; 8], version: u32) -> Result<()> {
+        let got = self.take(8)?;
+        if got != magic {
+            bail!("bad checkpoint magic: wanted {magic:?}, got {got:?}");
+        }
+        let v = self.u32()?;
+        if v != version {
+            bail!(
+                "unsupported checkpoint version {v} for section {:?} (this build reads {version})",
+                String::from_utf8_lossy(magic)
+            );
+        }
+        Ok(())
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("bad bool byte {other} at offset {}", self.pos - 1),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        if v > usize::MAX as u64 {
+            bail!("checkpoint count {v} overflows usize");
+        }
+        Ok(v as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        Ok(String::from_utf8(b.to_vec())?)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.usize()?);
+        }
+        Ok(out)
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn bools(&mut self) -> Result<Vec<bool>> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.bool()?);
+        }
+        Ok(out)
+    }
+
+    /// Assert the whole buffer was consumed — a trailing-garbage guard
+    /// for top-level checkpoint loads.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("checkpoint has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip_bitwise() {
+        let mut e = Enc::new();
+        e.header(b"VAFLTEST", 3);
+        e.u8(7);
+        e.bool(true);
+        e.bool(false);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX - 1);
+        e.usize(123_456);
+        e.f64(-0.0);
+        e.f64(f64::NAN);
+        e.f32(core::f32::consts::PI);
+        e.opt_f64(Some(2.5));
+        e.opt_f64(None);
+        e.str("checkpoint");
+        let bytes = e.into_bytes();
+
+        let mut d = Dec::new(&bytes);
+        d.expect_header(b"VAFLTEST", 3).unwrap();
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert!(!d.bool().unwrap());
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(d.usize().unwrap(), 123_456);
+        assert_eq!(d.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(d.f64().unwrap().is_nan());
+        assert_eq!(d.f32().unwrap().to_bits(), core::f32::consts::PI.to_bits());
+        assert_eq!(d.opt_f64().unwrap(), Some(2.5));
+        assert_eq!(d.opt_f64().unwrap(), None);
+        assert_eq!(d.str().unwrap(), "checkpoint");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn slices_round_trip_bitwise() {
+        let mut e = Enc::new();
+        e.f32s(&[1.5, -0.0, f32::NAN]);
+        e.f64s(&[]);
+        e.usizes(&[0, 9, usize::MAX]);
+        e.u64s(&[42]);
+        e.bools(&[true, false, true]);
+        e.bytes(&[1, 2, 3]);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let f = d.f32s().unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[0], 1.5);
+        assert_eq!(f[1].to_bits(), (-0.0f32).to_bits());
+        assert!(f[2].is_nan());
+        assert!(d.f64s().unwrap().is_empty());
+        assert_eq!(d.usizes().unwrap(), vec![0, 9, usize::MAX]);
+        assert_eq!(d.u64s().unwrap(), vec![42]);
+        assert_eq!(d.bools().unwrap(), vec![true, false, true]);
+        assert_eq!(d.bytes().unwrap(), &[1, 2, 3]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_garbage_are_loud() {
+        let mut e = Enc::new();
+        e.u64(1);
+        let bytes = e.into_bytes();
+        // Truncated mid-field.
+        let mut d = Dec::new(&bytes[..4]);
+        assert!(d.u64().is_err());
+        // Wrong magic / version.
+        let mut e = Enc::new();
+        e.header(b"VAFLTEST", 1);
+        let bytes = e.into_bytes();
+        assert!(Dec::new(&bytes).expect_header(b"VAFLXXXX", 1).is_err());
+        assert!(Dec::new(&bytes).expect_header(b"VAFLTEST", 2).is_err());
+        // Trailing bytes rejected by finish().
+        let mut d = Dec::new(&bytes);
+        d.expect_header(b"VAFLTEST", 1).unwrap();
+        assert!(d.finish().is_ok());
+        let mut e2 = Enc::new();
+        e2.header(b"VAFLTEST", 1);
+        e2.u8(0);
+        let b2 = e2.into_bytes();
+        let mut d2 = Dec::new(&b2);
+        d2.expect_header(b"VAFLTEST", 1).unwrap();
+        assert!(d2.finish().is_err());
+        // A bool byte that is neither 0 nor 1 is rejected.
+        let mut d3 = Dec::new(&[9]);
+        assert!(d3.bool().is_err());
+    }
+}

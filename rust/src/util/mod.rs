@@ -2,6 +2,7 @@
 //! rand / log): deterministic RNG streams, a JSON reader/writer, a
 //! TOML-subset config parser, a leveled logger, and simple timers.
 
+pub mod codec;
 pub mod json;
 pub mod logging;
 pub mod par;

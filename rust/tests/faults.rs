@@ -1,0 +1,505 @@
+//! Fault-injection and crash-recovery tests: disabled faults are bitwise
+//! invisible, armed faults are seed-deterministic and execution-strategy
+//! invariant, random fault plans always terminate, kill-at-checkpoint +
+//! restore resumes the committed `RoundRecord` stream bitwise, downlink
+//! losses force dense resyncs, the adaptive trim controller emits a
+//! deterministic decision stream, and the legacy lossy link surfaces its
+//! capped-out retry loops instead of silently converting them to success.
+//!
+//! `tools/check.sh` runs this suite under `VAFL_THREADS=1` and
+//! `VAFL_THREADS=4`, so every assertion here is also a thread-count
+//! invariance check.
+
+use vafl::config::{
+    Algorithm, AsyncEngineConfig, AttackConfig, AttackMode, Backend, CompressionConfig,
+    CompressionMode, ControlConfig, EngineMode, ExperimentConfig, FaultConfig, RobustConfig,
+    RobustMode,
+};
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::metrics::{FaultCounters, RoundRecord, RunMetrics};
+use vafl::util::rng::Rng;
+
+fn quick(which: char, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = Algorithm::Vafl;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 96;
+    cfg.test_samples = 64;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    cfg.seed = 2021;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+fn barrier_free(cfg: &mut ExperimentConfig) {
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+}
+
+/// A fault plan hot enough to exercise every uplink/downlink/crash path
+/// within a handful of rounds.
+fn armed() -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        loss_prob: 0.15,
+        corrupt_prob: 0.05,
+        dup_prob: 0.10,
+        down_loss_prob: 0.10,
+        down_corrupt_prob: 0.05,
+        reorder_prob: 0.2,
+        reorder_window: 0.5,
+        max_retransmits: 3,
+        crash_prob: 0.02,
+        crash_downtime: 2.0,
+        outage_every: 40.0,
+        outage_len: 2.0,
+        ..Default::default()
+    }
+}
+
+fn total_faults(m: &RunMetrics) -> FaultCounters {
+    let mut t = FaultCounters::default();
+    for r in &m.records {
+        t.add(&r.faults);
+    }
+    t
+}
+
+/// Bitwise equality of committed rounds, excluding only the speculation
+/// telemetry (which records *how* the engine executed, not what it
+/// computed). Fault counters are committed state and must match exactly.
+fn assert_records_equal(x: &RoundRecord, y: &RoundRecord) {
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.shard, y.shard, "round {}", x.round);
+    assert_eq!(x.vtime.to_bits(), y.vtime.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.threshold.to_bits(), y.threshold.to_bits(), "round {}", x.round);
+    assert_eq!(x.uploads, y.uploads, "round {}", x.round);
+    assert_eq!(x.cum_uploads, y.cum_uploads, "round {}", x.round);
+    assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+    assert_eq!(x.bytes_up_ctrl, y.bytes_up_ctrl, "round {}", x.round);
+    assert_eq!(x.bytes_down_ctrl, y.bytes_down_ctrl, "round {}", x.round);
+    assert_eq!(x.reports, y.reports, "round {}", x.round);
+    assert_eq!(x.in_flight, y.in_flight, "round {}", x.round);
+    assert_eq!(x.selected, y.selected, "round {}", x.round);
+    assert_eq!(x.upload_staleness, y.upload_staleness, "round {}", x.round);
+    assert_eq!(x.faults, y.faults, "round {}", x.round);
+}
+
+fn assert_streams_equal(a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.records.len(), b.records.len(), "record counts differ");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_records_equal(x, y);
+    }
+    assert_eq!(a.control_records.len(), b.control_records.len());
+    for (c, d) in a.control_records.iter().zip(&b.control_records) {
+        assert_eq!(c.round, d.round);
+        assert_eq!(c.knob, d.knob);
+        assert_eq!(c.old.to_bits(), d.old.to_bits());
+        assert_eq!(c.new.to_bits(), d.new.to_bits());
+        assert_eq!(c.signal.to_bits(), d.signal.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Disabled faults are bitwise invisible
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_fault_layer_is_bitwise_invisible() {
+    // `enabled = false` with every probability cranked must produce the
+    // exact stream of a default config: the disarmed layer draws no RNG
+    // and charges no bytes. Checked on both engines.
+    for engine in [EngineMode::Barriered, EngineMode::BarrierFree] {
+        let mut base = quick('a', 5);
+        if engine == EngineMode::BarrierFree {
+            barrier_free(&mut base);
+        } else {
+            base.engine = EngineMode::Barriered;
+        }
+        let mut hot = base.clone();
+        hot.faults = FaultConfig {
+            enabled: false,
+            loss_prob: 0.9,
+            corrupt_prob: 0.05,
+            dup_prob: 0.05,
+            down_loss_prob: 0.9,
+            crash_prob: 0.5,
+            outage_every: 5.0,
+            outage_len: 2.0,
+            ..Default::default()
+        };
+        let a = experiments::run(&base).unwrap();
+        let b = experiments::run(&hot).unwrap();
+        assert_streams_equal(&a.metrics, &b.metrics);
+        assert!(
+            !total_faults(&a.metrics).any(),
+            "fault counters fired with the layer disarmed ({engine:?})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Armed faults: deterministic, seed-sensitive, execution-strategy invariant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn armed_faults_are_deterministic_and_seed_sensitive() {
+    let mut cfg = quick('b', 8);
+    barrier_free(&mut cfg);
+    cfg.faults = armed();
+    let a = experiments::run(&cfg).unwrap();
+    let b = experiments::run(&cfg).unwrap();
+    assert_streams_equal(&a.metrics, &b.metrics);
+    let t = total_faults(&a.metrics);
+    assert!(t.any(), "hot fault plan never fired: {t:?}");
+    assert!(t.retransmits > 0, "no retransmits under 20% loss+corrupt: {t:?}");
+
+    let mut other = cfg.clone();
+    other.seed += 1;
+    let c = experiments::run(&other).unwrap();
+    let same = a
+        .metrics
+        .records
+        .iter()
+        .zip(&c.metrics.records)
+        .all(|(x, y)| x.vtime.to_bits() == y.vtime.to_bits());
+    assert!(!same, "seed had no effect on the faulty event stream");
+}
+
+#[test]
+fn armed_faults_serial_matches_threaded() {
+    // Crash/retransmit/resync scheduling all happens on the event loop;
+    // speculative execution must not perturb any of it.
+    for shards in [1usize, 4] {
+        let mut cfg = quick('b', 8);
+        barrier_free(&mut cfg);
+        cfg.faults = armed();
+        cfg.engine_opts.shards = shards;
+        if shards > 1 {
+            cfg.engine_opts.reconcile_every = 2;
+        }
+        let serial = experiments::run(&cfg).unwrap();
+        let mut tcfg = cfg.clone();
+        tcfg.engine_opts.threaded = true;
+        tcfg.engine_opts.workers = 4;
+        let threaded = experiments::run(&tcfg).unwrap();
+        assert_streams_equal(&serial.metrics, &threaded.metrics);
+    }
+}
+
+#[test]
+fn barriered_engine_survives_armed_faults() {
+    // The barriered engine has no crash path (rejected in validate());
+    // everything else — loss, corruption, duplication, retransmit
+    // backoff, downlink resync — must run and stay deterministic.
+    let mut cfg = quick('a', 6);
+    cfg.engine = EngineMode::Barriered;
+    cfg.faults = FaultConfig { crash_prob: 0.0, ..armed() };
+    let a = experiments::run(&cfg).unwrap();
+    let b = experiments::run(&cfg).unwrap();
+    assert_streams_equal(&a.metrics, &b.metrics);
+    assert_eq!(a.metrics.records.len(), 6, "faulty barriered run lost rounds");
+    let t = total_faults(&a.metrics);
+    assert!(t.retransmits > 0, "barriered retransmit path never fired: {t:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Chaos property: any valid random fault plan terminates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_fault_plans_terminate() {
+    // Random (valid) fault plans on alternating engines: the run must
+    // always commit every round — give-ups reschedule, crashed clients
+    // rejoin, outages end — and never wedge the event loop.
+    let mut rng = Rng::new(0xFA017);
+    for case in 0..10 {
+        let barrierless = case % 2 == 0;
+        // Keep loss + corrupt + dup inside the simplex by drawing thirds.
+        let scale = rng.f64() * 0.9;
+        let (a, b, c) = (rng.f64(), rng.f64(), rng.f64());
+        let norm = (a + b + c).max(1e-9);
+        let faults = FaultConfig {
+            enabled: true,
+            loss_prob: scale * a / norm,
+            corrupt_prob: scale * b / norm,
+            dup_prob: scale * c / norm,
+            down_loss_prob: rng.f64() * 0.45,
+            down_corrupt_prob: rng.f64() * 0.45,
+            reorder_prob: rng.f64(),
+            reorder_window: rng.f64() * 2.0,
+            max_retransmits: rng.below(5) as u32,
+            crash_prob: if barrierless { rng.f64() * 0.05 } else { 0.0 },
+            crash_downtime: 0.5 + rng.f64() * 4.0,
+            outage_every: if rng.f64() < 0.5 { 10.0 + rng.f64() * 40.0 } else { 0.0 },
+            outage_len: rng.f64() * 3.0,
+            ..Default::default()
+        };
+        let mut cfg = quick('a', 4);
+        if barrierless {
+            barrier_free(&mut cfg);
+        } else {
+            cfg.engine = EngineMode::Barriered;
+        }
+        cfg.seed = 7000 + case as u64;
+        cfg.faults = faults.clone();
+        cfg.validate().unwrap_or_else(|e| panic!("case {case}: invalid plan {faults:?}: {e}"));
+        let out = experiments::run(&cfg)
+            .unwrap_or_else(|e| panic!("case {case} wedged under {faults:?}: {e}"));
+        assert_eq!(
+            out.metrics.records.len(),
+            cfg.rounds,
+            "case {case} lost rounds under {faults:?}"
+        );
+        for r in &out.metrics.records {
+            assert!(r.vtime.is_finite() && r.vtime >= 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crash safety: kill at a checkpoint, restore, resume bitwise
+// ---------------------------------------------------------------------------
+
+/// Run `cfg` uninterrupted; then run it again but abandon after
+/// `stop_after` commits, restore the checkpoint into a fresh server, let
+/// it finish, and demand the full committed stream matches bitwise.
+fn assert_kill_restore_resumes(cfg: &ExperimentConfig, stop_after: usize) {
+    let threaded = cfg.engine_opts.threaded;
+    let run = |server: &mut vafl::coordinator::Server,
+               exec: &mut Box<dyn vafl::runtime::Executor>| {
+        match (cfg.engine, threaded) {
+            (EngineMode::Barriered, _) => server.run(exec.as_mut()).unwrap(),
+            (EngineMode::BarrierFree, false) => server.run_event_driven(exec.as_mut()).unwrap(),
+            (EngineMode::BarrierFree, true) => {
+                let pool =
+                    experiments::make_executor_pool(cfg, experiments::engine_workers(cfg)).unwrap();
+                server.run_event_driven_threaded(exec.as_mut(), &pool).unwrap();
+                pool.shutdown();
+            }
+        }
+    };
+
+    let (mut full, mut ef) = experiments::build(cfg).unwrap();
+    run(&mut full, &mut ef);
+
+    let (mut killed, mut ek) = experiments::build(cfg).unwrap();
+    killed.stop_after(stop_after);
+    run(&mut killed, &mut ek);
+    assert_eq!(
+        killed.metrics.records.len(),
+        stop_after,
+        "stop_after({stop_after}) did not kill at the checkpoint"
+    );
+    let ckpt = killed
+        .checkpoint_bytes()
+        .unwrap_or_else(|| panic!("no checkpoint at commit {stop_after}"))
+        .to_vec();
+
+    let (mut resumed, mut er) = experiments::build(cfg).unwrap();
+    resumed.restore_checkpoint(&ckpt);
+    run(&mut resumed, &mut er);
+
+    assert_streams_equal(&full.metrics, &resumed.metrics);
+    assert_eq!(
+        full.metrics.engine_events, resumed.metrics.engine_events,
+        "resumed run re-counted or lost committed events"
+    );
+}
+
+#[test]
+fn kill_restore_resumes_bitwise_barrier_free() {
+    // checkpoint_every = 1: every commit is a legal kill point. Kill at
+    // several of them, with faults armed so the checkpoint also carries
+    // retransmit/crash/sequence state mid-flight.
+    for shards in [1usize, 4] {
+        let mut cfg = quick('b', 8);
+        barrier_free(&mut cfg);
+        cfg.faults = FaultConfig { checkpoint_every: 1, ..armed() };
+        cfg.engine_opts.shards = shards;
+        if shards > 1 {
+            cfg.engine_opts.reconcile_every = 2;
+        }
+        for stop in [1usize, 3, 6] {
+            assert_kill_restore_resumes(&cfg, stop);
+        }
+    }
+}
+
+#[test]
+fn kill_restore_resumes_bitwise_barrier_free_threaded() {
+    let mut cfg = quick('b', 8);
+    barrier_free(&mut cfg);
+    cfg.faults = FaultConfig { checkpoint_every: 1, ..armed() };
+    cfg.engine_opts.threaded = true;
+    cfg.engine_opts.workers = 4;
+    for stop in [2usize, 5] {
+        assert_kill_restore_resumes(&cfg, stop);
+    }
+}
+
+#[test]
+fn kill_restore_resumes_bitwise_barriered() {
+    let mut cfg = quick('a', 6);
+    cfg.engine = EngineMode::Barriered;
+    cfg.faults = FaultConfig { crash_prob: 0.0, checkpoint_every: 1, ..armed() };
+    for stop in [1usize, 2, 4] {
+        assert_kill_restore_resumes(&cfg, stop);
+    }
+}
+
+#[test]
+fn checkpointing_works_with_the_fault_layer_disarmed() {
+    // Crash safety is a standalone subsystem: `checkpoint_every` with
+    // the injection layer disabled must still snapshot, kill, restore,
+    // and resume bitwise — durability without simulated faults.
+    let mut cfg = quick('a', 6);
+    barrier_free(&mut cfg);
+    cfg.faults = FaultConfig { checkpoint_every: 2, ..Default::default() };
+    cfg.validate().unwrap();
+    assert_kill_restore_resumes(&cfg, 4);
+}
+
+// ---------------------------------------------------------------------------
+// Downlink integrity: lost/corrupt broadcasts force a dense resync
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lost_sparse_broadcast_forces_dense_resync() {
+    // Sparse bidirectional compression with heavy downlink loss: every
+    // failed broadcast must NACK into a forced dense re-sync (resyncs
+    // and recoveries both count), and the model stream must stay finite
+    // — no client may ever mix against a base the server didn't ack.
+    let mut cfg = quick('b', 8);
+    barrier_free(&mut cfg);
+    cfg.compression = CompressionConfig {
+        mode: CompressionMode::TopK,
+        k_fraction: 0.25,
+        error_feedback: true,
+        down_mode: CompressionMode::TopK,
+        down_k_fraction: 0.25,
+        ..Default::default()
+    };
+    cfg.faults = FaultConfig {
+        enabled: true,
+        down_loss_prob: 0.35,
+        down_corrupt_prob: 0.15,
+        ..Default::default()
+    };
+    let a = experiments::run(&cfg).unwrap();
+    let t = total_faults(&a.metrics);
+    assert!(t.resyncs > 0, "50% downlink failure never forced a resync: {t:?}");
+    assert!(t.recoveries > 0, "resyncs without dense recoveries: {t:?}");
+    assert!(t.frames_lost + t.frames_corrupt > 0);
+    for r in &a.metrics.records {
+        assert!(r.global_acc.is_finite() || r.global_acc.is_nan());
+        assert!(r.vtime.is_finite());
+    }
+    // Deterministic, like every other armed path.
+    let b = experiments::run(&cfg).unwrap();
+    assert_streams_equal(&a.metrics, &b.metrics);
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive trim controller
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trim_controller_emits_deterministic_decision_stream() {
+    // Sign-flip attackers push the windowed outlier rate far above a
+    // tiny target: the controller must widen `trim_fraction` in steps,
+    // stay inside [trim_min, trim_max], and reproduce the exact decision
+    // stream run-to-run.
+    let mut cfg = quick('b', 10);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 4,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.robust = RobustConfig {
+        mode: RobustMode::TrimmedMean,
+        trim_fraction: 0.25,
+        trust: true,
+        ..Default::default()
+    };
+    cfg.attack = AttackConfig { mode: AttackMode::SignFlip, fraction: 0.3, ..Default::default() };
+    cfg.control = ControlConfig {
+        enabled: true,
+        interval: 2,
+        window: 8,
+        trim: true,
+        trim_target: 0.02,
+        trim_deadband: 0.01,
+        trim_min: 0.05,
+        trim_max: 0.45,
+        trim_step: 0.05,
+        ..Default::default()
+    };
+    cfg.validate().unwrap();
+    let a = experiments::run(&cfg).unwrap();
+    let decisions: Vec<_> = a
+        .metrics
+        .control_records
+        .iter()
+        .filter(|c| c.knob == "trim_fraction")
+        .collect();
+    assert!(
+        !decisions.is_empty(),
+        "trim controller never moved under sign-flip pressure: {:?}",
+        a.metrics.control_records
+    );
+    for d in &decisions {
+        assert!(
+            (0.05..=0.45).contains(&d.new),
+            "trim_fraction stepped outside its bounds: {d:?}"
+        );
+        assert!(
+            (d.new - d.old).abs() <= 0.05 + 1e-12,
+            "trim controller moved more than one step: {d:?}"
+        );
+    }
+    let b = experiments::run(&cfg).unwrap();
+    assert_streams_equal(&a.metrics, &b.metrics);
+}
+
+// ---------------------------------------------------------------------------
+// Legacy lossy link: capped retry loops are counted, not hidden
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lossy_link_cap_is_surfaced_in_telemetry() {
+    // With a near-certain per-attempt drop and a tight cap, most
+    // transfers exhaust the retry loop. The old model silently reported
+    // the capped-out attempt as a success; now every such transfer is
+    // counted in `RunMetrics::link_capped`.
+    let mut cfg = quick('a', 4);
+    barrier_free(&mut cfg);
+    cfg.link.drop_prob = 0.9;
+    cfg.link.max_attempts = 2;
+    let a = experiments::run(&cfg).unwrap();
+    assert!(
+        a.metrics.link_capped > 0,
+        "90% drop with a 2-attempt cap never capped out"
+    );
+    let b = experiments::run(&cfg).unwrap();
+    assert_eq!(a.metrics.link_capped, b.metrics.link_capped, "cap telemetry not deterministic");
+
+    // A generous cap on a clean link never trips the counter.
+    let mut clean = quick('a', 4);
+    barrier_free(&mut clean);
+    clean.link.drop_prob = 0.0;
+    let c = experiments::run(&clean).unwrap();
+    assert_eq!(c.metrics.link_capped, 0);
+}

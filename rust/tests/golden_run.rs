@@ -19,7 +19,8 @@ use std::path::PathBuf;
 
 use vafl::config::{
     Algorithm, AsyncEngineConfig, AttackConfig, AttackMode, Backend, CompressionConfig,
-    CompressionMode, ControlConfig, EngineMode, ExperimentConfig, RobustConfig, RobustMode,
+    CompressionMode, ControlConfig, EngineMode, ExperimentConfig, FaultConfig, RobustConfig,
+    RobustMode,
 };
 use vafl::coordinator::MixingRule;
 use vafl::experiments;
@@ -78,6 +79,21 @@ fn snapshot_line(r: &RoundRecord) -> String {
             .collect::<Vec<_>>()
             .join(","),
     );
+    // Fault counters only when any fired, so every pre-fault snapshot is
+    // byte-identical (fault-disabled runs keep all counters at zero).
+    if r.faults.any() {
+        let f = &r.faults;
+        let _ = write!(
+            s,
+            " faults={},{},{},{},{},{}",
+            f.retransmits,
+            f.frames_lost,
+            f.frames_corrupt,
+            f.dup_suppressed,
+            f.resyncs,
+            f.recoveries,
+        );
+    }
     s
 }
 
@@ -305,6 +321,40 @@ fn golden_barrier_free_robust_round_stream_is_stable() {
     };
     vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
     run_snapshot("barrier_free_robust", &cfg);
+}
+
+#[test]
+fn golden_barrier_free_faulty_round_stream_is_stable() {
+    // Pins the fault-injection layer end to end on the barrier-free
+    // engine: seeded frame loss/corruption/duplication with sequence
+    // suppression, reorder delays, capped-backoff retransmits and
+    // give-ups, client crash/rehydrate cycles, and server outage
+    // windows. The per-round `faults=` counters (and the vtime/byte
+    // perturbations they imply) are all part of the snapshot, so any
+    // drift in the fault RNG stream or recovery scheduling fails here.
+    let mut cfg = base_cfg();
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.faults = FaultConfig {
+        enabled: true,
+        loss_prob: 0.15,
+        corrupt_prob: 0.05,
+        dup_prob: 0.10,
+        down_loss_prob: 0.10,
+        down_corrupt_prob: 0.05,
+        reorder_prob: 0.2,
+        reorder_window: 0.5,
+        max_retransmits: 3,
+        crash_prob: 0.02,
+        crash_downtime: 2.0,
+        outage_every: 40.0,
+        outage_len: 2.0,
+        ..Default::default()
+    };
+    run_snapshot("barrier_free_faulty", &cfg);
 }
 
 #[test]

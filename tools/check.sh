@@ -52,13 +52,15 @@ if [[ "${1:-}" != "--no-tests" ]]; then
     # broadcasts (broadcast) — the adaptive control plane must be inert
     # when off and thread-count invariant when on, the robust merge must
     # stay bitwise FedAvg when disarmed and thread-count invariant when
-    # armed, and the golden snapshots (including the topk, bidir,
-    # adaptive, and robust ones — the adaptive snapshot's `control` lines
-    # pin the ControlRecord stream, so controller drift diffs here) must
-    # hold, at both ends of the parallel-kernel worker range.
+    # armed, the fault-injection layer must be seed-deterministic with
+    # bitwise kill/restore resume (tests/faults.rs), and the golden
+    # snapshots (including the topk, bidir, adaptive, robust, and faulty
+    # ones — the adaptive snapshot's `control` lines pin the
+    # ControlRecord stream, so controller drift diffs here) must hold,
+    # at both ends of the parallel-kernel worker range.
     for t in 1 4; do
-        echo "== VAFL_THREADS=$t engine equivalence + sparse + broadcast + control + robust + golden =="
-        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test broadcast --test control --test robust --test golden_run; then
+        echo "== VAFL_THREADS=$t engine equivalence + sparse + broadcast + control + robust + faults + golden =="
+        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test broadcast --test control --test robust --test faults --test golden_run; then
             dump_golden_drift
             exit 1
         fi
@@ -69,7 +71,8 @@ if [[ "${1:-}" != "--no-tests" ]]; then
     # files are committed.
     missing=0
     for g in barriered barrier_free barrier_free_topk barrier_free_bidir \
-             barrier_free_adaptive barrier_free_sharded barrier_free_robust; do
+             barrier_free_adaptive barrier_free_sharded barrier_free_robust \
+             barrier_free_faulty; do
         if ! git ls-files --error-unmatch "tests/golden/$g.golden" >/dev/null 2>&1; then
             echo "NOTE: golden snapshot tests/golden/$g.golden is not committed yet —"
             echo "      this run (re)generated it; commit it from the CI reference"
