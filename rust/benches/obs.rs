@@ -1,0 +1,142 @@
+//! Bench: observability-plane overhead and export cost.
+//!
+//!     cargo bench --bench obs [-- --json]
+//!
+//! Env: VAFL_BENCH_ROUNDS (default 30), VAFL_BENCH_MOCK=1.
+//!
+//! Two sections:
+//!
+//! 1. The overhead gate: identical barrier-free runs (serial and
+//!    threaded) with the plane disarmed vs armed. Arming must cost at
+//!    most 5% wall time at the median (plus a small absolute epsilon so
+//!    sub-second runs don't gate on scheduler noise) — the hooks are one
+//!    branch when disarmed and a Vec push + ring write when armed.
+//! 2. Export cost: span counts, drop counts, and the wall time + output
+//!    size of each exporter (Chrome trace JSON, Prometheus text) on an
+//!    armed faulty run.
+//!
+//! `--json` (or `VAFL_BENCH_JSON=1`) writes every row to
+//! `BENCH_obs.json`.
+
+mod common;
+
+use vafl::config::{AsyncEngineConfig, EngineMode, ExperimentConfig, FaultConfig};
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::util::json::{obj, Value};
+use vafl::util::timer::bench;
+
+/// Median-wall-overhead budget for arming the plane.
+const GATE_RELATIVE: f64 = 1.05;
+/// Absolute slack so millisecond-scale CI runs don't gate on noise.
+const GATE_EPSILON_S: f64 = 0.015;
+
+fn base_cfg() -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = experiments::preset('b')?;
+    common::apply_env(&mut cfg, 30);
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    Ok(cfg)
+}
+
+fn faulty() -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        loss_prob: 0.15,
+        corrupt_prob: 0.05,
+        dup_prob: 0.10,
+        down_loss_prob: 0.10,
+        reorder_prob: 0.2,
+        reorder_window: 0.5,
+        max_retransmits: 3,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    vafl::util::logging::init();
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    let want_json =
+        std::env::args().any(|a| a == "--json") || std::env::var("VAFL_BENCH_JSON").is_ok();
+    let mut rows: Vec<Value> = Vec::new();
+
+    common::section("Overhead gate: disarmed vs armed (p50 wall per full run)");
+    for (label, threaded) in [("barrier_free_serial", false), ("barrier_free_threaded", true)] {
+        let mut cfg = base_cfg()?;
+        cfg.faults = faulty();
+        cfg.engine_opts.threaded = threaded;
+        if threaded {
+            cfg.engine_opts.workers = 4;
+        }
+        let mut run_with = |enabled: bool| {
+            let mut c = cfg.clone();
+            c.obs.enabled = enabled;
+            bench(1, 5, || experiments::run(&c).unwrap())
+        };
+        let off = run_with(false);
+        let on = run_with(true);
+        println!("{}", off.format_line(&format!("{label} disarmed")));
+        println!("{}", on.format_line(&format!("{label} armed")));
+        let off_s = off.p50.as_secs_f64();
+        let on_s = on.p50.as_secs_f64();
+        let budget = off_s * GATE_RELATIVE + GATE_EPSILON_S;
+        let overhead_pct = (on_s / off_s - 1.0) * 100.0;
+        println!(
+            "{label}: armed overhead {overhead_pct:+.2}% (budget 5% + {:.0}ms) — {}",
+            GATE_EPSILON_S * 1e3,
+            if on_s <= budget { "OK" } else { "FAIL" }
+        );
+        assert!(
+            on_s <= budget,
+            "{label}: armed p50 {on_s:.4}s exceeds {budget:.4}s (disarmed {off_s:.4}s)"
+        );
+        rows.push(obj(vec![
+            ("section", Value::Str("overhead_gate".into())),
+            ("case", Value::Str(label.into())),
+            ("disarmed_p50_s", Value::from(off_s)),
+            ("armed_p50_s", Value::from(on_s)),
+            ("overhead_pct", Value::from(overhead_pct)),
+            ("budget_s", Value::from(budget)),
+            ("pass", Value::from(on_s <= budget)),
+        ]));
+    }
+
+    common::section("Export cost (armed faulty run)");
+    let mut cfg = base_cfg()?;
+    cfg.faults = FaultConfig { checkpoint_every: 4, ..faulty() };
+    cfg.obs.enabled = true;
+    let out = experiments::run(&cfg)?;
+    let report = out.metrics.obs.as_ref().expect("armed run must report");
+    let (trace, trace_dt) = vafl::util::timer::time_once(|| {
+        vafl::obs::chrome_trace_json(report).to_string_compact()
+    });
+    let (prom, prom_dt) = vafl::util::timer::time_once(|| vafl::obs::prometheus_text(report));
+    println!(
+        "spans={} dropped={} trace_json={}B in {:?} prometheus={}B in {:?}",
+        report.spans.len(),
+        report.dropped,
+        trace.len(),
+        trace_dt,
+        prom.len(),
+        prom_dt,
+    );
+    rows.push(obj(vec![
+        ("section", Value::Str("export_cost".into())),
+        ("spans", Value::from(report.spans.len())),
+        ("dropped", Value::from(report.dropped as usize)),
+        ("trace_json_bytes", Value::from(trace.len())),
+        ("trace_json_ms", Value::from(trace_dt.as_secs_f64() * 1e3)),
+        ("prometheus_bytes", Value::from(prom.len())),
+        ("prometheus_ms", Value::from(prom_dt.as_secs_f64() * 1e3)),
+    ]));
+
+    if want_json {
+        let doc = obj(vec![("bench", Value::Str("obs".into())), ("rows", Value::Arr(rows))]);
+        std::fs::write("BENCH_obs.json", doc.to_string_pretty())?;
+        println!("wrote BENCH_obs.json");
+    }
+    Ok(())
+}

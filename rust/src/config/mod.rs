@@ -815,6 +815,46 @@ impl FaultConfig {
     }
 }
 
+/// Observability plane (see the `obs` module): span tracing with dual
+/// virtual/wall timestamps, the unified `MetricRegistry`, and the
+/// Perfetto / Prometheus exporters. Disabled by default — a disabled
+/// plane records nothing and runs bitwise identical to a build without
+/// it (the golden snapshots pin this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Master switch for span tracing. The `MetricRegistry` itself is
+    /// always live (it backs existing CSV/JSON columns); this arms the
+    /// span recorder, per-worker rings, and the trace exporters.
+    pub enabled: bool,
+    /// Capacity (spans) of each per-worker wall-span ring buffer.
+    /// Spans pushed into a full ring are counted as dropped, never
+    /// blocked on — the hot path stays lock-free and alloc-free.
+    pub ring_capacity: usize,
+    /// Hard cap on spans retained per run (engine-thread stream plus
+    /// drained worker rings); beyond it spans are counted as dropped.
+    /// Bounds trace memory on long runs.
+    pub max_spans: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: false, ring_capacity: 1024, max_spans: 1 << 18 }
+    }
+}
+
+impl ObsConfig {
+    /// Validate bounds (always, like `FaultConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.ring_capacity == 0 {
+            bail!("obs.ring_capacity must be >= 1");
+        }
+        if self.max_spans == 0 {
+            bail!("obs.max_spans must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// EAFLM gate constants (paper Eq. 3 and §IV-D: xi_d = 1/D, D = 1,
 /// alpha = 0.98; beta·m² folded into one threshold scale).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -931,6 +971,10 @@ pub struct ExperimentConfig {
     /// Deterministic fault injection + crash-safe checkpointing — TOML
     /// section `[faults]` (see `netsim::FaultPlan`).
     pub faults: FaultConfig,
+    /// Observability plane (span tracing + exporters) — TOML section
+    /// `[obs]`, CLI `--trace-out` / `--metrics-out` (see the `obs`
+    /// module). Off by default; off runs are bitwise identical.
+    pub obs: ObsConfig,
     /// Record the barrier-free engine's committed event stream as a
     /// `(vtime, label)` trace in `RunMetrics::event_trace` so the
     /// `--realtime` driver can replay in-flight uploads, buffer
@@ -974,6 +1018,7 @@ impl Default for ExperimentConfig {
             robust: RobustConfig::default(),
             attack: AttackConfig::default(),
             faults: FaultConfig::default(),
+            obs: ObsConfig::default(),
             trace_events: false,
         }
     }
@@ -1281,13 +1326,7 @@ impl ExperimentConfig {
                  needs every client hydrated each round"
             );
         }
-        if self.faults.checkpoint_every > 0 && self.engine_opts.edge_fanout > 1 {
-            bail!(
-                "faults.checkpoint_every cannot be combined with \
-                 engine.edge_fanout > 1: edge accumulators are not serialized \
-                 in engine checkpoints yet"
-            );
-        }
+        self.obs.validate()?;
         if let Algorithm::Eaflm = self.algorithm {
             if !(0.0 < self.eaflm.alpha && self.eaflm.alpha < 1.0) {
                 bail!("eaflm.alpha must be in (0,1)");
@@ -1695,6 +1734,16 @@ impl ExperimentConfig {
         }
         if let Some(v) = get_nonneg(&doc, "faults.checkpoint_every")? {
             cfg.faults.checkpoint_every = v;
+        }
+        // [obs] — observability plane (span tracing + exporters).
+        if let Some(v) = doc.get_bool("obs.enabled") {
+            cfg.obs.enabled = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "obs.ring_capacity")? {
+            cfg.obs.ring_capacity = v;
+        }
+        if let Some(v) = get_nonneg(&doc, "obs.max_spans")? {
+            cfg.obs.max_spans = v;
         }
         if let Some(v) = doc.get_bool("trace_events") {
             cfg.trace_events = v;
@@ -2481,17 +2530,38 @@ mod tests {
             "[faults]\nenabled = true\ncrash_prob = 0.1\n[backend]\nkind = \"mock\""
         )
         .is_err());
-        // Checkpoints don't serialize edge accumulators yet.
+        // Edge accumulators are serialized into engine checkpoints, so
+        // checkpointing composes with edge_fanout > 1 (was rejected).
         assert!(ExperimentConfig::from_toml(
             "engine = \"barrier_free\"\n[engine]\nedge_fanout = 2\n\
              [faults]\ncheckpoint_every = 4\n[backend]\nkind = \"mock\""
         )
-        .is_err());
+        .is_ok());
         // Checkpointing without armed faults is allowed (pure crash-safety).
         assert!(ExperimentConfig::from_toml(
             "[faults]\ncheckpoint_every = 4\n[backend]\nkind = \"mock\""
         )
         .is_ok());
+    }
+
+    #[test]
+    fn obs_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            "[obs]\nenabled = true\nring_capacity = 256\nmax_spans = 4096\n\
+             [backend]\nkind = \"mock\"",
+        )
+        .unwrap();
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.ring_capacity, 256);
+        assert_eq!(cfg.obs.max_spans, 4096);
+        let d = ObsConfig::default();
+        assert!(!d.enabled);
+        assert_eq!((d.ring_capacity, d.max_spans), (1024, 1 << 18));
+        // Bad bounds are rejected even when disabled.
+        for bad in ["ring_capacity = 0", "max_spans = 0", "ring_capacity = -1"] {
+            let toml = format!("[obs]\n{bad}\n[backend]\nkind = \"mock\"");
+            assert!(ExperimentConfig::from_toml(&toml).is_err(), "accepted bad [obs] {bad:?}");
+        }
     }
 
     #[test]

@@ -557,6 +557,29 @@ impl EdgeAccum {
     pub fn approx_bytes(&self) -> usize {
         (self.s.capacity() + self.t.capacity()) * std::mem::size_of::<f64>()
     }
+
+    /// Serialize the running sums into an engine checkpoint (see
+    /// `Server::checkpoint_bytes`): mid-window folds must survive a
+    /// kill/restore bitwise, so `checkpoint_every` composes with
+    /// `edge_fanout > 1`.
+    pub fn save(&self, enc: &mut crate::util::codec::Enc) {
+        enc.f64s(&self.s);
+        enc.f64s(&self.t);
+        enc.f64(self.w);
+        enc.f64(self.alpha);
+        enc.usize(self.count);
+    }
+
+    /// Inverse of [`EdgeAccum::save`].
+    pub fn load(dec: &mut crate::util::codec::Dec) -> anyhow::Result<Self> {
+        Ok(EdgeAccum {
+            s: dec.f64s()?,
+            t: dec.f64s()?,
+            w: dec.f64()?,
+            alpha: dec.f64()?,
+            count: dec.usize()?,
+        })
+    }
 }
 
 /// Combine one shard's edge accumulators into its replica `out` (see

@@ -39,6 +39,7 @@ use crate::fleet::{AttackProfile, Client, ClientReport, Fleet, FleetData};
 use crate::metrics::{ControlRecord, FaultCounters, RoundRecord, RunMetrics};
 use crate::model::ParamVec;
 use crate::netsim::{FaultPlan, FrameFate, LinkProfile, Message, INTEGRITY_HEADER_BYTES};
+use crate::obs::{Counter, Gauge, ObsPlane, ObsShared, SpanPhase, NO_CLIENT};
 use crate::runtime::{evaluate_with_params, Executor, ExecutorPool};
 use crate::sim::EventQueue;
 use crate::util::codec::{Dec, Enc};
@@ -317,9 +318,9 @@ impl EngineState {
     /// Speculations and deferred evaluations are deliberately excluded:
     /// evals are drained before every snapshot, and a restored `Start`
     /// pops with an empty speculation slot and replays its round serially
-    /// — bitwise identical to committing the fork. The edge tier is
-    /// excluded too; config validation rejects checkpointing with
-    /// `engine.edge_fanout > 1`.
+    /// — bitwise identical to committing the fork. The edge tier's
+    /// running sums ARE serialized ([`EdgeAccum::save`]), so
+    /// `checkpoint_every` composes with `engine.edge_fanout > 1`.
     fn save(&self, enc: &mut Enc) {
         enc.usize(self.pending.len());
         for p in &self.pending {
@@ -365,6 +366,10 @@ impl EngineState {
         enc.f64s(&self.edge_transmitted);
         enc.u64s(&self.tx_seq);
         enc.u64s(&self.rx_seq);
+        enc.usize(self.edges.len());
+        for e in &self.edges {
+            e.save(enc);
+        }
     }
 
     /// Restore the state saved by [`EngineState::save`] into a freshly
@@ -415,6 +420,16 @@ impl EngineState {
         self.edge_transmitted = dec.f64s()?;
         self.tx_seq = dec.u64s()?;
         self.rx_seq = dec.u64s()?;
+        let en = dec.usize()?;
+        anyhow::ensure!(
+            en == self.edges.len(),
+            "checkpoint edge-tier shape mismatch: saved {en}, engine has {}",
+            self.edges.len()
+        );
+        self.edges.clear();
+        for _ in 0..en {
+            self.edges.push(EdgeAccum::load(dec)?);
+        }
         Ok(())
     }
 }
@@ -486,7 +501,9 @@ fn dispatch_speculation(
     fleet: &Fleet,
     st: &mut EngineState,
     pool: Option<&ExecutorPool>,
+    obs: Option<&Arc<ObsShared>>,
     client: usize,
+    vtime: f64,
     knobs: RoundKnobs,
 ) -> Result<()> {
     let Some(pool) = pool else { return Ok(()) };
@@ -495,9 +512,17 @@ fn dispatch_speculation(
     let epoch = fleet.client(client).epoch();
     let round = st.local_rounds[client] + 1;
     let (tx, rx) = mpsc::channel();
+    let obs = obs.cloned();
     pool.submit(Box::new(move |exec| {
+        let ws = obs.as_ref().map_or(0.0, |o| o.now_us());
         let mut ghost = ghost;
         let rep = run_local_round(&mut ghost, exec, round, knobs);
+        if let Some(o) = &obs {
+            // Worker-side wall span; drained (and only then published)
+            // at the next flush commit, so arming tracing never touches
+            // the engine's deterministic state.
+            o.wall_span(SpanPhase::SpecExecute, client as u32, vtime, ws);
+        }
         // The engine may have abandoned this speculation (run ended);
         // a closed channel is not an error.
         let _ = tx.send((ghost, rep));
@@ -628,6 +653,12 @@ pub struct Server {
     /// Kill switch for crash tests: abandon the run right after this many
     /// commits (flushes / rounds) have been recorded. 0 = run to the end.
     stop_after: usize,
+    /// Observability plane (`[obs]`): span recorder + unified
+    /// `MetricRegistry`. The registry is always live (it mirrors the
+    /// counters behind existing CSV columns); span tracing arms only
+    /// under `obs.enabled`, and a disarmed plane records nothing — the
+    /// golden snapshots pin bitwise identity.
+    obs: ObsPlane,
 }
 
 impl Server {
@@ -663,7 +694,11 @@ impl Server {
             .down_precision
             .map_or(ctx.model_payload_bytes, |p| p.payload_bytes(init_params.len()));
         let faults = cfg.faults.enabled.then(|| FaultPlan::new(&cfg.faults, root_rng));
+        // One wall-span ring per potential pool worker plus slack for the
+        // engine thread and scoped barriered workers.
+        let obs = ObsPlane::new(&cfg.obs, crate::util::par::max_threads() + 2);
         Server {
+            obs,
             net_rng: root_rng.fork("netsim"),
             registry,
             faults,
@@ -783,14 +818,15 @@ impl Server {
         // --- 1. Local rounds + V reports (Algorithm 1 lines 4-7). The
         // barriered engine always runs fully hydrated (`fleet.active_set`
         // is barrier-free-only, config-validated), so every slot is live.
+        let vnow = self.queue.now();
         let mut reports: Vec<ClientReport> = Vec::new();
         for i in 0..self.fleet.len() {
-            let client = self.fleet.client_mut(i);
             if !self.registry.is_active(i) {
-                client.mark_stale();
+                self.fleet.client_mut(i).mark_stale();
                 continue;
             }
-            reports.push(client.local_round(
+            let ws = self.obs.wall_start();
+            reports.push(self.fleet.client_mut(i).local_round(
                 exec,
                 round,
                 self.cfg.local_passes,
@@ -799,6 +835,7 @@ impl Server {
                 self.ctx.train_flops,
                 self.ctx.eval_flops,
             )?);
+            self.obs.wall_span(SpanPhase::ClientExecute, i as u32, vnow, ws);
         }
         self.finish_round(reports, exec)
     }
@@ -821,6 +858,8 @@ impl Server {
         let lr = self.cfg.lr;
         let (tf, ef) = (self.ctx.train_flops, self.ctx.eval_flops);
         let registry = &self.registry;
+        let vnow = self.queue.now();
+        let shared = self.obs.shared();
         let mut slots: Vec<Option<Result<ClientReport>>> =
             (0..self.fleet.len()).map(|_| None).collect();
         std::thread::scope(|scope| {
@@ -832,7 +871,9 @@ impl Server {
                     continue;
                 }
                 let mut handle = svc.handle();
+                let sh = shared.clone();
                 scope.spawn(move || {
+                    let ws = sh.as_ref().map_or(0.0, |s| s.now_us());
                     *slot = Some(client.local_round(
                         &mut handle,
                         round,
@@ -842,6 +883,9 @@ impl Server {
                         tf,
                         ef,
                     ));
+                    if let Some(s) = &sh {
+                        s.wall_span(SpanPhase::ClientExecute, i as u32, vnow, ws);
+                    }
                 });
             }
         });
@@ -942,6 +986,7 @@ impl Server {
         // NaN = no robust signal this round (mode off or empty selection),
         // distinct from a clean 0.0 rate.
         let mut outlier_rate = f64::NAN;
+        let flush_ws = self.obs.wall_start();
         if n_selected > 0 {
             self.ensure_wire_slots(n_selected);
             let payload = self.upload_payload_bytes;
@@ -1011,7 +1056,14 @@ impl Server {
                                         &mut self.net_rng,
                                         &mut self.link_capped,
                                     );
+                                    let prev = arrival;
                                     arrival += plan.backoff(attempt) + redo;
+                                    self.obs.virt_span(
+                                        SpanPhase::Retransmit,
+                                        i as u32,
+                                        prev,
+                                        arrival,
+                                    );
                                     agg_time = agg_time.max(arrival);
                                 }
                             }
@@ -1150,6 +1202,10 @@ impl Server {
                 outlier_rate = rate_sum / used as f64;
             }
         }
+        if n_selected > 0 {
+            self.obs.virt_span(SpanPhase::Flush, NO_CLIENT, last_arrival, agg_time);
+            self.obs.wall_span(SpanPhase::Flush, NO_CLIENT, agg_time, flush_ws);
+        }
         self.queue.advance_to(agg_time);
 
         // --- 4. Broadcast to participants; skipped clients go stale.
@@ -1157,6 +1213,7 @@ impl Server {
         // precision (`compression.down_precision`, defaulting to the
         // upload precision); the codec runs once per round into reusable
         // buffers.
+        let bcast_ws = self.obs.wall_start();
         let down_precision = self.cfg.compression.down_precision_or(self.cfg.upload_precision);
         let bcast_model: Option<&[f32]> = if down_precision == Precision::F32 {
             None
@@ -1265,18 +1322,25 @@ impl Server {
                 self.fleet.client_mut(i).mark_stale();
             }
         }
+        if n_selected > 0 {
+            self.obs.virt_span(SpanPhase::DownlinkEncode, NO_CLIENT, agg_time, bcast_done);
+            self.obs.wall_span(SpanPhase::DownlinkEncode, NO_CLIENT, bcast_done, bcast_ws);
+        }
         self.queue.advance_to(bcast_done);
 
         self.push_history();
 
         // --- 5. Evaluate + record.
         let (global_acc, global_loss) = if round % self.cfg.eval_every == 0 {
-            evaluate_with_params(
+            let ws = self.obs.wall_start();
+            let r = evaluate_with_params(
                 exec,
                 &self.global,
                 &self.ctx.test_images[..],
                 &self.ctx.test_labels[..],
-            )?
+            )?;
+            self.obs.wall_span(SpanPhase::Eval, NO_CLIENT, self.queue.now(), ws);
+            r
         } else {
             (f64::NAN, f64::NAN)
         };
@@ -1352,7 +1416,9 @@ impl Server {
             });
             if self.control.due(round) {
                 let now = self.queue.now();
+                let ws = self.obs.wall_start();
                 self.control_tick_barriered(round, now);
+                self.obs.wall_span(SpanPhase::ControlTick, NO_CLIENT, now, ws);
             }
         }
         if self.cfg.trace_events {
@@ -1364,9 +1430,52 @@ impl Server {
                 format!("round {round}  uploads={n_selected}/{n_active}  cum={cum_uploads}"),
             ));
         }
+        self.mirror_record(&record);
+        // Round commit = the barriered engine's drain point for any
+        // worker-ring wall spans (`run_round_threaded`).
+        self.obs.drain();
         self.metrics.push(record.clone());
         self.metrics.link_capped = self.link_capped;
         Ok(record)
+    }
+
+    /// Mirror one committed record's counters onto the unified
+    /// [`MetricRegistry`] — the registry is the single source of truth
+    /// the Prometheus exporter reads, while the CSV/JSON columns keep
+    /// their historical names and order (`tests/obs.rs` pins that the
+    /// registry totals and the summed record columns agree).
+    fn mirror_record(&mut self, r: &RoundRecord) {
+        let reg = &mut self.obs.registry;
+        reg.inc(Counter::Flushes);
+        reg.add(Counter::Uploads, r.uploads as u64);
+        reg.add(Counter::SpecCommitted, r.spec_committed as u64);
+        reg.add(Counter::SpecReplayed, r.spec_replayed as u64);
+        reg.add(Counter::Quarantined, r.quarantined as u64);
+        reg.add(Counter::Retransmits, r.faults.retransmits);
+        reg.add(Counter::FramesLost, r.faults.frames_lost);
+        reg.add(Counter::FramesCorrupt, r.faults.frames_corrupt);
+        reg.add(Counter::DupSuppressed, r.faults.dup_suppressed);
+        reg.add(Counter::Resyncs, r.faults.resyncs);
+        reg.add(Counter::Recoveries, r.faults.recoveries);
+        // `link_capped` is a lifetime total on the server; the registry
+        // carries the same cumulative value via deltas (restores reload
+        // the registry alongside `link_capped`, keeping them in step).
+        let capped = self.link_capped.saturating_sub(reg.counter(Counter::LinkCapped));
+        reg.add(Counter::LinkCapped, capped);
+        reg.set_gauge(Gauge::TrustMean, r.trust_mean);
+        reg.set_gauge(Gauge::InFlight, r.in_flight as f64);
+        reg.set_gauge(Gauge::QueueDepth, self.queue.len() as f64);
+    }
+
+    /// Fold the final observability report into `RunMetrics::obs`
+    /// (idempotent; `None` while disarmed, so disarmed JSON stays
+    /// byte-identical). The engines call it when a run completes; the
+    /// threaded-barriered driver in `experiments::run` calls it after
+    /// its external round loop.
+    pub fn finalize_obs(&mut self) {
+        if self.metrics.obs.is_none() {
+            self.metrics.obs = self.obs.finalize_report();
+        }
     }
 
     /// Bound the history to what the policy needs (plus the current);
@@ -1393,18 +1502,26 @@ impl Server {
     /// abandons the run right after that many rounds (crash tests).
     pub fn run(&mut self, exec: &mut dyn Executor) -> Result<()> {
         if let Some(bytes) = self.restore.take() {
+            let ws = self.obs.wall_start();
             self.apply_barriered_checkpoint(&bytes)?;
+            self.obs.wall_span(SpanPhase::CheckpointRestore, NO_CLIENT, self.queue.now(), ws);
         }
         while self.round < self.cfg.rounds {
             self.run_round(exec)?;
             let every = self.cfg.faults.checkpoint_every;
             if every > 0 && self.round % every == 0 {
+                let ws = self.obs.wall_start();
+                // Counted before the snapshot so the registry the
+                // checkpoint carries already includes this save.
+                self.obs.registry.inc(Counter::Checkpoints);
                 self.checkpoint = Some(self.save_barriered_checkpoint());
+                self.obs.wall_span(SpanPhase::CheckpointSave, NO_CLIENT, self.queue.now(), ws);
             }
             if self.stop_after > 0 && self.round >= self.stop_after {
                 return Ok(());
             }
         }
+        self.finalize_obs();
         Ok(())
     }
 
@@ -1427,7 +1544,9 @@ impl Server {
     }
 
     const CKPT_MAGIC: &'static [u8; 8] = b"VAFLCKPT";
-    const CKPT_VERSION: u32 = 1;
+    /// v2: edge-tier accumulators in `EngineState` + the obs
+    /// `MetricRegistry` in the shared core.
+    const CKPT_VERSION: u32 = 2;
 
     /// Serialize the mutable server state shared by both engines. Config-
     /// derived state (aggregator scratch, wire buffers, policies — all
@@ -1471,6 +1590,10 @@ impl Server {
             c.save(enc);
         }
         enc.usize(self.metrics.engine_events);
+        // The unified metric registry rides the checkpoint so counter
+        // totals resume bitwise (spans do not — a restored run's trace
+        // covers the post-restore stream only).
+        self.obs.registry.save(enc);
     }
 
     /// Restore the state saved by [`Server::save_core`] into this freshly
@@ -1520,6 +1643,7 @@ impl Server {
         }
         self.metrics.engine_events = dec.usize()?;
         self.metrics.link_capped = self.link_capped;
+        self.obs.registry = crate::obs::MetricRegistry::load(dec)?;
         Ok(())
     }
 
@@ -1760,6 +1884,10 @@ impl Server {
         let mut flushes = 0usize;
         let events_before = self.queue.total_popped();
         let t0 = self.queue.now();
+        // Worker-side observability sink (armed + threaded only): cloned
+        // into every speculative dispatch so pool workers can record
+        // `SpecExecute` wall spans without touching engine state.
+        let obs_shared = self.obs.shared();
         if let Some(bytes) = self.restore.take() {
             // Resume a killed run mid-stream: the queue, fleet, RNG
             // streams, and the committed record prefix all restore
@@ -1767,6 +1895,7 @@ impl Server {
             // a restored `Start` pops with an empty slot and replays its
             // round serially, which is bitwise identical to committing
             // the speculation (the engine's core invariant).
+            let ws = self.obs.wall_start();
             self.apply_async_checkpoint(
                 &bytes,
                 &mut st,
@@ -1775,12 +1904,26 @@ impl Server {
                 &mut flushes,
                 &mut shard_models,
             )?;
+            self.obs.wall_span(
+                SpanPhase::CheckpointRestore,
+                NO_CLIENT,
+                self.queue.now(),
+                ws,
+            );
         } else {
             for i in 0..active {
                 // No-op when already hydrated (`active_set == 0` / reruns).
                 self.fleet.hydrate(i, &self.global);
                 self.queue.schedule_at(t0, EngineEvent::Start { client: i });
-                dispatch_speculation(&self.fleet, &mut st, pool, i, knobs)?;
+                dispatch_speculation(
+                    &self.fleet,
+                    &mut st,
+                    pool,
+                    obs_shared.as_ref(),
+                    i,
+                    t0,
+                    knobs,
+                )?;
             }
         }
 
@@ -1829,6 +1972,7 @@ impl Server {
                         }
                     }
                     st.local_rounds[client] += 1;
+                    let exec_ws = self.obs.wall_start();
                     let rep = match st.spec[client].take() {
                         Some(spec) => {
                             let (ghost, rep) = spec.rx.recv().map_err(|_| {
@@ -1836,6 +1980,7 @@ impl Server {
                             })?;
                             if spec.epoch == self.fleet.client(client).epoch() {
                                 st.window.spec_committed += 1;
+                                self.obs.virt_span(SpanPhase::SpecCommit, client as u32, t, t);
                                 self.fleet.client_mut(client).commit_speculation(ghost);
                                 rep?
                             } else {
@@ -1853,6 +1998,7 @@ impl Server {
                                     "speculation for client {client} superseded; replaying serially"
                                 );
                                 st.window.spec_replayed += 1;
+                                self.obs.virt_span(SpanPhase::SpecReplay, client as u32, t, t);
                                 run_local_round(
                                     self.fleet.client_mut(client),
                                     exec,
@@ -1868,6 +2014,16 @@ impl Server {
                             knobs,
                         )?,
                     };
+                    // Wall time covers the commit work on the engine thread
+                    // (recv + commit, or the serial replay); virtual time
+                    // covers the simulated compute span the record sees.
+                    self.obs.wall_span(SpanPhase::ClientExecute, client as u32, t, exec_ws);
+                    self.obs.virt_span(
+                        SpanPhase::ClientExecute,
+                        client as u32,
+                        t,
+                        t + rep.compute_seconds,
+                    );
                     st.backoff[client] = rep.compute_seconds.max(1e-9);
                     if self.cfg.trace_events {
                         self.metrics.event_trace.push((
@@ -1984,7 +2140,15 @@ impl Server {
                         self.fleet.client_mut(client).mark_stale();
                         // Keep training the (now stale) local model.
                         self.queue.schedule_at(t, EngineEvent::Start { client });
-                        dispatch_speculation(&self.fleet, &mut st, pool, client, knobs)?;
+                        dispatch_speculation(
+                            &self.fleet,
+                            &mut st,
+                            pool,
+                            obs_shared.as_ref(),
+                            client,
+                            t,
+                            knobs,
+                        )?;
                     }
                 }
                 EngineEvent::Upload { client, bytes, seq, attempt } => {
@@ -2037,7 +2201,9 @@ impl Server {
                                         &self.fleet,
                                         &mut st,
                                         pool,
+                                        obs_shared.as_ref(),
                                         client,
+                                        t,
                                         knobs,
                                     )?;
                                     continue;
@@ -2048,8 +2214,15 @@ impl Server {
                                     &mut self.net_rng,
                                     &mut self.link_capped,
                                 );
+                                let retry_at = t + plan.backoff(attempt + 1) + redo;
+                                self.obs.virt_span(
+                                    SpanPhase::Retransmit,
+                                    client as u32,
+                                    t,
+                                    retry_at,
+                                );
                                 self.queue.schedule_at(
-                                    t + plan.backoff(attempt + 1) + redo,
+                                    retry_at,
                                     EngineEvent::Upload {
                                         client,
                                         bytes,
@@ -2072,6 +2245,7 @@ impl Server {
                     let tau =
                         st.shard_version[s].saturating_sub(st.synced_version[client]) as usize;
                     st.buffers[s].push((client, tau, t));
+                    self.obs.virt_span(SpanPhase::BufferFill, client as u32, t, t);
                     if fanout > 1 {
                         // Two-tier aggregation: fold the payload into its
                         // edge accumulator now. The uploader is blocked
@@ -2097,6 +2271,11 @@ impl Server {
                     flushes += 1;
                     st.shard_version[s] += 1;
                     let version = st.shard_version[s];
+                    // The flush's virtual extent spans from the oldest
+                    // buffered arrival to the flush commit.
+                    let flush_ws = self.obs.wall_start();
+                    let flush_v0 =
+                        st.buffers[s].iter().map(|&(_, _, at)| at).fold(t, f64::min);
                     // Flush against the shard's model (S == 1: the global
                     // itself, moved out for the duration of the flush).
                     let mut model = if s_count == 1 {
@@ -2113,6 +2292,8 @@ impl Server {
                         shard_models[s] = model;
                     }
                     res?;
+                    self.obs.virt_span(SpanPhase::Flush, NO_CLIENT, flush_v0, t);
+                    self.obs.wall_span(SpanPhase::Flush, NO_CLIENT, t, flush_ws);
                     if s_count > 1 && flushes % reconcile_every == 0 {
                         self.reconcile_shards(&mut shard_models, &st.shard_weight);
                         // Adaptive shard rebalancing happens only at
@@ -2125,7 +2306,9 @@ impl Server {
                     // stream (same deterministic position serially and
                     // threaded).
                     if self.control.due(flushes) {
+                        let ws = self.obs.wall_start();
                         self.control_tick_async(&mut st, &mut k, &mut mixing, flushes, t);
+                        self.obs.wall_span(SpanPhase::ControlTick, NO_CLIENT, t, ws);
                     }
                     // Deterministic commit point: snapshot the full engine
                     // state right after the flush (and its control tick)
@@ -2134,6 +2317,11 @@ impl Server {
                     let every = self.cfg.faults.checkpoint_every;
                     if every > 0 && flushes % every == 0 {
                         self.drain_pending_evals(&mut st)?;
+                        let ws = self.obs.wall_start();
+                        // Counted before the snapshot so the registry the
+                        // checkpoint carries already includes this save —
+                        // a restored run and a continuous run agree.
+                        self.obs.registry.inc(Counter::Checkpoints);
                         self.checkpoint = Some(self.save_async_checkpoint(
                             &st,
                             k,
@@ -2141,6 +2329,7 @@ impl Server {
                             flushes,
                             &shard_models,
                         ));
+                        self.obs.wall_span(SpanPhase::CheckpointSave, NO_CLIENT, t, ws);
                     }
                     if self.stop_after > 0 && flushes >= self.stop_after {
                         // The deterministic "kill -9" of the recovery
@@ -2174,7 +2363,15 @@ impl Server {
                         self.metrics.event_trace.push((t, format!("restart c{client}")));
                     }
                     self.queue.schedule_at(t + down, EngineEvent::Start { client });
-                    dispatch_speculation(&self.fleet, &mut st, pool, client, knobs)?;
+                    dispatch_speculation(
+                        &self.fleet,
+                        &mut st,
+                        pool,
+                        obs_shared.as_ref(),
+                        client,
+                        t,
+                        knobs,
+                    )?;
                 }
             }
         }
@@ -2203,7 +2400,13 @@ impl Server {
         self.metrics.fleet_parks = self.fleet.parks();
         self.metrics.peak_active = self.fleet.peak_active();
         self.metrics.link_capped = self.link_capped;
-        self.drain_pending_evals(&mut st)
+        self.drain_pending_evals(&mut st)?;
+        // A `stop_after` kill abandons the run before this point, so a
+        // crashed run (like a crashed process) publishes no obs report.
+        if !(self.stop_after > 0 && flushes >= self.stop_after) {
+            self.finalize_obs();
+        }
+        Ok(())
     }
 
     /// Fold one just-arrived upload into its edge accumulator
@@ -2295,6 +2498,7 @@ impl Server {
         let trust_on = robust && self.cfg.robust.trust;
         let mut quarantined = 0usize;
         let mut outlier_rate = f64::NAN;
+        let obs_shared = self.obs.shared();
         self.round = flush_idx;
 
         // Deterministic aggregation order — and a bitwise match with the
@@ -2497,6 +2701,8 @@ impl Server {
         // effective downlink precision, codec once per flush), restart
         // their clocks, and — threaded — dispatch their next speculative
         // local round against the state they just synced.
+        let bcast_ws = self.obs.wall_start();
+        let mut bcast_end = now;
         let down_precision = self.cfg.compression.down_precision_or(precision);
         let bcast_model: Option<&[f32]> = if down_precision == Precision::F32 {
             None
@@ -2573,8 +2779,17 @@ impl Server {
                     self.downlink.ack_dense(w, target);
                 }
                 st.synced_version[w] = st.shard_version[st.shard_of[w]];
+                bcast_end = bcast_end.max(now + down);
                 self.queue.schedule_at(now + down, EngineEvent::Start { client: w });
-                dispatch_speculation(&self.fleet, st, pool, w, knobs)?;
+                dispatch_speculation(
+                    &self.fleet,
+                    st,
+                    pool,
+                    obs_shared.as_ref(),
+                    w,
+                    now,
+                    knobs,
+                )?;
                 st.waiting.push_back(c);
             } else {
                 // Runtime promotion of the base-agreement debug_assert
@@ -2665,9 +2880,22 @@ impl Server {
                 let down = extra + down;
                 st.window.bytes_down += frame_bytes;
                 st.synced_version[c] = version;
+                bcast_end = bcast_end.max(now + down);
                 self.queue.schedule_at(now + down, EngineEvent::Start { client: c });
-                dispatch_speculation(&self.fleet, st, pool, c, knobs)?;
+                dispatch_speculation(
+                    &self.fleet,
+                    st,
+                    pool,
+                    obs_shared.as_ref(),
+                    c,
+                    now,
+                    knobs,
+                )?;
             }
+        }
+        if kk > 0 {
+            self.obs.virt_span(SpanPhase::DownlinkEncode, NO_CLIENT, now, bcast_end);
+            self.obs.wall_span(SpanPhase::DownlinkEncode, NO_CLIENT, now, bcast_ws);
         }
         if st.shard_history.is_empty() {
             self.push_history_from(&model[..]);
@@ -2693,18 +2921,27 @@ impl Server {
             let images = Arc::clone(&self.ctx.test_images);
             let labels = Arc::clone(&self.ctx.test_labels);
             let (tx, rx) = mpsc::channel();
+            let obs = obs_shared.clone();
             pool.submit(Box::new(move |ex| {
-                let _ = tx.send(evaluate_with_params(ex, &params, &images[..], &labels[..]));
+                let ws = obs.as_ref().map_or(0.0, |o| o.now_us());
+                let r = evaluate_with_params(ex, &params, &images[..], &labels[..]);
+                if let Some(o) = &obs {
+                    o.wall_span(SpanPhase::Eval, NO_CLIENT, now, ws);
+                }
+                let _ = tx.send(r);
             }))?;
             st.pending_evals.push((self.metrics.records.len(), rx));
             (f64::NAN, f64::NAN)
         } else {
-            evaluate_with_params(
+            let ws = self.obs.wall_start();
+            let r = evaluate_with_params(
                 exec,
                 &model[..],
                 &self.ctx.test_images[..],
                 &self.ctx.test_labels[..],
-            )?
+            )?;
+            self.obs.wall_span(SpanPhase::Eval, NO_CLIENT, now, ws);
+            r
         };
 
         // Buffer wait: how long each upload sat before the flush.
@@ -2808,9 +3045,15 @@ impl Server {
                 ),
             ));
         }
+        self.mirror_record(&record);
         self.metrics.push(record);
         st.window = FlushWindow::default();
         st.buffers[shard].clear();
+        // Flush commit = the barrier-free engine's drain point for
+        // worker-side wall spans (a deterministic position in the
+        // committed stream, so the virtual-time trace never depends on
+        // worker timing).
+        self.obs.drain();
         Ok(())
     }
 

@@ -229,6 +229,10 @@ pub fn run(cfg: &ExperimentConfig) -> Result<Outcome> {
             pool.shutdown();
         }
     }
+    // The threaded barriered arm drives `run_round_threaded` from out
+    // here and never reaches `Server::run`'s own finalize; idempotent
+    // (and a no-op with `obs.enabled = false`) for the other arms.
+    server.finalize_obs();
     Ok(Outcome::from_metrics(server.metrics.clone()))
 }
 

@@ -47,6 +47,7 @@ pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

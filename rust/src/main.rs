@@ -14,6 +14,7 @@
 //!          [--attack-fraction F]
 //!          [--control on|off|staleness,compression,rebalance]
 //!          [--control-interval N] [--control-window N]
+//!          [--trace-out FILE] [--metrics-out FILE]
 //!          [--mock] [--out DIR] [--realtime SCALE]
 //! vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]
 //!     # one preset, all three algorithms, Table III rows + Fig. 4
@@ -131,6 +132,7 @@ fn print_usage() {
          \x20                 [--compact-records] [--alpha-step F]\n\
          \x20                 [--control on|off|staleness,compression,rebalance]\n\
          \x20                 [--control-interval N] [--control-window N]\n\
+         \x20                 [--trace-out FILE] [--metrics-out FILE]\n\
          \x20                 [--out DIR] [--realtime SCALE] [--quiet]\n\
          \x20 vafl experiment --preset a|b|c|d [--rounds N] [--out DIR] [--mock]\n\
          \x20 vafl sweep      [--rounds N] [--out DIR] [--mock]\n\
@@ -285,6 +287,12 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if flags.get("realtime").is_some() {
         cfg.trace_events = true;
     }
+    // Asking for either observability export arms the plane.
+    let trace_out = flags.get("trace-out").map(str::to_string);
+    let metrics_out = flags.get("metrics-out").map(str::to_string);
+    if trace_out.is_some() || metrics_out.is_some() {
+        cfg.obs.enabled = true;
+    }
     println!(
         "running experiment {} / {} ({} clients, {:?}, {} rounds)",
         cfg.name,
@@ -306,6 +314,27 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     );
     if cfg.control.enabled {
         println!("control decisions = {}", out.metrics.control_records.len());
+    }
+    if trace_out.is_some() || metrics_out.is_some() {
+        let report = out
+            .metrics
+            .obs
+            .as_ref()
+            .context("observability was armed but the run produced no report")?;
+        if let Some(path) = &trace_out {
+            // Chrome trace-event JSON: load in Perfetto / chrome://tracing.
+            std::fs::write(path, vafl::obs::chrome_trace_json(report).to_string_compact())?;
+            println!(
+                "wrote {path} ({} spans, {} dropped)",
+                report.spans.len(),
+                report.dropped
+            );
+        }
+        if let Some(path) = &metrics_out {
+            // Prometheus text exposition snapshot.
+            std::fs::write(path, vafl::obs::prometheus_text(report))?;
+            println!("wrote {path}");
+        }
     }
     if let Some(dir) = flags.get("out") {
         let base = format!("{dir}/{}_{}", cfg.name, cfg.algorithm.name());

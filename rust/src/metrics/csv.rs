@@ -168,10 +168,16 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);
-        assert!(lines[0].starts_with("round,vtime,acc"));
-        assert!(lines[0].ends_with(
-            "quarantined,trust_mean,retransmits,frames_lost,frames_corrupt,dup_suppressed,resyncs,recoveries"
-        ));
+        // The full header is a compatibility contract (append-only): the
+        // registry migration must never rename or reorder a column.
+        assert_eq!(
+            lines[0],
+            "round,vtime,acc,loss,train_loss,uploads,cum_uploads,threshold,idle_seconds,\
+             bytes_up,bytes_down,reports,in_flight,stale_mean,stale_max,shard,\
+             spec_committed,spec_replayed,bytes_up_ctrl,bytes_down_ctrl,quarantined,\
+             trust_mean,retransmits,frames_lost,frames_corrupt,dup_suppressed,resyncs,\
+             recoveries"
+        );
         assert!(lines[1].starts_with("1,1.250000,0.500000"));
         // NaN trust_mean formats as an empty cell; the fault counters
         // follow it.

@@ -326,6 +326,11 @@ pub struct RunMetrics {
     /// previously silent 5th-attempt success, now counted. Distinct from
     /// `FaultCounters::retransmits`, which belongs to the fault plan.
     pub link_capped: u64,
+    /// Observability report (spans + unified metric registry) — `Some`
+    /// only when `obs.enabled` armed the tracer; exported through
+    /// `obs::chrome_trace_json` / `obs::prometheus_text` and the `"obs"`
+    /// entry of `to_json`.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 impl RunMetrics {
@@ -342,6 +347,7 @@ impl RunMetrics {
             fleet_parks: 0,
             peak_active: 0,
             link_capped: 0,
+            obs: None,
         }
     }
 
@@ -565,6 +571,13 @@ impl RunMetrics {
             ("fleet_parks", Value::from(self.fleet_parks as usize)),
             ("peak_active", Value::from(self.peak_active)),
             ("link_capped", Value::from(self.link_capped as usize)),
+            (
+                "obs",
+                self.obs
+                    .as_ref()
+                    .map(crate::obs::report_json)
+                    .unwrap_or(Value::Null),
+            ),
             ("retransmits", Value::from(totals.retransmits as usize)),
             ("frames_lost", Value::from(totals.frames_lost as usize)),
             ("frames_corrupt", Value::from(totals.frames_corrupt as usize)),

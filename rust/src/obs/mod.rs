@@ -1,0 +1,1151 @@
+//! Deterministic observability plane: dual-timestamp span tracing, a
+//! unified metric registry, and Perfetto / Prometheus exporters.
+//!
+//! Design rules (the control plane's bitwise-inertness bar, applied to
+//! telemetry):
+//!
+//! * **Zero-cost when disabled.** `obs.enabled = false` (the default)
+//!   reduces every span hook to one branch on a plain bool: no RNG is
+//!   drawn, no bytes are charged, no steady-state allocation happens,
+//!   and the committed record stream stays byte-identical to pre-obs
+//!   builds (pinned by goldens 1–8).
+//! * **Read-only when armed.** Hooks observe engine state, never mutate
+//!   it — armed runs commit the same `RoundRecord` stream as disarmed
+//!   runs (pinned by the ninth golden, `barrier_free_traced`).
+//! * **Thread-count-invariant virtual stream.** [`SpanKind::Virtual`]
+//!   spans are emitted only on the engine thread at deterministic commit
+//!   points, so the virtual-time span stream is identical across
+//!   `VAFL_THREADS=1/4` and serial vs speculative execution (pinned by
+//!   `tests/obs.rs`). Wall-time spans from pool workers ride bounded
+//!   lock-free SPSC rings ([`SpanRing`]) and are drained at commit
+//!   points; they carry real, non-deterministic wall timings and are
+//!   excluded from invariance checks.
+//!
+//! The [`MetricRegistry`] half is *always* live (plain integer adds at
+//! the same commit points that build round records), so counter totals
+//! are auditable in every run; it only becomes externally visible via
+//! the exporters when obs is armed.
+
+use std::cell::{RefCell, UnsafeCell};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::ObsConfig;
+use crate::util::codec::{Dec, Enc};
+use crate::util::json::{obj, Value};
+
+/// Sentinel for spans not attributed to a single client.
+pub const NO_CLIENT: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// Instrumented engine phase. Names are static so metric/trace rows never
+/// allocate per event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanPhase {
+    /// A client's local training rounds (schedule → report).
+    ClientExecute,
+    /// A speculative local round running on a pool worker (wall only).
+    SpecExecute,
+    /// A speculation committed as-is at its commit point.
+    SpecCommit,
+    /// A superseded speculation replayed serially at its commit point.
+    SpecReplay,
+    /// An upload landing in a shard buffer.
+    BufferFill,
+    /// A shard buffer flush: aggregation + weights + trust + broadcast.
+    Flush,
+    /// Encoding per-client downlink frames inside a flush.
+    DownlinkEncode,
+    /// A lost/corrupt frame rescheduled onto the backoff ladder.
+    Retransmit,
+    /// Writing an engine checkpoint.
+    CheckpointSave,
+    /// Restoring an engine checkpoint.
+    CheckpointRestore,
+    /// An adaptive-control tick.
+    ControlTick,
+    /// A global-model evaluation.
+    Eval,
+}
+
+impl SpanPhase {
+    pub const ALL: [SpanPhase; 12] = [
+        SpanPhase::ClientExecute,
+        SpanPhase::SpecExecute,
+        SpanPhase::SpecCommit,
+        SpanPhase::SpecReplay,
+        SpanPhase::BufferFill,
+        SpanPhase::Flush,
+        SpanPhase::DownlinkEncode,
+        SpanPhase::Retransmit,
+        SpanPhase::CheckpointSave,
+        SpanPhase::CheckpointRestore,
+        SpanPhase::ControlTick,
+        SpanPhase::Eval,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanPhase::ClientExecute => "client_execute",
+            SpanPhase::SpecExecute => "spec_execute",
+            SpanPhase::SpecCommit => "spec_commit",
+            SpanPhase::SpecReplay => "spec_replay",
+            SpanPhase::BufferFill => "buffer_fill",
+            SpanPhase::Flush => "flush",
+            SpanPhase::DownlinkEncode => "downlink_encode",
+            SpanPhase::Retransmit => "retransmit",
+            SpanPhase::CheckpointSave => "checkpoint_save",
+            SpanPhase::CheckpointRestore => "checkpoint_restore",
+            SpanPhase::ControlTick => "control_tick",
+            SpanPhase::Eval => "eval",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|&p| p == self).unwrap()
+    }
+}
+
+/// Which timeline a span's duration is meaningful on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Deterministic simulation-time span, emitted on the engine thread
+    /// at a commit point. Identical across thread counts.
+    Virtual,
+    /// Real monotonic wall-time span (engine thread or pool worker).
+    Wall,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Virtual => "virtual",
+            SpanKind::Wall => "wall",
+        }
+    }
+}
+
+/// One traced interval carrying **dual timestamps**: virtual simulation
+/// seconds (`vstart`/`vend`) and monotonic wall microseconds since the
+/// plane's epoch (`wstart_us`/`wend_us`). Point events set start == end
+/// on the timeline they don't measure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub phase: SpanPhase,
+    pub kind: SpanKind,
+    /// Client the span is attributed to, or [`NO_CLIENT`].
+    pub client: u32,
+    /// Trace lane: 0 = engine thread, `1 + ring` for pool workers.
+    pub tid: u32,
+    pub vstart: f64,
+    pub vend: f64,
+    pub wstart_us: f64,
+    pub wend_us: f64,
+}
+
+impl Span {
+    const EMPTY: Span = Span {
+        phase: SpanPhase::ClientExecute,
+        kind: SpanKind::Wall,
+        client: NO_CLIENT,
+        tid: 0,
+        vstart: 0.0,
+        vend: 0.0,
+        wstart_us: 0.0,
+        wend_us: 0.0,
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free SPSC span ring (one producer worker, one consumer: the engine)
+// ---------------------------------------------------------------------------
+
+/// Bounded single-producer/single-consumer ring of [`Span`]s. Pushes are
+/// wait-free and allocation-free; a full ring drops the span and counts
+/// it instead of blocking a worker. The engine thread is the only
+/// consumer ([`ObsShared::drain_each`]).
+pub struct SpanRing {
+    slots: Box<[UnsafeCell<Span>]>,
+    mask: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: the head/tail indices partition the slots between exactly one
+// producer (writes at `tail`, then releases) and one consumer (acquires
+// `tail`, reads up to it, then releases `head`); no slot is ever read
+// and written concurrently. Producer exclusivity is enforced by
+// `ObsShared::sink`, which assigns each worker thread its own ring.
+unsafe impl Sync for SpanRing {}
+unsafe impl Send for SpanRing {}
+
+impl SpanRing {
+    fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots: Vec<UnsafeCell<Span>> =
+            (0..cap).map(|_| UnsafeCell::new(Span::EMPTY)).collect();
+        SpanRing {
+            slots: slots.into_boxed_slice(),
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Producer side: push one span, dropping (and counting) on overflow.
+    pub fn push(&self, span: Span) -> bool {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) > self.mask {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // SAFETY: this slot is past `head`, so the consumer will not read
+        // it until the tail store below publishes the write.
+        unsafe {
+            *self.slots[tail & self.mask].get() = span;
+        }
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer side: pop everything currently published.
+    fn drain(&self, mut f: impl FnMut(Span)) {
+        let tail = self.tail.load(Ordering::Acquire);
+        let mut head = self.head.load(Ordering::Relaxed);
+        while head != tail {
+            // SAFETY: slots in [head, tail) were published by the
+            // producer's release store and are not rewritten until the
+            // head store below frees them.
+            let span = unsafe { *self.slots[head & self.mask].get() };
+            f(span);
+            head = head.wrapping_add(1);
+        }
+        self.head.store(head, Ordering::Release);
+    }
+
+    fn take_dropped(&self) -> u64 {
+        self.dropped.swap(0, Ordering::Relaxed)
+    }
+}
+
+// Each (shared-plane id → ring index) binding a thread has claimed.
+// Thread-locals keep sink lookup allocation- and lock-free on the hot
+// path; entries are a few bytes per plane a thread ever touched.
+thread_local! {
+    static SINK_IDS: RefCell<Vec<(u64, usize)>> = const { RefCell::new(Vec::new()) };
+}
+
+static NEXT_SHARED_ID: AtomicU64 = AtomicU64::new(0);
+
+/// The cross-thread half of the plane: per-worker span rings plus the
+/// shared wall-clock epoch. Pool-worker closures capture an
+/// `Arc<ObsShared>` only when obs is armed, so disarmed runs ship no
+/// extra captures at all.
+pub struct ObsShared {
+    id: u64,
+    epoch: Instant,
+    rings: Vec<SpanRing>,
+    next_sink: AtomicUsize,
+    /// Spans from threads that arrived after every ring was claimed.
+    missed: AtomicU64,
+}
+
+impl ObsShared {
+    fn new(epoch: Instant, rings: usize, ring_capacity: usize) -> Self {
+        ObsShared {
+            id: NEXT_SHARED_ID.fetch_add(1, Ordering::Relaxed),
+            epoch,
+            rings: (0..rings.max(1)).map(|_| SpanRing::new(ring_capacity)).collect(),
+            next_sink: AtomicUsize::new(0),
+            missed: AtomicU64::new(0),
+        }
+    }
+
+    /// Monotonic wall microseconds since the plane's epoch.
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// The calling thread's private ring (first call claims one). `None`
+    /// once more threads than rings have claimed sinks — those threads'
+    /// spans are counted as missed rather than corrupting a ring.
+    fn sink(&self) -> Option<&SpanRing> {
+        let idx = SINK_IDS.with(|ids| {
+            let mut ids = ids.borrow_mut();
+            if let Some(&(_, i)) = ids.iter().find(|(id, _)| *id == self.id) {
+                i
+            } else {
+                let i = self.next_sink.fetch_add(1, Ordering::Relaxed);
+                ids.push((self.id, i));
+                i
+            }
+        });
+        self.rings.get(idx)
+    }
+
+    /// Producer entry point for worker threads.
+    pub fn push(&self, span: Span) {
+        match self.sink() {
+            Some(ring) => {
+                ring.push(span);
+            }
+            None => {
+                self.missed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Convenience for workers: record a wall span for `phase` that
+    /// started at `wstart_us` (from [`ObsShared::now_us`]) and ends now.
+    pub fn wall_span(&self, phase: SpanPhase, client: u32, vtime: f64, wstart_us: f64) {
+        let wend_us = self.now_us();
+        self.push(Span {
+            phase,
+            kind: SpanKind::Wall,
+            client,
+            tid: 0, // rewritten to the ring lane at drain time
+            vstart: vtime,
+            vend: vtime,
+            wstart_us,
+            wend_us,
+        });
+    }
+
+    /// Consumer side (engine thread only): pop all published spans,
+    /// tagging each with its ring lane.
+    fn drain_each(&self, mut f: impl FnMut(Span)) {
+        for (lane, ring) in self.rings.iter().enumerate() {
+            ring.drain(|mut span| {
+                span.tid = 1 + lane as u32;
+                f(span);
+            });
+        }
+    }
+
+    fn take_dropped(&self) -> u64 {
+        let mut n = self.missed.swap(0, Ordering::Relaxed);
+        for ring in &self.rings {
+            n += ring.take_dropped();
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric registry
+// ---------------------------------------------------------------------------
+
+/// Monotone counters with static names. The first nine mirror existing
+/// RoundRecord/CSV columns one-to-one (same names, cumulated over the
+/// run) so the registry is the auditable ledger behind them — pinned by
+/// `tests/obs.rs::registry_totals_match_record_columns`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    Retransmits,
+    FramesLost,
+    FramesCorrupt,
+    DupSuppressed,
+    Resyncs,
+    Recoveries,
+    SpecCommitted,
+    SpecReplayed,
+    Quarantined,
+    LinkCapped,
+    Uploads,
+    Flushes,
+    Checkpoints,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 13] = [
+        Counter::Retransmits,
+        Counter::FramesLost,
+        Counter::FramesCorrupt,
+        Counter::DupSuppressed,
+        Counter::Resyncs,
+        Counter::Recoveries,
+        Counter::SpecCommitted,
+        Counter::SpecReplayed,
+        Counter::Quarantined,
+        Counter::LinkCapped,
+        Counter::Uploads,
+        Counter::Flushes,
+        Counter::Checkpoints,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Retransmits => "retransmits",
+            Counter::FramesLost => "frames_lost",
+            Counter::FramesCorrupt => "frames_corrupt",
+            Counter::DupSuppressed => "dup_suppressed",
+            Counter::Resyncs => "resyncs",
+            Counter::Recoveries => "recoveries",
+            Counter::SpecCommitted => "spec_committed",
+            Counter::SpecReplayed => "spec_replayed",
+            Counter::Quarantined => "quarantined",
+            Counter::LinkCapped => "link_capped",
+            Counter::Uploads => "uploads",
+            Counter::Flushes => "flushes",
+            Counter::Checkpoints => "checkpoints",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|&c| c == self).unwrap()
+    }
+}
+
+/// Last-write-wins gauges with static names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Mean per-client trust score at the latest flush (NaN = trust off).
+    TrustMean,
+    /// Model uploads in flight at the latest record cut.
+    InFlight,
+    /// Simulation event-queue depth at the latest flush.
+    QueueDepth,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 3] = [Gauge::TrustMean, Gauge::InFlight, Gauge::QueueDepth];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::TrustMean => "trust_mean",
+            Gauge::InFlight => "in_flight",
+            Gauge::QueueDepth => "queue_depth",
+        }
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|&g| g == self).unwrap()
+    }
+}
+
+/// Histogram bucket upper bounds, in seconds (shared by the wall and
+/// virtual per-phase histograms; one overflow bucket is appended).
+pub const HIST_BOUNDS: [f64; 11] =
+    [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0, 1e3, 1e4];
+
+/// Fixed-bucket duration histogram (bounds: [`HIST_BOUNDS`] + overflow).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Per-bucket (non-cumulative) observation counts.
+    pub buckets: [u64; HIST_BOUNDS.len() + 1],
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; HIST_BOUNDS.len() + 1], count: 0, sum: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        let mut idx = HIST_BOUNDS.len();
+        for (i, &bound) in HIST_BOUNDS.iter().enumerate() {
+            if seconds <= bound {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += seconds;
+    }
+
+    fn save(&self, enc: &mut Enc) {
+        enc.u64s(&self.buckets);
+        enc.u64(self.count);
+        enc.f64(self.sum);
+    }
+
+    fn load(dec: &mut Dec) -> Result<Self> {
+        let raw = dec.u64s()?;
+        if raw.len() != HIST_BOUNDS.len() + 1 {
+            bail!("obs histogram bucket count {} != {}", raw.len(), HIST_BOUNDS.len() + 1);
+        }
+        let mut buckets = [0u64; HIST_BOUNDS.len() + 1];
+        buckets.copy_from_slice(&raw);
+        Ok(Histogram { buckets, count: dec.u64()?, sum: dec.f64()? })
+    }
+}
+
+/// The unified registry: counters, gauges, and per-phase wall/virtual
+/// duration histograms, all with static names and fixed slots (no maps,
+/// no per-event allocation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricRegistry {
+    counters: [u64; Counter::ALL.len()],
+    gauges: [f64; Gauge::ALL.len()],
+    virt_hist: Vec<Histogram>,
+    wall_hist: Vec<Histogram>,
+}
+
+impl Default for MetricRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        MetricRegistry {
+            counters: [0; Counter::ALL.len()],
+            gauges: [f64::NAN; Gauge::ALL.len()],
+            virt_hist: vec![Histogram::default(); SpanPhase::ALL.len()],
+            wall_hist: vec![Histogram::default(); SpanPhase::ALL.len()],
+        }
+    }
+
+    pub fn inc(&mut self, c: Counter) {
+        self.counters[c.index()] += 1;
+    }
+
+    pub fn add(&mut self, c: Counter, n: u64) {
+        self.counters[c.index()] += n;
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.index()]
+    }
+
+    pub fn set_gauge(&mut self, g: Gauge, v: f64) {
+        self.gauges[g.index()] = v;
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g.index()]
+    }
+
+    pub fn observe_virtual(&mut self, phase: SpanPhase, seconds: f64) {
+        self.virt_hist[phase.index()].observe(seconds);
+    }
+
+    pub fn observe_wall(&mut self, phase: SpanPhase, seconds: f64) {
+        self.wall_hist[phase.index()].observe(seconds);
+    }
+
+    pub fn virt_hist(&self, phase: SpanPhase) -> &Histogram {
+        &self.virt_hist[phase.index()]
+    }
+
+    pub fn wall_hist(&self, phase: SpanPhase) -> &Histogram {
+        &self.wall_hist[phase.index()]
+    }
+
+    /// Checkpoint the deterministic half (counters, gauges, virtual
+    /// histograms). Wall histograms measure real machine time and are
+    /// deliberately reset by a restore.
+    pub fn save(&self, enc: &mut Enc) {
+        enc.u64s(&self.counters);
+        enc.f64s(&self.gauges);
+        for h in &self.virt_hist {
+            h.save(enc);
+        }
+    }
+
+    /// Decode a registry written by [`MetricRegistry::save`].
+    pub fn load(dec: &mut Dec) -> Result<Self> {
+        let raw = dec.u64s()?;
+        if raw.len() != Counter::ALL.len() {
+            bail!("obs registry counter count {} != {}", raw.len(), Counter::ALL.len());
+        }
+        let mut counters = [0u64; Counter::ALL.len()];
+        counters.copy_from_slice(&raw);
+        let raw_g = dec.f64s()?;
+        if raw_g.len() != Gauge::ALL.len() {
+            bail!("obs registry gauge count {} != {}", raw_g.len(), Gauge::ALL.len());
+        }
+        let mut gauges = [f64::NAN; Gauge::ALL.len()];
+        gauges.copy_from_slice(&raw_g);
+        let mut virt_hist = Vec::with_capacity(SpanPhase::ALL.len());
+        for _ in SpanPhase::ALL {
+            virt_hist.push(Histogram::load(dec)?);
+        }
+        Ok(MetricRegistry {
+            counters,
+            gauges,
+            virt_hist,
+            wall_hist: vec![Histogram::default(); SpanPhase::ALL.len()],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The plane
+// ---------------------------------------------------------------------------
+
+/// Engine-side observability state, owned by the server. All span hooks
+/// branch on [`ObsPlane::armed`] first; the registry is always live.
+pub struct ObsPlane {
+    enabled: bool,
+    max_spans: usize,
+    /// The unified metric registry (always updated; exported when armed).
+    pub registry: MetricRegistry,
+    spans: Vec<Span>,
+    dropped: u64,
+    shared: Option<Arc<ObsShared>>,
+    epoch: Instant,
+}
+
+impl ObsPlane {
+    /// Build the plane. `rings` bounds how many worker threads can trace
+    /// concurrently (extra threads drop spans into a counter instead).
+    pub fn new(cfg: &ObsConfig, rings: usize) -> Self {
+        let epoch = Instant::now();
+        let shared = if cfg.enabled {
+            Some(Arc::new(ObsShared::new(epoch, rings, cfg.ring_capacity)))
+        } else {
+            None
+        };
+        ObsPlane {
+            enabled: cfg.enabled,
+            max_spans: cfg.max_spans,
+            registry: MetricRegistry::new(),
+            spans: Vec::new(),
+            dropped: 0,
+            shared,
+            epoch,
+        }
+    }
+
+    /// Whether span tracing is armed (one branch — the whole cost of a
+    /// disarmed hook).
+    pub fn armed(&self) -> bool {
+        self.enabled
+    }
+
+    /// Handle for pool-worker closures (None while disarmed, so disarmed
+    /// dispatches capture nothing).
+    pub fn shared(&self) -> Option<Arc<ObsShared>> {
+        self.shared.clone()
+    }
+
+    /// Monotonic wall microseconds since the plane's epoch (0 disarmed).
+    pub fn now_us(&self) -> f64 {
+        if self.enabled {
+            self.epoch.elapsed().as_secs_f64() * 1e6
+        } else {
+            0.0
+        }
+    }
+
+    /// Start timestamp for an engine-thread wall span.
+    pub fn wall_start(&self) -> f64 {
+        self.now_us()
+    }
+
+    fn push(&mut self, span: Span) {
+        if self.spans.len() >= self.max_spans {
+            self.dropped += 1;
+        } else {
+            self.spans.push(span);
+        }
+    }
+
+    /// Record a deterministic virtual-time span at an engine-thread
+    /// commit point (`vstart`/`vend` in simulation seconds).
+    pub fn virt_span(&mut self, phase: SpanPhase, client: u32, vstart: f64, vend: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.registry.observe_virtual(phase, (vend - vstart).max(0.0));
+        let w = self.now_us();
+        self.push(Span {
+            phase,
+            kind: SpanKind::Virtual,
+            client,
+            tid: 0,
+            vstart,
+            vend,
+            wstart_us: w,
+            wend_us: w,
+        });
+    }
+
+    /// Record an engine-thread wall span started at `wstart_us` (from
+    /// [`ObsPlane::wall_start`]) and ending now, pinned to virtual time
+    /// `vtime`.
+    pub fn wall_span(&mut self, phase: SpanPhase, client: u32, vtime: f64, wstart_us: f64) {
+        if !self.enabled {
+            return;
+        }
+        let wend_us = self.now_us();
+        self.registry.observe_wall(phase, ((wend_us - wstart_us) / 1e6).max(0.0));
+        self.push(Span {
+            phase,
+            kind: SpanKind::Wall,
+            client,
+            tid: 0,
+            vstart: vtime,
+            vend: vtime,
+            wstart_us,
+            wend_us,
+        });
+    }
+
+    /// Drain worker rings into the engine-side span store (commit points
+    /// and finalization; engine thread only).
+    pub fn drain(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(shared) = self.shared.clone() {
+            shared.drain_each(|span| {
+                self.registry
+                    .observe_wall(span.phase, ((span.wend_us - span.wstart_us) / 1e6).max(0.0));
+                if self.spans.len() >= self.max_spans {
+                    self.dropped += 1;
+                } else {
+                    self.spans.push(span);
+                }
+            });
+            self.dropped += shared.take_dropped();
+        }
+    }
+
+    /// Spans recorded so far (drained worker spans included).
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Final drain + snapshot for `RunMetrics::obs`. `None` disarmed, so
+    /// disarmed JSON output is byte-identical to pre-obs builds.
+    pub fn finalize_report(&mut self) -> Option<ObsReport> {
+        if !self.enabled {
+            return None;
+        }
+        self.drain();
+        Some(ObsReport {
+            spans: self.spans.clone(),
+            dropped: self.dropped,
+            registry: self.registry.clone(),
+        })
+    }
+}
+
+/// The exported snapshot of an armed run: every retained span plus the
+/// final registry state. Carried on `RunMetrics::obs` and consumed by
+/// [`chrome_trace_json`] / [`prometheus_text`] / the RunMetrics JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsReport {
+    pub spans: Vec<Span>,
+    /// Spans lost to ring overflow, the `max_spans` cap, or sink
+    /// exhaustion.
+    pub dropped: u64,
+    pub registry: MetricRegistry,
+}
+
+impl ObsReport {
+    /// The deterministic virtual-time sub-stream (the thread-count
+    /// invariant the obs tests pin).
+    pub fn virtual_spans(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(|s| s.kind == SpanKind::Virtual)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+/// Chrome trace-event JSON (the object form), loadable in Perfetto /
+/// `chrome://tracing`. Virtual spans land on pid 0 with 1 simulated
+/// second = 1 trace second; wall spans land on pid 1 at real
+/// microseconds since the plane epoch, one tid lane per worker ring.
+pub fn chrome_trace_json(report: &ObsReport) -> Value {
+    let mut events: Vec<Value> = Vec::with_capacity(report.spans.len() + 4);
+    for (pid, name) in [(0u64, "virtual time (sim)"), (1u64, "wall time")] {
+        events.push(obj(vec![
+            ("name", Value::from("process_name")),
+            ("ph", Value::from("M")),
+            ("pid", Value::from(pid)),
+            ("tid", Value::from(0u64)),
+            ("args", obj(vec![("name", Value::from(name))])),
+        ]));
+    }
+    for span in &report.spans {
+        let (pid, ts, dur) = match span.kind {
+            SpanKind::Virtual => {
+                (0u64, span.vstart * 1e6, (span.vend - span.vstart).max(0.0) * 1e6)
+            }
+            SpanKind::Wall => (1u64, span.wstart_us, (span.wend_us - span.wstart_us).max(0.0)),
+        };
+        let mut args = vec![
+            ("kind", Value::from(span.kind.name())),
+            ("vstart", Value::from(span.vstart)),
+            ("vend", Value::from(span.vend)),
+        ];
+        if span.client != NO_CLIENT {
+            args.push(("client", Value::from(span.client as u64)));
+        }
+        events.push(obj(vec![
+            ("name", Value::from(span.phase.name())),
+            ("cat", Value::from(span.kind.name())),
+            ("ph", Value::from("X")),
+            ("ts", Value::from(ts)),
+            ("dur", Value::from(dur)),
+            ("pid", Value::from(pid)),
+            ("tid", Value::from(span.tid as u64)),
+            ("args", obj(args)),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", Value::from("ms")),
+        ("otherData", obj(vec![("dropped_spans", Value::from(report.dropped))])),
+    ])
+}
+
+fn prom_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else if v > 0.0 {
+        "+Inf".to_string()
+    } else {
+        "-Inf".to_string()
+    }
+}
+
+fn prom_histogram(out: &mut String, metric: &str, phase: &str, h: &Histogram) {
+    let mut cum = 0u64;
+    for (i, &n) in h.buckets.iter().enumerate() {
+        cum += n;
+        let le = if i < HIST_BOUNDS.len() {
+            prom_f64(HIST_BOUNDS[i])
+        } else {
+            "+Inf".to_string()
+        };
+        out.push_str(&format!("{metric}_bucket{{phase=\"{phase}\",le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{metric}_sum{{phase=\"{phase}\"}} {}\n", prom_f64(h.sum)));
+    out.push_str(&format!("{metric}_count{{phase=\"{phase}\"}} {}\n", h.count));
+}
+
+/// Prometheus text exposition format: every counter/gauge plus the
+/// non-empty per-phase wall/virtual histograms. This file is the twin of
+/// the `/metrics` endpoint the service-mode transport will serve.
+pub fn prometheus_text(report: &ObsReport) -> String {
+    let mut out = String::new();
+    let reg = &report.registry;
+    for c in Counter::ALL {
+        out.push_str(&format!(
+            "# TYPE vafl_{0}_total counter\nvafl_{0}_total {1}\n",
+            c.name(),
+            reg.counter(c)
+        ));
+    }
+    out.push_str(&format!(
+        "# TYPE vafl_dropped_spans_total counter\nvafl_dropped_spans_total {}\n",
+        report.dropped
+    ));
+    for g in Gauge::ALL {
+        out.push_str(&format!(
+            "# TYPE vafl_{0} gauge\nvafl_{0} {1}\n",
+            g.name(),
+            prom_f64(reg.gauge(g))
+        ));
+    }
+    for (metric, pick_wall) in
+        [("vafl_phase_wall_seconds", true), ("vafl_phase_virtual_seconds", false)]
+    {
+        let any = SpanPhase::ALL.iter().any(|&p| {
+            let h = if pick_wall { reg.wall_hist(p) } else { reg.virt_hist(p) };
+            h.count > 0
+        });
+        if !any {
+            continue;
+        }
+        out.push_str(&format!("# TYPE {metric} histogram\n"));
+        for p in SpanPhase::ALL {
+            let h = if pick_wall { reg.wall_hist(p) } else { reg.virt_hist(p) };
+            if h.count > 0 {
+                prom_histogram(&mut out, metric, p.name(), h);
+            }
+        }
+    }
+    out
+}
+
+fn hist_json(h: &Histogram) -> Value {
+    obj(vec![
+        ("count", Value::from(h.count)),
+        ("sum", Value::from(h.sum)),
+        ("buckets", Value::Arr(h.buckets.iter().map(|&n| Value::from(n)).collect())),
+    ])
+}
+
+/// The `"obs"` block of the RunMetrics JSON: counters, gauges, and the
+/// per-phase wall/virtual histograms (phases with observations only).
+pub fn report_json(report: &ObsReport) -> Value {
+    let reg = &report.registry;
+    let counters = obj(
+        Counter::ALL.iter().map(|&c| (c.name(), Value::from(reg.counter(c)))).collect(),
+    );
+    let gauges = obj(
+        Gauge::ALL
+            .iter()
+            .map(|&g| {
+                let v = reg.gauge(g);
+                (g.name(), if v.is_finite() { Value::from(v) } else { Value::Null })
+            })
+            .collect(),
+    );
+    let mut phases: Vec<(&str, Value)> = Vec::new();
+    for p in SpanPhase::ALL {
+        let (wall, virt) = (reg.wall_hist(p), reg.virt_hist(p));
+        if wall.count == 0 && virt.count == 0 {
+            continue;
+        }
+        let mut entry: Vec<(&str, Value)> = Vec::new();
+        if wall.count > 0 {
+            entry.push(("wall", hist_json(wall)));
+        }
+        if virt.count > 0 {
+            entry.push(("virtual", hist_json(virt)));
+        }
+        phases.push((p.name(), obj(entry)));
+    }
+    obj(vec![
+        ("spans", Value::from(report.spans.len())),
+        ("dropped_spans", Value::from(report.dropped)),
+        ("hist_bounds", Value::Arr(HIST_BOUNDS.iter().map(|&b| Value::from(b)).collect())),
+        ("counters", counters),
+        ("gauges", gauges),
+        ("phases", obj(phases)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed_cfg() -> ObsConfig {
+        ObsConfig { enabled: true, ..Default::default() }
+    }
+
+    fn span(phase: SpanPhase, v: f64) -> Span {
+        Span {
+            phase,
+            kind: SpanKind::Wall,
+            client: 1,
+            tid: 0,
+            vstart: v,
+            vend: v,
+            wstart_us: v,
+            wend_us: v + 1.0,
+        }
+    }
+
+    #[test]
+    fn ring_push_drain_fifo_and_overflow() {
+        let ring = SpanRing::new(4);
+        for i in 0..4 {
+            assert!(ring.push(span(SpanPhase::Flush, i as f64)));
+        }
+        // Full: the 5th push drops and counts.
+        assert!(!ring.push(span(SpanPhase::Flush, 99.0)));
+        assert_eq!(ring.take_dropped(), 1);
+        let mut got = Vec::new();
+        ring.drain(|s| got.push(s.vstart));
+        assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0]);
+        // Space freed: pushes work again.
+        assert!(ring.push(span(SpanPhase::Flush, 5.0)));
+        let mut got = Vec::new();
+        ring.drain(|s| got.push(s.vstart));
+        assert_eq!(got, vec![5.0]);
+    }
+
+    #[test]
+    fn shared_rings_survive_concurrent_producers() {
+        let shared = Arc::new(ObsShared::new(Instant::now(), 4, 64));
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let shared = Arc::clone(&shared);
+                scope.spawn(move || {
+                    for i in 0..50 {
+                        shared.push(span(SpanPhase::SpecExecute, (t * 100 + i) as f64));
+                    }
+                });
+            }
+        });
+        let mut n = 0;
+        shared.drain_each(|s| {
+            assert!(s.tid >= 1 && s.tid <= 4);
+            n += 1;
+        });
+        assert_eq!(n, 200);
+        assert_eq!(shared.take_dropped(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_bounds() {
+        let mut h = Histogram::default();
+        h.observe(5e-7); // bucket 0 (<= 1e-6)
+        h.observe(0.5); // <= 1.0
+        h.observe(1e9); // overflow
+        h.observe(f64::NAN); // ignored
+        h.observe(-1.0); // ignored
+        assert_eq!(h.count, 3);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[6], 1);
+        assert_eq!(h.buckets[HIST_BOUNDS.len()], 1);
+        assert!((h.sum - (5e-7 + 0.5 + 1e9)).abs() < 1.0);
+    }
+
+    #[test]
+    fn registry_counters_gauges_round_trip() {
+        let mut reg = MetricRegistry::new();
+        reg.inc(Counter::Retransmits);
+        reg.add(Counter::Uploads, 41);
+        reg.inc(Counter::Uploads);
+        reg.set_gauge(Gauge::TrustMean, 0.75);
+        reg.observe_virtual(SpanPhase::Flush, 2.5);
+        reg.observe_wall(SpanPhase::Flush, 0.001);
+        assert_eq!(reg.counter(Counter::Retransmits), 1);
+        assert_eq!(reg.counter(Counter::Uploads), 42);
+        assert_eq!(reg.counter(Counter::Resyncs), 0);
+        assert_eq!(reg.gauge(Gauge::TrustMean), 0.75);
+        assert!(reg.gauge(Gauge::InFlight).is_nan());
+
+        let mut enc = Enc::new();
+        reg.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let back = MetricRegistry::load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(back.counter(Counter::Uploads), 42);
+        assert_eq!(back.virt_hist(SpanPhase::Flush).count, 1);
+        // Wall histograms are machine time: deliberately reset on load.
+        assert_eq!(back.wall_hist(SpanPhase::Flush).count, 0);
+    }
+
+    #[test]
+    fn disarmed_plane_records_nothing() {
+        let mut plane = ObsPlane::new(&ObsConfig::default(), 2);
+        assert!(!plane.armed());
+        assert!(plane.shared().is_none());
+        plane.virt_span(SpanPhase::Flush, NO_CLIENT, 0.0, 1.0);
+        let t0 = plane.wall_start();
+        plane.wall_span(SpanPhase::Flush, NO_CLIENT, 0.0, t0);
+        plane.drain();
+        assert!(plane.spans().is_empty());
+        assert!(plane.finalize_report().is_none());
+        // The registry stays live regardless.
+        plane.registry.inc(Counter::Flushes);
+        assert_eq!(plane.registry.counter(Counter::Flushes), 1);
+    }
+
+    #[test]
+    fn armed_plane_caps_spans_and_reports() {
+        let cfg = ObsConfig { enabled: true, max_spans: 3, ..Default::default() };
+        let mut plane = ObsPlane::new(&cfg, 2);
+        for i in 0..5 {
+            plane.virt_span(SpanPhase::BufferFill, i, i as f64, i as f64 + 1.0);
+        }
+        let report = plane.finalize_report().unwrap();
+        assert_eq!(report.spans.len(), 3);
+        assert_eq!(report.dropped, 2);
+        assert_eq!(report.virtual_spans().count(), 3);
+        assert_eq!(report.registry.virt_hist(SpanPhase::BufferFill).count, 5);
+    }
+
+    #[test]
+    fn worker_spans_drain_through_the_plane() {
+        let mut plane = ObsPlane::new(&armed_cfg(), 2);
+        let shared = plane.shared().unwrap();
+        let t0 = shared.now_us();
+        shared.wall_span(SpanPhase::SpecExecute, 7, 3.0, t0);
+        plane.drain();
+        assert_eq!(plane.spans().len(), 1);
+        let s = plane.spans()[0];
+        assert_eq!(s.phase, SpanPhase::SpecExecute);
+        assert_eq!(s.kind, SpanKind::Wall);
+        assert_eq!(s.client, 7);
+        assert!(s.tid >= 1);
+        assert_eq!(plane.registry.wall_hist(SpanPhase::SpecExecute).count, 1);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_parseable() {
+        let mut plane = ObsPlane::new(&armed_cfg(), 2);
+        plane.virt_span(SpanPhase::ClientExecute, 2, 1.0, 2.5);
+        let t0 = plane.wall_start();
+        plane.wall_span(SpanPhase::Flush, NO_CLIENT, 2.5, t0);
+        let report = plane.finalize_report().unwrap();
+        let trace = chrome_trace_json(&report);
+        let parsed = crate::util::json::parse(&trace.to_string_compact()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 2 spans.
+        assert_eq!(events.len(), 4);
+        for e in events {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(ph == "X" || ph == "M");
+            assert!(e.get("name").unwrap().as_str().is_some());
+            assert!(e.get("pid").unwrap().as_f64().is_some());
+        }
+        let x = events.iter().find(|e| e.get("ph").unwrap().as_str() == Some("X")).unwrap();
+        assert_eq!(x.get("name").unwrap().as_str(), Some("client_execute"));
+        assert_eq!(x.get("ts").unwrap().as_f64(), Some(1.0e6));
+        assert_eq!(x.get("dur").unwrap().as_f64(), Some(1.5e6));
+    }
+
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let mut plane = ObsPlane::new(&armed_cfg(), 2);
+        plane.registry.add(Counter::Retransmits, 3);
+        plane.registry.set_gauge(Gauge::TrustMean, 0.5);
+        plane.virt_span(SpanPhase::Flush, NO_CLIENT, 0.0, 2.0);
+        let report = plane.finalize_report().unwrap();
+        let text = prometheus_text(&report);
+        assert!(text.contains("# TYPE vafl_retransmits_total counter\n"));
+        assert!(text.contains("vafl_retransmits_total 3\n"));
+        assert!(text.contains("vafl_trust_mean 0.5\n"));
+        assert!(text.contains("# TYPE vafl_phase_virtual_seconds histogram\n"));
+        assert!(text.contains("vafl_phase_virtual_seconds_count{phase=\"flush\"} 1\n"));
+        assert!(text.contains("le=\"+Inf\"} 1\n"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            assert!(
+                value.parse::<f64>().is_ok() || value == "NaN" || value.ends_with("Inf"),
+                "bad sample value {value:?} in {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn report_json_has_counters_and_phases() {
+        let mut plane = ObsPlane::new(&armed_cfg(), 2);
+        plane.registry.add(Counter::Uploads, 9);
+        plane.virt_span(SpanPhase::Eval, NO_CLIENT, 1.0, 1.5);
+        let report = plane.finalize_report().unwrap();
+        let v = report_json(&report);
+        assert_eq!(v.get("spans").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("counters").unwrap().get("uploads").unwrap().as_usize(), Some(9));
+        let eval = v.get("phases").unwrap().get("eval").unwrap();
+        assert_eq!(eval.get("virtual").unwrap().get("count").unwrap().as_usize(), Some(1));
+        assert!(eval.get("wall").is_none());
+    }
+}

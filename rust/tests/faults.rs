@@ -372,6 +372,32 @@ fn checkpointing_works_with_the_fault_layer_disarmed() {
     assert_kill_restore_resumes(&cfg, 4);
 }
 
+#[test]
+fn kill_restore_resumes_bitwise_with_edge_fanout() {
+    // `checkpoint_every` composes with two-tier edge aggregation: the
+    // per-(shard, edge) running sums are part of the snapshot
+    // (`EdgeAccum::save`), so a kill between an upload's fold and its
+    // flush restores the half-filled accumulators bitwise instead of
+    // silently dropping buffered mass. Config validation used to reject
+    // this combination outright. The sharded case is the sharp one: a
+    // checkpoint cut by shard A's flush captures shard B's edges with
+    // folded-but-unflushed uploads in them.
+    for (shards, fanout) in [(1usize, 4usize), (2, 2)] {
+        let mut cfg = quick('b', 8);
+        barrier_free(&mut cfg);
+        cfg.faults = FaultConfig { checkpoint_every: 1, ..armed() };
+        cfg.engine_opts.shards = shards;
+        cfg.engine_opts.edge_fanout = fanout;
+        if shards > 1 {
+            cfg.engine_opts.reconcile_every = 2;
+        }
+        cfg.validate().unwrap();
+        for stop in [1usize, 3, 6] {
+            assert_kill_restore_resumes(&cfg, stop);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Downlink integrity: lost/corrupt broadcasts force a dense resync
 // ---------------------------------------------------------------------------

@@ -383,3 +383,21 @@ fn golden_barrier_free_sharded_round_stream_is_stable() {
     vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
     run_snapshot("barrier_free_sharded", &cfg);
 }
+
+#[test]
+fn golden_barrier_free_traced_round_stream_is_stable() {
+    // Pins the *armed* observability plane: the snapshot must be
+    // byte-identical to `barrier_free` (tracing hooks are read-only with
+    // respect to engine state — they consume no RNG, schedule no events,
+    // and perturb no numerics). Any hook that leaks into the committed
+    // record stream fails this snapshot against its disarmed twin in
+    // `tests/obs.rs` before it can silently re-pin here.
+    let mut cfg = base_cfg();
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+    cfg.obs.enabled = true;
+    run_snapshot("barrier_free_traced", &cfg);
+}

@@ -1,0 +1,397 @@
+//! Observability-plane tests: arming span tracing is bitwise invisible
+//! to the committed `RoundRecord` stream on both engines (serial and
+//! threaded, sharded and not), the deterministic virtual-time span
+//! stream is thread-count invariant, the unified `MetricRegistry` agrees
+//! with the record columns it backs, and both exporters (Chrome
+//! trace-event JSON for Perfetto, Prometheus text) emit well-formed
+//! output.
+//!
+//! `tools/check.sh` runs this suite under `VAFL_THREADS=1` and
+//! `VAFL_THREADS=4`, so every assertion here is also a thread-count
+//! invariance check.
+
+use vafl::config::{
+    Algorithm, AsyncEngineConfig, Backend, EngineMode, ExperimentConfig, FaultConfig,
+};
+use vafl::coordinator::MixingRule;
+use vafl::experiments;
+use vafl::metrics::{RoundRecord, RunMetrics};
+use vafl::obs::{Counter, ObsReport, SpanKind, SpanPhase, NO_CLIENT};
+use vafl::util::json::Value;
+
+fn quick(which: char, rounds: usize) -> ExperimentConfig {
+    let mut cfg = experiments::preset(which).unwrap();
+    cfg.algorithm = Algorithm::Vafl;
+    cfg.backend = Backend::Mock;
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 96;
+    cfg.test_samples = 64;
+    cfg.probe_samples = 32;
+    cfg.local_passes = 1;
+    cfg.batches_per_pass = 2;
+    cfg.target_acc = 0.5;
+    cfg.seed = 2021;
+    vafl::util::logging::set_level(vafl::util::logging::Level::Warn);
+    cfg
+}
+
+fn barrier_free(cfg: &mut ExperimentConfig) {
+    cfg.engine = EngineMode::BarrierFree;
+    cfg.async_engine = AsyncEngineConfig {
+        buffer_k: 2,
+        mixing: MixingRule::Polynomial { alpha: 0.8, exponent: 0.5 },
+    };
+}
+
+/// A fault plan hot enough to exercise retransmit/crash/resync spans.
+fn armed_faults() -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        loss_prob: 0.15,
+        corrupt_prob: 0.05,
+        dup_prob: 0.10,
+        down_loss_prob: 0.10,
+        down_corrupt_prob: 0.05,
+        reorder_prob: 0.2,
+        reorder_window: 0.5,
+        max_retransmits: 3,
+        crash_prob: 0.02,
+        crash_downtime: 2.0,
+        ..Default::default()
+    }
+}
+
+/// Bitwise equality of committed rounds, excluding only the speculation
+/// telemetry (which records *how* the engine executed, not what it
+/// computed).
+fn assert_records_equal(x: &RoundRecord, y: &RoundRecord) {
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.shard, y.shard, "round {}", x.round);
+    assert_eq!(x.vtime.to_bits(), y.vtime.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_acc.to_bits(), y.global_acc.to_bits(), "round {}", x.round);
+    assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "round {}", x.round);
+    assert_eq!(x.threshold.to_bits(), y.threshold.to_bits(), "round {}", x.round);
+    assert_eq!(x.uploads, y.uploads, "round {}", x.round);
+    assert_eq!(x.cum_uploads, y.cum_uploads, "round {}", x.round);
+    assert_eq!(x.bytes_up, y.bytes_up, "round {}", x.round);
+    assert_eq!(x.bytes_down, y.bytes_down, "round {}", x.round);
+    assert_eq!(x.bytes_up_ctrl, y.bytes_up_ctrl, "round {}", x.round);
+    assert_eq!(x.bytes_down_ctrl, y.bytes_down_ctrl, "round {}", x.round);
+    assert_eq!(x.reports, y.reports, "round {}", x.round);
+    assert_eq!(x.in_flight, y.in_flight, "round {}", x.round);
+    assert_eq!(x.selected, y.selected, "round {}", x.round);
+    assert_eq!(x.upload_staleness, y.upload_staleness, "round {}", x.round);
+    assert_eq!(x.quarantined, y.quarantined, "round {}", x.round);
+    assert_eq!(x.faults, y.faults, "round {}", x.round);
+}
+
+fn assert_streams_equal(a: &RunMetrics, b: &RunMetrics) {
+    assert_eq!(a.records.len(), b.records.len(), "record counts differ");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_records_equal(x, y);
+    }
+    assert_eq!(a.control_records.len(), b.control_records.len());
+}
+
+fn report_of(m: &RunMetrics) -> &ObsReport {
+    m.obs.as_ref().expect("armed run produced no obs report")
+}
+
+/// Required-field JSON access (panics with the key name on a miss).
+fn req<'a>(v: &'a Value, key: &str) -> &'a Value {
+    v.req(key).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Arming the plane is bitwise invisible to the committed stream
+// ---------------------------------------------------------------------------
+
+#[test]
+fn armed_tracing_is_bitwise_invisible_both_engines() {
+    // Both engines × serial/threaded × shards 1/4: the armed run's
+    // committed records must match its disarmed twin bitwise (the
+    // tracing hooks are read-only — no RNG draws, no scheduled events).
+    // The disarmed twins themselves are pinned by goldens 1–8, so this
+    // transitively pins the armed runs to the goldens too.
+    let mut cases: Vec<ExperimentConfig> = Vec::new();
+    for threaded in [false, true] {
+        let mut cfg = quick('a', 5);
+        cfg.engine = EngineMode::Barriered;
+        cfg.engine_opts.threaded = threaded;
+        if threaded {
+            cfg.engine_opts.workers = 4;
+        }
+        cases.push(cfg);
+        for shards in [1usize, 4] {
+            let mut cfg = quick('b', 6);
+            barrier_free(&mut cfg);
+            cfg.engine_opts.threaded = threaded;
+            if threaded {
+                cfg.engine_opts.workers = 4;
+            }
+            cfg.engine_opts.shards = shards;
+            if shards > 1 {
+                cfg.engine_opts.reconcile_every = 2;
+            }
+            cases.push(cfg);
+        }
+    }
+    for cfg in cases {
+        let disarmed = experiments::run(&cfg).unwrap();
+        assert!(disarmed.metrics.obs.is_none(), "disarmed run emitted a report");
+        let mut armed = cfg.clone();
+        armed.obs.enabled = true;
+        let traced = experiments::run(&armed).unwrap();
+        assert_streams_equal(&disarmed.metrics, &traced.metrics);
+        let report = report_of(&traced.metrics);
+        assert!(!report.spans.is_empty(), "armed run recorded no spans");
+    }
+}
+
+#[test]
+fn armed_tracing_is_bitwise_invisible_under_faults() {
+    // The fault layer shares commit points with the tracing hooks
+    // (retransmit backoff, crash restore); arming both must still leave
+    // the record stream untouched.
+    let mut cfg = quick('b', 6);
+    barrier_free(&mut cfg);
+    cfg.faults = FaultConfig { checkpoint_every: 2, ..armed_faults() };
+    let disarmed = experiments::run(&cfg).unwrap();
+    let mut armed = cfg.clone();
+    armed.obs.enabled = true;
+    let traced = experiments::run(&armed).unwrap();
+    assert_streams_equal(&disarmed.metrics, &traced.metrics);
+}
+
+// ---------------------------------------------------------------------------
+// The virtual-time span stream is thread-count invariant
+// ---------------------------------------------------------------------------
+
+/// Fingerprint of the deterministic sub-stream: phase, client, and both
+/// endpoints as exact bit patterns, in commit order.
+fn virtual_stream(report: &ObsReport) -> Vec<(SpanPhase, u32, u64, u64)> {
+    report
+        .virtual_spans()
+        .map(|s| (s.phase, s.client, s.vstart.to_bits(), s.vend.to_bits()))
+        .collect()
+}
+
+#[test]
+fn virtual_span_stream_is_thread_count_invariant() {
+    for faults in [false, true] {
+        let mut cfg = quick('b', 6);
+        barrier_free(&mut cfg);
+        cfg.obs.enabled = true;
+        if faults {
+            cfg.faults = armed_faults();
+        }
+        let serial = experiments::run(&cfg).unwrap();
+        let mut tcfg = cfg.clone();
+        tcfg.engine_opts.threaded = true;
+        tcfg.engine_opts.workers = 4;
+        let threaded = experiments::run(&tcfg).unwrap();
+        let sv = virtual_stream(report_of(&serial.metrics));
+        let tv = virtual_stream(report_of(&threaded.metrics));
+        assert!(!sv.is_empty(), "no virtual spans recorded");
+        assert_eq!(sv, tv, "virtual span stream depends on worker count (faults={faults})");
+    }
+}
+
+#[test]
+fn virtual_spans_cover_the_hot_phases() {
+    let mut cfg = quick('b', 6);
+    barrier_free(&mut cfg);
+    cfg.obs.enabled = true;
+    cfg.faults = FaultConfig { checkpoint_every: 2, ..armed_faults() };
+    let out = experiments::run(&cfg).unwrap();
+    let report = report_of(&out.metrics);
+    let has = |p: SpanPhase| report.spans.iter().any(|s| s.phase == p);
+    for phase in [SpanPhase::ClientExecute, SpanPhase::BufferFill, SpanPhase::Flush] {
+        assert!(has(phase), "no span for {:?}", phase);
+    }
+    // Flush spans aggregate the whole buffer, not one client.
+    assert!(report
+        .spans
+        .iter()
+        .filter(|s| s.phase == SpanPhase::Flush)
+        .all(|s| s.client == NO_CLIENT));
+    // Every virtual span is well-formed (vend >= vstart).
+    for s in report.virtual_spans() {
+        assert!(s.vend >= s.vstart, "inverted virtual span {s:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry is the single source of truth behind the record columns
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_counters_match_record_columns() {
+    let mut cfg = quick('b', 6);
+    barrier_free(&mut cfg);
+    cfg.obs.enabled = true;
+    cfg.faults = armed_faults();
+    let out = experiments::run(&cfg).unwrap();
+    let m = &out.metrics;
+    let reg = &report_of(m).registry;
+    let sum = |f: fn(&RoundRecord) -> u64| m.records.iter().map(f).sum::<u64>();
+    assert_eq!(reg.counter(Counter::Flushes), m.records.len() as u64);
+    assert_eq!(reg.counter(Counter::Uploads), sum(|r| r.uploads as u64));
+    assert_eq!(reg.counter(Counter::SpecCommitted), sum(|r| r.spec_committed as u64));
+    assert_eq!(reg.counter(Counter::SpecReplayed), sum(|r| r.spec_replayed as u64));
+    assert_eq!(reg.counter(Counter::Quarantined), sum(|r| r.quarantined as u64));
+    assert_eq!(reg.counter(Counter::Retransmits), sum(|r| r.faults.retransmits));
+    assert_eq!(reg.counter(Counter::FramesLost), sum(|r| r.faults.frames_lost));
+    assert_eq!(reg.counter(Counter::FramesCorrupt), sum(|r| r.faults.frames_corrupt));
+    assert_eq!(reg.counter(Counter::DupSuppressed), sum(|r| r.faults.dup_suppressed));
+    assert_eq!(reg.counter(Counter::Resyncs), sum(|r| r.faults.resyncs));
+    assert_eq!(reg.counter(Counter::Recoveries), sum(|r| r.faults.recoveries));
+    // `link_capped` is a lifetime total mirrored by delta at each commit;
+    // events after the last flush may push the lifetime total past it.
+    assert!(reg.counter(Counter::LinkCapped) <= m.link_capped);
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+fn traced_run() -> RunMetrics {
+    let mut cfg = quick('b', 6);
+    barrier_free(&mut cfg);
+    cfg.obs.enabled = true;
+    cfg.faults = FaultConfig { checkpoint_every: 2, ..armed_faults() };
+    experiments::run(&cfg).unwrap().metrics
+}
+
+#[test]
+fn chrome_trace_json_round_trips_the_span_stream() {
+    let m = traced_run();
+    let report = report_of(&m);
+    let text = vafl::obs::chrome_trace_json(report).to_string_compact();
+    let doc = vafl::util::json::parse(&text).expect("trace JSON must re-parse");
+    let events = req(&doc, "traceEvents").as_arr().expect("traceEvents array");
+    let mut complete = 0usize;
+    let mut meta = 0usize;
+    for ev in events {
+        let ph = req(ev, "ph").as_str().expect("ph");
+        // Chrome trace-event schema: every event carries name/ph/pid/tid.
+        assert!(req(ev, "name").as_str().is_some());
+        assert!(req(ev, "pid").as_f64().is_some());
+        assert!(req(ev, "tid").as_f64().is_some());
+        match ph {
+            "M" => meta += 1,
+            "X" => {
+                complete += 1;
+                let ts = req(ev, "ts").as_f64().expect("ts");
+                let dur = req(ev, "dur").as_f64().expect("dur");
+                assert!(ts.is_finite() && dur >= 0.0, "bad X event ts/dur");
+                let pid = req(ev, "pid").as_f64().unwrap();
+                assert!(pid == 0.0 || pid == 1.0, "unknown pid lane {pid}");
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert_eq!(meta, 2, "one process_name metadata event per lane");
+    assert_eq!(complete, report.spans.len(), "one X event per span");
+    let dropped = req(req(&doc, "otherData"), "dropped_spans").as_f64().unwrap();
+    assert_eq!(dropped as u64, report.dropped);
+}
+
+#[test]
+fn prometheus_text_is_well_formed() {
+    let m = traced_run();
+    let report = report_of(&m);
+    let text = vafl::obs::prometheus_text(report);
+    let mut saw_counter = false;
+    let mut saw_hist = false;
+    for line in text.lines() {
+        if line.starts_with('#') {
+            assert!(line.starts_with("# TYPE vafl_"), "bad comment line {line:?}");
+            continue;
+        }
+        // Every sample line is `name[{labels}] value` with a parseable
+        // value ("NaN"/"+Inf" included — Prometheus accepts both).
+        let (name, value) = line.rsplit_once(' ').expect("sample line");
+        assert!(name.starts_with("vafl_"), "unprefixed metric {name:?}");
+        assert!(
+            value.parse::<f64>().is_ok() || value == "NaN" || value == "+Inf",
+            "unparseable value {value:?} in {line:?}"
+        );
+        saw_counter |= name.starts_with("vafl_uploads_total");
+        saw_hist |= name.starts_with("vafl_phase_wall_seconds_bucket");
+    }
+    assert!(saw_counter, "no counter samples");
+    assert!(saw_hist, "no histogram samples");
+    // Bucket series are cumulative: the +Inf bucket equals _count.
+    let count_line = text
+        .lines()
+        .find(|l| l.starts_with("vafl_phase_wall_seconds_count{phase=\"flush\"}"))
+        .expect("flush wall histogram");
+    let count: u64 = count_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+    let inf_line = text
+        .lines()
+        .filter(|l| {
+            l.starts_with("vafl_phase_wall_seconds_bucket{phase=\"flush\"")
+                && l.contains("le=\"+Inf\"")
+        })
+        .next_back()
+        .expect("+Inf bucket");
+    let inf: u64 = inf_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+    assert_eq!(inf, count, "+Inf bucket must equal the series count");
+}
+
+#[test]
+fn run_metrics_json_carries_the_obs_block() {
+    let m = traced_run();
+    let text = m.to_json().to_string_compact();
+    let doc = vafl::util::json::parse(&text).unwrap();
+    let obs = req(&doc, "obs");
+    assert!(!matches!(obs, Value::Null), "armed run must export an obs block");
+    let wall = req(req(req(obs, "phases"), "flush"), "wall");
+    assert!(req(wall, "count").as_f64().unwrap() >= 1.0);
+    assert!(req(req(obs, "counters"), "uploads").as_f64().unwrap() >= 1.0);
+
+    // Disarmed runs export `"obs": null` — the column is stable either way.
+    let mut cfg = quick('a', 3);
+    cfg.engine = EngineMode::Barriered;
+    let out = experiments::run(&cfg).unwrap();
+    let text = out.metrics.to_json().to_string_compact();
+    let doc = vafl::util::json::parse(&text).unwrap();
+    assert!(matches!(req(&doc, "obs"), Value::Null));
+}
+
+// ---------------------------------------------------------------------------
+// Bounded rings: overflow drops are counted, never blocking
+// ---------------------------------------------------------------------------
+
+#[test]
+fn span_cap_drops_are_counted_not_fatal() {
+    let mut cfg = quick('b', 6);
+    barrier_free(&mut cfg);
+    cfg.obs.enabled = true;
+    cfg.obs.max_spans = 8; // far below what six rounds emit
+    let out = experiments::run(&cfg).unwrap();
+    let report = report_of(&out.metrics);
+    assert!(report.spans.len() <= 8, "span cap not enforced");
+    assert!(report.dropped > 0, "overflow must be accounted");
+    // The registry keeps counting even when the span buffer is full.
+    assert_eq!(report.registry.counter(Counter::Flushes), out.metrics.records.len() as u64);
+}
+
+#[test]
+fn wall_spans_exist_only_where_work_ran() {
+    // Serial run: every span records on tid 0; threaded runs may use
+    // higher lanes but must never invent virtual spans off the engine
+    // thread (SpanKind::Virtual always tid 0).
+    let mut cfg = quick('b', 4);
+    barrier_free(&mut cfg);
+    cfg.obs.enabled = true;
+    let out = experiments::run(&cfg).unwrap();
+    for s in &report_of(&out.metrics).spans {
+        if s.kind == SpanKind::Virtual {
+            assert_eq!(s.tid, 0, "virtual span recorded off the engine thread: {s:?}");
+        }
+        assert!(s.wend_us >= s.wstart_us || s.kind == SpanKind::Virtual);
+    }
+}

@@ -53,14 +53,16 @@ if [[ "${1:-}" != "--no-tests" ]]; then
     # when off and thread-count invariant when on, the robust merge must
     # stay bitwise FedAvg when disarmed and thread-count invariant when
     # armed, the fault-injection layer must be seed-deterministic with
-    # bitwise kill/restore resume (tests/faults.rs), and the golden
-    # snapshots (including the topk, bidir, adaptive, robust, and faulty
-    # ones — the adaptive snapshot's `control` lines pin the
+    # bitwise kill/restore resume (tests/faults.rs), the observability
+    # plane must be bitwise invisible when armed with a thread-count
+    # invariant virtual span stream (tests/obs.rs), and the golden
+    # snapshots (including the topk, bidir, adaptive, robust, faulty, and
+    # traced ones — the adaptive snapshot's `control` lines pin the
     # ControlRecord stream, so controller drift diffs here) must hold,
     # at both ends of the parallel-kernel worker range.
     for t in 1 4; do
-        echo "== VAFL_THREADS=$t engine equivalence + sparse + broadcast + control + robust + faults + golden =="
-        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test broadcast --test control --test robust --test faults --test golden_run; then
+        echo "== VAFL_THREADS=$t engine equivalence + sparse + broadcast + control + robust + faults + obs + golden =="
+        if ! VAFL_THREADS=$t cargo test -q --test engine_async --test sparse --test broadcast --test control --test robust --test faults --test obs --test golden_run; then
             dump_golden_drift
             exit 1
         fi
@@ -72,7 +74,7 @@ if [[ "${1:-}" != "--no-tests" ]]; then
     missing=0
     for g in barriered barrier_free barrier_free_topk barrier_free_bidir \
              barrier_free_adaptive barrier_free_sharded barrier_free_robust \
-             barrier_free_faulty; do
+             barrier_free_faulty barrier_free_traced; do
         if ! git ls-files --error-unmatch "tests/golden/$g.golden" >/dev/null 2>&1; then
             echo "NOTE: golden snapshot tests/golden/$g.golden is not committed yet —"
             echo "      this run (re)generated it; commit it from the CI reference"
